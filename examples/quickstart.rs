@@ -1,0 +1,45 @@
+//! Quickstart: train a GP on the bundled `test` config with the pathwise
+//! estimator, warm-started alternating projections, and make predictions.
+//!
+//!     make artifacts && cargo run --release --example quickstart
+
+use igp::prelude::*;
+
+fn main() -> anyhow::Result<()> {
+    // 1. data (synthetic UCI-like dataset; see igp::data::registry())
+    let ds = igp::data::generate(&igp::data::spec("test")?);
+    println!("dataset: n={} d={} test={}", ds.spec.n, ds.spec.d, ds.spec.n_test);
+
+    // 2. compiled model (AOT artifacts from `make artifacts`)
+    let rt = igp::runtime::Runtime::cpu()?;
+    let model = rt.load_config("artifacts", "test")?;
+    let block = model.meta.b;
+    let op = XlaOperator::new(model, &ds);
+
+    // 3. coordinator: pathwise estimator + warm-started AP
+    let opts = TrainerOptions {
+        solver: SolverKind::Ap,
+        estimator: EstimatorKind::Pathwise,
+        warm_start: true,
+        block_size: Some(block),
+        ..Default::default()
+    };
+    let mut trainer = Trainer::new(opts, Box::new(op), &ds);
+    let out = trainer.run(30)?;
+
+    for t in out.telemetry.iter().step_by(5) {
+        println!(
+            "step {:>3}: residuals ry={:.4} rz={:.4}  epochs={:>6.1}  sigma={:.3}",
+            t.step,
+            t.ry,
+            t.rz,
+            t.epochs,
+            t.theta[t.theta.len() - 1],
+        );
+    }
+    println!(
+        "\nfinal: rmse={:.4} llh={:.4}  ({:.2}s total, {:.2}s in the solver)",
+        out.final_metrics.rmse, out.final_metrics.llh, out.total_secs, out.solver_secs
+    );
+    Ok(())
+}

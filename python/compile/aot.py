@@ -1,0 +1,143 @@
+"""AOT lowering driver: JAX (L2 + L1) -> HLO text artifacts for the Rust runtime.
+
+Emits HLO *text* (NOT serialized HloModuleProto): jax >= 0.5 emits protos
+with 64-bit instruction ids which xla_extension 0.5.1 (the version the
+published `xla` 0.1.6 crate links) rejects; the HLO text parser reassigns
+ids so text round-trips cleanly.  See /opt/xla-example/README.md.
+
+Usage:
+    python -m compile.aot --out ../artifacts [--config NAME ...]
+
+Layout per config:
+    artifacts/<config>/meta.txt            # shapes for the Rust loader
+    artifacts/<config>/<fn>.hlo.txt        # one module per L2 entry point
+"""
+
+import argparse
+import functools
+import os
+
+import jax
+
+jax.config.update("jax_enable_x64", True)
+
+import jax.numpy as jnp  # noqa: E402
+from jax._src.lib import xla_client as xc  # noqa: E402
+
+from . import configs, model  # noqa: E402
+
+F64 = jnp.float64
+
+
+def to_hlo_text(lowered) -> str:
+    """stablehlo -> XlaComputation -> HLO text (id-safe interchange)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def spec(*shape):
+    return jax.ShapeDtypeStruct(shape, F64)
+
+
+def entry_points(cfg: configs.Config):
+    """(name, fn, arg_specs) for every artifact of this config."""
+    n, nt, d, s, m, b, t, tb = (
+        cfg.n, cfg.n_test, cfg.d, cfg.s, cfg.m, cfg.b, cfg.tile, cfg.tile_b,
+    )
+    k = cfg.k  # s + 1
+    fam = cfg.kernel
+    th = spec(d + 2)
+    eps = [
+        ("kmv_full",
+         functools.partial(model.kmv_full, tile=t, family=fam),
+         [spec(n, d), spec(n, k), th]),
+        ("kmv_full_ref",
+         functools.partial(model.kmv_full_ref, family=fam),
+         [spec(n, d), spec(n, k), th]),
+        ("kmv_cols",
+         functools.partial(model.kmv_cols, tile=t, tile_b=tb, family=fam),
+         [spec(n, d), spec(b, d), spec(b, k), th]),
+        ("kmv_rows",
+         functools.partial(model.kmv_rows, tile=t, tile_b=tb, family=fam),
+         [spec(b, d), spec(n, d), spec(n, k), th]),
+        ("grad_quad",
+         functools.partial(model.grad_quad, tile=t, family=fam),
+         [spec(n, d), spec(n, k), spec(n, k), spec(k), th]),
+        ("rff_eval",
+         model.rff_eval,
+         [spec(n, d), spec(d, m), spec(2 * m, s), spec(n, s), th]),
+        ("predict",
+         functools.partial(model.predict, tile=t, tile_t=min(t, nt), family=fam),
+         [spec(nt, d), spec(n, d), th, spec(n), spec(n, s), spec(d, m), spec(2 * m, s)]),
+    ]
+    # NOTE: no exact_mll artifact — jnp.linalg.cholesky lowers to a
+    # API_VERSION_TYPED_FFI LAPACK custom-call that xla_extension 0.5.1
+    # cannot compile.  The exact baseline runs in Rust (gp::ExactGp),
+    # cross-validated against model.exact_mll in pytest.  cfg.exact only
+    # gates whether the Rust side may use the O(n^3) exact path.
+    return eps
+
+
+def meta_text(cfg: configs.Config) -> str:
+    lines = [
+        f"name={cfg.name}",
+        f"n={cfg.n}",
+        f"n_test={cfg.n_test}",
+        f"d={cfg.d}",
+        f"s={cfg.s}",
+        f"m={cfg.m}",
+        f"b={cfg.b}",
+        f"tile={cfg.tile}",
+        f"kernel={cfg.kernel}",
+        f"exact={'true' if cfg.exact else 'false'}",
+    ]
+    return "\n".join(lines) + "\n"
+
+
+def build_config(cfg: configs.Config, out_dir: str, force: bool = False) -> None:
+    cdir = os.path.join(out_dir, cfg.name)
+    os.makedirs(cdir, exist_ok=True)
+    meta_path = os.path.join(cdir, "meta.txt")
+    # config drift detection: if the shapes/tiling changed since the last
+    # build, the cached HLO is stale even though the files exist.
+    if not force and os.path.exists(meta_path):
+        if open(meta_path).read() != meta_text(cfg):
+            print(f"  {cfg.name}: config changed, rebuilding")
+            force = True
+    for name, fn, args in entry_points(cfg):
+        path = os.path.join(cdir, f"{name}.hlo.txt")
+        if not force and os.path.exists(path) and os.path.exists(meta_path):
+            continue
+        lowered = jax.jit(fn).lower(*args)
+        text = to_hlo_text(lowered)
+        with open(path, "w") as f:
+            f.write(text)
+        print(f"  {cfg.name}/{name}: {len(text) / 1e3:.0f} kB")
+    with open(meta_path, "w") as f:
+        f.write(meta_text(cfg))
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out", default="../artifacts")
+    ap.add_argument("--config", action="append", default=None,
+                    help="config name(s); default: all registered configs")
+    ap.add_argument("--force", action="store_true", help="rebuild even if present")
+    args = ap.parse_args()
+    names = args.config or list(configs.CONFIGS)
+    os.makedirs(args.out, exist_ok=True)
+    for name in names:
+        cfg = configs.get(name)
+        print(f"[aot] {name} (n={cfg.n} d={cfg.d} s={cfg.s} b={cfg.b} tile={cfg.tile})")
+        build_config(cfg, args.out, force=args.force)
+    # stamp for make's up-to-date check
+    with open(os.path.join(args.out, ".stamp"), "w") as f:
+        f.write("ok\n")
+    print("[aot] done")
+
+
+if __name__ == "__main__":
+    main()

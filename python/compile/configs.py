@@ -1,0 +1,78 @@
+"""Static-shape configuration registry shared between the AOT compile path
+(aot.py) and the Rust coordinator (via artifacts/<name>/meta.txt).
+
+Every artifact is lowered for exactly one Config, so all shapes are static.
+Dataset-shaped configs mirror the UCI datasets of the paper with n scaled
+down (see DESIGN.md §3 Substitutions); `d` and the noise character are kept.
+"""
+
+from dataclasses import dataclass
+
+
+@dataclass(frozen=True)
+class Config:
+    name: str
+    n: int        # training points
+    n_test: int   # test points
+    d: int        # input dimension
+    s: int        # probe vectors (solver batch is k = s + 1 columns)
+    m: int        # random Fourier feature sin/cos pairs
+    b: int        # AP block size == SGD batch size
+    tile: int     # pallas tile edge (must divide n, b and n_test)
+    kernel: str   # matern12 | matern32 | matern52 | rbf
+    exact: bool   # also lower the Cholesky exact-MLL artifact
+
+    @property
+    def k(self) -> int:
+        """Solver RHS batch width: [y | probe_1 .. probe_s]."""
+        return self.s + 1
+
+    def validate(self) -> None:
+        assert self.n % self.tile == 0, (self.name, "tile must divide n")
+        assert self.b % self.tile == 0 or self.tile % self.b == 0 or self.b % 64 == 0, self.name
+        assert self.n % self.b == 0, (self.name, "b must divide n")
+        assert self.n_test % self.tile == 0, (self.name, "tile must divide n_test")
+        assert self.kernel in ("matern12", "matern32", "matern52", "rbf"), self.name
+
+    @property
+    def tile_b(self) -> int:
+        """Tile edge used along a block/batch axis of size b."""
+        return min(self.tile, self.b)
+
+
+def _cfg(name, n, n_test, d, s=16, m=256, b=128, tile=256, kernel="matern32", exact=None):
+    # tile=256 adopted from the §Perf sweep (EXPERIMENTS.md): 1.38x over 128
+    # on the hot kmv_full path, VMEM/step still ~2% of a TPU core's 16 MiB.
+    if exact is None:
+        exact = n <= 2048
+    c = Config(name, n, n_test, d, s, m, b, tile, kernel, exact)
+    c.validate()
+    return c
+
+
+# The registry. Names mirror the paper's UCI datasets (scaled down).
+CONFIGS = {
+    c.name: c
+    for c in [
+        # tiny config used by pytest / cargo integration tests / quickstart
+        _cfg("test", n=256, n_test=64, d=4, s=8, m=64, b=64, tile=64),
+        # "small" datasets of Table 1 (paper: n = 13.5k .. 44k)
+        _cfg("pol", n=1024, n_test=256, d=26),
+        _cfg("elevators", n=1024, n_test=256, d=18),
+        _cfg("bike", n=1024, n_test=256, d=17),
+        _cfg("protein", n=2048, n_test=512, d=9, b=256),
+        _cfg("keggdir", n=2048, n_test=512, d=20, b=256),
+        # "large" datasets of Section 5 (paper: n = 391k .. 1.84M), budgeted
+        _cfg("threedroad", n=2048, n_test=512, d=3, exact=False),
+        _cfg("song", n=2048, n_test=512, d=24, exact=False),
+        _cfg("buzz", n=2048, n_test=512, d=32, exact=False),
+        _cfg("houseelectric", n=4096, n_test=512, d=11, b=256, exact=False),
+        # Fig. 4 probe-count sweep variants of pol
+        _cfg("pol_s4", n=1024, n_test=256, d=26, s=4),
+        _cfg("pol_s64", n=1024, n_test=256, d=26, s=64),
+    ]
+}
+
+
+def get(name: str) -> Config:
+    return CONFIGS[name]

@@ -1,0 +1,64 @@
+"""L2 perf tool: inspect a lowered artifact's HLO — op histogram, fusion
+opportunities, and a FLOP/byte estimate for the roofline discussion in
+DESIGN.md §6/§7.
+
+Usage:
+    python -m compile.hlo_inspect ../artifacts/pol/kmv_full.hlo.txt
+"""
+
+import re
+import sys
+from collections import Counter
+
+
+def op_histogram(text: str) -> Counter:
+    ops = Counter()
+    for line in text.splitlines():
+        line = line.strip()
+        # instruction lines look like: "%name = f64[...] opcode(...)"
+        m = re.match(r"%?[\w.\-]+ = [\w\[\],{}\d\s]+? ([a-z][\w\-]*)\(", line)
+        if m:
+            ops[m.group(1)] += 1
+    return ops
+
+
+def tensor_bytes(text: str) -> int:
+    """Upper bound on live tensor traffic: sum of all instruction output
+    shapes (f64 = 8 bytes)."""
+    total = 0
+    for m in re.finditer(r"f64\[([\d,]*)\]", text):
+        dims = m.group(1)
+        if not dims:
+            total += 8
+            continue
+        prod = 1
+        for d in dims.split(","):
+            prod *= int(d)
+        total += 8 * prod
+    return total
+
+
+def main() -> None:
+    if len(sys.argv) < 2:
+        print(__doc__)
+        sys.exit(1)
+    for path in sys.argv[1:]:
+        text = open(path).read()
+        ops = op_histogram(text)
+        print(f"== {path}")
+        print(f"   instructions: {sum(ops.values())}")
+        for op, count in ops.most_common(12):
+            print(f"   {op:<24} {count}")
+        # markers of concern
+        loops = ops.get("while", 0)
+        fusions = ops.get("fusion", 0)
+        dots = ops.get("dot", 0)
+        custom = ops.get("custom-call", 0)
+        print(f"   while-loops={loops} fusions={fusions} dots={dots} custom-calls={custom}")
+        if custom:
+            print("   WARNING: custom-calls will not compile on xla_extension 0.5.1")
+        print(f"   est. tensor traffic: {tensor_bytes(text) / 1e6:.1f} MB")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,2 @@
+# L1: Pallas kernel(s) for the paper's compute hot-spot.
+from . import common, grad, kmv, ref  # noqa: F401

@@ -1,0 +1,77 @@
+"""Shared covariance-family math used by both the Pallas kernels (L1) and
+the pure-jnp oracles (ref.py).
+
+All functions operate on *lengthscale-scaled* inputs: callers pass
+``xs = x / ell`` so pairwise squared distances are already in scaled units.
+The signal variance ``sigf2 = sigf**2`` multiplies the unit covariance.
+
+Lengthscale-derivative identity (per input dimension d, raw inputs):
+
+    d k / d ell_d = sigf2 * h(r) * dss_d / ell_d
+
+where ``dss_d`` is the *scaled* squared difference ((xa_d - xb_d)/ell_d)^2
+and ``h(r)`` is the family-specific radial weight returned by
+:func:`dl_weight`.  See DESIGN.md and Appendix tests for derivations.
+"""
+
+import jax.numpy as jnp
+
+SQRT3 = 1.7320508075688772
+SQRT5 = 2.23606797749979
+EPS_R = 1e-30
+
+FAMILIES = ("matern12", "matern32", "matern52", "rbf")
+
+
+def sqdist(xa, xb):
+    """Pairwise squared Euclidean distance between rows of xa [M,d], xb [N,d]."""
+    na = jnp.sum(xa * xa, axis=1)[:, None]
+    nb = jnp.sum(xb * xb, axis=1)[None, :]
+    return jnp.maximum(na + nb - 2.0 * (xa @ xb.T), 0.0)
+
+
+def _safe_r(sq):
+    """sqrt(sq) with a well-defined (zero) gradient at sq == 0.
+
+    Plain jnp.sqrt yields NaN under jax.grad on the diagonal (sq = 0); the
+    true directional derivative of every supported family w.r.t. any
+    hyperparameter is 0 there, which the where-trick recovers exactly.
+    """
+    pos = sq > 0.0
+    r = jnp.sqrt(jnp.where(pos, sq, 1.0))
+    return jnp.where(pos, r, 0.0)
+
+
+def unit_cov(sq, family):
+    """Unit-signal covariance g(r) from squared scaled distance."""
+    if family == "rbf":
+        return jnp.exp(-0.5 * sq)
+    r = _safe_r(sq)
+    if family == "matern12":
+        return jnp.exp(-r)
+    if family == "matern32":
+        return (1.0 + SQRT3 * r) * jnp.exp(-SQRT3 * r)
+    if family == "matern52":
+        return (1.0 + SQRT5 * r + (5.0 / 3.0) * sq) * jnp.exp(-SQRT5 * r)
+    raise ValueError(family)
+
+
+def dl_weight(sq, family):
+    """Radial weight h(r) with  dk/d ell_d = sigf2 * h * dss_d / ell_d.
+
+    Derivations (k = sigf2 * g(r), r^2 = sum_d dss_d):
+      rbf      : g = exp(-sq/2)                 -> h = exp(-sq/2)
+      matern12 : g = exp(-r)                    -> h = exp(-r)/r   (safe at 0)
+      matern32 : g = (1+c3 r)exp(-c3 r)         -> h = 3 exp(-c3 r)
+      matern52 : g = (1+c5 r+5 sq/3)exp(-c5 r)  -> h = (5/3)(1+c5 r)exp(-c5 r)
+    """
+    if family == "rbf":
+        return jnp.exp(-0.5 * sq)
+    r = _safe_r(sq)
+    if family == "matern12":
+        return jnp.exp(-r) / jnp.maximum(r, EPS_R)
+    if family == "matern32":
+        return 3.0 * jnp.exp(-SQRT3 * r)
+    if family == "matern52":
+        return (5.0 / 3.0) * (1.0 + SQRT5 * r) * jnp.exp(-SQRT5 * r)
+    raise ValueError(family)

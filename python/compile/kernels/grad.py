@@ -1,0 +1,93 @@
+"""L1 Pallas kernel: fused marginal-likelihood-gradient quadratic forms.
+
+Computes, in a single pass over the (n x n) tile space, every kernel-
+hyperparameter component of
+
+    G_k = sum_j w_j * a_j^T (dK/dtheta_k) b_j          k = 1..d+1
+
+for the lengthscales (k = 1..d) and the signal scale (k = d+1).  The noise
+component (dH/dsigma = 2 sigma I) needs no pairwise pass and is added by the
+L2 wrapper.  Both the standard Hutchinson estimator (a_j, b_j) = (v_j, z_j)
+and the pathwise estimator (a_j, b_j) = (zhat_j, zhat_j) reduce to this
+primitive; only the column assembly differs (done in Rust, L3).
+
+Fusion rationale (DESIGN.md §Hardware-Adaptation): on an accelerator the
+O(n^2 d) pairwise-difference work dominates.  A naive implementation runs
+one sweep per hyperparameter (d+1 sweeps); this kernel shares the distance
+tile, the radial weight h(r) and the C = (A w) B^T cross-moment tile across
+all components, so the n^2 space is swept exactly once.
+
+Weight pre-multiplication: callers pass A already scaled by w (column j of
+A multiplied by w_j), so C = A_w @ B^T absorbs the weights.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .common import dl_weight, unit_cov
+
+
+def _grad_kernel(params_ref, ell_ref, xa_ref, xb_ref, a_ref, b_ref, o_ref, *, family):
+    i = pl.program_id(0)
+    j = pl.program_id(1)
+    sigf2 = params_ref[0]
+    xa = xa_ref[...]  # [Tm, d] scaled
+    xb = xb_ref[...]  # [Tn, d] scaled
+    na = jnp.sum(xa * xa, axis=1)[:, None]
+    nb = jnp.sum(xb * xb, axis=1)[None, :]
+    sq = jnp.maximum(na + nb - 2.0 * (xa @ xb.T), 0.0)
+
+    c = a_ref[...] @ b_ref[...].T  # [Tm, Tn] weighted cross moments
+
+    # Lengthscale components: dk/d ell_d = sigf2 * h(r) * dss_d / ell_d.
+    w_tile = c * (sigf2 * dl_weight(sq, family))  # [Tm, Tn]
+    diff = xa[:, None, :] - xb[None, :, :]  # [Tm, Tn, d] scaled diffs
+    g_ell = jnp.einsum("mn,mnd->d", w_tile, diff * diff) / ell_ref[...]
+
+    # Signal-scale component: dk/d sigf = 2 k / sigf  ->  (2/sigf) sum C*K.
+    kfull = sigf2 * unit_cov(sq, family)
+    g_sigf = 2.0 / jnp.sqrt(sigf2) * jnp.sum(c * kfull)
+
+    upd = jnp.concatenate([g_ell, g_sigf[None]])
+
+    @pl.when((i == 0) & (j == 0))
+    def _init():
+        o_ref[...] = upd
+
+    @pl.when((i > 0) | (j > 0))
+    def _acc():
+        o_ref[...] = o_ref[...] + upd
+
+
+@functools.partial(jax.jit, static_argnames=("tile", "family"))
+def grad_quad_kernel(x_s, a_w, b, ell, sigf2, *, tile, family="matern32"):
+    """Fused gradient quadratic forms over the kernel part of H.
+
+    x_s: [n, d] scaled inputs; a_w: [n, q] left vectors (pre-multiplied by
+    weights); b: [n, q] right vectors; ell: [d] lengthscales.
+    Returns [d+1]: (lengthscale grads, signal-scale grad).
+    """
+    n, d = x_s.shape
+    q = a_w.shape[1]
+    assert a_w.shape == (n, q) and b.shape == (n, q)
+    assert n % tile == 0
+    params = jnp.stack([sigf2])
+    grid = (n // tile, n // tile)
+    return pl.pallas_call(
+        functools.partial(_grad_kernel, family=family),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1,), lambda i, j: (0,)),
+            pl.BlockSpec((d,), lambda i, j: (0,)),
+            pl.BlockSpec((tile, d), lambda i, j: (i, 0)),
+            pl.BlockSpec((tile, d), lambda i, j: (j, 0)),
+            pl.BlockSpec((tile, q), lambda i, j: (i, 0)),
+            pl.BlockSpec((tile, q), lambda i, j: (j, 0)),
+        ],
+        out_specs=pl.BlockSpec((d + 1,), lambda i, j: (0,)),
+        out_shape=jax.ShapeDtypeStruct((d + 1,), x_s.dtype),
+        interpret=True,
+    )(params, ell, x_s, x_s, a_w, b)

@@ -1,0 +1,74 @@
+"""L1 Pallas kernel: blocked kernel-matrix/vector product  K(Xa, Xb) @ V.
+
+This is the compute hot-spot of every linear-system solver in the paper:
+CG multiplies the full H against the [n, s+1] RHS batch each iteration, AP
+multiplies a column block K(X, X_I), SGD a row batch K(X_I, X).  One kernel
+covers all three because Xa and Xb are independent operands.
+
+TPU mapping (DESIGN.md §Hardware-Adaptation): the kernel matrix is never
+materialised in HBM.  Each grid step stages a (Tm,d) and a (Tn,d) input slab
+plus a (Tn,k) RHS slab into VMEM, forms the (Tm,Tn) covariance tile via an
+MXU matmul (the -2*xa@xb.T term) + VPU transcendentals, and immediately
+contracts it against the RHS slab on the MXU, accumulating into the (Tm,k)
+output block.  `interpret=True` is mandatory here: the CPU PJRT plugin
+cannot execute Mosaic custom-calls.
+
+Inputs are lengthscale-scaled (xs = x / ell); sigf2 arrives via a tiny
+params array because it is a traced value that changes every outer step.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .common import unit_cov
+
+
+def _kmv_kernel(params_ref, xa_ref, xb_ref, v_ref, o_ref, *, family):
+    j = pl.program_id(1)
+    sigf2 = params_ref[0]
+    xa = xa_ref[...]
+    xb = xb_ref[...]
+    na = jnp.sum(xa * xa, axis=1)[:, None]
+    nb = jnp.sum(xb * xb, axis=1)[None, :]
+    sq = jnp.maximum(na + nb - 2.0 * (xa @ xb.T), 0.0)
+    cov = sigf2 * unit_cov(sq, family)
+    acc = cov @ v_ref[...]
+
+    @pl.when(j == 0)
+    def _init():
+        o_ref[...] = acc
+
+    @pl.when(j > 0)
+    def _acc():
+        o_ref[...] = o_ref[...] + acc
+
+
+@functools.partial(jax.jit, static_argnames=("tile_m", "tile_n", "family"))
+def kmv(xa_s, xb_s, v, sigf2, *, tile_m, tile_n, family="matern32"):
+    """K(xa, xb) @ v with scaled inputs.
+
+    xa_s: [M, d] (= xa / ell), xb_s: [N, d], v: [N, k] -> [M, k].
+    M % tile_m == 0 and N % tile_n == 0 are required (configs guarantee it).
+    """
+    m, d = xa_s.shape
+    n, k = v.shape
+    assert xb_s.shape == (n, d), (xa_s.shape, xb_s.shape, v.shape)
+    assert m % tile_m == 0 and n % tile_n == 0, (m, n, tile_m, tile_n)
+    params = jnp.stack([sigf2])
+    grid = (m // tile_m, n // tile_n)
+    return pl.pallas_call(
+        functools.partial(_kmv_kernel, family=family),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1,), lambda i, j: (0,)),
+            pl.BlockSpec((tile_m, d), lambda i, j: (i, 0)),
+            pl.BlockSpec((tile_n, d), lambda i, j: (j, 0)),
+            pl.BlockSpec((tile_n, k), lambda i, j: (j, 0)),
+        ],
+        out_specs=pl.BlockSpec((tile_m, k), lambda i, j: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((m, k), v.dtype),
+        interpret=True,
+    )(params, xa_s, xb_s, v)

@@ -1,0 +1,57 @@
+"""Pure-jnp correctness oracles for the Pallas kernels.
+
+Everything here materialises the n x n kernel matrix, so it is only used
+at build time by pytest (and by the `kmv_full_ref` perf-ablation artifact).
+"""
+
+import jax
+import jax.numpy as jnp
+
+from .common import sqdist, unit_cov
+
+
+def kernel_matrix(xa, xb, ell, sigf, family="matern32"):
+    """Full covariance matrix K(xa, xb; ell, sigf) with raw (unscaled) inputs."""
+    sq = sqdist(xa / ell, xb / ell)
+    return (sigf * sigf) * unit_cov(sq, family)
+
+
+def h_matrix(x, theta, family="matern32"):
+    """Regularised kernel matrix H = K + sigma^2 I from a packed theta."""
+    d = x.shape[1]
+    ell, sigf, sign = theta[:d], theta[d], theta[d + 1]
+    return kernel_matrix(x, x, ell, sigf, family) + (sign * sign) * jnp.eye(x.shape[0], dtype=x.dtype)
+
+
+def kmv_ref(xa, xb, v, ell, sigf, family="matern32"):
+    """Oracle for kernels.kmv.kmv (without the noise term)."""
+    return kernel_matrix(xa, xb, ell, sigf, family) @ v
+
+
+def hv_ref(x, v, theta, family="matern32"):
+    """Oracle for the full H @ V product."""
+    return h_matrix(x, theta, family) @ v
+
+
+def grad_quad_ref(x, a, b, w, theta, family="matern32"):
+    """Autodiff oracle for the fused gradient kernel + noise component.
+
+    Returns [d+2]: d/dtheta of  sum_j w_j a_j^T H(theta) b_j  with
+    theta = [ell_1..ell_d, sigf, sigma].
+    """
+
+    def qf(th):
+        hm = h_matrix(x, th, family)
+        return jnp.sum(w * jnp.einsum("nj,nm,mj->j", a, hm, b))
+
+    return jax.grad(qf)(theta)
+
+
+def mll_ref(x, y, theta, family="matern32"):
+    """Exact marginal log-likelihood via Cholesky (oracle for model.exact_mll)."""
+    n = x.shape[0]
+    hm = h_matrix(x, theta, family)
+    chol = jnp.linalg.cholesky(hm)
+    alpha = jax.scipy.linalg.cho_solve((chol, True), y)
+    logdet = 2.0 * jnp.sum(jnp.log(jnp.diag(chol)))
+    return -0.5 * y @ alpha - 0.5 * logdet - 0.5 * n * jnp.log(2.0 * jnp.pi)

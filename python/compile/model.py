@@ -1,0 +1,139 @@
+"""L2: the paper's compute graph in JAX, calling the L1 Pallas kernels.
+
+Every public function here is lowered once per Config by aot.py to HLO text
+and executed from the Rust coordinator via PJRT.  Python never runs on the
+request path.
+
+theta packing convention (shared with Rust): theta = [ell_1..ell_d, sigf, sigma],
+all raw positive values (the softplus reparameterisation lives in the Rust
+optimiser, L3).
+"""
+
+import jax
+import jax.numpy as jnp
+
+from .kernels import ref
+from .kernels.grad import grad_quad_kernel
+from .kernels.kmv import kmv
+
+
+def unpack(theta, d):
+    """Split packed hyperparameters into (ell [d], sigf, sigma)."""
+    return theta[:d], theta[d], theta[d + 1]
+
+
+# ---------------------------------------------------------------------------
+# Solver products (hot path)
+# ---------------------------------------------------------------------------
+
+
+def kmv_full(x, v, theta, *, tile, family):
+    """H @ V = K(X,X) @ V + sigma^2 V   for the CG full-batch iteration."""
+    d = x.shape[1]
+    ell, sigf, sign = unpack(theta, d)
+    xs = x / ell
+    kv = kmv(xs, xs, v, sigf * sigf, tile_m=tile, tile_n=tile, family=family)
+    return kv + (sign * sign) * v
+
+
+def kmv_full_ref(x, v, theta, *, family):
+    """Pure-jnp variant of kmv_full (perf-ablation artifact, no pallas)."""
+    return ref.hv_ref(x, v, theta, family)
+
+
+def kmv_cols(x, xb, u, theta, *, tile, tile_b, family):
+    """K(X, X_I) @ U  for the AP residual downdate (noise handled in L3)."""
+    d = x.shape[1]
+    ell, sigf, _ = unpack(theta, d)
+    return kmv(x / ell, xb / ell, u, sigf * sigf, tile_m=tile, tile_n=tile_b, family=family)
+
+
+def kmv_rows(xa, x, v, theta, *, tile, tile_b, family):
+    """K(X_I, X) @ V  for the SGD minibatch gradient (noise handled in L3)."""
+    d = x.shape[1]
+    ell, sigf, _ = unpack(theta, d)
+    return kmv(xa / ell, x / ell, v, sigf * sigf, tile_m=tile_b, tile_n=tile, family=family)
+
+
+# ---------------------------------------------------------------------------
+# Gradient estimator (standard & pathwise share this primitive)
+# ---------------------------------------------------------------------------
+
+
+def grad_quad(x, a, b, w, theta, *, tile, family):
+    """d/dtheta of  sum_j w_j a_j^T H(theta) b_j,  all d+2 components.
+
+    The d+1 kernel components come from the fused Pallas kernel (single
+    sweep over the n^2 tile space); the noise component is the cheap
+    closed form  2 sigma sum_j w_j <a_j, b_j>.
+    """
+    d = x.shape[1]
+    ell, sigf, sign = unpack(theta, d)
+    xs = x / ell
+    a_w = a * w[None, :]
+    g_kern = grad_quad_kernel(xs, a_w, b, ell, sigf * sigf, tile=tile, family=family)
+    g_noise = 2.0 * sign * jnp.sum(w * jnp.sum(a * b, axis=0))
+    return jnp.concatenate([g_kern, g_noise[None]])
+
+
+# ---------------------------------------------------------------------------
+# Pathwise machinery: RFF prior samples and pathwise-conditioned predictions
+# ---------------------------------------------------------------------------
+
+
+def _rff_features(x, omega0, ell, sigf, m):
+    """Random Fourier features Phi [n, 2m] for the stationary kernel.
+
+    omega0 holds *base* frequencies (sampled once in Rust from the kernel's
+    spectral density at unit lengthscale); the current lengthscales enter
+    as omega = omega0 / ell, which is what keeps the prior-function sample
+    "the same function" as theta moves (Appendix B of the paper).
+    """
+    z = (x / ell) @ omega0  # [n, m]
+    scale = sigf * jnp.sqrt(1.0 / m)
+    return scale * jnp.concatenate([jnp.cos(z), jnp.sin(z)], axis=1)
+
+
+def rff_eval(x, omega0, wts, noise, theta):
+    """Pathwise probe targets  Xi = f(X) + sigma * w_noise   [n, s].
+
+    f ~ GP(0, K) approximated with RFF: f(X) = Phi(X) @ wts, wts ~ N(0, I).
+    noise is a fixed standard-normal matrix (the eps = sigma*w
+    reparameterisation required by warm starting).
+    """
+    d = x.shape[1]
+    m = omega0.shape[1]
+    ell, sigf, sign = unpack(theta, d)
+    phi = _rff_features(x, omega0, ell, sigf, m)
+    return phi @ wts + sign * noise
+
+
+def predict(xt, x, theta, vy, zhat, omega0, wts, *, tile, tile_t, family):
+    """Pathwise-conditioned predictions (eq. 16 of the paper).
+
+    mean      = K(X*, X) v_y                                    [t]
+    sample_j  = f_j(X*) + K(X*, X) (v_y - zhat_j)               [t, s]
+
+    One rectangular Pallas product serves the mean and all samples: the RHS
+    batch is [v_y | v_y - zhat_1 | ... | v_y - zhat_s].
+    """
+    d = x.shape[1]
+    m = omega0.shape[1]
+    ell, sigf, _ = unpack(theta, d)
+    u = jnp.concatenate([vy[:, None], vy[:, None] - zhat], axis=1)  # [n, s+1]
+    kx = kmv(xt / ell, x / ell, u, sigf * sigf, tile_m=tile_t, tile_n=tile, family=family)
+    mean = kx[:, 0]
+    phi_t = _rff_features(xt, omega0, ell, sigf, m)
+    samples = phi_t @ wts + kx[:, 1:]
+    return mean, samples
+
+
+# ---------------------------------------------------------------------------
+# Exact Cholesky baseline (small n): value + gradient of the exact MLL
+# ---------------------------------------------------------------------------
+
+
+def exact_mll(x, y, theta, *, family):
+    """(L(theta), dL/dtheta) via Cholesky + autodiff. O(n^3); small n only."""
+    val, g = jax.value_and_grad(lambda th: ref.mll_ref(x, y, th, family))(theta)
+    return val, g

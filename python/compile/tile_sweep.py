@@ -1,0 +1,63 @@
+"""L1 perf tool: sweep Pallas tile sizes for the kmv kernel and report
+wall-clock (CPU interpret — structure signal only, NOT a TPU proxy) plus
+the VMEM footprint estimate per DESIGN.md §7 that *is* the TPU signal.
+
+Usage:
+    python -m compile.tile_sweep [--n 1024] [--d 26] [--k 17]
+"""
+
+import argparse
+import time
+
+import jax
+
+jax.config.update("jax_enable_x64", True)
+
+import numpy as np  # noqa: E402
+
+from .kernels.kmv import kmv  # noqa: E402
+from .kernels import ref  # noqa: E402
+
+
+def vmem_floats(tile_m, tile_n, d, k):
+    """VMEM-resident floats per grid step (DESIGN.md §7): two input slabs,
+    RHS slab, output block and the distance scratch tile."""
+    return tile_m * d + tile_n * d + tile_n * k + tile_m * k + tile_m * tile_n
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--n", type=int, default=1024)
+    ap.add_argument("--d", type=int, default=26)
+    ap.add_argument("--k", type=int, default=17)
+    ap.add_argument("--reps", type=int, default=5)
+    args = ap.parse_args()
+    n, d, k = args.n, args.d, args.k
+
+    rng = np.random.default_rng(0)
+    x = rng.standard_normal((n, d))
+    v = rng.standard_normal((n, k))
+    want = np.asarray(ref.kmv_ref(x, x, v, np.ones(d), 1.0))
+
+    print(f"n={n} d={d} k={k}  (f64; interpret=True wallclock is structural only)")
+    print(f"{'tile':>6} {'wall (ms)':>10} {'VMEM/step':>12} {'grid':>8} {'max err':>10}")
+    for tile in [32, 64, 128, 256]:
+        if n % tile != 0:
+            continue
+        f = jax.jit(lambda xs, vs: kmv(xs, xs, vs, 1.0, tile_m=tile, tile_n=tile))
+        out = f(x, v)
+        out.block_until_ready()
+        t0 = time.perf_counter()
+        for _ in range(args.reps):
+            out = f(x, v)
+            out.block_until_ready()
+        wall = (time.perf_counter() - t0) / args.reps * 1e3
+        err = float(np.abs(np.asarray(out) - want).max())
+        floats = vmem_floats(tile, tile, d, k)
+        grid = (n // tile) ** 2
+        # f32 bytes on real TPU (we lower f64 on CPU; production would be f32/bf16)
+        print(f"{tile:>6} {wall:>10.2f} {floats * 4 / 1024:>9.0f}KiB {grid:>8} {err:>10.2e}")
+
+
+if __name__ == "__main__":
+    main()

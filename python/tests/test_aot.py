@@ -1,0 +1,71 @@
+"""AOT path: lowering produces parseable HLO text with the expected entry
+computations, and the config registry is internally consistent."""
+
+import os
+
+import jax
+import pytest
+
+from compile import aot, configs
+
+
+def test_all_configs_validate():
+    for cfg in configs.CONFIGS.values():
+        cfg.validate()
+        assert cfg.k == cfg.s + 1
+
+
+def test_config_registry_has_paper_datasets():
+    for name in [
+        "pol", "elevators", "bike", "protein", "keggdir",
+        "threedroad", "song", "buzz", "houseelectric",
+    ]:
+        assert name in configs.CONFIGS, name
+
+
+def test_entry_points_cover_contract():
+    cfg = configs.get("test")
+    names = {n for n, _, _ in aot.entry_points(cfg)}
+    want = {"kmv_full", "kmv_full_ref", "kmv_cols", "kmv_rows",
+            "grad_quad", "rff_eval", "predict"}
+    assert names == want
+
+
+def test_no_exact_mll_artifact_anywhere():
+    # old XLA cannot compile the LAPACK typed-FFI cholesky custom-call
+    for cfg in configs.CONFIGS.values():
+        names = {n for n, _, _ in aot.entry_points(cfg)}
+        assert "exact_mll" not in names
+
+
+@pytest.mark.parametrize("fn_name", ["kmv_full", "grad_quad", "rff_eval", "predict"])
+def test_lowering_emits_hlo_text(fn_name):
+    cfg = configs.get("test")
+    for name, fn, args in aot.entry_points(cfg):
+        if name != fn_name:
+            continue
+        text = aot.to_hlo_text(jax.jit(fn).lower(*args))
+        assert "ENTRY" in text
+        assert "f64" in text  # double precision throughout (paper setting)
+        # interchange must be text, never a serialized proto
+        assert text.lstrip().startswith("HloModule")
+
+
+def test_meta_text_roundtrip():
+    cfg = configs.get("test")
+    meta = aot.meta_text(cfg)
+    kv = dict(line.split("=", 1) for line in meta.strip().splitlines())
+    assert int(kv["n"]) == cfg.n
+    assert int(kv["s"]) == cfg.s
+    assert kv["kernel"] == cfg.kernel
+
+
+def test_build_config_writes_artifacts(tmp_path):
+    cfg = configs.get("test")
+    aot.build_config(cfg, str(tmp_path), force=True)
+    cdir = tmp_path / "test"
+    assert (cdir / "meta.txt").exists()
+    assert (cdir / "kmv_full.hlo.txt").exists()
+    # idempotent second run keeps files
+    aot.build_config(cfg, str(tmp_path), force=False)
+    assert (cdir / "kmv_full.hlo.txt").exists()

@@ -1,0 +1,152 @@
+"""L1 correctness: Pallas kernels vs pure-jnp oracles.
+
+Hypothesis sweeps shapes/dtypes/families; every case asserts allclose
+against ref.py.  This is the core correctness signal for the hot path.
+"""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import ref
+from compile.kernels.common import FAMILIES
+from compile.kernels.grad import grad_quad_kernel
+from compile.kernels.kmv import kmv
+
+RNG = np.random.default_rng(0)
+
+# matern12 is non-differentiable at r=0: the pairwise-distance trick's
+# cancellation (~1e-13 in sq) amplifies to ~1e-7 in exp(-sqrt(sq)) near the
+# diagonal, in *both* the Pallas and the reference path (different summation
+# order). Smooth families keep ~1e-10.
+TOL = {"matern12": 1e-6, "matern32": 1e-9, "matern52": 1e-9, "rbf": 1e-9}
+
+
+def _data(m, n, d, k, dtype=np.float64):
+    rng = np.random.default_rng(42 + m + n + d + k)
+    xa = rng.standard_normal((m, d)).astype(dtype)
+    xb = rng.standard_normal((n, d)).astype(dtype)
+    v = rng.standard_normal((n, k)).astype(dtype)
+    ell = (0.5 + rng.random(d)).astype(dtype)
+    sigf = dtype(1.3)
+    return xa, xb, v, ell, sigf
+
+
+# ----------------------------------------------------------------------
+# kmv: K(Xa, Xb) @ V
+# ----------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("family", FAMILIES)
+def test_kmv_square_matches_ref(family):
+    xa, _, v, ell, sigf = _data(128, 128, 5, 9)
+    got = kmv(xa / ell, xa / ell, v, sigf**2, tile_m=64, tile_n=64, family=family)
+    want = ref.kmv_ref(xa, xa, v, ell, sigf, family)
+    np.testing.assert_allclose(got, want, rtol=TOL[family], atol=TOL[family])
+
+
+@pytest.mark.parametrize("family", FAMILIES)
+def test_kmv_rectangular_matches_ref(family):
+    xa, xb, v, ell, sigf = _data(64, 192, 3, 4)
+    got = kmv(xa / ell, xb / ell, v, sigf**2, tile_m=32, tile_n=64, family=family)
+    want = ref.kmv_ref(xa, xb, v, ell, sigf, family)
+    np.testing.assert_allclose(got, want, rtol=TOL[family], atol=TOL[family])
+
+
+@settings(max_examples=12, deadline=None)
+@given(
+    mt=st.integers(1, 3),
+    nt=st.integers(1, 3),
+    tile=st.sampled_from([16, 32]),
+    d=st.integers(1, 8),
+    k=st.integers(1, 10),
+    family=st.sampled_from(FAMILIES),
+)
+def test_kmv_hypothesis_shapes(mt, nt, tile, d, k, family):
+    m, n = mt * tile, nt * tile
+    xa, xb, v, ell, sigf = _data(m, n, d, k)
+    got = kmv(xa / ell, xb / ell, v, sigf**2, tile_m=tile, tile_n=tile, family=family)
+    want = ref.kmv_ref(xa, xb, v, ell, sigf, family)
+    np.testing.assert_allclose(got, want, rtol=TOL[family], atol=TOL[family])
+
+
+def test_kmv_float32_dtype():
+    xa, xb, v, ell, sigf = _data(64, 64, 4, 3, dtype=np.float32)
+    got = kmv(xa / ell, xb / ell, v, np.float32(sigf**2), tile_m=32, tile_n=32)
+    want = ref.kmv_ref(xa, xb, v, ell, sigf, "matern32")
+    assert got.dtype == jnp.float32
+    np.testing.assert_allclose(got, want, rtol=2e-4, atol=2e-4)
+
+
+def test_kmv_identity_diagonal():
+    """k(x, x) must equal sigf^2 up to the distance-trick's cancellation
+    (sq ~ 1e-13 on the diagonal -> ~1e-7 for the non-smooth matern12)."""
+    rng = np.random.default_rng(11)
+    x = rng.standard_normal((32, 2))
+    v = np.eye(32)
+    for family in FAMILIES:
+        kmat = kmv(x, x, v, 4.0, tile_m=32, tile_n=32, family=family)
+        np.testing.assert_allclose(np.diag(kmat), 4.0, rtol=0, atol=1e-6)
+
+
+def test_kmv_tile_invariance():
+    """Result must not depend on the tiling."""
+    xa, xb, v, ell, sigf = _data(128, 128, 6, 7)
+    a = kmv(xa / ell, xb / ell, v, sigf**2, tile_m=32, tile_n=64)
+    b = kmv(xa / ell, xb / ell, v, sigf**2, tile_m=128, tile_n=16)
+    np.testing.assert_allclose(a, b, rtol=1e-12, atol=1e-12)
+
+
+# ----------------------------------------------------------------------
+# grad_quad_kernel: fused d/dtheta of sum_j w_j a_j' K b_j
+# ----------------------------------------------------------------------
+
+
+def _grad_case(n, d, q, family, tile):
+    rng = np.random.default_rng(7 * n + d + q)
+    x = rng.standard_normal((n, d))
+    a = rng.standard_normal((n, q))
+    b = rng.standard_normal((n, q))
+    w = rng.standard_normal(q)
+    ell = 0.5 + rng.random(d)
+    sigf, sign = 1.4, 0.3
+    theta = np.concatenate([ell, [sigf, sign]])
+    got_kern = grad_quad_kernel(
+        x / ell, a * w[None, :], b, ell, sigf**2, tile=tile, family=family
+    )
+    want = ref.grad_quad_ref(x, a, b, w, theta, family)
+    tol = max(TOL[family], 1e-8)
+    # kernel part: lengthscales + signal scale
+    np.testing.assert_allclose(got_kern[:d], want[:d], rtol=tol, atol=tol)
+    np.testing.assert_allclose(got_kern[d], want[d], rtol=tol, atol=tol)
+
+
+@pytest.mark.parametrize("family", FAMILIES)
+def test_grad_quad_vs_autodiff(family):
+    _grad_case(96, 4, 5, family, tile=32)
+
+
+@settings(max_examples=10, deadline=None)
+@given(
+    nt=st.integers(1, 3),
+    tile=st.sampled_from([16, 32]),
+    d=st.integers(1, 6),
+    q=st.integers(1, 6),
+    family=st.sampled_from(FAMILIES),
+)
+def test_grad_quad_hypothesis(nt, tile, d, q, family):
+    _grad_case(nt * tile, d, q, family, tile)
+
+
+def test_grad_quad_tile_invariance():
+    rng = np.random.default_rng(3)
+    n, d, q = 128, 3, 4
+    x = rng.standard_normal((n, d))
+    a = rng.standard_normal((n, q))
+    b = rng.standard_normal((n, q))
+    w = rng.standard_normal(q)
+    ell = np.ones(d)
+    g1 = grad_quad_kernel(x, a * w, b, ell, 1.0, tile=32)
+    g2 = grad_quad_kernel(x, a * w, b, ell, 1.0, tile=64)
+    np.testing.assert_allclose(g1, g2, rtol=1e-11, atol=1e-11)

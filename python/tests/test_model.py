@@ -1,0 +1,240 @@
+"""L2 correctness: model entry points vs oracles and closed forms."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import model
+from compile.kernels import ref
+
+FAM = "matern32"
+
+
+def _case(n=128, d=4, k=5, seed=0):
+    rng = np.random.default_rng(seed)
+    x = rng.standard_normal((n, d))
+    v = rng.standard_normal((n, k))
+    ell = 0.5 + rng.random(d)
+    theta = np.concatenate([ell, [1.2, 0.4]])
+    return x, v, theta
+
+
+def test_kmv_full_adds_noise_term():
+    x, v, theta = _case()
+    got = model.kmv_full(x, v, theta, tile=32, family=FAM)
+    want = ref.hv_ref(x, v, theta, FAM)
+    np.testing.assert_allclose(got, want, rtol=1e-10, atol=1e-10)
+
+
+def test_kmv_full_ref_matches_pallas_path():
+    x, v, theta = _case()
+    a = model.kmv_full(x, v, theta, tile=64, family=FAM)
+    b = model.kmv_full_ref(x, v, theta, family=FAM)
+    np.testing.assert_allclose(a, b, rtol=1e-11, atol=1e-11)
+
+
+def test_kmv_cols_rows_consistency():
+    """K[:, I] @ U must equal (K[I, :])^T @ U by kernel symmetry."""
+    x, v, theta = _case(n=128, k=3)
+    idx = np.arange(32, 64)
+    xb = x[idx]
+    u = v[idx]
+    cols = model.kmv_cols(x, xb, u, theta, tile=32, tile_b=32, family=FAM)
+    d = x.shape[1]
+    km = ref.kernel_matrix(x, x, theta[:d], theta[d], FAM)
+    np.testing.assert_allclose(cols, km[:, idx] @ u, rtol=1e-10, atol=1e-10)
+    rows = model.kmv_rows(xb, x, v, theta, tile=32, tile_b=32, family=FAM)
+    np.testing.assert_allclose(rows, km[idx, :] @ v, rtol=1e-10, atol=1e-10)
+
+
+def test_grad_quad_full_vector_vs_autodiff():
+    x, _, theta = _case(n=96, d=3, seed=1)
+    rng = np.random.default_rng(5)
+    q = 4
+    a = rng.standard_normal((96, q))
+    b = rng.standard_normal((96, q))
+    w = rng.standard_normal(q)
+    got = model.grad_quad(x, a, b, w, theta, tile=32, family=FAM)
+    want = ref.grad_quad_ref(x, a, b, w, theta, FAM)
+    np.testing.assert_allclose(got, want, rtol=1e-8, atol=1e-8)
+
+
+def test_grad_quad_estimator_identity():
+    """E over probes of the Hutchinson form recovers tr(H^-1 dH) exactly
+    when probes span the full basis: use the identity as probe matrix."""
+    n, d = 64, 2
+    x, _, theta = _case(n=n, d=d, seed=2)
+    hm = np.asarray(ref.h_matrix(x, theta, FAM))
+    hinv = np.linalg.inv(hm)
+    # probes = all n basis vectors, a_j = H^-1 e_j, b_j = e_j, w = 1
+    a = hinv
+    b = np.eye(n)
+    w = np.ones(n)
+    got = model.grad_quad(x, a, b, w, theta, tile=32, family=FAM)
+    # oracle: tr(H^-1 dH/dtheta_k) by autodiff of tr-form
+    def tr_form(th):
+        h = ref.h_matrix(x, th, FAM)
+        return jnp.sum(hinv * h)  # tr(H^-1 H(th)) differentiating only H(th)
+    want = jax.grad(tr_form)(jnp.asarray(theta, dtype=jnp.float64))
+    np.testing.assert_allclose(got, want, rtol=1e-7, atol=1e-7)
+
+
+# ----------------------------------------------------------------------
+# RFF prior samples
+# ----------------------------------------------------------------------
+
+
+def _student_t_freqs(rng, d, m, df=3.0):
+    """Matern-3/2 spectral density = multivariate-t with df = 2*nu = 3."""
+    z = rng.standard_normal((d, m))
+    g = rng.chisquare(df, size=m)
+    return z * np.sqrt(df / g)[None, :]
+
+
+def test_rff_second_moment_matches_kernel():
+    """E[xi xi^T] ~= H: statistical check with many weight draws."""
+    rng = np.random.default_rng(0)
+    n, d, m, s = 48, 2, 4096, 512
+    x = rng.standard_normal((n, d))
+    theta = np.array([0.8, 1.2, 1.0, 0.3])
+    omega0 = _student_t_freqs(rng, d, m)
+    wts = rng.standard_normal((2 * m, s))
+    noise = rng.standard_normal((n, s))
+    xi = np.asarray(model.rff_eval(x, omega0, wts, noise, theta))
+    emp = xi @ xi.T / s
+    want = np.asarray(ref.h_matrix(x, theta, FAM))
+    # Monte-Carlo + RFF approximation error: loose tolerance, tight enough
+    # to catch scaling mistakes (off by sqrt(2), missing sigf, etc.).
+    assert np.abs(emp - want).max() < 0.25
+    np.testing.assert_allclose(np.diag(emp), np.diag(want), rtol=0.15)
+
+
+def test_rff_noise_reparameterisation():
+    """xi must be exactly Phi w + sigma * noise (deterministic given inputs)."""
+    rng = np.random.default_rng(1)
+    n, d, m, s = 16, 2, 8, 3
+    x = rng.standard_normal((n, d))
+    omega0 = rng.standard_normal((d, m))
+    wts = rng.standard_normal((2 * m, s))
+    noise = rng.standard_normal((n, s))
+    theta = np.array([1.0, 1.0, 1.5, 0.7])
+    xi = np.asarray(model.rff_eval(x, omega0, wts, noise, theta))
+    z = (x / theta[:d]) @ omega0
+    phi = 1.5 * np.sqrt(1.0 / m) * np.concatenate([np.cos(z), np.sin(z)], axis=1)
+    np.testing.assert_allclose(xi, phi @ wts + 0.7 * noise, rtol=1e-12, atol=1e-12)
+
+
+# ----------------------------------------------------------------------
+# Pathwise-conditioned prediction
+# ----------------------------------------------------------------------
+
+
+def test_predict_mean_is_kv():
+    rng = np.random.default_rng(2)
+    n, nt, d, s, m = 96, 32, 3, 4, 16
+    x = rng.standard_normal((n, d))
+    xt = rng.standard_normal((nt, d))
+    theta = np.concatenate([0.5 + rng.random(d), [1.1, 0.35]])
+    vy = rng.standard_normal(n)
+    zhat = rng.standard_normal((n, s))
+    omega0 = rng.standard_normal((d, m))
+    wts = rng.standard_normal((2 * m, s))
+    mean, samples = model.predict(
+        xt, x, theta, vy, zhat, omega0, wts, tile=32, tile_t=32, family=FAM
+    )
+    km = ref.kernel_matrix(xt, x, theta[:d], theta[d], FAM)
+    np.testing.assert_allclose(mean, km @ vy, rtol=1e-10, atol=1e-10)
+    # sample j = prior_j(xt) + K(xt,x)(vy - zhat_j)
+    z = (xt / theta[:d]) @ omega0
+    phi = theta[d] * np.sqrt(1.0 / m) * np.concatenate([np.cos(z), np.sin(z)], axis=1)
+    want = phi @ wts + km @ (vy[:, None] - zhat)
+    np.testing.assert_allclose(samples, want, rtol=1e-10, atol=1e-10)
+
+
+def test_predict_exact_posterior_consistency():
+    """With zhat = H^-1 xi the sample mean over many samples approaches the
+    exact posterior mean; here we check the *single-sample identity*:
+    posterior sample evaluated with zero prior draw equals the mean shift."""
+    rng = np.random.default_rng(3)
+    n, nt, d, m = 64, 32, 2, 8
+    x = rng.standard_normal((n, d))
+    xt = rng.standard_normal((nt, d))
+    theta = np.array([1.0, 1.0, 1.0, 0.5])
+    y = rng.standard_normal(n)
+    hm = np.asarray(ref.h_matrix(x, theta, FAM))
+    vy = np.linalg.solve(hm, y)
+    zhat = np.zeros((n, 1))
+    omega0 = rng.standard_normal((d, m))
+    wts = np.zeros((2 * m, 1))
+    mean, samples = model.predict(
+        xt, x, theta, vy, zhat, omega0, wts, tile=32, tile_t=32, family=FAM
+    )
+    np.testing.assert_allclose(samples[:, 0], mean, rtol=1e-10, atol=1e-10)
+
+
+# ----------------------------------------------------------------------
+# Exact MLL baseline
+# ----------------------------------------------------------------------
+
+
+def test_exact_mll_value_matches_dense_formula():
+    rng = np.random.default_rng(4)
+    n, d = 64, 3
+    x = rng.standard_normal((n, d))
+    y = rng.standard_normal(n)
+    theta = np.concatenate([0.5 + rng.random(d), [1.3, 0.45]])
+    val, grad = model.exact_mll(x, y, theta, family=FAM)
+    hm = np.asarray(ref.h_matrix(x, theta, FAM))
+    sign_det, logdet = np.linalg.slogdet(hm)
+    assert sign_det > 0
+    want = -0.5 * y @ np.linalg.solve(hm, y) - 0.5 * logdet - 0.5 * n * np.log(2 * np.pi)
+    np.testing.assert_allclose(float(val), want, rtol=1e-10)
+    assert grad.shape == (d + 2,)
+
+
+def test_exact_mll_grad_matches_eq5():
+    """Autodiff gradient must equal the closed-form eq. (5) of the paper."""
+    rng = np.random.default_rng(5)
+    n, d = 48, 2
+    x = rng.standard_normal((n, d))
+    y = rng.standard_normal(n)
+    theta = np.array([0.9, 1.1, 1.2, 0.5])
+    _, grad = model.exact_mll(x, y, theta, family=FAM)
+    hm = np.asarray(ref.h_matrix(x, theta, FAM))
+    hinv = np.linalg.inv(hm)
+    vy = hinv @ y
+    # finite-difference dH/dtheta_k against closed form via autodiff of H
+    for kk in range(d + 2):
+        def h_of(t):
+            th = theta.copy()
+            th[kk] = t
+            return np.asarray(ref.h_matrix(x, th, FAM))
+        eps = 1e-6
+        dh = (h_of(theta[kk] + eps) - h_of(theta[kk] - eps)) / (2 * eps)
+        want_k = 0.5 * vy @ dh @ vy - 0.5 * np.trace(hinv @ dh)
+        np.testing.assert_allclose(float(grad[kk]), want_k, rtol=1e-4, atol=1e-6)
+
+
+# ----------------------------------------------------------------------
+# Estimator theory identities (eqs. 12, 14, 15)
+# ----------------------------------------------------------------------
+
+
+def test_initial_distance_identities():
+    """E||u||_H^2 = tr(H^-1) for standard probes and = n for pathwise ones."""
+    rng = np.random.default_rng(6)
+    n, d, s = 48, 2, 4000
+    x = rng.standard_normal((n, d))
+    theta = np.array([0.9, 1.1, 1.3, 0.4])
+    hm = np.asarray(ref.h_matrix(x, theta, FAM))
+    hinv = np.linalg.inv(hm)
+    # standard: b = z ~ N(0, I), E[b' H^-1 b] = tr(H^-1)
+    z = rng.standard_normal((n, s))
+    std_emp = np.mean(np.einsum("ns,nm,ms->s", z, hinv, z))
+    np.testing.assert_allclose(std_emp, np.trace(hinv), rtol=0.1)
+    # pathwise: b = xi ~ N(0, H), E[b' H^-1 b] = n
+    lchol = np.linalg.cholesky(hm)
+    xi = lchol @ rng.standard_normal((n, s))
+    pw_emp = np.mean(np.einsum("ns,nm,ms->s", xi, hinv, xi))
+    np.testing.assert_allclose(pw_emp, n, rtol=0.1)

@@ -1,0 +1,40 @@
+//! Fig-9 shape: final probe residual after training under epoch budgets
+//! {2, 5, 10} with and without warm starting.
+
+mod common;
+
+use igp::coordinator::{Trainer, TrainerOptions};
+use igp::estimator::EstimatorKind;
+use igp::operators::KernelOperator;
+use igp::solvers::SolverKind;
+use igp::util::bench::Bencher;
+
+fn main() {
+    common::skip_or(|| {
+        let b = Bencher { warmup: 0, samples: 1 };
+        for budget in [2.0, 5.0, 10.0] {
+            for warm in [false, true] {
+                let (op, ds) = common::load("test");
+                let block = op.meta().b;
+                let opts = TrainerOptions {
+                    solver: SolverKind::Ap,
+                    estimator: EstimatorKind::Pathwise,
+                    warm_start: warm,
+                    max_epochs: Some(budget),
+                    block_size: Some(block),
+                    seed: 4,
+                    ..Default::default()
+                };
+                let mut trainer = Trainer::new(opts, Box::new(op), &ds);
+                let mut rz = f64::NAN;
+                let label =
+                    format!("test/ap/b{budget}/{}", if warm { "warm" } else { "cold" });
+                b.run(&label, None, || {
+                    let out = trainer.run(10).unwrap();
+                    rz = out.telemetry.last().unwrap().rz;
+                });
+                println!("   -> {label}: final rz={rz:.4}");
+            }
+        }
+    });
+}

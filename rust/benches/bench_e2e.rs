@@ -1,0 +1,37 @@
+//! End-to-end outer-step throughput: full coordinator steps (targets,
+//! solve, gradient, Adam) per second on the XLA backend.
+
+mod common;
+
+use igp::coordinator::{Trainer, TrainerOptions};
+use igp::estimator::EstimatorKind;
+use igp::operators::KernelOperator;
+use igp::solvers::SolverKind;
+use igp::util::bench::Bencher;
+
+fn main() {
+    common::skip_or(|| {
+        let b = Bencher { warmup: 1, samples: 3 };
+        for config in ["test", "pol"] {
+            for kind in [SolverKind::Cg, SolverKind::Ap, SolverKind::Sgd] {
+                let (op, ds) = common::load(config);
+                let block = op.meta().b;
+                let opts = TrainerOptions {
+                    solver: kind,
+                    estimator: EstimatorKind::Pathwise,
+                    warm_start: true,
+                    block_size: Some(block),
+                    sgd_lr: Some(8.0),
+                    epoch_cap: 50.0,
+                    seed: 5,
+                    ..Default::default()
+                };
+                let mut trainer = Trainer::new(opts, Box::new(op), &ds);
+                trainer.run(2).unwrap(); // settle warm-start state
+                b.run(&format!("{config}/{}-outer-step", kind.name()), None, || {
+                    trainer.run(1).unwrap();
+                });
+            }
+        }
+    });
+}

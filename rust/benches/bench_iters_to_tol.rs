@@ -1,0 +1,61 @@
+//! Table-1 shape: epochs to tolerance for each (estimator, warm) variant,
+//! per solver, at a fixed mid-training hyperparameter setting.
+
+mod common;
+
+use igp::estimator::{EstimatorKind, ProbeSet};
+use igp::kernels::Hyperparams;
+use igp::linalg::Mat;
+use igp::operators::KernelOperator;
+use igp::solvers::{make_solver, SolveOptions, SolverKind};
+use igp::util::bench::Bencher;
+use igp::util::rng::Rng;
+
+fn main() {
+    common::skip_or(|| {
+        let b = Bencher { warmup: 0, samples: 3 };
+        let (mut op, ds) = common::load("pol");
+        // mid-training hyperparameters: tighter noise = harder system
+        op.set_hp(&Hyperparams { ell: vec![1.5; op.d()], sigf: 1.0, sigma: 0.15 });
+        let block = op.meta().b;
+        let mut rng = Rng::new(2);
+        for kind in [SolverKind::Cg, SolverKind::Ap, SolverKind::Sgd] {
+            for estimator in [EstimatorKind::Standard, EstimatorKind::Pathwise] {
+                for warm in [false, true] {
+                    let probes = ProbeSet::sample(estimator, &op, &mut rng);
+                    let targets = probes.targets(&op, &ds.y_train);
+                    let opts = SolveOptions {
+                        tolerance: 0.01,
+                        max_epochs: 150.0,
+                        block_size: block,
+                        sgd_lr: 8.0,
+                        ..Default::default()
+                    };
+                    // warm start proxy: 60%-converged solution
+                    let mut v_init = Mat::zeros(op.n(), op.k_width());
+                    if warm {
+                        let mut pre = make_solver(kind);
+                        let mut o = opts.clone();
+                        o.max_epochs = 20.0;
+                        o.tolerance = 1e-16;
+                        pre.solve(&op, &targets, &mut v_init, &o);
+                    }
+                    let mut solver = make_solver(kind);
+                    let mut epochs = 0.0;
+                    let label = format!(
+                        "pol/{}/{}/{}",
+                        kind.name(),
+                        estimator.name(),
+                        if warm { "warm" } else { "cold" }
+                    );
+                    b.run(&label, None, || {
+                        let mut v = v_init.clone();
+                        let rep = solver.solve(&op, &targets, &mut v, &opts);
+                        epochs = rep.epochs;
+                    });
+                    println!("   -> {label}: {epochs:.1} epochs to tau=0.01");
+                }
+            }
+        }
+    });
+}

@@ -1,0 +1,47 @@
+//! L1 perf ablation: Pallas kmv_full vs the pure-jnp reference artifact vs
+//! the naive Rust dense operator for the full H@V product (DESIGN.md §6).
+
+mod common;
+
+use igp::kernels::Hyperparams;
+use igp::linalg::Mat;
+use igp::operators::{DenseOperator, KernelOperator};
+use igp::util::bench::Bencher;
+use igp::util::rng::Rng;
+
+fn main() {
+    common::skip_or(|| {
+        let b = Bencher::default();
+        for config in ["test", "pol", "protein"] {
+            if !std::path::Path::new(&format!("artifacts/{config}/meta.txt")).exists() {
+                continue;
+            }
+            let (mut op, ds) = common::load(config);
+            let hp = Hyperparams {
+                ell: vec![1.0; op.d()],
+                sigf: 1.1,
+                sigma: 0.3,
+            };
+            op.set_hp(&hp);
+            let mut rng = Rng::new(0);
+            let v = Mat::from_fn(op.n(), op.k_width(), |_, _| rng.gaussian());
+            // flops: K eval ~ n^2 (3d+6) + matmul 2 n^2 k
+            let n = op.n() as f64;
+            let flops = n * n * (3.0 * op.d() as f64 + 6.0 + 2.0 * op.k_width() as f64);
+
+            b.run(&format!("{config}/hv pallas (xla)"), Some(flops), || {
+                std::hint::black_box(op.hv(&v));
+            });
+            b.run(&format!("{config}/hv jnp-ref (xla)"), Some(flops), || {
+                std::hint::black_box(op.hv_ref(&v));
+            });
+            if op.n() <= 1024 {
+                let mut dense = DenseOperator::new(&ds, op.s(), op.m());
+                dense.set_hp(&hp);
+                b.run(&format!("{config}/hv dense (rust)"), Some(flops), || {
+                    std::hint::black_box(dense.hv(&v));
+                });
+            }
+        }
+    });
+}

@@ -1,0 +1,41 @@
+//! L3<->PJRT boundary cost: literal conversion + executable dispatch,
+//! isolated from compute by comparing a full hv call against its pure
+//! conversion cost (DESIGN.md §6: coordinator must stay <5% of step time).
+
+mod common;
+
+use igp::kernels::Hyperparams;
+use igp::linalg::Mat;
+use igp::operators::KernelOperator;
+use igp::runtime::{mat_from_lit, mat_to_lit};
+use igp::util::bench::Bencher;
+use igp::util::rng::Rng;
+
+fn main() {
+    common::skip_or(|| {
+        let b = Bencher::default();
+        let (mut op, _ds) = common::load("pol");
+        op.set_hp(&Hyperparams { ell: vec![1.0; op.d()], sigf: 1.0, sigma: 0.3 });
+        let mut rng = Rng::new(6);
+        let v = Mat::from_fn(op.n(), op.k_width(), |_, _| rng.gaussian());
+
+        // conversion-only roundtrip of the solver-state payload
+        b.run("pol/lit-convert roundtrip [n,k]", None, || {
+            let lit = mat_to_lit(&v).unwrap();
+            std::hint::black_box(mat_from_lit(&lit, v.rows, v.cols).unwrap());
+        });
+        // full dispatch incl. compute
+        b.run("pol/hv full call", None, || {
+            std::hint::black_box(op.hv(&v));
+        });
+        // rust-side vector math of one CG iteration (axpy etc.)
+        let hd = op.hv(&v);
+        b.run("pol/cg vector-math per iter", None, || {
+            let mut vv = v.clone();
+            let alpha = vec![0.5; vv.cols];
+            igp::solvers::axpy_cols(&mut vv, &alpha, &hd);
+            let g = igp::solvers::col_dots(&vv, &hd);
+            std::hint::black_box(g);
+        });
+    });
+}

@@ -1,0 +1,40 @@
+//! Per-solver epoch latency (the inner-loop unit of compute): one CG
+//! iteration vs one AP epoch vs one SGD epoch on the same system.
+
+mod common;
+
+use igp::estimator::{EstimatorKind, ProbeSet};
+use igp::kernels::Hyperparams;
+use igp::linalg::Mat;
+use igp::operators::KernelOperator;
+use igp::solvers::{make_solver, SolveOptions, SolverKind};
+use igp::util::bench::Bencher;
+use igp::util::rng::Rng;
+
+fn main() {
+    common::skip_or(|| {
+        let b = Bencher::default();
+        for config in ["test", "pol"] {
+            let (mut op, ds) = common::load(config);
+            op.set_hp(&Hyperparams { ell: vec![1.0; op.d()], sigf: 1.0, sigma: 0.3 });
+            let mut rng = Rng::new(1);
+            let probes = ProbeSet::sample(EstimatorKind::Pathwise, &op, &mut rng);
+            let targets = probes.targets(&op, &ds.y_train);
+            let block = op.meta().b;
+            for kind in [SolverKind::Cg, SolverKind::Ap, SolverKind::Sgd] {
+                let mut solver = make_solver(kind);
+                let opts = SolveOptions {
+                    tolerance: 1e-16, // never converge: measure raw epochs
+                    max_epochs: 1.0,
+                    block_size: block,
+                    sgd_lr: 8.0,
+                    ..Default::default()
+                };
+                b.run(&format!("{config}/{}-epoch", kind.name()), None, || {
+                    let mut v = Mat::zeros(op.n(), op.k_width());
+                    std::hint::black_box(solver.solve(&op, &targets, &mut v, &opts));
+                });
+            }
+        }
+    });
+}

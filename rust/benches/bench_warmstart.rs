@@ -1,0 +1,39 @@
+//! Fig-7 shape: cumulative epochs over several outer steps, warm vs cold
+//! (the full coordinator in the loop).
+
+mod common;
+
+use igp::coordinator::{Trainer, TrainerOptions};
+use igp::estimator::EstimatorKind;
+use igp::operators::KernelOperator;
+use igp::solvers::SolverKind;
+use igp::util::bench::Bencher;
+
+fn main() {
+    common::skip_or(|| {
+        let b = Bencher { warmup: 0, samples: 1 };
+        for kind in [SolverKind::Cg, SolverKind::Ap, SolverKind::Sgd] {
+            for warm in [false, true] {
+                let (op, ds) = common::load("test");
+                let block = op.meta().b;
+                let opts = TrainerOptions {
+                    solver: kind,
+                    estimator: EstimatorKind::Pathwise,
+                    warm_start: warm,
+                    block_size: Some(block),
+                    sgd_lr: Some(8.0),
+                    epoch_cap: 100.0,
+                    seed: 3,
+                    ..Default::default()
+                };
+                let mut trainer = Trainer::new(opts, Box::new(op), &ds);
+                let mut epochs = 0.0;
+                let label = format!("test/{}/{}", kind.name(), if warm { "warm" } else { "cold" });
+                b.run(&label, None, || {
+                    epochs = trainer.run(8).unwrap().total_epochs;
+                });
+                println!("   -> {label}: {epochs:.1} cumulative epochs / 8 outer steps");
+            }
+        }
+    });
+}

@@ -1,0 +1,25 @@
+//! Shared bench setup: load a config's artifacts + dataset, skip when
+//! artifacts are missing (so `cargo bench` works on a fresh checkout).
+
+use igp::data::{self, Dataset};
+use igp::operators::XlaOperator;
+use igp::runtime::Runtime;
+
+pub fn ready() -> bool {
+    std::path::Path::new("artifacts/test/meta.txt").exists()
+}
+
+pub fn load(config: &str) -> (XlaOperator, Dataset) {
+    let ds = data::generate(&data::spec(config).unwrap());
+    let rt = Runtime::cpu().unwrap();
+    let model = rt.load_config("artifacts", config).unwrap();
+    (XlaOperator::new(model, &ds), ds)
+}
+
+pub fn skip_or<F: FnOnce()>(f: F) {
+    if ready() {
+        f();
+    } else {
+        println!("skipping benches: run `make artifacts` first");
+    }
+}

@@ -1,0 +1,79 @@
+//! Tiny CLI argument parser (clap is unavailable offline): supports
+//! `--key value`, `--key=value`, boolean `--flag`, and positionals.
+
+use std::collections::BTreeMap;
+
+use anyhow::{bail, Result};
+
+pub struct Parser {
+    pub options: BTreeMap<String, String>,
+    pub flags: Vec<String>,
+    pub positional: Vec<String>,
+}
+
+impl Parser {
+    /// `value_keys` lists options that consume a value; every other
+    /// `--name` is treated as a boolean flag.
+    pub fn new(args: &[String], value_keys: &[&str]) -> Result<Self> {
+        let mut options = BTreeMap::new();
+        let mut flags = Vec::new();
+        let mut positional = Vec::new();
+        let mut i = 0;
+        while i < args.len() {
+            let a = &args[i];
+            if let Some(name) = a.strip_prefix("--") {
+                if let Some((k, v)) = name.split_once('=') {
+                    options.insert(k.to_string(), v.to_string());
+                } else if value_keys.contains(&name) {
+                    let Some(v) = args.get(i + 1) else {
+                        bail!("option --{name} expects a value");
+                    };
+                    options.insert(name.to_string(), v.clone());
+                    i += 1;
+                } else {
+                    flags.push(name.to_string());
+                }
+            } else {
+                positional.push(a.clone());
+            }
+            i += 1;
+        }
+        Ok(Parser { options, flags, positional })
+    }
+
+    pub fn get(&self, key: &str) -> Option<&str> {
+        self.options.get(key).map(String::as_str)
+    }
+
+    pub fn flag(&self, name: &str) -> bool {
+        self.flags.iter().any(|f| f == name)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn v(args: &[&str]) -> Vec<String> {
+        args.iter().map(|s| s.to_string()).collect()
+    }
+
+    #[test]
+    fn parses_mixed_styles() {
+        let p = Parser::new(
+            &v(&["table1", "--steps", "30", "--lr=0.1", "--warm-start"]),
+            &["steps", "lr"],
+        )
+        .unwrap();
+        assert_eq!(p.positional, vec!["table1"]);
+        assert_eq!(p.get("steps"), Some("30"));
+        assert_eq!(p.get("lr"), Some("0.1"));
+        assert!(p.flag("warm-start"));
+        assert!(!p.flag("other"));
+    }
+
+    #[test]
+    fn missing_value_errors() {
+        assert!(Parser::new(&v(&["--steps"]), &["steps"]).is_err());
+    }
+}

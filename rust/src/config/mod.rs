@@ -1,0 +1,339 @@
+//! Experiment configuration: a hand-rolled TOML-subset parser (serde/toml
+//! are unavailable offline) plus the typed run configuration used by the
+//! CLI and the experiment harness.
+//!
+//! Supported TOML subset: `[section]` headers, `key = value` with string
+//! ("x"), bool, integer, float and flat arrays ([1, 2.5, "a"]) values, and
+//! `#` comments.  This covers everything configs/*.toml need.
+
+use std::collections::BTreeMap;
+use std::path::Path;
+
+use anyhow::{bail, Context, Result};
+
+#[derive(Clone, Debug, PartialEq)]
+pub enum Value {
+    Str(String),
+    Bool(bool),
+    Int(i64),
+    Float(f64),
+    Array(Vec<Value>),
+}
+
+impl Value {
+    pub fn as_str(&self) -> Result<&str> {
+        match self {
+            Value::Str(s) => Ok(s),
+            other => bail!("expected string, got {other:?}"),
+        }
+    }
+    pub fn as_bool(&self) -> Result<bool> {
+        match self {
+            Value::Bool(b) => Ok(*b),
+            other => bail!("expected bool, got {other:?}"),
+        }
+    }
+    pub fn as_int(&self) -> Result<i64> {
+        match self {
+            Value::Int(i) => Ok(*i),
+            other => bail!("expected int, got {other:?}"),
+        }
+    }
+    pub fn as_float(&self) -> Result<f64> {
+        match self {
+            Value::Float(f) => Ok(*f),
+            Value::Int(i) => Ok(*i as f64),
+            other => bail!("expected float, got {other:?}"),
+        }
+    }
+    pub fn as_array(&self) -> Result<&[Value]> {
+        match self {
+            Value::Array(a) => Ok(a),
+            other => bail!("expected array, got {other:?}"),
+        }
+    }
+}
+
+/// Parsed document: section -> key -> value. Root-level keys live under "".
+#[derive(Clone, Debug, Default)]
+pub struct Doc {
+    pub sections: BTreeMap<String, BTreeMap<String, Value>>,
+}
+
+impl Doc {
+    pub fn get(&self, section: &str, key: &str) -> Option<&Value> {
+        self.sections.get(section).and_then(|s| s.get(key))
+    }
+
+    pub fn get_or<'a>(&'a self, section: &str, key: &str, default: &'a Value) -> &'a Value {
+        self.get(section, key).unwrap_or(default)
+    }
+}
+
+fn parse_scalar(tok: &str) -> Result<Value> {
+    let t = tok.trim();
+    if let Some(stripped) = t.strip_prefix('"') {
+        let Some(inner) = stripped.strip_suffix('"') else {
+            bail!("unterminated string: {t}");
+        };
+        return Ok(Value::Str(inner.to_string()));
+    }
+    match t {
+        "true" => return Ok(Value::Bool(true)),
+        "false" => return Ok(Value::Bool(false)),
+        _ => {}
+    }
+    if let Ok(i) = t.parse::<i64>() {
+        return Ok(Value::Int(i));
+    }
+    if let Ok(f) = t.parse::<f64>() {
+        return Ok(Value::Float(f));
+    }
+    bail!("cannot parse value '{t}'")
+}
+
+fn parse_value(tok: &str) -> Result<Value> {
+    let t = tok.trim();
+    if let Some(inner) = t.strip_prefix('[') {
+        let Some(inner) = inner.strip_suffix(']') else {
+            bail!("unterminated array: {t}");
+        };
+        let inner = inner.trim();
+        if inner.is_empty() {
+            return Ok(Value::Array(vec![]));
+        }
+        // split on commas not inside quotes
+        let mut items = Vec::new();
+        let mut depth_quote = false;
+        let mut cur = String::new();
+        for c in inner.chars() {
+            match c {
+                '"' => {
+                    depth_quote = !depth_quote;
+                    cur.push(c);
+                }
+                ',' if !depth_quote => {
+                    items.push(parse_scalar(&cur)?);
+                    cur.clear();
+                }
+                _ => cur.push(c),
+            }
+        }
+        if !cur.trim().is_empty() {
+            items.push(parse_scalar(&cur)?);
+        }
+        return Ok(Value::Array(items));
+    }
+    parse_scalar(t)
+}
+
+/// Strip a trailing comment that is not inside a string.
+fn strip_comment(line: &str) -> &str {
+    let mut in_str = false;
+    for (i, c) in line.char_indices() {
+        match c {
+            '"' => in_str = !in_str,
+            '#' if !in_str => return &line[..i],
+            _ => {}
+        }
+    }
+    line
+}
+
+pub fn parse(text: &str) -> Result<Doc> {
+    let mut doc = Doc::default();
+    let mut section = String::new();
+    doc.sections.entry(section.clone()).or_default();
+    for (lineno, raw) in text.lines().enumerate() {
+        let line = strip_comment(raw).trim();
+        if line.is_empty() {
+            continue;
+        }
+        if let Some(name) = line.strip_prefix('[') {
+            let Some(name) = name.strip_suffix(']') else {
+                bail!("line {}: bad section header '{raw}'", lineno + 1);
+            };
+            section = name.trim().to_string();
+            doc.sections.entry(section.clone()).or_default();
+            continue;
+        }
+        let Some((k, v)) = line.split_once('=') else {
+            bail!("line {}: expected key = value, got '{raw}'", lineno + 1);
+        };
+        let value = parse_value(v)
+            .with_context(|| format!("line {}: value for '{}'", lineno + 1, k.trim()))?;
+        doc.sections
+            .get_mut(&section)
+            .unwrap()
+            .insert(k.trim().to_string(), value);
+    }
+    Ok(doc)
+}
+
+pub fn parse_file<P: AsRef<Path>>(path: P) -> Result<Doc> {
+    let text = std::fs::read_to_string(&path)
+        .with_context(|| format!("reading {}", path.as_ref().display()))?;
+    parse(&text)
+}
+
+// ---------------------------------------------------------------------------
+// Typed run configuration
+// ---------------------------------------------------------------------------
+
+/// A fully-resolved training-run configuration (one Table-1 cell).
+#[derive(Clone, Debug)]
+pub struct RunConfig {
+    pub dataset: String,
+    pub solver: String,      // cg | ap | sgd
+    pub estimator: String,   // standard | pathwise
+    pub warm_start: bool,
+    pub outer_steps: usize,
+    pub lr: f64,
+    pub tolerance: f64,
+    /// Maximum solver epochs per outer step (None = solve to tolerance,
+    /// with a safety cap).
+    pub max_epochs: Option<usize>,
+    pub seed: u64,
+    pub artifacts_dir: String,
+}
+
+impl Default for RunConfig {
+    fn default() -> Self {
+        RunConfig {
+            dataset: "test".into(),
+            solver: "cg".into(),
+            estimator: "standard".into(),
+            warm_start: false,
+            outer_steps: 30,
+            lr: 0.1,
+            tolerance: 0.01,
+            max_epochs: None,
+            seed: 0,
+            artifacts_dir: "artifacts".into(),
+        }
+    }
+}
+
+impl RunConfig {
+    /// Load from a TOML file: root keys plus optional [run] section.
+    pub fn from_doc(doc: &Doc) -> Result<RunConfig> {
+        let mut rc = RunConfig::default();
+        for sec in ["", "run"] {
+            let Some(tbl) = doc.sections.get(sec) else { continue };
+            for (k, v) in tbl {
+                match k.as_str() {
+                    "dataset" => rc.dataset = v.as_str()?.to_string(),
+                    "solver" => rc.solver = v.as_str()?.to_string(),
+                    "estimator" => rc.estimator = v.as_str()?.to_string(),
+                    "warm_start" => rc.warm_start = v.as_bool()?,
+                    "outer_steps" => rc.outer_steps = v.as_int()? as usize,
+                    "lr" => rc.lr = v.as_float()?,
+                    "tolerance" => rc.tolerance = v.as_float()?,
+                    "max_epochs" => rc.max_epochs = Some(v.as_int()? as usize),
+                    "seed" => rc.seed = v.as_int()? as u64,
+                    "artifacts_dir" => rc.artifacts_dir = v.as_str()?.to_string(),
+                    other => bail!("unknown run config key '{other}'"),
+                }
+            }
+        }
+        rc.validate()?;
+        Ok(rc)
+    }
+
+    pub fn validate(&self) -> Result<()> {
+        if !["cg", "ap", "sgd", "exact"].contains(&self.solver.as_str()) {
+            bail!("solver must be cg|ap|sgd|exact, got '{}'", self.solver);
+        }
+        if !["standard", "pathwise"].contains(&self.estimator.as_str()) {
+            bail!("estimator must be standard|pathwise, got '{}'", self.estimator);
+        }
+        if self.tolerance <= 0.0 || self.tolerance >= 1.0 {
+            bail!("tolerance must be in (0,1)");
+        }
+        if self.outer_steps == 0 {
+            bail!("outer_steps must be positive");
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_scalars_and_sections() {
+        let doc = parse(
+            r#"
+            # top comment
+            name = "pol"          # trailing comment
+            steps = 100
+            lr = 0.1
+            warm = true
+            [solver]
+            kind = "ap"
+            budgets = [10, 20, 30]
+            "#,
+        )
+        .unwrap();
+        assert_eq!(doc.get("", "name").unwrap().as_str().unwrap(), "pol");
+        assert_eq!(doc.get("", "steps").unwrap().as_int().unwrap(), 100);
+        assert!((doc.get("", "lr").unwrap().as_float().unwrap() - 0.1).abs() < 1e-15);
+        assert!(doc.get("", "warm").unwrap().as_bool().unwrap());
+        assert_eq!(doc.get("solver", "kind").unwrap().as_str().unwrap(), "ap");
+        let arr = doc.get("solver", "budgets").unwrap().as_array().unwrap();
+        assert_eq!(arr.len(), 3);
+        assert_eq!(arr[1].as_int().unwrap(), 20);
+    }
+
+    #[test]
+    fn int_coerces_to_float() {
+        let doc = parse("x = 3").unwrap();
+        assert_eq!(doc.get("", "x").unwrap().as_float().unwrap(), 3.0);
+    }
+
+    #[test]
+    fn hash_inside_string_is_not_comment() {
+        let doc = parse(r##"tag = "a#b""##).unwrap();
+        assert_eq!(doc.get("", "tag").unwrap().as_str().unwrap(), "a#b");
+    }
+
+    #[test]
+    fn errors_are_reported_with_lines() {
+        let err = parse("x = @@").unwrap_err().to_string();
+        assert!(err.contains("line 1"), "{err}");
+    }
+
+    #[test]
+    fn run_config_roundtrip() {
+        let doc = parse(
+            r#"
+            dataset = "pol"
+            solver = "ap"
+            estimator = "pathwise"
+            warm_start = true
+            outer_steps = 50
+            max_epochs = 10
+            "#,
+        )
+        .unwrap();
+        let rc = RunConfig::from_doc(&doc).unwrap();
+        assert_eq!(rc.dataset, "pol");
+        assert_eq!(rc.solver, "ap");
+        assert_eq!(rc.estimator, "pathwise");
+        assert!(rc.warm_start);
+        assert_eq!(rc.max_epochs, Some(10));
+    }
+
+    #[test]
+    fn run_config_rejects_bad_solver() {
+        let doc = parse(r#"solver = "newton""#).unwrap();
+        assert!(RunConfig::from_doc(&doc).is_err());
+    }
+
+    #[test]
+    fn run_config_rejects_unknown_key() {
+        let doc = parse("banana = 1").unwrap();
+        assert!(RunConfig::from_doc(&doc).is_err());
+    }
+}

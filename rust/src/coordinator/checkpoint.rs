@@ -1,0 +1,159 @@
+//! Training-state checkpointing: persist the coordinator's resumable state
+//! (hyperparameters nu, Adam moments, warm-start solution, probe
+//! randomness seed bookkeeping) in a small self-describing binary format.
+//!
+//! Production motivation: the paper's large runs take hours (HOUSEELECTRIC:
+//! 32h in Table 10) — a crash without checkpoints loses the accumulated
+//! warm-start progress, which is exactly the asset warm starting builds.
+//!
+//! Format (little-endian): magic "IGPCKPT1", then length-prefixed f64
+//! vectors in fixed order: nu, adam_m, adam_v, v_store (+ rows/cols), plus
+//! step counter and seed.  No external serde available offline.
+
+use std::io::{Read, Write};
+use std::path::Path;
+
+use anyhow::{bail, Context, Result};
+
+use crate::linalg::Mat;
+
+const MAGIC: &[u8; 8] = b"IGPCKPT1";
+
+#[derive(Clone, Debug, PartialEq)]
+pub struct Checkpoint {
+    pub step: u64,
+    pub seed: u64,
+    pub nu: Vec<f64>,
+    pub adam_m: Vec<f64>,
+    pub adam_v: Vec<f64>,
+    pub adam_t: u64,
+    pub v_store: Mat,
+}
+
+fn write_vec(out: &mut impl Write, v: &[f64]) -> Result<()> {
+    out.write_all(&(v.len() as u64).to_le_bytes())?;
+    for x in v {
+        out.write_all(&x.to_le_bytes())?;
+    }
+    Ok(())
+}
+
+fn read_u64(inp: &mut impl Read) -> Result<u64> {
+    let mut b = [0u8; 8];
+    inp.read_exact(&mut b)?;
+    Ok(u64::from_le_bytes(b))
+}
+
+fn read_vec(inp: &mut impl Read) -> Result<Vec<f64>> {
+    let len = read_u64(inp)? as usize;
+    if len > (1 << 28) {
+        bail!("checkpoint vector too large ({len})");
+    }
+    let mut v = Vec::with_capacity(len);
+    let mut b = [0u8; 8];
+    for _ in 0..len {
+        inp.read_exact(&mut b)?;
+        v.push(f64::from_le_bytes(b));
+    }
+    Ok(v)
+}
+
+impl Checkpoint {
+    pub fn save<P: AsRef<Path>>(&self, path: P) -> Result<()> {
+        if let Some(parent) = path.as_ref().parent() {
+            std::fs::create_dir_all(parent)?;
+        }
+        let mut out = std::io::BufWriter::new(std::fs::File::create(&path)?);
+        out.write_all(MAGIC)?;
+        out.write_all(&self.step.to_le_bytes())?;
+        out.write_all(&self.seed.to_le_bytes())?;
+        out.write_all(&self.adam_t.to_le_bytes())?;
+        write_vec(&mut out, &self.nu)?;
+        write_vec(&mut out, &self.adam_m)?;
+        write_vec(&mut out, &self.adam_v)?;
+        out.write_all(&(self.v_store.rows as u64).to_le_bytes())?;
+        out.write_all(&(self.v_store.cols as u64).to_le_bytes())?;
+        write_vec(&mut out, &self.v_store.data)?;
+        out.flush()?;
+        Ok(())
+    }
+
+    pub fn load<P: AsRef<Path>>(path: P) -> Result<Self> {
+        let mut inp = std::io::BufReader::new(
+            std::fs::File::open(&path)
+                .with_context(|| format!("opening {}", path.as_ref().display()))?,
+        );
+        let mut magic = [0u8; 8];
+        inp.read_exact(&mut magic)?;
+        if &magic != MAGIC {
+            bail!("not an igp checkpoint (bad magic)");
+        }
+        let step = read_u64(&mut inp)?;
+        let seed = read_u64(&mut inp)?;
+        let adam_t = read_u64(&mut inp)?;
+        let nu = read_vec(&mut inp)?;
+        let adam_m = read_vec(&mut inp)?;
+        let adam_v = read_vec(&mut inp)?;
+        let rows = read_u64(&mut inp)? as usize;
+        let cols = read_u64(&mut inp)? as usize;
+        let data = read_vec(&mut inp)?;
+        if data.len() != rows * cols {
+            bail!("checkpoint v_store shape mismatch: {}x{cols} vs {} values", rows, data.len());
+        }
+        Ok(Checkpoint {
+            step,
+            seed,
+            nu,
+            adam_m,
+            adam_v,
+            adam_t,
+            v_store: Mat::from_vec(rows, cols, data),
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample() -> Checkpoint {
+        Checkpoint {
+            step: 17,
+            seed: 42,
+            nu: vec![0.1, -0.5, 2.0],
+            adam_m: vec![1e-3, 2e-3, -3e-3],
+            adam_v: vec![1e-6, 4e-6, 9e-6],
+            adam_t: 17,
+            v_store: Mat::from_vec(2, 3, vec![1.0, 2.0, 3.0, 4.0, 5.0, 6.0]),
+        }
+    }
+
+    #[test]
+    fn roundtrip_exact() {
+        let d = std::env::temp_dir().join("igp_ckpt_rt");
+        let p = d.join("c.ckpt");
+        let c = sample();
+        c.save(&p).unwrap();
+        let l = Checkpoint::load(&p).unwrap();
+        assert_eq!(c, l);
+    }
+
+    #[test]
+    fn bad_magic_rejected() {
+        let d = std::env::temp_dir().join("igp_ckpt_bad");
+        std::fs::create_dir_all(&d).unwrap();
+        let p = d.join("bad.ckpt");
+        std::fs::write(&p, b"NOTACKPTxxxxxxxxxxxx").unwrap();
+        assert!(Checkpoint::load(&p).is_err());
+    }
+
+    #[test]
+    fn truncated_file_rejected() {
+        let d = std::env::temp_dir().join("igp_ckpt_trunc");
+        let p = d.join("t.ckpt");
+        sample().save(&p).unwrap();
+        let bytes = std::fs::read(&p).unwrap();
+        std::fs::write(&p, &bytes[..bytes.len() / 2]).unwrap();
+        assert!(Checkpoint::load(&p).is_err());
+    }
+}

@@ -1,0 +1,139 @@
+//! Shared experiment-cell runner: one cell = one training run of a
+//! (dataset, solver, estimator, warm-start, budget) combination on the XLA
+//! backend — the unit from which every table and figure is assembled.
+
+use anyhow::Result;
+
+use igp::coordinator::{Trainer, TrainerOptions, TrainOutcome};
+use igp::data;
+use igp::estimator::EstimatorKind;
+use igp::operators::XlaOperator;
+use igp::runtime::Runtime;
+use igp::solvers::SolverKind;
+
+#[derive(Clone, Debug)]
+pub struct Cell {
+    pub dataset: String,
+    pub solver: SolverKind,
+    pub estimator: EstimatorKind,
+    pub warm: bool,
+    pub steps: usize,
+    pub lr: f64,
+    /// None = solve to tolerance (under `epoch_cap`).
+    pub max_epochs: Option<f64>,
+    /// Censoring cap for to-tolerance solving (the paper's 24h timeout).
+    pub epoch_cap: f64,
+    pub split: u64,
+    pub seed: u64,
+    /// Evaluate test metrics every k steps.
+    pub predict_every: Option<usize>,
+    /// Track the exact MLL per step (small configs only).
+    pub track_exact: bool,
+    /// Initialise hyperparameters with the paper's subset heuristic
+    /// (App. B; used on the large datasets).
+    pub subset_init: bool,
+}
+
+impl Cell {
+    pub fn new(dataset: &str, solver: SolverKind, estimator: EstimatorKind, warm: bool) -> Self {
+        Cell {
+            dataset: dataset.to_string(),
+            solver,
+            estimator,
+            warm,
+            steps: 25,
+            lr: 0.1,
+            max_epochs: None,
+            epoch_cap: 100.0,
+            split: 0,
+            seed: 0,
+            predict_every: None,
+            track_exact: false,
+            subset_init: false,
+        }
+    }
+
+    pub fn label(&self) -> String {
+        format!(
+            "{}/{}/{}/{}",
+            self.dataset,
+            self.solver.name(),
+            self.estimator.name(),
+            if self.warm { "warm" } else { "cold" }
+        )
+    }
+}
+
+pub struct CellResult {
+    pub cell: Cell,
+    pub out: TrainOutcome,
+    /// Whether any step hit the epoch cap without converging (censoring).
+    pub censored: bool,
+}
+
+pub fn run_cell(rt: &Runtime, artifacts: &str, cell: &Cell) -> Result<CellResult> {
+    let spec = data::spec(&cell.dataset)?;
+    let ds = data::generate_split(&spec, cell.split);
+    let model = rt.load_config(artifacts, &cell.dataset)?;
+    let block = model.meta.b;
+    let op = XlaOperator::new(model, &ds);
+    let opts = TrainerOptions {
+        solver: cell.solver,
+        estimator: cell.estimator,
+        warm_start: cell.warm,
+        lr: cell.lr,
+        max_epochs: cell.max_epochs,
+        epoch_cap: cell.epoch_cap,
+        block_size: Some(block),
+        predict_every: cell.predict_every,
+        track_exact: cell.track_exact,
+        seed: cell.seed ^ cell.split.wrapping_mul(0x9E37),
+        sgd_lr_halve: cell.max_epochs.is_some(), // paper: halve on budgeted/large runs
+        ..Default::default()
+    };
+    let mut trainer = Trainer::new(opts, Box::new(op), &ds);
+    if cell.subset_init {
+        let theta = igp::coordinator::init::subset_init(
+            &ds,
+            &igp::coordinator::init::SubsetInitOptions { seed: cell.seed, ..Default::default() },
+        )?;
+        trainer.set_init_theta(&theta);
+    }
+    let out = trainer.run(cell.steps)?;
+    let censored = cell.max_epochs.is_none() && out.telemetry.iter().any(|t| !t.converged);
+    Ok(CellResult { cell: cell.clone(), out, censored })
+}
+
+/// Write full per-step telemetry of a cell to CSV.
+pub fn write_telemetry(res: &CellResult, path: &std::path::Path) -> Result<()> {
+    let mut w = igp::util::csv::CsvWriter::create(
+        path,
+        &[
+            "step", "ry", "rz", "iterations", "epochs", "solver_secs", "converged",
+            "init_residual_sq", "exact_mll", "rmse", "llh", "theta_sigma", "theta_sigf",
+        ],
+    )?;
+    for t in &res.out.telemetry {
+        let d = t.theta.len() - 2;
+        let (rmse, llh) = t
+            .metrics
+            .map(|m| (format!("{:.6}", m.rmse), format!("{:.6}", m.llh)))
+            .unwrap_or_default();
+        w.row(&[
+            t.step.to_string(),
+            format!("{:.6e}", t.ry),
+            format!("{:.6e}", t.rz),
+            t.iterations.to_string(),
+            format!("{:.3}", t.epochs),
+            format!("{:.4}", t.solver_secs),
+            t.converged.to_string(),
+            format!("{:.4e}", t.init_residual_sq),
+            t.exact_mll.map(|v| format!("{v:.4}")).unwrap_or_default(),
+            rmse,
+            llh,
+            format!("{:.5}", t.theta[d + 1]),
+            format!("{:.5}", t.theta[d]),
+        ])?;
+    }
+    w.flush()
+}

@@ -1,0 +1,438 @@
+//! Figure experiments (DESIGN.md §4): conditioning diagnostics, probe
+//! sweeps, trajectory comparisons, warm-start geometry, budget studies.
+
+use anyhow::Result;
+
+use igp::coordinator::{run_exact, Trainer, TrainerOptions};
+use igp::data;
+use igp::estimator::{EstimatorKind, ProbeSet};
+use igp::gp::ExactGp;
+use igp::kernels::Hyperparams;
+use igp::linalg::{Cholesky, Mat};
+use igp::operators::{DenseOperator, KernelOperator, XlaOperator};
+use igp::optim::{Adam, SoftplusParams};
+use igp::solvers::{make_solver, SolveOptions, SolverKind};
+use igp::util::csv::{CsvWriter, MarkdownTable};
+use igp::util::rng::Rng;
+use igp::util::stats;
+
+use super::cells::{run_cell, write_telemetry, Cell};
+use super::{Ctx, SOLVERS, VARIANTS};
+
+// ---------------------------------------------------------------------------
+// Fig 3: initial RKHS distance, tr(H^-1), top eigenvalue, noise precision
+// ---------------------------------------------------------------------------
+
+pub fn fig3(ctx: &Ctx) -> Result<()> {
+    let dir = ctx.out_dir("fig3");
+    let steps = ctx.steps_or(15);
+    let mut csv = CsvWriter::create(
+        dir.join("fig3.csv"),
+        &[
+            "dataset", "estimator", "step", "ap_iterations", "init_dist_measured",
+            "tr_hinv", "top_eig_hinv", "noise_precision", "expected_dist",
+        ],
+    )?;
+    for dataset in ["pol", "elevators"] {
+        let ds = data::generate(&data::spec(dataset)?);
+        for estimator in [EstimatorKind::Standard, EstimatorKind::Pathwise] {
+            let mut cell = Cell::new(dataset, SolverKind::Ap, estimator, false);
+            cell.steps = steps;
+            let res = run_cell(&ctx.rt, &ctx.artifacts, &cell)?;
+            for t in &res.out.telemetry {
+                // exact conditioning diagnostics at this step's theta
+                let hp = Hyperparams::unpack(&t.theta, ds.spec.d);
+                let gp = ExactGp::fit(&ds.x_train, &ds.y_train, &hp, ds.spec.family)?;
+                let (tr, top) = gp.hinv_diagnostics();
+                let noise_prec = 1.0 / hp.noise_var();
+                let expected = match estimator {
+                    EstimatorKind::Standard => tr,           // eq (14)
+                    EstimatorKind::Pathwise => ds.spec.n as f64, // eq (15)
+                };
+                csv.row(&[
+                    dataset.to_string(),
+                    estimator.name().into(),
+                    t.step.to_string(),
+                    t.iterations.to_string(),
+                    format!("{:.4e}", t.init_residual_sq),
+                    format!("{tr:.4e}"),
+                    format!("{top:.4e}"),
+                    format!("{noise_prec:.4e}"),
+                    format!("{expected:.4e}"),
+                ])?;
+            }
+            igp::info!("fig3 {dataset}/{} done", estimator.name());
+        }
+    }
+    csv.flush()?;
+    Ok(())
+}
+
+// ---------------------------------------------------------------------------
+// Fig 4: posterior-sample count sweep + probe-count runtime overhead
+// ---------------------------------------------------------------------------
+
+pub fn fig4(ctx: &Ctx) -> Result<()> {
+    let dir = ctx.out_dir("fig4");
+    let steps = ctx.steps_or(15);
+    let mut runtime_csv = CsvWriter::create(
+        dir.join("fig4_runtime.csv"),
+        &["config", "s", "total_secs", "solver_secs", "llh"],
+    )?;
+    let mut llh_csv =
+        CsvWriter::create(dir.join("fig4_llh_vs_samples.csv"), &["num_samples", "llh", "rmse"])?;
+
+    for (config, s) in [("pol_s4", 4usize), ("pol", 16), ("pol_s64", 64)] {
+        let spec = data::spec(config)?;
+        let ds = data::generate(&spec);
+        let model = ctx.rt.load_config(&ctx.artifacts, config)?;
+        let block = model.meta.b;
+        let op = XlaOperator::new(model, &ds);
+        let opts = TrainerOptions {
+            solver: SolverKind::Ap,
+            estimator: EstimatorKind::Pathwise,
+            warm_start: true,
+            block_size: Some(block),
+            seed: 4,
+            ..Default::default()
+        };
+        let mut trainer = Trainer::new(opts, Box::new(op), &ds);
+        let out = trainer.run(steps)?;
+        runtime_csv.row(&[
+            config.to_string(),
+            s.to_string(),
+            format!("{:.3}", out.total_secs),
+            format!("{:.3}", out.solver_secs),
+            format!("{:.4}", out.final_metrics.llh),
+        ])?;
+        igp::info!("fig4 {config} (s={s}): total {:.1}s", out.total_secs);
+
+        // sample-count sweep on the biggest config
+        if config == "pol_s64" {
+            let v = trainer.v_store().clone();
+            let probes = trainer.probes();
+            let vy = v.col(0);
+            let zhat = probes.zhat(&v);
+            let (mean, samples) =
+                trainer.operator().predict(&vy, &zhat, &probes.omega0, &probes.wts);
+            let noise_var = trainer.operator().hp().noise_var();
+            let mut k = 1usize;
+            while k <= s {
+                let var: Vec<f64> = (0..samples.rows)
+                    .map(|i| {
+                        let row = &samples.row(i)[..k];
+                        let mu = row.iter().sum::<f64>() / k as f64;
+                        let v = if k > 1 {
+                            row.iter().map(|x| (x - mu) * (x - mu)).sum::<f64>() / (k - 1) as f64
+                        } else {
+                            0.0
+                        };
+                        v + noise_var
+                    })
+                    .collect();
+                let m = igp::gp::metrics(&mean, &var, trainer.y_test());
+                llh_csv.row(&[k.to_string(), format!("{:.4}", m.llh), format!("{:.4}", m.rmse)])?;
+                k *= 2;
+            }
+        }
+    }
+    runtime_csv.flush()?;
+    llh_csv.flush()?;
+    Ok(())
+}
+
+// ---------------------------------------------------------------------------
+// Figs 5, 8, 11-13: hyperparameter trajectories vs exact optimisation
+// ---------------------------------------------------------------------------
+
+pub fn traj(ctx: &Ctx) -> Result<()> {
+    let dir = ctx.out_dir("traj");
+    let steps = ctx.steps_or(12);
+    for dataset in ["pol", "elevators"] {
+        let ds = data::generate(&data::spec(dataset)?);
+        // exact baseline (Cholesky in Rust through the XLA operator's
+        // exact path — Figs 5/8 reference)
+        let model = ctx.rt.load_config(&ctx.artifacts, dataset)?;
+        let mut op = XlaOperator::new(model, &ds);
+        let exact = run_exact(&mut op, &ds.y_train, steps, 0.1, 1.0)?;
+        let d = ds.spec.d;
+        let mut w = CsvWriter::create(
+            dir.join(format!("{dataset}_exact.csv")),
+            &["step", "mll", "theta"],
+        )?;
+        for (i, (theta, mll)) in exact.iter().enumerate() {
+            w.row(&[i.to_string(), format!("{mll:.5}"), join_theta(theta)])?;
+        }
+        w.flush()?;
+
+        // iterative variants (per solver, the 4 estimator/warm combos)
+        let mut summary = MarkdownTable::new(&[
+            "dataset", "solver", "estimator", "warm", "mean |dtheta| vs exact", "max |dtheta|",
+        ]);
+        for solver in SOLVERS {
+            for (estimator, warm) in VARIANTS {
+                let mut cell = Cell::new(dataset, solver, estimator, warm);
+                cell.steps = steps;
+                let res = run_cell(&ctx.rt, &ctx.artifacts, &cell)?;
+                let mut w = CsvWriter::create(
+                    dir.join(format!(
+                        "{dataset}_{}_{}_{}.csv",
+                        solver.name(),
+                        estimator.name(),
+                        if warm { "warm" } else { "cold" }
+                    )),
+                    &["step", "theta"],
+                )?;
+                let mut devs = Vec::new();
+                for t in &res.out.telemetry {
+                    w.row(&[t.step.to_string(), join_theta(&t.theta)])?;
+                    let (ex_theta, _) = &exact[t.step];
+                    for kk in 0..d + 2 {
+                        devs.push((t.theta[kk] - ex_theta[kk]).abs());
+                    }
+                }
+                w.flush()?;
+                let mean_dev = stats::mean(&devs);
+                let max_dev = devs.iter().cloned().fold(0.0, f64::max);
+                summary.row(vec![
+                    dataset.to_string(),
+                    solver.name().into(),
+                    estimator.name().into(),
+                    warm.to_string(),
+                    format!("{mean_dev:.4}"),
+                    format!("{max_dev:.4}"),
+                ]);
+                igp::info!(
+                    "traj {} done: mean|dtheta|={:.4}",
+                    res.cell.label(),
+                    mean_dev
+                );
+            }
+        }
+        summary.write_to(dir.join(format!("{dataset}_summary.md")))?;
+        println!("{}", summary.render());
+    }
+    Ok(())
+}
+
+fn join_theta(theta: &[f64]) -> String {
+    theta
+        .iter()
+        .map(|t| format!("{t:.5}"))
+        .collect::<Vec<_>>()
+        .join(";")
+}
+
+// ---------------------------------------------------------------------------
+// Fig 6: exact initial RKHS distance to the solution, warm vs cold
+// ---------------------------------------------------------------------------
+
+pub fn fig6(ctx: &Ctx) -> Result<()> {
+    let dir = ctx.out_dir("fig6");
+    let steps = ctx.steps_or(15);
+    let dataset = "pol";
+    let ds = data::generate(&data::spec(dataset)?);
+    let d = ds.spec.d;
+    let mut op = DenseOperator::new(&ds, 16, 256);
+    let mut rng = Rng::new(6);
+    let probes = ProbeSet::sample(EstimatorKind::Pathwise, &op, &mut rng);
+    let mut params = SoftplusParams::from_theta(&vec![1.0; d + 2]);
+    let mut adam = Adam::new(d + 2, 0.1);
+    let mut solver = make_solver(SolverKind::Ap);
+    let solve_opts = SolveOptions {
+        block_size: 128,
+        max_epochs: 100.0,
+        ..Default::default()
+    };
+    let mut v_warm = Mat::zeros(op.n(), op.k_width());
+
+    let mut csv = CsvWriter::create(
+        dir.join("fig6.csv"),
+        &["step", "rms_dist_warm", "rms_dist_cold", "ratio"],
+    )?;
+    for step in 0..steps {
+        let theta = params.theta();
+        op.set_hp(&Hyperparams::unpack(&theta, d));
+        let b = probes.targets(&op, &ds.y_train);
+        // exact solution and RKHS distances ||v0 - v*||_H
+        let ch = Cholesky::factor(op.h())?;
+        let v_star = ch.solve_mat(&b);
+        let dist = |v0: &Mat| -> f64 {
+            let mut diff = v_star.clone();
+            diff.sub_assign(v0);
+            let hd = op.hv(&diff);
+            let per_col = igp::solvers::col_dots(&diff, &hd);
+            (per_col.iter().sum::<f64>() / per_col.len() as f64).sqrt()
+        };
+        let cold = Mat::zeros(op.n(), op.k_width());
+        let d_warm = dist(&v_warm);
+        let d_cold = dist(&cold);
+        csv.row(&[
+            step.to_string(),
+            format!("{d_warm:.5e}"),
+            format!("{d_cold:.5e}"),
+            format!("{:.3}", d_cold / d_warm.max(1e-300)),
+        ])?;
+        // advance the run with a warm-started solve + Adam step
+        let report = solver.solve(&op, &b, &mut v_warm, &solve_opts);
+        let _ = report;
+        let grad = probes.grad(&op, &v_warm, &b);
+        let grad_nu = params.chain_grad(&grad);
+        adam.step(&mut params.nu, &grad_nu);
+    }
+    csv.flush()?;
+    igp::info!("fig6 done");
+    Ok(())
+}
+
+// ---------------------------------------------------------------------------
+// Figs 7 & 21: iterations to tolerance per outer step
+// ---------------------------------------------------------------------------
+
+pub fn fig7(ctx: &Ctx) -> Result<()> {
+    let dir = ctx.out_dir("fig7");
+    let steps = ctx.steps_or(12);
+    let mut csv = CsvWriter::create(
+        dir.join("fig7.csv"),
+        &["dataset", "solver", "estimator", "warm", "step", "iterations", "epochs", "llh"],
+    )?;
+    for dataset in ["pol", "elevators"] {
+        for solver in SOLVERS {
+            for (estimator, warm) in VARIANTS {
+                let mut cell = Cell::new(dataset, solver, estimator, warm);
+                cell.steps = steps;
+                let res = run_cell(&ctx.rt, &ctx.artifacts, &cell)?;
+                for t in &res.out.telemetry {
+                    csv.row(&[
+                        dataset.to_string(),
+                        solver.name().into(),
+                        estimator.name().into(),
+                        warm.to_string(),
+                        t.step.to_string(),
+                        t.iterations.to_string(),
+                        format!("{:.2}", t.epochs),
+                        format!("{:.4}", res.out.final_metrics.llh),
+                    ])?;
+                }
+                igp::info!("fig7 {} done", res.cell.label());
+            }
+        }
+    }
+    csv.flush()?;
+    Ok(())
+}
+
+// ---------------------------------------------------------------------------
+// Figs 9 & 14-17: limited compute budgets on the small suite
+// ---------------------------------------------------------------------------
+
+pub fn fig9(ctx: &Ctx) -> Result<()> {
+    let dir = ctx.out_dir("fig9");
+    let steps = ctx.steps_or(15);
+    let budgets: &[f64] = if ctx.full { &[10.0, 20.0, 30.0, 40.0, 50.0] } else { &[10.0, 30.0, 50.0] };
+    let datasets: Vec<String> = if ctx.full {
+        ctx.small_datasets()
+    } else {
+        vec!["pol".to_string()]
+    };
+    let mut md = MarkdownTable::new(&[
+        "dataset", "solver", "estimator", "warm", "budget", "final ry", "final rz", "llh",
+    ]);
+    for dataset in &datasets {
+        for solver in SOLVERS {
+            for (estimator, warm) in VARIANTS {
+                for &budget in budgets {
+                    let mut cell = Cell::new(dataset, solver, estimator, warm);
+                    cell.steps = steps;
+                    cell.max_epochs = Some(budget);
+                    let res = run_cell(&ctx.rt, &ctx.artifacts, &cell)?;
+                    write_telemetry(
+                        &res,
+                        &dir.join(format!(
+                            "steps_{}_{}_{}_{}_b{}.csv",
+                            dataset,
+                            solver.name(),
+                            estimator.name(),
+                            if warm { "warm" } else { "cold" },
+                            budget as usize
+                        )),
+                    )?;
+                    let last = res.out.telemetry.last().unwrap();
+                    md.row(vec![
+                        dataset.clone(),
+                        solver.name().into(),
+                        estimator.name().into(),
+                        warm.to_string(),
+                        format!("{budget}"),
+                        format!("{:.4}", last.ry),
+                        format!("{:.4}", last.rz),
+                        format!("{:.4}", res.out.final_metrics.llh),
+                    ]);
+                    igp::info!(
+                        "fig9 {} b={} done: rz={:.4} llh={:.3}",
+                        res.cell.label(),
+                        budget,
+                        last.rz,
+                        res.out.final_metrics.llh
+                    );
+                }
+            }
+        }
+    }
+    md.write_to(dir.join("fig9.md"))?;
+    println!("{}", md.render());
+    Ok(())
+}
+
+// ---------------------------------------------------------------------------
+// Figs 10 & 18-20: large datasets under a 10-epoch budget, tracked per step
+// ---------------------------------------------------------------------------
+
+pub fn fig10(ctx: &Ctx) -> Result<()> {
+    let dir = ctx.out_dir("fig10");
+    let steps = ctx.steps_or(10);
+    let mut md = MarkdownTable::new(&[
+        "dataset", "solver", "warm", "first rz", "last rz", "last llh",
+    ]);
+    for dataset in ctx.large_datasets() {
+        for solver in SOLVERS {
+            for warm in [false, true] {
+                let mut cell = Cell::new(&dataset, solver, EstimatorKind::Pathwise, warm);
+                cell.steps = steps;
+                cell.lr = 0.03;
+                cell.max_epochs = Some(10.0);
+                cell.predict_every = Some(2);
+                cell.subset_init = true; // paper App. B heuristic
+                let res = run_cell(&ctx.rt, &ctx.artifacts, &cell)?;
+                write_telemetry(
+                    &res,
+                    &dir.join(format!(
+                        "steps_{}_{}_{}.csv",
+                        dataset,
+                        solver.name(),
+                        if warm { "warm" } else { "cold" }
+                    )),
+                )?;
+                let first = res.out.telemetry.first().unwrap();
+                let last = res.out.telemetry.last().unwrap();
+                md.row(vec![
+                    dataset.clone(),
+                    solver.name().into(),
+                    warm.to_string(),
+                    format!("{:.4}", first.rz),
+                    format!("{:.4}", last.rz),
+                    format!("{:.4}", res.out.final_metrics.llh),
+                ]);
+                igp::info!(
+                    "fig10 {} done: rz {:.4} -> {:.4}",
+                    res.cell.label(),
+                    first.rz,
+                    last.rz
+                );
+            }
+        }
+    }
+    md.write_to(dir.join("fig10.md"))?;
+    println!("{}", md.render());
+    Ok(())
+}

@@ -1,0 +1,342 @@
+//! Experiment harness: one subcommand per paper table/figure (DESIGN.md §4).
+//!
+//! Every experiment writes CSV series plus a markdown summary under
+//! `results/` mirroring the paper's rows; EXPERIMENTS.md records the
+//! paper-vs-measured comparison.  Scales are reduced per DESIGN.md §3
+//! (synthetic UCI-like datasets, fewer outer steps); the *shape* of each
+//! result (who wins, by what factor, where crossovers fall) is the target.
+
+mod cells;
+mod figs;
+pub mod report;
+
+use anyhow::Result;
+
+use cells::{run_cell, write_telemetry, Cell};
+use igp::estimator::EstimatorKind;
+use igp::runtime::Runtime;
+use igp::solvers::SolverKind;
+use igp::util::csv::{CsvWriter, MarkdownTable};
+
+use crate::cli::Parser;
+
+const SOLVERS: [SolverKind; 3] = [SolverKind::Cg, SolverKind::Ap, SolverKind::Sgd];
+const VARIANTS: [(EstimatorKind, bool); 4] = [
+    (EstimatorKind::Standard, false),
+    (EstimatorKind::Pathwise, false),
+    (EstimatorKind::Standard, true),
+    (EstimatorKind::Pathwise, true),
+];
+
+pub fn dispatch(args: &[String]) -> Result<()> {
+    let p = Parser::new(args, &["out", "steps", "splits", "artifacts", "datasets"])?;
+    let Some(id) = p.positional.first() else {
+        anyhow::bail!("usage: igp exp <id|all> [--out DIR] [--steps N] [--splits N] [--full]");
+    };
+    let ctx = Ctx {
+        rt: Runtime::cpu()?,
+        artifacts: p.get("artifacts").unwrap_or("artifacts").to_string(),
+        out: p.get("out").unwrap_or("results").to_string(),
+        steps: p.get("steps").map(|v| v.parse()).transpose()?.unwrap_or(0),
+        splits: p.get("splits").map(|v| v.parse()).transpose()?.unwrap_or(1),
+        full: p.flag("full"),
+        datasets: p
+            .get("datasets")
+            .map(|v| v.split(',').map(str::to_string).collect()),
+    };
+    match id.as_str() {
+        "table1" => table1(&ctx),
+        "table7" => table7(&ctx),
+        "fig1" => fig1(&ctx),
+        "fig3" => figs::fig3(&ctx),
+        "fig4" => figs::fig4(&ctx),
+        "fig5" | "fig8" | "fig11" | "traj" => figs::traj(&ctx),
+        "fig6" => figs::fig6(&ctx),
+        "fig7" | "fig21" => figs::fig7(&ctx),
+        "fig9" | "fig14" => figs::fig9(&ctx),
+        "fig10" | "fig18" => figs::fig10(&ctx),
+        "report" => report::write_into_experiments_md(
+            std::path::Path::new(&ctx.out),
+            std::path::Path::new("EXPERIMENTS.md"),
+        ),
+        "all" => {
+            table1(&ctx)?;
+            table7(&ctx)?;
+            fig1(&ctx)?;
+            figs::fig3(&ctx)?;
+            figs::fig4(&ctx)?;
+            figs::traj(&ctx)?;
+            figs::fig6(&ctx)?;
+            figs::fig7(&ctx)?;
+            figs::fig9(&ctx)?;
+            figs::fig10(&ctx)?;
+            Ok(())
+        }
+        other => anyhow::bail!("unknown experiment '{other}'"),
+    }
+}
+
+pub struct Ctx {
+    pub rt: Runtime,
+    pub artifacts: String,
+    pub out: String,
+    /// 0 = experiment default.
+    pub steps: usize,
+    pub splits: u64,
+    pub full: bool,
+    pub datasets: Option<Vec<String>>,
+}
+
+impl Ctx {
+    fn steps_or(&self, default: usize) -> usize {
+        if self.steps == 0 {
+            default
+        } else {
+            self.steps
+        }
+    }
+
+    fn small_datasets(&self) -> Vec<String> {
+        if let Some(ds) = &self.datasets {
+            return ds.clone();
+        }
+        let mut v = vec!["pol".to_string(), "elevators".to_string(), "bike".to_string()];
+        if self.full {
+            v.push("protein".into());
+            v.push("keggdir".into());
+        }
+        v
+    }
+
+    fn large_datasets(&self) -> Vec<String> {
+        if let Some(ds) = &self.datasets {
+            return ds.clone();
+        }
+        let mut v = vec!["threedroad".to_string(), "song".to_string(), "buzz".to_string()];
+        if self.full {
+            v.push("houseelectric".into());
+        }
+        v
+    }
+
+    fn out_dir(&self, id: &str) -> std::path::PathBuf {
+        let p = std::path::PathBuf::from(&self.out).join(id);
+        std::fs::create_dir_all(&p).expect("create results dir");
+        p
+    }
+}
+
+fn fmt3(x: f64) -> String {
+    format!("{x:.3}")
+}
+
+// ---------------------------------------------------------------------------
+// Table 1 (+ Tables 2-6): solve-to-tolerance study on the small suite
+// ---------------------------------------------------------------------------
+
+pub fn table1(ctx: &Ctx) -> Result<()> {
+    let dir = ctx.out_dir("table1");
+    let steps = ctx.steps_or(25);
+    let mut md = MarkdownTable::new(&[
+        "solver", "pathwise", "warm", "dataset", "rmse", "llh", "total(s)", "solver(s)",
+        "epochs", "censored", "speedup",
+    ]);
+    let mut csv = CsvWriter::create(
+        dir.join("table1.csv"),
+        &[
+            "dataset", "solver", "estimator", "warm", "split", "rmse", "llh", "total_secs",
+            "solver_secs", "epochs", "censored",
+        ],
+    )?;
+
+    for dataset in ctx.small_datasets() {
+        for solver in SOLVERS {
+            let mut baseline_time: Option<f64> = None;
+            for (estimator, warm) in VARIANTS {
+                // mean over splits
+                let mut agg = Vec::new();
+                for split in 0..ctx.splits {
+                    let mut cell = Cell::new(&dataset, solver, estimator, warm);
+                    cell.steps = steps;
+                    cell.split = split;
+                    let res = run_cell(&ctx.rt, &ctx.artifacts, &cell)?;
+                    csv.row(&[
+                        dataset.clone(),
+                        solver.name().into(),
+                        estimator.name().into(),
+                        warm.to_string(),
+                        split.to_string(),
+                        format!("{:.4}", res.out.final_metrics.rmse),
+                        format!("{:.4}", res.out.final_metrics.llh),
+                        fmt3(res.out.total_secs),
+                        fmt3(res.out.solver_secs),
+                        format!("{:.1}", res.out.total_epochs),
+                        res.censored.to_string(),
+                    ])?;
+                    if split == 0 {
+                        write_telemetry(
+                            &res,
+                            &dir.join(format!(
+                                "steps_{}_{}_{}_{}.csv",
+                                dataset,
+                                solver.name(),
+                                estimator.name(),
+                                if warm { "warm" } else { "cold" }
+                            )),
+                        )?;
+                    }
+                    agg.push(res);
+                }
+                let mean = |f: &dyn Fn(&cells::CellResult) -> f64| {
+                    agg.iter().map(|r| f(r)).sum::<f64>() / agg.len() as f64
+                };
+                let total = mean(&|r| r.out.total_secs);
+                let speedup = match baseline_time {
+                    None => {
+                        baseline_time = Some(total);
+                        "-".to_string()
+                    }
+                    Some(base) => format!("{:.1}x", base / total),
+                };
+                let censored = agg.iter().any(|r| r.censored);
+                igp::info!(
+                    "table1 {} done: llh={:.3} total={:.1}s epochs={:.0}{}",
+                    agg[0].cell.label(),
+                    mean(&|r| r.out.final_metrics.llh),
+                    total,
+                    mean(&|r| r.out.total_epochs),
+                    if censored { " (censored)" } else { "" }
+                );
+                md.row(vec![
+                    solver.name().to_string(),
+                    if estimator == EstimatorKind::Pathwise { "x".into() } else { "".into() },
+                    if warm { "x".into() } else { "".into() },
+                    dataset.clone(),
+                    format!("{:.4}", mean(&|r| r.out.final_metrics.rmse)),
+                    format!("{:.4}", mean(&|r| r.out.final_metrics.llh)),
+                    fmt3(total),
+                    fmt3(mean(&|r| r.out.solver_secs)),
+                    format!("{:.0}", mean(&|r| r.out.total_epochs)),
+                    if censored { ">".into() } else { "".into() },
+                    speedup,
+                ]);
+            }
+        }
+    }
+    csv.flush()?;
+    md.write_to(dir.join("table1.md"))?;
+    println!("{}", md.render());
+    Ok(())
+}
+
+// ---------------------------------------------------------------------------
+// Tables 7-10: large datasets, 10-epoch budget, warm vs cold
+// ---------------------------------------------------------------------------
+
+pub fn table7(ctx: &Ctx) -> Result<()> {
+    let dir = ctx.out_dir("table7");
+    let steps = ctx.steps_or(12);
+    let mut md = MarkdownTable::new(&[
+        "dataset", "solver", "warm", "rmse", "llh", "total(s)", "resid mean", "resid probes",
+    ]);
+    let mut csv = CsvWriter::create(
+        dir.join("table7.csv"),
+        &["dataset", "solver", "warm", "rmse", "llh", "total_secs", "ry", "rz"],
+    )?;
+    for dataset in ctx.large_datasets() {
+        for solver in SOLVERS {
+            for warm in [false, true] {
+                let mut cell = Cell::new(&dataset, solver, EstimatorKind::Pathwise, warm);
+                cell.steps = steps;
+                cell.lr = 0.03;
+                cell.max_epochs = Some(10.0);
+                cell.subset_init = true; // paper App. B heuristic
+                let res = run_cell(&ctx.rt, &ctx.artifacts, &cell)?;
+                let last = res.out.telemetry.last().unwrap();
+                igp::info!(
+                    "table7 {} done: llh={:.3} rz={:.3}",
+                    res.cell.label(),
+                    res.out.final_metrics.llh,
+                    last.rz
+                );
+                write_telemetry(
+                    &res,
+                    &dir.join(format!(
+                        "steps_{}_{}_{}.csv",
+                        dataset,
+                        solver.name(),
+                        if warm { "warm" } else { "cold" }
+                    )),
+                )?;
+                md.row(vec![
+                    dataset.clone(),
+                    solver.name().into(),
+                    if warm { "x".into() } else { "".into() },
+                    format!("{:.4}", res.out.final_metrics.rmse),
+                    format!("{:.4}", res.out.final_metrics.llh),
+                    fmt3(res.out.total_secs),
+                    format!("{:.4}", last.ry),
+                    format!("{:.4}", last.rz),
+                ]);
+                csv.row(&[
+                    dataset.clone(),
+                    solver.name().into(),
+                    warm.to_string(),
+                    format!("{:.4}", res.out.final_metrics.rmse),
+                    format!("{:.4}", res.out.final_metrics.llh),
+                    fmt3(res.out.total_secs),
+                    format!("{:.4}", last.ry),
+                    format!("{:.4}", last.rz),
+                ])?;
+            }
+        }
+    }
+    csv.flush()?;
+    md.write_to(dir.join("table7.md"))?;
+    println!("{}", md.render());
+    Ok(())
+}
+
+// ---------------------------------------------------------------------------
+// Fig 1: runtime breakdown (solver time vs total) per method
+// ---------------------------------------------------------------------------
+
+pub fn fig1(ctx: &Ctx) -> Result<()> {
+    let dir = ctx.out_dir("fig1");
+    let steps = ctx.steps_or(12);
+    let mut csv = CsvWriter::create(
+        dir.join("fig1.csv"),
+        &["dataset", "solver", "estimator", "warm", "total_secs", "solver_secs", "solver_frac"],
+    )?;
+    let mut md = MarkdownTable::new(&["method", "dataset", "total(s)", "solver(s)", "solver %"]);
+    for dataset in ["pol".to_string(), "elevators".to_string()] {
+        for solver in SOLVERS {
+            for (estimator, warm) in VARIANTS {
+                let mut cell = Cell::new(&dataset, solver, estimator, warm);
+                cell.steps = steps;
+                let res = run_cell(&ctx.rt, &ctx.artifacts, &cell)?;
+                let frac = res.out.solver_secs / res.out.total_secs;
+                csv.row(&[
+                    dataset.clone(),
+                    solver.name().into(),
+                    estimator.name().into(),
+                    warm.to_string(),
+                    fmt3(res.out.total_secs),
+                    fmt3(res.out.solver_secs),
+                    format!("{frac:.3}"),
+                ])?;
+                md.row(vec![
+                    res.cell.label(),
+                    dataset.clone(),
+                    fmt3(res.out.total_secs),
+                    fmt3(res.out.solver_secs),
+                    format!("{:.0}%", 100.0 * frac),
+                ]);
+            }
+        }
+    }
+    csv.flush()?;
+    md.write_to(dir.join("fig1.md"))?;
+    println!("{}", md.render());
+    Ok(())
+}

@@ -1,0 +1,230 @@
+//! Exact (Cholesky) Gaussian-process baseline and predictive metrics.
+//!
+//! Serves three roles: (i) the "exact optimisation" comparator of Figs 5,
+//! 8, 11–13; (ii) the oracle the iterative path is validated against in
+//! tests; (iii) exact diagnostics for Fig 3 (tr H^-1, top eigenvalue of
+//! H^-1, noise precision).  O(n^3), so small-n configs only; the
+//! XLA `exact_mll` artifact provides the same quantities on the fast path.
+
+use crate::kernels::{h_matrix, kernel_matrix, Hyperparams, KernelFamily};
+use crate::linalg::{Cholesky, Mat};
+use crate::util::stats;
+use anyhow::Result;
+
+/// Exact GP posterior built once per hyperparameter setting.
+pub struct ExactGp {
+    pub hp: Hyperparams,
+    pub family: KernelFamily,
+    chol: Cholesky,
+    alpha: Vec<f64>, // H^-1 y
+    x: Mat,
+}
+
+impl ExactGp {
+    pub fn fit(x: &Mat, y: &[f64], hp: &Hyperparams, family: KernelFamily) -> Result<Self> {
+        let h = h_matrix(x, hp, family);
+        let chol = Cholesky::factor(&h)?;
+        let alpha = chol.solve(y);
+        Ok(ExactGp { hp: hp.clone(), family, chol, alpha, x: x.clone() })
+    }
+
+    /// Exact marginal log-likelihood (eq. 4).
+    pub fn mll(&self, y: &[f64]) -> f64 {
+        let n = y.len() as f64;
+        -0.5 * stats::dot(y, &self.alpha)
+            - 0.5 * self.chol.logdet()
+            - 0.5 * n * (2.0 * std::f64::consts::PI).ln()
+    }
+
+    /// Exact MLL gradient (eq. 5) via closed form with explicit H^-1.
+    /// Returns d/dtheta for theta = [ell.., sigf, sigma].
+    pub fn mll_grad(&self) -> Vec<f64> {
+        let n = self.x.rows;
+        let d = self.x.cols;
+        let hinv = self.chol.inverse();
+        let mut grad = vec![0.0; d + 2];
+        // dH/dell_k and dH/dsigf share the pairwise pass; see
+        // python/compile/kernels/common.py for the derivative identities.
+        let sf2 = self.hp.sigf * self.hp.sigf;
+        for i in 0..n {
+            for j in 0..n {
+                let quad = self.alpha[i] * self.alpha[j]; // vy vy^T
+                let weight = 0.5 * quad - 0.5 * hinv[(i, j)];
+                let sq = crate::kernels::sqdist_scaled(
+                    self.x.row(i),
+                    self.x.row(j),
+                    &self.hp.ell,
+                );
+                let h_r = dl_weight(sq, self.family);
+                let kij = sf2 * self.family.unit_cov(sq);
+                for k in 0..d {
+                    let dlt = (self.x[(i, k)] - self.x[(j, k)]) / self.hp.ell[k];
+                    grad[k] += weight * sf2 * h_r * dlt * dlt / self.hp.ell[k];
+                }
+                grad[d] += weight * 2.0 * kij / self.hp.sigf;
+            }
+            // noise: dH/dsigma = 2 sigma I
+            grad[d + 1] += (0.5 * self.alpha[i] * self.alpha[i] - 0.5 * hinv[(i, i)])
+                * 2.0
+                * self.hp.sigma;
+        }
+        grad
+    }
+
+    /// Posterior predictive mean and variance (with observation noise).
+    pub fn predict(&self, x_test: &Mat) -> (Vec<f64>, Vec<f64>) {
+        let kx = kernel_matrix(x_test, &self.x, &self.hp, self.family); // [t, n]
+        let mean = kx.matvec(&self.alpha);
+        let mut var = Vec::with_capacity(x_test.rows);
+        let prior = self.hp.sigf * self.hp.sigf;
+        for i in 0..x_test.rows {
+            let krow = kx.row(i);
+            let w = self.chol.solve(krow);
+            let reduction = stats::dot(krow, &w);
+            var.push((prior - reduction).max(1e-12) + self.hp.noise_var());
+        }
+        (mean, var)
+    }
+
+    /// tr(H^-1) and the top eigenvalue of H^-1 (Fig 3 diagnostics).
+    pub fn hinv_diagnostics(&self) -> (f64, f64) {
+        let hinv = self.chol.inverse();
+        let trace = hinv.trace();
+        let top = crate::linalg::power_iteration(hinv.rows, |v| hinv.matvec(v), 100, 0);
+        (trace, top)
+    }
+
+    pub fn solve(&self, b: &[f64]) -> Vec<f64> {
+        self.chol.solve(b)
+    }
+}
+
+/// Radial weight h(r): mirror of kernels/common.py::dl_weight.
+fn dl_weight(sq: f64, family: KernelFamily) -> f64 {
+    use crate::kernels::{SQRT3, SQRT5};
+    match family {
+        KernelFamily::Rbf => (-0.5 * sq).exp(),
+        KernelFamily::Matern12 => {
+            let r = sq.max(0.0).sqrt();
+            (-r).exp() / r.max(1e-30)
+        }
+        KernelFamily::Matern32 => 3.0 * (-SQRT3 * sq.max(0.0).sqrt()).exp(),
+        KernelFamily::Matern52 => {
+            let r = sq.max(0.0).sqrt();
+            (5.0 / 3.0) * (1.0 + SQRT5 * r) * (-SQRT5 * r).exp()
+        }
+    }
+}
+
+/// Predictive metrics from mean/variance predictions.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct Metrics {
+    pub rmse: f64,
+    pub llh: f64,
+}
+
+pub fn metrics(mean: &[f64], var: &[f64], y_test: &[f64]) -> Metrics {
+    Metrics {
+        rmse: stats::rmse(mean, y_test),
+        llh: stats::gaussian_llh(mean, var, y_test),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    fn toy(n: usize, d: usize, seed: u64) -> (Mat, Vec<f64>, Hyperparams) {
+        let mut rng = Rng::new(seed);
+        let x = Mat::from_fn(n, d, |_, _| rng.gaussian());
+        let y = rng.gaussian_vec(n);
+        let hp = Hyperparams { ell: vec![1.0; d], sigf: 1.2, sigma: 0.4 };
+        (x, y, hp)
+    }
+
+    #[test]
+    fn mll_matches_direct_formula() {
+        let (x, y, hp) = toy(32, 2, 0);
+        let gp = ExactGp::fit(&x, &y, &hp, KernelFamily::Matern32).unwrap();
+        let h = h_matrix(&x, &hp, KernelFamily::Matern32);
+        let ch = Cholesky::factor(&h).unwrap();
+        let want = -0.5 * stats::dot(&y, &ch.solve(&y))
+            - 0.5 * ch.logdet()
+            - 0.5 * 32.0 * (2.0 * std::f64::consts::PI).ln();
+        assert!((gp.mll(&y) - want).abs() < 1e-10);
+    }
+
+    #[test]
+    fn mll_grad_matches_finite_difference() {
+        let (x, y, hp) = toy(24, 2, 1);
+        let fam = KernelFamily::Matern32;
+        let gp = ExactGp::fit(&x, &y, &hp, fam).unwrap();
+        let grad = gp.mll_grad();
+        let theta = hp.pack();
+        let eps = 1e-5;
+        for k in 0..theta.len() {
+            let mut tp = theta.clone();
+            tp[k] += eps;
+            let hp_p = Hyperparams::unpack(&tp, 2);
+            let lp = ExactGp::fit(&x, &y, &hp_p, fam).unwrap().mll(&y);
+            let mut tm = theta.clone();
+            tm[k] -= eps;
+            let hp_m = Hyperparams::unpack(&tm, 2);
+            let lm = ExactGp::fit(&x, &y, &hp_m, fam).unwrap().mll(&y);
+            let fd = (lp - lm) / (2.0 * eps);
+            assert!(
+                (grad[k] - fd).abs() < 1e-5 * (1.0 + fd.abs()),
+                "k={k}: analytic {} vs fd {fd}",
+                grad[k]
+            );
+        }
+    }
+
+    #[test]
+    fn predictions_interpolate_clean_data() {
+        // Noise-free-ish GP regression on its own training points must
+        // reproduce the targets closely.
+        let mut rng = Rng::new(2);
+        let x = Mat::from_fn(24, 1, |i, _| i as f64 * 0.3 + 0.01 * rng.gaussian());
+        let y: Vec<f64> = (0..24).map(|i| (i as f64 * 0.3).sin()).collect();
+        let hp = Hyperparams { ell: vec![1.0], sigf: 1.0, sigma: 0.01 };
+        let gp = ExactGp::fit(&x, &y, &hp, KernelFamily::Matern52).unwrap();
+        let (mean, _) = gp.predict(&x);
+        for (m, t) in mean.iter().zip(&y) {
+            assert!((m - t).abs() < 0.05, "{m} vs {t}");
+        }
+    }
+
+    #[test]
+    fn predictive_variance_grows_off_data() {
+        let (x, y, hp) = toy(32, 1, 3);
+        let gp = ExactGp::fit(&x, &y, &hp, KernelFamily::Matern32).unwrap();
+        let near = Mat::from_vec(1, 1, vec![0.0]);
+        let far = Mat::from_vec(1, 1, vec![50.0]);
+        let (_, v_near) = gp.predict(&near);
+        let (_, v_far) = gp.predict(&far);
+        assert!(v_far[0] > v_near[0]);
+        // far from data, variance approaches prior + noise
+        assert!((v_far[0] - (1.44 + 0.16)).abs() < 1e-6);
+    }
+
+    #[test]
+    fn hinv_diagnostics_consistent() {
+        let (x, y, hp) = toy(24, 2, 4);
+        let gp = ExactGp::fit(&x, &y, &hp, KernelFamily::Matern32).unwrap();
+        let (trace, top) = gp.hinv_diagnostics();
+        // top eigenvalue <= trace <= n * top for SPD
+        assert!(top <= trace + 1e-9);
+        assert!(trace <= 24.0 * top + 1e-9);
+        // top eig of H^-1 is at most 1/sigma^2
+        assert!(top <= 1.0 / hp.noise_var() + 1e-9);
+    }
+
+    #[test]
+    fn metrics_computation() {
+        let m = metrics(&[0.0, 1.0], &[1.0, 1.0], &[0.0, 1.0]);
+        assert!(m.rmse.abs() < 1e-12);
+        assert!((m.llh + 0.5 * (2.0 * std::f64::consts::PI).ln()).abs() < 1e-12);
+    }
+}

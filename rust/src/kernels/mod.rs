@@ -1,0 +1,239 @@
+//! Rust mirror of the kernel-family math in `python/compile/kernels/common.py`.
+//!
+//! Used by the synthetic data generator, the dense test operator, AP block
+//! factors and the pivoted-Cholesky preconditioner.  The numerics are kept
+//! bit-comparable with the JAX side (same formulas, f64) and cross-checked
+//! in the integration tests.
+
+use crate::linalg::Mat;
+
+pub const SQRT3: f64 = 1.732_050_807_568_877_2;
+pub const SQRT5: f64 = 2.236_067_977_499_79;
+
+/// Stationary covariance families supported across all three layers.
+#[derive(Copy, Clone, Debug, PartialEq, Eq)]
+pub enum KernelFamily {
+    Matern12,
+    Matern32,
+    Matern52,
+    Rbf,
+}
+
+impl KernelFamily {
+    pub fn parse(s: &str) -> anyhow::Result<Self> {
+        Ok(match s {
+            "matern12" => KernelFamily::Matern12,
+            "matern32" => KernelFamily::Matern32,
+            "matern52" => KernelFamily::Matern52,
+            "rbf" => KernelFamily::Rbf,
+            other => anyhow::bail!("unknown kernel family '{other}'"),
+        })
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            KernelFamily::Matern12 => "matern12",
+            KernelFamily::Matern32 => "matern32",
+            KernelFamily::Matern52 => "matern52",
+            KernelFamily::Rbf => "rbf",
+        }
+    }
+
+    /// Unit-signal covariance g(.) from *squared scaled* distance.
+    #[inline]
+    pub fn unit_cov(&self, sq: f64) -> f64 {
+        match self {
+            KernelFamily::Rbf => (-0.5 * sq).exp(),
+            KernelFamily::Matern12 => (-sq.max(0.0).sqrt()).exp(),
+            KernelFamily::Matern32 => {
+                let r = sq.max(0.0).sqrt();
+                (1.0 + SQRT3 * r) * (-SQRT3 * r).exp()
+            }
+            KernelFamily::Matern52 => {
+                let r = sq.max(0.0).sqrt();
+                (1.0 + SQRT5 * r + (5.0 / 3.0) * sq) * (-SQRT5 * r).exp()
+            }
+        }
+    }
+
+    /// Degrees of freedom of the spectral density (multivariate t with
+    /// df = 2 nu); `None` for the Gaussian spectral density of RBF.
+    pub fn spectral_t_df(&self) -> Option<f64> {
+        match self {
+            KernelFamily::Matern12 => Some(1.0),
+            KernelFamily::Matern32 => Some(3.0),
+            KernelFamily::Matern52 => Some(5.0),
+            KernelFamily::Rbf => None,
+        }
+    }
+}
+
+/// Packed hyperparameters, matching the artifact convention
+/// `theta = [ell_1..ell_d, sigf, sigma]` (raw positive values).
+#[derive(Clone, Debug, PartialEq)]
+pub struct Hyperparams {
+    pub ell: Vec<f64>,
+    pub sigf: f64,
+    pub sigma: f64,
+}
+
+impl Hyperparams {
+    pub fn ones(d: usize) -> Self {
+        Hyperparams { ell: vec![1.0; d], sigf: 1.0, sigma: 1.0 }
+    }
+
+    pub fn dim(&self) -> usize {
+        self.ell.len() + 2
+    }
+
+    pub fn pack(&self) -> Vec<f64> {
+        let mut v = self.ell.clone();
+        v.push(self.sigf);
+        v.push(self.sigma);
+        v
+    }
+
+    pub fn unpack(theta: &[f64], d: usize) -> Self {
+        assert_eq!(theta.len(), d + 2);
+        Hyperparams {
+            ell: theta[..d].to_vec(),
+            sigf: theta[d],
+            sigma: theta[d + 1],
+        }
+    }
+
+    pub fn noise_var(&self) -> f64 {
+        self.sigma * self.sigma
+    }
+}
+
+/// Squared scaled distance between two points.
+#[inline]
+pub fn sqdist_scaled(xa: &[f64], xb: &[f64], ell: &[f64]) -> f64 {
+    debug_assert_eq!(xa.len(), xb.len());
+    let mut s = 0.0;
+    for k in 0..xa.len() {
+        let dlt = (xa[k] - xb[k]) / ell[k];
+        s += dlt * dlt;
+    }
+    s
+}
+
+/// Single covariance value k(xa, xb).
+pub fn kval(xa: &[f64], xb: &[f64], hp: &Hyperparams, family: KernelFamily) -> f64 {
+    hp.sigf * hp.sigf * family.unit_cov(sqdist_scaled(xa, xb, &hp.ell))
+}
+
+/// Full cross-covariance matrix K(Xa, Xb) [ma, mb].
+pub fn kernel_matrix(xa: &Mat, xb: &Mat, hp: &Hyperparams, family: KernelFamily) -> Mat {
+    assert_eq!(xa.cols, xb.cols);
+    let sf2 = hp.sigf * hp.sigf;
+    Mat::from_fn(xa.rows, xb.rows, |i, j| {
+        sf2 * family.unit_cov(sqdist_scaled(xa.row(i), xb.row(j), &hp.ell))
+    })
+}
+
+/// Regularised kernel matrix H = K(X, X) + sigma^2 I.
+pub fn h_matrix(x: &Mat, hp: &Hyperparams, family: KernelFamily) -> Mat {
+    let mut h = kernel_matrix(x, x, hp, family);
+    h.add_diag(hp.noise_var());
+    h
+}
+
+/// One dense row K(X_i, X) [n] (for the pivoted-Cholesky preconditioner).
+pub fn kernel_row(x: &Mat, i: usize, hp: &Hyperparams, family: KernelFamily) -> Vec<f64> {
+    let sf2 = hp.sigf * hp.sigf;
+    let xi = x.row(i).to_vec();
+    (0..x.rows)
+        .map(|j| sf2 * family.unit_cov(sqdist_scaled(&xi, x.row(j), &hp.ell)))
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn unit_cov_at_zero_is_one() {
+        for f in [
+            KernelFamily::Matern12,
+            KernelFamily::Matern32,
+            KernelFamily::Matern52,
+            KernelFamily::Rbf,
+        ] {
+            assert!((f.unit_cov(0.0) - 1.0).abs() < 1e-15, "{f:?}");
+        }
+    }
+
+    #[test]
+    fn cov_decreases_with_distance() {
+        for f in [
+            KernelFamily::Matern12,
+            KernelFamily::Matern32,
+            KernelFamily::Matern52,
+            KernelFamily::Rbf,
+        ] {
+            let mut prev = 1.0;
+            for i in 1..20 {
+                let c = f.unit_cov((i as f64 * 0.3).powi(2));
+                assert!(c < prev, "{f:?} not decreasing at {i}");
+                assert!(c > 0.0);
+                prev = c;
+            }
+        }
+    }
+
+    #[test]
+    fn matern32_known_value() {
+        // k(r=1) = (1+sqrt(3)) exp(-sqrt(3))
+        let want = (1.0 + SQRT3) * (-SQRT3).exp();
+        assert!((KernelFamily::Matern32.unit_cov(1.0) - want).abs() < 1e-15);
+    }
+
+    #[test]
+    fn kernel_matrix_symmetric_psd_diag() {
+        let mut rng = Rng::new(0);
+        let x = Mat::from_fn(16, 3, |_, _| rng.gaussian());
+        let hp = Hyperparams { ell: vec![0.7, 1.1, 1.4], sigf: 1.3, sigma: 0.2 };
+        let k = kernel_matrix(&x, &x, &hp, KernelFamily::Matern32);
+        for i in 0..16 {
+            assert!((k[(i, i)] - 1.69).abs() < 1e-12);
+            for j in 0..16 {
+                assert!((k[(i, j)] - k[(j, i)]).abs() < 1e-12);
+            }
+        }
+        // H must be SPD (choleskyable)
+        let h = h_matrix(&x, &hp, KernelFamily::Matern32);
+        assert!(crate::linalg::Cholesky::factor(&h).is_ok());
+    }
+
+    #[test]
+    fn kernel_row_matches_matrix() {
+        let mut rng = Rng::new(1);
+        let x = Mat::from_fn(12, 2, |_, _| rng.gaussian());
+        let hp = Hyperparams { ell: vec![0.9, 1.2], sigf: 1.1, sigma: 0.3 };
+        let k = kernel_matrix(&x, &x, &hp, KernelFamily::Matern52);
+        for i in [0, 5, 11] {
+            let row = kernel_row(&x, i, &hp, KernelFamily::Matern52);
+            for j in 0..12 {
+                assert!((row[j] - k[(i, j)]).abs() < 1e-14);
+            }
+        }
+    }
+
+    #[test]
+    fn pack_unpack_roundtrip() {
+        let hp = Hyperparams { ell: vec![0.5, 2.0], sigf: 1.5, sigma: 0.1 };
+        let rt = Hyperparams::unpack(&hp.pack(), 2);
+        assert_eq!(hp, rt);
+    }
+
+    #[test]
+    fn family_parse_roundtrip() {
+        for name in ["matern12", "matern32", "matern52", "rbf"] {
+            assert_eq!(KernelFamily::parse(name).unwrap().name(), name);
+        }
+        assert!(KernelFamily::parse("bogus").is_err());
+    }
+}

@@ -1,0 +1,64 @@
+//! # igp — Iterative Gaussian Processes
+//!
+//! Production-style reproduction of *“Improving Linear System Solvers for
+//! Hyperparameter Optimisation in Iterative Gaussian Processes”* (Lin et
+//! al., NeurIPS 2024) as a three-layer rust + JAX + Pallas stack:
+//!
+//! * **L1 (Pallas)** — blocked kernel-matrix products and a fused
+//!   gradient-quadratic-form kernel (`python/compile/kernels/`), AOT-lowered
+//!   to HLO text.
+//! * **L2 (JAX)** — the marginal-likelihood compute graph
+//!   (`python/compile/model.py`), one artifact per static-shape config.
+//! * **L3 (this crate)** — the paper's contribution: the bilevel
+//!   coordinator with the pathwise gradient estimator, warm-started linear
+//!   system solvers (CG / AP / SGD) and epoch-based compute budgets.
+//!
+//! Python runs only at build time (`make artifacts`); the binary executes
+//! compiled artifacts through the PJRT C API (`xla` crate).
+//!
+//! ## Quick start
+//!
+//! ```no_run
+//! use igp::prelude::*;
+//!
+//! let data = igp::data::generate(&igp::data::spec("test").unwrap());
+//! let rt = igp::runtime::Runtime::cpu().unwrap();
+//! let model = rt.load_config("artifacts", "test").unwrap();
+//! let mut trainer = Trainer::new(
+//!     TrainerOptions {
+//!         solver: SolverKind::Ap,
+//!         estimator: EstimatorKind::Pathwise,
+//!         warm_start: true,
+//!         ..TrainerOptions::default()
+//!     },
+//!     Box::new(igp::operators::XlaOperator::new(model, &data)),
+//!     &data,
+//! );
+//! let outcome = trainer.run(30).unwrap();
+//! println!("final test llh = {:?}", outcome.final_metrics);
+//! ```
+
+pub mod config;
+pub mod coordinator;
+pub mod data;
+pub mod estimator;
+pub mod gp;
+pub mod kernels;
+pub mod linalg;
+pub mod operators;
+pub mod optim;
+pub mod runtime;
+pub mod solvers;
+pub mod util;
+
+/// Convenience re-exports for downstream users and the examples.
+pub mod prelude {
+    pub use crate::coordinator::{Trainer, TrainerOptions, TrainOutcome};
+    pub use crate::data::Dataset;
+    pub use crate::estimator::EstimatorKind;
+    pub use crate::kernels::{Hyperparams, KernelFamily};
+    pub use crate::linalg::Mat;
+    pub use crate::operators::{DenseOperator, KernelOperator, XlaOperator};
+    pub use crate::solvers::{SolveOptions, SolverKind};
+    pub use crate::util::rng::Rng;
+}

@@ -1,0 +1,174 @@
+//! Cholesky factorisation and triangular solves for SPD matrices.
+
+use super::Mat;
+use anyhow::{bail, Result};
+
+/// Lower-triangular Cholesky factor L with A = L L^T.
+#[derive(Clone, Debug)]
+pub struct Cholesky {
+    pub l: Mat,
+}
+
+impl Cholesky {
+    /// Factor an SPD matrix. Fails on non-positive pivots.
+    pub fn factor(a: &Mat) -> Result<Self> {
+        assert_eq!(a.rows, a.cols);
+        let n = a.rows;
+        let mut l = Mat::zeros(n, n);
+        for i in 0..n {
+            for j in 0..=i {
+                let mut s = a[(i, j)];
+                for k in 0..j {
+                    s -= l[(i, k)] * l[(j, k)];
+                }
+                if i == j {
+                    if s <= 0.0 {
+                        bail!("cholesky: non-positive pivot {s} at {i}");
+                    }
+                    l[(i, j)] = s.sqrt();
+                } else {
+                    l[(i, j)] = s / l[(j, j)];
+                }
+            }
+        }
+        Ok(Cholesky { l })
+    }
+
+    pub fn n(&self) -> usize {
+        self.l.rows
+    }
+
+    /// Solve L y = b (forward substitution).
+    pub fn solve_lower(&self, b: &[f64]) -> Vec<f64> {
+        let n = self.n();
+        assert_eq!(b.len(), n);
+        let mut y = b.to_vec();
+        for i in 0..n {
+            let row = self.l.row(i);
+            let mut s = y[i];
+            for k in 0..i {
+                s -= row[k] * y[k];
+            }
+            y[i] = s / row[i];
+        }
+        y
+    }
+
+    /// Solve L^T x = y (backward substitution).
+    pub fn solve_upper(&self, y: &[f64]) -> Vec<f64> {
+        let n = self.n();
+        assert_eq!(y.len(), n);
+        let mut x = y.to_vec();
+        for i in (0..n).rev() {
+            let mut s = x[i];
+            for k in i + 1..n {
+                s -= self.l[(k, i)] * x[k];
+            }
+            x[i] = s / self.l[(i, i)];
+        }
+        x
+    }
+
+    /// Solve A x = b.
+    pub fn solve(&self, b: &[f64]) -> Vec<f64> {
+        self.solve_upper(&self.solve_lower(b))
+    }
+
+    /// Solve A X = B column-wise for a matrix RHS.
+    pub fn solve_mat(&self, b: &Mat) -> Mat {
+        assert_eq!(b.rows, self.n());
+        let mut out = Mat::zeros(b.rows, b.cols);
+        for j in 0..b.cols {
+            out.set_col(j, &self.solve(&b.col(j)));
+        }
+        out
+    }
+
+    /// log det A = 2 sum log L_ii.
+    pub fn logdet(&self) -> f64 {
+        (0..self.n()).map(|i| self.l[(i, i)].ln()).sum::<f64>() * 2.0
+    }
+
+    /// Explicit inverse (small n only; used for tr(H^-1) diagnostics).
+    pub fn inverse(&self) -> Mat {
+        let n = self.n();
+        let mut inv = Mat::zeros(n, n);
+        let mut e = vec![0.0; n];
+        for j in 0..n {
+            e[j] = 1.0;
+            inv.set_col(j, &self.solve(&e));
+            e[j] = 0.0;
+        }
+        inv
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    fn random_spd(n: usize, seed: u64) -> Mat {
+        let mut rng = Rng::new(seed);
+        let g = Mat::from_fn(n, n, |_, _| rng.gaussian());
+        let mut a = g.matmul(&g.transpose());
+        a.add_diag(n as f64 * 0.5);
+        a
+    }
+
+    #[test]
+    fn factor_reconstructs() {
+        let a = random_spd(16, 1);
+        let ch = Cholesky::factor(&a).unwrap();
+        let rec = ch.l.matmul(&ch.l.transpose());
+        assert!(rec.max_abs_diff(&a) < 1e-10);
+    }
+
+    #[test]
+    fn solve_inverts() {
+        let a = random_spd(24, 2);
+        let ch = Cholesky::factor(&a).unwrap();
+        let mut rng = Rng::new(3);
+        let b = rng.gaussian_vec(24);
+        let x = ch.solve(&b);
+        let ax = a.matvec(&x);
+        let err: f64 = ax.iter().zip(&b).map(|(p, q)| (p - q).abs()).fold(0.0, f64::max);
+        assert!(err < 1e-9, "err={err}");
+    }
+
+    #[test]
+    fn logdet_matches_2x2() {
+        let a = Mat::from_vec(2, 2, vec![4.0, 1.0, 1.0, 3.0]);
+        let ch = Cholesky::factor(&a).unwrap();
+        assert!((ch.logdet() - (11.0f64).ln()).abs() < 1e-12);
+    }
+
+    #[test]
+    fn inverse_times_a_is_identity() {
+        let a = random_spd(12, 4);
+        let inv = Cholesky::factor(&a).unwrap().inverse();
+        let prod = inv.matmul(&a);
+        assert!(prod.max_abs_diff(&Mat::eye(12)) < 1e-9);
+    }
+
+    #[test]
+    fn non_spd_fails() {
+        let a = Mat::from_vec(2, 2, vec![1.0, 2.0, 2.0, 1.0]); // indefinite
+        assert!(Cholesky::factor(&a).is_err());
+    }
+
+    #[test]
+    fn solve_mat_matches_columns() {
+        let a = random_spd(8, 5);
+        let ch = Cholesky::factor(&a).unwrap();
+        let mut rng = Rng::new(6);
+        let b = Mat::from_fn(8, 3, |_, _| rng.gaussian());
+        let x = ch.solve_mat(&b);
+        for j in 0..3 {
+            let xj = ch.solve(&b.col(j));
+            for i in 0..8 {
+                assert!((x[(i, j)] - xj[i]).abs() < 1e-12);
+            }
+        }
+    }
+}

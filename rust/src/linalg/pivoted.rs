@@ -1,0 +1,134 @@
+//! Rank-k pivoted (partial) Cholesky of a kernel matrix, used to build the
+//! CG preconditioner (paper: rank-100 pivoted Cholesky, following Wang et
+//! al. 2019).  Works matrix-free: only the diagonal and selected rows of K
+//! are evaluated, so the cost is O(rank^2 n + rank * n * d).
+
+use super::Mat;
+
+/// Partial Cholesky factor: K ~= L L^T with L [n, rank].
+#[derive(Clone, Debug)]
+pub struct PivotedCholesky {
+    pub l: Mat,
+    pub pivots: Vec<usize>,
+}
+
+/// `diag[i]` = K_ii; `row(i)` returns the dense row K_i.
+pub fn pivoted_cholesky(
+    n: usize,
+    rank: usize,
+    diag: &[f64],
+    mut row: impl FnMut(usize) -> Vec<f64>,
+) -> PivotedCholesky {
+    assert_eq!(diag.len(), n);
+    let rank = rank.min(n);
+    let mut d = diag.to_vec();
+    let mut l = Mat::zeros(n, rank);
+    let mut pivots = Vec::with_capacity(rank);
+    for k in 0..rank {
+        // greedy pivot: largest remaining diagonal
+        let (p, &dp) = d
+            .iter()
+            .enumerate()
+            .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+            .unwrap();
+        if dp <= 1e-12 {
+            // numerically exhausted: shrink rank
+            let mut small = Mat::zeros(n, k);
+            for i in 0..n {
+                small.row_mut(i).copy_from_slice(&l.row(i)[..k]);
+            }
+            return PivotedCholesky { l: small, pivots };
+        }
+        pivots.push(p);
+        let sqrt_dp = dp.sqrt();
+        let kp = row(p); // K[:, p] by symmetry
+        for i in 0..n {
+            let mut v = kp[i];
+            for j in 0..k {
+                v -= l[(i, j)] * l[(p, j)];
+            }
+            l[(i, k)] = v / sqrt_dp;
+        }
+        // exact zero for the pivot column residual
+        for i in 0..n {
+            let lik = l[(i, k)];
+            d[i] = (d[i] - lik * lik).max(0.0);
+        }
+        d[p] = 0.0;
+    }
+    PivotedCholesky { l, pivots }
+}
+
+impl PivotedCholesky {
+    pub fn rank(&self) -> usize {
+        self.l.cols
+    }
+
+    /// Low-rank reconstruction L L^T (tests / diagnostics only).
+    pub fn reconstruct(&self) -> Mat {
+        self.l.matmul(&self.l.transpose())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    fn spd(n: usize, seed: u64) -> Mat {
+        let mut rng = Rng::new(seed);
+        let g = Mat::from_fn(n, 4, |_, _| rng.gaussian()); // rank-4 + jitter
+        let mut a = g.matmul(&g.transpose());
+        a.add_diag(1e-8);
+        a
+    }
+
+    #[test]
+    fn full_rank_reconstructs_low_rank_matrix() {
+        let a = spd(24, 1);
+        let diag: Vec<f64> = (0..24).map(|i| a[(i, i)]).collect();
+        let pc = pivoted_cholesky(24, 8, &diag, |i| a.row(i).to_vec());
+        let rec = pc.reconstruct();
+        assert!(rec.max_abs_diff(&a) < 1e-6, "{}", rec.max_abs_diff(&a));
+    }
+
+    #[test]
+    fn approximation_improves_with_rank() {
+        let mut rng = Rng::new(2);
+        let n = 32;
+        let g = Mat::from_fn(n, n, |_, _| rng.gaussian());
+        let mut a = g.matmul(&g.transpose());
+        a.add_diag(0.1);
+        let diag: Vec<f64> = (0..n).map(|i| a[(i, i)]).collect();
+        let mut prev = f64::INFINITY;
+        for rank in [2, 8, 16, 32] {
+            let pc = pivoted_cholesky(n, rank, &diag, |i| a.row(i).to_vec());
+            let mut err = pc.reconstruct();
+            err.sub_assign(&a);
+            let e = err.fro_norm();
+            assert!(e <= prev + 1e-9, "rank {rank}: {e} > {prev}");
+            prev = e;
+        }
+        assert!(prev < 1e-8); // full rank is exact
+    }
+
+    #[test]
+    fn pivots_are_distinct() {
+        let a = spd(16, 3);
+        let diag: Vec<f64> = (0..16).map(|i| a[(i, i)]).collect();
+        let pc = pivoted_cholesky(16, 4, &diag, |i| a.row(i).to_vec());
+        let mut p = pc.pivots.clone();
+        p.sort_unstable();
+        p.dedup();
+        assert_eq!(p.len(), pc.pivots.len());
+    }
+
+    #[test]
+    fn rank_capped_at_numerical_rank() {
+        let a = spd(20, 4); // numerical rank ~4
+        let diag: Vec<f64> = (0..20).map(|i| a[(i, i)]).collect();
+        let pc = pivoted_cholesky(20, 16, &diag, |i| a.row(i).to_vec());
+        assert!(pc.rank() <= 16);
+        assert!(pc.rank() >= 4);
+    }
+}

@@ -1,0 +1,180 @@
+//! `igp` — leader binary: train iterative GPs, run the paper's experiment
+//! suite, inspect configs.  See README.md for the full CLI reference.
+
+use anyhow::Result;
+
+use igp::config::RunConfig;
+use igp::coordinator::{Trainer, TrainerOptions};
+use igp::estimator::EstimatorKind;
+use igp::operators::XlaOperator;
+use igp::solvers::SolverKind;
+use igp::util::logging;
+
+mod cli;
+mod experiments;
+
+fn main() {
+    logging::init();
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    if let Err(e) = dispatch(&args) {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}
+
+fn dispatch(args: &[String]) -> Result<()> {
+    let Some(cmd) = args.first() else {
+        print_help();
+        return Ok(());
+    };
+    match cmd.as_str() {
+        "train" => cmd_train(&args[1..]),
+        "exp" => experiments::dispatch(&args[1..]),
+        "list-datasets" => {
+            for s in igp::data::registry() {
+                println!(
+                    "{:<16} n={:<6} d={:<3} sigma={:<5} (paper n={})",
+                    s.name, s.n, s.d, s.true_sigma, s.paper_n
+                );
+            }
+            Ok(())
+        }
+        "info" => cmd_info(&args[1..]),
+        "help" | "--help" | "-h" => {
+            print_help();
+            Ok(())
+        }
+        other => anyhow::bail!("unknown command '{other}' (try `igp help`)"),
+    }
+}
+
+fn print_help() {
+    println!(
+        r#"igp — iterative Gaussian processes (NeurIPS 2024 reproduction)
+
+USAGE:
+    igp train [--config FILE] [--dataset D] [--solver cg|ap|sgd]
+              [--estimator standard|pathwise] [--warm-start]
+              [--steps N] [--lr F] [--max-epochs N] [--seed N]
+              [--artifacts DIR] [--out results.csv]
+    igp exp <id|all> [--out DIR] [--splits N] [--steps N]
+              ids: table1 table7 fig1 fig3 fig4 fig5 fig6 fig7 fig9 fig10
+    igp list-datasets
+    igp info <config>        # print an artifact config's meta
+"#
+    );
+}
+
+fn cmd_info(args: &[String]) -> Result<()> {
+    let p = cli::Parser::new(args, &["artifacts"])?;
+    let name = p.positional.first().map(String::as_str).unwrap_or("test");
+    let dir = p.get("artifacts").unwrap_or("artifacts");
+    let meta = igp::runtime::Meta::load(std::path::Path::new(dir).join(name).join("meta.txt").as_path())?;
+    println!("{meta:#?}");
+    Ok(())
+}
+
+fn cmd_train(args: &[String]) -> Result<()> {
+    let p = cli::Parser::new(
+        args,
+        &[
+            "config", "dataset", "solver", "estimator", "steps", "lr", "max-epochs",
+            "seed", "artifacts", "out", "tolerance",
+        ],
+    )?;
+    let mut rc = match p.get("config") {
+        Some(path) => RunConfig::from_doc(&igp::config::parse_file(path)?)?,
+        None => RunConfig::default(),
+    };
+    if let Some(v) = p.get("dataset") {
+        rc.dataset = v.to_string();
+    }
+    if let Some(v) = p.get("solver") {
+        rc.solver = v.to_string();
+    }
+    if let Some(v) = p.get("estimator") {
+        rc.estimator = v.to_string();
+    }
+    if p.flag("warm-start") {
+        rc.warm_start = true;
+    }
+    if let Some(v) = p.get("steps") {
+        rc.outer_steps = v.parse()?;
+    }
+    if let Some(v) = p.get("lr") {
+        rc.lr = v.parse()?;
+    }
+    if let Some(v) = p.get("tolerance") {
+        rc.tolerance = v.parse()?;
+    }
+    if let Some(v) = p.get("max-epochs") {
+        rc.max_epochs = Some(v.parse()?);
+    }
+    if let Some(v) = p.get("seed") {
+        rc.seed = v.parse()?;
+    }
+    if let Some(v) = p.get("artifacts") {
+        rc.artifacts_dir = v.to_string();
+    }
+    rc.validate()?;
+
+    let ds = igp::data::generate(&igp::data::spec(&rc.dataset)?);
+    let rt = igp::runtime::Runtime::cpu()?;
+    igp::info!("PJRT platform: {}", rt.platform());
+    let model = rt.load_config(&rc.artifacts_dir, &rc.dataset)?;
+    let block = model.meta.b;
+    let opts = TrainerOptions {
+        solver: SolverKind::parse(&rc.solver)?,
+        estimator: EstimatorKind::parse(&rc.estimator)?,
+        warm_start: rc.warm_start,
+        lr: rc.lr,
+        tolerance: rc.tolerance,
+        max_epochs: rc.max_epochs.map(|e| e as f64),
+        block_size: Some(block),
+        seed: rc.seed,
+        predict_every: Some(10),
+        ..Default::default()
+    };
+    let op = XlaOperator::new(model, &ds);
+    let mut trainer = Trainer::new(opts, Box::new(op), &ds);
+    let out = trainer.run(rc.outer_steps)?;
+
+    println!(
+        "dataset={} solver={} estimator={} warm={} steps={}",
+        rc.dataset, rc.solver, rc.estimator, rc.warm_start, rc.outer_steps
+    );
+    println!(
+        "total {:.2}s (solver {:.2}s, {:.1} epochs) final rmse={:.4} llh={:.4}",
+        out.total_secs,
+        out.solver_secs,
+        out.total_epochs,
+        out.final_metrics.rmse,
+        out.final_metrics.llh
+    );
+
+    if let Some(path) = p.get("out") {
+        let mut w = igp::util::csv::CsvWriter::create(
+            path,
+            &["step", "ry", "rz", "iterations", "epochs", "solver_secs", "rmse", "llh"],
+        )?;
+        for t in &out.telemetry {
+            let (rmse, llh) = t
+                .metrics
+                .map(|m| (m.rmse.to_string(), m.llh.to_string()))
+                .unwrap_or(("".into(), "".into()));
+            w.row(&[
+                t.step.to_string(),
+                t.ry.to_string(),
+                t.rz.to_string(),
+                t.iterations.to_string(),
+                t.epochs.to_string(),
+                t.solver_secs.to_string(),
+                rmse,
+                llh,
+            ])?;
+        }
+        w.flush()?;
+        igp::info!("telemetry written to {path}");
+    }
+    Ok(())
+}

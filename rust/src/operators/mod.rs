@@ -1,0 +1,383 @@
+//! The boundary between the Rust coordinator (L3) and the compiled compute
+//! graph (L2/L1): every O(n^2) product the solvers and estimators need is
+//! behind [`KernelOperator`].
+//!
+//! Two implementations:
+//! * [`DenseOperator`] — pure Rust, materialises H; the test oracle and the
+//!   backend for tiny problems.  Lives here.
+//! * [`XlaOperator`] — executes the AOT artifacts through PJRT; the
+//!   production path.  Lives in `runtime::xla_op`, re-exported here.
+
+use crate::data::Dataset;
+use crate::kernels::{self, Hyperparams, KernelFamily};
+use crate::linalg::Mat;
+
+pub use crate::runtime::xla_op::XlaOperator;
+
+/// Everything L3 needs from the model, independent of backend.
+///
+/// Width contract: `hv`, `k_cols`, `k_rows` operate on the solver batch of
+/// `k_width() = s + 1` columns `[y | probes]`; `grad_quad` likewise takes
+/// s+1 column pairs.  The XLA backend compiled these shapes statically.
+pub trait KernelOperator {
+    fn n(&self) -> usize;
+    fn d(&self) -> usize;
+    /// Number of probe vectors s (batch width is s + 1).
+    fn s(&self) -> usize;
+    /// RFF sin/cos pairs available to the pathwise estimator.
+    fn m(&self) -> usize;
+    fn family(&self) -> KernelFamily;
+    fn x(&self) -> &Mat;
+    fn x_test(&self) -> &Mat;
+
+    fn hp(&self) -> &Hyperparams;
+    /// Update hyperparameters (invalidates any cached factorisations).
+    fn set_hp(&mut self, hp: &Hyperparams);
+
+    fn k_width(&self) -> usize {
+        self.s() + 1
+    }
+
+    /// H @ V for the full batch V [n, s+1].
+    fn hv(&self, v: &Mat) -> Mat;
+
+    /// K(X, X[idx]) @ U with U [idx.len(), s+1]  (AP column update; the
+    /// sigma^2 part of H[:, idx] is applied by the caller as a scatter).
+    fn k_cols(&self, idx: &[usize], u: &Mat) -> Mat;
+
+    /// K(X[idx], X) @ V with V [n, s+1]  (SGD row batch).
+    fn k_rows(&self, idx: &[usize], v: &Mat) -> Mat;
+
+    /// All d+2 components of  sum_j w_j a_j^T (dH/dtheta) b_j.
+    fn grad_quad(&self, a: &Mat, b: &Mat, w: &[f64]) -> Vec<f64>;
+
+    /// Pathwise probe targets Xi = Phi(X) wts + sigma * noise  [n, s].
+    fn rff_eval(&self, omega0: &Mat, wts: &Mat, noise: &Mat) -> Mat;
+
+    /// Pathwise-conditioned predictions at the held-out test inputs:
+    /// (mean [t], samples [t, s]).
+    fn predict(&self, vy: &[f64], zhat: &Mat, omega0: &Mat, wts: &Mat) -> (Vec<f64>, Mat);
+
+    /// Exact MLL value+gradient if the backend has an exact path.
+    fn exact_mll(&self, _y: &[f64]) -> Option<(f64, Vec<f64>)> {
+        None
+    }
+}
+
+/// Shared Rust implementation of the RFF feature map (mirrors
+/// model._rff_features): Phi = sigf sqrt(1/m) [cos(Xs W0), sin(Xs W0)].
+pub fn rff_features(x: &Mat, omega0: &Mat, hp: &Hyperparams) -> Mat {
+    let (n, d) = (x.rows, x.cols);
+    let m = omega0.cols;
+    assert_eq!(omega0.rows, d);
+    let amp = hp.sigf * (1.0 / m as f64).sqrt();
+    let mut phi = Mat::zeros(n, 2 * m);
+    for i in 0..n {
+        let xi = x.row(i);
+        for c in 0..m {
+            let mut z = 0.0;
+            for r in 0..d {
+                z += xi[r] / hp.ell[r] * omega0[(r, c)];
+            }
+            phi[(i, c)] = amp * z.cos();
+            phi[(i, m + c)] = amp * z.sin();
+        }
+    }
+    phi
+}
+
+// ---------------------------------------------------------------------------
+// DenseOperator
+// ---------------------------------------------------------------------------
+
+/// Pure-Rust reference backend: materialises H once per `set_hp`.
+pub struct DenseOperator {
+    x: Mat,
+    x_test: Mat,
+    s: usize,
+    m: usize,
+    family: KernelFamily,
+    hp: Hyperparams,
+    h: Mat,
+}
+
+impl DenseOperator {
+    pub fn new(ds: &Dataset, s: usize, m: usize) -> Self {
+        let hp = Hyperparams::ones(ds.spec.d);
+        let h = kernels::h_matrix(&ds.x_train, &hp, ds.spec.family);
+        DenseOperator {
+            x: ds.x_train.clone(),
+            x_test: ds.x_test.clone(),
+            s,
+            m,
+            family: ds.spec.family,
+            hp,
+            h,
+        }
+    }
+
+    /// Direct access to the materialised H (tests / diagnostics).
+    pub fn h(&self) -> &Mat {
+        &self.h
+    }
+}
+
+impl KernelOperator for DenseOperator {
+    fn n(&self) -> usize {
+        self.x.rows
+    }
+    fn d(&self) -> usize {
+        self.x.cols
+    }
+    fn s(&self) -> usize {
+        self.s
+    }
+    fn m(&self) -> usize {
+        self.m
+    }
+    fn family(&self) -> KernelFamily {
+        self.family
+    }
+    fn x(&self) -> &Mat {
+        &self.x
+    }
+    fn x_test(&self) -> &Mat {
+        &self.x_test
+    }
+    fn hp(&self) -> &Hyperparams {
+        &self.hp
+    }
+
+    fn set_hp(&mut self, hp: &Hyperparams) {
+        self.hp = hp.clone();
+        self.h = kernels::h_matrix(&self.x, hp, self.family);
+    }
+
+    fn hv(&self, v: &Mat) -> Mat {
+        assert_eq!(v.rows, self.n());
+        self.h.matmul(v)
+    }
+
+    fn k_cols(&self, idx: &[usize], u: &Mat) -> Mat {
+        assert_eq!(u.rows, idx.len());
+        let xb = self.x.gather_rows(idx);
+        let km = kernels::kernel_matrix(&self.x, &xb, &self.hp, self.family);
+        km.matmul(u)
+    }
+
+    fn k_rows(&self, idx: &[usize], v: &Mat) -> Mat {
+        assert_eq!(v.rows, self.n());
+        let xa = self.x.gather_rows(idx);
+        let km = kernels::kernel_matrix(&xa, &self.x, &self.hp, self.family);
+        km.matmul(v)
+    }
+
+    fn grad_quad(&self, a: &Mat, b: &Mat, w: &[f64]) -> Vec<f64> {
+        let (n, d) = (self.n(), self.d());
+        assert_eq!(a.rows, n);
+        assert_eq!(b.rows, n);
+        assert_eq!(a.cols, b.cols);
+        assert_eq!(w.len(), a.cols);
+        // C_ij = sum_q w_q a_iq b_jq
+        let mut aw = a.clone();
+        for i in 0..n {
+            let row = aw.row_mut(i);
+            for (q, &wq) in w.iter().enumerate() {
+                row[q] *= wq;
+            }
+        }
+        let c = aw.matmul(&b.transpose()); // [n, n]
+        let sf2 = self.hp.sigf * self.hp.sigf;
+        let mut grad = vec![0.0; d + 2];
+        for i in 0..n {
+            for j in 0..n {
+                let cij = c[(i, j)];
+                if cij == 0.0 {
+                    continue;
+                }
+                let sq = kernels::sqdist_scaled(self.x.row(i), self.x.row(j), &self.hp.ell);
+                let h_r = dl_weight(sq, self.family);
+                for k in 0..d {
+                    let dlt = (self.x[(i, k)] - self.x[(j, k)]) / self.hp.ell[k];
+                    grad[k] += cij * sf2 * h_r * dlt * dlt / self.hp.ell[k];
+                }
+                grad[d] += cij * 2.0 * sf2 * self.family.unit_cov(sq) / self.hp.sigf;
+            }
+        }
+        // noise: 2 sigma sum_q w_q <a_q, b_q>
+        let mut dot_sum = 0.0;
+        for (q, &wq) in w.iter().enumerate() {
+            let mut dq = 0.0;
+            for i in 0..n {
+                dq += a[(i, q)] * b[(i, q)];
+            }
+            dot_sum += wq * dq;
+        }
+        grad[d + 1] = 2.0 * self.hp.sigma * dot_sum;
+        grad
+    }
+
+    fn rff_eval(&self, omega0: &Mat, wts: &Mat, noise: &Mat) -> Mat {
+        let phi = rff_features(&self.x, omega0, &self.hp);
+        let mut xi = phi.matmul(wts);
+        assert_eq!(xi.rows, noise.rows);
+        assert_eq!(xi.cols, noise.cols);
+        for (o, z) in xi.data.iter_mut().zip(&noise.data) {
+            *o += self.hp.sigma * z;
+        }
+        xi
+    }
+
+    fn predict(&self, vy: &[f64], zhat: &Mat, omega0: &Mat, wts: &Mat) -> (Vec<f64>, Mat) {
+        let kx = kernels::kernel_matrix(&self.x_test, &self.x, &self.hp, self.family);
+        let mean = kx.matvec(vy);
+        let phi_t = rff_features(&self.x_test, omega0, &self.hp);
+        let mut samples = phi_t.matmul(wts); // [t, s]
+        // + K(Xt, X) (vy - zhat)
+        let mut u = zhat.clone();
+        for j in 0..u.cols {
+            for i in 0..u.rows {
+                u[(i, j)] = vy[i] - u[(i, j)];
+            }
+        }
+        samples.add_assign(&kx.matmul(&u));
+        (mean, samples)
+    }
+
+    fn exact_mll(&self, y: &[f64]) -> Option<(f64, Vec<f64>)> {
+        let gp = crate::gp::ExactGp::fit(&self.x, y, &self.hp, self.family).ok()?;
+        Some((gp.mll(y), gp.mll_grad()))
+    }
+}
+
+fn dl_weight(sq: f64, family: KernelFamily) -> f64 {
+    use crate::kernels::{SQRT3, SQRT5};
+    match family {
+        KernelFamily::Rbf => (-0.5 * sq).exp(),
+        KernelFamily::Matern12 => {
+            let r = sq.max(0.0).sqrt();
+            (-r).exp() / r.max(1e-30)
+        }
+        KernelFamily::Matern32 => 3.0 * (-SQRT3 * sq.max(0.0).sqrt()).exp(),
+        KernelFamily::Matern52 => {
+            let r = sq.max(0.0).sqrt();
+            (5.0 / 3.0) * (1.0 + SQRT5 * r) * (-SQRT5 * r).exp()
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data;
+    use crate::util::rng::Rng;
+
+    fn op() -> DenseOperator {
+        let ds = data::generate(&data::spec("test").unwrap());
+        DenseOperator::new(&ds, 4, 16)
+    }
+
+    #[test]
+    fn hv_matches_manual() {
+        let mut o = op();
+        let hp = Hyperparams { ell: vec![0.8; 4], sigf: 1.1, sigma: 0.3 };
+        o.set_hp(&hp);
+        let mut rng = Rng::new(0);
+        let v = Mat::from_fn(o.n(), o.k_width(), |_, _| rng.gaussian());
+        let hv = o.hv(&v);
+        let want = kernels::h_matrix(o.x(), &hp, o.family()).matmul(&v);
+        assert!(hv.max_abs_diff(&want) < 1e-12);
+    }
+
+    #[test]
+    fn k_cols_rows_transpose_consistency() {
+        let o = op();
+        let mut rng = Rng::new(1);
+        let idx: Vec<usize> = (32..64).collect();
+        let u = Mat::from_fn(idx.len(), o.k_width(), |_, _| rng.gaussian());
+        let cols = o.k_cols(&idx, &u);
+        // (K[:, I] U)[i] = sum_b K[i, I_b] U[b]
+        let km = kernels::kernel_matrix(o.x(), o.x(), o.hp(), o.family());
+        for i in (0..o.n()).step_by(37) {
+            for q in 0..o.k_width() {
+                let mut want = 0.0;
+                for (bi, &bidx) in idx.iter().enumerate() {
+                    want += km[(i, bidx)] * u[(bi, q)];
+                }
+                assert!((cols[(i, q)] - want).abs() < 1e-10);
+            }
+        }
+    }
+
+    #[test]
+    fn grad_quad_matches_finite_difference() {
+        let mut o = op();
+        let hp = Hyperparams { ell: vec![1.1; 4], sigf: 1.3, sigma: 0.5 };
+        o.set_hp(&hp);
+        let mut rng = Rng::new(2);
+        let q = 3;
+        let a = Mat::from_fn(o.n(), q, |_, _| rng.gaussian());
+        let b = Mat::from_fn(o.n(), q, |_, _| rng.gaussian());
+        let w = vec![0.5, -0.25, 1.5];
+        let grad = o.grad_quad(&a, &b, &w);
+        let theta0 = hp.pack();
+        let eps = 1e-6;
+        let qf = |theta: &[f64]| -> f64 {
+            let hp = Hyperparams::unpack(theta, 4);
+            let h = kernels::h_matrix(o.x(), &hp, o.family());
+            let mut s = 0.0;
+            for (qq, &wq) in w.iter().enumerate() {
+                let hb = h.matvec(&b.col(qq));
+                s += wq * crate::util::stats::dot(&a.col(qq), &hb);
+            }
+            s
+        };
+        for k in 0..theta0.len() {
+            let mut tp = theta0.clone();
+            tp[k] += eps;
+            let mut tm = theta0.clone();
+            tm[k] -= eps;
+            let fd = (qf(&tp) - qf(&tm)) / (2.0 * eps);
+            assert!(
+                (grad[k] - fd).abs() < 1e-4 * (1.0 + fd.abs()),
+                "k={k}: {} vs {fd}",
+                grad[k]
+            );
+        }
+    }
+
+    #[test]
+    fn rff_eval_matches_feature_map() {
+        let o = op();
+        let mut rng = Rng::new(3);
+        let (d, m, s) = (o.d(), 8, 3);
+        let omega0 = Mat::from_fn(d, m, |_, _| rng.gaussian());
+        let wts = Mat::from_fn(2 * m, s, |_, _| rng.gaussian());
+        let noise = Mat::from_fn(o.n(), s, |_, _| rng.gaussian());
+        let xi = o.rff_eval(&omega0, &wts, &noise);
+        let phi = rff_features(o.x(), &omega0, o.hp());
+        let mut want = phi.matmul(&wts);
+        for (w, z) in want.data.iter_mut().zip(&noise.data) {
+            *w += o.hp().sigma * z;
+        }
+        assert!(xi.max_abs_diff(&want) < 1e-12);
+    }
+
+    #[test]
+    fn predict_mean_matches_exact_gp_mean() {
+        let ds = data::generate(&data::spec("test").unwrap());
+        let mut o = DenseOperator::new(&ds, 2, 8);
+        let hp = Hyperparams { ell: vec![1.0; 4], sigf: 1.0, sigma: 0.4 };
+        o.set_hp(&hp);
+        let gp = crate::gp::ExactGp::fit(&ds.x_train, &ds.y_train, &hp, o.family()).unwrap();
+        let vy = gp.solve(&ds.y_train);
+        let zhat = Mat::zeros(o.n(), 2);
+        let omega0 = Mat::zeros(4, 8);
+        let wts = Mat::zeros(16, 2);
+        let (mean, _) = o.predict(&vy, &zhat, &omega0, &wts);
+        let (want_mean, _) = gp.predict(&ds.x_test);
+        for (a, b) in mean.iter().zip(&want_mean) {
+            assert!((a - b).abs() < 1e-10);
+        }
+    }
+}

@@ -1,0 +1,97 @@
+//! meta.txt parsing: the shape contract written by python/compile/aot.py.
+
+use std::path::Path;
+
+use anyhow::{bail, Context, Result};
+
+use crate::kernels::KernelFamily;
+
+/// Static shapes of one artifact config (must match configs.py).
+#[derive(Clone, Debug, PartialEq)]
+pub struct Meta {
+    pub name: String,
+    pub n: usize,
+    pub n_test: usize,
+    pub d: usize,
+    pub s: usize,
+    pub m: usize,
+    pub b: usize,
+    pub tile: usize,
+    pub kernel: KernelFamily,
+    pub exact: bool,
+}
+
+impl Meta {
+    pub fn parse(text: &str) -> Result<Meta> {
+        let mut kv = std::collections::HashMap::new();
+        for line in text.lines() {
+            let line = line.trim();
+            if line.is_empty() {
+                continue;
+            }
+            let Some((k, v)) = line.split_once('=') else {
+                bail!("bad meta line: '{line}'");
+            };
+            kv.insert(k.trim().to_string(), v.trim().to_string());
+        }
+        let get = |k: &str| -> Result<String> {
+            kv.get(k)
+                .cloned()
+                .ok_or_else(|| anyhow::anyhow!("meta missing key '{k}'"))
+        };
+        let get_usize =
+            |k: &str| -> Result<usize> { Ok(get(k)?.parse().context(k.to_string())?) };
+        Ok(Meta {
+            name: get("name")?,
+            n: get_usize("n")?,
+            n_test: get_usize("n_test")?,
+            d: get_usize("d")?,
+            s: get_usize("s")?,
+            m: get_usize("m")?,
+            b: get_usize("b")?,
+            tile: get_usize("tile")?,
+            kernel: KernelFamily::parse(&get("kernel")?)?,
+            exact: get("exact")? == "true",
+        })
+    }
+
+    pub fn load(path: &Path) -> Result<Meta> {
+        let text = std::fs::read_to_string(path)
+            .with_context(|| format!("reading {}", path.display()))?;
+        Meta::parse(&text)
+    }
+
+    /// Solver batch width.
+    pub fn k(&self) -> usize {
+        self.s + 1
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = "name=test\nn=256\nn_test=64\nd=4\ns=8\nm=64\nb=64\ntile=64\nkernel=matern32\nexact=true\n";
+
+    #[test]
+    fn parse_sample() {
+        let m = Meta::parse(SAMPLE).unwrap();
+        assert_eq!(m.name, "test");
+        assert_eq!(m.n, 256);
+        assert_eq!(m.s, 8);
+        assert_eq!(m.k(), 9);
+        assert_eq!(m.kernel, KernelFamily::Matern32);
+        assert!(m.exact);
+    }
+
+    #[test]
+    fn missing_key_fails() {
+        assert!(Meta::parse("name=x\nn=1\n").is_err());
+    }
+
+    #[test]
+    fn bad_kernel_fails() {
+        let bad = SAMPLE.replace("matern32", "cubic");
+        assert!(Meta::parse(&bad).is_err());
+    }
+}

@@ -1,0 +1,139 @@
+//! PJRT runtime: loads the AOT HLO-text artifacts produced by
+//! `python/compile/aot.py`, compiles them once on the CPU PJRT client and
+//! exposes typed entry points to the coordinator.
+//!
+//! Interchange is HLO *text* — the xla_extension 0.5.1 backing the `xla`
+//! crate rejects jax>=0.5 serialized protos (64-bit instruction ids); the
+//! text parser reassigns ids (see /opt/xla-example/README.md).
+
+pub mod artifacts;
+pub mod xla_op;
+
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+
+use anyhow::{Context, Result};
+
+use crate::linalg::Mat;
+pub use artifacts::Meta;
+
+/// Owner of the PJRT client; create one per process.
+pub struct Runtime {
+    client: xla::PjRtClient,
+}
+
+impl Runtime {
+    pub fn cpu() -> Result<Self> {
+        let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
+        Ok(Runtime { client })
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Load and compile every artifact of one config directory.
+    pub fn load_config(&self, artifacts_dir: &str, name: &str) -> Result<Model> {
+        let dir = PathBuf::from(artifacts_dir).join(name);
+        let meta = artifacts::Meta::load(&dir.join("meta.txt"))
+            .with_context(|| format!("loading meta for config '{name}'"))?;
+        let mut exes = HashMap::new();
+        for entry in std::fs::read_dir(&dir)? {
+            let path = entry?.path();
+            let fname = path.file_name().unwrap().to_string_lossy().to_string();
+            let Some(fn_name) = fname.strip_suffix(".hlo.txt") else {
+                continue;
+            };
+            let exe = self
+                .compile_hlo_file(&path)
+                .with_context(|| format!("compiling {}", path.display()))?;
+            exes.insert(fn_name.to_string(), exe);
+        }
+        anyhow::ensure!(
+            exes.contains_key("kmv_full"),
+            "config '{name}' is missing kmv_full — run `make artifacts`"
+        );
+        Ok(Model { meta, exes, client: self.client.clone() })
+    }
+
+    pub fn compile_hlo_file(&self, path: &Path) -> Result<xla::PjRtLoadedExecutable> {
+        let proto = xla::HloModuleProto::from_text_file(path)?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        Ok(self.client.compile(&comp)?)
+    }
+}
+
+/// One compiled config: the set of PJRT executables plus its shapes.
+pub struct Model {
+    pub meta: Meta,
+    exes: HashMap<String, xla::PjRtLoadedExecutable>,
+    client: xla::PjRtClient,
+}
+
+impl Model {
+    pub fn has(&self, name: &str) -> bool {
+        self.exes.contains_key(name)
+    }
+
+    /// Execute an entry point against caller-managed device buffers and
+    /// return the root tuple elements as Literals.
+    ///
+    /// IMPORTANT: the buffer-based path (`execute_b`) is the only correct
+    /// one with this xla_extension build — `execute` (literal args) leaks
+    /// its internally-created argument buffers (~arg bytes per call, which
+    /// OOMs a long training run).  `PjRtBuffer` has a proper Drop, so
+    /// caller-managed buffers are freed deterministically.
+    pub fn call_b(&self, name: &str, args: &[&xla::PjRtBuffer]) -> Result<Vec<xla::Literal>> {
+        let exe = self
+            .exes
+            .get(name)
+            .ok_or_else(|| anyhow::anyhow!("no artifact '{name}' in config '{}'", self.meta.name))?;
+        let out = exe.execute_b::<&xla::PjRtBuffer>(args)?;
+        let lit = out[0][0].to_literal_sync()?;
+        Ok(lit.to_tuple()?)
+    }
+
+    /// Upload a matrix to the device (row-major f64).
+    pub fn buf_mat(&self, m: &Mat) -> Result<xla::PjRtBuffer> {
+        Ok(self
+            .client
+            .buffer_from_host_buffer::<f64>(&m.data, &[m.rows, m.cols], None)?)
+    }
+
+    /// Upload a vector to the device.
+    pub fn buf_vec(&self, v: &[f64]) -> Result<xla::PjRtBuffer> {
+        Ok(self.client.buffer_from_host_buffer::<f64>(v, &[v.len()], None)?)
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Literal <-> Mat/Vec conversion helpers
+// ---------------------------------------------------------------------------
+
+pub fn mat_to_lit(m: &Mat) -> Result<xla::Literal> {
+    Ok(xla::Literal::vec1(&m.data).reshape(&[m.rows as i64, m.cols as i64])?)
+}
+
+pub fn vec_to_lit(v: &[f64]) -> xla::Literal {
+    xla::Literal::vec1(v)
+}
+
+pub fn scalar_from_lit(l: &xla::Literal) -> Result<f64> {
+    Ok(l.to_vec::<f64>()?[0])
+}
+
+pub fn vec_from_lit(l: &xla::Literal) -> Result<Vec<f64>> {
+    Ok(l.to_vec::<f64>()?)
+}
+
+pub fn mat_from_lit(l: &xla::Literal, rows: usize, cols: usize) -> Result<Mat> {
+    let data = l.to_vec::<f64>()?;
+    anyhow::ensure!(
+        data.len() == rows * cols,
+        "literal has {} elements, expected {}x{}",
+        data.len(),
+        rows,
+        cols
+    );
+    Ok(Mat::from_vec(rows, cols, data))
+}

@@ -1,0 +1,294 @@
+//! Alternating projections (Algorithm 2 of the paper; Wu et al. 2024):
+//! greedy block-coordinate descent on the quadratic objective.  Each
+//! iteration Cholesky-solves one diagonal block and downdates the full
+//! residual through a K(X, X_I) product, i.e. touches b/n of H's entries,
+//! so one epoch = n/b iterations.
+//!
+//! Per outer step the block Cholesky factors are computed once in Rust
+//! (O(n b d + n b^2)) and cached; the paper notes the factorisation does
+//! not dominate.
+
+use super::{
+    residual_norms, ApSelection, LinearSolver, Normalized, SolveOptions, SolveReport, SolverKind,
+};
+use crate::kernels;
+use crate::linalg::{Cholesky, Mat};
+use crate::operators::KernelOperator;
+use crate::util::rng::Rng;
+
+pub struct ApSolver {
+    /// Cached per-block factors keyed by hyperparameters.
+    cache: Option<(Vec<f64>, Vec<Cholesky>)>,
+    /// RNG for ApSelection::Random; cursor for ApSelection::Cyclic.
+    rng: Rng,
+    cursor: usize,
+}
+
+impl Default for ApSolver {
+    fn default() -> Self {
+        ApSolver { cache: None, rng: Rng::new(0xA9), cursor: 0 }
+    }
+}
+
+impl ApSolver {
+    fn factors(&mut self, op: &dyn KernelOperator, b: usize) -> &Vec<Cholesky> {
+        let theta = op.hp().pack();
+        let stale = match &self.cache {
+            Some((t, _)) => t != &theta,
+            None => true,
+        };
+        if stale {
+            let n = op.n();
+            assert_eq!(n % b, 0, "block size must divide n");
+            let x = op.x();
+            let hp = op.hp();
+            let fam = op.family();
+            let mut factors = Vec::with_capacity(n / b);
+            for blk in 0..n / b {
+                let idx: Vec<usize> = (blk * b..(blk + 1) * b).collect();
+                let xb = x.gather_rows(&idx);
+                let mut h_blk = kernels::kernel_matrix(&xb, &xb, hp, fam);
+                h_blk.add_diag(hp.noise_var());
+                factors.push(Cholesky::factor(&h_blk).expect("AP block SPD"));
+            }
+            self.cache = Some((theta, factors));
+        }
+        &self.cache.as_ref().unwrap().1
+    }
+}
+
+/// Block selection metric of Algorithm 2: || sum_cols R[block rows] ||.
+fn block_scores(r: &Mat, b: usize) -> Vec<f64> {
+    let nblocks = r.rows / b;
+    let mut scores = vec![0.0; nblocks];
+    for blk in 0..nblocks {
+        let mut s = 0.0;
+        for i in blk * b..(blk + 1) * b {
+            let row_sum: f64 = r.row(i).iter().sum();
+            s += row_sum * row_sum;
+        }
+        scores[blk] = s.sqrt();
+    }
+    scores
+}
+
+impl LinearSolver for ApSolver {
+    fn solve(
+        &mut self,
+        op: &dyn KernelOperator,
+        b_mat: &Mat,
+        v0: &mut Mat,
+        opts: &SolveOptions,
+    ) -> SolveReport {
+        let bsz = opts.block_size;
+        let n = op.n();
+        let noise_var = op.hp().noise_var();
+        // build/refresh factor cache before borrowing
+        self.factors(op, bsz);
+        let factors = &self.cache.as_ref().unwrap().1;
+
+        let (norm, mut r) = Normalized::setup(op, b_mat, v0);
+        let mut v = v0.clone();
+        let init_residual_sq: f64 = r.data.iter().map(|x| x * x).sum();
+
+        let mut epochs = norm.warm_epoch_cost;
+        let mut iterations = 0usize;
+        let (mut ry, mut rz) = residual_norms(&r);
+        let tol = opts.tolerance;
+        let epoch_per_iter = bsz as f64 / n as f64;
+
+        let nblocks = n / bsz;
+        while (ry > tol || rz > tol) && epochs + epoch_per_iter <= opts.max_epochs {
+            let blk = match opts.ap_selection {
+                ApSelection::Greedy => {
+                    let scores = block_scores(&r, bsz);
+                    scores
+                        .iter()
+                        .enumerate()
+                        .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+                        .map(|(i, _)| i)
+                        .unwrap()
+                }
+                ApSelection::Random => self.rng.below(nblocks),
+                ApSelection::Cyclic => {
+                    let b = self.cursor % nblocks;
+                    self.cursor += 1;
+                    b
+                }
+            };
+            let idx: Vec<usize> = (blk * bsz..(blk + 1) * bsz).collect();
+
+            // u = H[I,I]^-1 r[I]
+            let r_blk = r.gather_rows(&idx);
+            let u = factors[blk].solve_mat(&r_blk); // [b, k]
+
+            // v[I] += u
+            for (bi, &i) in idx.iter().enumerate() {
+                let vr = v.row_mut(i);
+                for (j, val) in vr.iter_mut().enumerate() {
+                    *val += u[(bi, j)];
+                }
+            }
+
+            // r -= K(X, X_I) u  (operator product) and the sigma^2 scatter
+            let ku = op.k_cols(&idx, &u); // [n, k]
+            r.sub_assign(&ku);
+            for (bi, &i) in idx.iter().enumerate() {
+                let rr = r.row_mut(i);
+                for (j, val) in rr.iter_mut().enumerate() {
+                    *val -= noise_var * u[(bi, j)];
+                }
+            }
+
+            epochs += epoch_per_iter;
+            iterations += 1;
+            let (a, b_) = residual_norms(&r);
+            ry = a;
+            rz = b_;
+        }
+
+        norm.finish(&mut v);
+        *v0 = v;
+        SolveReport {
+            iterations,
+            epochs,
+            ry,
+            rz,
+            converged: ry <= tol && rz <= tol,
+            init_residual_sq,
+        }
+    }
+
+    fn kind(&self) -> SolverKind {
+        SolverKind::Ap
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data;
+    use crate::kernels::Hyperparams;
+    use crate::linalg::Cholesky as Chol;
+    use crate::operators::{DenseOperator, KernelOperator};
+    use crate::util::rng::Rng;
+
+    fn setup() -> (DenseOperator, Mat) {
+        let ds = data::generate(&data::spec("test").unwrap());
+        let mut op = DenseOperator::new(&ds, 4, 16);
+        op.set_hp(&Hyperparams { ell: vec![1.2; 4], sigf: 1.0, sigma: 0.5 });
+        let mut rng = Rng::new(1);
+        let mut b = Mat::from_fn(op.n(), op.k_width(), |_, _| rng.gaussian());
+        b.set_col(0, &ds.y_train);
+        (op, b)
+    }
+
+    #[test]
+    fn ap_converges_to_direct_solution() {
+        let (op, b) = setup();
+        let mut v = Mat::zeros(op.n(), op.k_width());
+        let opts = SolveOptions { tolerance: 1e-6, max_epochs: 3000.0, block_size: 64, ..Default::default() };
+        let rep = ApSolver::default().solve(&op, &b, &mut v, &opts);
+        assert!(rep.converged, "{rep:?}");
+        let want = Chol::factor(op.h()).unwrap().solve_mat(&b);
+        assert!(v.max_abs_diff(&want) < 1e-4, "{}", v.max_abs_diff(&want));
+    }
+
+    #[test]
+    fn residual_tracking_is_exact() {
+        // The incrementally maintained residual must match b - H v.
+        let (op, b) = setup();
+        let mut v = Mat::zeros(op.n(), op.k_width());
+        let opts = SolveOptions { tolerance: 0.05, block_size: 64, ..Default::default() };
+        let rep = ApSolver::default().solve(&op, &b, &mut v, &opts);
+        // recompute residual from the returned raw-space solution
+        let hv = op.hv(&v);
+        let mut r = b.clone();
+        r.sub_assign(&hv);
+        // columns were solved in normalised space: compare relative norms
+        let bn = super::super::col_norms(&b);
+        let rn = super::super::col_norms(&r);
+        let rel: Vec<f64> = rn.iter().zip(&bn).map(|(r, b)| r / b).collect();
+        let ry = rel[0];
+        let rz = rel[1..].iter().sum::<f64>() / (rel.len() - 1) as f64;
+        assert!((ry - rep.ry).abs() < 1e-8, "{ry} vs {}", rep.ry);
+        assert!((rz - rep.rz).abs() < 1e-8, "{rz} vs {}", rep.rz);
+    }
+
+    #[test]
+    fn epochs_counted_in_block_fractions() {
+        let (op, b) = setup();
+        let mut v = Mat::zeros(op.n(), op.k_width());
+        let opts = SolveOptions { tolerance: 1e-12, max_epochs: 2.0, block_size: 64, ..Default::default() };
+        let rep = ApSolver::default().solve(&op, &b, &mut v, &opts);
+        // 256/64 = 4 iterations per epoch -> exactly 8 iterations in 2 epochs
+        assert_eq!(rep.iterations, 8);
+        assert!((rep.epochs - 2.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn warm_start_reduces_iterations() {
+        let (op, b) = setup();
+        let opts = SolveOptions { tolerance: 0.01, block_size: 64, max_epochs: 3000.0, ..Default::default() };
+        let mut cold = Mat::zeros(op.n(), op.k_width());
+        let rep_cold = ApSolver::default().solve(&op, &b, &mut cold, &opts);
+        let mut warm = cold.clone();
+        let rep_warm = ApSolver::default().solve(&op, &b, &mut warm, &opts);
+        assert!(
+            rep_warm.iterations < rep_cold.iterations / 2,
+            "warm {} vs cold {}",
+            rep_warm.iterations,
+            rep_cold.iterations
+        );
+    }
+
+    #[test]
+    fn random_and_cyclic_selection_also_converge() {
+        let (op, b) = setup();
+        for sel in [super::super::ApSelection::Random, super::super::ApSelection::Cyclic] {
+            let mut v = Mat::zeros(op.n(), op.k_width());
+            let opts = SolveOptions {
+                tolerance: 1e-4,
+                max_epochs: 3000.0,
+                block_size: 64,
+                ap_selection: sel,
+                ..Default::default()
+            };
+            let rep = ApSolver::default().solve(&op, &b, &mut v, &opts);
+            assert!(rep.converged, "{sel:?}: {rep:?}");
+        }
+    }
+
+    #[test]
+    fn selection_rules_are_comparable_in_cost() {
+        // Greedy is not universally fastest (its summed-column metric is a
+        // heuristic); assert all three rules land within a small factor of
+        // each other on a well-conditioned system.
+        let (op, b) = setup();
+        let run = |sel| {
+            let mut v = Mat::zeros(op.n(), op.k_width());
+            let opts = SolveOptions {
+                tolerance: 0.01,
+                max_epochs: 3000.0,
+                block_size: 64,
+                ap_selection: sel,
+                ..Default::default()
+            };
+            ApSolver::default().solve(&op, &b, &mut v, &opts).iterations
+        };
+        let greedy = run(super::super::ApSelection::Greedy);
+        let cyclic = run(super::super::ApSelection::Cyclic);
+        let random = run(super::super::ApSelection::Random);
+        let max = greedy.max(cyclic).max(random) as f64;
+        let min = greedy.min(cyclic).min(random).max(1) as f64;
+        assert!(max / min < 3.0, "greedy {greedy} cyclic {cyclic} random {random}");
+    }
+
+    #[test]
+    fn greedy_selection_picks_worst_block() {
+        let mut r = Mat::zeros(8, 2);
+        r[(5, 0)] = 10.0; // block 1 of size 4
+        let scores = block_scores(&r, 4);
+        assert!(scores[1] > scores[0]);
+    }
+}

@@ -1,0 +1,197 @@
+//! Preconditioned conjugate gradients (Algorithm 1 of the paper), batched
+//! over the s+1 RHS columns with independent per-column step sizes.
+//! One iteration touches every entry of H once, so 1 iteration = 1 epoch.
+
+use super::{
+    axpy_cols, col_dots, residual_norms, LinearSolver, Normalized, SolveOptions, SolveReport,
+    SolverKind, WoodburyPreconditioner,
+};
+use crate::linalg::Mat;
+use crate::operators::KernelOperator;
+
+#[derive(Default)]
+pub struct CgSolver {
+    /// Keep the preconditioner across `solve` calls when hyperparameters
+    /// did not change (rebuilt whenever they do).
+    cache: Option<(Vec<f64>, WoodburyPreconditioner)>,
+}
+
+impl CgSolver {
+    fn preconditioner(
+        &mut self,
+        op: &dyn KernelOperator,
+        opts: &SolveOptions,
+    ) -> &WoodburyPreconditioner {
+        let theta = op.hp().pack();
+        let stale = match &self.cache {
+            Some((t, _)) => t != &theta,
+            None => true,
+        };
+        if stale {
+            let pre =
+                WoodburyPreconditioner::build(op.x(), op.hp(), op.family(), opts.precond_rank);
+            self.cache = Some((theta, pre));
+        }
+        &self.cache.as_ref().unwrap().1
+    }
+}
+
+impl LinearSolver for CgSolver {
+    fn solve(
+        &mut self,
+        op: &dyn KernelOperator,
+        b: &Mat,
+        v0: &mut Mat,
+        opts: &SolveOptions,
+    ) -> SolveReport {
+        let pre = {
+            // borrow dance: build/refresh the cache first
+            self.preconditioner(op, opts);
+            &self.cache.as_ref().unwrap().1
+        };
+        let (norm, mut r) = Normalized::setup(op, b, v0);
+        let mut v = v0.clone();
+        let init_residual_sq: f64 = r.data.iter().map(|x| x * x).sum();
+
+        let mut p = pre.apply(&r);
+        let mut d = p.clone();
+        let mut gamma = col_dots(&r, &p);
+
+        let mut epochs = norm.warm_epoch_cost;
+        let mut iterations = 0usize;
+        let (mut ry, mut rz) = residual_norms(&r);
+        let tol = opts.tolerance;
+
+        while (ry > tol || rz > tol) && epochs + 1.0 <= opts.max_epochs {
+            let hd = op.hv(&d);
+            epochs += 1.0;
+            iterations += 1;
+
+            let denom = col_dots(&d, &hd);
+            let alpha: Vec<f64> = gamma
+                .iter()
+                .zip(&denom)
+                .map(|(&g, &dn)| if dn > 0.0 { g / dn } else { 0.0 })
+                .collect();
+            axpy_cols(&mut v, &alpha, &d);
+            let neg_alpha: Vec<f64> = alpha.iter().map(|a| -a).collect();
+            axpy_cols(&mut r, &neg_alpha, &hd);
+
+            p = pre.apply(&r);
+            let gamma_new = col_dots(&r, &p);
+            let beta: Vec<f64> = gamma_new
+                .iter()
+                .zip(&gamma)
+                .map(|(&gn, &g)| if g.abs() > 0.0 { gn / g } else { 0.0 })
+                .collect();
+            // d = p + beta * d
+            for i in 0..d.rows {
+                let dr = d.row_mut(i);
+                let pr = &p.data[i * p.cols..(i + 1) * p.cols];
+                for j in 0..dr.len() {
+                    dr[j] = pr[j] + beta[j] * dr[j];
+                }
+            }
+            gamma = gamma_new;
+            let (a, b_) = residual_norms(&r);
+            ry = a;
+            rz = b_;
+        }
+
+        norm.finish(&mut v);
+        *v0 = v;
+        SolveReport {
+            iterations,
+            epochs,
+            ry,
+            rz,
+            converged: ry <= tol && rz <= tol,
+            init_residual_sq,
+        }
+    }
+
+    fn kind(&self) -> SolverKind {
+        SolverKind::Cg
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data;
+    use crate::kernels::Hyperparams;
+    use crate::linalg::Cholesky;
+    use crate::operators::{DenseOperator, KernelOperator};
+    use crate::util::rng::Rng;
+
+    fn setup() -> (DenseOperator, Mat) {
+        let ds = data::generate(&data::spec("test").unwrap());
+        let mut op = DenseOperator::new(&ds, 4, 16);
+        op.set_hp(&Hyperparams { ell: vec![1.0; 4], sigf: 1.0, sigma: 0.4 });
+        let mut rng = Rng::new(0);
+        let mut b = Mat::from_fn(op.n(), op.k_width(), |_, _| rng.gaussian());
+        b.set_col(0, &ds.y_train);
+        (op, b)
+    }
+
+    #[test]
+    fn cg_converges_to_direct_solution() {
+        let (op, b) = setup();
+        let mut v = Mat::zeros(op.n(), op.k_width());
+        let mut solver = CgSolver::default();
+        let opts = SolveOptions { tolerance: 1e-8, max_epochs: 500.0, precond_rank: 32, ..Default::default() };
+        let rep = solver.solve(&op, &b, &mut v, &opts);
+        assert!(rep.converged, "{rep:?}");
+        let want = Cholesky::factor(op.h()).unwrap().solve_mat(&b);
+        assert!(v.max_abs_diff(&want) < 1e-5, "{}", v.max_abs_diff(&want));
+    }
+
+    #[test]
+    fn preconditioning_reduces_iterations() {
+        let (op, b) = setup();
+        let opts_no = SolveOptions { tolerance: 0.01, precond_rank: 0, ..Default::default() };
+        let opts_pc = SolveOptions { tolerance: 0.01, precond_rank: 64, ..Default::default() };
+        let mut v1 = Mat::zeros(op.n(), op.k_width());
+        let mut v2 = Mat::zeros(op.n(), op.k_width());
+        let it_no = CgSolver::default().solve(&op, &b, &mut v1, &opts_no).iterations;
+        let it_pc = CgSolver::default().solve(&op, &b, &mut v2, &opts_pc).iterations;
+        assert!(it_pc <= it_no, "precond {it_pc} vs plain {it_no}");
+    }
+
+    #[test]
+    fn warm_start_costs_one_epoch_but_fewer_iterations() {
+        let (op, b) = setup();
+        let opts = SolveOptions { tolerance: 0.01, precond_rank: 32, ..Default::default() };
+        let mut cold = Mat::zeros(op.n(), op.k_width());
+        let rep_cold = CgSolver::default().solve(&op, &b, &mut cold, &opts);
+        // warm start at the solution: should converge (almost) immediately
+        let mut warm = cold.clone();
+        let rep_warm = CgSolver::default().solve(&op, &b, &mut warm, &opts);
+        assert!(rep_warm.iterations <= 1, "{rep_warm:?}");
+        assert!(rep_warm.epochs >= 1.0); // initial residual costs an epoch
+        assert!(rep_cold.iterations > rep_warm.iterations);
+    }
+
+    #[test]
+    fn budget_is_respected() {
+        let (op, b) = setup();
+        let opts = SolveOptions { tolerance: 1e-12, max_epochs: 5.0, precond_rank: 0, ..Default::default() };
+        let mut v = Mat::zeros(op.n(), op.k_width());
+        let rep = CgSolver::default().solve(&op, &b, &mut v, &opts);
+        assert!(!rep.converged);
+        assert!(rep.epochs <= 5.0 + 1e-9);
+        assert_eq!(rep.iterations, 5);
+    }
+
+    #[test]
+    fn residuals_decrease_monotonically_enough() {
+        // CG residuals are not strictly monotone, but the final residual
+        // must be far below the initial one.
+        let (op, b) = setup();
+        let opts = SolveOptions { tolerance: 1e-6, precond_rank: 32, ..Default::default() };
+        let mut v = Mat::zeros(op.n(), op.k_width());
+        let rep = CgSolver::default().solve(&op, &b, &mut v, &opts);
+        assert!(rep.ry < 1e-6 && rep.rz < 1e-6);
+        assert!(rep.init_residual_sq > 1.0); // k unit columns
+    }
+}

@@ -1,0 +1,297 @@
+//! Batched linear-system solvers for  H [v_y, v_1..v_s] = [y, b_1..b_s].
+//!
+//! The paper's three solvers — conjugate gradients (CG), alternating
+//! projections (AP) and stochastic gradient descent (SGD) — with the three
+//! studied coordination techniques:
+//!
+//! * **warm starting**: `v0` is an in/out parameter; the coordinator passes
+//!   the previous outer step's solution and receives the new one;
+//! * **epoch budgets**: compute is metered in *epochs* (one epoch = one
+//!   full pass over the entries of H, the paper's solver-agnostic unit) and
+//!   solvers stop at `max_epochs` even if the tolerance is not reached;
+//! * **normalised tolerance**: each column solves the unit-normalised
+//!   system b~ = b / (||b|| + eps); termination needs both the mean column
+//!   (`ry`) and the probe average (`rz`) below `tolerance`.
+//!
+//! Solver *recurrences* are O(n k) Rust; every O(n^2) product goes through
+//! [`KernelOperator`] (Pallas kernels on the XLA backend).
+
+mod ap;
+mod cg;
+mod precond;
+mod sgd;
+
+pub use ap::ApSolver;
+pub use cg::CgSolver;
+pub use precond::WoodburyPreconditioner;
+pub use sgd::{autotune_lr, SgdSolver};
+
+use crate::linalg::Mat;
+use crate::operators::KernelOperator;
+
+pub const NORM_EPS: f64 = 1e-12;
+
+#[derive(Copy, Clone, Debug, PartialEq, Eq)]
+pub enum SolverKind {
+    Cg,
+    Ap,
+    Sgd,
+}
+
+impl SolverKind {
+    pub fn parse(s: &str) -> anyhow::Result<Self> {
+        Ok(match s {
+            "cg" => SolverKind::Cg,
+            "ap" => SolverKind::Ap,
+            "sgd" => SolverKind::Sgd,
+            other => anyhow::bail!("unknown solver '{other}'"),
+        })
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            SolverKind::Cg => "cg",
+            SolverKind::Ap => "ap",
+            SolverKind::Sgd => "sgd",
+        }
+    }
+}
+
+/// AP block-selection rule (ablation: the paper/Wu et al. use greedy).
+#[derive(Copy, Clone, Debug, PartialEq, Eq)]
+pub enum ApSelection {
+    /// Algorithm 2: block with the largest summed-column residual norm.
+    Greedy,
+    /// Uniform random block.
+    Random,
+    /// Round-robin sweep.
+    Cyclic,
+}
+
+#[derive(Clone, Debug)]
+pub struct SolveOptions {
+    /// Relative residual norm tolerance tau (paper: 0.01).
+    pub tolerance: f64,
+    /// Budget in epochs; f64 because AP/SGD iterations are fractional
+    /// epochs (b/n each).
+    pub max_epochs: f64,
+    /// CG preconditioner rank (paper: pivoted Cholesky rank 100).
+    pub precond_rank: usize,
+    /// AP block size == SGD batch size (must match the artifact's b).
+    pub block_size: usize,
+    pub sgd_lr: f64,
+    pub sgd_momentum: f64,
+    /// Polyak (tail) iterate averaging for SGD (paper: off, because it
+    /// interferes with the residual-estimation heuristic).
+    pub sgd_polyak: bool,
+    /// Halve-and-retry on detected SGD divergence (robustness feature
+    /// motivated by the paper's Section-5 observation; disabled inside
+    /// the learning-rate auto-tuner so it can observe raw divergence).
+    pub sgd_backoff: bool,
+    pub ap_selection: ApSelection,
+}
+
+impl Default for SolveOptions {
+    fn default() -> Self {
+        SolveOptions {
+            tolerance: 0.01,
+            max_epochs: 1000.0,
+            precond_rank: 64,
+            block_size: 64,
+            sgd_lr: 10.0,
+            sgd_momentum: 0.9,
+            sgd_polyak: false,
+            sgd_backoff: true,
+            ap_selection: ApSelection::Greedy,
+        }
+    }
+}
+
+/// Outcome of one inner-loop solve.
+#[derive(Clone, Debug, PartialEq)]
+pub struct SolveReport {
+    pub iterations: usize,
+    /// Epochs actually spent (incl. the exact initial residual when warm).
+    pub epochs: f64,
+    /// Final relative residual of the mean system  H v_y = y.
+    pub ry: f64,
+    /// Final average relative residual of the probe systems.
+    pub rz: f64,
+    pub converged: bool,
+    /// RKHS distance proxy at initialisation: ||r_0||^2 summed over
+    /// normalised columns (for Figs 3 and 6 diagnostics).
+    pub init_residual_sq: f64,
+}
+
+/// Common solver interface.  `v0` carries the warm start in and the
+/// (raw-space) solution out.
+pub trait LinearSolver {
+    fn solve(
+        &mut self,
+        op: &dyn KernelOperator,
+        b: &Mat,
+        v0: &mut Mat,
+        opts: &SolveOptions,
+    ) -> SolveReport;
+
+    fn kind(&self) -> SolverKind;
+}
+
+pub fn make_solver(kind: SolverKind) -> Box<dyn LinearSolver> {
+    match kind {
+        SolverKind::Cg => Box::new(CgSolver::default()),
+        SolverKind::Ap => Box::new(ApSolver::default()),
+        SolverKind::Sgd => Box::new(SgdSolver::default()),
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Shared column helpers (Mat is row-major; columns are strided)
+// ---------------------------------------------------------------------------
+
+/// Per-column euclidean norms of a [n, k] matrix.
+pub fn col_norms(m: &Mat) -> Vec<f64> {
+    let mut acc = vec![0.0; m.cols];
+    for i in 0..m.rows {
+        let row = m.row(i);
+        for (j, &x) in row.iter().enumerate() {
+            acc[j] += x * x;
+        }
+    }
+    acc.into_iter().map(f64::sqrt).collect()
+}
+
+/// Scale column j by c[j].
+pub fn scale_cols(m: &mut Mat, c: &[f64]) {
+    assert_eq!(c.len(), m.cols);
+    for i in 0..m.rows {
+        let row = m.row_mut(i);
+        for (j, x) in row.iter_mut().enumerate() {
+            *x *= c[j];
+        }
+    }
+}
+
+/// m += diag-scaled other: m[:,j] += a[j] * o[:,j].
+pub fn axpy_cols(m: &mut Mat, a: &[f64], o: &Mat) {
+    assert_eq!((m.rows, m.cols), (o.rows, o.cols));
+    assert_eq!(a.len(), m.cols);
+    for i in 0..m.rows {
+        let mr = &mut m.data[i * m.cols..(i + 1) * m.cols];
+        let or = &o.data[i * o.cols..(i + 1) * o.cols];
+        for j in 0..mr.len() {
+            mr[j] += a[j] * or[j];
+        }
+    }
+}
+
+/// Per-column dot products <a_j, b_j>.
+pub fn col_dots(a: &Mat, b: &Mat) -> Vec<f64> {
+    assert_eq!((a.rows, a.cols), (b.rows, b.cols));
+    let mut acc = vec![0.0; a.cols];
+    for i in 0..a.rows {
+        let ar = a.row(i);
+        let br = b.row(i);
+        for j in 0..a.cols {
+            acc[j] += ar[j] * br[j];
+        }
+    }
+    acc
+}
+
+/// (ry, rz) from a residual matrix whose columns are unit-normalised:
+/// ry = ||R[:,0]||, rz = mean_j ||R[:,j]||, j >= 1.
+pub fn residual_norms(r: &Mat) -> (f64, f64) {
+    let norms = col_norms(r);
+    let ry = norms[0];
+    let rz = if norms.len() > 1 {
+        norms[1..].iter().sum::<f64>() / (norms.len() - 1) as f64
+    } else {
+        0.0
+    };
+    (ry, rz)
+}
+
+/// Normalisation bookkeeping shared by all solvers: scales the system to
+/// unit RHS columns, optionally computes the exact initial residual for a
+/// warm start (costing one epoch), and restores raw space at the end.
+pub struct Normalized {
+    pub b: Mat,
+    pub norms: Vec<f64>,
+    pub warm_epoch_cost: f64,
+}
+
+impl Normalized {
+    /// Scale b and v0 into normalised space.  Returns the residual
+    /// R = b~ - H v~ and the epoch cost of computing it (1.0 if the warm
+    /// start is nonzero, else 0.0 since R = b~ is free).
+    pub fn setup(op: &dyn KernelOperator, b: &Mat, v0: &mut Mat) -> (Self, Mat) {
+        let mut norms = col_norms(b);
+        for n in &mut norms {
+            *n += NORM_EPS;
+        }
+        let inv: Vec<f64> = norms.iter().map(|&x| 1.0 / x).collect();
+        let mut bs = b.clone();
+        scale_cols(&mut bs, &inv);
+        scale_cols(v0, &inv);
+        let warm = v0.data.iter().any(|&x| x != 0.0);
+        let (r, cost) = if warm {
+            let hv = op.hv(v0);
+            let mut r = bs.clone();
+            r.sub_assign(&hv);
+            (r, 1.0)
+        } else {
+            (bs.clone(), 0.0)
+        };
+        (Normalized { b: bs, norms, warm_epoch_cost: cost }, r)
+    }
+
+    /// Restore v to raw space.
+    pub fn finish(&self, v: &mut Mat) {
+        scale_cols(v, &self.norms);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn col_helpers_roundtrip() {
+        let mut rng = Rng::new(0);
+        let m = Mat::from_fn(10, 3, |_, _| rng.gaussian());
+        let norms = col_norms(&m);
+        let mut scaled = m.clone();
+        scale_cols(&mut scaled, &norms.iter().map(|&x| 1.0 / x).collect::<Vec<_>>());
+        for (j, _) in norms.iter().enumerate() {
+            let n = crate::util::stats::norm2(&scaled.col(j));
+            assert!((n - 1.0).abs() < 1e-12);
+        }
+    }
+
+    #[test]
+    fn axpy_and_dots() {
+        let a = Mat::from_vec(2, 2, vec![1.0, 2.0, 3.0, 4.0]);
+        let b = Mat::from_vec(2, 2, vec![10.0, 20.0, 30.0, 40.0]);
+        let mut m = a.clone();
+        axpy_cols(&mut m, &[2.0, 0.5], &b);
+        assert_eq!(m.data, vec![21.0, 12.0, 63.0, 24.0]);
+        let d = col_dots(&a, &b);
+        assert_eq!(d, vec![1.0 * 10.0 + 3.0 * 30.0, 2.0 * 20.0 + 4.0 * 40.0]);
+    }
+
+    #[test]
+    fn residual_norms_split() {
+        let r = Mat::from_vec(2, 3, vec![3.0, 1.0, 0.0, 4.0, 0.0, 2.0]);
+        let (ry, rz) = residual_norms(&r);
+        assert!((ry - 5.0).abs() < 1e-12);
+        assert!((rz - 1.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn solver_kind_parse() {
+        assert_eq!(SolverKind::parse("ap").unwrap(), SolverKind::Ap);
+        assert!(SolverKind::parse("lu").is_err());
+    }
+}

@@ -1,0 +1,333 @@
+//! Stochastic gradient descent on the quadratic objective (Algorithm 3 of
+//! the paper; Lin et al. 2023/2024): minibatch gradients with heavy-ball
+//! momentum and the sparse residual-estimation heuristic (the negative
+//! minibatch gradient *is* the residual on those rows, so a persistent
+//! residual buffer updated on visited rows upper-bounds the true residual).
+//! One iteration touches b/n of H's entries -> one epoch = n/b iterations.
+
+use super::{residual_norms, LinearSolver, Normalized, SolveOptions, SolveReport, SolverKind};
+use crate::linalg::Mat;
+use crate::operators::KernelOperator;
+use crate::util::rng::Rng;
+
+pub struct SgdSolver {
+    pub rng: Rng,
+}
+
+impl Default for SgdSolver {
+    fn default() -> Self {
+        SgdSolver { rng: Rng::new(0x5DD) }
+    }
+}
+
+impl SgdSolver {
+    pub fn with_seed(seed: u64) -> Self {
+        SgdSolver { rng: Rng::new(seed) }
+    }
+}
+
+impl LinearSolver for SgdSolver {
+    fn solve(
+        &mut self,
+        op: &dyn KernelOperator,
+        b_mat: &Mat,
+        v0: &mut Mat,
+        opts: &SolveOptions,
+    ) -> SolveReport {
+        // Learning-rate backoff: the optimal SGD rate shrinks as the
+        // hyperparameters sharpen during optimisation (paper Section 5
+        // observes SGD "can suffer due to the optimal learning rate
+        // changing").  On detected divergence, halve the rate and retry
+        // from the same initialisation; epochs spent across attempts are
+        // charged against the budget.
+        let mut lr = opts.sgd_lr;
+        let mut spent = 0.0;
+        let attempts = if opts.sgd_backoff { 4 } else { 1 };
+        for attempt in 0..attempts {
+            let mut o = opts.clone();
+            o.sgd_lr = lr;
+            o.max_epochs = (opts.max_epochs - spent).max(0.0);
+            let mut v = v0.clone();
+            let mut rep = self.solve_once(op, b_mat, &mut v, &o);
+            spent += rep.epochs;
+            rep.epochs = spent;
+            let diverged =
+                !rep.ry.is_finite() || !rep.rz.is_finite() || rep.ry > 3.0 || rep.rz > 3.0;
+            if !diverged || attempt == attempts - 1 || o.max_epochs <= 0.0 {
+                *v0 = v;
+                return rep;
+            }
+            lr *= 0.5;
+            crate::debuglog!("sgd diverged (attempt {attempt}), retrying with lr={lr}");
+        }
+        unreachable!("backoff loop returns")
+    }
+
+    fn kind(&self) -> SolverKind {
+        SolverKind::Sgd
+    }
+}
+
+impl SgdSolver {
+    fn solve_once(
+        &mut self,
+        op: &dyn KernelOperator,
+        b_mat: &Mat,
+        v0: &mut Mat,
+        opts: &SolveOptions,
+    ) -> SolveReport {
+        let n = op.n();
+        let k = b_mat.cols;
+        let bsz = opts.block_size;
+        let noise_var = op.hp().noise_var();
+        let (norm, r_init) = Normalized::setup(op, b_mat, v0);
+        let mut v = v0.clone();
+        // Residual estimate buffer: exact at start (free when cold: r = b~).
+        let mut r = r_init;
+        let init_residual_sq: f64 = r.data.iter().map(|x| x * x).sum();
+
+        let mut momentum = Mat::zeros(n, k);
+        // Polyak tail averaging (optional): average iterates after the
+        // first half of the budget.
+        let mut polyak_sum: Option<Mat> = None;
+        let mut polyak_count = 0usize;
+        let polyak_start = opts.max_epochs * 0.5;
+        let mut epochs = norm.warm_epoch_cost;
+        let mut iterations = 0usize;
+        let (mut ry, mut rz) = residual_norms(&r);
+        let tol = opts.tolerance;
+        let epoch_per_iter = bsz as f64 / n as f64;
+        let step = opts.sgd_lr / bsz as f64;
+        let rho = opts.sgd_momentum;
+
+        while (ry > tol || rz > tol) && epochs + epoch_per_iter <= opts.max_epochs {
+            let idx = self.rng.sample_indices(n, bsz);
+            // g[I] = H[I,:] v - b[I]  = K(X_I, X) v + sigma^2 v[I] - b[I]
+            let mut g = op.k_rows(&idx, &v); // [b, k]
+            for (bi, &i) in idx.iter().enumerate() {
+                let gr = g.row_mut(bi);
+                let vr = &v.data[i * k..(i + 1) * k];
+                let br = &norm.b.data[i * k..(i + 1) * k];
+                for j in 0..k {
+                    gr[j] += noise_var * vr[j] - br[j];
+                }
+            }
+            // momentum decays densely, receives sparse gradient rows
+            momentum.scale(rho);
+            for (bi, &i) in idx.iter().enumerate() {
+                let mr = momentum.row_mut(i);
+                let gr = g.row(bi);
+                for j in 0..k {
+                    mr[j] -= step * gr[j];
+                }
+            }
+            v.add_assign(&momentum);
+            // sparse residual estimate: r[I] = -g[I]
+            for (bi, &i) in idx.iter().enumerate() {
+                let rr = r.row_mut(i);
+                let gr = g.row(bi);
+                for j in 0..k {
+                    rr[j] = -gr[j];
+                }
+            }
+            if opts.sgd_polyak && epochs >= polyak_start {
+                let sum = polyak_sum.get_or_insert_with(|| Mat::zeros(n, k));
+                sum.add_assign(&v);
+                polyak_count += 1;
+            }
+
+            epochs += epoch_per_iter;
+            iterations += 1;
+            // residual norms are estimates here (paper: approximate upper bound)
+            let (a, b_) = residual_norms(&r);
+            ry = a;
+            rz = b_;
+            if !v.data[0].is_finite() || ry > 3.0 || rz > 3.0 {
+                break; // divergence guard (lr too large); backoff retries
+            }
+        }
+
+        if let Some(sum) = polyak_sum {
+            if polyak_count > 0 {
+                let mut avg = sum;
+                avg.scale(1.0 / polyak_count as f64);
+                v = avg;
+            }
+        }
+        norm.finish(&mut v);
+        *v0 = v;
+        SolveReport {
+            iterations,
+            epochs,
+            ry,
+            rz,
+            converged: ry <= tol && rz <= tol,
+            init_residual_sq,
+        }
+    }
+}
+
+/// Learning-rate auto-tune mirroring the paper's protocol: pick the largest
+/// rate from `grid` whose first epoch does not increase the residual
+/// estimate (run on the very first outer step only). `halve` returns half
+/// of that rate (paper's choice on large datasets).
+pub fn autotune_lr(
+    op: &dyn KernelOperator,
+    b: &Mat,
+    opts: &SolveOptions,
+    grid: &[f64],
+    halve: bool,
+) -> f64 {
+    let mut best = grid[0];
+    for &lr in grid {
+        let mut v = Mat::zeros(b.rows, b.cols);
+        let mut o = opts.clone();
+        o.sgd_lr = lr;
+        o.max_epochs = 1.0;
+        o.tolerance = 1e-16;
+        o.sgd_backoff = false;
+        let rep = SgdSolver::with_seed(42).solve(op, b, &mut v, &o);
+        let finite = v.data.iter().all(|x| x.is_finite());
+        // initial normalised residual is ~1 per column; diverged if grew
+        if finite && rep.ry <= 1.5 && rep.rz <= 1.5 {
+            best = lr;
+        } else {
+            break;
+        }
+    }
+    if halve {
+        best / 2.0
+    } else {
+        best
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data;
+    use crate::kernels::Hyperparams;
+    use crate::linalg::Cholesky;
+    use crate::operators::{DenseOperator, KernelOperator};
+
+    fn setup() -> (DenseOperator, Mat) {
+        let ds = data::generate(&data::spec("test").unwrap());
+        let mut op = DenseOperator::new(&ds, 4, 16);
+        op.set_hp(&Hyperparams { ell: vec![1.2; 4], sigf: 1.0, sigma: 0.5 });
+        let mut rng = Rng::new(2);
+        let mut b = Mat::from_fn(op.n(), op.k_width(), |_, _| rng.gaussian());
+        b.set_col(0, &ds.y_train);
+        (op, b)
+    }
+
+    #[test]
+    fn sgd_reaches_modest_tolerance() {
+        let (op, b) = setup();
+        let mut v = Mat::zeros(op.n(), op.k_width());
+        let opts = SolveOptions {
+            tolerance: 0.05,
+            max_epochs: 400.0,
+            block_size: 64,
+            sgd_lr: 8.0,
+            ..Default::default()
+        };
+        let rep = SgdSolver::default().solve(&op, &b, &mut v, &opts);
+        assert!(rep.converged, "{rep:?}");
+        // solution close to direct solve
+        let want = Cholesky::factor(op.h()).unwrap().solve_mat(&b);
+        let mut diff = v.clone();
+        diff.sub_assign(&want);
+        assert!(diff.fro_norm() / want.fro_norm() < 0.15);
+    }
+
+    #[test]
+    fn residual_estimate_upper_bounds_truth_after_convergence() {
+        let (op, b) = setup();
+        let mut v = Mat::zeros(op.n(), op.k_width());
+        let opts = SolveOptions {
+            tolerance: 0.05,
+            max_epochs: 400.0,
+            block_size: 64,
+            sgd_lr: 8.0,
+            ..Default::default()
+        };
+        let rep = SgdSolver::default().solve(&op, &b, &mut v, &opts);
+        // exact residual from raw-space solution
+        let hv = op.hv(&v);
+        let mut r = b.clone();
+        r.sub_assign(&hv);
+        let bn = super::super::col_norms(&b);
+        let rn = super::super::col_norms(&r);
+        let ry_true = rn[0] / bn[0];
+        assert!(ry_true <= rep.ry * 3.0 + 0.05, "true {ry_true} est {}", rep.ry);
+    }
+
+    #[test]
+    fn lr_backoff_recovers_from_divergent_rate() {
+        // grossly divergent initial rate: the backoff halves it (up to 3
+        // times) and must still return finite iterates within budget
+        let (op, b) = setup();
+        let mut v = Mat::zeros(op.n(), op.k_width());
+        let opts = SolveOptions {
+            tolerance: 0.05,
+            max_epochs: 400.0,
+            block_size: 64,
+            sgd_lr: 64.0, // diverges; 8.0 converges (see other tests)
+            ..Default::default()
+        };
+        let rep = SgdSolver::default().solve(&op, &b, &mut v, &opts);
+        assert!(v.data.iter().all(|x| x.is_finite()));
+        assert!(rep.ry.is_finite() && rep.rz.is_finite());
+        assert!(rep.epochs <= 400.0 + 1e-9);
+    }
+
+    #[test]
+    fn autotune_picks_stable_rate() {
+        let (op, b) = setup();
+        let opts = SolveOptions { block_size: 64, ..Default::default() };
+        let lr = autotune_lr(&op, &b, &opts, &[1.0, 4.0, 8.0, 1e6], false);
+        assert!(lr >= 1.0 && lr < 1e6, "{lr}");
+        let halved = autotune_lr(&op, &b, &opts, &[1.0, 4.0], true);
+        assert!(halved <= 2.0);
+    }
+
+    #[test]
+    fn polyak_averaging_returns_finite_solution_near_plain() {
+        let (op, b) = setup();
+        let base = SolveOptions {
+            tolerance: 1e-16, // force full budget
+            max_epochs: 120.0,
+            block_size: 64,
+            sgd_lr: 8.0,
+            ..Default::default()
+        };
+        let mut v_plain = Mat::zeros(op.n(), op.k_width());
+        SgdSolver::with_seed(1).solve(&op, &b, &mut v_plain, &base);
+        let mut opts = base.clone();
+        opts.sgd_polyak = true;
+        let mut v_avg = Mat::zeros(op.n(), op.k_width());
+        SgdSolver::with_seed(1).solve(&op, &b, &mut v_avg, &opts);
+        assert!(v_avg.data.iter().all(|x| x.is_finite()));
+        // averaged solution is close to (and usually smoother than) plain
+        let mut diff = v_avg.clone();
+        diff.sub_assign(&v_plain);
+        assert!(diff.fro_norm() / v_plain.fro_norm() < 0.5);
+    }
+
+    #[test]
+    fn warm_start_helps() {
+        let (op, b) = setup();
+        let opts = SolveOptions {
+            tolerance: 0.05,
+            max_epochs: 400.0,
+            block_size: 64,
+            sgd_lr: 8.0,
+            ..Default::default()
+        };
+        let mut cold = Mat::zeros(op.n(), op.k_width());
+        let rep_cold = SgdSolver::default().solve(&op, &b, &mut cold, &opts);
+        let mut warm = cold.clone();
+        let rep_warm = SgdSolver::default().solve(&op, &b, &mut warm, &opts);
+        assert!(rep_warm.epochs < rep_cold.epochs, "{} vs {}", rep_warm.epochs, rep_cold.epochs);
+    }
+}

@@ -1,0 +1,109 @@
+//! Tiny benchmark harness (criterion is unavailable offline).
+//!
+//! Each `cargo bench` target is a `harness = false` binary that calls
+//! [`Bencher::run`] per case.  Reports median / mean / p10 / p90 wall
+//! times and an optional throughput figure, in a stable parseable format:
+//!
+//! ```text
+//! bench <name> ... median 12.3ms mean 12.5ms p10 11.9ms p90 13.0ms [thr 4.1 GF/s]
+//! ```
+
+use std::time::{Duration, Instant};
+
+pub struct BenchResult {
+    pub name: String,
+    pub samples: Vec<Duration>,
+}
+
+impl BenchResult {
+    fn sorted_secs(&self) -> Vec<f64> {
+        let mut v: Vec<f64> = self.samples.iter().map(|d| d.as_secs_f64()).collect();
+        v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        v
+    }
+
+    pub fn median(&self) -> f64 {
+        let v = self.sorted_secs();
+        v[v.len() / 2]
+    }
+
+    pub fn mean(&self) -> f64 {
+        let v = self.sorted_secs();
+        v.iter().sum::<f64>() / v.len() as f64
+    }
+
+    pub fn percentile(&self, p: f64) -> f64 {
+        let v = self.sorted_secs();
+        let idx = ((v.len() as f64 - 1.0) * p).round() as usize;
+        v[idx]
+    }
+}
+
+fn fmt_time(s: f64) -> String {
+    if s >= 1.0 {
+        format!("{s:.3}s")
+    } else if s >= 1e-3 {
+        format!("{:.2}ms", s * 1e3)
+    } else {
+        format!("{:.1}us", s * 1e6)
+    }
+}
+
+pub struct Bencher {
+    pub warmup: usize,
+    pub samples: usize,
+}
+
+impl Default for Bencher {
+    fn default() -> Self {
+        // Keep bench wall time bounded; IGP_BENCH_SAMPLES overrides.
+        let samples = std::env::var("IGP_BENCH_SAMPLES")
+            .ok()
+            .and_then(|v| v.parse().ok())
+            .unwrap_or(7);
+        Bencher { warmup: 1, samples }
+    }
+}
+
+impl Bencher {
+    /// Time `f`, printing a report line. `flops` (if Some) adds GF/s.
+    pub fn run<F: FnMut()>(&self, name: &str, flops: Option<f64>, mut f: F) -> BenchResult {
+        for _ in 0..self.warmup {
+            f();
+        }
+        let mut samples = Vec::with_capacity(self.samples);
+        for _ in 0..self.samples {
+            let t0 = Instant::now();
+            f();
+            samples.push(t0.elapsed());
+        }
+        let r = BenchResult { name: name.to_string(), samples };
+        let thr = flops
+            .map(|fl| format!(" thr {:.2} GF/s", fl / r.median() / 1e9))
+            .unwrap_or_default();
+        println!(
+            "bench {:<44} median {:>9} mean {:>9} p10 {:>9} p90 {:>9}{}",
+            r.name,
+            fmt_time(r.median()),
+            fmt_time(r.mean()),
+            fmt_time(r.percentile(0.1)),
+            fmt_time(r.percentile(0.9)),
+            thr,
+        );
+        r
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_reports_sane_stats() {
+        let b = Bencher { warmup: 0, samples: 5 };
+        let r = b.run("noop", None, || { std::hint::black_box(1 + 1); });
+        assert_eq!(r.samples.len(), 5);
+        assert!(r.median() >= 0.0);
+        assert!(r.percentile(0.9) >= r.percentile(0.1));
+    }
+}

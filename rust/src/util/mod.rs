@@ -1,0 +1,10 @@
+//! Shared substrates built in-tree (no external crates available offline):
+//! RNG, statistics, CSV/markdown reporting, a tiny logger, a bench harness
+//! and a property-testing harness.
+
+pub mod bench;
+pub mod csv;
+pub mod logging;
+pub mod proptest;
+pub mod rng;
+pub mod stats;

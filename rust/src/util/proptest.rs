@@ -1,0 +1,118 @@
+//! Minimal property-testing harness (proptest is unavailable offline).
+//!
+//! Runs a property over many seeded random cases; on failure it reports the
+//! failing seed and retries with a sequence of "shrunken" size parameters
+//! so the smallest failing size is surfaced.  Used for coordinator
+//! invariants (routing, batching, warm-start state) per DESIGN.md §5.
+
+use crate::util::rng::Rng;
+
+/// Configuration for a property run.
+#[derive(Clone, Copy)]
+pub struct PropConfig {
+    pub cases: usize,
+    pub seed: u64,
+    /// Maximum "size" hint handed to generators (e.g. max vector length).
+    pub max_size: usize,
+}
+
+impl Default for PropConfig {
+    fn default() -> Self {
+        PropConfig { cases: 64, seed: 0xC0FFEE, max_size: 64 }
+    }
+}
+
+/// Run `prop(rng, size)`; the property fails by returning Err(reason).
+/// On failure, retries smaller sizes to find a minimal failing size, then
+/// panics with full reproduction info.
+pub fn check<F>(name: &str, cfg: PropConfig, mut prop: F)
+where
+    F: FnMut(&mut Rng, usize) -> Result<(), String>,
+{
+    let mut root = Rng::new(cfg.seed);
+    for case in 0..cfg.cases {
+        // sizes sweep small -> large so trivial sizes are always covered
+        let size = 1 + (case * cfg.max_size) / cfg.cases.max(1);
+        let case_seed = root.next_u64();
+        let mut rng = Rng::new(case_seed);
+        if let Err(reason) = prop(&mut rng, size) {
+            // shrink: probe smaller sizes with the same seed
+            let mut min_fail = (size, reason.clone());
+            let mut sz = size / 2;
+            while sz >= 1 {
+                let mut rng = Rng::new(case_seed);
+                match prop(&mut rng, sz) {
+                    Err(r) => {
+                        min_fail = (sz, r);
+                        if sz == 1 {
+                            break;
+                        }
+                        sz /= 2;
+                    }
+                    Ok(()) => break,
+                }
+            }
+            panic!(
+                "property '{name}' failed (case {case}, seed {case_seed:#x}, \
+                 size {} after shrink from {size}): {}",
+                min_fail.0, min_fail.1
+            );
+        }
+    }
+}
+
+/// Assert helper for property bodies.
+#[macro_export]
+macro_rules! prop_assert {
+    ($cond:expr, $($arg:tt)*) => {
+        if !$cond {
+            return Err(format!($($arg)*));
+        }
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_runs_all_cases() {
+        let mut count = 0;
+        check("trivial", PropConfig { cases: 10, ..Default::default() }, |_, _| {
+            count += 1;
+            Ok(())
+        });
+        assert_eq!(count, 10);
+    }
+
+    #[test]
+    #[should_panic(expected = "property 'fails'")]
+    fn failing_property_panics_with_seed() {
+        check("fails", PropConfig { cases: 5, ..Default::default() }, |_, size| {
+            if size > 1 {
+                Err("too big".into())
+            } else {
+                Ok(())
+            }
+        });
+    }
+
+    #[test]
+    fn shrinking_reports_smaller_size() {
+        let result = std::panic::catch_unwind(|| {
+            check(
+                "shrinkme",
+                PropConfig { cases: 3, max_size: 64, ..Default::default() },
+                |_, size| {
+                    if size >= 2 {
+                        Err("boom".into())
+                    } else {
+                        Ok(())
+                    }
+                },
+            );
+        });
+        let msg = *result.unwrap_err().downcast::<String>().unwrap();
+        assert!(msg.contains("size 2"), "{msg}");
+    }
+}

@@ -1,0 +1,117 @@
+//! Small statistics helpers used by metrics and experiment reporting.
+
+/// Arithmetic mean (0.0 for empty input).
+pub fn mean(xs: &[f64]) -> f64 {
+    if xs.is_empty() {
+        return 0.0;
+    }
+    xs.iter().sum::<f64>() / xs.len() as f64
+}
+
+/// Unbiased sample variance (0.0 for fewer than two samples).
+pub fn variance(xs: &[f64]) -> f64 {
+    if xs.len() < 2 {
+        return 0.0;
+    }
+    let m = mean(xs);
+    xs.iter().map(|x| (x - m) * (x - m)).sum::<f64>() / (xs.len() - 1) as f64
+}
+
+/// Standard error of the mean.
+pub fn stderr(xs: &[f64]) -> f64 {
+    if xs.len() < 2 {
+        return 0.0;
+    }
+    (variance(xs) / xs.len() as f64).sqrt()
+}
+
+/// Euclidean norm.
+pub fn norm2(xs: &[f64]) -> f64 {
+    xs.iter().map(|x| x * x).sum::<f64>().sqrt()
+}
+
+/// Dot product.
+pub fn dot(a: &[f64], b: &[f64]) -> f64 {
+    debug_assert_eq!(a.len(), b.len());
+    a.iter().zip(b).map(|(x, y)| x * y).sum()
+}
+
+/// Root mean squared error between predictions and targets.
+pub fn rmse(pred: &[f64], truth: &[f64]) -> f64 {
+    assert_eq!(pred.len(), truth.len());
+    let s: f64 = pred
+        .iter()
+        .zip(truth)
+        .map(|(p, t)| (p - t) * (p - t))
+        .sum();
+    (s / pred.len() as f64).sqrt()
+}
+
+/// Mean Gaussian predictive log-likelihood: mean_i log N(y_i; mu_i, var_i).
+pub fn gaussian_llh(mu: &[f64], var: &[f64], y: &[f64]) -> f64 {
+    assert_eq!(mu.len(), y.len());
+    assert_eq!(var.len(), y.len());
+    let ln2pi = (2.0 * std::f64::consts::PI).ln();
+    let s: f64 = mu
+        .iter()
+        .zip(var)
+        .zip(y)
+        .map(|((m, v), t)| {
+            let v = v.max(1e-12);
+            -0.5 * (ln2pi + v.ln() + (t - m) * (t - m) / v)
+        })
+        .sum();
+    s / y.len() as f64
+}
+
+/// Relative residual norms per column of R [n, k] given unit-normalised
+/// targets; returns (norm of column 0, mean norm of columns 1..k).
+pub fn rel_residual_split(r_cols: &[Vec<f64>]) -> (f64, f64) {
+    assert!(!r_cols.is_empty());
+    let ry = norm2(&r_cols[0]);
+    if r_cols.len() == 1 {
+        return (ry, 0.0);
+    }
+    let rz = r_cols[1..].iter().map(|c| norm2(c)).sum::<f64>() / (r_cols.len() - 1) as f64;
+    (ry, rz)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn mean_var_stderr() {
+        let xs = [1.0, 2.0, 3.0, 4.0];
+        assert!((mean(&xs) - 2.5).abs() < 1e-12);
+        assert!((variance(&xs) - 5.0 / 3.0).abs() < 1e-12);
+        assert!((stderr(&xs) - (5.0 / 12.0f64).sqrt()).abs() < 1e-12);
+    }
+
+    #[test]
+    fn empty_inputs_are_safe() {
+        assert_eq!(mean(&[]), 0.0);
+        assert_eq!(variance(&[]), 0.0);
+        assert_eq!(stderr(&[1.0]), 0.0);
+    }
+
+    #[test]
+    fn rmse_known_case() {
+        assert!((rmse(&[1.0, 2.0], &[0.0, 4.0]) - (2.5f64).sqrt()).abs() < 1e-12);
+    }
+
+    #[test]
+    fn llh_matches_hand_computation() {
+        // log N(0; 0, 1) = -0.5 ln(2 pi)
+        let l = gaussian_llh(&[0.0], &[1.0], &[0.0]);
+        assert!((l + 0.5 * (2.0 * std::f64::consts::PI).ln()).abs() < 1e-12);
+    }
+
+    #[test]
+    fn residual_split() {
+        let r = vec![vec![3.0, 4.0], vec![1.0, 0.0], vec![0.0, 2.0]];
+        let (ry, rz) = rel_residual_split(&r);
+        assert!((ry - 5.0).abs() < 1e-12);
+        assert!((rz - 1.5).abs() < 1e-12);
+    }
+}

@@ -1,0 +1,187 @@
+//! Cross-layer integration: the XLA (Pallas/PJRT) backend must agree with
+//! the pure-Rust dense oracle on every operator method, and the full
+//! trainer must run end-to-end on compiled artifacts.
+//!
+//! Requires `make artifacts` (skips gracefully otherwise so `cargo test`
+//! works on a fresh checkout).
+
+use igp::coordinator::{run_exact, Trainer, TrainerOptions};
+use igp::data;
+use igp::estimator::EstimatorKind;
+use igp::kernels::Hyperparams;
+use igp::linalg::Mat;
+use igp::operators::{DenseOperator, KernelOperator, XlaOperator};
+use igp::runtime::Runtime;
+use igp::solvers::SolverKind;
+use igp::util::rng::Rng;
+
+fn artifacts_ready() -> bool {
+    std::path::Path::new("artifacts/test/meta.txt").exists()
+}
+
+macro_rules! require_artifacts {
+    () => {
+        if !artifacts_ready() {
+            eprintln!("skipping: artifacts/ not built (run `make artifacts`)");
+            return;
+        }
+    };
+}
+
+fn make_ops() -> (XlaOperator, DenseOperator, data::Dataset) {
+    let ds = data::generate(&data::spec("test").unwrap());
+    let rt = Runtime::cpu().unwrap();
+    let model = rt.load_config("artifacts", "test").unwrap();
+    let s = model.meta.s;
+    let m = model.meta.m;
+    let xla = XlaOperator::new(model, &ds);
+    let dense = DenseOperator::new(&ds, s, m);
+    (xla, dense, ds)
+}
+
+fn set_both(xla: &mut XlaOperator, dense: &mut DenseOperator, hp: &Hyperparams) {
+    xla.set_hp(hp);
+    dense.set_hp(hp);
+}
+
+#[test]
+fn xla_hv_matches_dense() {
+    require_artifacts!();
+    let (mut xla, mut dense, _) = make_ops();
+    let hp = Hyperparams { ell: vec![0.8, 1.1, 1.3, 0.9], sigf: 1.2, sigma: 0.3 };
+    set_both(&mut xla, &mut dense, &hp);
+    let mut rng = Rng::new(0);
+    let v = Mat::from_fn(xla.n(), xla.k_width(), |_, _| rng.gaussian());
+    let a = xla.hv(&v);
+    let b = dense.hv(&v);
+    assert!(a.max_abs_diff(&b) < 1e-8, "{}", a.max_abs_diff(&b));
+    // and the non-pallas reference artifact agrees too
+    let c = xla.hv_ref(&v);
+    assert!(a.max_abs_diff(&c) < 1e-8);
+}
+
+#[test]
+fn xla_k_cols_rows_match_dense() {
+    require_artifacts!();
+    let (mut xla, mut dense, _) = make_ops();
+    let hp = Hyperparams { ell: vec![1.0; 4], sigf: 0.9, sigma: 0.5 };
+    set_both(&mut xla, &mut dense, &hp);
+    let mut rng = Rng::new(1);
+    let b = xla.meta().b;
+    let idx: Vec<usize> = (64..64 + b).collect();
+    let u = Mat::from_fn(b, xla.k_width(), |_, _| rng.gaussian());
+    let a1 = xla.k_cols(&idx, &u);
+    let b1 = dense.k_cols(&idx, &u);
+    assert!(a1.max_abs_diff(&b1) < 1e-8);
+    let v = Mat::from_fn(xla.n(), xla.k_width(), |_, _| rng.gaussian());
+    // non-contiguous batch, as SGD samples it
+    let idx2 = Rng::new(7).sample_indices(xla.n(), b);
+    let a2 = xla.k_rows(&idx2, &v);
+    let b2 = dense.k_rows(&idx2, &v);
+    assert!(a2.max_abs_diff(&b2) < 1e-8);
+}
+
+#[test]
+fn xla_grad_quad_matches_dense() {
+    require_artifacts!();
+    let (mut xla, mut dense, _) = make_ops();
+    let hp = Hyperparams { ell: vec![0.7, 1.4, 1.0, 1.2], sigf: 1.1, sigma: 0.4 };
+    set_both(&mut xla, &mut dense, &hp);
+    let mut rng = Rng::new(2);
+    let k = xla.k_width();
+    let a = Mat::from_fn(xla.n(), k, |_, _| rng.gaussian());
+    let b = Mat::from_fn(xla.n(), k, |_, _| rng.gaussian());
+    let mut w = vec![-1.0 / 16.0; k];
+    w[0] = 0.5;
+    let g1 = xla.grad_quad(&a, &b, &w);
+    let g2 = dense.grad_quad(&a, &b, &w);
+    assert_eq!(g1.len(), g2.len());
+    for (i, (x, y)) in g1.iter().zip(&g2).enumerate() {
+        assert!((x - y).abs() < 1e-6 * (1.0 + y.abs()), "comp {i}: {x} vs {y}");
+    }
+}
+
+#[test]
+fn xla_rff_and_predict_match_dense() {
+    require_artifacts!();
+    let (mut xla, mut dense, _) = make_ops();
+    let hp = Hyperparams { ell: vec![1.0; 4], sigf: 1.3, sigma: 0.2 };
+    set_both(&mut xla, &mut dense, &hp);
+    let mut rng = Rng::new(3);
+    let (d, m, s, n) = (xla.d(), xla.m(), xla.s(), xla.n());
+    let omega0 = Mat::from_fn(d, m, |_, _| rng.gaussian());
+    let wts = Mat::from_fn(2 * m, s, |_, _| rng.gaussian());
+    let noise = Mat::from_fn(n, s, |_, _| rng.gaussian());
+    let xi1 = xla.rff_eval(&omega0, &wts, &noise);
+    let xi2 = dense.rff_eval(&omega0, &wts, &noise);
+    assert!(xi1.max_abs_diff(&xi2) < 1e-9, "{}", xi1.max_abs_diff(&xi2));
+
+    let vy = rng.gaussian_vec(n);
+    let zhat = Mat::from_fn(n, s, |_, _| rng.gaussian());
+    let (m1, s1) = xla.predict(&vy, &zhat, &omega0, &wts);
+    let (m2, s2) = dense.predict(&vy, &zhat, &omega0, &wts);
+    for (a, b) in m1.iter().zip(&m2) {
+        assert!((a - b).abs() < 1e-8);
+    }
+    assert!(s1.max_abs_diff(&s2) < 1e-8);
+}
+
+#[test]
+fn xla_exact_mll_matches_rust_exact_gp() {
+    require_artifacts!();
+    let (mut xla, _, ds) = make_ops();
+    let hp = Hyperparams { ell: vec![0.9; 4], sigf: 1.0, sigma: 0.35 };
+    xla.set_hp(&hp);
+    let (l_xla, g_xla) = xla.exact_mll(&ds.y_train).expect("exact artifact present");
+    let gp = igp::gp::ExactGp::fit(&ds.x_train, &ds.y_train, &hp, xla.family()).unwrap();
+    let l_rust = gp.mll(&ds.y_train);
+    let g_rust = gp.mll_grad();
+    assert!((l_xla - l_rust).abs() < 1e-6, "{l_xla} vs {l_rust}");
+    for (i, (a, b)) in g_xla.iter().zip(&g_rust).enumerate() {
+        assert!((a - b).abs() < 1e-5 * (1.0 + b.abs()), "comp {i}: {a} vs {b}");
+    }
+}
+
+#[test]
+fn trainer_end_to_end_on_xla_backend() {
+    require_artifacts!();
+    let ds = data::generate(&data::spec("test").unwrap());
+    let rt = Runtime::cpu().unwrap();
+    for (solver, estimator) in [
+        (SolverKind::Cg, EstimatorKind::Pathwise),
+        (SolverKind::Ap, EstimatorKind::Standard),
+        (SolverKind::Sgd, EstimatorKind::Pathwise),
+    ] {
+        let model = rt.load_config("artifacts", "test").unwrap();
+        let block = model.meta.b;
+        let op = XlaOperator::new(model, &ds);
+        let opts = TrainerOptions {
+            solver,
+            estimator,
+            warm_start: true,
+            block_size: Some(block),
+            sgd_lr: Some(8.0),
+            epoch_cap: 100.0,
+            seed: 11,
+            ..Default::default()
+        };
+        let mut t = Trainer::new(opts, Box::new(op), &ds);
+        let out = t.run(5).unwrap();
+        assert_eq!(out.telemetry.len(), 5);
+        assert!(out.final_metrics.rmse.is_finite());
+        assert!(out.final_metrics.llh.is_finite());
+        assert!(out.total_epochs > 0.0, "{solver:?}");
+    }
+}
+
+#[test]
+fn exact_trajectory_on_xla_backend() {
+    require_artifacts!();
+    let ds = data::generate(&data::spec("test").unwrap());
+    let rt = Runtime::cpu().unwrap();
+    let model = rt.load_config("artifacts", "test").unwrap();
+    let mut op = XlaOperator::new(model, &ds);
+    let traj = run_exact(&mut op, &ds.y_train, 8, 0.1, 1.0).unwrap();
+    assert_eq!(traj.len(), 8);
+    assert!(traj.last().unwrap().1 > traj.first().unwrap().1, "MLL must increase");
+}

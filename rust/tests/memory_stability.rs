@@ -1,0 +1,50 @@
+//! Regression test for the PJRT argument-buffer leak: the literal-args
+//! `execute` path of this xla_extension build leaks ~arg-size bytes per
+//! call, which OOM-killed long training runs.  The runtime therefore uses
+//! caller-managed `PjRtBuffer`s (Model::call_b); this test pins the fix by
+//! asserting bounded RSS growth over many operator calls.
+
+use igp::kernels::Hyperparams;
+use igp::linalg::Mat;
+use igp::operators::{KernelOperator, XlaOperator};
+use igp::util::rng::Rng;
+
+fn rss_bytes() -> f64 {
+    let s = std::fs::read_to_string("/proc/self/statm").unwrap_or_default();
+    let pages: f64 = s
+        .split_whitespace()
+        .nth(1)
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(0.0);
+    pages * 4096.0
+}
+
+#[test]
+fn operator_calls_do_not_leak() {
+    if !std::path::Path::new("artifacts/test/meta.txt").exists() {
+        eprintln!("skipping: artifacts/ not built");
+        return;
+    }
+    let ds = igp::data::generate(&igp::data::spec("test").unwrap());
+    let rt = igp::runtime::Runtime::cpu().unwrap();
+    let model = rt.load_config("artifacts", "test").unwrap();
+    let mut op = XlaOperator::new(model, &ds);
+    op.set_hp(&Hyperparams { ell: vec![1.0; 4], sigf: 1.0, sigma: 0.3 });
+    let mut rng = Rng::new(0);
+    let v = Mat::from_fn(op.n(), op.k_width(), |_, _| rng.gaussian());
+    // warm up allocators / caches
+    for _ in 0..50 {
+        let _ = op.hv(&v);
+    }
+    let before = rss_bytes();
+    for _ in 0..1000 {
+        let _ = op.hv(&v);
+    }
+    let growth = rss_bytes() - before;
+    // leaky path grew ~27 KB/call (~27 MB over 1000); fixed path is flat.
+    assert!(
+        growth < 8e6,
+        "RSS grew by {:.1} MB over 1000 calls — argument buffers are leaking",
+        growth / 1e6
+    );
+}

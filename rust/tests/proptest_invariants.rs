@@ -1,0 +1,229 @@
+//! Property-based tests (in-tree proptest-lite harness) over the
+//! coordinator-level invariants DESIGN.md §5 calls out: budget accounting,
+//! warm-start state routing, solver correctness on random SPD systems,
+//! normalisation round-trips and config parsing.
+
+use igp::config;
+use igp::data::{generate_split, spec};
+use igp::estimator::{EstimatorKind, ProbeSet};
+use igp::kernels::Hyperparams;
+use igp::linalg::{Cholesky, Mat};
+use igp::operators::{DenseOperator, KernelOperator};
+use igp::prop_assert;
+use igp::solvers::{
+    col_norms, make_solver, Normalized, SolveOptions, SolverKind,
+};
+use igp::util::proptest::{check, PropConfig};
+use igp::util::rng::Rng;
+
+fn dense_op(rng: &mut Rng, size_hint: usize) -> (DenseOperator, Mat) {
+    // random small SPD kernel system with random hyperparameters
+    let ds = generate_split(&spec("test").unwrap(), rng.next_u64() % 8);
+    let s = 2 + size_hint % 6;
+    let mut op = DenseOperator::new(&ds, s, 16);
+    let d = op.d();
+    let hp = Hyperparams {
+        ell: (0..d).map(|_| rng.uniform_in(0.5, 2.0)).collect(),
+        sigf: rng.uniform_in(0.5, 1.5),
+        sigma: rng.uniform_in(0.1, 0.8),
+    };
+    op.set_hp(&hp);
+    let mut b = Mat::from_fn(op.n(), op.k_width(), |_, _| rng.gaussian());
+    b.set_col(0, &ds.y_train);
+    (op, b)
+}
+
+#[test]
+fn prop_budget_never_exceeded() {
+    check("budget_never_exceeded", PropConfig { cases: 12, max_size: 12, ..Default::default() }, |rng, size| {
+        let (op, b) = dense_op(rng, size);
+        let budget = 1.0 + (size % 7) as f64;
+        let kind = match size % 3 {
+            0 => SolverKind::Cg,
+            1 => SolverKind::Ap,
+            _ => SolverKind::Sgd,
+        };
+        let opts = SolveOptions {
+            tolerance: 1e-14,
+            max_epochs: budget,
+            block_size: 64,
+            sgd_lr: 4.0,
+            ..Default::default()
+        };
+        let mut v = Mat::zeros(op.n(), op.k_width());
+        let rep = make_solver(kind).solve(&op, &b, &mut v, &opts);
+        prop_assert!(
+            rep.epochs <= budget + 1e-9,
+            "{kind:?}: spent {} > budget {budget}",
+            rep.epochs
+        );
+        prop_assert!(!rep.converged, "tolerance 1e-14 must not be reachable");
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_cg_converges_and_matches_direct() {
+    check("cg_matches_direct", PropConfig { cases: 8, max_size: 8, ..Default::default() }, |rng, size| {
+        let (op, b) = dense_op(rng, size);
+        let opts = SolveOptions {
+            tolerance: 1e-9,
+            max_epochs: 400.0,
+            precond_rank: 32,
+            ..Default::default()
+        };
+        let mut v = Mat::zeros(op.n(), op.k_width());
+        let rep = make_solver(SolverKind::Cg).solve(&op, &b, &mut v, &opts);
+        prop_assert!(rep.converged, "CG failed to converge: {rep:?}");
+        let want = Cholesky::factor(op.h()).unwrap().solve_mat(&b);
+        let err = v.max_abs_diff(&want);
+        prop_assert!(err < 1e-5, "solution error {err}");
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_warm_start_from_solution_is_instant() {
+    check("warm_start_instant", PropConfig { cases: 8, max_size: 8, ..Default::default() }, |rng, size| {
+        let (op, b) = dense_op(rng, size);
+        let kind = if size % 2 == 0 { SolverKind::Cg } else { SolverKind::Ap };
+        let opts = SolveOptions {
+            tolerance: 0.01,
+            max_epochs: 500.0,
+            block_size: 64,
+            ..Default::default()
+        };
+        let mut v = Mat::zeros(op.n(), op.k_width());
+        make_solver(kind).solve(&op, &b, &mut v, &opts);
+        // restart at the solution: must terminate after the initial
+        // residual check (<= 1 epoch, zero iterations)
+        let mut v2 = v.clone();
+        let rep = make_solver(kind).solve(&op, &b, &mut v2, &opts);
+        prop_assert!(rep.iterations == 0, "{kind:?} took {} iterations", rep.iterations);
+        prop_assert!(rep.converged, "{kind:?} not converged from solution");
+        // and the solution is unchanged
+        let drift = v2.max_abs_diff(&v);
+        prop_assert!(drift < 1e-12, "warm restart drifted by {drift}");
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_normalisation_roundtrip() {
+    check("normalisation_roundtrip", PropConfig { cases: 16, max_size: 16, ..Default::default() }, |rng, size| {
+        let (op, b) = dense_op(rng, size);
+        let mut v = Mat::from_fn(op.n(), op.k_width(), |_, _| rng.gaussian());
+        let v_orig = v.clone();
+        let (norm, _r) = Normalized::setup(&op, &b, &mut v);
+        norm.finish(&mut v);
+        let err = v.max_abs_diff(&v_orig);
+        prop_assert!(err < 1e-10, "normalise/denormalise drift {err}");
+        // scaled targets have unit columns
+        let mut bs = b.clone();
+        let inv: Vec<f64> = norm.norms.iter().map(|&x| 1.0 / x).collect();
+        igp::solvers::scale_cols(&mut bs, &inv);
+        for nn in col_norms(&bs) {
+            prop_assert!((nn - 1.0).abs() < 1e-9, "column norm {nn}");
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_probe_targets_freeze_under_warm_start() {
+    check("probe_freeze", PropConfig { cases: 6, max_size: 6, ..Default::default() }, |rng, size| {
+        let (mut op, _) = dense_op(rng, size);
+        let y = vec![0.5; op.n()];
+        let kind = if size % 2 == 0 { EstimatorKind::Standard } else { EstimatorKind::Pathwise };
+        let ps = ProbeSet::sample(kind, &op, rng);
+        let b1 = ps.targets(&op, &y);
+        let b1_again = ps.targets(&op, &y);
+        prop_assert!(
+            b1.max_abs_diff(&b1_again) == 0.0,
+            "targets not deterministic under fixed theta"
+        );
+        // pathwise targets must respond to theta (reparameterised), while
+        // standard targets must not
+        let d = op.d();
+        let hp2 = Hyperparams {
+            ell: vec![rng.uniform_in(0.4, 0.6); d],
+            sigf: 1.4,
+            sigma: 0.7,
+        };
+        op.set_hp(&hp2);
+        let b2 = ps.targets(&op, &y);
+        match kind {
+            EstimatorKind::Standard => {
+                prop_assert!(b1.max_abs_diff(&b2) == 0.0, "standard probes changed with theta")
+            }
+            EstimatorKind::Pathwise => {
+                prop_assert!(b1.max_abs_diff(&b2) > 1e-6, "pathwise probes ignored theta")
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_ap_epoch_accounting_is_block_fraction() {
+    check("ap_epoch_accounting", PropConfig { cases: 8, max_size: 8, ..Default::default() }, |rng, size| {
+        let (op, b) = dense_op(rng, size);
+        let budget = 1.0 + (size % 4) as f64;
+        let opts = SolveOptions {
+            tolerance: 1e-14,
+            max_epochs: budget,
+            block_size: 64,
+            ..Default::default()
+        };
+        let mut v = Mat::zeros(op.n(), op.k_width());
+        let rep = make_solver(SolverKind::Ap).solve(&op, &b, &mut v, &opts);
+        let per_iter = 64.0 / op.n() as f64;
+        let expected = rep.iterations as f64 * per_iter;
+        prop_assert!(
+            (rep.epochs - expected).abs() < 1e-9,
+            "epochs {} != iterations*b/n {expected}",
+            rep.epochs
+        );
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_config_parser_roundtrip() {
+    check("config_roundtrip", PropConfig { cases: 32, max_size: 32, ..Default::default() }, |rng, size| {
+        // random scalar values survive render -> parse
+        let ints: Vec<i64> = (0..size).map(|_| rng.next_u64() as i64 % 10_000).collect();
+        let floats: Vec<f64> = (0..size).map(|_| rng.uniform_in(-10.0, 10.0)).collect();
+        let mut text = String::from("[s]\n");
+        for (i, v) in ints.iter().enumerate() {
+            text.push_str(&format!("i{i} = {v}\n"));
+        }
+        for (i, v) in floats.iter().enumerate() {
+            text.push_str(&format!("f{i} = {v:.12}\n"));
+        }
+        let doc = config::parse(&text).map_err(|e| e.to_string())?;
+        for (i, v) in ints.iter().enumerate() {
+            let got = doc.get("s", &format!("i{i}")).unwrap().as_int().map_err(|e| e.to_string())?;
+            prop_assert!(got == *v, "int {i}: {got} != {v}");
+        }
+        for (i, v) in floats.iter().enumerate() {
+            let got = doc.get("s", &format!("f{i}")).unwrap().as_float().map_err(|e| e.to_string())?;
+            prop_assert!((got - v).abs() < 1e-9, "float {i}: {got} != {v}");
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_rng_gaussian_matrix_is_full_rank_ish() {
+    // sanity guard for probe sampling: no degenerate columns
+    check("probe_rank", PropConfig { cases: 8, max_size: 8, ..Default::default() }, |rng, size| {
+        let n = 16 + 8 * size;
+        let z = Mat::from_fn(n, 4, |_, _| rng.gaussian());
+        let norms = col_norms(&z);
+        for nn in norms {
+            prop_assert!(nn > 1e-3, "degenerate probe column");
+        }
+        Ok(())
+    });
+}
