@@ -2,7 +2,11 @@
 //! infeasible — train under a 10-epoch budget and watch warm starting
 //! accumulate solver progress across outer steps (the paper's Fig 10).
 //!
-//!     cargo run --release --example large_scale -- [dataset] [steps]
+//! Runs on the matrix-free multi-threaded [`TiledOperator`] backend, so it
+//! needs no compiled artifacts and scales to n where the dense O(n²)
+//! backend cannot even allocate H.
+//!
+//!     cargo run --release --example large_scale -- [dataset] [steps] [tile] [threads]
 
 use igp::prelude::*;
 
@@ -10,23 +14,26 @@ fn main() -> anyhow::Result<()> {
     let args: Vec<String> = std::env::args().skip(1).collect();
     let dataset = args.first().map(String::as_str).unwrap_or("threedroad");
     let steps: usize = args.get(1).map(|s| s.parse()).transpose()?.unwrap_or(12);
+    let tile: usize = args.get(2).map(|s| s.parse()).transpose()?.unwrap_or(256);
+    let threads: usize = args.get(3).map(|s| s.parse()).transpose()?.unwrap_or(0);
 
     let ds = igp::data::generate(&igp::data::spec(dataset)?);
-    let rt = igp::runtime::Runtime::cpu()?;
 
-    println!("{dataset}: n={} d={} — 10-epoch budget per outer step\n", ds.spec.n, ds.spec.d);
+    println!(
+        "{dataset}: n={} d={} — tiled backend (tile={tile}, threads={}), 10-epoch budget\n",
+        ds.spec.n,
+        ds.spec.d,
+        igp::util::parallel::num_threads(if threads == 0 { None } else { Some(threads) }),
+    );
     println!("{:<6} {:>10} {:>10} {:>10}", "", "first rz", "last rz", "test llh");
     for warm in [false, true] {
-        let model = rt.load_config("artifacts", dataset)?;
-        let block = model.meta.b;
-        let op = XlaOperator::new(model, &ds);
+        let op = TiledOperator::with_options(&ds, 16, 256, TiledOptions { tile, threads });
         let opts = TrainerOptions {
             solver: SolverKind::Ap,
             estimator: EstimatorKind::Pathwise,
             warm_start: warm,
             lr: 0.03,
             max_epochs: Some(10.0),
-            block_size: Some(block),
             seed: 5,
             ..Default::default()
         };

@@ -1,22 +1,69 @@
-//! L1 perf ablation: Pallas kmv_full vs the pure-jnp reference artifact vs
-//! the naive Rust dense operator for the full H@V product (DESIGN.md §6).
+//! L1 perf ablation for the full H@V product (DESIGN.md §6):
+//! * pure-Rust section (always runs): multi-threaded matrix-free
+//!   `TiledOperator` vs single-threaded tiled vs the materialised
+//!   `DenseOperator`, up to n = 4096 where dense storage is at its limit.
+//! * XLA section (needs `make artifacts`): Pallas kmv_full vs the pure-jnp
+//!   reference artifact.
 
 mod common;
 
+use igp::data;
 use igp::kernels::Hyperparams;
 use igp::linalg::Mat;
-use igp::operators::{DenseOperator, KernelOperator};
+use igp::operators::{DenseOperator, KernelOperator, TiledOperator, TiledOptions};
 use igp::util::bench::Bencher;
 use igp::util::rng::Rng;
 
-fn main() {
+/// Kernel-eval + matmul flop estimate for one H@V.
+fn hv_flops(n: usize, d: usize, k: usize) -> f64 {
+    let n = n as f64;
+    n * n * (3.0 * d as f64 + 6.0 + 2.0 * k as f64)
+}
+
+fn rust_backends() {
+    let b = Bencher::default();
+    for config in ["test", "pol", "protein", "houseelectric"] {
+        let ds = data::generate(&data::spec(config).unwrap());
+        let (s, m) = (8, 64);
+        let hp = Hyperparams { ell: vec![1.0; ds.spec.d], sigf: 1.1, sigma: 0.3 };
+
+        let mut tiled = TiledOperator::new(&ds, s, m);
+        tiled.set_hp(&hp);
+        let mut rng = Rng::new(0);
+        let v = Mat::from_fn(tiled.n(), tiled.k_width(), |_, _| rng.gaussian());
+        let flops = hv_flops(tiled.n(), tiled.d(), tiled.k_width());
+
+        b.run(
+            &format!("{config}/hv tiled t{} (rust)", tiled.threads()),
+            Some(flops),
+            || {
+                std::hint::black_box(tiled.hv(&v));
+            },
+        );
+
+        let mut tiled1 =
+            TiledOperator::with_options(&ds, s, m, TiledOptions { tile: 256, threads: 1 });
+        tiled1.set_hp(&hp);
+        b.run(&format!("{config}/hv tiled t1 (rust)"), Some(flops), || {
+            std::hint::black_box(tiled1.hv(&v));
+        });
+
+        let mut dense = DenseOperator::new(&ds, s, m);
+        dense.set_hp(&hp);
+        b.run(&format!("{config}/hv dense (rust)"), Some(flops), || {
+            std::hint::black_box(dense.hv(&v));
+        });
+    }
+}
+
+fn xla_backends() {
     common::skip_or(|| {
         let b = Bencher::default();
         for config in ["test", "pol", "protein"] {
             if !std::path::Path::new(&format!("artifacts/{config}/meta.txt")).exists() {
                 continue;
             }
-            let (mut op, ds) = common::load(config);
+            let (mut op, _ds) = common::load(config);
             let hp = Hyperparams {
                 ell: vec![1.0; op.d()],
                 sigf: 1.1,
@@ -25,9 +72,7 @@ fn main() {
             op.set_hp(&hp);
             let mut rng = Rng::new(0);
             let v = Mat::from_fn(op.n(), op.k_width(), |_, _| rng.gaussian());
-            // flops: K eval ~ n^2 (3d+6) + matmul 2 n^2 k
-            let n = op.n() as f64;
-            let flops = n * n * (3.0 * op.d() as f64 + 6.0 + 2.0 * op.k_width() as f64);
+            let flops = hv_flops(op.n(), op.d(), op.k_width());
 
             b.run(&format!("{config}/hv pallas (xla)"), Some(flops), || {
                 std::hint::black_box(op.hv(&v));
@@ -35,13 +80,11 @@ fn main() {
             b.run(&format!("{config}/hv jnp-ref (xla)"), Some(flops), || {
                 std::hint::black_box(op.hv_ref(&v));
             });
-            if op.n() <= 1024 {
-                let mut dense = DenseOperator::new(&ds, op.s(), op.m());
-                dense.set_hp(&hp);
-                b.run(&format!("{config}/hv dense (rust)"), Some(flops), || {
-                    std::hint::black_box(dense.hv(&v));
-                });
-            }
         }
     });
+}
+
+fn main() {
+    rust_backends();
+    xla_backends();
 }

@@ -1,17 +1,67 @@
 //! Per-solver epoch latency (the inner-loop unit of compute): one CG
 //! iteration vs one AP epoch vs one SGD epoch on the same system.
+//!
+//! Pure-Rust section (always runs) compares the dense and tiled backends;
+//! the XLA section needs `make artifacts`.
 
 mod common;
 
+use igp::data;
 use igp::estimator::{EstimatorKind, ProbeSet};
 use igp::kernels::Hyperparams;
 use igp::linalg::Mat;
-use igp::operators::KernelOperator;
+use igp::operators::{DenseOperator, KernelOperator, TiledOperator};
 use igp::solvers::{make_solver, SolveOptions, SolverKind};
 use igp::util::bench::Bencher;
 use igp::util::rng::Rng;
 
-fn main() {
+fn epoch_opts(block: usize) -> SolveOptions {
+    SolveOptions {
+        tolerance: 1e-16, // never converge: measure raw epochs
+        max_epochs: 1.0,
+        block_size: block,
+        sgd_lr: 8.0,
+        ..Default::default()
+    }
+}
+
+fn rust_backends() {
+    let b = Bencher::default();
+    for config in ["test", "protein"] {
+        let ds = data::generate(&data::spec(config).unwrap());
+        let hp = Hyperparams { ell: vec![1.0; ds.spec.d], sigf: 1.0, sigma: 0.3 };
+        let block = (ds.spec.n / 16).clamp(32, 256);
+
+        let mut tiled = TiledOperator::new(&ds, 8, 64);
+        tiled.set_hp(&hp);
+        let mut dense = DenseOperator::new(&ds, 8, 64);
+        dense.set_hp(&hp);
+
+        let mut rng = Rng::new(1);
+        let probes = ProbeSet::sample(EstimatorKind::Pathwise, &tiled, &mut rng);
+        let targets = probes.targets(&tiled, &ds.y_train);
+
+        for kind in [SolverKind::Cg, SolverKind::Ap, SolverKind::Sgd] {
+            let mut solver = make_solver(kind);
+            let opts = epoch_opts(block);
+            b.run(
+                &format!("{config}/{}-epoch tiled t{} (rust)", kind.name(), tiled.threads()),
+                None,
+                || {
+                    let mut v = Mat::zeros(tiled.n(), tiled.k_width());
+                    std::hint::black_box(solver.solve(&tiled, &targets, &mut v, &opts));
+                },
+            );
+            let mut solver = make_solver(kind);
+            b.run(&format!("{config}/{}-epoch dense (rust)", kind.name()), None, || {
+                let mut v = Mat::zeros(dense.n(), dense.k_width());
+                std::hint::black_box(solver.solve(&dense, &targets, &mut v, &opts));
+            });
+        }
+    }
+}
+
+fn xla_backends() {
     common::skip_or(|| {
         let b = Bencher::default();
         for config in ["test", "pol"] {
@@ -23,18 +73,17 @@ fn main() {
             let block = op.meta().b;
             for kind in [SolverKind::Cg, SolverKind::Ap, SolverKind::Sgd] {
                 let mut solver = make_solver(kind);
-                let opts = SolveOptions {
-                    tolerance: 1e-16, // never converge: measure raw epochs
-                    max_epochs: 1.0,
-                    block_size: block,
-                    sgd_lr: 8.0,
-                    ..Default::default()
-                };
-                b.run(&format!("{config}/{}-epoch", kind.name()), None, || {
+                let opts = epoch_opts(block);
+                b.run(&format!("{config}/{}-epoch (xla)", kind.name()), None, || {
                     let mut v = Mat::zeros(op.n(), op.k_width());
                     std::hint::black_box(solver.solve(&op, &targets, &mut v, &opts));
                 });
             }
         }
     });
+}
+
+fn main() {
+    rust_backends();
+    xla_backends();
 }

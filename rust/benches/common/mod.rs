@@ -1,12 +1,13 @@
 //! Shared bench setup: load a config's artifacts + dataset, skip when
-//! artifacts are missing (so `cargo bench` works on a fresh checkout).
+//! artifacts are missing or the `xla` feature is off (so `cargo bench`
+//! works on a fresh checkout and in default offline builds).
 
 use igp::data::{self, Dataset};
 use igp::operators::XlaOperator;
 use igp::runtime::Runtime;
 
 pub fn ready() -> bool {
-    std::path::Path::new("artifacts/test/meta.txt").exists()
+    cfg!(feature = "xla") && std::path::Path::new("artifacts/test/meta.txt").exists()
 }
 
 pub fn load(config: &str) -> (XlaOperator, Dataset) {
@@ -20,6 +21,6 @@ pub fn skip_or<F: FnOnce()>(f: F) {
     if ready() {
         f();
     } else {
-        println!("skipping benches: run `make artifacts` first");
+        println!("skipping xla benches: needs `make artifacts` and the `xla` cargo feature");
     }
 }

@@ -45,6 +45,20 @@ impl Parser {
         self.options.get(key).map(String::as_str)
     }
 
+    /// Typed option access with a readable error mentioning the flag name.
+    pub fn get_parsed<T: std::str::FromStr>(&self, key: &str) -> Result<Option<T>>
+    where
+        T::Err: std::fmt::Display,
+    {
+        match self.options.get(key) {
+            None => Ok(None),
+            Some(v) => match v.parse::<T>() {
+                Ok(t) => Ok(Some(t)),
+                Err(e) => bail!("option --{key}: cannot parse '{v}': {e}"),
+            },
+        }
+    }
+
     pub fn flag(&self, name: &str) -> bool {
         self.flags.iter().any(|f| f == name)
     }
@@ -75,5 +89,14 @@ mod tests {
     #[test]
     fn missing_value_errors() {
         assert!(Parser::new(&v(&["--steps"]), &["steps"]).is_err());
+    }
+
+    #[test]
+    fn get_parsed_typed_access() {
+        let p = Parser::new(&v(&["--steps", "30", "--lr=0.5"]), &["steps", "lr"]).unwrap();
+        assert_eq!(p.get_parsed::<usize>("steps").unwrap(), Some(30));
+        assert_eq!(p.get_parsed::<f64>("lr").unwrap(), Some(0.5));
+        assert_eq!(p.get_parsed::<usize>("absent").unwrap(), None);
+        assert!(p.get_parsed::<usize>("lr").is_err());
     }
 }

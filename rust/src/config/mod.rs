@@ -195,6 +195,16 @@ pub struct RunConfig {
     pub max_epochs: Option<usize>,
     pub seed: u64,
     pub artifacts_dir: String,
+    /// Compute backend: dense | tiled | xla.
+    pub backend: String,
+    /// Probe count s for the pure-Rust backends (xla takes it from meta).
+    pub probes: usize,
+    /// RFF feature pairs m for the pure-Rust backends.
+    pub rff: usize,
+    /// Tile edge for the tiled backend.
+    pub tile: usize,
+    /// Worker threads for the tiled backend (0 = auto).
+    pub threads: usize,
 }
 
 impl Default for RunConfig {
@@ -210,6 +220,11 @@ impl Default for RunConfig {
             max_epochs: None,
             seed: 0,
             artifacts_dir: "artifacts".into(),
+            backend: "tiled".into(),
+            probes: 16,
+            rff: 256,
+            tile: 256,
+            threads: 0,
         }
     }
 }
@@ -232,6 +247,11 @@ impl RunConfig {
                     "max_epochs" => rc.max_epochs = Some(v.as_int()? as usize),
                     "seed" => rc.seed = v.as_int()? as u64,
                     "artifacts_dir" => rc.artifacts_dir = v.as_str()?.to_string(),
+                    "backend" => rc.backend = v.as_str()?.to_string(),
+                    "probes" => rc.probes = v.as_int()? as usize,
+                    "rff" => rc.rff = v.as_int()? as usize,
+                    "tile" => rc.tile = v.as_int()? as usize,
+                    "threads" => rc.threads = v.as_int()? as usize,
                     other => bail!("unknown run config key '{other}'"),
                 }
             }
@@ -252,6 +272,17 @@ impl RunConfig {
         }
         if self.outer_steps == 0 {
             bail!("outer_steps must be positive");
+        }
+        // single source of truth for backend names
+        crate::operators::BackendKind::parse(&self.backend)?;
+        if self.probes == 0 {
+            bail!("probes must be positive");
+        }
+        if self.rff == 0 {
+            bail!("rff must be positive");
+        }
+        if self.tile == 0 {
+            bail!("tile must be positive");
         }
         Ok(())
     }
@@ -323,6 +354,31 @@ mod tests {
         assert_eq!(rc.estimator, "pathwise");
         assert!(rc.warm_start);
         assert_eq!(rc.max_epochs, Some(10));
+    }
+
+    #[test]
+    fn run_config_backend_selector() {
+        let doc = parse(
+            r#"
+            backend = "tiled"
+            tile = 128
+            threads = 4
+            probes = 8
+            rff = 64
+            "#,
+        )
+        .unwrap();
+        let rc = RunConfig::from_doc(&doc).unwrap();
+        assert_eq!(rc.backend, "tiled");
+        assert_eq!(rc.tile, 128);
+        assert_eq!(rc.threads, 4);
+        assert_eq!(rc.probes, 8);
+        assert_eq!(rc.rff, 64);
+
+        let bad = parse(r#"backend = "gpu""#).unwrap();
+        assert!(RunConfig::from_doc(&bad).is_err());
+        let zero_tile = parse(r#"tile = 0"#).unwrap();
+        assert!(RunConfig::from_doc(&zero_tile).is_err());
     }
 
     #[test]

@@ -14,16 +14,19 @@
 //!   system solvers (CG / AP / SGD) and epoch-based compute budgets.
 //!
 //! Python runs only at build time (`make artifacts`); the binary executes
-//! compiled artifacts through the PJRT C API (`xla` crate).
+//! compiled artifacts through the PJRT C API (`xla` crate, behind the `xla`
+//! cargo feature).  Two pure-Rust backends need no artifacts at all:
+//! [`operators::DenseOperator`] (O(n²) oracle) and the matrix-free,
+//! multi-threaded [`operators::TiledOperator`] (O(n·d) memory) — see
+//! [`operators`] for the backend matrix.
 //!
-//! ## Quick start
+//! ## Quick start (pure Rust, no artifacts required)
 //!
 //! ```no_run
 //! use igp::prelude::*;
 //!
 //! let data = igp::data::generate(&igp::data::spec("test").unwrap());
-//! let rt = igp::runtime::Runtime::cpu().unwrap();
-//! let model = rt.load_config("artifacts", "test").unwrap();
+//! let op = TiledOperator::new(&data, 16, 256); // s probes, m RFF pairs
 //! let mut trainer = Trainer::new(
 //!     TrainerOptions {
 //!         solver: SolverKind::Ap,
@@ -31,12 +34,17 @@
 //!         warm_start: true,
 //!         ..TrainerOptions::default()
 //!     },
-//!     Box::new(igp::operators::XlaOperator::new(model, &data)),
+//!     Box::new(op),
 //!     &data,
 //! );
 //! let outcome = trainer.run(30).unwrap();
 //! println!("final test llh = {:?}", outcome.final_metrics);
 //! ```
+//!
+//! With compiled artifacts (`make artifacts`), the `xla` crate vendored and
+//! the `xla` feature enabled (see `rust/README.md` — the feature alone does
+//! not supply the crate), swap the operator for
+//! `XlaOperator::new(rt.load_config("artifacts", "test")?, &data)`.
 
 pub mod config;
 pub mod coordinator;
@@ -58,7 +66,9 @@ pub mod prelude {
     pub use crate::estimator::EstimatorKind;
     pub use crate::kernels::{Hyperparams, KernelFamily};
     pub use crate::linalg::Mat;
-    pub use crate::operators::{DenseOperator, KernelOperator, XlaOperator};
+    pub use crate::operators::{
+        BackendKind, DenseOperator, KernelOperator, TiledOperator, TiledOptions, XlaOperator,
+    };
     pub use crate::solvers::{SolveOptions, SolverKind};
     pub use crate::util::rng::Rng;
 }

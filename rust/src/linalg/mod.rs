@@ -87,6 +87,14 @@ impl Mat {
 
     /// Matrix product self [m,k] * other [k,n] -> [m,n]; ikj loop order for
     /// cache-friendly access on row-major data.
+    ///
+    /// NOTE: the k-major accumulation order here is load-bearing beyond
+    /// performance — `TiledOperator::{k_cols, k_rows}` reproduce it exactly
+    /// so the backend-parity property tests
+    /// (`tests/proptest_invariants.rs::prop_solver_residuals_match_across_backends`)
+    /// can demand near-bitwise AP/SGD trajectory equality.  If you change
+    /// the accumulation order (blocking, SIMD reassociation), relax those
+    /// tests and the tiled implementations together.
     pub fn matmul(&self, other: &Mat) -> Mat {
         assert_eq!(self.cols, other.rows, "matmul shape mismatch");
         let (m, kk, n) = (self.rows, self.cols, other.cols);

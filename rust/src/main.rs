@@ -6,7 +6,7 @@ use anyhow::Result;
 use igp::config::RunConfig;
 use igp::coordinator::{Trainer, TrainerOptions};
 use igp::estimator::EstimatorKind;
-use igp::operators::XlaOperator;
+use igp::operators::{BackendKind, KernelOperator, TiledOptions, XlaOperator};
 use igp::solvers::SolverKind;
 use igp::util::logging;
 
@@ -55,12 +55,20 @@ fn print_help() {
 USAGE:
     igp train [--config FILE] [--dataset D] [--solver cg|ap|sgd]
               [--estimator standard|pathwise] [--warm-start]
+              [--backend dense|tiled|xla] [--tile N] [--threads N]
+              [--probes S] [--rff M]
               [--steps N] [--lr F] [--max-epochs N] [--seed N]
               [--artifacts DIR] [--out results.csv]
     igp exp <id|all> [--out DIR] [--splits N] [--steps N]
               ids: table1 table7 fig1 fig3 fig4 fig5 fig6 fig7 fig9 fig10
     igp list-datasets
     igp info <config>        # print an artifact config's meta
+
+BACKENDS:
+    tiled  (default) matrix-free multi-threaded CPU backend, O(n*d) memory;
+           knobs: --tile (block edge, default 256), --threads (0 = auto)
+    dense  pure-Rust oracle materialising H, O(n^2) memory (tiny n only)
+    xla    compiled PJRT artifacts (needs `make artifacts` + xla feature)
 "#
     );
 }
@@ -79,7 +87,8 @@ fn cmd_train(args: &[String]) -> Result<()> {
         args,
         &[
             "config", "dataset", "solver", "estimator", "steps", "lr", "max-epochs",
-            "seed", "artifacts", "out", "tolerance",
+            "seed", "artifacts", "out", "tolerance", "backend", "tile", "threads",
+            "probes", "rff",
         ],
     )?;
     let mut rc = match p.get("config") {
@@ -98,31 +107,60 @@ fn cmd_train(args: &[String]) -> Result<()> {
     if p.flag("warm-start") {
         rc.warm_start = true;
     }
-    if let Some(v) = p.get("steps") {
-        rc.outer_steps = v.parse()?;
+    if let Some(v) = p.get_parsed::<usize>("steps")? {
+        rc.outer_steps = v;
     }
-    if let Some(v) = p.get("lr") {
-        rc.lr = v.parse()?;
+    if let Some(v) = p.get_parsed::<f64>("lr")? {
+        rc.lr = v;
     }
-    if let Some(v) = p.get("tolerance") {
-        rc.tolerance = v.parse()?;
+    if let Some(v) = p.get_parsed::<f64>("tolerance")? {
+        rc.tolerance = v;
     }
-    if let Some(v) = p.get("max-epochs") {
-        rc.max_epochs = Some(v.parse()?);
+    if let Some(v) = p.get_parsed::<usize>("max-epochs")? {
+        rc.max_epochs = Some(v);
     }
-    if let Some(v) = p.get("seed") {
-        rc.seed = v.parse()?;
+    if let Some(v) = p.get_parsed::<u64>("seed")? {
+        rc.seed = v;
     }
     if let Some(v) = p.get("artifacts") {
         rc.artifacts_dir = v.to_string();
     }
+    if let Some(v) = p.get("backend") {
+        rc.backend = v.to_string();
+    }
+    if let Some(v) = p.get_parsed::<usize>("tile")? {
+        rc.tile = v;
+    }
+    if let Some(v) = p.get_parsed::<usize>("threads")? {
+        rc.threads = v;
+    }
+    if let Some(v) = p.get_parsed::<usize>("probes")? {
+        rc.probes = v;
+    }
+    if let Some(v) = p.get_parsed::<usize>("rff")? {
+        rc.rff = v;
+    }
     rc.validate()?;
 
     let ds = igp::data::generate(&igp::data::spec(&rc.dataset)?);
-    let rt = igp::runtime::Runtime::cpu()?;
-    igp::info!("PJRT platform: {}", rt.platform());
-    let model = rt.load_config(&rc.artifacts_dir, &rc.dataset)?;
-    let block = model.meta.b;
+    let backend = BackendKind::parse(&rc.backend)?;
+    let (op, block): (Box<dyn KernelOperator>, Option<usize>) = match backend {
+        BackendKind::Xla => {
+            let rt = igp::runtime::Runtime::cpu()?;
+            igp::info!("PJRT platform: {}", rt.platform());
+            let model = rt.load_config(&rc.artifacts_dir, &rc.dataset)?;
+            let b = model.meta.b;
+            (Box::new(XlaOperator::new(model, &ds)), Some(b))
+        }
+        kind => {
+            let topts = TiledOptions { tile: rc.tile, threads: rc.threads };
+            (
+                igp::operators::make_cpu_backend(kind, &ds, rc.probes, rc.rff, topts)?,
+                None,
+            )
+        }
+    };
+    igp::info!("backend: {}", backend.name());
     let opts = TrainerOptions {
         solver: SolverKind::parse(&rc.solver)?,
         estimator: EstimatorKind::parse(&rc.estimator)?,
@@ -130,18 +168,17 @@ fn cmd_train(args: &[String]) -> Result<()> {
         lr: rc.lr,
         tolerance: rc.tolerance,
         max_epochs: rc.max_epochs.map(|e| e as f64),
-        block_size: Some(block),
+        block_size: block,
         seed: rc.seed,
         predict_every: Some(10),
         ..Default::default()
     };
-    let op = XlaOperator::new(model, &ds);
-    let mut trainer = Trainer::new(opts, Box::new(op), &ds);
+    let mut trainer = Trainer::new(opts, op, &ds);
     let out = trainer.run(rc.outer_steps)?;
 
     println!(
-        "dataset={} solver={} estimator={} warm={} steps={}",
-        rc.dataset, rc.solver, rc.estimator, rc.warm_start, rc.outer_steps
+        "dataset={} solver={} estimator={} warm={} backend={} steps={}",
+        rc.dataset, rc.solver, rc.estimator, rc.warm_start, rc.backend, rc.outer_steps
     );
     println!(
         "total {:.2}s (solver {:.2}s, {:.1} epochs) final rmse={:.4} llh={:.4}",

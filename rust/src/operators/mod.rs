@@ -1,18 +1,85 @@
-//! The boundary between the Rust coordinator (L3) and the compiled compute
-//! graph (L2/L1): every O(n^2) product the solvers and estimators need is
-//! behind [`KernelOperator`].
+//! The boundary between the Rust coordinator (L3) and the compute backends:
+//! every O(n^2) product the solvers and estimators need is behind
+//! [`KernelOperator`].
 //!
-//! Two implementations:
-//! * [`DenseOperator`] — pure Rust, materialises H; the test oracle and the
+//! Three implementations (select with [`BackendKind`] / `--backend`):
+//!
+//! * [`DenseOperator`] — pure Rust, materialises the full n×n matrix H
+//!   (O(n²) memory, rebuilt on every `set_hp`).  The test oracle and the
 //!   backend for tiny problems.  Lives here.
-//! * [`XlaOperator`] — executes the AOT artifacts through PJRT; the
-//!   production path.  Lives in `runtime::xla_op`, re-exported here.
+//! * [`TiledOperator`] — pure Rust, **matrix-free**: kernel tiles are
+//!   evaluated on the fly (O(n·d) memory) and tile loops run on a
+//!   multi-threaded worker pool.  The CPU path for n where dense storage
+//!   is impossible.  Lives in `tiled`.
+//! * [`XlaOperator`] — executes AOT Pallas artifacts through PJRT; the
+//!   accelerator path.  Lives in `runtime::xla_op`, re-exported here, and
+//!   requires the `xla` cargo feature plus compiled artifacts.
+//!
+//! Memory/knob summary:
+//!
+//! | backend | memory   | `set_hp` | parallelism        | knobs              |
+//! |---------|----------|----------|--------------------|--------------------|
+//! | dense   | O(n²)    | O(n²)    | single-threaded    | —                  |
+//! | tiled   | O(n·d)¹  | O(1)     | `threads` workers  | `tile`, `threads`  |
+//! | xla     | device   | O(1)     | XLA-managed        | artifact shapes    |
+//!
+//! ¹ resident state; `hv` additionally allocates O(threads·n·(s+1))
+//!   *transient* per-worker scratch for its symmetric tile reduction.
+
+pub mod tiled;
 
 use crate::data::Dataset;
 use crate::kernels::{self, Hyperparams, KernelFamily};
 use crate::linalg::Mat;
 
 pub use crate::runtime::xla_op::XlaOperator;
+pub use tiled::{TiledOperator, TiledOptions};
+
+/// Which [`KernelOperator`] implementation to run against.
+#[derive(Copy, Clone, Debug, PartialEq, Eq)]
+pub enum BackendKind {
+    Dense,
+    Tiled,
+    Xla,
+}
+
+impl BackendKind {
+    pub fn parse(s: &str) -> anyhow::Result<Self> {
+        Ok(match s {
+            "dense" => BackendKind::Dense,
+            "tiled" => BackendKind::Tiled,
+            "xla" => BackendKind::Xla,
+            other => anyhow::bail!("unknown backend '{other}' (dense|tiled|xla)"),
+        })
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            BackendKind::Dense => "dense",
+            BackendKind::Tiled => "tiled",
+            BackendKind::Xla => "xla",
+        }
+    }
+}
+
+/// Construct a pure-Rust backend for a dataset (`Dense` or `Tiled`; the
+/// `Xla` backend needs a compiled [`crate::runtime::Model`] and is built by
+/// the caller).  `s` = probe count, `m` = RFF feature pairs.
+pub fn make_cpu_backend(
+    kind: BackendKind,
+    ds: &Dataset,
+    s: usize,
+    m: usize,
+    opts: TiledOptions,
+) -> anyhow::Result<Box<dyn KernelOperator>> {
+    Ok(match kind {
+        BackendKind::Dense => Box::new(DenseOperator::new(ds, s, m)),
+        BackendKind::Tiled => Box::new(TiledOperator::with_options(ds, s, m, opts)),
+        BackendKind::Xla => anyhow::bail!(
+            "backend 'xla' needs compiled artifacts; construct XlaOperator from a runtime Model"
+        ),
+    })
+}
 
 /// Everything L3 needs from the model, independent of backend.
 ///
@@ -73,17 +140,57 @@ pub fn rff_features(x: &Mat, omega0: &Mat, hp: &Hyperparams) -> Mat {
     let amp = hp.sigf * (1.0 / m as f64).sqrt();
     let mut phi = Mat::zeros(n, 2 * m);
     for i in 0..n {
-        let xi = x.row(i);
-        for c in 0..m {
-            let mut z = 0.0;
-            for r in 0..d {
-                z += xi[r] / hp.ell[r] * omega0[(r, c)];
-            }
-            phi[(i, c)] = amp * z.cos();
-            phi[(i, m + c)] = amp * z.sin();
-        }
+        let row = &mut phi.data[i * 2 * m..(i + 1) * 2 * m];
+        rff_fill_row(x.row(i), omega0, &hp.ell, amp, row);
     }
     phi
+}
+
+/// `a` with column q scaled by `w[q]` — the A·diag(w) factor shared by the
+/// dense and tiled `grad_quad` implementations.
+pub(crate) fn weighted_cols(a: &Mat, w: &[f64]) -> Mat {
+    let mut aw = a.clone();
+    for i in 0..aw.rows {
+        let row = aw.row_mut(i);
+        for (q, &wq) in w.iter().enumerate() {
+            row[q] *= wq;
+        }
+    }
+    aw
+}
+
+/// Noise component of `grad_quad`: 2 sigma sum_q w_q <a_q, b_q>.  Single
+/// source for both backends so the formula cannot drift between them.
+pub(crate) fn noise_grad(a: &Mat, b: &Mat, w: &[f64], sigma: f64) -> f64 {
+    let mut dot_sum = 0.0;
+    for (q, &wq) in w.iter().enumerate() {
+        let mut dq = 0.0;
+        for i in 0..a.rows {
+            dq += a[(i, q)] * b[(i, q)];
+        }
+        dot_sum += wq * dq;
+    }
+    2.0 * sigma * dot_sum
+}
+
+/// One row of the RFF feature map: `phi[..2m] = amp [cos(z_c), sin(z_c)]`
+/// with `z_c = sum_r x_r / ell_r * omega0[r, c]`.
+///
+/// The single source of the feature formula for `rff_features` and the
+/// tiled backend's `rff_eval`/`predict` — the loop order here is
+/// load-bearing: tiled↔dense parity tests require bitwise-identical values.
+pub(crate) fn rff_fill_row(xi: &[f64], omega0: &Mat, ell: &[f64], amp: f64, phi: &mut [f64]) {
+    let m = omega0.cols;
+    debug_assert_eq!(omega0.rows, xi.len());
+    debug_assert_eq!(phi.len(), 2 * m);
+    for c in 0..m {
+        let mut z = 0.0;
+        for r in 0..xi.len() {
+            z += xi[r] / ell[r] * omega0[(r, c)];
+        }
+        phi[c] = amp * z.cos();
+        phi[m + c] = amp * z.sin();
+    }
 }
 
 // ---------------------------------------------------------------------------
@@ -179,13 +286,7 @@ impl KernelOperator for DenseOperator {
         assert_eq!(a.cols, b.cols);
         assert_eq!(w.len(), a.cols);
         // C_ij = sum_q w_q a_iq b_jq
-        let mut aw = a.clone();
-        for i in 0..n {
-            let row = aw.row_mut(i);
-            for (q, &wq) in w.iter().enumerate() {
-                row[q] *= wq;
-            }
-        }
+        let aw = weighted_cols(a, w);
         let c = aw.matmul(&b.transpose()); // [n, n]
         let sf2 = self.hp.sigf * self.hp.sigf;
         let mut grad = vec![0.0; d + 2];
@@ -204,16 +305,7 @@ impl KernelOperator for DenseOperator {
                 grad[d] += cij * 2.0 * sf2 * self.family.unit_cov(sq) / self.hp.sigf;
             }
         }
-        // noise: 2 sigma sum_q w_q <a_q, b_q>
-        let mut dot_sum = 0.0;
-        for (q, &wq) in w.iter().enumerate() {
-            let mut dq = 0.0;
-            for i in 0..n {
-                dq += a[(i, q)] * b[(i, q)];
-            }
-            dot_sum += wq * dq;
-        }
-        grad[d + 1] = 2.0 * self.hp.sigma * dot_sum;
+        grad[d + 1] = noise_grad(a, b, w, self.hp.sigma);
         grad
     }
 

@@ -1,0 +1,593 @@
+//! [`TiledOperator`]: a matrix-free, cache-blocked, multi-threaded pure-Rust
+//! backend for [`KernelOperator`](super::KernelOperator).
+//!
+//! Unlike [`DenseOperator`](super::DenseOperator), which materialises the
+//! full n×n matrix H (O(n²) memory, rebuilt on every `set_hp`), this backend
+//! stores only the inputs and hyperparameters — **O(n·d) memory** — and
+//! evaluates kernel *tiles* of configurable size on the fly inside every
+//! product.  Tile loops are distributed over a scoped `std::thread` worker
+//! pool (see [`crate::util::parallel`]) with deterministic task assignment,
+//! so results are reproducible for a fixed thread count.
+//!
+//! Cost model per call (t = tile size, T = threads, k = s+1):
+//! * `hv`      — (n²/2 + n·t/2) kernel evals (symmetry halves the off-
+//!   diagonal tiles) + O(n²k/T) flops, O(T·n·k) scratch.
+//! * `k_cols`/`k_rows` — O(n·b·d / T), no scratch beyond the output.
+//! * `grad_quad` — O(n²·(d + k) / T), O(T·d) scratch.
+//! * `rff_eval`/`predict` — row-parallel, O(n·m·d / T).
+//!
+//! `set_hp` is O(1) (nothing is cached), which is exactly what the outer
+//! hyperparameter loop wants at large n.
+
+use crate::data::Dataset;
+use crate::kernels::{self, Hyperparams, KernelFamily};
+use crate::linalg::Mat;
+use crate::util::parallel::{num_threads, parallel_reduce, parallel_row_blocks};
+use crate::util::stats;
+
+use super::{dl_weight, rff_fill_row, KernelOperator};
+
+/// Tuning knobs for the tiled backend.
+#[derive(Clone, Debug)]
+pub struct TiledOptions {
+    /// Tile edge length (rows/cols of one on-the-fly kernel block).
+    /// 256 keeps a f64 tile (512 KB) inside typical L2 caches.
+    pub tile: usize,
+    /// Worker threads; 0 = auto (`IGP_THREADS` env var, else all cores).
+    pub threads: usize,
+}
+
+impl Default for TiledOptions {
+    fn default() -> Self {
+        TiledOptions { tile: 256, threads: 0 }
+    }
+}
+
+/// Matrix-free multi-threaded kernel operator (O(n·d) memory).
+pub struct TiledOperator {
+    x: Mat,
+    x_test: Mat,
+    s: usize,
+    m: usize,
+    family: KernelFamily,
+    hp: Hyperparams,
+    tile: usize,
+    threads: usize,
+}
+
+impl TiledOperator {
+    /// Build with default tile/thread options.
+    pub fn new(ds: &Dataset, s: usize, m: usize) -> Self {
+        Self::with_options(ds, s, m, TiledOptions::default())
+    }
+
+    pub fn with_options(ds: &Dataset, s: usize, m: usize, opts: TiledOptions) -> Self {
+        TiledOperator {
+            x: ds.x_train.clone(),
+            x_test: ds.x_test.clone(),
+            s,
+            m,
+            family: ds.spec.family,
+            hp: Hyperparams::ones(ds.spec.d),
+            tile: opts.tile.max(1),
+            threads: num_threads(if opts.threads == 0 { None } else { Some(opts.threads) }),
+        }
+    }
+
+    pub fn tile_size(&self) -> usize {
+        self.tile
+    }
+
+    pub fn threads(&self) -> usize {
+        self.threads
+    }
+
+    /// Number of row/col tiles covering n points.
+    fn ntiles(&self) -> usize {
+        let n = self.x.rows;
+        (n + self.tile - 1) / self.tile
+    }
+
+    /// Row range of tile `b`.
+    fn tile_range(&self, b: usize) -> (usize, usize) {
+        let n = self.x.rows;
+        (b * self.tile, ((b + 1) * self.tile).min(n))
+    }
+}
+
+impl KernelOperator for TiledOperator {
+    fn n(&self) -> usize {
+        self.x.rows
+    }
+    fn d(&self) -> usize {
+        self.x.cols
+    }
+    fn s(&self) -> usize {
+        self.s
+    }
+    fn m(&self) -> usize {
+        self.m
+    }
+    fn family(&self) -> KernelFamily {
+        self.family
+    }
+    fn x(&self) -> &Mat {
+        &self.x
+    }
+    fn x_test(&self) -> &Mat {
+        &self.x_test
+    }
+    fn hp(&self) -> &Hyperparams {
+        &self.hp
+    }
+
+    fn set_hp(&mut self, hp: &Hyperparams) {
+        assert_eq!(hp.ell.len(), self.d());
+        self.hp = hp.clone();
+    }
+
+    /// H @ V without materialising H: walk the upper-triangular tile pairs
+    /// (symmetry halves the kernel evaluations), each worker accumulating
+    /// into a private [n, k] buffer, reduced in worker order.  One task =
+    /// one tile *pair*, derived from the task index in O(1) by
+    /// [`pair_from_index`] — fine-grained enough to stay balanced even when
+    /// the tile count is close to the worker count, with no pair list
+    /// allocated.
+    ///
+    /// Mirror writes make worker buffers unavoidable here, so *transient*
+    /// scratch is O(threads · n · k) on top of the operator's resident
+    /// O(n·d); a future sharding PR that needs n beyond ~10^5 on many-core
+    /// boxes should trade the symmetry saving for a row-disjoint partition.
+    fn hv(&self, v: &Mat) -> Mat {
+        let n = self.n();
+        assert_eq!(v.rows, n);
+        let k = v.cols;
+        let nb = self.ntiles();
+        let noise_var = self.hp.noise_var();
+        let partials = parallel_reduce(
+            nb * (nb + 1) / 2,
+            self.threads,
+            || Mat::zeros(n, k),
+            |acc, p| {
+                {
+                    let (bi, bj) = pair_from_index(p, nb);
+                    let (i0, i1) = self.tile_range(bi);
+                    let (j0, j1) = self.tile_range(bj);
+                    if bi == bj {
+                    // diagonal tile: cover (i, j>=i) and mirror; add the
+                    // sigma^2 I contribution on the diagonal itself
+                    for i in i0..i1 {
+                        let xi = self.x.row(i);
+                        for j in i..j1 {
+                            let kij =
+                                kernels::kval(xi, self.x.row(j), &self.hp, self.family);
+                            let vj = &v.data[j * k..(j + 1) * k];
+                            let ai = &mut acc.data[i * k..(i + 1) * k];
+                            if i == j {
+                                let h = kij + noise_var;
+                                for q in 0..k {
+                                    ai[q] += h * vj[q];
+                                }
+                            } else {
+                                for q in 0..k {
+                                    ai[q] += kij * vj[q];
+                                }
+                                let vi = &v.data[i * k..(i + 1) * k];
+                                let aj = &mut acc.data[j * k..(j + 1) * k];
+                                for q in 0..k {
+                                    aj[q] += kij * vi[q];
+                                }
+                            }
+                        }
+                    }
+                } else {
+                    // off-diagonal tile: evaluate once, apply K and K^T
+                    for i in i0..i1 {
+                        let xi = self.x.row(i);
+                        for j in j0..j1 {
+                            let kij =
+                                kernels::kval(xi, self.x.row(j), &self.hp, self.family);
+                            let vj = &v.data[j * k..(j + 1) * k];
+                            let ai = &mut acc.data[i * k..(i + 1) * k];
+                            for q in 0..k {
+                                ai[q] += kij * vj[q];
+                            }
+                            let vi = &v.data[i * k..(i + 1) * k];
+                            let aj = &mut acc.data[j * k..(j + 1) * k];
+                            for q in 0..k {
+                                aj[q] += kij * vi[q];
+                            }
+                        }
+                    }
+                    }
+                }
+            },
+        );
+        let mut out = Mat::zeros(n, k);
+        for p in &partials {
+            out.add_assign(p);
+        }
+        out
+    }
+
+    /// K(X, X[idx]) @ U, row-parallel over tiles of X (the sigma^2 scatter
+    /// on `idx` rows is applied by the caller, as with the other backends).
+    ///
+    /// The b-major inner accumulation mirrors `Mat::matmul`'s ikj order on
+    /// purpose: AP trajectories must match the dense backend near-bitwise
+    /// (see the note on `Mat::matmul` and the backend-parity proptests).
+    fn k_cols(&self, idx: &[usize], u: &Mat) -> Mat {
+        assert_eq!(u.rows, idx.len());
+        let n = self.n();
+        let k = u.cols;
+        let xb = self.x.gather_rows(idx);
+        let mut out = Mat::zeros(n, k);
+        parallel_row_blocks(&mut out.data, k, self.tile, self.threads, |r0, rows, block| {
+            for r in 0..rows {
+                let i = r0 + r;
+                let xi = self.x.row(i);
+                let orow = &mut block[r * k..(r + 1) * k];
+                for b in 0..xb.rows {
+                    let kib = kernels::kval(xi, xb.row(b), &self.hp, self.family);
+                    let urow = u.row(b);
+                    for q in 0..k {
+                        orow[q] += kib * urow[q];
+                    }
+                }
+            }
+        });
+        out
+    }
+
+    /// K(X[idx], X) @ V, parallel over the (small) batch rows.
+    ///
+    /// j-major inner accumulation mirrors `Mat::matmul` so SGD trajectories
+    /// match the dense backend near-bitwise (see `Mat::matmul`'s note).
+    fn k_rows(&self, idx: &[usize], v: &Mat) -> Mat {
+        let n = self.n();
+        assert_eq!(v.rows, n);
+        let k = v.cols;
+        let xa = self.x.gather_rows(idx);
+        let mut out = Mat::zeros(idx.len(), k);
+        let rows_total = idx.len().max(1);
+        let block = (rows_total + self.threads - 1) / self.threads;
+        parallel_row_blocks(&mut out.data, k, block, self.threads, |r0, rows, blk| {
+            for r in 0..rows {
+                let xi = xa.row(r0 + r);
+                let orow = &mut blk[r * k..(r + 1) * k];
+                for j in 0..n {
+                    let kij = kernels::kval(xi, self.x.row(j), &self.hp, self.family);
+                    let vrow = v.row(j);
+                    for q in 0..k {
+                        orow[q] += kij * vrow[q];
+                    }
+                }
+            }
+        });
+        out
+    }
+
+    /// sum_j w_j a_j^T (dH/dtheta) b_j, tiled over (i, j) pairs with the
+    /// weighted coefficient C_ij = sum_q w_q a_iq b_jq formed on the fly —
+    /// O(1) extra memory per worker instead of DenseOperator's O(n²) C.
+    fn grad_quad(&self, a: &Mat, b: &Mat, w: &[f64]) -> Vec<f64> {
+        let (n, d) = (self.n(), self.d());
+        assert_eq!(a.rows, n);
+        assert_eq!(b.rows, n);
+        assert_eq!(a.cols, b.cols);
+        assert_eq!(w.len(), a.cols);
+        let k = a.cols;
+        // aw = a * diag(w), precomputed once (O(n k))
+        let aw = super::weighted_cols(a, w);
+        let nb = self.ntiles();
+        let sf2 = self.hp.sigf * self.hp.sigf;
+        let partials = parallel_reduce(
+            nb * nb,
+            self.threads,
+            || vec![0.0; d + 2],
+            |grad, p| {
+                let (bi, bj) = (p / nb, p % nb);
+                let (i0, i1) = self.tile_range(bi);
+                let (j0, j1) = self.tile_range(bj);
+                for i in i0..i1 {
+                    let awi = &aw.data[i * k..(i + 1) * k];
+                    let xi = self.x.row(i);
+                    for j in j0..j1 {
+                        let bj_row = &b.data[j * k..(j + 1) * k];
+                        let cij = stats::dot(awi, bj_row);
+                        if cij == 0.0 {
+                            continue;
+                        }
+                        let xj = self.x.row(j);
+                        let sq = kernels::sqdist_scaled(xi, xj, &self.hp.ell);
+                        let h_r = dl_weight(sq, self.family);
+                        for kk in 0..d {
+                            let dlt = (xi[kk] - xj[kk]) / self.hp.ell[kk];
+                            grad[kk] += cij * sf2 * h_r * dlt * dlt / self.hp.ell[kk];
+                        }
+                        grad[d] += cij * 2.0 * sf2 * self.family.unit_cov(sq) / self.hp.sigf;
+                    }
+                }
+            },
+        );
+        let mut grad = vec![0.0; d + 2];
+        for p in &partials {
+            for (g, v) in grad.iter_mut().zip(p) {
+                *g += v;
+            }
+        }
+        // noise component: shared single-source formula with the dense path
+        grad[d + 1] = super::noise_grad(a, b, w, self.hp.sigma);
+        grad
+    }
+
+    /// Xi = Phi(X) wts + sigma * noise, row-parallel with a per-worker
+    /// feature-row scratch (never materialises the full [n, 2m] Phi).
+    fn rff_eval(&self, omega0: &Mat, wts: &Mat, noise: &Mat) -> Mat {
+        let n = self.n();
+        let d = self.d();
+        assert_eq!(omega0.rows, d);
+        let m = omega0.cols;
+        assert_eq!(wts.rows, 2 * m);
+        let s = wts.cols;
+        assert_eq!((noise.rows, noise.cols), (n, s));
+        let amp = self.hp.sigf * (1.0 / m as f64).sqrt();
+        let sigma = self.hp.sigma;
+        let mut out = Mat::zeros(n, s);
+        parallel_row_blocks(&mut out.data, s, self.tile, self.threads, |r0, rows, block| {
+            let mut phi = vec![0.0; 2 * m];
+            for r in 0..rows {
+                let i = r0 + r;
+                let xi = self.x.row(i);
+                rff_fill_row(xi, omega0, &self.hp.ell, amp, &mut phi);
+                let orow = &mut block[r * s..(r + 1) * s];
+                for (c, &pc) in phi.iter().enumerate() {
+                    if pc == 0.0 {
+                        continue;
+                    }
+                    let wrow = wts.row(c);
+                    for q in 0..s {
+                        orow[q] += pc * wrow[q];
+                    }
+                }
+                let nrow = noise.row(i);
+                for q in 0..s {
+                    orow[q] += sigma * nrow[q];
+                }
+            }
+        });
+        out
+    }
+
+    /// Pathwise-conditioned predictions, row-parallel over the test points
+    /// with per-worker K(X_t_i, X) row and Phi(x_t_i) scratch buffers.
+    fn predict(&self, vy: &[f64], zhat: &Mat, omega0: &Mat, wts: &Mat) -> (Vec<f64>, Mat) {
+        let n = self.n();
+        let d = self.d();
+        let tn = self.x_test.rows;
+        assert_eq!(vy.len(), n);
+        assert_eq!(zhat.rows, n);
+        assert_eq!(omega0.rows, d);
+        let m = omega0.cols;
+        assert_eq!(wts.rows, 2 * m);
+        let s = wts.cols;
+        assert_eq!(zhat.cols, s);
+        let amp = self.hp.sigf * (1.0 / m as f64).sqrt();
+        // packed output: column 0 = mean, columns 1..=s = samples
+        let width = 1 + s;
+        let mut packed = Mat::zeros(tn, width);
+        parallel_row_blocks(
+            &mut packed.data,
+            width,
+            self.tile,
+            self.threads,
+            |r0, rows, block| {
+                let mut krow = vec![0.0; n];
+                let mut phi = vec![0.0; 2 * m];
+                for r in 0..rows {
+                    let i = r0 + r;
+                    let xt = self.x_test.row(i);
+                    for j in 0..n {
+                        krow[j] = kernels::kval(xt, self.x.row(j), &self.hp, self.family);
+                    }
+                    let orow = &mut block[r * width..(r + 1) * width];
+                    orow[0] = stats::dot(&krow, vy);
+                    rff_fill_row(xt, omega0, &self.hp.ell, amp, &mut phi);
+                    let srow = &mut orow[1..];
+                    for (c, &pc) in phi.iter().enumerate() {
+                        if pc == 0.0 {
+                            continue;
+                        }
+                        let wrow = wts.row(c);
+                        for q in 0..s {
+                            srow[q] += pc * wrow[q];
+                        }
+                    }
+                    // + K(Xt, X) (vy - zhat)
+                    for j in 0..n {
+                        let kj = krow[j];
+                        if kj == 0.0 {
+                            continue;
+                        }
+                        let zr = zhat.row(j);
+                        for q in 0..s {
+                            srow[q] += kj * (vy[j] - zr[q]);
+                        }
+                    }
+                }
+            },
+        );
+        let mut mean = Vec::with_capacity(tn);
+        let mut samples = Mat::zeros(tn, s);
+        for i in 0..tn {
+            let prow = packed.row(i);
+            mean.push(prow[0]);
+            samples.row_mut(i).copy_from_slice(&prow[1..]);
+        }
+        (mean, samples)
+    }
+
+    /// Exact MLL via the O(n³) Cholesky baseline — only sane at small n,
+    /// exactly like `DenseOperator` (callers gate via `track_exact`).
+    fn exact_mll(&self, y: &[f64]) -> Option<(f64, Vec<f64>)> {
+        let gp = crate::gp::ExactGp::fit(&self.x, y, &self.hp, self.family).ok()?;
+        Some((gp.mll(y), gp.mll_grad()))
+    }
+}
+
+/// O(1) inverse of the row-major upper-triangular pair enumeration used by
+/// `hv`: task index `p` (over nb*(nb+1)/2 pairs) maps to the tile pair
+/// (bi, bj) with bi <= bj < nb.  The float initial guess is corrected by
+/// integer guard loops, so the mapping is exact for any nb.
+fn pair_from_index(p: usize, nb: usize) -> (usize, usize) {
+    // pairs in rows before row r: cum(r) = r*nb - r(r-1)/2
+    let cum = |r: usize| r * (2 * nb - r + 1) / 2;
+    let nbf = (2 * nb + 1) as f64;
+    let disc = nbf * nbf - 8.0 * p as f64;
+    let mut bi = ((nbf - disc.sqrt()) * 0.5) as usize;
+    while cum(bi + 1) <= p {
+        bi += 1;
+    }
+    while bi > 0 && cum(bi) > p {
+        bi -= 1;
+    }
+    (bi, bi + (p - cum(bi)))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data;
+    use crate::operators::DenseOperator;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn pair_index_inverse_is_exact() {
+        for nb in 1..=64 {
+            let mut p = 0usize;
+            for bi in 0..nb {
+                for bj in bi..nb {
+                    assert_eq!(pair_from_index(p, nb), (bi, bj), "p={p} nb={nb}");
+                    p += 1;
+                }
+            }
+            assert_eq!(p, nb * (nb + 1) / 2);
+        }
+    }
+
+    fn ops(tile: usize, threads: usize) -> (TiledOperator, DenseOperator) {
+        let ds = data::generate(&data::spec("test").unwrap());
+        let hp = Hyperparams { ell: vec![0.9, 1.2, 0.7, 1.1], sigf: 1.2, sigma: 0.35 };
+        let mut tiled =
+            TiledOperator::with_options(&ds, 4, 16, TiledOptions { tile, threads });
+        tiled.set_hp(&hp);
+        let mut dense = DenseOperator::new(&ds, 4, 16);
+        dense.set_hp(&hp);
+        (tiled, dense)
+    }
+
+    #[test]
+    fn hv_matches_dense_across_tiles_and_threads() {
+        for (tile, threads) in [(1, 1), (7, 2), (64, 3), (256, 4), (1000, 2)] {
+            let (tiled, dense) = ops(tile, threads);
+            let mut rng = Rng::new(0);
+            let v = Mat::from_fn(tiled.n(), tiled.k_width(), |_, _| rng.gaussian());
+            let a = tiled.hv(&v);
+            let b = dense.hv(&v);
+            let err = a.max_abs_diff(&b);
+            assert!(err < 1e-10, "tile={tile} threads={threads}: {err}");
+        }
+    }
+
+    #[test]
+    fn hv_is_deterministic() {
+        let (tiled, _) = ops(33, 4);
+        let mut rng = Rng::new(1);
+        let v = Mat::from_fn(tiled.n(), tiled.k_width(), |_, _| rng.gaussian());
+        let a = tiled.hv(&v);
+        let b = tiled.hv(&v);
+        assert_eq!(a, b, "hv must be bit-deterministic for a fixed thread count");
+    }
+
+    #[test]
+    fn set_hp_is_matrix_free() {
+        // set_hp must not allocate O(n^2): just verify repeated set_hp with
+        // alternating hp changes hv output accordingly.
+        let (mut tiled, mut dense) = ops(64, 2);
+        let mut rng = Rng::new(2);
+        let v = Mat::from_fn(tiled.n(), tiled.k_width(), |_, _| rng.gaussian());
+        for sigma in [0.1, 0.5, 0.9] {
+            let hp = Hyperparams { ell: vec![1.0; 4], sigf: 1.0, sigma };
+            tiled.set_hp(&hp);
+            dense.set_hp(&hp);
+            assert!(tiled.hv(&v).max_abs_diff(&dense.hv(&v)) < 1e-10);
+        }
+    }
+
+    #[test]
+    fn k_cols_and_rows_match_dense() {
+        let (tiled, dense) = ops(50, 3);
+        let mut rng = Rng::new(3);
+        let idx = rng.sample_indices(tiled.n(), 32);
+        let u = Mat::from_fn(idx.len(), tiled.k_width(), |_, _| rng.gaussian());
+        let err = tiled.k_cols(&idx, &u).max_abs_diff(&dense.k_cols(&idx, &u));
+        assert!(err < 1e-10, "k_cols err {err}");
+        let v = Mat::from_fn(tiled.n(), tiled.k_width(), |_, _| rng.gaussian());
+        let err = tiled.k_rows(&idx, &v).max_abs_diff(&dense.k_rows(&idx, &v));
+        assert!(err < 1e-10, "k_rows err {err}");
+    }
+
+    #[test]
+    fn grad_quad_matches_dense() {
+        let (tiled, dense) = ops(48, 4);
+        let mut rng = Rng::new(4);
+        let k = tiled.k_width();
+        let a = Mat::from_fn(tiled.n(), k, |_, _| rng.gaussian());
+        let b = Mat::from_fn(tiled.n(), k, |_, _| rng.gaussian());
+        let mut w = vec![-0.125; k];
+        w[0] = 0.5;
+        let g1 = tiled.grad_quad(&a, &b, &w);
+        let g2 = dense.grad_quad(&a, &b, &w);
+        for (i, (x, y)) in g1.iter().zip(&g2).enumerate() {
+            assert!(
+                (x - y).abs() < 1e-10 * (1.0 + y.abs()),
+                "comp {i}: {x} vs {y}"
+            );
+        }
+    }
+
+    #[test]
+    fn rff_and_predict_match_dense() {
+        let (tiled, dense) = ops(40, 2);
+        let mut rng = Rng::new(5);
+        let (d, m, s, n) = (tiled.d(), 8, 3, tiled.n());
+        let omega0 = Mat::from_fn(d, m, |_, _| rng.gaussian());
+        let wts = Mat::from_fn(2 * m, s, |_, _| rng.gaussian());
+        let noise = Mat::from_fn(n, s, |_, _| rng.gaussian());
+        let e = tiled
+            .rff_eval(&omega0, &wts, &noise)
+            .max_abs_diff(&dense.rff_eval(&omega0, &wts, &noise));
+        assert!(e < 1e-12, "rff_eval err {e}");
+
+        let vy = rng.gaussian_vec(n);
+        let zhat = Mat::from_fn(n, s, |_, _| rng.gaussian());
+        let (m1, s1) = tiled.predict(&vy, &zhat, &omega0, &wts);
+        let (m2, s2) = dense.predict(&vy, &zhat, &omega0, &wts);
+        for (a, b) in m1.iter().zip(&m2) {
+            assert!((a - b).abs() < 1e-10);
+        }
+        assert!(s1.max_abs_diff(&s2) < 1e-10, "{}", s1.max_abs_diff(&s2));
+    }
+
+    #[test]
+    fn exact_mll_matches_dense() {
+        let (tiled, dense) = ops(64, 2);
+        let ds = data::generate(&data::spec("test").unwrap());
+        let (l1, g1) = tiled.exact_mll(&ds.y_train).unwrap();
+        let (l2, g2) = dense.exact_mll(&ds.y_train).unwrap();
+        assert!((l1 - l2).abs() < 1e-9);
+        for (a, b) in g1.iter().zip(&g2) {
+            assert!((a - b).abs() < 1e-9);
+        }
+    }
+}

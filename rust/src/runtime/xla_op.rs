@@ -4,189 +4,306 @@
 //! per-call traffic is the solver state (O(n k) doubles) uploaded through
 //! caller-managed `PjRtBuffer`s — the literal-argument `execute` path of
 //! this xla_extension build leaks its argument buffers (see Model::call_b).
+//!
+//! Gated behind the `xla` cargo feature (the `xla` crate is unavailable
+//! offline).  Without the feature a stub with the same API compiles; it can
+//! never be reached at run time because `Runtime::load_config` (the only
+//! source of a `Model`) fails first.
 
-use anyhow::Result;
+#[cfg(feature = "xla")]
+pub use real::XlaOperator;
+#[cfg(not(feature = "xla"))]
+pub use stub::XlaOperator;
 
-use crate::data::Dataset;
-use crate::kernels::{Hyperparams, KernelFamily};
-use crate::linalg::Mat;
-use crate::operators::KernelOperator;
-use crate::runtime::{mat_from_lit, vec_from_lit, Model};
+#[cfg(feature = "xla")]
+mod real {
+    use crate::data::Dataset;
+    use crate::kernels::{Hyperparams, KernelFamily};
+    use crate::linalg::Mat;
+    use crate::operators::KernelOperator;
+    use crate::runtime::{mat_from_lit, vec_from_lit, Model};
 
-pub struct XlaOperator {
-    model: Model,
-    x: Mat,
-    x_test: Mat,
-    hp: Hyperparams,
-    family: KernelFamily,
-    x_buf: xla::PjRtBuffer,
-    xt_buf: xla::PjRtBuffer,
-    theta_buf: xla::PjRtBuffer,
-}
+    pub struct XlaOperator {
+        model: Model,
+        x: Mat,
+        x_test: Mat,
+        hp: Hyperparams,
+        family: KernelFamily,
+        x_buf: xla::PjRtBuffer,
+        xt_buf: xla::PjRtBuffer,
+        theta_buf: xla::PjRtBuffer,
+    }
 
-impl XlaOperator {
-    /// Build from a compiled model and the dataset it was shaped for.
-    pub fn new(model: Model, ds: &Dataset) -> Self {
-        let meta = &model.meta;
-        assert_eq!(meta.n, ds.x_train.rows, "dataset/config n mismatch");
-        assert_eq!(meta.d, ds.x_train.cols, "dataset/config d mismatch");
-        assert_eq!(meta.n_test, ds.x_test.rows, "dataset/config n_test mismatch");
-        let hp = Hyperparams::ones(meta.d);
-        let x_buf = model.buf_mat(&ds.x_train).expect("x buffer");
-        let xt_buf = model.buf_mat(&ds.x_test).expect("x_test buffer");
-        let theta_buf = model.buf_vec(&hp.pack()).expect("theta buffer");
-        let family = meta.kernel;
-        XlaOperator {
-            model,
-            x: ds.x_train.clone(),
-            x_test: ds.x_test.clone(),
-            hp,
-            family,
-            x_buf,
-            xt_buf,
-            theta_buf,
+    impl XlaOperator {
+        /// Build from a compiled model and the dataset it was shaped for.
+        pub fn new(model: Model, ds: &Dataset) -> Self {
+            let meta = &model.meta;
+            assert_eq!(meta.n, ds.x_train.rows, "dataset/config n mismatch");
+            assert_eq!(meta.d, ds.x_train.cols, "dataset/config d mismatch");
+            assert_eq!(meta.n_test, ds.x_test.rows, "dataset/config n_test mismatch");
+            let hp = Hyperparams::ones(meta.d);
+            let x_buf = model.buf_mat(&ds.x_train).expect("x buffer");
+            let xt_buf = model.buf_mat(&ds.x_test).expect("x_test buffer");
+            let theta_buf = model.buf_vec(&hp.pack()).expect("theta buffer");
+            let family = meta.kernel;
+            XlaOperator {
+                model,
+                x: ds.x_train.clone(),
+                x_test: ds.x_test.clone(),
+                hp,
+                family,
+                x_buf,
+                xt_buf,
+                theta_buf,
+            }
+        }
+
+        pub fn meta(&self) -> &crate::runtime::Meta {
+            &self.model.meta
+        }
+
+        /// Pure-jnp (non-Pallas) full MVM — perf-ablation path.
+        pub fn hv_ref(&self, v: &Mat) -> Mat {
+            let v_buf = self.model.buf_mat(v).expect("v buffer");
+            let out = self
+                .model
+                .call_b("kmv_full_ref", &[&self.x_buf, &v_buf, &self.theta_buf])
+                .expect("kmv_full_ref");
+            mat_from_lit(&out[0], v.rows, v.cols).expect("kmv_full_ref output")
         }
     }
 
-    pub fn meta(&self) -> &crate::runtime::Meta {
-        &self.model.meta
-    }
+    impl KernelOperator for XlaOperator {
+        fn n(&self) -> usize {
+            self.model.meta.n
+        }
+        fn d(&self) -> usize {
+            self.model.meta.d
+        }
+        fn s(&self) -> usize {
+            self.model.meta.s
+        }
+        fn m(&self) -> usize {
+            self.model.meta.m
+        }
+        fn family(&self) -> KernelFamily {
+            self.family
+        }
+        fn x(&self) -> &Mat {
+            &self.x
+        }
+        fn x_test(&self) -> &Mat {
+            &self.x_test
+        }
+        fn hp(&self) -> &Hyperparams {
+            &self.hp
+        }
 
-    /// Pure-jnp (non-Pallas) full MVM — perf-ablation path.
-    pub fn hv_ref(&self, v: &Mat) -> Mat {
-        let v_buf = self.model.buf_mat(v).expect("v buffer");
-        let out = self
-            .model
-            .call_b("kmv_full_ref", &[&self.x_buf, &v_buf, &self.theta_buf])
-            .expect("kmv_full_ref");
-        mat_from_lit(&out[0], v.rows, v.cols).expect("kmv_full_ref output")
+        fn set_hp(&mut self, hp: &Hyperparams) {
+            assert_eq!(hp.ell.len(), self.d());
+            self.hp = hp.clone();
+            self.theta_buf = self.model.buf_vec(&hp.pack()).expect("theta buffer");
+        }
+
+        fn hv(&self, v: &Mat) -> Mat {
+            assert_eq!((v.rows, v.cols), (self.n(), self.k_width()));
+            let v_buf = self.model.buf_mat(v).expect("v buffer");
+            let out = self
+                .model
+                .call_b("kmv_full", &[&self.x_buf, &v_buf, &self.theta_buf])
+                .expect("kmv_full");
+            mat_from_lit(&out[0], v.rows, v.cols).expect("kmv_full output")
+        }
+
+        fn k_cols(&self, idx: &[usize], u: &Mat) -> Mat {
+            assert_eq!(idx.len(), self.model.meta.b, "AP block size fixed by artifact");
+            assert_eq!((u.rows, u.cols), (idx.len(), self.k_width()));
+            let xb_buf = self.model.buf_mat(&self.x.gather_rows(idx)).expect("xb buffer");
+            let u_buf = self.model.buf_mat(u).expect("u buffer");
+            let out = self
+                .model
+                .call_b("kmv_cols", &[&self.x_buf, &xb_buf, &u_buf, &self.theta_buf])
+                .expect("kmv_cols");
+            mat_from_lit(&out[0], self.n(), self.k_width()).expect("kmv_cols output")
+        }
+
+        fn k_rows(&self, idx: &[usize], v: &Mat) -> Mat {
+            assert_eq!(idx.len(), self.model.meta.b, "SGD batch size fixed by artifact");
+            assert_eq!((v.rows, v.cols), (self.n(), self.k_width()));
+            let xa_buf = self.model.buf_mat(&self.x.gather_rows(idx)).expect("xa buffer");
+            let v_buf = self.model.buf_mat(v).expect("v buffer");
+            let out = self
+                .model
+                .call_b("kmv_rows", &[&xa_buf, &self.x_buf, &v_buf, &self.theta_buf])
+                .expect("kmv_rows");
+            mat_from_lit(&out[0], idx.len(), self.k_width()).expect("kmv_rows output")
+        }
+
+        fn grad_quad(&self, a: &Mat, b: &Mat, w: &[f64]) -> Vec<f64> {
+            assert_eq!((a.rows, a.cols), (self.n(), self.k_width()));
+            assert_eq!((b.rows, b.cols), (self.n(), self.k_width()));
+            assert_eq!(w.len(), self.k_width());
+            let a_buf = self.model.buf_mat(a).expect("a buffer");
+            let b_buf = self.model.buf_mat(b).expect("b buffer");
+            let w_buf = self.model.buf_vec(w).expect("w buffer");
+            let out = self
+                .model
+                .call_b("grad_quad", &[&self.x_buf, &a_buf, &b_buf, &w_buf, &self.theta_buf])
+                .expect("grad_quad");
+            vec_from_lit(&out[0]).expect("grad_quad output")
+        }
+
+        fn rff_eval(&self, omega0: &Mat, wts: &Mat, noise: &Mat) -> Mat {
+            let meta = &self.model.meta;
+            assert_eq!((omega0.rows, omega0.cols), (meta.d, meta.m));
+            assert_eq!((wts.rows, wts.cols), (2 * meta.m, meta.s));
+            assert_eq!((noise.rows, noise.cols), (meta.n, meta.s));
+            let om_buf = self.model.buf_mat(omega0).expect("omega0 buffer");
+            let w_buf = self.model.buf_mat(wts).expect("wts buffer");
+            let n_buf = self.model.buf_mat(noise).expect("noise buffer");
+            let out = self
+                .model
+                .call_b("rff_eval", &[&self.x_buf, &om_buf, &w_buf, &n_buf, &self.theta_buf])
+                .expect("rff_eval");
+            mat_from_lit(&out[0], meta.n, meta.s).expect("rff_eval output")
+        }
+
+        fn predict(&self, vy: &[f64], zhat: &Mat, omega0: &Mat, wts: &Mat) -> (Vec<f64>, Mat) {
+            let meta = &self.model.meta;
+            assert_eq!(vy.len(), meta.n);
+            assert_eq!((zhat.rows, zhat.cols), (meta.n, meta.s));
+            let vy_buf = self.model.buf_vec(vy).expect("vy buffer");
+            let zh_buf = self.model.buf_mat(zhat).expect("zhat buffer");
+            let om_buf = self.model.buf_mat(omega0).expect("omega0 buffer");
+            let w_buf = self.model.buf_mat(wts).expect("wts buffer");
+            let out = self
+                .model
+                .call_b(
+                    "predict",
+                    &[&self.xt_buf, &self.x_buf, &self.theta_buf, &vy_buf, &zh_buf, &om_buf, &w_buf],
+                )
+                .expect("predict");
+            let mean = vec_from_lit(&out[0]).expect("predict mean");
+            let samples = mat_from_lit(&out[1], meta.n_test, meta.s).expect("predict samples");
+            (mean, samples)
+        }
+
+        fn exact_mll(&self, y: &[f64]) -> Option<(f64, Vec<f64>)> {
+            // The Cholesky-based exact path cannot run through PJRT here
+            // (jnp.linalg.cholesky lowers to a typed-FFI LAPACK custom-call
+            // that xla_extension 0.5.1 rejects), so it runs in Rust.  Gated
+            // by the config's `exact` flag: O(n^3) is only sane on small
+            // configs.
+            if !self.model.meta.exact {
+                return None;
+            }
+            let gp = crate::gp::ExactGp::fit(&self.x, y, &self.hp, self.family).ok()?;
+            Some((gp.mll(y), gp.mll_grad()))
+        }
     }
 }
 
-impl KernelOperator for XlaOperator {
-    fn n(&self) -> usize {
-        self.model.meta.n
-    }
-    fn d(&self) -> usize {
-        self.model.meta.d
-    }
-    fn s(&self) -> usize {
-        self.model.meta.s
-    }
-    fn m(&self) -> usize {
-        self.model.meta.m
-    }
-    fn family(&self) -> KernelFamily {
-        self.family
-    }
-    fn x(&self) -> &Mat {
-        &self.x
-    }
-    fn x_test(&self) -> &Mat {
-        &self.x_test
-    }
-    fn hp(&self) -> &Hyperparams {
-        &self.hp
+#[cfg(not(feature = "xla"))]
+mod stub {
+    use crate::data::Dataset;
+    use crate::kernels::{Hyperparams, KernelFamily};
+    use crate::linalg::Mat;
+    use crate::operators::KernelOperator;
+    use crate::runtime::Model;
+
+    /// API-compatible stand-in compiled when the `xla` feature is off.
+    /// Unreachable at run time: the only source of a [`Model`] is
+    /// `Runtime::load_config`, which always fails in stub builds.
+    pub struct XlaOperator {
+        model: Model,
+        x: Mat,
+        x_test: Mat,
+        hp: Hyperparams,
+        family: KernelFamily,
     }
 
-    fn set_hp(&mut self, hp: &Hyperparams) {
-        assert_eq!(hp.ell.len(), self.d());
-        self.hp = hp.clone();
-        self.theta_buf = self.model.buf_vec(&hp.pack()).expect("theta buffer");
-    }
-
-    fn hv(&self, v: &Mat) -> Mat {
-        assert_eq!((v.rows, v.cols), (self.n(), self.k_width()));
-        let v_buf = self.model.buf_mat(v).expect("v buffer");
-        let out = self
-            .model
-            .call_b("kmv_full", &[&self.x_buf, &v_buf, &self.theta_buf])
-            .expect("kmv_full");
-        mat_from_lit(&out[0], v.rows, v.cols).expect("kmv_full output")
-    }
-
-    fn k_cols(&self, idx: &[usize], u: &Mat) -> Mat {
-        assert_eq!(idx.len(), self.model.meta.b, "AP block size fixed by artifact");
-        assert_eq!((u.rows, u.cols), (idx.len(), self.k_width()));
-        let xb_buf = self.model.buf_mat(&self.x.gather_rows(idx)).expect("xb buffer");
-        let u_buf = self.model.buf_mat(u).expect("u buffer");
-        let out = self
-            .model
-            .call_b("kmv_cols", &[&self.x_buf, &xb_buf, &u_buf, &self.theta_buf])
-            .expect("kmv_cols");
-        mat_from_lit(&out[0], self.n(), self.k_width()).expect("kmv_cols output")
-    }
-
-    fn k_rows(&self, idx: &[usize], v: &Mat) -> Mat {
-        assert_eq!(idx.len(), self.model.meta.b, "SGD batch size fixed by artifact");
-        assert_eq!((v.rows, v.cols), (self.n(), self.k_width()));
-        let xa_buf = self.model.buf_mat(&self.x.gather_rows(idx)).expect("xa buffer");
-        let v_buf = self.model.buf_mat(v).expect("v buffer");
-        let out = self
-            .model
-            .call_b("kmv_rows", &[&xa_buf, &self.x_buf, &v_buf, &self.theta_buf])
-            .expect("kmv_rows");
-        mat_from_lit(&out[0], idx.len(), self.k_width()).expect("kmv_rows output")
-    }
-
-    fn grad_quad(&self, a: &Mat, b: &Mat, w: &[f64]) -> Vec<f64> {
-        assert_eq!((a.rows, a.cols), (self.n(), self.k_width()));
-        assert_eq!((b.rows, b.cols), (self.n(), self.k_width()));
-        assert_eq!(w.len(), self.k_width());
-        let a_buf = self.model.buf_mat(a).expect("a buffer");
-        let b_buf = self.model.buf_mat(b).expect("b buffer");
-        let w_buf = self.model.buf_vec(w).expect("w buffer");
-        let out = self
-            .model
-            .call_b("grad_quad", &[&self.x_buf, &a_buf, &b_buf, &w_buf, &self.theta_buf])
-            .expect("grad_quad");
-        vec_from_lit(&out[0]).expect("grad_quad output")
-    }
-
-    fn rff_eval(&self, omega0: &Mat, wts: &Mat, noise: &Mat) -> Mat {
-        let meta = &self.model.meta;
-        assert_eq!((omega0.rows, omega0.cols), (meta.d, meta.m));
-        assert_eq!((wts.rows, wts.cols), (2 * meta.m, meta.s));
-        assert_eq!((noise.rows, noise.cols), (meta.n, meta.s));
-        let om_buf = self.model.buf_mat(omega0).expect("omega0 buffer");
-        let w_buf = self.model.buf_mat(wts).expect("wts buffer");
-        let n_buf = self.model.buf_mat(noise).expect("noise buffer");
-        let out = self
-            .model
-            .call_b("rff_eval", &[&self.x_buf, &om_buf, &w_buf, &n_buf, &self.theta_buf])
-            .expect("rff_eval");
-        mat_from_lit(&out[0], meta.n, meta.s).expect("rff_eval output")
-    }
-
-    fn predict(&self, vy: &[f64], zhat: &Mat, omega0: &Mat, wts: &Mat) -> (Vec<f64>, Mat) {
-        let meta = &self.model.meta;
-        assert_eq!(vy.len(), meta.n);
-        assert_eq!((zhat.rows, zhat.cols), (meta.n, meta.s));
-        let vy_buf = self.model.buf_vec(vy).expect("vy buffer");
-        let zh_buf = self.model.buf_mat(zhat).expect("zhat buffer");
-        let om_buf = self.model.buf_mat(omega0).expect("omega0 buffer");
-        let w_buf = self.model.buf_mat(wts).expect("wts buffer");
-        let out = self
-            .model
-            .call_b(
-                "predict",
-                &[&self.xt_buf, &self.x_buf, &self.theta_buf, &vy_buf, &zh_buf, &om_buf, &w_buf],
-            )
-            .expect("predict");
-        let mean = vec_from_lit(&out[0]).expect("predict mean");
-        let samples = mat_from_lit(&out[1], meta.n_test, meta.s).expect("predict samples");
-        (mean, samples)
-    }
-
-    fn exact_mll(&self, y: &[f64]) -> Option<(f64, Vec<f64>)> {
-        // The Cholesky-based exact path cannot run through PJRT here
-        // (jnp.linalg.cholesky lowers to a typed-FFI LAPACK custom-call
-        // that xla_extension 0.5.1 rejects), so it runs in Rust.  Gated by
-        // the config's `exact` flag: O(n^3) is only sane on small configs.
-        if !self.model.meta.exact {
-            return None;
+    impl XlaOperator {
+        pub fn new(model: Model, ds: &Dataset) -> Self {
+            let meta = &model.meta;
+            assert_eq!(meta.n, ds.x_train.rows, "dataset/config n mismatch");
+            assert_eq!(meta.d, ds.x_train.cols, "dataset/config d mismatch");
+            let hp = Hyperparams::ones(meta.d);
+            let family = meta.kernel;
+            XlaOperator {
+                model,
+                x: ds.x_train.clone(),
+                x_test: ds.x_test.clone(),
+                hp,
+                family,
+            }
         }
-        let gp = crate::gp::ExactGp::fit(&self.x, y, &self.hp, self.family).ok()?;
-        Some((gp.mll(y), gp.mll_grad()))
+
+        pub fn meta(&self) -> &crate::runtime::Meta {
+            &self.model.meta
+        }
+
+        pub fn hv_ref(&self, _v: &Mat) -> Mat {
+            self.unavailable()
+        }
+
+        fn unavailable(&self) -> ! {
+            panic!("XlaOperator compute path requires the `xla` cargo feature")
+        }
+    }
+
+    impl KernelOperator for XlaOperator {
+        fn n(&self) -> usize {
+            self.model.meta.n
+        }
+        fn d(&self) -> usize {
+            self.model.meta.d
+        }
+        fn s(&self) -> usize {
+            self.model.meta.s
+        }
+        fn m(&self) -> usize {
+            self.model.meta.m
+        }
+        fn family(&self) -> KernelFamily {
+            self.family
+        }
+        fn x(&self) -> &Mat {
+            &self.x
+        }
+        fn x_test(&self) -> &Mat {
+            &self.x_test
+        }
+        fn hp(&self) -> &Hyperparams {
+            &self.hp
+        }
+
+        fn set_hp(&mut self, hp: &Hyperparams) {
+            assert_eq!(hp.ell.len(), self.d());
+            self.hp = hp.clone();
+        }
+
+        fn hv(&self, _v: &Mat) -> Mat {
+            self.unavailable()
+        }
+
+        fn k_cols(&self, _idx: &[usize], _u: &Mat) -> Mat {
+            self.unavailable()
+        }
+
+        fn k_rows(&self, _idx: &[usize], _v: &Mat) -> Mat {
+            self.unavailable()
+        }
+
+        fn grad_quad(&self, _a: &Mat, _b: &Mat, _w: &[f64]) -> Vec<f64> {
+            self.unavailable()
+        }
+
+        fn rff_eval(&self, _omega0: &Mat, _wts: &Mat, _noise: &Mat) -> Mat {
+            self.unavailable()
+        }
+
+        fn predict(&self, _vy: &[f64], _zhat: &Mat, _omega0: &Mat, _wts: &Mat) -> (Vec<f64>, Mat) {
+            self.unavailable()
+        }
     }
 }

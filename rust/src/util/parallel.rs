@@ -1,0 +1,183 @@
+//! Tiny in-tree data-parallel substrate (rayon is unavailable offline):
+//! scoped `std::thread` workers with *deterministic* strided task
+//! assignment, so results are bit-reproducible for a fixed thread count.
+//!
+//! Two primitives cover every parallel loop in the tiled operator:
+//! * [`parallel_reduce`] — each worker owns a private accumulator; tasks
+//!   `w, w+T, w+2T, ...` go to worker `w`; accumulators are combined by the
+//!   caller in worker order (deterministic reduction).
+//! * [`parallel_row_blocks`] — disjoint row blocks of one output buffer are
+//!   processed in parallel; writes never overlap, so the result is
+//!   deterministic regardless of scheduling.
+
+/// Resolve a thread count: explicit request > `IGP_THREADS` env var >
+/// available hardware parallelism.  Always at least 1.
+pub fn num_threads(requested: Option<usize>) -> usize {
+    if let Some(t) = requested {
+        if t > 0 {
+            return t;
+        }
+    }
+    if let Ok(v) = std::env::var("IGP_THREADS") {
+        if let Ok(t) = v.parse::<usize>() {
+            if t > 0 {
+                return t;
+            }
+        }
+    }
+    std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
+}
+
+/// Run `task(&mut acc, i)` for every `i in 0..ntasks` across up to
+/// `threads` workers.  Worker `w` processes tasks `w, w+T, w+2T, ...` into
+/// its own accumulator created by `init`; the per-worker accumulators are
+/// returned in worker order (combine them sequentially for a deterministic
+/// reduction).
+pub fn parallel_reduce<A, I, T>(ntasks: usize, threads: usize, init: I, task: T) -> Vec<A>
+where
+    A: Send,
+    I: Fn() -> A + Sync,
+    T: Fn(&mut A, usize) + Sync,
+{
+    let threads = threads.max(1).min(ntasks.max(1));
+    if threads <= 1 {
+        let mut acc = init();
+        for i in 0..ntasks {
+            task(&mut acc, i);
+        }
+        return vec![acc];
+    }
+    let init = &init;
+    let task = &task;
+    std::thread::scope(|s| {
+        let mut handles = Vec::with_capacity(threads);
+        for w in 0..threads {
+            handles.push(s.spawn(move || {
+                let mut acc = init();
+                let mut i = w;
+                while i < ntasks {
+                    task(&mut acc, i);
+                    i += threads;
+                }
+                acc
+            }));
+        }
+        handles
+            .into_iter()
+            .map(|h| h.join().expect("parallel_reduce worker panicked"))
+            .collect()
+    })
+}
+
+/// Split a row-major `[n, cols]` buffer into blocks of `block_rows` rows
+/// and run `task(first_row, rows_in_block, block)` over the blocks on up to
+/// `threads` workers.  Blocks are disjoint `&mut` slices, so writes are
+/// race-free and the result is deterministic.
+pub fn parallel_row_blocks<T>(
+    out: &mut [f64],
+    cols: usize,
+    block_rows: usize,
+    threads: usize,
+    task: T,
+) where
+    T: Fn(usize, usize, &mut [f64]) + Sync,
+{
+    if out.is_empty() || cols == 0 {
+        return;
+    }
+    let n = out.len() / cols;
+    let block_rows = block_rows.max(1).min(n);
+    let nblocks = (n + block_rows - 1) / block_rows;
+    let threads = threads.max(1).min(nblocks);
+    if threads <= 1 {
+        for (bi, block) in out.chunks_mut(block_rows * cols).enumerate() {
+            task(bi * block_rows, block.len() / cols, block);
+        }
+        return;
+    }
+    // deterministic round-robin distribution of blocks to workers
+    let mut per_worker: Vec<Vec<(usize, &mut [f64])>> =
+        (0..threads).map(|_| Vec::new()).collect();
+    for (bi, block) in out.chunks_mut(block_rows * cols).enumerate() {
+        per_worker[bi % threads].push((bi * block_rows, block));
+    }
+    let task = &task;
+    std::thread::scope(|s| {
+        for worker_blocks in per_worker {
+            s.spawn(move || {
+                for (first_row, block) in worker_blocks {
+                    let rows = block.len() / cols;
+                    task(first_row, rows, block);
+                }
+            });
+        }
+    });
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn num_threads_is_positive() {
+        assert!(num_threads(None) >= 1);
+        assert_eq!(num_threads(Some(3)), 3);
+        assert!(num_threads(Some(0)) >= 1);
+    }
+
+    #[test]
+    fn reduce_sums_all_tasks() {
+        for threads in [1, 2, 4, 7] {
+            let partials = parallel_reduce(100, threads, || 0u64, |acc, i| *acc += i as u64);
+            let total: u64 = partials.into_iter().sum();
+            assert_eq!(total, 99 * 100 / 2, "threads={threads}");
+        }
+    }
+
+    #[test]
+    fn reduce_is_deterministic_for_fixed_threads() {
+        let run = || {
+            parallel_reduce(37, 4, Vec::new, |acc: &mut Vec<usize>, i| acc.push(i))
+        };
+        assert_eq!(run(), run());
+    }
+
+    #[test]
+    fn reduce_handles_zero_tasks() {
+        let partials = parallel_reduce(0, 4, || 1i32, |_, _| unreachable!());
+        assert_eq!(partials, vec![1]);
+    }
+
+    #[test]
+    fn row_blocks_cover_every_row_once() {
+        let (n, cols) = (53, 3);
+        for threads in [1, 2, 5] {
+            for block_rows in [1, 7, 53, 200] {
+                let mut out = vec![0.0; n * cols];
+                parallel_row_blocks(&mut out, cols, block_rows, threads, |r0, rows, block| {
+                    assert_eq!(block.len(), rows * cols);
+                    for r in 0..rows {
+                        for c in 0..cols {
+                            block[r * cols + c] += (r0 + r) as f64 + 0.1 * c as f64;
+                        }
+                    }
+                });
+                for i in 0..n {
+                    for c in 0..cols {
+                        let want = i as f64 + 0.1 * c as f64;
+                        assert!(
+                            (out[i * cols + c] - want).abs() < 1e-12,
+                            "threads={threads} block={block_rows} i={i} c={c}"
+                        );
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn row_blocks_empty_is_noop() {
+        let mut out: Vec<f64> = Vec::new();
+        parallel_row_blocks(&mut out, 4, 8, 2, |_, _, _| unreachable!());
+    }
+}

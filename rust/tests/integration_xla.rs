@@ -16,13 +16,15 @@ use igp::solvers::SolverKind;
 use igp::util::rng::Rng;
 
 fn artifacts_ready() -> bool {
-    std::path::Path::new("artifacts/test/meta.txt").exists()
+    cfg!(feature = "xla") && std::path::Path::new("artifacts/test/meta.txt").exists()
 }
 
 macro_rules! require_artifacts {
     () => {
         if !artifacts_ready() {
-            eprintln!("skipping: artifacts/ not built (run `make artifacts`)");
+            eprintln!(
+                "skipping: needs artifacts/ (run `make artifacts`) and the `xla` cargo feature"
+            );
             return;
         }
     };

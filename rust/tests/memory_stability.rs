@@ -21,8 +21,8 @@ fn rss_bytes() -> f64 {
 
 #[test]
 fn operator_calls_do_not_leak() {
-    if !std::path::Path::new("artifacts/test/meta.txt").exists() {
-        eprintln!("skipping: artifacts/ not built");
+    if !cfg!(feature = "xla") || !std::path::Path::new("artifacts/test/meta.txt").exists() {
+        eprintln!("skipping: needs artifacts/ and the `xla` cargo feature");
         return;
     }
     let ds = igp::data::generate(&igp::data::spec("test").unwrap());

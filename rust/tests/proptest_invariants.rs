@@ -4,11 +4,12 @@
 //! normalisation round-trips and config parsing.
 
 use igp::config;
+use igp::coordinator::{Trainer, TrainerOptions};
 use igp::data::{generate_split, spec};
 use igp::estimator::{EstimatorKind, ProbeSet};
 use igp::kernels::Hyperparams;
 use igp::linalg::{Cholesky, Mat};
-use igp::operators::{DenseOperator, KernelOperator};
+use igp::operators::{DenseOperator, KernelOperator, TiledOperator, TiledOptions};
 use igp::prop_assert;
 use igp::solvers::{
     col_norms, make_solver, Normalized, SolveOptions, SolverKind,
@@ -31,6 +32,27 @@ fn dense_op(rng: &mut Rng, size_hint: usize) -> (DenseOperator, Mat) {
     let mut b = Mat::from_fn(op.n(), op.k_width(), |_, _| rng.gaussian());
     b.set_col(0, &ds.y_train);
     (op, b)
+}
+
+/// Same random SPD system behind both pure-Rust backends.
+fn backend_pair(rng: &mut Rng, size_hint: usize) -> (DenseOperator, TiledOperator, Mat) {
+    let ds = generate_split(&spec("test").unwrap(), rng.next_u64() % 8);
+    let s = 2 + size_hint % 6;
+    let mut dense = DenseOperator::new(&ds, s, 16);
+    let d = dense.d();
+    let hp = Hyperparams {
+        ell: (0..d).map(|_| rng.uniform_in(0.5, 2.0)).collect(),
+        sigf: rng.uniform_in(0.5, 1.5),
+        sigma: rng.uniform_in(0.1, 0.8),
+    };
+    dense.set_hp(&hp);
+    let tile = 1 + rng.below(2 * dense.n());
+    let threads = 1 + rng.below(4);
+    let mut tiled = TiledOperator::with_options(&ds, s, 16, TiledOptions { tile, threads });
+    tiled.set_hp(&hp);
+    let mut b = Mat::from_fn(dense.n(), dense.k_width(), |_, _| rng.gaussian());
+    b.set_col(0, &ds.y_train);
+    (dense, tiled, b)
 }
 
 #[test]
@@ -209,6 +231,130 @@ fn prop_config_parser_roundtrip() {
         for (i, v) in floats.iter().enumerate() {
             let got = doc.get("s", &format!("f{i}")).unwrap().as_float().map_err(|e| e.to_string())?;
             prop_assert!((got - v).abs() < 1e-9, "float {i}: {got} != {v}");
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_solver_residuals_match_across_backends() {
+    // CG/AP/SGD on random SPD systems must reach the same residual norms
+    // (and essentially the same solutions) whether the O(n^2) products run
+    // through the dense oracle or the matrix-free tiled backend.
+    check("backend_residual_parity", PropConfig { cases: 9, max_size: 9, ..Default::default() }, |rng, size| {
+        let (dense, tiled, b) = backend_pair(rng, size);
+        let kind = match size % 3 {
+            0 => SolverKind::Cg,
+            1 => SolverKind::Ap,
+            _ => SolverKind::Sgd,
+        };
+        let opts = SolveOptions {
+            tolerance: 0.01,
+            max_epochs: 300.0,
+            precond_rank: 32,
+            block_size: 64,
+            sgd_lr: 4.0,
+            ..Default::default()
+        };
+        let mut vd = Mat::zeros(dense.n(), dense.k_width());
+        let rep_d = make_solver(kind).solve(&dense, &b, &mut vd, &opts);
+        let mut vt = Mat::zeros(tiled.n(), tiled.k_width());
+        let rep_t = make_solver(kind).solve(&tiled, &b, &mut vt, &opts);
+
+        if kind == SolverKind::Cg {
+            // CG's hv goes through the symmetric tiling, so iterates carry
+            // FP-level drift; a boundary tie can shift termination by one
+            // iteration.  Both runs must converge either way.
+            prop_assert!(
+                rep_d.converged && rep_t.converged,
+                "CG must converge: dense {rep_d:?} vs tiled {rep_t:?}"
+            );
+            let di = rep_d.iterations as i64 - rep_t.iterations as i64;
+            prop_assert!(di.abs() <= 1, "CG iterations {} vs {}", rep_d.iterations, rep_t.iterations);
+            if rep_d.iterations == rep_t.iterations {
+                prop_assert!(
+                    (rep_d.ry - rep_t.ry).abs() <= 1e-6 && (rep_d.rz - rep_t.rz).abs() <= 1e-6,
+                    "CG residuals ({}, {}) vs ({}, {})",
+                    rep_d.ry,
+                    rep_d.rz,
+                    rep_t.ry,
+                    rep_t.rz
+                );
+                let drift = vd.max_abs_diff(&vt);
+                prop_assert!(drift <= 1e-4, "CG solution drift {drift}");
+            }
+        } else {
+            // AP/SGD touch the operator only through k_cols/k_rows, which
+            // the tiled backend evaluates in the same summation order as
+            // dense — the whole trajectory must match to FP noise.
+            prop_assert!(
+                rep_d.converged == rep_t.converged,
+                "{kind:?} convergence mismatch: dense {rep_d:?} vs tiled {rep_t:?}"
+            );
+            prop_assert!(
+                rep_d.iterations == rep_t.iterations,
+                "{kind:?} iterations {} vs {}",
+                rep_d.iterations,
+                rep_t.iterations
+            );
+            prop_assert!(
+                (rep_d.ry - rep_t.ry).abs() <= 1e-10 && (rep_d.rz - rep_t.rz).abs() <= 1e-10,
+                "{kind:?} residuals ({}, {}) vs ({}, {})",
+                rep_d.ry,
+                rep_d.rz,
+                rep_t.ry,
+                rep_t.rz
+            );
+            let drift = vd.max_abs_diff(&vt);
+            prop_assert!(drift <= 1e-8, "{kind:?} solution drift {drift}");
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_checkpoint_roundtrip_on_tiled_backend() {
+    // Warm-start state must survive a checkpoint/restore cycle with the
+    // tiled backend selected: N straight outer steps == N1 steps +
+    // checkpoint + restore + N2 steps.
+    check("tiled_checkpoint_roundtrip", PropConfig { cases: 3, max_size: 3, ..Default::default() }, |rng, size| {
+        let seed = rng.next_u64() % 1000;
+        let steps_a = 2 + size % 3;
+        let steps_b = 2;
+        let mk_trainer = || {
+            let ds = generate_split(&spec("test").unwrap(), 0);
+            let op = TiledOperator::with_options(
+                &ds,
+                8,
+                32,
+                TiledOptions { tile: 96, threads: 2 },
+            );
+            let opts = TrainerOptions {
+                solver: SolverKind::Ap,
+                estimator: EstimatorKind::Pathwise,
+                warm_start: true,
+                lr: 0.1,
+                epoch_cap: 150.0,
+                block_size: Some(64),
+                seed,
+                ..Default::default()
+            };
+            Trainer::new(opts, Box::new(op), &ds)
+        };
+        let mut straight = mk_trainer();
+        straight.run(steps_a + steps_b).map_err(|e| e.to_string())?;
+
+        let mut first = mk_trainer();
+        first.run(steps_a).map_err(|e| e.to_string())?;
+        let ck = first.checkpoint(steps_a as u64);
+        let mut resumed = mk_trainer();
+        resumed.restore(&ck);
+        resumed.run(steps_b).map_err(|e| e.to_string())?;
+
+        let ta = straight.theta();
+        let tb = resumed.theta();
+        for (i, (x, y)) in ta.iter().zip(&tb).enumerate() {
+            prop_assert!((x - y).abs() < 1e-9, "theta[{i}]: {x} vs {y}");
         }
         Ok(())
     });

@@ -1,0 +1,247 @@
+//! Property tests: the matrix-free multi-threaded `TiledOperator` must
+//! agree elementwise with the `DenseOperator` oracle on every
+//! `KernelOperator` method, across random draws of n, d, probe count,
+//! tile size (including sizes that do not divide n), thread count and
+//! kernel family.
+
+use igp::data::{Dataset, DatasetSpec};
+use igp::kernels::{Hyperparams, KernelFamily};
+use igp::linalg::Mat;
+use igp::operators::{DenseOperator, KernelOperator, TiledOperator, TiledOptions};
+use igp::prop_assert;
+use igp::util::proptest::{check, PropConfig};
+use igp::util::rng::Rng;
+
+fn random_family(rng: &mut Rng) -> KernelFamily {
+    match rng.below(4) {
+        0 => KernelFamily::Matern12,
+        1 => KernelFamily::Matern32,
+        2 => KernelFamily::Matern52,
+        _ => KernelFamily::Rbf,
+    }
+}
+
+fn toy_dataset(rng: &mut Rng, n: usize, n_test: usize, d: usize, family: KernelFamily) -> Dataset {
+    let x_train = Mat::from_fn(n, d, |_, _| rng.gaussian());
+    let y_train = rng.gaussian_vec(n);
+    let x_test = Mat::from_fn(n_test, d, |_, _| rng.gaussian());
+    let y_test = rng.gaussian_vec(n_test);
+    let spec = DatasetSpec {
+        name: "toy",
+        paper_n: 0,
+        n,
+        n_test,
+        d,
+        true_sigma: 0.3,
+        ell_lo: 0.5,
+        ell_hi: 1.5,
+        cluster_frac: 0.0,
+        family,
+        seed: 0,
+    };
+    Dataset {
+        spec,
+        x_train,
+        y_train,
+        x_test,
+        y_test,
+        true_hp: Hyperparams::ones(d),
+    }
+}
+
+/// One random case: dataset + hyperparameters + a tiled/dense operator pair.
+struct Case {
+    ds: Dataset,
+    tiled: TiledOperator,
+    dense: DenseOperator,
+}
+
+fn random_case(rng: &mut Rng, size: usize) -> Case {
+    let n = 8 + rng.below(8 + 6 * size.max(1));
+    let n_test = 1 + rng.below(8);
+    let d = 1 + rng.below(5);
+    let s = 1 + rng.below(4);
+    let m = 4 + rng.below(12);
+    let family = random_family(rng);
+    // tile sizes deliberately include 1, non-divisors of n, and > n
+    let tile = match rng.below(4) {
+        0 => 1,
+        1 => 1 + rng.below(n),
+        2 => n,
+        _ => n + 1 + rng.below(64),
+    };
+    let threads = 1 + rng.below(4);
+    let ds = toy_dataset(rng, n, n_test, d, family);
+    let hp = Hyperparams {
+        ell: (0..d).map(|_| rng.uniform_in(0.4, 2.0)).collect(),
+        sigf: rng.uniform_in(0.5, 1.5),
+        sigma: rng.uniform_in(0.1, 0.9),
+    };
+    let mut tiled = TiledOperator::with_options(&ds, s, m, TiledOptions { tile, threads });
+    tiled.set_hp(&hp);
+    let mut dense = DenseOperator::new(&ds, s, m);
+    dense.set_hp(&hp);
+    Case { ds, tiled, dense }
+}
+
+fn close(label: &str, got: &Mat, want: &Mat) -> Result<(), String> {
+    if (got.rows, got.cols) != (want.rows, want.cols) {
+        return Err(format!(
+            "{label}: shape ({}, {}) vs ({}, {})",
+            got.rows, got.cols, want.rows, want.cols
+        ));
+    }
+    let scale = 1.0 + want.data.iter().fold(0.0f64, |a, &x| a.max(x.abs()));
+    let err = got.max_abs_diff(want);
+    if err > 1e-10 * scale {
+        return Err(format!("{label}: max abs err {err} (scale {scale})"));
+    }
+    Ok(())
+}
+
+#[test]
+fn prop_hv_matches_dense() {
+    check("tiled_hv_parity", PropConfig { cases: 24, max_size: 16, ..Default::default() }, |rng, size| {
+        let c = random_case(rng, size);
+        let v = Mat::from_fn(c.tiled.n(), c.tiled.k_width(), |_, _| rng.gaussian());
+        close("hv", &c.tiled.hv(&v), &c.dense.hv(&v))
+    });
+}
+
+#[test]
+fn prop_k_cols_and_k_rows_match_dense() {
+    check("tiled_kcols_krows_parity", PropConfig { cases: 24, max_size: 16, ..Default::default() }, |rng, size| {
+        let c = random_case(rng, size);
+        let n = c.tiled.n();
+        let bsz = 1 + rng.below(n);
+        let idx = rng.sample_indices(n, bsz);
+        let u = Mat::from_fn(bsz, c.tiled.k_width(), |_, _| rng.gaussian());
+        close("k_cols", &c.tiled.k_cols(&idx, &u), &c.dense.k_cols(&idx, &u))?;
+        let v = Mat::from_fn(n, c.tiled.k_width(), |_, _| rng.gaussian());
+        close("k_rows", &c.tiled.k_rows(&idx, &v), &c.dense.k_rows(&idx, &v))
+    });
+}
+
+#[test]
+fn prop_grad_quad_matches_dense() {
+    check("tiled_grad_quad_parity", PropConfig { cases: 16, max_size: 12, ..Default::default() }, |rng, size| {
+        let c = random_case(rng, size);
+        let k = c.tiled.k_width();
+        let n = c.tiled.n();
+        let a = Mat::from_fn(n, k, |_, _| rng.gaussian());
+        let b = Mat::from_fn(n, k, |_, _| rng.gaussian());
+        let w: Vec<f64> = (0..k).map(|_| rng.uniform_in(-1.0, 1.0)).collect();
+        let g1 = c.tiled.grad_quad(&a, &b, &w);
+        let g2 = c.dense.grad_quad(&a, &b, &w);
+        prop_assert!(g1.len() == g2.len(), "len {} vs {}", g1.len(), g2.len());
+        for (i, (x, y)) in g1.iter().zip(&g2).enumerate() {
+            prop_assert!(
+                (x - y).abs() <= 1e-10 * (1.0 + y.abs()),
+                "grad comp {i}: {x} vs {y}"
+            );
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_rff_eval_matches_dense() {
+    check("tiled_rff_parity", PropConfig { cases: 16, max_size: 12, ..Default::default() }, |rng, size| {
+        let c = random_case(rng, size);
+        let (n, d, s, m) = (c.tiled.n(), c.tiled.d(), c.tiled.s(), c.tiled.m());
+        let omega0 = Mat::from_fn(d, m, |_, _| rng.gaussian());
+        let wts = Mat::from_fn(2 * m, s, |_, _| rng.gaussian());
+        let noise = Mat::from_fn(n, s, |_, _| rng.gaussian());
+        close(
+            "rff_eval",
+            &c.tiled.rff_eval(&omega0, &wts, &noise),
+            &c.dense.rff_eval(&omega0, &wts, &noise),
+        )
+    });
+}
+
+#[test]
+fn prop_predict_matches_dense() {
+    check("tiled_predict_parity", PropConfig { cases: 16, max_size: 12, ..Default::default() }, |rng, size| {
+        let c = random_case(rng, size);
+        let (n, d, s, m) = (c.tiled.n(), c.tiled.d(), c.tiled.s(), c.tiled.m());
+        let omega0 = Mat::from_fn(d, m, |_, _| rng.gaussian());
+        let wts = Mat::from_fn(2 * m, s, |_, _| rng.gaussian());
+        let vy = rng.gaussian_vec(n);
+        let zhat = Mat::from_fn(n, s, |_, _| rng.gaussian());
+        let (m1, s1) = c.tiled.predict(&vy, &zhat, &omega0, &wts);
+        let (m2, s2) = c.dense.predict(&vy, &zhat, &omega0, &wts);
+        for (i, (x, y)) in m1.iter().zip(&m2).enumerate() {
+            prop_assert!(
+                (x - y).abs() <= 1e-10 * (1.0 + y.abs()),
+                "mean {i}: {x} vs {y}"
+            );
+        }
+        close("predict samples", &s1, &s2)
+    });
+}
+
+#[test]
+fn prop_exact_mll_matches_dense() {
+    check("tiled_exact_mll_parity", PropConfig { cases: 8, max_size: 8, ..Default::default() }, |rng, size| {
+        let c = random_case(rng, size);
+        let (l1, g1) = match c.tiled.exact_mll(&c.ds.y_train) {
+            Some(v) => v,
+            None => return Err("tiled exact_mll returned None".into()),
+        };
+        let (l2, g2) = match c.dense.exact_mll(&c.ds.y_train) {
+            Some(v) => v,
+            None => return Err("dense exact_mll returned None".into()),
+        };
+        prop_assert!((l1 - l2).abs() <= 1e-9 * (1.0 + l2.abs()), "mll {l1} vs {l2}");
+        for (i, (x, y)) in g1.iter().zip(&g2).enumerate() {
+            prop_assert!(
+                (x - y).abs() <= 1e-9 * (1.0 + y.abs()),
+                "mll grad {i}: {x} vs {y}"
+            );
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_hv_deterministic_and_tile_invariant() {
+    // the same operator must be bit-deterministic across calls, and two
+    // operators differing only in tile size must agree to FP tolerance
+    check("tiled_hv_determinism", PropConfig { cases: 12, max_size: 12, ..Default::default() }, |rng, size| {
+        let c = random_case(rng, size);
+        let v = Mat::from_fn(c.tiled.n(), c.tiled.k_width(), |_, _| rng.gaussian());
+        let a = c.tiled.hv(&v);
+        let b = c.tiled.hv(&v);
+        prop_assert!(a == b, "hv not deterministic across repeated calls");
+        let mut other = TiledOperator::with_options(
+            &c.ds,
+            c.tiled.s(),
+            c.tiled.m(),
+            TiledOptions { tile: 1 + rng.below(2 * c.tiled.n()), threads: 1 + rng.below(4) },
+        );
+        other.set_hp(c.tiled.hp());
+        close("hv tile-invariance", &other.hv(&v), &a)
+    });
+}
+
+#[test]
+fn tiled_memory_footprint_is_matrix_free() {
+    // Behavioural proxy for O(n d) memory: set_hp on a tiled operator must
+    // be effectively free (no H rebuild), whereas the dense backend
+    // recomputes the full n x n matrix on every call.  Assert that many
+    // repeated set_hp calls complete and products stay finite.
+    let ds = igp::data::generate(&igp::data::spec("test").unwrap());
+    let mut op = TiledOperator::new(&ds, 4, 16);
+    let mut rng = Rng::new(0);
+    let v = Mat::from_fn(op.n(), op.k_width(), |_, _| rng.gaussian());
+    let mut last = None;
+    for i in 0..50 {
+        let hp = Hyperparams { ell: vec![1.0; op.d()], sigf: 1.0, sigma: 0.2 + 0.001 * (i % 3) as f64 };
+        op.set_hp(&hp);
+        if i % 25 == 0 {
+            last = Some(op.hv(&v));
+        }
+    }
+    assert!(last.unwrap().data.iter().all(|x| x.is_finite()));
+}

@@ -1,0 +1,194 @@
+//! Minimal in-tree stand-in for the `anyhow` crate, implementing exactly the
+//! API surface this repository uses: [`Error`], [`Result`], the [`Context`]
+//! extension trait and the `anyhow!` / `bail!` / `ensure!` macros.
+//!
+//! Vendored because the build environment is offline (no crates.io access);
+//! see the workspace `Cargo.toml`.  The semantics mirror upstream anyhow for
+//! the used subset: an error is a chain of context messages, `Display`
+//! prints the outermost message, alternate `Display` (`{:#}`) and `Debug`
+//! print the full `outer: ... : root-cause` chain, and any
+//! `std::error::Error + Send + Sync + 'static` converts into [`Error`] via
+//! `?`.
+
+use std::fmt;
+
+/// A context-chain error value.  Most-recent context first.
+pub struct Error {
+    msgs: Vec<String>,
+}
+
+impl Error {
+    /// Construct from a single displayable message.
+    pub fn msg<M: fmt::Display>(message: M) -> Self {
+        Error { msgs: vec![message.to_string()] }
+    }
+
+    /// Wrap with an outer context message.
+    pub fn context<C: fmt::Display>(mut self, context: C) -> Self {
+        self.msgs.insert(0, context.to_string());
+        self
+    }
+
+    /// The full `outer: ... : root` chain as a single string.
+    pub fn chain_string(&self) -> String {
+        self.msgs.join(": ")
+    }
+
+    /// The root-cause (innermost) message.
+    pub fn root_cause(&self) -> &str {
+        self.msgs.last().map(String::as_str).unwrap_or("")
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        if f.alternate() {
+            f.write_str(&self.chain_string())
+        } else {
+            f.write_str(self.msgs.first().map(String::as_str).unwrap_or(""))
+        }
+    }
+}
+
+impl fmt::Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.chain_string())
+    }
+}
+
+// Mirrors upstream anyhow: `Error` deliberately does NOT implement
+// `std::error::Error`, which is what makes this blanket conversion coherent
+// alongside the reflexive `From<T> for T`.
+impl<E: std::error::Error + Send + Sync + 'static> From<E> for Error {
+    fn from(e: E) -> Self {
+        let mut msgs = vec![e.to_string()];
+        let mut src = e.source();
+        while let Some(s) = src {
+            msgs.push(s.to_string());
+            src = s.source();
+        }
+        Error { msgs }
+    }
+}
+
+/// `Result` with [`Error`] as the default error type.
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+/// Extension trait adding context to fallible results.
+pub trait Context<T> {
+    fn context<C: fmt::Display>(self, context: C) -> Result<T, Error>;
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T, Error>;
+}
+
+impl<T, E: Into<Error>> Context<T> for std::result::Result<T, E> {
+    fn context<C: fmt::Display>(self, context: C) -> Result<T, Error> {
+        self.map_err(|e| e.into().context(context))
+    }
+
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T, Error> {
+        self.map_err(|e| e.into().context(f()))
+    }
+}
+
+/// Construct an [`Error`] from a format string or displayable value.
+#[macro_export]
+macro_rules! anyhow {
+    ($msg:literal $(,)?) => {
+        $crate::Error::msg(format!($msg))
+    };
+    ($err:expr $(,)?) => {
+        $crate::Error::msg($err)
+    };
+    ($fmt:expr, $($arg:tt)*) => {
+        $crate::Error::msg(format!($fmt, $($arg)*))
+    };
+}
+
+/// Return early with an error built like [`anyhow!`].
+#[macro_export]
+macro_rules! bail {
+    ($($arg:tt)*) => {
+        return Err($crate::anyhow!($($arg)*))
+    };
+}
+
+/// Return early with an error if a condition is false.
+#[macro_export]
+macro_rules! ensure {
+    ($cond:expr $(,)?) => {
+        if !($cond) {
+            return Err($crate::Error::msg(concat!("condition failed: ", stringify!($cond))));
+        }
+    };
+    ($cond:expr, $($arg:tt)*) => {
+        if !($cond) {
+            return Err($crate::anyhow!($($arg)*));
+        }
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn io_err() -> std::io::Error {
+        std::io::Error::new(std::io::ErrorKind::NotFound, "gone")
+    }
+
+    #[test]
+    fn from_std_error_and_context() {
+        let r: Result<()> = Err(io_err()).context("reading file");
+        let e = r.unwrap_err();
+        assert_eq!(e.to_string(), "reading file");
+        assert!(format!("{e:#}").contains("gone"));
+    }
+
+    #[test]
+    fn with_context_lazily_formats() {
+        let name = "x";
+        let r: Result<()> = Err(io_err()).with_context(|| format!("loading {name}"));
+        assert_eq!(r.unwrap_err().to_string(), "loading x");
+    }
+
+    #[test]
+    fn context_on_anyhow_result_chains() {
+        fn inner() -> Result<()> {
+            bail!("root cause {}", 7);
+        }
+        let e = inner().context("outer").unwrap_err();
+        assert_eq!(e.to_string(), "outer");
+        assert_eq!(e.root_cause(), "root cause 7");
+        assert_eq!(format!("{e:#}"), "outer: root cause 7");
+    }
+
+    #[test]
+    fn macros_build_errors() {
+        let a = anyhow!("plain");
+        assert_eq!(a.to_string(), "plain");
+        let x = 3;
+        let b = anyhow!("value {x} and {}", 4);
+        assert_eq!(b.to_string(), "value 3 and 4");
+        let c = anyhow!(String::from("owned"));
+        assert_eq!(c.to_string(), "owned");
+    }
+
+    #[test]
+    fn ensure_returns_err_on_false() {
+        fn check(v: i32) -> Result<i32> {
+            ensure!(v > 0, "need positive, got {v}");
+            Ok(v)
+        }
+        assert_eq!(check(2).unwrap(), 2);
+        assert!(check(-1).unwrap_err().to_string().contains("-1"));
+    }
+
+    #[test]
+    fn question_mark_converts() {
+        fn parse(s: &str) -> Result<i64> {
+            let v: i64 = s.parse()?;
+            Ok(v)
+        }
+        assert_eq!(parse("42").unwrap(), 42);
+        assert!(parse("nope").is_err());
+    }
+}
