@@ -61,6 +61,44 @@ fn rust_backends() {
     }
 }
 
+/// Threaded-vs-serial *recurrence* section: run the solvers against the
+/// single-threaded dense backend, so the only parallelism in play is the
+/// solver-recurrence layer (`SolveOptions::threads`).  The two rows per
+/// solver isolate what the recurrence layer buys on top of the operator
+/// products; outputs are bitwise-identical by construction.
+fn recurrence_threads() {
+    let b = Bencher::default();
+    let auto = igp::solvers::recurrence::resolve_threads(0);
+    for config in ["test", "protein"] {
+        let ds = data::generate(&data::spec(config).unwrap());
+        let hp = Hyperparams { ell: vec![1.0; ds.spec.d], sigf: 1.0, sigma: 0.3 };
+        let block = (ds.spec.n / 16).clamp(32, 256);
+        let mut dense = DenseOperator::new(&ds, 8, 64);
+        dense.set_hp(&hp);
+        let mut rng = Rng::new(2);
+        let probes = ProbeSet::sample(EstimatorKind::Pathwise, &dense, &mut rng);
+        let targets = probes.targets(&dense, &ds.y_train);
+        for kind in [SolverKind::Cg, SolverKind::Ap, SolverKind::Sgd] {
+            for (label, threads) in [("serial t1", 1usize), ("threaded auto", 0)] {
+                let mut solver = make_solver(kind);
+                let opts = SolveOptions { threads, ..epoch_opts(block) };
+                b.run(
+                    &format!(
+                        "{config}/{}-epoch recurrence {label} (t={})",
+                        kind.name(),
+                        if threads == 0 { auto } else { threads }
+                    ),
+                    None,
+                    || {
+                        let mut v = Mat::zeros(dense.n(), dense.k_width());
+                        std::hint::black_box(solver.solve(&dense, &targets, &mut v, &opts));
+                    },
+                );
+            }
+        }
+    }
+}
+
 fn xla_backends() {
     common::skip_or(|| {
         let b = Bencher::default();
@@ -85,5 +123,6 @@ fn xla_backends() {
 
 fn main() {
     rust_backends();
+    recurrence_threads();
     xla_backends();
 }

@@ -6,9 +6,14 @@
 //! 32h in Table 10) — a crash without checkpoints loses the accumulated
 //! warm-start progress, which is exactly the asset warm starting builds.
 //!
-//! Format (little-endian): magic "IGPCKPT1", then length-prefixed f64
+//! Format (little-endian): magic "IGPCKPT2", then length-prefixed f64
 //! vectors in fixed order: nu, adam_m, adam_v, v_store (+ rows/cols), plus
-//! step counter and seed.  No external serde available offline.
+//! step counter, seed, the trainer RNG state and the resolved SGD
+//! learning rate.  No external serde available offline.  Version-1 files
+//! ("IGPCKPT1", no RNG/lr trailer) still load — with `rng: None`, a
+//! restore keeps the trainer's current stream, which is only exactly
+//! reproducible for warm-started runs (frozen probes); cold-start runs
+//! need v2.
 
 use std::io::{Read, Write};
 use std::path::Path;
@@ -16,8 +21,10 @@ use std::path::Path;
 use anyhow::{bail, Context, Result};
 
 use crate::linalg::Mat;
+use crate::util::rng::RngState;
 
-const MAGIC: &[u8; 8] = b"IGPCKPT1";
+const MAGIC_V1: &[u8; 8] = b"IGPCKPT1";
+const MAGIC_V2: &[u8; 8] = b"IGPCKPT2";
 
 #[derive(Clone, Debug, PartialEq)]
 pub struct Checkpoint {
@@ -28,6 +35,15 @@ pub struct Checkpoint {
     pub adam_v: Vec<f64>,
     pub adam_t: u64,
     pub v_store: Mat,
+    /// Trainer RNG mid-stream state (None only for legacy v1 files).
+    /// Without it, runs that keep drawing randomness after the restore
+    /// point — cold starts resample probes every step — do not reproduce.
+    pub rng: Option<RngState>,
+    /// SGD learning rate resolved by the first-step autotune (None when
+    /// not yet resolved, or for legacy v1 files).  Restoring it keeps a
+    /// resumed SGD run from re-autotuning at the sharpened
+    /// hyperparameters, which the paper's protocol forbids.
+    pub sgd_lr: Option<f64>,
 }
 
 fn write_vec(out: &mut impl Write, v: &[f64]) -> Result<()> {
@@ -64,7 +80,7 @@ impl Checkpoint {
             std::fs::create_dir_all(parent)?;
         }
         let mut out = std::io::BufWriter::new(std::fs::File::create(&path)?);
-        out.write_all(MAGIC)?;
+        out.write_all(MAGIC_V2)?;
         out.write_all(&self.step.to_le_bytes())?;
         out.write_all(&self.seed.to_le_bytes())?;
         out.write_all(&self.adam_t.to_le_bytes())?;
@@ -74,6 +90,31 @@ impl Checkpoint {
         out.write_all(&(self.v_store.rows as u64).to_le_bytes())?;
         out.write_all(&(self.v_store.cols as u64).to_le_bytes())?;
         write_vec(&mut out, &self.v_store.data)?;
+        // RNG state: presence flag, 4 state words, spare flag + value
+        match &self.rng {
+            Some(st) => {
+                out.write_all(&1u64.to_le_bytes())?;
+                for w in st.s {
+                    out.write_all(&w.to_le_bytes())?;
+                }
+                match st.gauss_spare {
+                    Some(g) => {
+                        out.write_all(&1u64.to_le_bytes())?;
+                        out.write_all(&g.to_le_bytes())?;
+                    }
+                    None => out.write_all(&0u64.to_le_bytes())?,
+                }
+            }
+            None => out.write_all(&0u64.to_le_bytes())?,
+        }
+        // resolved SGD learning rate: presence flag + value
+        match self.sgd_lr {
+            Some(lr) => {
+                out.write_all(&1u64.to_le_bytes())?;
+                out.write_all(&lr.to_le_bytes())?;
+            }
+            None => out.write_all(&0u64.to_le_bytes())?,
+        }
         out.flush()?;
         Ok(())
     }
@@ -85,9 +126,11 @@ impl Checkpoint {
         );
         let mut magic = [0u8; 8];
         inp.read_exact(&mut magic)?;
-        if &magic != MAGIC {
-            bail!("not an igp checkpoint (bad magic)");
-        }
+        let version = match &magic {
+            m if m == MAGIC_V1 => 1,
+            m if m == MAGIC_V2 => 2,
+            _ => bail!("not an igp checkpoint (bad magic)"),
+        };
         let step = read_u64(&mut inp)?;
         let seed = read_u64(&mut inp)?;
         let adam_t = read_u64(&mut inp)?;
@@ -100,6 +143,43 @@ impl Checkpoint {
         if data.len() != rows * cols {
             bail!("checkpoint v_store shape mismatch: {}x{cols} vs {} values", rows, data.len());
         }
+        let rng = if version >= 2 {
+            match read_u64(&mut inp)? {
+                0 => None,
+                1 => {
+                    let mut s = [0u64; 4];
+                    for w in &mut s {
+                        *w = read_u64(&mut inp)?;
+                    }
+                    let gauss_spare = match read_u64(&mut inp)? {
+                        0 => None,
+                        1 => {
+                            let mut b = [0u8; 8];
+                            inp.read_exact(&mut b)?;
+                            Some(f64::from_le_bytes(b))
+                        }
+                        other => bail!("bad rng spare flag {other}"),
+                    };
+                    Some(RngState { s, gauss_spare })
+                }
+                other => bail!("bad rng presence flag {other}"),
+            }
+        } else {
+            None
+        };
+        let sgd_lr = if version >= 2 {
+            match read_u64(&mut inp)? {
+                0 => None,
+                1 => {
+                    let mut b = [0u8; 8];
+                    inp.read_exact(&mut b)?;
+                    Some(f64::from_le_bytes(b))
+                }
+                other => bail!("bad sgd_lr presence flag {other}"),
+            }
+        } else {
+            None
+        };
         Ok(Checkpoint {
             step,
             seed,
@@ -108,6 +188,8 @@ impl Checkpoint {
             adam_v,
             adam_t,
             v_store: Mat::from_vec(rows, cols, data),
+            rng,
+            sgd_lr,
         })
     }
 }
@@ -125,6 +207,8 @@ mod tests {
             adam_v: vec![1e-6, 4e-6, 9e-6],
             adam_t: 17,
             v_store: Mat::from_vec(2, 3, vec![1.0, 2.0, 3.0, 4.0, 5.0, 6.0]),
+            rng: Some(RngState { s: [1, 2, 3, u64::MAX], gauss_spare: Some(-0.25) }),
+            sgd_lr: Some(6.5),
         }
     }
 
@@ -136,6 +220,41 @@ mod tests {
         c.save(&p).unwrap();
         let l = Checkpoint::load(&p).unwrap();
         assert_eq!(c, l);
+    }
+
+    #[test]
+    fn roundtrip_without_rng_and_without_spare() {
+        let d = std::env::temp_dir().join("igp_ckpt_rt2");
+        for rng in [None, Some(RngState { s: [9, 8, 7, 6], gauss_spare: None })] {
+            for sgd_lr in [None, Some(12.0)] {
+                let p = d.join("c.ckpt");
+                let c = Checkpoint { rng: rng.clone(), sgd_lr, ..sample() };
+                c.save(&p).unwrap();
+                assert_eq!(Checkpoint::load(&p).unwrap(), c);
+            }
+        }
+    }
+
+    #[test]
+    fn legacy_v1_loads_with_no_rng() {
+        // a v1 file is a v2 file minus the rng + sgd_lr trailer, with the
+        // old magic
+        let d = std::env::temp_dir().join("igp_ckpt_v1");
+        let p = d.join("c.ckpt");
+        let c = sample();
+        c.save(&p).unwrap();
+        let mut bytes = std::fs::read(&p).unwrap();
+        bytes[..8].copy_from_slice(b"IGPCKPT1");
+        // drop the trailer: rng flag + 4 words + spare flag + spare value,
+        // then sgd_lr flag + value (sample() has both Some)
+        let trailer = 8 * (1 + 4 + 1 + 1) + 8 * (1 + 1);
+        bytes.truncate(bytes.len() - trailer);
+        std::fs::write(&p, &bytes).unwrap();
+        let l = Checkpoint::load(&p).unwrap();
+        assert_eq!(l.rng, None);
+        assert_eq!(l.sgd_lr, None);
+        assert_eq!(l.v_store, c.v_store);
+        assert_eq!(l.step, c.step);
     }
 
     #[test]

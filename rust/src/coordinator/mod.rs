@@ -27,7 +27,10 @@ use crate::gp::{metrics, Metrics};
 use crate::linalg::Mat;
 use crate::operators::KernelOperator;
 use crate::optim::{Adam, SoftplusParams};
-use crate::solvers::{autotune_lr, make_solver, LinearSolver, SolveOptions, SolverKind};
+use crate::solvers::{
+    autotune_lr, make_solver, LinearSolver, PreconditionerCache, SharedPreconditionerCache,
+    SolveOptions, SolveReport, SolverKind,
+};
 use crate::util::rng::Rng;
 
 #[derive(Clone, Debug)]
@@ -58,6 +61,11 @@ pub struct TrainerOptions {
     pub track_exact: bool,
     /// Evaluate test metrics every k outer steps (None = only at the end).
     pub predict_every: Option<usize>,
+    /// Worker threads for the solver-recurrence layer and preconditioner
+    /// builds (0 = auto).  Output is bitwise-identical for every value.
+    pub threads: usize,
+    /// AP: score blocks on the preconditioned residual (off by default).
+    pub ap_precond: bool,
     pub seed: u64,
 }
 
@@ -78,6 +86,8 @@ impl Default for TrainerOptions {
             init_theta: 1.0,
             track_exact: false,
             predict_every: None,
+            threads: 0,
+            ap_precond: false,
             seed: 0,
         }
     }
@@ -107,7 +117,11 @@ pub struct TrainOutcome {
     pub theta: Vec<f64>,
     pub final_metrics: Metrics,
     pub total_secs: f64,
+    /// Wall time in the solver across *all* solves this run — the per-step
+    /// training solves plus prediction, evaluation re-solves (Standard
+    /// estimator) and SGD learning-rate autotune probes.
     pub solver_secs: f64,
+    /// Epochs across all solves this run (same coverage as `solver_secs`).
     pub total_epochs: f64,
     pub sgd_lr_used: f64,
 }
@@ -126,6 +140,18 @@ pub struct Trainer {
     v_store: Mat,
     solve_opts: SolveOptions,
     sgd_lr_resolved: Option<f64>,
+    /// Coordinator-owned preconditioner store, injected into the solver so
+    /// factorisations are shared across training, prediction and
+    /// evaluation solves.
+    precond: SharedPreconditionerCache,
+    /// Lifetime solver-work accounting (epochs / wall seconds across every
+    /// solve, including prediction, evaluation and autotune probes).
+    /// `run` reports per-run deltas of these.
+    spent_epochs: f64,
+    spent_solver_secs: f64,
+    /// Outer steps completed over the trainer's lifetime (survives
+    /// checkpoint/restore; drives cold-start probe resampling).
+    step_count: u64,
 }
 
 impl Trainer {
@@ -150,8 +176,12 @@ impl Trainer {
             sgd_polyak: false,
             sgd_backoff: true,
             ap_selection: crate::solvers::ApSelection::Greedy,
+            threads: opts.threads,
+            ap_block_precond: opts.ap_precond,
         };
-        let solver = make_solver(opts.solver);
+        let mut solver = make_solver(opts.solver);
+        let precond: SharedPreconditionerCache = PreconditionerCache::shared();
+        solver.set_precond_cache(precond.clone());
         Trainer {
             opts,
             op,
@@ -165,6 +195,10 @@ impl Trainer {
             v_store,
             solve_opts,
             sgd_lr_resolved: None,
+            precond,
+            spent_epochs: 0.0,
+            spent_solver_secs: 0.0,
+            step_count: 0,
         }
     }
 
@@ -194,28 +228,60 @@ impl Trainer {
         &self.probes
     }
 
+    /// The coordinator-owned preconditioner cache (diagnostics / tests).
+    pub fn precond_cache(&self) -> &PreconditionerCache {
+        &self.precond
+    }
+
+    /// One metered solve: every epoch and second of solver work anywhere
+    /// in the trainer goes through here so nothing is dropped from the
+    /// reported totals.
+    fn timed_solve(&mut self, b: &Mat, v: &mut Mat) -> SolveReport {
+        let t = Instant::now();
+        let report = self.solver.solve(self.op.as_ref(), b, v, &self.solve_opts);
+        self.spent_solver_secs += t.elapsed().as_secs_f64();
+        self.spent_epochs += report.epochs;
+        report
+    }
+
     /// Test targets (for experiment-side metric recomputation).
     pub fn y_test(&self) -> &[f64] {
         &self.y_test
     }
 
-    /// Snapshot the resumable training state.
-    pub fn checkpoint(&self, step: u64) -> checkpoint::Checkpoint {
+    /// Snapshot the resumable training state at the current
+    /// completed-step count (the counter controls cold-start probe
+    /// resampling after a restore, so it is read from the trainer rather
+    /// than trusted to the caller).
+    pub fn checkpoint(&self) -> checkpoint::Checkpoint {
         let (m, v, t) = self.adam.state();
         checkpoint::Checkpoint {
-            step,
+            step: self.step_count,
             seed: self.opts.seed,
             nu: self.params.nu.clone(),
             adam_m: m.to_vec(),
             adam_v: v.to_vec(),
             adam_t: t,
             v_store: self.v_store.clone(),
+            rng: Some(self.rng.state()),
+            sgd_lr: self.sgd_lr_resolved,
         }
     }
 
-    /// Resume from a checkpoint (hyperparameters, Adam moments and the
-    /// warm-start store; probe randomness is reconstructed from the seed,
-    /// which `Trainer::new` already derives deterministically).
+    /// Resume from a checkpoint: hyperparameters, Adam moments, the
+    /// warm-start store, the completed-step counter, the resolved SGD
+    /// learning rate (so a resumed SGD run does not re-autotune at the
+    /// sharpened hyperparameters) and — when present — the trainer RNG
+    /// mid-stream state, so runs that keep drawing randomness after the
+    /// restore point (cold starts resample probes every step) continue
+    /// the exact sequence.  The *initial* probe set is reconstructed from
+    /// the seed by `Trainer::new`; cold-start resumes replace it on the
+    /// first resumed step.
+    ///
+    /// Limitation: solver-*internal* randomness (SGD's minibatch stream,
+    /// AP's `Random`/`Cyclic` selection state) is not serialised, so those
+    /// modes resume correctly but not bit-reproducibly; CG and greedy AP
+    /// are RNG-free and reproduce exactly.
     pub fn restore(&mut self, ck: &checkpoint::Checkpoint) {
         assert_eq!(ck.nu.len(), self.params.nu.len());
         assert_eq!(
@@ -225,6 +291,14 @@ impl Trainer {
         self.params.nu = ck.nu.clone();
         self.adam.restore_state(ck.adam_m.clone(), ck.adam_v.clone(), ck.adam_t);
         self.v_store = ck.v_store.clone();
+        self.step_count = ck.step;
+        if let Some(st) = &ck.rng {
+            self.rng = Rng::from_state(st);
+        }
+        if let Some(lr) = ck.sgd_lr {
+            self.solve_opts.sgd_lr = lr;
+            self.sgd_lr_resolved = Some(lr);
+        }
         let theta = self.params.theta();
         let hp = crate::kernels::Hyperparams::unpack(&theta, self.op.d());
         self.op.set_hp(&hp);
@@ -234,8 +308,11 @@ impl Trainer {
     pub fn run(&mut self, steps: usize) -> Result<TrainOutcome> {
         let t_total = Instant::now();
         let mut telemetry = Vec::with_capacity(steps);
-        let mut solver_secs = 0.0;
-        let mut total_epochs = 0.0;
+        // totals are deltas of the lifetime spend counters, so *every*
+        // solve in this run — training, prediction, evaluation re-solves,
+        // autotune probes — is accounted
+        let epochs0 = self.spent_epochs;
+        let secs0 = self.spent_solver_secs;
 
         for step in 0..steps {
             let t_step = Instant::now();
@@ -244,23 +321,33 @@ impl Trainer {
             self.op.set_hp(&hp);
 
             // (re)sample probes unless warm starting (targets must be
-            // frozen for warm starts; Section 4)
-            if !self.opts.warm_start && step > 0 {
+            // frozen for warm starts; Section 4).  `step_count` counts
+            // completed steps over the trainer's lifetime, so a restored
+            // run resamples exactly where the uninterrupted run would.
+            if !self.opts.warm_start && self.step_count > 0 {
                 self.probes = ProbeSet::sample(self.opts.estimator, self.op.as_ref(), &mut self.rng);
             }
             let b = self.probes.targets(self.op.as_ref(), &self.y_train);
 
-            // SGD learning-rate auto-tune on the first step (paper protocol)
+            // SGD learning-rate auto-tune on the first step (paper
+            // protocol); the probe epochs are real solver work and are
+            // charged against the totals
             if self.opts.solver == SolverKind::Sgd && self.sgd_lr_resolved.is_none() {
                 let lr = match self.opts.sgd_lr {
                     Some(lr) => lr,
-                    None => autotune_lr(
-                        self.op.as_ref(),
-                        &b,
-                        &self.solve_opts,
-                        &[1.0, 2.0, 4.0, 8.0, 12.0, 16.0, 24.0, 32.0, 48.0, 64.0],
-                        self.opts.sgd_lr_halve,
-                    ),
+                    None => {
+                        let t_tune = Instant::now();
+                        let (lr, probe_epochs) = autotune_lr(
+                            self.op.as_ref(),
+                            &b,
+                            &self.solve_opts,
+                            &[1.0, 2.0, 4.0, 8.0, 12.0, 16.0, 24.0, 32.0, 48.0, 64.0],
+                            self.opts.sgd_lr_halve,
+                        );
+                        self.spent_solver_secs += t_tune.elapsed().as_secs_f64();
+                        self.spent_epochs += probe_epochs;
+                        lr
+                    }
                 };
                 self.solve_opts.sgd_lr = lr;
                 self.sgd_lr_resolved = Some(lr);
@@ -272,11 +359,9 @@ impl Trainer {
             } else {
                 Mat::zeros(self.op.n(), self.op.s() + 1)
             };
-            let t_solve = Instant::now();
-            let report = self.solver.solve(self.op.as_ref(), &b, &mut v, &self.solve_opts);
-            let solve_elapsed = t_solve.elapsed().as_secs_f64();
-            solver_secs += solve_elapsed;
-            total_epochs += report.epochs;
+            let secs_before = self.spent_solver_secs;
+            let report = self.timed_solve(&b, &mut v);
+            let solve_elapsed = self.spent_solver_secs - secs_before;
             if self.opts.warm_start {
                 self.v_store = v.clone();
             }
@@ -311,6 +396,7 @@ impl Trainer {
                 exact_mll,
                 metrics: step_metrics,
             });
+            self.step_count += 1;
         }
 
         // final prediction: set final hyperparameters, make sure we have a
@@ -326,14 +412,16 @@ impl Trainer {
             theta,
             final_metrics,
             total_secs: t_total.elapsed().as_secs_f64(),
-            solver_secs,
-            total_epochs,
+            solver_secs: self.spent_solver_secs - secs0,
+            total_epochs: self.spent_epochs - epochs0,
             sgd_lr_used: self.sgd_lr_resolved.unwrap_or(0.0),
         })
     }
 
     /// Solve the current system for prediction purposes (amortised for the
     /// warm-started pathwise estimator: the stored solution is reused).
+    /// The solve is metered like any other — its epochs and wall time land
+    /// in the reported totals.
     fn solve_for_prediction(&mut self) -> Result<Mat> {
         let b = self.probes.targets(self.op.as_ref(), &self.y_train);
         let mut v = if self.opts.warm_start {
@@ -341,8 +429,7 @@ impl Trainer {
         } else {
             Mat::zeros(self.op.n(), self.op.s() + 1)
         };
-        let report = self.solver.solve(self.op.as_ref(), &b, &mut v, &self.solve_opts);
-        let _ = report;
+        let _report = self.timed_solve(&b, &mut v);
         if self.opts.warm_start {
             self.v_store = v.clone();
         }
@@ -364,11 +451,22 @@ impl Trainer {
                 v.col(0),
             ),
             EstimatorKind::Standard => {
-                // extra pathwise solves for posterior samples
-                let pw = ProbeSet::sample(EstimatorKind::Pathwise, self.op.as_ref(), &mut self.rng);
+                // extra pathwise solves for posterior samples — this is
+                // exactly the amortisation gap the paper quantifies, so
+                // the work is metered into the totals like any solve.
+                // The probes come from a stream derived from (seed, step
+                // count) instead of the trainer RNG: evaluation must not
+                // advance the training stream, or a checkpoint taken
+                // after `run` (whose tail always evaluates) would resume
+                // on a different random sequence than the uninterrupted
+                // run at the same step.
+                let mut eval_rng = Rng::new(
+                    self.opts.seed ^ 0xE7A1 ^ self.step_count.wrapping_mul(0x9E3779B97F4A7C15),
+                );
+                let pw = ProbeSet::sample(EstimatorKind::Pathwise, self.op.as_ref(), &mut eval_rng);
                 let b = pw.targets(self.op.as_ref(), &self.y_train);
                 let mut vs = Mat::zeros(self.op.n(), self.op.s() + 1);
-                let _ = self.solver.solve(self.op.as_ref(), &b, &mut vs, &self.solve_opts);
+                let _ = self.timed_solve(&b, &mut vs);
                 (pw.zhat(&vs), pw.omega0.clone(), pw.wts.clone(), vs.col(0))
             }
         };
@@ -558,7 +656,7 @@ mod tests {
         a.run(8).unwrap();
         let (mut b1, ds) = trainer(SolverKind::Ap, EstimatorKind::Pathwise, true);
         b1.run(4).unwrap();
-        let ck = b1.checkpoint(4);
+        let ck = b1.checkpoint();
         let op2 = DenseOperator::new(&ds, 8, 32);
         let opts2 = b1.opts.clone();
         let mut b2 = Trainer::new(opts2, Box::new(op2), &ds);
@@ -569,6 +667,131 @@ mod tests {
         for (x, y) in ta.iter().zip(&tb) {
             assert!((x - y).abs() < 1e-9, "{x} vs {y}");
         }
+    }
+
+    #[test]
+    fn prediction_and_evaluation_solves_are_accounted() {
+        // regression: solve_for_prediction discarded its SolveReport and
+        // the Standard estimator's extra pathwise solves in evaluate were
+        // uncounted, so totals under-reported real work.  The totals must
+        // strictly exceed the per-step telemetry sum (final prediction
+        // solve + Standard evaluation re-solve are on top of it).
+        let (mut t, _) = trainer(SolverKind::Ap, EstimatorKind::Standard, false);
+        let out = t.run(4).unwrap();
+        let telemetry_epochs: f64 = out.telemetry.iter().map(|tel| tel.epochs).sum();
+        assert!(
+            out.total_epochs > telemetry_epochs + 1e-9,
+            "totals {} must include prediction/evaluation work beyond telemetry {}",
+            out.total_epochs,
+            telemetry_epochs
+        );
+        let telemetry_secs: f64 = out.telemetry.iter().map(|tel| tel.solver_secs).sum();
+        assert!(out.solver_secs >= telemetry_secs);
+    }
+
+    #[test]
+    fn autotune_probe_epochs_are_accounted() {
+        let ds = data::generate(&data::spec("test").unwrap());
+        let mk = |sgd_lr| {
+            let op = DenseOperator::new(&ds, 8, 32);
+            let opts = TrainerOptions {
+                solver: SolverKind::Sgd,
+                estimator: EstimatorKind::Pathwise,
+                warm_start: true,
+                epoch_cap: 200.0,
+                block_size: Some(64),
+                sgd_lr,
+                seed: 7,
+                ..Default::default()
+            };
+            Trainer::new(opts, Box::new(op), &ds)
+        };
+        // identical run except the None trainer pays for autotune probes
+        let out_fixed = mk(Some(8.0)).run(3).unwrap();
+        let out_tuned = mk(None).run(3).unwrap();
+        let tel_fixed: f64 = out_fixed.telemetry.iter().map(|tel| tel.epochs).sum();
+        let tel_tuned: f64 = out_tuned.telemetry.iter().map(|tel| tel.epochs).sum();
+        // probes cost >= 1 epoch of extra accounted work relative to the
+        // telemetry sum (which excludes them)
+        assert!(
+            out_tuned.total_epochs - tel_tuned >= out_fixed.total_epochs - tel_fixed + 1.0 - 1e-9,
+            "tuned {} (tel {tel_tuned}) vs fixed {} (tel {tel_fixed})",
+            out_tuned.total_epochs,
+            out_fixed.total_epochs
+        );
+        assert!(out_tuned.sgd_lr_used > 0.0);
+    }
+
+    #[test]
+    fn cold_start_checkpoint_resume_reproduces_training() {
+        // regression: checkpoints omitted the trainer RNG state, so
+        // cold-start runs (which resample probes from that RNG every
+        // step) diverged after a restore.  8 straight steps vs
+        // 4 + checkpoint/restore + 4 must give identical thetas.
+        let (mut a, _) = trainer(SolverKind::Ap, EstimatorKind::Pathwise, false);
+        a.run(8).unwrap();
+        let (mut b1, ds) = trainer(SolverKind::Ap, EstimatorKind::Pathwise, false);
+        b1.run(4).unwrap();
+        let ck = b1.checkpoint();
+        assert!(ck.rng.is_some(), "checkpoint must carry the RNG state");
+        let op2 = DenseOperator::new(&ds, 8, 32);
+        let mut b2 = Trainer::new(b1.opts.clone(), Box::new(op2), &ds);
+        b2.restore(&ck);
+        b2.run(4).unwrap();
+        for (x, y) in a.theta().iter().zip(&b2.theta()) {
+            assert!((x - y).abs() < 1e-9, "{x} vs {y}");
+        }
+    }
+
+    #[test]
+    fn restored_sgd_keeps_autotuned_rate() {
+        // the checkpoint carries the resolved SGD learning rate, so a
+        // resumed run neither re-autotunes (at sharpened hyperparameters,
+        // against the paper's first-step-only protocol) nor re-pays the
+        // probe epochs
+        let ds = data::generate(&data::spec("test").unwrap());
+        let opts = TrainerOptions {
+            solver: SolverKind::Sgd,
+            estimator: EstimatorKind::Pathwise,
+            warm_start: true,
+            epoch_cap: 200.0,
+            block_size: Some(64),
+            sgd_lr: None, // autotune on the first step
+            seed: 7,
+            ..Default::default()
+        };
+        let op = DenseOperator::new(&ds, 8, 32);
+        let mut t1 = Trainer::new(opts.clone(), Box::new(op), &ds);
+        let out1 = t1.run(2).unwrap();
+        assert!(out1.sgd_lr_used > 0.0);
+        let ck = t1.checkpoint();
+        assert_eq!(ck.sgd_lr, Some(out1.sgd_lr_used));
+
+        let op2 = DenseOperator::new(&ds, 8, 32);
+        let mut t2 = Trainer::new(opts, Box::new(op2), &ds);
+        t2.restore(&ck);
+        let out2 = t2.run(2).unwrap();
+        assert_eq!(out2.sgd_lr_used, out1.sgd_lr_used);
+    }
+
+    #[test]
+    fn preconditioner_cache_is_shared_across_solves() {
+        // With the Standard estimator, `evaluate` runs an extra pathwise
+        // solve at the same hyperparameters as the final prediction solve;
+        // the coordinator-owned cache must serve it from the existing
+        // factorisation instead of rebuilding.
+        let (mut t, _) = trainer(SolverKind::Cg, EstimatorKind::Standard, true);
+        let steps = 5;
+        let out = t.run(steps).unwrap();
+        assert!(out.final_metrics.rmse.is_finite());
+        let builds = t.precond_cache().woodbury_builds();
+        // one build per distinct theta: one per training step plus the
+        // final (post-Adam) theta of the prediction solve
+        assert!(
+            builds <= steps as u64 + 1,
+            "cache not shared: {builds} builds for {steps} steps"
+        );
+        assert!(t.precond_cache().hits() >= 1, "evaluation solve should hit the cache");
     }
 
     #[test]

@@ -11,7 +11,7 @@ mod pivoted;
 mod power;
 
 pub use chol::Cholesky;
-pub use pivoted::{pivoted_cholesky, PivotedCholesky};
+pub use pivoted::{pivoted_cholesky, pivoted_cholesky_threaded, PivotedCholesky};
 pub use power::{inverse_power_iteration, power_iteration};
 
 /// Row-major dense matrix.
@@ -102,16 +102,44 @@ impl Mat {
         for i in 0..m {
             let a_row = self.row(i);
             let out_row = &mut out.data[i * n..(i + 1) * n];
-            for (k, &a) in a_row.iter().enumerate().take(kk) {
-                if a == 0.0 {
-                    continue;
-                }
-                let b_row = &other.data[k * n..(k + 1) * n];
-                for j in 0..n {
-                    out_row[j] += a * b_row[j];
-                }
-            }
+            matmul_row(a_row, other, kk, n, out_row);
         }
+        out
+    }
+
+    /// [`Mat::matmul`] with output rows spread over `threads` workers
+    /// (0 = auto).  Every output row is produced by exactly the same
+    /// k-major accumulation as the serial path (`matmul_row`), and rows are
+    /// disjoint `&mut` blocks, so the product is **bitwise-identical** to
+    /// `matmul` for every thread count — the parity-test contract above is
+    /// preserved.
+    pub fn matmul_threaded(&self, other: &Mat, threads: usize) -> Mat {
+        assert_eq!(self.cols, other.rows, "matmul shape mismatch");
+        let (m, kk, n) = (self.rows, self.cols, other.cols);
+        let flops = m * kk * n;
+        let t = if flops < (1 << 16) {
+            1
+        } else {
+            crate::util::parallel::num_threads(if threads == 0 { None } else { Some(threads) })
+        };
+        if t <= 1 {
+            return self.matmul(other);
+        }
+        let mut out = Mat::zeros(m, n);
+        let block = ((m + t - 1) / t).max(1);
+        crate::util::parallel::parallel_row_blocks(
+            &mut out.data,
+            n,
+            block,
+            t,
+            |r0, rows, blk| {
+                for r in 0..rows {
+                    let a_row = self.row(r0 + r);
+                    let out_row = &mut blk[r * n..(r + 1) * n];
+                    matmul_row(a_row, other, kk, n, out_row);
+                }
+            },
+        );
         out
     }
 
@@ -172,6 +200,21 @@ impl Mat {
     }
 }
 
+/// One output row of `matmul` — the single source of the k-major (ikj)
+/// accumulation order shared by the serial and threaded products.
+#[inline]
+fn matmul_row(a_row: &[f64], other: &Mat, kk: usize, n: usize, out_row: &mut [f64]) {
+    for (k, &a) in a_row.iter().enumerate().take(kk) {
+        if a == 0.0 {
+            continue;
+        }
+        let b_row = &other.data[k * n..(k + 1) * n];
+        for j in 0..n {
+            out_row[j] += a * b_row[j];
+        }
+    }
+}
+
 impl std::ops::Index<(usize, usize)> for Mat {
     type Output = f64;
     #[inline]
@@ -207,6 +250,18 @@ mod tests {
         let b = Mat::from_vec(2, 2, vec![5.0, 6.0, 7.0, 8.0]);
         let c = a.matmul(&b);
         assert_eq!(c.data, vec![19.0, 22.0, 43.0, 50.0]);
+    }
+
+    #[test]
+    fn matmul_threaded_is_bitwise_equal_to_serial() {
+        let mut rng = crate::util::rng::Rng::new(11);
+        // big enough to clear the parallel threshold (96*96*96 > 2^16)
+        let a = Mat::from_fn(96, 96, |_, _| rng.gaussian());
+        let b = Mat::from_fn(96, 96, |_, _| rng.gaussian());
+        let serial = a.matmul(&b);
+        for t in [1, 2, 4, 7] {
+            assert_eq!(a.matmul_threaded(&b, t), serial, "threads={t}");
+        }
     }
 
     #[test]

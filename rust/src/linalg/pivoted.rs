@@ -4,6 +4,7 @@
 //! are evaluated, so the cost is O(rank^2 n + rank * n * d).
 
 use super::Mat;
+use crate::util::parallel::{num_threads, parallel_row_blocks};
 
 /// Partial Cholesky factor: K ~= L L^T with L [n, rank].
 #[derive(Clone, Debug)]
@@ -12,15 +13,36 @@ pub struct PivotedCholesky {
     pub pivots: Vec<usize>,
 }
 
+/// Below this many row-update elements the column update runs inline
+/// (spawning workers costs more than the update itself).
+const PAR_MIN_ELEMS: usize = 1 << 16;
+
 /// `diag[i]` = K_ii; `row(i)` returns the dense row K_i.
 pub fn pivoted_cholesky(
     n: usize,
     rank: usize,
     diag: &[f64],
+    row: impl FnMut(usize) -> Vec<f64>,
+) -> PivotedCholesky {
+    pivoted_cholesky_threaded(n, rank, diag, row, 0)
+}
+
+/// [`pivoted_cholesky`] with the O(n) column/diagonal updates of every
+/// elimination step spread over `threads` workers (0 = auto).  Each row of
+/// L is updated by the same scalar expressions as the serial loop on
+/// disjoint `&mut` blocks, so the factor is bitwise-identical for every
+/// thread count.  `row(i)` itself is still evaluated on the calling thread
+/// (callers that can parallelise the kernel row do so inside the closure).
+pub fn pivoted_cholesky_threaded(
+    n: usize,
+    rank: usize,
+    diag: &[f64],
     mut row: impl FnMut(usize) -> Vec<f64>,
+    threads: usize,
 ) -> PivotedCholesky {
     assert_eq!(diag.len(), n);
     let rank = rank.min(n);
+    let t = num_threads(if threads == 0 { None } else { Some(threads) });
     let mut d = diag.to_vec();
     let mut l = Mat::zeros(n, rank);
     let mut pivots = Vec::with_capacity(rank);
@@ -42,18 +64,29 @@ pub fn pivoted_cholesky(
         pivots.push(p);
         let sqrt_dp = dp.sqrt();
         let kp = row(p); // K[:, p] by symmetry
-        for i in 0..n {
-            let mut v = kp[i];
-            for j in 0..k {
-                v -= l[(i, j)] * l[(p, j)];
+        let lp: Vec<f64> = l.row(p)[..k].to_vec();
+        let tk = if n * (k + 1) < PAR_MIN_ELEMS { 1 } else { t };
+        // column update: row i touches only L[i, ..] — disjoint writes
+        let block = ((n + tk - 1) / tk).max(1);
+        parallel_row_blocks(&mut l.data, rank, block, tk, |r0, rows, blk| {
+            for r in 0..rows {
+                let lrow = &mut blk[r * rank..(r + 1) * rank];
+                let mut v = kp[r0 + r];
+                for j in 0..k {
+                    v -= lrow[j] * lp[j];
+                }
+                lrow[k] = v / sqrt_dp;
             }
-            l[(i, k)] = v / sqrt_dp;
-        }
+        });
+        // diagonal downdate, row-parallel over the (now final) column k
+        let lref = &l;
+        parallel_row_blocks(&mut d, 1, block, tk, |r0, rows, blk| {
+            for r in 0..rows {
+                let lik = lref[(r0 + r, k)];
+                blk[r] = (blk[r] - lik * lik).max(0.0);
+            }
+        });
         // exact zero for the pivot column residual
-        for i in 0..n {
-            let lik = l[(i, k)];
-            d[i] = (d[i] - lik * lik).max(0.0);
-        }
         d[p] = 0.0;
     }
     PivotedCholesky { l, pivots }
@@ -121,6 +154,22 @@ mod tests {
         p.sort_unstable();
         p.dedup();
         assert_eq!(p.len(), pc.pivots.len());
+    }
+
+    #[test]
+    fn threaded_factor_is_bitwise_equal_to_serial() {
+        let mut rng = Rng::new(7);
+        let n = 48;
+        let g = Mat::from_fn(n, n, |_, _| rng.gaussian());
+        let mut a = g.matmul(&g.transpose());
+        a.add_diag(0.2);
+        let diag: Vec<f64> = (0..n).map(|i| a[(i, i)]).collect();
+        let serial = pivoted_cholesky_threaded(n, 12, &diag, |i| a.row(i).to_vec(), 1);
+        for t in [2, 4] {
+            let par = pivoted_cholesky_threaded(n, 12, &diag, |i| a.row(i).to_vec(), t);
+            assert_eq!(par.pivots, serial.pivots, "t={t}");
+            assert_eq!(par.l, serial.l, "t={t}");
+        }
     }
 
     #[test]

@@ -171,6 +171,7 @@ fn cmd_train(args: &[String]) -> Result<()> {
         block_size: block,
         seed: rc.seed,
         predict_every: Some(10),
+        threads: rc.threads,
         ..Default::default()
     };
     let mut trainer = Trainer::new(opts, op, &ds);

@@ -9,16 +9,19 @@
 //! not dominate.
 
 use super::{
-    residual_norms, ApSelection, LinearSolver, Normalized, SolveOptions, SolveReport, SolverKind,
+    recurrence, residual_norms_t, ApSelection, LinearSolver, Normalized, PreconditionerCache,
+    SharedPreconditionerCache, SolveOptions, SolveReport, SolverKind,
 };
-use crate::kernels;
-use crate::linalg::{Cholesky, Mat};
+use crate::linalg::Mat;
 use crate::operators::KernelOperator;
 use crate::util::rng::Rng;
 
 pub struct ApSolver {
-    /// Cached per-block factors keyed by hyperparameters.
-    cache: Option<(Vec<f64>, Vec<Cholesky>)>,
+    /// Per-block Cholesky factors live in the shared preconditioner cache,
+    /// keyed on (hyperparameter bits, block size) — changing either
+    /// rebuilds.  The `Trainer` injects its own cache via
+    /// [`LinearSolver::set_precond_cache`].
+    cache: SharedPreconditionerCache,
     /// RNG for ApSelection::Random; cursor for ApSelection::Cyclic.
     rng: Rng,
     cursor: usize,
@@ -26,50 +29,8 @@ pub struct ApSolver {
 
 impl Default for ApSolver {
     fn default() -> Self {
-        ApSolver { cache: None, rng: Rng::new(0xA9), cursor: 0 }
+        ApSolver { cache: PreconditionerCache::shared(), rng: Rng::new(0xA9), cursor: 0 }
     }
-}
-
-impl ApSolver {
-    fn factors(&mut self, op: &dyn KernelOperator, b: usize) -> &Vec<Cholesky> {
-        let theta = op.hp().pack();
-        let stale = match &self.cache {
-            Some((t, _)) => t != &theta,
-            None => true,
-        };
-        if stale {
-            let n = op.n();
-            assert_eq!(n % b, 0, "block size must divide n");
-            let x = op.x();
-            let hp = op.hp();
-            let fam = op.family();
-            let mut factors = Vec::with_capacity(n / b);
-            for blk in 0..n / b {
-                let idx: Vec<usize> = (blk * b..(blk + 1) * b).collect();
-                let xb = x.gather_rows(&idx);
-                let mut h_blk = kernels::kernel_matrix(&xb, &xb, hp, fam);
-                h_blk.add_diag(hp.noise_var());
-                factors.push(Cholesky::factor(&h_blk).expect("AP block SPD"));
-            }
-            self.cache = Some((theta, factors));
-        }
-        &self.cache.as_ref().unwrap().1
-    }
-}
-
-/// Block selection metric of Algorithm 2: || sum_cols R[block rows] ||.
-fn block_scores(r: &Mat, b: usize) -> Vec<f64> {
-    let nblocks = r.rows / b;
-    let mut scores = vec![0.0; nblocks];
-    for blk in 0..nblocks {
-        let mut s = 0.0;
-        for i in blk * b..(blk + 1) * b {
-            let row_sum: f64 = r.row(i).iter().sum();
-            s += row_sum * row_sum;
-        }
-        scores[blk] = s.sqrt();
-    }
-    scores
 }
 
 impl LinearSolver for ApSolver {
@@ -82,18 +43,31 @@ impl LinearSolver for ApSolver {
     ) -> SolveReport {
         let bsz = opts.block_size;
         let n = op.n();
+        let threads = recurrence::resolve_threads(opts.threads);
         let noise_var = op.hp().noise_var();
-        // build/refresh factor cache before borrowing
-        self.factors(op, bsz);
-        let factors = &self.cache.as_ref().unwrap().1;
+        let factors = self.cache.ap_block_factors(op, bsz, threads);
+        // optional block preconditioning: greedy selection scores the
+        // M^-1-preconditioned residual, steering sweeps toward blocks
+        // whose error survives the low-rank correction (greedy-only: the
+        // other selection rules never look at scores, so don't pay the
+        // O(rho^2 n) build for them)
+        let pre = if opts.ap_block_precond
+            && opts.precond_rank > 0
+            && opts.ap_selection == ApSelection::Greedy
+        {
+            Some(self.cache.woodbury(op, opts.precond_rank, threads))
+        } else {
+            None
+        };
 
-        let (norm, mut r) = Normalized::setup(op, b_mat, v0);
+        let (norm, mut r) = Normalized::setup_t(op, b_mat, v0, threads);
         let mut v = v0.clone();
-        let init_residual_sq: f64 = r.data.iter().map(|x| x * x).sum();
+        let init_residual_sq: f64 =
+            recurrence::col_sq_sums(&r, threads).iter().sum();
 
         let mut epochs = norm.warm_epoch_cost;
         let mut iterations = 0usize;
-        let (mut ry, mut rz) = residual_norms(&r);
+        let (mut ry, mut rz) = residual_norms_t(&r, threads);
         let tol = opts.tolerance;
         let epoch_per_iter = bsz as f64 / n as f64;
 
@@ -101,7 +75,13 @@ impl LinearSolver for ApSolver {
         while (ry > tol || rz > tol) && epochs + epoch_per_iter <= opts.max_epochs {
             let blk = match opts.ap_selection {
                 ApSelection::Greedy => {
-                    let scores = block_scores(&r, bsz);
+                    let scores = match &pre {
+                        Some(p) => {
+                            let z = p.apply_t(&r, threads);
+                            recurrence::block_scores(&z, bsz, threads)
+                        }
+                        None => recurrence::block_scores(&r, bsz, threads),
+                    };
                     scores
                         .iter()
                         .enumerate()
@@ -132,7 +112,7 @@ impl LinearSolver for ApSolver {
 
             // r -= K(X, X_I) u  (operator product) and the sigma^2 scatter
             let ku = op.k_cols(&idx, &u); // [n, k]
-            r.sub_assign(&ku);
+            recurrence::sub_assign(&mut r, &ku, threads);
             for (bi, &i) in idx.iter().enumerate() {
                 let rr = r.row_mut(i);
                 for (j, val) in rr.iter_mut().enumerate() {
@@ -142,12 +122,12 @@ impl LinearSolver for ApSolver {
 
             epochs += epoch_per_iter;
             iterations += 1;
-            let (a, b_) = residual_norms(&r);
+            let (a, b_) = residual_norms_t(&r, threads);
             ry = a;
             rz = b_;
         }
 
-        norm.finish(&mut v);
+        norm.finish_t(&mut v, threads);
         *v0 = v;
         SolveReport {
             iterations,
@@ -161,6 +141,10 @@ impl LinearSolver for ApSolver {
 
     fn kind(&self) -> SolverKind {
         SolverKind::Ap
+    }
+
+    fn set_precond_cache(&mut self, cache: SharedPreconditionerCache) {
+        self.cache = cache;
     }
 }
 
@@ -288,7 +272,71 @@ mod tests {
     fn greedy_selection_picks_worst_block() {
         let mut r = Mat::zeros(8, 2);
         r[(5, 0)] = 10.0; // block 1 of size 4
-        let scores = block_scores(&r, 4);
+        let scores = recurrence::block_scores(&r, 4, 1);
         assert!(scores[1] > scores[0]);
+    }
+
+    #[test]
+    fn block_size_change_between_solves_rebuilds_factors() {
+        // regression: factors were keyed on hyperparameters alone, so a
+        // block-size change silently reused the wrong factorisation
+        let (op, b) = setup();
+        let mut solver = ApSolver::default();
+        let mk = |bsz| SolveOptions {
+            tolerance: 0.05,
+            block_size: bsz,
+            max_epochs: 3000.0,
+            ..Default::default()
+        };
+        let mut v1 = Mat::zeros(op.n(), op.k_width());
+        let rep64 = solver.solve(&op, &b, &mut v1, &mk(64));
+        let mut v2 = Mat::zeros(op.n(), op.k_width());
+        let rep32 = solver.solve(&op, &b, &mut v2, &mk(32));
+        assert!(rep64.converged && rep32.converged, "{rep64:?} {rep32:?}");
+        let mut v3 = Mat::zeros(op.n(), op.k_width());
+        let rep32_fresh = ApSolver::default().solve(&op, &b, &mut v3, &mk(32));
+        assert_eq!(rep32, rep32_fresh);
+        assert_eq!(v2.data, v3.data);
+    }
+
+    #[test]
+    fn block_precond_mode_converges_to_same_solution() {
+        let (op, b) = setup();
+        let opts = SolveOptions {
+            tolerance: 1e-6,
+            max_epochs: 3000.0,
+            block_size: 64,
+            precond_rank: 32,
+            ap_block_precond: true,
+            ..Default::default()
+        };
+        let mut v = Mat::zeros(op.n(), op.k_width());
+        let rep = ApSolver::default().solve(&op, &b, &mut v, &opts);
+        assert!(rep.converged, "{rep:?}");
+        let want = Chol::factor(op.h()).unwrap().solve_mat(&b);
+        assert!(v.max_abs_diff(&want) < 1e-4, "{}", v.max_abs_diff(&want));
+    }
+
+    #[test]
+    fn threaded_solve_is_bitwise_equal_to_serial() {
+        let (op, b) = setup();
+        let run = |threads: usize| {
+            let opts = SolveOptions {
+                tolerance: 1e-6,
+                max_epochs: 3000.0,
+                block_size: 64,
+                threads,
+                ..Default::default()
+            };
+            let mut v = Mat::zeros(op.n(), op.k_width());
+            let rep = ApSolver::default().solve(&op, &b, &mut v, &opts);
+            (rep, v)
+        };
+        let (rep1, v1) = run(1);
+        for t in [2, 4] {
+            let (rep, v) = run(t);
+            assert_eq!(rep, rep1, "threads={t}");
+            assert_eq!(v.data, v1.data, "threads={t}");
+        }
     }
 }

@@ -3,36 +3,23 @@
 //! One iteration touches every entry of H once, so 1 iteration = 1 epoch.
 
 use super::{
-    axpy_cols, col_dots, residual_norms, LinearSolver, Normalized, SolveOptions, SolveReport,
-    SolverKind, WoodburyPreconditioner,
+    recurrence, residual_norms_t, LinearSolver, Normalized, PreconditionerCache,
+    SharedPreconditionerCache, SolveOptions, SolveReport, SolverKind,
 };
 use crate::linalg::Mat;
 use crate::operators::KernelOperator;
 
-#[derive(Default)]
 pub struct CgSolver {
-    /// Keep the preconditioner across `solve` calls when hyperparameters
-    /// did not change (rebuilt whenever they do).
-    cache: Option<(Vec<f64>, WoodburyPreconditioner)>,
+    /// Preconditioner store keyed on (hyperparameter bits, rank) —
+    /// rebuilt whenever either changes.  Private by default; the `Trainer`
+    /// injects its own via [`LinearSolver::set_precond_cache`] so
+    /// factorisations are shared across solves and solver instances.
+    cache: SharedPreconditionerCache,
 }
 
-impl CgSolver {
-    fn preconditioner(
-        &mut self,
-        op: &dyn KernelOperator,
-        opts: &SolveOptions,
-    ) -> &WoodburyPreconditioner {
-        let theta = op.hp().pack();
-        let stale = match &self.cache {
-            Some((t, _)) => t != &theta,
-            None => true,
-        };
-        if stale {
-            let pre =
-                WoodburyPreconditioner::build(op.x(), op.hp(), op.family(), opts.precond_rank);
-            self.cache = Some((theta, pre));
-        }
-        &self.cache.as_ref().unwrap().1
+impl Default for CgSolver {
+    fn default() -> Self {
+        CgSolver { cache: PreconditionerCache::shared() }
     }
 }
 
@@ -44,22 +31,20 @@ impl LinearSolver for CgSolver {
         v0: &mut Mat,
         opts: &SolveOptions,
     ) -> SolveReport {
-        let pre = {
-            // borrow dance: build/refresh the cache first
-            self.preconditioner(op, opts);
-            &self.cache.as_ref().unwrap().1
-        };
-        let (norm, mut r) = Normalized::setup(op, b, v0);
+        let threads = recurrence::resolve_threads(opts.threads);
+        let pre = self.cache.woodbury(op, opts.precond_rank, threads);
+        let (norm, mut r) = Normalized::setup_t(op, b, v0, threads);
         let mut v = v0.clone();
-        let init_residual_sq: f64 = r.data.iter().map(|x| x * x).sum();
+        let init_residual_sq: f64 =
+            recurrence::col_sq_sums(&r, threads).iter().sum();
 
-        let mut p = pre.apply(&r);
+        let mut p = pre.apply_t(&r, threads);
         let mut d = p.clone();
-        let mut gamma = col_dots(&r, &p);
+        let mut gamma = recurrence::col_dots(&r, &p, threads);
 
         let mut epochs = norm.warm_epoch_cost;
         let mut iterations = 0usize;
-        let (mut ry, mut rz) = residual_norms(&r);
+        let (mut ry, mut rz) = residual_norms_t(&r, threads);
         let tol = opts.tolerance;
 
         while (ry > tol || rz > tol) && epochs + 1.0 <= opts.max_epochs {
@@ -67,38 +52,31 @@ impl LinearSolver for CgSolver {
             epochs += 1.0;
             iterations += 1;
 
-            let denom = col_dots(&d, &hd);
+            let denom = recurrence::col_dots(&d, &hd, threads);
             let alpha: Vec<f64> = gamma
                 .iter()
                 .zip(&denom)
                 .map(|(&g, &dn)| if dn > 0.0 { g / dn } else { 0.0 })
                 .collect();
-            axpy_cols(&mut v, &alpha, &d);
+            recurrence::axpy_cols(&mut v, &alpha, &d, threads);
             let neg_alpha: Vec<f64> = alpha.iter().map(|a| -a).collect();
-            axpy_cols(&mut r, &neg_alpha, &hd);
+            recurrence::axpy_cols(&mut r, &neg_alpha, &hd, threads);
 
-            p = pre.apply(&r);
-            let gamma_new = col_dots(&r, &p);
+            p = pre.apply_t(&r, threads);
+            let gamma_new = recurrence::col_dots(&r, &p, threads);
             let beta: Vec<f64> = gamma_new
                 .iter()
                 .zip(&gamma)
                 .map(|(&gn, &g)| if g.abs() > 0.0 { gn / g } else { 0.0 })
                 .collect();
-            // d = p + beta * d
-            for i in 0..d.rows {
-                let dr = d.row_mut(i);
-                let pr = &p.data[i * p.cols..(i + 1) * p.cols];
-                for j in 0..dr.len() {
-                    dr[j] = pr[j] + beta[j] * dr[j];
-                }
-            }
+            recurrence::direction_update(&mut d, &p, &beta, threads);
             gamma = gamma_new;
-            let (a, b_) = residual_norms(&r);
+            let (a, b_) = residual_norms_t(&r, threads);
             ry = a;
             rz = b_;
         }
 
-        norm.finish(&mut v);
+        norm.finish_t(&mut v, threads);
         *v0 = v;
         SolveReport {
             iterations,
@@ -112,6 +90,10 @@ impl LinearSolver for CgSolver {
 
     fn kind(&self) -> SolverKind {
         SolverKind::Cg
+    }
+
+    fn set_precond_cache(&mut self, cache: SharedPreconditionerCache) {
+        self.cache = cache;
     }
 }
 
@@ -181,6 +163,51 @@ mod tests {
         assert!(!rep.converged);
         assert!(rep.epochs <= 5.0 + 1e-9);
         assert_eq!(rep.iterations, 5);
+    }
+
+    #[test]
+    fn rank_change_between_solves_rebuilds_preconditioner() {
+        // regression: the old cache was keyed on hyperparameters only, so
+        // flipping precond_rank 64 -> 0 between solves kept applying the
+        // rank-64 preconditioner.  With the rank in the key, the second
+        // solve must behave exactly like a fresh unpreconditioned one.
+        let (op, b) = setup();
+        let opts64 = SolveOptions { tolerance: 0.01, precond_rank: 64, ..Default::default() };
+        let opts0 = SolveOptions { tolerance: 0.01, precond_rank: 0, ..Default::default() };
+
+        let mut solver = CgSolver::default();
+        let mut v = Mat::zeros(op.n(), op.k_width());
+        solver.solve(&op, &b, &mut v, &opts64);
+        let mut v_reused = Mat::zeros(op.n(), op.k_width());
+        let rep_reused = solver.solve(&op, &b, &mut v_reused, &opts0);
+
+        let mut v_fresh = Mat::zeros(op.n(), op.k_width());
+        let rep_fresh = CgSolver::default().solve(&op, &b, &mut v_fresh, &opts0);
+        assert_eq!(rep_reused, rep_fresh, "stale preconditioner leaked across ranks");
+        assert_eq!(v_reused.data, v_fresh.data);
+    }
+
+    #[test]
+    fn threaded_solve_is_bitwise_equal_to_serial() {
+        let (op, b) = setup();
+        let run = |threads: usize| {
+            let opts = SolveOptions {
+                tolerance: 1e-8,
+                max_epochs: 200.0,
+                precond_rank: 32,
+                threads,
+                ..Default::default()
+            };
+            let mut v = Mat::zeros(op.n(), op.k_width());
+            let rep = CgSolver::default().solve(&op, &b, &mut v, &opts);
+            (rep, v)
+        };
+        let (rep1, v1) = run(1);
+        for t in [2, 4] {
+            let (rep, v) = run(t);
+            assert_eq!(rep, rep1, "threads={t}");
+            assert_eq!(v.data, v1.data, "threads={t}");
+        }
     }
 
     #[test]

@@ -19,11 +19,12 @@
 mod ap;
 mod cg;
 mod precond;
+pub mod recurrence;
 mod sgd;
 
 pub use ap::ApSolver;
 pub use cg::CgSolver;
-pub use precond::WoodburyPreconditioner;
+pub use precond::{PreconditionerCache, SharedPreconditionerCache, WoodburyPreconditioner};
 pub use sgd::{autotune_lr, SgdSolver};
 
 use crate::linalg::Mat;
@@ -89,6 +90,13 @@ pub struct SolveOptions {
     /// the learning-rate auto-tuner so it can observe raw divergence).
     pub sgd_backoff: bool,
     pub ap_selection: ApSelection,
+    /// Worker threads for the solver-recurrence layer (0 = auto: the
+    /// `IGP_THREADS` env var, else all cores).  Results are
+    /// bitwise-identical for every value — see [`recurrence`].
+    pub threads: usize,
+    /// AP: score blocks on the preconditioned residual M^-1 r instead of r
+    /// (greedy selection only; needs `precond_rank > 0`).  Off by default.
+    pub ap_block_precond: bool,
 }
 
 impl Default for SolveOptions {
@@ -103,6 +111,8 @@ impl Default for SolveOptions {
             sgd_polyak: false,
             sgd_backoff: true,
             ap_selection: ApSelection::Greedy,
+            threads: 0,
+            ap_block_precond: false,
         }
     }
 }
@@ -135,6 +145,11 @@ pub trait LinearSolver {
     ) -> SolveReport;
 
     fn kind(&self) -> SolverKind;
+
+    /// Inject a coordinator-owned preconditioner cache so factorisations
+    /// are shared across solves (and across solver instances).  Solvers
+    /// without cached factorisations (SGD) ignore this.
+    fn set_precond_cache(&mut self, _cache: SharedPreconditionerCache) {}
 }
 
 pub fn make_solver(kind: SolverKind) -> Box<dyn LinearSolver> {
@@ -146,63 +161,45 @@ pub fn make_solver(kind: SolverKind) -> Box<dyn LinearSolver> {
 }
 
 // ---------------------------------------------------------------------------
-// Shared column helpers (Mat is row-major; columns are strided)
+// Shared column helpers (Mat is row-major; columns are strided).
+//
+// The implementations live in [`recurrence`] — the parallel recurrence
+// layer — with results bitwise-identical for every thread count.  These
+// wrappers keep the historical signatures (auto thread count) for callers
+// outside the solver inner loops; the solvers themselves resolve
+// `SolveOptions::threads` once per solve and call the `recurrence`
+// functions directly.
 // ---------------------------------------------------------------------------
 
 /// Per-column euclidean norms of a [n, k] matrix.
 pub fn col_norms(m: &Mat) -> Vec<f64> {
-    let mut acc = vec![0.0; m.cols];
-    for i in 0..m.rows {
-        let row = m.row(i);
-        for (j, &x) in row.iter().enumerate() {
-            acc[j] += x * x;
-        }
-    }
-    acc.into_iter().map(f64::sqrt).collect()
+    recurrence::col_norms(m, 0)
 }
 
 /// Scale column j by c[j].
 pub fn scale_cols(m: &mut Mat, c: &[f64]) {
-    assert_eq!(c.len(), m.cols);
-    for i in 0..m.rows {
-        let row = m.row_mut(i);
-        for (j, x) in row.iter_mut().enumerate() {
-            *x *= c[j];
-        }
-    }
+    recurrence::scale_cols(m, c, 0);
 }
 
 /// m += diag-scaled other: m[:,j] += a[j] * o[:,j].
 pub fn axpy_cols(m: &mut Mat, a: &[f64], o: &Mat) {
-    assert_eq!((m.rows, m.cols), (o.rows, o.cols));
-    assert_eq!(a.len(), m.cols);
-    for i in 0..m.rows {
-        let mr = &mut m.data[i * m.cols..(i + 1) * m.cols];
-        let or = &o.data[i * o.cols..(i + 1) * o.cols];
-        for j in 0..mr.len() {
-            mr[j] += a[j] * or[j];
-        }
-    }
+    recurrence::axpy_cols(m, a, o, 0);
 }
 
 /// Per-column dot products <a_j, b_j>.
 pub fn col_dots(a: &Mat, b: &Mat) -> Vec<f64> {
-    assert_eq!((a.rows, a.cols), (b.rows, b.cols));
-    let mut acc = vec![0.0; a.cols];
-    for i in 0..a.rows {
-        let ar = a.row(i);
-        let br = b.row(i);
-        for j in 0..a.cols {
-            acc[j] += ar[j] * br[j];
-        }
-    }
-    acc
+    recurrence::col_dots(a, b, 0)
 }
 
 /// (ry, rz) from a residual matrix whose columns are unit-normalised:
 /// ry = ||R[:,0]||, rz = mean_j ||R[:,j]||, j >= 1.
 pub fn residual_norms(r: &Mat) -> (f64, f64) {
-    let norms = col_norms(r);
+    residual_norms_t(r, 0)
+}
+
+/// [`residual_norms`] with an explicit recurrence thread count.
+pub fn residual_norms_t(r: &Mat, threads: usize) -> (f64, f64) {
+    let norms = recurrence::col_norms(r, threads);
     let ry = norms[0];
     let rz = if norms.len() > 1 {
         norms[1..].iter().sum::<f64>() / (norms.len() - 1) as f64
@@ -226,19 +223,29 @@ impl Normalized {
     /// R = b~ - H v~ and the epoch cost of computing it (1.0 if the warm
     /// start is nonzero, else 0.0 since R = b~ is free).
     pub fn setup(op: &dyn KernelOperator, b: &Mat, v0: &mut Mat) -> (Self, Mat) {
-        let mut norms = col_norms(b);
+        Self::setup_t(op, b, v0, 0)
+    }
+
+    /// [`Normalized::setup`] with an explicit recurrence thread count.
+    pub fn setup_t(
+        op: &dyn KernelOperator,
+        b: &Mat,
+        v0: &mut Mat,
+        threads: usize,
+    ) -> (Self, Mat) {
+        let mut norms = recurrence::col_norms(b, threads);
         for n in &mut norms {
             *n += NORM_EPS;
         }
         let inv: Vec<f64> = norms.iter().map(|&x| 1.0 / x).collect();
         let mut bs = b.clone();
-        scale_cols(&mut bs, &inv);
-        scale_cols(v0, &inv);
+        recurrence::scale_cols(&mut bs, &inv, threads);
+        recurrence::scale_cols(v0, &inv, threads);
         let warm = v0.data.iter().any(|&x| x != 0.0);
         let (r, cost) = if warm {
             let hv = op.hv(v0);
             let mut r = bs.clone();
-            r.sub_assign(&hv);
+            recurrence::sub_assign(&mut r, &hv, threads);
             (r, 1.0)
         } else {
             (bs.clone(), 0.0)
@@ -248,7 +255,12 @@ impl Normalized {
 
     /// Restore v to raw space.
     pub fn finish(&self, v: &mut Mat) {
-        scale_cols(v, &self.norms);
+        self.finish_t(v, 0);
+    }
+
+    /// [`Normalized::finish`] with an explicit recurrence thread count.
+    pub fn finish_t(&self, v: &mut Mat, threads: usize) {
+        recurrence::scale_cols(v, &self.norms, threads);
     }
 }
 

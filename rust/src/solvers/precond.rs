@@ -1,56 +1,129 @@
-//! CG preconditioner: rank-rho pivoted Cholesky of K plus the Woodbury
-//! identity (paper follows Wang et al. 2019's rank-100 pivoted Cholesky).
+//! The preconditioner subsystem.
+//!
+//! [`WoodburyPreconditioner`] — rank-rho pivoted Cholesky of K plus the
+//! Woodbury identity (paper follows Wang et al. 2019's rank-100 pivoted
+//! Cholesky):
 //!
 //!   M = L L^T + sigma^2 I,
 //!   M^-1 R = (R - L C^-1 (L^T R)) / sigma^2,   C = sigma^2 I_rho + L^T L.
 //!
-//! Built matrix-free from kernel rows (O(rho^2 n + rho n d)) in Rust; the
-//! apply is O(n rho k) per CG iteration.
+//! Built matrix-free from kernel rows (O(rho^2 n + rho n d)); the apply is
+//! O(n rho k) per CG iteration.  The build is parallel end to end — kernel
+//! rows, the pivoted-Cholesky column updates and the Gram accumulation
+//! C = L^T L all run on the deterministic worker pool, with results
+//! bitwise-identical for every thread count (order-canonical blocked
+//! reductions; see [`super::recurrence`]).
+//!
+//! [`PreconditionerCache`] — a coordinator-owned store keyed on
+//! (hyperparameter bits, rank).  The outer loop solves several systems per
+//! hyperparameter setting (mean/probe batch, prediction, evaluation
+//! re-solves); keying on the *exact* f64 bits of the packed
+//! hyperparameters plus the requested rank makes reuse safe: any change to
+//! either rebuilds.  The same cache also holds AP's per-block Cholesky
+//! factors, keyed on (hyperparameter bits, block size).
 
-use crate::kernels::{kernel_row, Hyperparams, KernelFamily};
-use crate::linalg::{pivoted_cholesky, Cholesky, Mat};
+use std::sync::{Arc, Mutex};
+
+use crate::kernels::{self, Hyperparams, KernelFamily};
+use crate::linalg::{pivoted_cholesky_threaded, Cholesky, Mat};
+use crate::operators::KernelOperator;
+use crate::util::parallel::{num_threads, parallel_map_slots, parallel_row_blocks};
 
 pub struct WoodburyPreconditioner {
     l: Mat,              // [n, rho]
+    lt: Mat,             // L^T [rho, n], cached for the apply
     c_chol: Cholesky,    // chol of sigma^2 I + L^T L
     noise_var: f64,
 }
+
+/// Rows per Gram reduction block — fixed so the block-major fold order is
+/// independent of the thread count (bitwise-deterministic C).
+const GRAM_BLOCK_ROWS: usize = 512;
 
 impl WoodburyPreconditioner {
     /// Identity preconditioner (rank 0).
     pub fn identity() -> Self {
         WoodburyPreconditioner {
             l: Mat::zeros(0, 0),
+            lt: Mat::zeros(0, 0),
             c_chol: Cholesky { l: Mat::from_vec(1, 1, vec![1.0]) },
             noise_var: 1.0,
         }
     }
 
     pub fn build(x: &Mat, hp: &Hyperparams, family: KernelFamily, rank: usize) -> Self {
+        Self::build_threaded(x, hp, family, rank, 0)
+    }
+
+    /// [`WoodburyPreconditioner::build`] on `threads` workers (0 = auto).
+    /// Bitwise-identical output for every thread count.
+    pub fn build_threaded(
+        x: &Mat,
+        hp: &Hyperparams,
+        family: KernelFamily,
+        rank: usize,
+        threads: usize,
+    ) -> Self {
         if rank == 0 {
             return Self::identity();
         }
         let n = x.rows;
+        let t = num_threads(if threads == 0 { None } else { Some(threads) });
         let sf2 = hp.sigf * hp.sigf;
         let diag = vec![sf2; n];
-        let pc = pivoted_cholesky(n, rank, &diag, |i| kernel_row(x, i, hp, family));
+        // kernel rows evaluated row-parallel inside the pivot closure
+        let kernel_row_par = |i: usize| -> Vec<f64> {
+            let mut out = vec![0.0; n];
+            let tk = if n * x.cols < (1 << 14) { 1 } else { t };
+            let block = ((n + tk - 1) / tk).max(1);
+            let xi = x.row(i);
+            parallel_row_blocks(&mut out, 1, block, tk, |r0, rows, blk| {
+                for (r, o) in blk.iter_mut().enumerate() {
+                    *o = kernels::kval(xi, x.row(r0 + r), hp, family);
+                }
+            });
+            out
+        };
+        let pc = pivoted_cholesky_threaded(n, rank, &diag, kernel_row_par, t);
         let rho = pc.rank();
         let noise_var = hp.noise_var();
-        // C = sigma^2 I + L^T L
-        let mut c = Mat::zeros(rho, rho);
-        for a in 0..rho {
-            for b in a..rho {
-                let mut s = 0.0;
-                for i in 0..n {
-                    s += pc.l[(i, a)] * pc.l[(i, b)];
+        // C = sigma^2 I + L^T L: order-canonical blocked row reduction —
+        // block partials of the upper triangle folded in block order.
+        let nblocks = (n + GRAM_BLOCK_ROWS - 1) / GRAM_BLOCK_ROWS;
+        let tg = if n * rho * rho < (1 << 16) { 1 } else { t };
+        let partials = parallel_map_slots(nblocks, tg, |bi| {
+            let r0 = bi * GRAM_BLOCK_ROWS;
+            let r1 = (r0 + GRAM_BLOCK_ROWS).min(n);
+            let mut acc = vec![0.0; rho * rho];
+            for i in r0..r1 {
+                let li = pc.l.row(i);
+                for a in 0..rho {
+                    let la = li[a];
+                    if la == 0.0 {
+                        continue;
+                    }
+                    for b in a..rho {
+                        acc[a * rho + b] += la * li[b];
+                    }
                 }
-                c[(a, b)] = s;
-                c[(b, a)] = s;
+            }
+            acc
+        });
+        let mut c = Mat::zeros(rho, rho);
+        for p in partials {
+            for (x, y) in c.data.iter_mut().zip(&p) {
+                *x += y;
+            }
+        }
+        for a in 0..rho {
+            for b in a + 1..rho {
+                c[(b, a)] = c[(a, b)];
             }
         }
         c.add_diag(noise_var);
         let c_chol = Cholesky::factor(&c).expect("woodbury core SPD");
-        WoodburyPreconditioner { l: pc.l, c_chol, noise_var }
+        let lt = pc.l.transpose();
+        WoodburyPreconditioner { l: pc.l, lt, c_chol, noise_var }
     }
 
     pub fn rank(&self) -> usize {
@@ -63,23 +136,192 @@ impl WoodburyPreconditioner {
 
     /// Apply M^-1 to every column of R.
     pub fn apply(&self, r: &Mat) -> Mat {
+        self.apply_t(r, 0)
+    }
+
+    /// [`WoodburyPreconditioner::apply`] with an explicit thread count
+    /// (0 = auto); bitwise-identical output for every thread count.
+    pub fn apply_t(&self, r: &Mat, threads: usize) -> Mat {
         if self.rank() == 0 {
             return r.clone();
         }
-        let lt_r = self.l.transpose().matmul(r); // [rho, k]
+        let lt_r = self.lt.matmul_threaded(r, threads); // [rho, k]
         let c_inv = self.c_chol.solve_mat(&lt_r); // [rho, k]
-        let l_c = self.l.matmul(&c_inv); // [n, k]
+        let l_c = self.l.matmul_threaded(&c_inv, threads); // [n, k]
         let mut out = r.clone();
-        out.sub_assign(&l_c);
-        out.scale(1.0 / self.noise_var);
+        super::recurrence::sub_assign(&mut out, &l_c, threads);
+        super::recurrence::scale_all(&mut out, 1.0 / self.noise_var, threads);
         out
+    }
+}
+
+// ---------------------------------------------------------------------------
+// PreconditionerCache
+// ---------------------------------------------------------------------------
+
+/// Shared handle to a [`PreconditionerCache`] (the `Trainer` owns one and
+/// injects it into its solver via [`super::LinearSolver::set_precond_cache`]).
+pub type SharedPreconditionerCache = Arc<PreconditionerCache>;
+
+/// Cache key: exact f64 bit patterns of the packed hyperparameters plus
+/// the integer knob (Woodbury rank or AP block size).  Bit-exact equality
+/// is the right notion here: the outer loop re-solves the *same* theta
+/// several times per step, and any genuine hyperparameter step changes
+/// the bits.
+type HpKey = (Vec<u64>, usize);
+
+fn hp_key(hp: &Hyperparams, knob: usize) -> HpKey {
+    (hp.pack().iter().map(|x| x.to_bits()).collect(), knob)
+}
+
+#[derive(Default)]
+struct CacheInner {
+    /// Small LRU lists (linear scan; capacity is single digits).
+    woodbury: Vec<(HpKey, Arc<WoodburyPreconditioner>)>,
+    ap_blocks: Vec<(HpKey, Arc<Vec<Cholesky>>)>,
+    woodbury_builds: u64,
+    ap_builds: u64,
+    hits: u64,
+}
+
+/// Coordinator-owned preconditioner store, shared across solves (and, via
+/// `Arc`, across solver instances).  Interior-mutable so solvers can take
+/// it behind a shared reference.
+pub struct PreconditionerCache {
+    inner: Mutex<CacheInner>,
+    cap: usize,
+}
+
+impl Default for PreconditionerCache {
+    fn default() -> Self {
+        PreconditionerCache::with_capacity(4)
+    }
+}
+
+impl std::fmt::Debug for PreconditionerCache {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        let inner = self.inner.lock().unwrap();
+        f.debug_struct("PreconditionerCache")
+            .field("woodbury_entries", &inner.woodbury.len())
+            .field("ap_entries", &inner.ap_blocks.len())
+            .field("woodbury_builds", &inner.woodbury_builds)
+            .field("ap_builds", &inner.ap_builds)
+            .field("hits", &inner.hits)
+            .finish()
+    }
+}
+
+impl PreconditionerCache {
+    /// `cap` entries are retained per factorisation kind (LRU eviction).
+    pub fn with_capacity(cap: usize) -> Self {
+        PreconditionerCache { inner: Mutex::new(CacheInner::default()), cap: cap.max(1) }
+    }
+
+    /// Fresh shared handle (what `Trainer` constructs).
+    pub fn shared() -> SharedPreconditionerCache {
+        Arc::new(PreconditionerCache::default())
+    }
+
+    /// The Woodbury preconditioner for the operator's *current*
+    /// hyperparameters at `rank`, building (on `threads` workers, 0 =
+    /// auto) on a miss.  A cached entry is returned only when both the
+    /// hyperparameter bits and the rank match — changing `precond_rank`
+    /// between solves rebuilds instead of silently reusing the old rank.
+    pub fn woodbury(
+        &self,
+        op: &dyn KernelOperator,
+        rank: usize,
+        threads: usize,
+    ) -> Arc<WoodburyPreconditioner> {
+        let key = hp_key(op.hp(), rank);
+        let mut inner = self.inner.lock().unwrap();
+        if let Some(pos) = inner.woodbury.iter().position(|(k, _)| *k == key) {
+            inner.hits += 1;
+            let entry = inner.woodbury.remove(pos);
+            let pre = entry.1.clone();
+            inner.woodbury.push(entry); // LRU: move to back
+            return pre;
+        }
+        let pre = Arc::new(WoodburyPreconditioner::build_threaded(
+            op.x(),
+            op.hp(),
+            op.family(),
+            rank,
+            threads,
+        ));
+        inner.woodbury_builds += 1;
+        if inner.woodbury.len() >= self.cap {
+            inner.woodbury.remove(0);
+        }
+        inner.woodbury.push((key, pre.clone()));
+        pre
+    }
+
+    /// AP's per-block Cholesky factors for the operator's current
+    /// hyperparameters at `block_size`, built block-parallel on a miss.
+    /// Keyed on (hyperparameter bits, block size) — the same staleness
+    /// guarantee as [`PreconditionerCache::woodbury`].
+    pub fn ap_block_factors(
+        &self,
+        op: &dyn KernelOperator,
+        block_size: usize,
+        threads: usize,
+    ) -> Arc<Vec<Cholesky>> {
+        let key = hp_key(op.hp(), block_size);
+        let mut inner = self.inner.lock().unwrap();
+        if let Some(pos) = inner.ap_blocks.iter().position(|(k, _)| *k == key) {
+            inner.hits += 1;
+            let entry = inner.ap_blocks.remove(pos);
+            let factors = entry.1.clone();
+            inner.ap_blocks.push(entry);
+            return factors;
+        }
+        let n = op.n();
+        assert_eq!(n % block_size, 0, "block size must divide n");
+        let x = op.x();
+        let hp = op.hp();
+        let fam = op.family();
+        let nblocks = n / block_size;
+        let t = num_threads(if threads == 0 { None } else { Some(threads) });
+        let factors = parallel_map_slots(nblocks, t.min(nblocks), |blk| {
+            let idx: Vec<usize> =
+                (blk * block_size..(blk + 1) * block_size).collect();
+            let xb = x.gather_rows(&idx);
+            let mut h_blk = kernels::kernel_matrix(&xb, &xb, hp, fam);
+            h_blk.add_diag(hp.noise_var());
+            Cholesky::factor(&h_blk).expect("AP block SPD")
+        });
+        let factors = Arc::new(factors);
+        inner.ap_builds += 1;
+        if inner.ap_blocks.len() >= self.cap {
+            inner.ap_blocks.remove(0);
+        }
+        inner.ap_blocks.push((key, factors.clone()));
+        factors
+    }
+
+    /// Woodbury factorisations built so far (telemetry / regression tests).
+    pub fn woodbury_builds(&self) -> u64 {
+        self.inner.lock().unwrap().woodbury_builds
+    }
+
+    /// AP block factorisations built so far.
+    pub fn ap_builds(&self) -> u64 {
+        self.inner.lock().unwrap().ap_builds
+    }
+
+    /// Cache hits across both kinds.
+    pub fn hits(&self) -> u64 {
+        self.inner.lock().unwrap().hits
     }
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::data;
     use crate::kernels::h_matrix;
+    use crate::operators::DenseOperator;
     use crate::util::rng::Rng;
 
     #[test]
@@ -118,5 +360,105 @@ mod tests {
             let q = crate::util::stats::dot(&v.data, &mv.data);
             assert!(q > 0.0);
         }
+    }
+
+    #[test]
+    fn threaded_build_and_apply_are_bitwise_equal_to_serial() {
+        let mut rng = Rng::new(2);
+        let n = 64;
+        let x = Mat::from_fn(n, 3, |_, _| rng.gaussian());
+        let hp = Hyperparams { ell: vec![0.9; 3], sigf: 1.1, sigma: 0.4 };
+        let fam = KernelFamily::Matern52;
+        let r = Mat::from_fn(n, 5, |_, _| rng.gaussian());
+        let serial = WoodburyPreconditioner::build_threaded(&x, &hp, fam, 16, 1);
+        let want = serial.apply_t(&r, 1);
+        for t in [2, 4] {
+            let pre = WoodburyPreconditioner::build_threaded(&x, &hp, fam, 16, t);
+            assert_eq!(pre.l, serial.l, "t={t}");
+            assert_eq!(pre.apply_t(&r, t), want, "t={t}");
+        }
+    }
+
+    fn test_op(sigma: f64) -> DenseOperator {
+        let ds = data::generate(&data::spec("test").unwrap());
+        let mut op = DenseOperator::new(&ds, 4, 16);
+        op.set_hp(&Hyperparams { ell: vec![1.0; 4], sigf: 1.0, sigma });
+        op
+    }
+
+    #[test]
+    fn cache_rebuilds_on_rank_change() {
+        // regression: a cache keyed on hyperparameters alone would reuse
+        // the rank-64 factorisation for the rank-8 request
+        let cache = PreconditionerCache::default();
+        let op = test_op(0.4);
+        let p64 = cache.woodbury(&op, 64, 1);
+        let p8 = cache.woodbury(&op, 8, 1);
+        assert_eq!(cache.woodbury_builds(), 2);
+        assert!(p8.rank() <= 8, "rank {} leaked from the rank-64 entry", p8.rank());
+        assert!(p64.rank() > p8.rank());
+        // rank 0 must yield the identity, not any cached factorisation
+        let p0 = cache.woodbury(&op, 0, 1);
+        assert_eq!(p0.rank(), 0);
+    }
+
+    #[test]
+    fn cache_rebuilds_on_hp_change_and_hits_otherwise() {
+        let cache = PreconditionerCache::default();
+        let op = test_op(0.4);
+        let a = cache.woodbury(&op, 16, 1);
+        let b = cache.woodbury(&op, 16, 1);
+        assert!(Arc::ptr_eq(&a, &b), "same hp+rank must hit");
+        assert_eq!(cache.woodbury_builds(), 1);
+        assert_eq!(cache.hits(), 1);
+        let op2 = test_op(0.7);
+        let c = cache.woodbury(&op2, 16, 1);
+        assert!(!Arc::ptr_eq(&a, &c));
+        assert_eq!(cache.woodbury_builds(), 2);
+    }
+
+    #[test]
+    fn cached_and_fresh_preconditioners_apply_identically() {
+        let cache = PreconditionerCache::default();
+        let op = test_op(0.5);
+        let mut rng = Rng::new(3);
+        let r = Mat::from_fn(op.n(), 4, |_, _| rng.gaussian());
+        let cached = cache.woodbury(&op, 24, 2);
+        let fresh =
+            WoodburyPreconditioner::build_threaded(op.x(), op.hp(), op.family(), 24, 4);
+        assert_eq!(cached.apply_t(&r, 3), fresh.apply_t(&r, 1));
+    }
+
+    #[test]
+    fn ap_factors_cached_and_keyed_on_block_size() {
+        let cache = PreconditionerCache::default();
+        let op = test_op(0.4);
+        let fa = cache.ap_block_factors(&op, 64, 2);
+        let fb = cache.ap_block_factors(&op, 64, 2);
+        assert!(Arc::ptr_eq(&fa, &fb));
+        let fc = cache.ap_block_factors(&op, 32, 2);
+        assert_eq!(fa.len(), op.n() / 64);
+        assert_eq!(fc.len(), op.n() / 32);
+        assert_eq!(cache.ap_builds(), 2);
+        // block-parallel build matches the serial one factor-for-factor
+        let serial = cache.ap_block_factors(&test_op(0.9), 64, 1);
+        let op2 = test_op(0.9);
+        let par = PreconditionerCache::default().ap_block_factors(&op2, 64, 4);
+        for (a, b) in serial.iter().zip(par.iter()) {
+            assert_eq!(a.l, b.l);
+        }
+    }
+
+    #[test]
+    fn cache_evicts_lru() {
+        let cache = PreconditionerCache::with_capacity(2);
+        let op = test_op(0.4);
+        cache.woodbury(&op, 4, 1);
+        cache.woodbury(&op, 8, 1);
+        cache.woodbury(&op, 12, 1); // evicts rank 4
+        cache.woodbury(&op, 8, 1); // still cached
+        assert_eq!(cache.hits(), 1);
+        cache.woodbury(&op, 4, 1); // rebuilt
+        assert_eq!(cache.woodbury_builds(), 4);
     }
 }

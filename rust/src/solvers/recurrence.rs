@@ -1,0 +1,336 @@
+//! The parallel solver-recurrence layer: every O(n k) dense recurrence the
+//! three solvers run between operator products — column norms/dots, axpy,
+//! scaling, the CG direction update, AP's residual downdate and block
+//! scores, SGD's dense momentum decay — routed through the deterministic
+//! strided pool in [`crate::util::parallel`].
+//!
+//! Determinism contract (matches the `TiledOperator` invariant, and is in
+//! fact stronger): every function here returns **bitwise-identical**
+//! results for *every* thread count, including the serial fallback.
+//!
+//! * Elementwise updates partition rows into disjoint `&mut` blocks; each
+//!   output element is computed by the same scalar expression as the serial
+//!   loop, so the bits cannot differ.
+//! * Reductions are *order-canonical*: rows are grouped into fixed blocks
+//!   of [`REDUCE_BLOCK_ROWS`] (independent of the thread count), per-block
+//!   partials are computed in row order and folded sequentially in block
+//!   order.  Threads only change *who* computes a block, never the
+//!   floating-point association.
+//!
+//! Below [`PAR_MIN_ELEMS`] elements everything runs inline — spawning
+//! scoped workers costs tens of microseconds, which dwarfs small
+//! recurrences — and, per the contract above, produces the same bits.
+//!
+//! `threads == 0` means auto-resolve (`IGP_THREADS` env var, else all
+//! cores); solvers resolve once per solve via [`resolve_threads`] and pass
+//! the concrete count down.
+
+use crate::linalg::Mat;
+use crate::util::parallel::{num_threads, parallel_map_slots, parallel_row_blocks};
+
+/// Minimum number of f64 elements before a recurrence is worth spawning
+/// workers for (below this, run inline on the calling thread).
+pub const PAR_MIN_ELEMS: usize = 1 << 16;
+
+/// Rows per reduction block.  Fixed — NOT derived from the thread count —
+/// so the fold order (block-major) and therefore the result bits are
+/// identical for every thread count.
+pub const REDUCE_BLOCK_ROWS: usize = 512;
+
+/// Resolve a requested thread count (0 = auto) to a concrete one.
+pub fn resolve_threads(requested: usize) -> usize {
+    num_threads(if requested == 0 { None } else { Some(requested) })
+}
+
+/// Workers to actually use for `elems` elements: 1 below the parallel
+/// threshold, else the resolved count.
+fn effective(elems: usize, threads: usize) -> usize {
+    if elems < PAR_MIN_ELEMS {
+        1
+    } else {
+        resolve_threads(threads)
+    }
+}
+
+/// One row block per worker (elementwise ops need no finer granularity:
+/// the per-row work is uniform).
+fn rows_per_worker(rows: usize, threads: usize) -> usize {
+    ((rows + threads - 1) / threads).max(1)
+}
+
+fn fold_partials(partials: Vec<Vec<f64>>, cols: usize) -> Vec<f64> {
+    let mut acc = vec![0.0; cols];
+    for p in partials {
+        for (a, v) in acc.iter_mut().zip(&p) {
+            *a += v;
+        }
+    }
+    acc
+}
+
+/// Per-column sums of squares (order-canonical blocked reduction).
+pub fn col_sq_sums(m: &Mat, threads: usize) -> Vec<f64> {
+    if m.rows == 0 {
+        return vec![0.0; m.cols];
+    }
+    let nblocks = (m.rows + REDUCE_BLOCK_ROWS - 1) / REDUCE_BLOCK_ROWS;
+    let t = effective(m.rows * m.cols, threads);
+    let partials = parallel_map_slots(nblocks, t, |bi| {
+        let r0 = bi * REDUCE_BLOCK_ROWS;
+        let r1 = (r0 + REDUCE_BLOCK_ROWS).min(m.rows);
+        let mut acc = vec![0.0; m.cols];
+        for i in r0..r1 {
+            for (j, &x) in m.row(i).iter().enumerate() {
+                acc[j] += x * x;
+            }
+        }
+        acc
+    });
+    fold_partials(partials, m.cols)
+}
+
+/// Per-column euclidean norms of a [n, k] matrix.
+pub fn col_norms(m: &Mat, threads: usize) -> Vec<f64> {
+    col_sq_sums(m, threads).into_iter().map(f64::sqrt).collect()
+}
+
+/// Per-column dot products <a_j, b_j> (order-canonical blocked reduction).
+pub fn col_dots(a: &Mat, b: &Mat, threads: usize) -> Vec<f64> {
+    assert_eq!((a.rows, a.cols), (b.rows, b.cols));
+    if a.rows == 0 {
+        return vec![0.0; a.cols];
+    }
+    let nblocks = (a.rows + REDUCE_BLOCK_ROWS - 1) / REDUCE_BLOCK_ROWS;
+    let t = effective(a.rows * a.cols, threads);
+    let partials = parallel_map_slots(nblocks, t, |bi| {
+        let r0 = bi * REDUCE_BLOCK_ROWS;
+        let r1 = (r0 + REDUCE_BLOCK_ROWS).min(a.rows);
+        let mut acc = vec![0.0; a.cols];
+        for i in r0..r1 {
+            let ar = a.row(i);
+            let br = b.row(i);
+            for j in 0..a.cols {
+                acc[j] += ar[j] * br[j];
+            }
+        }
+        acc
+    });
+    fold_partials(partials, a.cols)
+}
+
+/// Scale column j by c[j] (row-parallel, disjoint writes).
+pub fn scale_cols(m: &mut Mat, c: &[f64], threads: usize) {
+    assert_eq!(c.len(), m.cols);
+    if m.data.is_empty() {
+        return;
+    }
+    let t = effective(m.data.len(), threads);
+    let cols = m.cols;
+    let block = rows_per_worker(m.rows, t);
+    parallel_row_blocks(&mut m.data, cols, block, t, |_r0, rows, blk| {
+        for r in 0..rows {
+            let row = &mut blk[r * cols..(r + 1) * cols];
+            for (j, x) in row.iter_mut().enumerate() {
+                *x *= c[j];
+            }
+        }
+    });
+}
+
+/// m[:,j] += a[j] * o[:,j] (row-parallel, disjoint writes).
+pub fn axpy_cols(m: &mut Mat, a: &[f64], o: &Mat, threads: usize) {
+    assert_eq!((m.rows, m.cols), (o.rows, o.cols));
+    assert_eq!(a.len(), m.cols);
+    if m.data.is_empty() {
+        return;
+    }
+    let t = effective(m.data.len(), threads);
+    let cols = m.cols;
+    let block = rows_per_worker(m.rows, t);
+    parallel_row_blocks(&mut m.data, cols, block, t, |r0, rows, blk| {
+        for r in 0..rows {
+            let or = o.row(r0 + r);
+            let mr = &mut blk[r * cols..(r + 1) * cols];
+            for j in 0..cols {
+                mr[j] += a[j] * or[j];
+            }
+        }
+    });
+}
+
+/// CG direction update d = p + beta ∘ d (columnwise beta; row-parallel).
+pub fn direction_update(d: &mut Mat, p: &Mat, beta: &[f64], threads: usize) {
+    assert_eq!((d.rows, d.cols), (p.rows, p.cols));
+    assert_eq!(beta.len(), d.cols);
+    if d.data.is_empty() {
+        return;
+    }
+    let t = effective(d.data.len(), threads);
+    let cols = d.cols;
+    let block = rows_per_worker(d.rows, t);
+    parallel_row_blocks(&mut d.data, cols, block, t, |r0, rows, blk| {
+        for r in 0..rows {
+            let pr = p.row(r0 + r);
+            let dr = &mut blk[r * cols..(r + 1) * cols];
+            for j in 0..cols {
+                dr[j] = pr[j] + beta[j] * dr[j];
+            }
+        }
+    });
+}
+
+/// Dense elementwise m += o (SGD momentum application, Polyak sums).
+pub fn add_assign(m: &mut Mat, o: &Mat, threads: usize) {
+    assert_eq!((m.rows, m.cols), (o.rows, o.cols));
+    if m.data.is_empty() {
+        return;
+    }
+    let t = effective(m.data.len(), threads);
+    let cols = m.cols;
+    let block = rows_per_worker(m.rows, t);
+    parallel_row_blocks(&mut m.data, cols, block, t, |r0, rows, blk| {
+        let src = &o.data[r0 * cols..r0 * cols + rows * cols];
+        for (x, y) in blk.iter_mut().zip(src) {
+            *x += y;
+        }
+    });
+}
+
+/// Dense elementwise m -= o (AP/CG residual downdates).
+pub fn sub_assign(m: &mut Mat, o: &Mat, threads: usize) {
+    assert_eq!((m.rows, m.cols), (o.rows, o.cols));
+    if m.data.is_empty() {
+        return;
+    }
+    let t = effective(m.data.len(), threads);
+    let cols = m.cols;
+    let block = rows_per_worker(m.rows, t);
+    parallel_row_blocks(&mut m.data, cols, block, t, |r0, rows, blk| {
+        let src = &o.data[r0 * cols..r0 * cols + rows * cols];
+        for (x, y) in blk.iter_mut().zip(src) {
+            *x -= y;
+        }
+    });
+}
+
+/// Dense scalar scale m *= a (SGD momentum decay).
+pub fn scale_all(m: &mut Mat, a: f64, threads: usize) {
+    if m.data.is_empty() {
+        return;
+    }
+    let t = effective(m.data.len(), threads);
+    let cols = m.cols;
+    let block = rows_per_worker(m.rows, t);
+    parallel_row_blocks(&mut m.data, cols, block, t, |_r0, _rows, blk| {
+        for x in blk.iter_mut() {
+            *x *= a;
+        }
+    });
+}
+
+/// AP block-selection scores || sum_cols R[block rows] ||, one slot per
+/// block (blocks are independent, so this is embarrassingly parallel and
+/// each block's row-order sum matches the serial loop exactly).
+pub fn block_scores(r: &Mat, b: usize, threads: usize) -> Vec<f64> {
+    let nblocks = r.rows / b;
+    let t = effective(r.rows * r.cols, threads);
+    parallel_map_slots(nblocks, t, |blk| {
+        let mut s = 0.0;
+        for i in blk * b..(blk + 1) * b {
+            let row_sum: f64 = r.row(i).iter().sum();
+            s += row_sum * row_sum;
+        }
+        s.sqrt()
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    fn mat(rows: usize, cols: usize, seed: u64) -> Mat {
+        let mut rng = Rng::new(seed);
+        Mat::from_fn(rows, cols, |_, _| rng.gaussian())
+    }
+
+    /// Naive single-loop references (the pre-parallel implementations).
+    fn ref_col_norms(m: &Mat) -> Vec<f64> {
+        (0..m.cols)
+            .map(|j| (0..m.rows).map(|i| m[(i, j)] * m[(i, j)]).sum::<f64>().sqrt())
+            .collect()
+    }
+
+    #[test]
+    fn reductions_are_bitwise_thread_invariant() {
+        // sizes straddling both REDUCE_BLOCK_ROWS and PAR_MIN_ELEMS
+        for (rows, cols) in [(3, 2), (511, 5), (513, 7), (5000, 17)] {
+            let a = mat(rows, cols, 1);
+            let b = mat(rows, cols, 2);
+            let n1 = col_norms(&a, 1);
+            let d1 = col_dots(&a, &b, 1);
+            let s1 = col_sq_sums(&a, 1);
+            for t in [2, 3, 8] {
+                assert_eq!(col_norms(&a, t), n1, "col_norms {rows}x{cols} t={t}");
+                assert_eq!(col_dots(&a, &b, t), d1, "col_dots {rows}x{cols} t={t}");
+                assert_eq!(col_sq_sums(&a, t), s1, "col_sq_sums {rows}x{cols} t={t}");
+            }
+            // and the values are right (up to fp association vs naive)
+            for (x, y) in n1.iter().zip(ref_col_norms(&a)) {
+                assert!((x - y).abs() < 1e-9 * (1.0 + y.abs()));
+            }
+        }
+    }
+
+    #[test]
+    fn elementwise_ops_are_bitwise_thread_invariant() {
+        for (rows, cols) in [(7, 3), (4097, 17)] {
+            let base = mat(rows, cols, 3);
+            let other = mat(rows, cols, 4);
+            let coef: Vec<f64> = (0..cols).map(|j| 0.25 * (j as f64 + 1.0)).collect();
+            let run = |t: usize| {
+                let mut m1 = base.clone();
+                scale_cols(&mut m1, &coef, t);
+                let mut m2 = base.clone();
+                axpy_cols(&mut m2, &coef, &other, t);
+                let mut m3 = base.clone();
+                direction_update(&mut m3, &other, &coef, t);
+                let mut m4 = base.clone();
+                add_assign(&mut m4, &other, t);
+                let mut m5 = base.clone();
+                sub_assign(&mut m5, &other, t);
+                let mut m6 = base.clone();
+                scale_all(&mut m6, 0.9, t);
+                (m1, m2, m3, m4, m5, m6)
+            };
+            let serial = run(1);
+            for t in [2, 5, 16] {
+                assert_eq!(run(t), serial, "{rows}x{cols} t={t}");
+            }
+        }
+    }
+
+    #[test]
+    fn block_scores_matches_serial_reference() {
+        let r = mat(512, 9, 5);
+        let serial = block_scores(&r, 64, 1);
+        for t in [2, 4] {
+            assert_eq!(block_scores(&r, 64, t), serial);
+        }
+        // reference value for one block
+        let mut s = 0.0;
+        for i in 0..64 {
+            let rs: f64 = r.row(i).iter().sum();
+            s += rs * rs;
+        }
+        assert!((serial[0] - s.sqrt()).abs() < 1e-12);
+    }
+
+    #[test]
+    fn direction_update_formula() {
+        let mut d = Mat::from_vec(2, 2, vec![1.0, 2.0, 3.0, 4.0]);
+        let p = Mat::from_vec(2, 2, vec![10.0, 20.0, 30.0, 40.0]);
+        direction_update(&mut d, &p, &[2.0, 0.5], 1);
+        assert_eq!(d.data, vec![12.0, 21.0, 36.0, 42.0]);
+    }
+}

@@ -5,7 +5,9 @@
 //! residual buffer updated on visited rows upper-bounds the true residual).
 //! One iteration touches b/n of H's entries -> one epoch = n/b iterations.
 
-use super::{residual_norms, LinearSolver, Normalized, SolveOptions, SolveReport, SolverKind};
+use super::{
+    recurrence, residual_norms_t, LinearSolver, Normalized, SolveOptions, SolveReport, SolverKind,
+};
 use crate::linalg::Mat;
 use crate::operators::KernelOperator;
 use crate::util::rng::Rng;
@@ -38,10 +40,11 @@ impl LinearSolver for SgdSolver {
         // hyperparameters sharpen during optimisation (paper Section 5
         // observes SGD "can suffer due to the optimal learning rate
         // changing").  On detected divergence, halve the rate and retry
-        // from the same initialisation; epochs spent across attempts are
-        // charged against the budget.
+        // from the same initialisation; epochs AND iterations spent across
+        // attempts are both charged, so the report reflects all work done.
         let mut lr = opts.sgd_lr;
         let mut spent = 0.0;
+        let mut spent_iters = 0usize;
         let attempts = if opts.sgd_backoff { 4 } else { 1 };
         for attempt in 0..attempts {
             let mut o = opts.clone();
@@ -50,7 +53,9 @@ impl LinearSolver for SgdSolver {
             let mut v = v0.clone();
             let mut rep = self.solve_once(op, b_mat, &mut v, &o);
             spent += rep.epochs;
+            spent_iters += rep.iterations;
             rep.epochs = spent;
+            rep.iterations = spent_iters;
             let diverged =
                 !rep.ry.is_finite() || !rep.rz.is_finite() || rep.ry > 3.0 || rep.rz > 3.0;
             if !diverged || attempt == attempts - 1 || o.max_epochs <= 0.0 {
@@ -79,12 +84,14 @@ impl SgdSolver {
         let n = op.n();
         let k = b_mat.cols;
         let bsz = opts.block_size;
+        let threads = recurrence::resolve_threads(opts.threads);
         let noise_var = op.hp().noise_var();
-        let (norm, r_init) = Normalized::setup(op, b_mat, v0);
+        let (norm, r_init) = Normalized::setup_t(op, b_mat, v0, threads);
         let mut v = v0.clone();
         // Residual estimate buffer: exact at start (free when cold: r = b~).
         let mut r = r_init;
-        let init_residual_sq: f64 = r.data.iter().map(|x| x * x).sum();
+        let init_residual_sq: f64 =
+            recurrence::col_sq_sums(&r, threads).iter().sum();
 
         let mut momentum = Mat::zeros(n, k);
         // Polyak tail averaging (optional): average iterates after the
@@ -94,7 +101,7 @@ impl SgdSolver {
         let polyak_start = opts.max_epochs * 0.5;
         let mut epochs = norm.warm_epoch_cost;
         let mut iterations = 0usize;
-        let (mut ry, mut rz) = residual_norms(&r);
+        let (mut ry, mut rz) = residual_norms_t(&r, threads);
         let tol = opts.tolerance;
         let epoch_per_iter = bsz as f64 / n as f64;
         let step = opts.sgd_lr / bsz as f64;
@@ -112,8 +119,9 @@ impl SgdSolver {
                     gr[j] += noise_var * vr[j] - br[j];
                 }
             }
-            // momentum decays densely, receives sparse gradient rows
-            momentum.scale(rho);
+            // momentum decays densely (O(nk), on the recurrence pool),
+            // receives sparse gradient rows
+            recurrence::scale_all(&mut momentum, rho, threads);
             for (bi, &i) in idx.iter().enumerate() {
                 let mr = momentum.row_mut(i);
                 let gr = g.row(bi);
@@ -121,7 +129,7 @@ impl SgdSolver {
                     mr[j] -= step * gr[j];
                 }
             }
-            v.add_assign(&momentum);
+            recurrence::add_assign(&mut v, &momentum, threads);
             // sparse residual estimate: r[I] = -g[I]
             for (bi, &i) in idx.iter().enumerate() {
                 let rr = r.row_mut(i);
@@ -132,14 +140,14 @@ impl SgdSolver {
             }
             if opts.sgd_polyak && epochs >= polyak_start {
                 let sum = polyak_sum.get_or_insert_with(|| Mat::zeros(n, k));
-                sum.add_assign(&v);
+                recurrence::add_assign(sum, &v, threads);
                 polyak_count += 1;
             }
 
             epochs += epoch_per_iter;
             iterations += 1;
             // residual norms are estimates here (paper: approximate upper bound)
-            let (a, b_) = residual_norms(&r);
+            let (a, b_) = residual_norms_t(&r, threads);
             ry = a;
             rz = b_;
             if !v.data[0].is_finite() || ry > 3.0 || rz > 3.0 {
@@ -150,11 +158,11 @@ impl SgdSolver {
         if let Some(sum) = polyak_sum {
             if polyak_count > 0 {
                 let mut avg = sum;
-                avg.scale(1.0 / polyak_count as f64);
+                recurrence::scale_all(&mut avg, 1.0 / polyak_count as f64, threads);
                 v = avg;
             }
         }
-        norm.finish(&mut v);
+        norm.finish_t(&mut v, threads);
         *v0 = v;
         SolveReport {
             iterations,
@@ -171,14 +179,20 @@ impl SgdSolver {
 /// rate from `grid` whose first epoch does not increase the residual
 /// estimate (run on the very first outer step only). `halve` returns half
 /// of that rate (paper's choice on large datasets).
+///
+/// Returns `(rate, probe_epochs)`: each grid probe costs real solver work
+/// (one epoch), which the caller must charge against its totals — silently
+/// dropping it would under-report exactly the kind of hidden compute the
+/// paper's epoch accounting is meant to expose.
 pub fn autotune_lr(
     op: &dyn KernelOperator,
     b: &Mat,
     opts: &SolveOptions,
     grid: &[f64],
     halve: bool,
-) -> f64 {
+) -> (f64, f64) {
     let mut best = grid[0];
+    let mut probe_epochs = 0.0;
     for &lr in grid {
         let mut v = Mat::zeros(b.rows, b.cols);
         let mut o = opts.clone();
@@ -187,6 +201,7 @@ pub fn autotune_lr(
         o.tolerance = 1e-16;
         o.sgd_backoff = false;
         let rep = SgdSolver::with_seed(42).solve(op, b, &mut v, &o);
+        probe_epochs += rep.epochs;
         let finite = v.data.iter().all(|x| x.is_finite());
         // initial normalised residual is ~1 per column; diverged if grew
         if finite && rep.ry <= 1.5 && rep.rz <= 1.5 {
@@ -195,11 +210,8 @@ pub fn autotune_lr(
             break;
         }
     }
-    if halve {
-        best / 2.0
-    } else {
-        best
-    }
+    let rate = if halve { best / 2.0 } else { best };
+    (rate, probe_epochs)
 }
 
 #[cfg(test)]
@@ -282,13 +294,77 @@ mod tests {
     }
 
     #[test]
-    fn autotune_picks_stable_rate() {
+    fn backoff_iterations_accumulate_across_attempts() {
+        // regression: rep.epochs accumulated across backoff retries but
+        // rep.iterations reported only the last attempt's count.  With a
+        // cold start every attempt costs exactly iterations * b/n epochs,
+        // so the two must stay consistent even after retries.
+        let (op, b) = setup();
+        let mut v = Mat::zeros(op.n(), op.k_width());
+        let opts = SolveOptions {
+            tolerance: 0.05,
+            max_epochs: 400.0,
+            block_size: 64,
+            sgd_lr: 64.0, // diverges; backoff halves and retries
+            ..Default::default()
+        };
+        let rep = SgdSolver::default().solve(&op, &b, &mut v, &opts);
+        let epoch_per_iter = 64.0 / op.n() as f64;
+        assert!(
+            (rep.epochs - rep.iterations as f64 * epoch_per_iter).abs() < 1e-9,
+            "epochs {} vs iterations {} * {epoch_per_iter}",
+            rep.epochs,
+            rep.iterations
+        );
+        // the retries add the diverged attempt's iterations on top of what
+        // a single (backoff-disabled) attempt reports
+        let mut v2 = Mat::zeros(op.n(), op.k_width());
+        let single = SgdSolver::default()
+            .solve(&op, &b, &mut v2, &SolveOptions { sgd_backoff: false, ..opts.clone() });
+        assert!(
+            rep.iterations > single.iterations,
+            "{} vs {}",
+            rep.iterations,
+            single.iterations
+        );
+    }
+
+    #[test]
+    fn autotune_picks_stable_rate_and_reports_probe_epochs() {
         let (op, b) = setup();
         let opts = SolveOptions { block_size: 64, ..Default::default() };
-        let lr = autotune_lr(&op, &b, &opts, &[1.0, 4.0, 8.0, 1e6], false);
+        let (lr, probe_epochs) = autotune_lr(&op, &b, &opts, &[1.0, 4.0, 8.0, 1e6], false);
         assert!(lr >= 1.0 && lr < 1e6, "{lr}");
-        let halved = autotune_lr(&op, &b, &opts, &[1.0, 4.0], true);
+        // every tried rate costs ~1 epoch of real work
+        assert!(probe_epochs >= 1.0, "{probe_epochs}");
+        assert!(probe_epochs <= 4.0 + 1e-9, "{probe_epochs}");
+        let (halved, _) = autotune_lr(&op, &b, &opts, &[1.0, 4.0], true);
         assert!(halved <= 2.0);
+    }
+
+    #[test]
+    fn threaded_solve_is_bitwise_equal_to_serial() {
+        let (op, b) = setup();
+        let run = |threads: usize| {
+            let opts = SolveOptions {
+                tolerance: 0.05,
+                max_epochs: 400.0,
+                block_size: 64,
+                sgd_lr: 8.0,
+                threads,
+                ..Default::default()
+            };
+            let mut v = Mat::zeros(op.n(), op.k_width());
+            // fixed seed: identical minibatch draws across runs
+            let rep = SgdSolver::with_seed(9).solve(&op, &b, &mut v, &opts);
+            (rep, v)
+        };
+        let (rep1, v1) = run(1);
+        for t in [2, 4] {
+            let (rep, v) = run(t);
+            assert_eq!(rep, rep1, "threads={t}");
+            assert_eq!(v.data, v1.data, "threads={t}");
+        }
     }
 
     #[test]

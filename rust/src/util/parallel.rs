@@ -69,6 +69,42 @@ where
     })
 }
 
+/// Fill `n` result slots in parallel: slot `i` receives `f(i)`.  Workers
+/// own disjoint contiguous chunks of the slot array, and each slot's value
+/// depends only on its index, so the result is bitwise-identical for every
+/// thread count (including 1, which runs inline without spawning).
+///
+/// This is the substrate for *order-canonical* reductions: callers split a
+/// reduction into fixed-size blocks (block structure independent of the
+/// thread count), map each block to a partial result here, and fold the
+/// partials sequentially in block order.
+pub fn parallel_map_slots<A, F>(n: usize, threads: usize, f: F) -> Vec<A>
+where
+    A: Send,
+    F: Fn(usize) -> A + Sync,
+{
+    let threads = threads.max(1).min(n.max(1));
+    if threads <= 1 {
+        return (0..n).map(&f).collect();
+    }
+    let mut slots: Vec<Option<A>> = (0..n).map(|_| None).collect();
+    let chunk = (n + threads - 1) / threads;
+    let f = &f;
+    std::thread::scope(|s| {
+        for (w, ch) in slots.chunks_mut(chunk).enumerate() {
+            s.spawn(move || {
+                for (k, slot) in ch.iter_mut().enumerate() {
+                    *slot = Some(f(w * chunk + k));
+                }
+            });
+        }
+    });
+    slots
+        .into_iter()
+        .map(|s| s.expect("parallel_map_slots worker panicked"))
+        .collect()
+}
+
 /// Split a row-major `[n, cols]` buffer into blocks of `block_rows` rows
 /// and run `task(first_row, rows_in_block, block)` over the blocks on up to
 /// `threads` workers.  Blocks are disjoint `&mut` slices, so writes are
@@ -179,5 +215,20 @@ mod tests {
     fn row_blocks_empty_is_noop() {
         let mut out: Vec<f64> = Vec::new();
         parallel_row_blocks(&mut out, 4, 8, 2, |_, _, _| unreachable!());
+    }
+
+    #[test]
+    fn map_slots_matches_serial_for_any_thread_count() {
+        let serial: Vec<u64> = (0..37).map(|i| (i as u64) * 3 + 1).collect();
+        for threads in [1, 2, 4, 9, 64] {
+            let got = parallel_map_slots(37, threads, |i| (i as u64) * 3 + 1);
+            assert_eq!(got, serial, "threads={threads}");
+        }
+    }
+
+    #[test]
+    fn map_slots_zero_is_empty() {
+        let got: Vec<u8> = parallel_map_slots(0, 4, |_| unreachable!());
+        assert!(got.is_empty());
     }
 }
