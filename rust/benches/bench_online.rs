@@ -1,0 +1,65 @@
+//! Online data-arrival section: epochs and wall time per arrival for a
+//! warm-carried trainer (`Trainer::extend_data`) vs cold restarts on the
+//! accumulated data — the serve-fresh-data-fast scenario.  Pure Rust, no
+//! artifacts needed.
+
+use igp::coordinator::{Trainer, TrainerOptions};
+use igp::data;
+use igp::estimator::EstimatorKind;
+use igp::operators::{TiledOperator, TiledOptions};
+use igp::solvers::SolverKind;
+use igp::util::bench::Bencher;
+
+fn opts() -> TrainerOptions {
+    TrainerOptions {
+        solver: SolverKind::Ap,
+        estimator: EstimatorKind::Pathwise,
+        warm_start: true,
+        lr: 0.05,
+        seed: 9,
+        ..Default::default()
+    }
+}
+
+fn main() {
+    let b = Bencher { warmup: 0, samples: 1 };
+    let chunks_k = 4;
+    let steps = 3;
+    for config in ["test", "protein"] {
+        let ds = data::generate(&data::spec(config).unwrap());
+        let (base, arrivals) = ds.replay_chunks(chunks_k);
+
+        let mut warm_epochs = 0.0;
+        b.run(&format!("{config}/online warm-carried ({chunks_k} arrivals)"), None, || {
+            let op = TiledOperator::with_options(&base, 8, 64, TiledOptions::default());
+            let mut t = Trainer::new(opts(), Box::new(op), &base);
+            warm_epochs = t.run(steps).unwrap().total_epochs;
+            for (x, y) in &arrivals {
+                t.extend_data(x, y).unwrap();
+                warm_epochs += t.run(steps).unwrap().total_epochs;
+            }
+        });
+
+        let mut cold_epochs = 0.0;
+        b.run(&format!("{config}/online cold restarts ({chunks_k} arrivals)"), None, || {
+            cold_epochs = 0.0;
+            let mut acc_x = base.x_train.clone();
+            let mut acc_y = base.y_train.clone();
+            for arrival in 0..chunks_k {
+                if arrival > 0 {
+                    let (x, y) = &arrivals[arrival - 1];
+                    acc_x.append_rows(x);
+                    acc_y.extend_from_slice(y);
+                }
+                let acc = ds.with_train(acc_x.clone(), acc_y.clone());
+                let op = TiledOperator::with_options(&acc, 8, 64, TiledOptions::default());
+                let mut t = Trainer::new(opts(), Box::new(op), &acc);
+                cold_epochs += t.run(steps).unwrap().total_epochs;
+            }
+        });
+
+        println!(
+            "   -> {config}: warm-carried {warm_epochs:.1} epochs vs cold restarts {cold_epochs:.1}"
+        );
+    }
+}

@@ -205,6 +205,9 @@ pub struct RunConfig {
     pub tile: usize,
     /// Worker threads for the tiled backend (0 = auto).
     pub threads: usize,
+    /// Online data-arrival mode: replay the dataset in this many chunks,
+    /// carrying solver/optimiser state across arrivals (0 or 1 = off).
+    pub online_chunks: usize,
 }
 
 impl Default for RunConfig {
@@ -225,6 +228,7 @@ impl Default for RunConfig {
             rff: 256,
             tile: 256,
             threads: 0,
+            online_chunks: 0,
         }
     }
 }
@@ -252,6 +256,7 @@ impl RunConfig {
                     "rff" => rc.rff = v.as_int()? as usize,
                     "tile" => rc.tile = v.as_int()? as usize,
                     "threads" => rc.threads = v.as_int()? as usize,
+                    "online_chunks" => rc.online_chunks = v.as_int()? as usize,
                     other => bail!("unknown run config key '{other}'"),
                 }
             }
@@ -283,6 +288,9 @@ impl RunConfig {
         }
         if self.tile == 0 {
             bail!("tile must be positive");
+        }
+        if self.online_chunks > 1 && self.backend == "xla" {
+            bail!("online mode needs a resizable backend (dense|tiled); xla artifacts have static shapes");
         }
         Ok(())
     }
@@ -379,6 +387,15 @@ mod tests {
         assert!(RunConfig::from_doc(&bad).is_err());
         let zero_tile = parse(r#"tile = 0"#).unwrap();
         assert!(RunConfig::from_doc(&zero_tile).is_err());
+    }
+
+    #[test]
+    fn run_config_online_chunks() {
+        let doc = parse("online_chunks = 4").unwrap();
+        assert_eq!(RunConfig::from_doc(&doc).unwrap().online_chunks, 4);
+        // static-shape backend cannot grow
+        let bad = parse("online_chunks = 4\nbackend = \"xla\"").unwrap();
+        assert!(RunConfig::from_doc(&bad).is_err());
     }
 
     #[test]

@@ -152,6 +152,14 @@ pub struct Trainer {
     /// Outer steps completed over the trainer's lifetime (survives
     /// checkpoint/restore; drives cold-start probe resampling).
     step_count: u64,
+    /// Metered solves over the trainer's lifetime (training, prediction,
+    /// evaluation re-solves) — regression tests assert redundant solves
+    /// stay gone.
+    solve_count: u64,
+    /// Training size at construction.  A checkpoint with fewer rows than
+    /// this cannot be an earlier state of *this* dataset (restore rejects
+    /// it as a wrong-dataset mixup instead of silently zero-padding).
+    base_n: usize,
 }
 
 impl Trainer {
@@ -182,6 +190,7 @@ impl Trainer {
         let mut solver = make_solver(opts.solver);
         let precond: SharedPreconditionerCache = PreconditionerCache::shared();
         solver.set_precond_cache(precond.clone());
+        let base_n = op.n();
         Trainer {
             opts,
             op,
@@ -199,6 +208,8 @@ impl Trainer {
             spent_epochs: 0.0,
             spent_solver_secs: 0.0,
             step_count: 0,
+            solve_count: 0,
+            base_n,
         }
     }
 
@@ -241,7 +252,13 @@ impl Trainer {
         let report = self.solver.solve(self.op.as_ref(), b, v, &self.solve_opts);
         self.spent_solver_secs += t.elapsed().as_secs_f64();
         self.spent_epochs += report.epochs;
+        self.solve_count += 1;
         report
+    }
+
+    /// Metered solves over the trainer's lifetime (tests / diagnostics).
+    pub fn solve_count(&self) -> u64 {
+        self.solve_count
     }
 
     /// Test targets (for experiment-side metric recomputation).
@@ -282,15 +299,55 @@ impl Trainer {
     /// AP's `Random`/`Cyclic` selection state) is not serialised, so those
     /// modes resume correctly but not bit-reproducibly; CG and greedy AP
     /// are RNG-free and reproduce exactly.
-    pub fn restore(&mut self, ck: &checkpoint::Checkpoint) {
-        assert_eq!(ck.nu.len(), self.params.nu.len());
-        assert_eq!(
-            (ck.v_store.rows, ck.v_store.cols),
-            (self.v_store.rows, self.v_store.cols)
+    ///
+    /// Resize-aware (online data arrival): a checkpoint taken at a
+    /// *smaller* n than the trainer currently holds — but no smaller than
+    /// the trainer's initial dataset, so it can genuinely be an earlier
+    /// state of this run — restores with its missing warm-start rows
+    /// zero-padded: exactly the state [`Trainer::extend_data`] would have
+    /// produced had the extension happened after the checkpoint.  A
+    /// checkpoint taken at a *larger* n is an error: the trainer has
+    /// never seen that data, so the caller must replay the arrival chunks
+    /// (`extend_data`) before restoring.  A checkpoint smaller than the
+    /// construction-time n (wrong dataset) and a probe-width mismatch are
+    /// always incompatible.
+    pub fn restore(&mut self, ck: &checkpoint::Checkpoint) -> Result<()> {
+        anyhow::ensure!(
+            ck.nu.len() == self.params.nu.len(),
+            "checkpoint has {} hyperparameters but the trainer has {}",
+            ck.nu.len(),
+            self.params.nu.len()
+        );
+        anyhow::ensure!(
+            ck.v_store.cols == self.v_store.cols,
+            "checkpoint solve width {} does not match the trainer's {} (probe count changed?)",
+            ck.v_store.cols,
+            self.v_store.cols
+        );
+        anyhow::ensure!(
+            ck.v_store.rows <= self.v_store.rows,
+            "checkpoint was taken at n = {} but the trainer holds only n = {} training rows; \
+             replay the arrival chunks with extend_data before restoring",
+            ck.v_store.rows,
+            self.v_store.rows
+        );
+        // zero-padding is only meaningful for rows that *arrived after*
+        // the checkpoint — a checkpoint smaller than the trainer's initial
+        // dataset belongs to some other dataset
+        anyhow::ensure!(
+            ck.v_store.rows >= self.base_n,
+            "checkpoint was taken at n = {} but this trainer started with n = {} training rows \
+             (checkpoint from a different dataset?)",
+            ck.v_store.rows,
+            self.base_n
         );
         self.params.nu = ck.nu.clone();
         self.adam.restore_state(ck.adam_m.clone(), ck.adam_v.clone(), ck.adam_t);
-        self.v_store = ck.v_store.clone();
+        // row-major: the checkpointed rows are the prefix; rows that
+        // arrived after the checkpoint warm-start from zero
+        let mut v = Mat::zeros(self.v_store.rows, self.v_store.cols);
+        v.data[..ck.v_store.data.len()].copy_from_slice(&ck.v_store.data);
+        self.v_store = v;
         self.step_count = ck.step;
         if let Some(st) = &ck.rng {
             self.rng = Rng::from_state(st);
@@ -302,6 +359,62 @@ impl Trainer {
         let theta = self.params.theta();
         let hp = crate::kernels::Hyperparams::unpack(&theta, self.op.d());
         self.op.set_hp(&hp);
+        Ok(())
+    }
+
+    /// Online data arrival: append `x_new`/`y_new` to the training set and
+    /// carry every piece of coordinator state across the growth instead of
+    /// cold-restarting — the warm-start asset the paper builds across
+    /// outer steps survives across *arrivals* too.
+    ///
+    /// * the operator appends the rows under the current hyperparameters
+    ///   (dense: rank-extends its cached H in O(n·n_new); tiled: O(n_new·d)
+    ///   re-tile; static-shape XLA artifacts return an error untouched);
+    /// * the warm-start store gains zero rows — solved values for the
+    ///   original rows are kept;
+    /// * the probe set gains fresh `z`/noise rows from a stream derived
+    ///   from (seed, old n, new n); `omega0`/`wts` are reused, so pathwise
+    ///   targets on the original rows are unchanged under fixed
+    ///   hyperparameters, and the trainer RNG stream is untouched —
+    ///   replaying the same chunk schedule after a checkpoint restore
+    ///   reproduces the run exactly;
+    /// * every cached preconditioner factorisation is dropped (all were
+    ///   built for the old n; the n in the cache key already prevents
+    ///   wrong reuse, invalidation frees the memory);
+    /// * an auto-derived block size (`TrainerOptions::block_size = None`)
+    ///   is re-derived for the new n; an explicit block size is kept
+    ///   (AP covers any remainder with a ragged tail block).
+    pub fn extend_data(&mut self, x_new: &Mat, y_new: &[f64]) -> Result<()> {
+        anyhow::ensure!(
+            x_new.rows == y_new.len(),
+            "extend_data: {} input rows but {} targets",
+            x_new.rows,
+            y_new.len()
+        );
+        anyhow::ensure!(x_new.rows > 0, "extend_data: empty chunk");
+        anyhow::ensure!(
+            x_new.cols == self.op.d(),
+            "extend_data: chunk has d = {} but the model has d = {}",
+            x_new.cols,
+            self.op.d()
+        );
+        let n0 = self.op.n();
+        self.op.extend(x_new)?;
+        let n1 = self.op.n();
+        self.y_train.extend_from_slice(y_new);
+        let mut chunk_rng = Rng::new(
+            self.opts.seed
+                ^ 0x0E11
+                ^ (n0 as u64).wrapping_mul(0x9E3779B97F4A7C15)
+                ^ (n1 as u64).wrapping_mul(0xBF58476D1CE4E5B9),
+        );
+        self.probes.extend_rows(x_new.rows, &mut chunk_rng);
+        self.v_store.append_rows(&Mat::zeros(x_new.rows, self.v_store.cols));
+        self.precond.invalidate_all();
+        if self.opts.block_size.is_none() {
+            self.solve_opts.block_size = preferred_block(self.op.as_ref());
+        }
+        Ok(())
     }
 
     /// Run `steps` outer-loop iterations.
@@ -377,7 +490,7 @@ impl Trainer {
                 None
             };
             let step_metrics = match self.opts.predict_every {
-                Some(k) if (step + 1) % k == 0 => Some(self.evaluate(&v)?),
+                Some(k) if (step + 1) % k == 0 => Some(self.evaluate(Some(&v))?),
                 _ => None,
             };
 
@@ -404,8 +517,21 @@ impl Trainer {
         let theta = self.params.theta();
         let hp = crate::kernels::Hyperparams::unpack(&theta, self.op.d());
         self.op.set_hp(&hp);
-        let final_v = self.solve_for_prediction()?;
-        let final_metrics = self.evaluate(&final_v)?;
+        let final_metrics = match self.opts.estimator {
+            // Standard: `evaluate` ignores any solved batch and re-solves
+            // a pathwise system itself, so the prediction solve here was a
+            // full metered solve whose result was discarded — skip it.
+            // (The skipped solve also used to refresh `v_store` at the
+            // final theta when warm starting; dropping that is epoch-
+            // neutral — a subsequent `run` pays the same work in its
+            // first step that the tail would have paid here — and a
+            // strict saving whenever no run follows.)
+            EstimatorKind::Standard => self.evaluate(None)?,
+            EstimatorKind::Pathwise => {
+                let final_v = self.solve_for_prediction()?;
+                self.evaluate(Some(&final_v))?
+            }
+        };
 
         Ok(TrainOutcome {
             telemetry,
@@ -439,17 +565,22 @@ impl Trainer {
     /// Test metrics via pathwise conditioning (eq. 16).
     ///
     /// Pathwise estimator: the solved probe columns *are* zhat — prediction
-    /// is amortised.  Standard estimator: the probes are not posterior
-    /// samples, so an extra batch of pathwise solves is required (this is
-    /// exactly the amortisation gap the paper quantifies).
-    fn evaluate(&mut self, v: &Mat) -> Result<Metrics> {
+    /// is amortised, and `v` (the solved batch) is required.  Standard
+    /// estimator: the probes are not posterior samples, so an extra batch
+    /// of pathwise solves is run and `v` is ignored (this is exactly the
+    /// amortisation gap the paper quantifies) — callers pass `None` so no
+    /// solve is wasted producing an input this path throws away.
+    fn evaluate(&mut self, v: Option<&Mat>) -> Result<Metrics> {
         let (zhat, omega0, wts, vy) = match self.opts.estimator {
-            EstimatorKind::Pathwise => (
-                self.probes.zhat(v),
-                self.probes.omega0.clone(),
-                self.probes.wts.clone(),
-                v.col(0),
-            ),
+            EstimatorKind::Pathwise => {
+                let v = v.expect("pathwise evaluation needs the solved batch");
+                (
+                    self.probes.zhat(v),
+                    self.probes.omega0.clone(),
+                    self.probes.wts.clone(),
+                    v.col(0),
+                )
+            }
             EstimatorKind::Standard => {
                 // extra pathwise solves for posterior samples — this is
                 // exactly the amortisation gap the paper quantifies, so
@@ -488,8 +619,10 @@ impl Trainer {
 fn preferred_block(op: &dyn KernelOperator) -> usize {
     // XlaOperator's artifact fixes b; DenseOperator accepts anything.
     // Encode the convention n/16 bounded to [32, 256]; the XLA path
-    // overrides via TrainerOptions.block_size = meta.b.
-    (op.n() / 16).clamp(32, 256)
+    // overrides via TrainerOptions.block_size = meta.b.  Non-dividing
+    // blocks are fine — AP covers the remainder with a ragged tail block
+    // (online arrivals make arbitrary n routine).
+    (op.n() / 16).clamp(32, 256).min(op.n().max(1))
 }
 
 // ---------------------------------------------------------------------------
@@ -660,7 +793,7 @@ mod tests {
         let op2 = DenseOperator::new(&ds, 8, 32);
         let opts2 = b1.opts.clone();
         let mut b2 = Trainer::new(opts2, Box::new(op2), &ds);
-        b2.restore(&ck);
+        b2.restore(&ck).unwrap();
         b2.run(4).unwrap();
         let ta = a.theta();
         let tb = b2.theta();
@@ -736,7 +869,7 @@ mod tests {
         assert!(ck.rng.is_some(), "checkpoint must carry the RNG state");
         let op2 = DenseOperator::new(&ds, 8, 32);
         let mut b2 = Trainer::new(b1.opts.clone(), Box::new(op2), &ds);
-        b2.restore(&ck);
+        b2.restore(&ck).unwrap();
         b2.run(4).unwrap();
         for (x, y) in a.theta().iter().zip(&b2.theta()) {
             assert!((x - y).abs() < 1e-9, "{x} vs {y}");
@@ -769,29 +902,50 @@ mod tests {
 
         let op2 = DenseOperator::new(&ds, 8, 32);
         let mut t2 = Trainer::new(opts, Box::new(op2), &ds);
-        t2.restore(&ck);
+        t2.restore(&ck).unwrap();
         let out2 = t2.run(2).unwrap();
         assert_eq!(out2.sgd_lr_used, out1.sgd_lr_used);
     }
 
     #[test]
     fn preconditioner_cache_is_shared_across_solves() {
-        // With the Standard estimator, `evaluate` runs an extra pathwise
-        // solve at the same hyperparameters as the final prediction solve;
-        // the coordinator-owned cache must serve it from the existing
-        // factorisation instead of rebuilding.
-        let (mut t, _) = trainer(SolverKind::Cg, EstimatorKind::Standard, true);
+        // With the Standard estimator and per-step metrics, `evaluate`
+        // runs an extra pathwise solve at the same hyperparameters as
+        // that step's training solve; the coordinator-owned cache must
+        // serve it from the existing factorisation instead of rebuilding.
+        // (The run() tail no longer issues a redundant prediction solve
+        // for Standard, so per-step evaluation is where sharing shows.)
+        let ds = data::generate(&data::spec("test").unwrap());
+        let op = DenseOperator::new(&ds, 8, 32);
+        let opts = TrainerOptions {
+            solver: SolverKind::Cg,
+            estimator: EstimatorKind::Standard,
+            warm_start: true,
+            lr: 0.1,
+            epoch_cap: 200.0,
+            block_size: Some(64),
+            predict_every: Some(1),
+            seed: 7,
+            ..Default::default()
+        };
+        let mut t = Trainer::new(opts, Box::new(op), &ds);
         let steps = 5;
         let out = t.run(steps).unwrap();
         assert!(out.final_metrics.rmse.is_finite());
         let builds = t.precond_cache().woodbury_builds();
         // one build per distinct theta: one per training step plus the
-        // final (post-Adam) theta of the prediction solve
+        // final (post-Adam) theta of the tail evaluation re-solve
         assert!(
             builds <= steps as u64 + 1,
             "cache not shared: {builds} builds for {steps} steps"
         );
-        assert!(t.precond_cache().hits() >= 1, "evaluation solve should hit the cache");
+        // each step's evaluation re-solve runs at that step's theta and
+        // must hit the factorisation the training solve just built
+        assert!(
+            t.precond_cache().hits() >= steps as u64,
+            "evaluation solves should hit the cache ({} hits)",
+            t.precond_cache().hits()
+        );
     }
 
     #[test]
@@ -806,5 +960,207 @@ mod tests {
             assert!(tel.epochs > 0.0);
         }
         assert!(out.sgd_lr_used > 0.0);
+    }
+
+    #[test]
+    fn standard_estimator_skips_redundant_final_prediction_solve() {
+        // regression: the run() tail called solve_for_prediction
+        // unconditionally, but the Standard estimator's evaluate ignores
+        // the passed batch and re-solves a pathwise system — a full
+        // metered solve whose result was discarded.  Exactly one training
+        // solve per step plus one evaluation re-solve must remain.
+        let steps = 3;
+        let (mut t, _) = trainer(SolverKind::Cg, EstimatorKind::Standard, true);
+        let out = t.run(steps).unwrap();
+        assert_eq!(
+            t.solve_count(),
+            steps as u64 + 1,
+            "the discarded prediction solve is back"
+        );
+        assert!(out.final_metrics.rmse.is_finite());
+        // the pathwise tail still pays its (useful) prediction solve
+        let (mut p, _) = trainer(SolverKind::Cg, EstimatorKind::Pathwise, true);
+        p.run(steps).unwrap();
+        assert_eq!(p.solve_count(), steps as u64 + 1);
+    }
+
+    /// Online fixture: the "test" dataset replayed as a 128-row prefix
+    /// plus two 64-row arrival chunks.
+    fn online_fixture() -> (Dataset, Dataset, Vec<(Mat, Vec<f64>)>) {
+        let ds = data::generate(&data::spec("test").unwrap());
+        let (base, chunks) = ds.replay_chunks(2);
+        // split the 128-row tail once more for two uneven-phase arrivals
+        let (x, y) = &chunks[0];
+        let half = x.rows / 2;
+        let c1 = (
+            x.gather_rows(&(0..half).collect::<Vec<_>>()),
+            y[..half].to_vec(),
+        );
+        let c2 = (
+            x.gather_rows(&(half..x.rows).collect::<Vec<_>>()),
+            y[half..].to_vec(),
+        );
+        (ds, base, vec![c1, c2])
+    }
+
+    fn online_trainer(base: &Dataset, warm: bool, seed: u64) -> Trainer {
+        let op = DenseOperator::new(base, 8, 32);
+        let opts = TrainerOptions {
+            solver: SolverKind::Ap,
+            estimator: EstimatorKind::Pathwise,
+            warm_start: warm,
+            lr: 0.05,
+            epoch_cap: 300.0,
+            block_size: Some(32),
+            seed,
+            ..Default::default()
+        };
+        Trainer::new(opts, Box::new(op), base)
+    }
+
+    #[test]
+    fn extend_data_grows_every_piece_of_state() {
+        let (ds, base, chunks) = online_fixture();
+        let mut t = online_trainer(&base, true, 3);
+        t.run(2).unwrap();
+        let builds_before = t.precond_cache().ap_builds();
+        for (x, y) in &chunks {
+            t.extend_data(x, y).unwrap();
+        }
+        assert_eq!(t.operator().n(), ds.spec.n);
+        assert_eq!(t.v_store().rows, ds.spec.n);
+        assert_eq!(t.probes().z.rows, ds.spec.n);
+        assert_eq!(t.probes().noise.rows, ds.spec.n);
+        // old warm-start rows carried, new rows zero
+        assert!(t.v_store().data[..10].iter().any(|&x| x != 0.0));
+        let tail = &t.v_store().data[(ds.spec.n - 64) * t.v_store().cols..];
+        assert!(tail.iter().all(|&x| x == 0.0));
+        // training continues and rebuilds factorisations for the new n
+        let out = t.run(2).unwrap();
+        assert!(out.final_metrics.rmse.is_finite());
+        assert!(t.precond_cache().ap_builds() > builds_before);
+        // shape-mismatched chunks are rejected
+        assert!(t.extend_data(&Mat::zeros(2, 3), &[0.0, 0.0]).is_err());
+        assert!(t.extend_data(&Mat::zeros(2, 4), &[0.0]).is_err());
+        assert!(t.extend_data(&Mat::zeros(0, 4), &[]).is_err());
+    }
+
+    #[test]
+    fn warm_carried_online_run_beats_cold_restarts() {
+        // the tentpole claim: carrying solver + optimiser state across
+        // arrivals reaches tolerance in strictly fewer total epochs than
+        // cold-restarting on the accumulated data at every arrival
+        let (ds, base, chunks) = online_fixture();
+        let steps = 3;
+
+        let mut warm = online_trainer(&base, true, 5);
+        let mut warm_epochs = warm.run(steps).unwrap().total_epochs;
+        for (x, y) in &chunks {
+            warm.extend_data(x, y).unwrap();
+            warm_epochs += warm.run(steps).unwrap().total_epochs;
+        }
+
+        let mut cold_epochs = 0.0;
+        let mut acc_x = base.x_train.clone();
+        let mut acc_y = base.y_train.clone();
+        let mut acc = base.clone();
+        cold_epochs += online_trainer(&acc, true, 5).run(steps).unwrap().total_epochs;
+        for (x, y) in &chunks {
+            acc_x.append_rows(x);
+            acc_y.extend_from_slice(y);
+            acc = ds.with_train(acc_x.clone(), acc_y.clone());
+            cold_epochs += online_trainer(&acc, true, 5).run(steps).unwrap().total_epochs;
+        }
+
+        assert!(
+            warm_epochs < cold_epochs,
+            "warm-carried {warm_epochs} vs cold restarts {cold_epochs}"
+        );
+    }
+
+    #[test]
+    fn checkpoint_restore_is_resize_aware() {
+        let (_, base, chunks) = online_fixture();
+        let (x1, y1) = &chunks[0];
+
+        let mut t = online_trainer(&base, true, 11);
+        t.run(2).unwrap();
+        let ck_small = t.checkpoint();
+        t.extend_data(x1, y1).unwrap();
+        t.run(2).unwrap();
+        let ck_big = t.checkpoint();
+
+        // same-shape restore still works
+        let mut fresh = online_trainer(&base, true, 11);
+        fresh.restore(&ck_small).unwrap();
+
+        // a checkpoint from a larger n cannot restore before the chunks
+        // are replayed (the old code hard-asserted here)
+        let mut fresh = online_trainer(&base, true, 11);
+        let err = fresh.restore(&ck_big).unwrap_err().to_string();
+        assert!(err.contains("extend_data"), "{err}");
+        fresh.extend_data(x1, y1).unwrap();
+        fresh.restore(&ck_big).unwrap();
+        assert_eq!(fresh.v_store().data, ck_big.v_store.data);
+        fresh.run(1).unwrap();
+
+        // an older (smaller-n) checkpoint restores into an extended
+        // trainer with the missing warm-start rows zero-padded
+        let mut padded = online_trainer(&base, true, 11);
+        padded.extend_data(x1, y1).unwrap();
+        padded.restore(&ck_small).unwrap();
+        assert_eq!(padded.v_store().rows, base.spec.n + x1.rows);
+        let k = padded.v_store().cols;
+        assert_eq!(
+            &padded.v_store().data[..ck_small.v_store.data.len()],
+            &ck_small.v_store.data[..]
+        );
+        assert!(padded.v_store().data[base.spec.n * k..].iter().all(|&v| v == 0.0));
+        padded.run(1).unwrap();
+
+        // a checkpoint smaller than a trainer's *initial* dataset cannot
+        // be an earlier state of that run — reject it instead of silently
+        // zero-padding a wrong-dataset restore
+        let ds_full = data::generate(&data::spec("test").unwrap());
+        let mut other = online_trainer(&ds_full, true, 11);
+        let err = other.restore(&ck_small).unwrap_err().to_string();
+        assert!(err.contains("different dataset"), "{err}");
+
+        // probe-width mismatch is genuinely incompatible
+        let op_wide = DenseOperator::new(&base, 9, 32);
+        let mut wide = Trainer::new(
+            TrainerOptions { seed: 11, ..online_trainer(&base, true, 11).opts },
+            Box::new(op_wide),
+            &base,
+        );
+        assert!(wide.restore(&ck_small).is_err());
+    }
+
+    #[test]
+    fn extension_resume_reproduces_straight_online_run() {
+        // checkpoint + replayed chunk + restore must continue the exact
+        // trajectory: probe extensions come from a (seed, old n, new n)
+        // derived stream, not the trainer RNG
+        let (_, base, chunks) = online_fixture();
+        let (x1, y1) = &chunks[0];
+
+        let mut straight = online_trainer(&base, true, 13);
+        straight.run(2).unwrap();
+        straight.extend_data(x1, y1).unwrap();
+        straight.run(2).unwrap();
+
+        let mut first = online_trainer(&base, true, 13);
+        first.run(2).unwrap();
+        first.extend_data(x1, y1).unwrap();
+        let ck = first.checkpoint();
+
+        let mut resumed = online_trainer(&base, true, 13);
+        resumed.extend_data(x1, y1).unwrap();
+        resumed.restore(&ck).unwrap();
+        resumed.run(2).unwrap();
+
+        for (a, b) in straight.theta().iter().zip(&resumed.theta()) {
+            assert!((a - b).abs() < 1e-9, "{a} vs {b}");
+        }
     }
 }

@@ -48,6 +48,52 @@ pub struct Dataset {
     pub true_hp: Hyperparams,
 }
 
+impl Dataset {
+    /// Clone of this dataset with a replaced training set (test split and
+    /// spec metadata preserved; `spec.n` tracks the new training size).
+    /// Used by online-replay experiments to materialise the accumulated
+    /// data a cold-restart baseline retrains on.
+    pub fn with_train(&self, x_train: Mat, y_train: Vec<f64>) -> Dataset {
+        assert_eq!(x_train.rows, y_train.len());
+        assert_eq!(x_train.cols, self.spec.d);
+        let mut spec = self.spec.clone();
+        spec.n = x_train.rows;
+        Dataset {
+            spec,
+            x_train,
+            y_train,
+            x_test: self.x_test.clone(),
+            y_test: self.y_test.clone(),
+            true_hp: self.true_hp.clone(),
+        }
+    }
+
+    /// Split the training set into an initial prefix dataset plus `k - 1`
+    /// arrival chunks `(x, y)` for online-replay experiments (the test
+    /// split stays with the prefix).  Chunks are `n / k` rows each; the
+    /// remainder goes to the prefix so every arrival is the same size.
+    pub fn replay_chunks(&self, k: usize) -> (Dataset, Vec<(Mat, Vec<f64>)>) {
+        let n = self.x_train.rows;
+        assert!(k >= 1 && k <= n, "replay_chunks: k = {k} out of range for n = {n}");
+        let per = n / k;
+        let base_n = n - per * (k - 1);
+        let base = self.with_train(
+            self.x_train.gather_rows(&(0..base_n).collect::<Vec<_>>()),
+            self.y_train[..base_n].to_vec(),
+        );
+        let mut chunks = Vec::with_capacity(k - 1);
+        for c in 0..k - 1 {
+            let lo = base_n + c * per;
+            let hi = lo + per;
+            chunks.push((
+                self.x_train.gather_rows(&(lo..hi).collect::<Vec<_>>()),
+                self.y_train[lo..hi].to_vec(),
+            ));
+        }
+        (base, chunks)
+    }
+}
+
 /// The dataset registry, mirroring the paper's UCI suite.
 /// Shapes must match the artifact configs in python/compile/configs.py.
 pub fn registry() -> Vec<DatasetSpec> {
@@ -254,6 +300,27 @@ mod tests {
             assert!(mean(&col).abs() < 0.15);
             let v = variance(&col);
             assert!((0.5..1.6).contains(&v), "col {j} var {v}");
+        }
+    }
+
+    #[test]
+    fn replay_chunks_cover_the_training_set_in_order() {
+        let s = spec("test").unwrap();
+        let ds = generate(&s);
+        for k in [1, 2, 3, 5] {
+            let (base, chunks) = ds.replay_chunks(k);
+            assert_eq!(chunks.len(), k - 1);
+            assert_eq!(base.spec.n, base.x_train.rows);
+            let mut x = base.x_train.clone();
+            let mut y = base.y_train.clone();
+            for (cx, cy) in &chunks {
+                assert_eq!(cx.rows, ds.spec.n / k, "chunks are even");
+                x.append_rows(cx);
+                y.extend_from_slice(cy);
+            }
+            assert_eq!(x.data, ds.x_train.data, "k={k}: inputs replayed in order");
+            assert_eq!(y, ds.y_train, "k={k}: targets replayed in order");
+            assert_eq!(base.x_test.data, ds.x_test.data);
         }
     }
 

@@ -66,6 +66,9 @@ impl ProbeDist {
 /// All randomness of one estimator instance.
 pub struct ProbeSet {
     pub kind: EstimatorKind,
+    /// Distribution the standard probes were drawn from (extensions must
+    /// append rows from the same distribution).
+    pub dist: ProbeDist,
     /// Standard probes Z [n, s] (kept for the standard estimator).
     pub z: Mat,
     /// RFF base frequencies [d, m] (unit-lengthscale spectral density).
@@ -101,7 +104,22 @@ impl ProbeSet {
         }
         let wts = Mat::from_fn(2 * m, s, |_, _| rng.gaussian());
         let noise = Mat::from_fn(n, s, |_, _| rng.gaussian());
-        ProbeSet { kind, z, omega0, wts, noise }
+        ProbeSet { kind, dist, z, omega0, wts, noise }
+    }
+
+    /// Grow the probe state by `n_new` training rows (online data
+    /// arrival): `z` gains rows from the set's own probe distribution and
+    /// the noise reparameterisation gains Gaussian rows, both freshly
+    /// drawn from `rng` (the coordinator passes a per-chunk derived
+    /// stream), while `omega0`/`wts` are **reused** — the RFF prior draw
+    /// is a function on input space, so pathwise targets on the original
+    /// rows are unchanged under fixed hyperparameters and the warm-start
+    /// contract survives the extension.
+    pub fn extend_rows(&mut self, n_new: usize, rng: &mut Rng) {
+        let s = self.z.cols;
+        let dist = self.dist;
+        self.z.append_rows(&Mat::from_fn(n_new, s, |_, _| dist.draw(rng)));
+        self.noise.append_rows(&Mat::from_fn(n_new, s, |_, _| rng.gaussian()));
     }
 
     /// Solver targets B = [y | probes] under the current hyperparameters.
@@ -226,6 +244,63 @@ mod tests {
             (diag_mean - want).abs() / want < 0.25,
             "emp {diag_mean} vs want {want}"
         );
+    }
+
+    #[test]
+    fn extend_rows_keeps_old_pathwise_targets_bitwise() {
+        // online contract: appending probe rows must not disturb the
+        // targets of the rows that were already there (omega0/wts reused;
+        // only fresh z/noise rows are drawn)
+        let ds = data::generate(&data::spec("test").unwrap());
+        let hp = Hyperparams { ell: vec![0.9; 4], sigf: 1.1, sigma: 0.35 };
+        let n0 = 180;
+        let base = ds.with_train(
+            ds.x_train.gather_rows(&(0..n0).collect::<Vec<_>>()),
+            ds.y_train[..n0].to_vec(),
+        );
+        let mut op = DenseOperator::new(&base, 6, 24);
+        op.set_hp(&hp);
+        let mut rng = Rng::new(11);
+        for kind in [EstimatorKind::Standard, EstimatorKind::Pathwise] {
+            let mut ps = ProbeSet::sample(kind, &op, &mut rng);
+            let before = ps.targets(&op, &base.y_train);
+            let mut grown = op.clone();
+            let chunk = ds.x_train.gather_rows(&(n0..ds.x_train.rows).collect::<Vec<_>>());
+            grown.extend(&chunk).unwrap();
+            let mut chunk_rng = Rng::new(99);
+            ps.extend_rows(chunk.rows, &mut chunk_rng);
+            assert_eq!(ps.z.rows, grown.n());
+            assert_eq!(ps.noise.rows, grown.n());
+            let mut y = base.y_train.clone();
+            y.extend_from_slice(&ds.y_train[n0..]);
+            let after = ps.targets(&grown, &y);
+            assert_eq!(after.rows, grown.n());
+            for i in 0..n0 {
+                for j in 0..before.cols {
+                    assert_eq!(
+                        before[(i, j)].to_bits(),
+                        after[(i, j)].to_bits(),
+                        "{kind:?} old target ({i},{j}) changed"
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn extend_rows_keeps_the_probe_distribution() {
+        // regression: extensions drew Gaussian rows regardless of the
+        // distribution the set was sampled with, silently mixing probe
+        // statistics on the appended rows
+        let ds = data::generate(&data::spec("test").unwrap());
+        let op = DenseOperator::new(&ds, 6, 24);
+        let mut rng = Rng::new(17);
+        let mut ps =
+            ProbeSet::sample_with(EstimatorKind::Standard, ProbeDist::Rademacher, &op, &mut rng);
+        let mut chunk_rng = Rng::new(18);
+        ps.extend_rows(40, &mut chunk_rng);
+        assert_eq!(ps.z.rows, op.n() + 40);
+        assert!(ps.z.data.iter().all(|&v| v == 1.0 || v == -1.0));
     }
 
     #[test]

@@ -72,15 +72,24 @@ impl ExactGp {
     }
 
     /// Posterior predictive mean and variance (with observation noise).
+    ///
+    /// All t variance right-hand sides go through one batched
+    /// `Cholesky::solve_mat` sweep (L is streamed once) instead of one
+    /// O(n²) triangular solve per test row; `solve_mat` replays the
+    /// per-column operation order, so predictions are bitwise-unchanged.
     pub fn predict(&self, x_test: &Mat) -> (Vec<f64>, Vec<f64>) {
         let kx = kernel_matrix(x_test, &self.x, &self.hp, self.family); // [t, n]
         let mean = kx.matvec(&self.alpha);
-        let mut var = Vec::with_capacity(x_test.rows);
+        let w = self.chol.solve_mat(&kx.transpose()); // [n, t]
+        let n = self.x.rows;
         let prior = self.hp.sigf * self.hp.sigf;
+        let mut var = Vec::with_capacity(x_test.rows);
         for i in 0..x_test.rows {
             let krow = kx.row(i);
-            let w = self.chol.solve(krow);
-            let reduction = stats::dot(krow, &w);
+            let mut reduction = 0.0;
+            for j in 0..n {
+                reduction += krow[j] * w[(j, i)];
+            }
             var.push((prior - reduction).max(1e-12) + self.hp.noise_var());
         }
         (mean, var)
@@ -207,6 +216,30 @@ mod tests {
         assert!(v_far[0] > v_near[0]);
         // far from data, variance approaches prior + noise
         assert!((v_far[0] - (1.44 + 0.16)).abs() < 1e-6);
+    }
+
+    #[test]
+    fn batched_predict_is_bitwise_equal_to_per_row_solves() {
+        // regression: predict used one O(n²) triangular solve per test
+        // row; the batched solve_mat path must reproduce those
+        // predictions bit for bit
+        let (x, y, hp) = toy(48, 3, 9);
+        let gp = ExactGp::fit(&x, &y, &hp, KernelFamily::Matern32).unwrap();
+        let mut rng = Rng::new(10);
+        let x_test = Mat::from_fn(17, 3, |_, _| rng.gaussian());
+        let (mean, var) = gp.predict(&x_test);
+        // per-row reference (the pre-batching algorithm)
+        let kx = kernel_matrix(&x_test, &gp.x, &gp.hp, gp.family);
+        let prior = gp.hp.sigf * gp.hp.sigf;
+        for i in 0..x_test.rows {
+            let krow = kx.row(i);
+            let w = gp.chol.solve(krow);
+            let reduction = stats::dot(krow, &w);
+            let want = (prior - reduction).max(1e-12) + gp.hp.noise_var();
+            assert_eq!(var[i].to_bits(), want.to_bits(), "var row {i}");
+            let want_mean = stats::dot(krow, &gp.alpha);
+            assert_eq!(mean[i].to_bits(), want_mean.to_bits(), "mean row {i}");
+        }
     }
 
     #[test]

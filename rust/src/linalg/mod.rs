@@ -76,6 +76,18 @@ impl Mat {
         Mat::from_fn(self.cols, self.rows, |i, j| self[(j, i)])
     }
 
+    /// Append another matrix's rows below this one's (online data
+    /// arrival).  Row-major storage makes this a single buffer extend.
+    pub fn append_rows(&mut self, other: &Mat) {
+        assert_eq!(
+            self.cols, other.cols,
+            "append_rows: column mismatch ({} vs {})",
+            self.cols, other.cols
+        );
+        self.data.extend_from_slice(&other.data);
+        self.rows += other.rows;
+    }
+
     /// Select a subset of rows.
     pub fn gather_rows(&self, idx: &[usize]) -> Mat {
         let mut out = Mat::zeros(idx.len(), self.cols);
@@ -277,6 +289,16 @@ mod tests {
     fn transpose_roundtrip() {
         let a = Mat::from_fn(3, 5, |i, j| (i * 10 + j) as f64);
         assert_eq!(a.transpose().transpose(), a);
+    }
+
+    #[test]
+    fn append_rows_stacks() {
+        let mut a = Mat::from_fn(2, 3, |i, j| (i * 3 + j) as f64);
+        let b = Mat::from_fn(1, 3, |_, j| 100.0 + j as f64);
+        a.append_rows(&b);
+        assert_eq!((a.rows, a.cols), (3, 3));
+        assert_eq!(a.row(2), &[100.0, 101.0, 102.0]);
+        assert_eq!(a.row(0), &[0.0, 1.0, 2.0]);
     }
 
     #[test]

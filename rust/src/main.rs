@@ -56,7 +56,7 @@ USAGE:
     igp train [--config FILE] [--dataset D] [--solver cg|ap|sgd]
               [--estimator standard|pathwise] [--warm-start]
               [--backend dense|tiled|xla] [--tile N] [--threads N]
-              [--probes S] [--rff M]
+              [--probes S] [--rff M] [--online K]
               [--steps N] [--lr F] [--max-epochs N] [--seed N]
               [--artifacts DIR] [--out results.csv]
     igp exp <id|all> [--out DIR] [--splits N] [--steps N]
@@ -69,6 +69,11 @@ BACKENDS:
            knobs: --tile (block edge, default 256), --threads (0 = auto)
     dense  pure-Rust oracle materialising H, O(n^2) memory (tiny n only)
     xla    compiled PJRT artifacts (needs `make artifacts` + xla feature)
+
+ONLINE MODE:
+    --online K replays the dataset in K arrival chunks and trains --steps
+    outer steps after each arrival, carrying the warm-start store, probe
+    randomness and optimiser state across arrivals (dense/tiled only).
 "#
     );
 }
@@ -82,13 +87,107 @@ fn cmd_info(args: &[String]) -> Result<()> {
     Ok(())
 }
 
+/// Single source of the RunConfig -> TrainerOptions mapping so the plain
+/// and online training paths cannot drift apart (`block` is only pinned
+/// by the XLA artifact).
+fn trainer_options(rc: &RunConfig, block: Option<usize>) -> Result<TrainerOptions> {
+    Ok(TrainerOptions {
+        solver: SolverKind::parse(&rc.solver)?,
+        estimator: EstimatorKind::parse(&rc.estimator)?,
+        warm_start: rc.warm_start,
+        lr: rc.lr,
+        tolerance: rc.tolerance,
+        max_epochs: rc.max_epochs.map(|e| e as f64),
+        block_size: block,
+        seed: rc.seed,
+        predict_every: Some(10),
+        threads: rc.threads,
+        ..Default::default()
+    })
+}
+
+/// Online data-arrival training: replay the dataset in `online_chunks`
+/// arrivals, training `outer_steps` outer-loop steps after each one with
+/// warm-carried coordinator state (`Trainer::extend_data`).
+fn cmd_train_online(rc: &RunConfig, out_path: Option<&str>) -> Result<()> {
+    let ds = igp::data::generate(&igp::data::spec(&rc.dataset)?);
+    anyhow::ensure!(
+        rc.online_chunks <= ds.spec.n,
+        "--online {} exceeds the dataset's {} training rows",
+        rc.online_chunks,
+        ds.spec.n
+    );
+    let backend = BackendKind::parse(&rc.backend)?;
+    let (base, chunks) = ds.replay_chunks(rc.online_chunks);
+    let topts = TiledOptions { tile: rc.tile, threads: rc.threads };
+    let op = igp::operators::make_cpu_backend(backend, &base, rc.probes, rc.rff, topts)?;
+    igp::info!(
+        "backend: {} (online: {} arrivals of ~{} rows)",
+        backend.name(),
+        rc.online_chunks,
+        ds.spec.n / rc.online_chunks
+    );
+    let opts = trainer_options(rc, None)?;
+    let mut trainer = Trainer::new(opts, op, &base);
+
+    println!(
+        "dataset={} solver={} estimator={} warm={} backend={} online_chunks={}",
+        rc.dataset, rc.solver, rc.estimator, rc.warm_start, rc.backend, rc.online_chunks
+    );
+    println!(
+        "{:>8} {:>7} {:>9} {:>11} {:>9} {:>9}",
+        "arrival", "n", "epochs", "solver_secs", "rmse", "llh"
+    );
+    let mut rows = Vec::new();
+    let mut arrival = 0usize;
+    let mut total_epochs = 0.0;
+    let mut report = |arrival: usize, n: usize, out: &igp::coordinator::TrainOutcome| {
+        println!(
+            "{arrival:>8} {n:>7} {:>9.1} {:>11.3} {:>9.4} {:>9.4}",
+            out.total_epochs, out.solver_secs, out.final_metrics.rmse, out.final_metrics.llh
+        );
+        rows.push([
+            arrival.to_string(),
+            n.to_string(),
+            out.total_epochs.to_string(),
+            out.solver_secs.to_string(),
+            out.final_metrics.rmse.to_string(),
+            out.final_metrics.llh.to_string(),
+        ]);
+    };
+    let out = trainer.run(rc.outer_steps)?;
+    total_epochs += out.total_epochs;
+    report(arrival, trainer.operator().n(), &out);
+    for (x, y) in &chunks {
+        arrival += 1;
+        trainer.extend_data(x, y)?;
+        let out = trainer.run(rc.outer_steps)?;
+        total_epochs += out.total_epochs;
+        report(arrival, trainer.operator().n(), &out);
+    }
+    println!("total: {total_epochs:.1} epochs across {} arrivals", rc.online_chunks);
+
+    if let Some(path) = out_path {
+        let mut w = igp::util::csv::CsvWriter::create(
+            path,
+            &["arrival", "n", "epochs", "solver_secs", "rmse", "llh"],
+        )?;
+        for r in &rows {
+            w.row(r)?;
+        }
+        w.flush()?;
+        igp::info!("online telemetry written to {path}");
+    }
+    Ok(())
+}
+
 fn cmd_train(args: &[String]) -> Result<()> {
     let p = cli::Parser::new(
         args,
         &[
             "config", "dataset", "solver", "estimator", "steps", "lr", "max-epochs",
             "seed", "artifacts", "out", "tolerance", "backend", "tile", "threads",
-            "probes", "rff",
+            "probes", "rff", "online",
         ],
     )?;
     let mut rc = match p.get("config") {
@@ -140,7 +239,14 @@ fn cmd_train(args: &[String]) -> Result<()> {
     if let Some(v) = p.get_parsed::<usize>("rff")? {
         rc.rff = v;
     }
+    if let Some(v) = p.get_parsed::<usize>("online")? {
+        rc.online_chunks = v;
+    }
     rc.validate()?;
+
+    if rc.online_chunks > 1 {
+        return cmd_train_online(&rc, p.get("out"));
+    }
 
     let ds = igp::data::generate(&igp::data::spec(&rc.dataset)?);
     let backend = BackendKind::parse(&rc.backend)?;
@@ -161,19 +267,7 @@ fn cmd_train(args: &[String]) -> Result<()> {
         }
     };
     igp::info!("backend: {}", backend.name());
-    let opts = TrainerOptions {
-        solver: SolverKind::parse(&rc.solver)?,
-        estimator: EstimatorKind::parse(&rc.estimator)?,
-        warm_start: rc.warm_start,
-        lr: rc.lr,
-        tolerance: rc.tolerance,
-        max_epochs: rc.max_epochs.map(|e| e as f64),
-        block_size: block,
-        seed: rc.seed,
-        predict_every: Some(10),
-        threads: rc.threads,
-        ..Default::default()
-    };
+    let opts = trainer_options(&rc, block)?;
     let mut trainer = Trainer::new(opts, op, &ds);
     let out = trainer.run(rc.outer_steps)?;
 

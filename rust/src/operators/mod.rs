@@ -118,6 +118,20 @@ pub trait KernelOperator {
     /// All d+2 components of  sum_j w_j a_j^T (dH/dtheta) b_j.
     fn grad_quad(&self, a: &Mat, b: &Mat, w: &[f64]) -> Vec<f64>;
 
+    /// Append newly arrived training inputs (online data-arrival mode):
+    /// after the call, `n()` has grown by `x_new.rows` and every product
+    /// covers the extended dataset under the *current* hyperparameters.
+    ///
+    /// Contract (enforced by the online parity tests): the extended
+    /// operator must be indistinguishable from one freshly built on the
+    /// concatenated data — bitwise for the pure-Rust backends.
+    ///
+    /// Backends with static shapes (compiled XLA artifacts) cannot grow
+    /// and return an error; the coordinator surfaces it to the caller.
+    fn extend(&mut self, _x_new: &Mat) -> anyhow::Result<()> {
+        anyhow::bail!("this backend has static shapes and does not support online data arrival")
+    }
+
     /// Pathwise probe targets Xi = Phi(X) wts + sigma * noise  [n, s].
     fn rff_eval(&self, omega0: &Mat, wts: &Mat, noise: &Mat) -> Mat;
 
@@ -198,6 +212,7 @@ pub(crate) fn rff_fill_row(xi: &[f64], omega0: &Mat, ell: &[f64], amp: f64, phi:
 // ---------------------------------------------------------------------------
 
 /// Pure-Rust reference backend: materialises H once per `set_hp`.
+#[derive(Clone)]
 pub struct DenseOperator {
     x: Mat,
     x_test: Mat,
@@ -258,6 +273,49 @@ impl KernelOperator for DenseOperator {
     fn set_hp(&mut self, hp: &Hyperparams) {
         self.hp = hp.clone();
         self.h = kernels::h_matrix(&self.x, hp, self.family);
+    }
+
+    /// Online data arrival: rank-extend the cached H in place,
+    ///
+    ///   H1 = [[H0, K(X0, Xn)], [K(Xn, X0), K(Xn, Xn) + sigma^2 I]],
+    ///
+    /// so only the new cross/corner blocks are fresh kernel evaluations —
+    /// O(n1 * n_new) instead of the O(n1^2) full rebuild `set_hp` pays.
+    /// Every entry comes from the same `kval` calls a rebuild would make,
+    /// so the extended H is bitwise-identical to a fresh build on the
+    /// concatenated data (the online parity tests assert this).
+    fn extend(&mut self, x_new: &Mat) -> anyhow::Result<()> {
+        anyhow::ensure!(x_new.rows > 0, "extend: empty chunk");
+        anyhow::ensure!(
+            x_new.cols == self.x.cols,
+            "extend: chunk has d = {} but the operator holds d = {}",
+            x_new.cols,
+            self.x.cols
+        );
+        let n0 = self.x.rows;
+        let nn = x_new.rows;
+        let n1 = n0 + nn;
+        let k_on = kernels::kernel_matrix(&self.x, x_new, &self.hp, self.family); // [n0, nn]
+        // lower block by symmetry: kval is bitwise-symmetric ((a-b)² ==
+        // (b-a)² with identical coordinate sum order), so the transpose
+        // halves the dominant kernel-evaluation cost of the extension
+        let k_no = k_on.transpose(); // [nn, n0]
+        let mut k_nn = kernels::kernel_matrix(x_new, x_new, &self.hp, self.family);
+        k_nn.add_diag(self.hp.noise_var());
+        let mut h = Mat::zeros(n1, n1);
+        for i in 0..n0 {
+            let row = h.row_mut(i);
+            row[..n0].copy_from_slice(self.h.row(i));
+            row[n0..].copy_from_slice(k_on.row(i));
+        }
+        for i in 0..nn {
+            let row = h.row_mut(n0 + i);
+            row[..n0].copy_from_slice(k_no.row(i));
+            row[n0..].copy_from_slice(k_nn.row(i));
+        }
+        self.h = h;
+        self.x.append_rows(x_new);
+        Ok(())
     }
 
     fn hv(&self, v: &Mat) -> Mat {
@@ -453,6 +511,40 @@ mod tests {
             *w += o.hp().sigma * z;
         }
         assert!(xi.max_abs_diff(&want) < 1e-12);
+    }
+
+    #[test]
+    fn extended_dense_matches_rebuilt_bitwise() {
+        // online contract: growing the operator chunk by chunk must be
+        // indistinguishable — bitwise — from building it on the full data
+        let ds = data::generate(&data::spec("test").unwrap());
+        let hp = Hyperparams { ell: vec![0.8; 4], sigf: 1.1, sigma: 0.3 };
+        let n0 = 100;
+        let base = ds.with_train(
+            ds.x_train.gather_rows(&(0..n0).collect::<Vec<_>>()),
+            ds.y_train[..n0].to_vec(),
+        );
+        let mut grown = DenseOperator::new(&base, 4, 16);
+        grown.set_hp(&hp);
+        // two uneven chunks
+        let c1 = ds.x_train.gather_rows(&(n0..190).collect::<Vec<_>>());
+        let c2 = ds.x_train.gather_rows(&(190..ds.x_train.rows).collect::<Vec<_>>());
+        grown.extend(&c1).unwrap();
+        grown.extend(&c2).unwrap();
+        let mut full = DenseOperator::new(&ds, 4, 16);
+        full.set_hp(&hp);
+        assert_eq!(grown.n(), full.n());
+        assert_eq!(grown.x().data, full.x().data);
+        let bit_equal = grown
+            .h()
+            .data
+            .iter()
+            .zip(&full.h().data)
+            .all(|(a, b)| a.to_bits() == b.to_bits());
+        assert!(bit_equal, "extended H differs from rebuilt H in bits");
+        // shape-mismatched chunks are rejected
+        assert!(grown.extend(&Mat::zeros(3, 2)).is_err());
+        assert!(grown.extend(&Mat::zeros(0, 4)).is_err());
     }
 
     #[test]

@@ -69,9 +69,12 @@ impl LinearSolver for ApSolver {
         let mut iterations = 0usize;
         let (mut ry, mut rz) = residual_norms_t(&r, threads);
         let tol = opts.tolerance;
+        // budget guard uses the full-block cost; a ragged tail iteration
+        // (block does not divide n — routine after online arrivals) is
+        // charged its actual, smaller fraction below
         let epoch_per_iter = bsz as f64 / n as f64;
 
-        let nblocks = n / bsz;
+        let nblocks = (n + bsz - 1) / bsz;
         while (ry > tol || rz > tol) && epochs + epoch_per_iter <= opts.max_epochs {
             let blk = match opts.ap_selection {
                 ApSelection::Greedy => {
@@ -96,11 +99,11 @@ impl LinearSolver for ApSolver {
                     b
                 }
             };
-            let idx: Vec<usize> = (blk * bsz..(blk + 1) * bsz).collect();
+            let idx: Vec<usize> = (blk * bsz..((blk + 1) * bsz).min(n)).collect();
 
             // u = H[I,I]^-1 r[I]
             let r_blk = r.gather_rows(&idx);
-            let u = factors[blk].solve_mat(&r_blk); // [b, k]
+            let u = factors[blk].solve_mat(&r_blk); // [|I|, k]
 
             // v[I] += u
             for (bi, &i) in idx.iter().enumerate() {
@@ -120,7 +123,7 @@ impl LinearSolver for ApSolver {
                 }
             }
 
-            epochs += epoch_per_iter;
+            epochs += idx.len() as f64 / n as f64;
             iterations += 1;
             let (a, b_) = residual_norms_t(&r, threads);
             ry = a;
@@ -297,6 +300,31 @@ mod tests {
         let rep32_fresh = ApSolver::default().solve(&op, &b, &mut v3, &mk(32));
         assert_eq!(rep32, rep32_fresh);
         assert_eq!(v2.data, v3.data);
+    }
+
+    #[test]
+    fn ragged_tail_block_converges_to_direct_solution() {
+        // online arrivals make block sizes that do not divide n routine:
+        // 256 = 5 * 48 + 16, so the sixth block is a 16-row ragged tail
+        let (op, b) = setup();
+        let mut v = Mat::zeros(op.n(), op.k_width());
+        let opts = SolveOptions {
+            tolerance: 1e-6,
+            max_epochs: 3000.0,
+            block_size: 48,
+            ..Default::default()
+        };
+        let rep = ApSolver::default().solve(&op, &b, &mut v, &opts);
+        assert!(rep.converged, "{rep:?}");
+        let want = Chol::factor(op.h()).unwrap().solve_mat(&b);
+        assert!(v.max_abs_diff(&want) < 1e-4, "{}", v.max_abs_diff(&want));
+        // random + cyclic selection must also cover the tail block
+        for sel in [super::super::ApSelection::Random, super::super::ApSelection::Cyclic] {
+            let mut v = Mat::zeros(op.n(), op.k_width());
+            let o = SolveOptions { ap_selection: sel, ..opts.clone() };
+            let rep = ApSolver::default().solve(&op, &b, &mut v, &o);
+            assert!(rep.converged, "{sel:?}: {rep:?}");
+        }
     }
 
     #[test]

@@ -233,6 +233,27 @@ impl Normalized {
         v0: &mut Mat,
         threads: usize,
     ) -> (Self, Mat) {
+        // solve-width checks: catch a store that did not grow with the
+        // operator (online data arrival) before it turns into a silent
+        // out-of-bounds product or a garbage solve
+        assert_eq!(
+            b.rows,
+            op.n(),
+            "solver RHS has {} rows but the operator holds n = {} training points \
+             (stale targets after an online extension?)",
+            b.rows,
+            op.n()
+        );
+        assert_eq!(
+            (v0.rows, v0.cols),
+            (b.rows, b.cols),
+            "warm-start store is {}x{} but the system is {}x{} \
+             (stale v_store after an online extension?)",
+            v0.rows,
+            v0.cols,
+            b.rows,
+            b.cols
+        );
         let mut norms = recurrence::col_norms(b, threads);
         for n in &mut norms {
             *n += NORM_EPS;

@@ -164,14 +164,18 @@ impl WoodburyPreconditioner {
 pub type SharedPreconditionerCache = Arc<PreconditionerCache>;
 
 /// Cache key: exact f64 bit patterns of the packed hyperparameters plus
-/// the integer knob (Woodbury rank or AP block size).  Bit-exact equality
-/// is the right notion here: the outer loop re-solves the *same* theta
-/// several times per step, and any genuine hyperparameter step changes
-/// the bits.
-type HpKey = (Vec<u64>, usize);
+/// the integer knob (Woodbury rank or AP block size) plus the training
+/// size n.  Bit-exact equality is the right notion here: the outer loop
+/// re-solves the *same* theta several times per step, and any genuine
+/// hyperparameter step changes the bits.  n is in the key because online
+/// data arrival grows the operator at *unchanged* hyperparameters — a
+/// factorisation built for the old n must never be served for the new one
+/// (`Trainer::extend_data` additionally calls [`PreconditionerCache::invalidate_all`]
+/// to free the stale entries).
+type HpKey = (Vec<u64>, usize, usize);
 
-fn hp_key(hp: &Hyperparams, knob: usize) -> HpKey {
-    (hp.pack().iter().map(|x| x.to_bits()).collect(), knob)
+fn hp_key(hp: &Hyperparams, knob: usize, n: usize) -> HpKey {
+    (hp.pack().iter().map(|x| x.to_bits()).collect(), knob, n)
 }
 
 #[derive(Default)]
@@ -233,7 +237,7 @@ impl PreconditionerCache {
         rank: usize,
         threads: usize,
     ) -> Arc<WoodburyPreconditioner> {
-        let key = hp_key(op.hp(), rank);
+        let key = hp_key(op.hp(), rank, op.n());
         let mut inner = self.inner.lock().unwrap();
         if let Some(pos) = inner.woodbury.iter().position(|(k, _)| *k == key) {
             inner.hits += 1;
@@ -259,15 +263,17 @@ impl PreconditionerCache {
 
     /// AP's per-block Cholesky factors for the operator's current
     /// hyperparameters at `block_size`, built block-parallel on a miss.
-    /// Keyed on (hyperparameter bits, block size) — the same staleness
-    /// guarantee as [`PreconditionerCache::woodbury`].
+    /// Keyed on (hyperparameter bits, block size, n) — the same staleness
+    /// guarantee as [`PreconditionerCache::woodbury`].  When `block_size`
+    /// does not divide n (routine after online arrivals), the last factor
+    /// covers the ragged tail block.
     pub fn ap_block_factors(
         &self,
         op: &dyn KernelOperator,
         block_size: usize,
         threads: usize,
     ) -> Arc<Vec<Cholesky>> {
-        let key = hp_key(op.hp(), block_size);
+        let key = hp_key(op.hp(), block_size, op.n());
         let mut inner = self.inner.lock().unwrap();
         if let Some(pos) = inner.ap_blocks.iter().position(|(k, _)| *k == key) {
             inner.hits += 1;
@@ -277,15 +283,14 @@ impl PreconditionerCache {
             return factors;
         }
         let n = op.n();
-        assert_eq!(n % block_size, 0, "block size must divide n");
         let x = op.x();
         let hp = op.hp();
         let fam = op.family();
-        let nblocks = n / block_size;
+        let nblocks = (n + block_size - 1) / block_size;
         let t = num_threads(if threads == 0 { None } else { Some(threads) });
         let factors = parallel_map_slots(nblocks, t.min(nblocks), |blk| {
             let idx: Vec<usize> =
-                (blk * block_size..(blk + 1) * block_size).collect();
+                (blk * block_size..((blk + 1) * block_size).min(n)).collect();
             let xb = x.gather_rows(&idx);
             let mut h_blk = kernels::kernel_matrix(&xb, &xb, hp, fam);
             h_blk.add_diag(hp.noise_var());
@@ -298,6 +303,16 @@ impl PreconditionerCache {
         }
         inner.ap_blocks.push((key, factors.clone()));
         factors
+    }
+
+    /// Drop every cached factorisation of both kinds.  Called by the
+    /// coordinator on online data arrival: all entries were built for the
+    /// old n, so they can only waste memory (the n in the key already
+    /// prevents wrong reuse).  Build/hit counters are preserved.
+    pub fn invalidate_all(&self) {
+        let mut inner = self.inner.lock().unwrap();
+        inner.woodbury.clear();
+        inner.ap_blocks.clear();
     }
 
     /// Woodbury factorisations built so far (telemetry / regression tests).
@@ -447,6 +462,33 @@ mod tests {
         for (a, b) in serial.iter().zip(par.iter()) {
             assert_eq!(a.l, b.l);
         }
+    }
+
+    #[test]
+    fn cache_rebuilds_after_operator_extension() {
+        // regression: the key omitted n, so growing the operator at
+        // unchanged hyperparameters served a factorisation built for the
+        // old n (wrong shape, silently wrong apply)
+        let cache = PreconditionerCache::default();
+        let mut op = test_op(0.4);
+        let p_small = cache.woodbury(&op, 16, 1);
+        let f_small = cache.ap_block_factors(&op, 64, 1);
+        let mut rng = Rng::new(5);
+        let chunk = Mat::from_fn(64, op.d(), |_, _| rng.gaussian());
+        op.extend(&chunk).unwrap();
+        let p_big = cache.woodbury(&op, 16, 1);
+        assert!(!Arc::ptr_eq(&p_small, &p_big), "stale preconditioner served after extend");
+        assert_eq!(p_big.l.rows, op.n());
+        let f_big = cache.ap_block_factors(&op, 64, 1);
+        assert!(!Arc::ptr_eq(&f_small, &f_big));
+        assert_eq!(f_big.len(), op.n() / 64);
+        assert_eq!(cache.woodbury_builds(), 2);
+        assert_eq!(cache.ap_builds(), 2);
+        // invalidate_all drops the entries (next request rebuilds) but
+        // keeps the counters
+        cache.invalidate_all();
+        let _ = cache.woodbury(&op, 16, 1);
+        assert_eq!(cache.woodbury_builds(), 3);
     }
 
     #[test]

@@ -230,13 +230,15 @@ pub fn scale_all(m: &mut Mat, a: f64, threads: usize) {
 
 /// AP block-selection scores || sum_cols R[block rows] ||, one slot per
 /// block (blocks are independent, so this is embarrassingly parallel and
-/// each block's row-order sum matches the serial loop exactly).
+/// each block's row-order sum matches the serial loop exactly).  The last
+/// block may be a ragged tail when `b` does not divide the row count
+/// (online data arrival makes such n routine).
 pub fn block_scores(r: &Mat, b: usize, threads: usize) -> Vec<f64> {
-    let nblocks = r.rows / b;
+    let nblocks = (r.rows + b - 1) / b;
     let t = effective(r.rows * r.cols, threads);
     parallel_map_slots(nblocks, t, |blk| {
         let mut s = 0.0;
-        for i in blk * b..(blk + 1) * b {
+        for i in blk * b..((blk + 1) * b).min(r.rows) {
             let row_sum: f64 = r.row(i).iter().sum();
             s += row_sum * row_sum;
         }

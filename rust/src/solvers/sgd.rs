@@ -150,8 +150,13 @@ impl SgdSolver {
             let (a, b_) = residual_norms_t(&r, threads);
             ry = a;
             rz = b_;
-            if !v.data[0].is_finite() || ry > 3.0 || rz > 3.0 {
-                break; // divergence guard (lr too large); backoff retries
+            // divergence guard (lr too large); backoff retries.  The
+            // finite checks matter: a NaN norm makes both `> 3.0`
+            // comparisons false, and the old guard only inspected
+            // v.data[0], so a NaN anywhere else could burn the remaining
+            // epoch budget before the outer backoff noticed.
+            if !ry.is_finite() || !rz.is_finite() || ry > 3.0 || rz > 3.0 {
+                break;
             }
         }
 
@@ -180,10 +185,17 @@ impl SgdSolver {
 /// estimate (run on the very first outer step only). `halve` returns half
 /// of that rate (paper's choice on large datasets).
 ///
-/// Returns `(rate, probe_epochs)`: each grid probe costs real solver work
-/// (one epoch), which the caller must charge against its totals — silently
-/// dropping it would under-report exactly the kind of hidden compute the
-/// paper's epoch accounting is meant to expose.
+/// If even the smallest grid rate diverges (the old code returned it
+/// anyway, seeding the first real solve with a known-divergent rate), the
+/// tuner keeps halving *below* the grid until a rate survives its probe
+/// epoch, bounded at [`AUTOTUNE_MAX_HALVINGS`] so a hopeless system still
+/// terminates.
+///
+/// Returns `(rate, probe_epochs)`: every probe — grid or fallback — costs
+/// real solver work (up to one epoch each), which the caller must charge
+/// against its totals — silently dropping it would under-report exactly
+/// the kind of hidden compute the paper's epoch accounting is meant to
+/// expose.
 pub fn autotune_lr(
     op: &dyn KernelOperator,
     b: &Mat,
@@ -191,27 +203,52 @@ pub fn autotune_lr(
     grid: &[f64],
     halve: bool,
 ) -> (f64, f64) {
-    let mut best = grid[0];
+    assert!(!grid.is_empty(), "autotune_lr: empty grid");
     let mut probe_epochs = 0.0;
+    let mut best = None;
     for &lr in grid {
-        let mut v = Mat::zeros(b.rows, b.cols);
-        let mut o = opts.clone();
-        o.sgd_lr = lr;
-        o.max_epochs = 1.0;
-        o.tolerance = 1e-16;
-        o.sgd_backoff = false;
-        let rep = SgdSolver::with_seed(42).solve(op, b, &mut v, &o);
-        probe_epochs += rep.epochs;
-        let finite = v.data.iter().all(|x| x.is_finite());
-        // initial normalised residual is ~1 per column; diverged if grew
-        if finite && rep.ry <= 1.5 && rep.rz <= 1.5 {
-            best = lr;
+        let (stable, epochs) = probe_rate(op, b, opts, lr);
+        probe_epochs += epochs;
+        if stable {
+            best = Some(lr);
         } else {
             break;
         }
     }
+    let best = best.unwrap_or_else(|| {
+        let mut lr = grid[0];
+        for _ in 0..AUTOTUNE_MAX_HALVINGS {
+            lr *= 0.5;
+            let (stable, epochs) = probe_rate(op, b, opts, lr);
+            probe_epochs += epochs;
+            if stable {
+                return lr;
+            }
+        }
+        crate::debuglog!("autotune_lr: no stable rate down to {lr}; returning it anyway");
+        lr
+    });
     let rate = if halve { best / 2.0 } else { best };
     (rate, probe_epochs)
+}
+
+/// Halving steps the fallback search takes below `grid[0]` before giving
+/// up — 2^-24 below the grid is far past any plausible stability boundary.
+const AUTOTUNE_MAX_HALVINGS: usize = 24;
+
+/// One auto-tune probe: a single cold epoch at `lr`.  `(stable, epochs)`
+/// where stable means finite iterates and a residual estimate that did not
+/// grow (initial normalised residual is ~1 per column).
+fn probe_rate(op: &dyn KernelOperator, b: &Mat, opts: &SolveOptions, lr: f64) -> (bool, f64) {
+    let mut v = Mat::zeros(b.rows, b.cols);
+    let mut o = opts.clone();
+    o.sgd_lr = lr;
+    o.max_epochs = 1.0;
+    o.tolerance = 1e-16;
+    o.sgd_backoff = false;
+    let rep = SgdSolver::with_seed(42).solve(op, b, &mut v, &o);
+    let finite = v.data.iter().all(|x| x.is_finite());
+    (finite && rep.ry <= 1.5 && rep.rz <= 1.5, rep.epochs)
 }
 
 #[cfg(test)]
@@ -340,6 +377,55 @@ mod tests {
         assert!(probe_epochs <= 4.0 + 1e-9, "{probe_epochs}");
         let (halved, _) = autotune_lr(&op, &b, &opts, &[1.0, 4.0], true);
         assert!(halved <= 2.0);
+    }
+
+    #[test]
+    fn autotune_falls_back_below_a_fully_divergent_grid() {
+        // regression: `best` was initialised to grid[0], so a grid whose
+        // smallest entry diverges returned that known-divergent rate and
+        // the first real solve started by blowing up
+        let (op, b) = setup();
+        let opts = SolveOptions { block_size: 64, ..Default::default() };
+        let (lr, probe_epochs) = autotune_lr(&op, &b, &opts, &[1e6, 2e6], false);
+        assert!(lr < 1e6, "divergent grid floor returned verbatim: {lr}");
+        assert!(lr > 0.0);
+        // the fallback keeps halving until a probe epoch survives, and
+        // every probe (grid + fallback) is real charged work
+        let (stable, _) = probe_rate(&op, &b, &opts, lr);
+        assert!(stable, "fallback returned a rate that fails its own probe: {lr}");
+        assert!(probe_epochs > 0.0);
+        // a grid with a stable floor is unaffected by the fallback path
+        let (lr_ok, _) = autotune_lr(&op, &b, &opts, &[1.0, 4.0, 8.0], false);
+        assert!(lr_ok >= 1.0);
+    }
+
+    #[test]
+    fn divergent_attempt_stops_within_a_few_iterations() {
+        // regression: the in-loop guard checked `ry > 3.0 || rz > 3.0`
+        // (both false once the norms go NaN) and only inspected v.data[0]
+        // for finiteness, so a diverged attempt could burn the whole
+        // remaining epoch budget before the outer backoff noticed
+        let (op, b) = setup();
+        for lr in [1e12, 1e300] {
+            let mut v = Mat::zeros(op.n(), op.k_width());
+            let opts = SolveOptions {
+                tolerance: 0.05,
+                max_epochs: 400.0, // 1600 iterations at b=64, n=256
+                block_size: 64,
+                sgd_lr: lr,
+                sgd_backoff: false,
+                ..Default::default()
+            };
+            let rep = SgdSolver::default().solve(&op, &b, &mut v, &opts);
+            assert!(!rep.converged, "lr={lr}");
+            assert!(
+                rep.iterations <= 8,
+                "lr={lr}: diverged attempt ran {} iterations",
+                rep.iterations
+            );
+            let blown = !rep.ry.is_finite() || !rep.rz.is_finite() || rep.ry > 3.0 || rep.rz > 3.0;
+            assert!(blown, "lr={lr}: report does not reflect the divergence: {rep:?}");
+        }
     }
 
     #[test]

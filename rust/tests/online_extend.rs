@@ -1,0 +1,187 @@
+//! Online data-arrival properties: an `extend`-ed operator must be
+//! indistinguishable from one freshly built on the concatenated data —
+//! bitwise for the dense backend's materialised H, elementwise-tight for
+//! every product on both pure-Rust backends — and a warm-carried online
+//! training run must beat cold restarts on the same chunk schedule.
+
+use igp::coordinator::{Trainer, TrainerOptions};
+use igp::data::{Dataset, DatasetSpec};
+use igp::estimator::EstimatorKind;
+use igp::kernels::{Hyperparams, KernelFamily};
+use igp::linalg::Mat;
+use igp::operators::{DenseOperator, KernelOperator, TiledOperator, TiledOptions};
+use igp::prop_assert;
+use igp::solvers::SolverKind;
+use igp::util::proptest::{check, PropConfig};
+use igp::util::rng::Rng;
+
+fn toy_dataset(rng: &mut Rng, n: usize, d: usize, family: KernelFamily) -> Dataset {
+    let x_train = Mat::from_fn(n, d, |_, _| rng.gaussian());
+    let y_train = rng.gaussian_vec(n);
+    let x_test = Mat::from_fn(4, d, |_, _| rng.gaussian());
+    let y_test = rng.gaussian_vec(4);
+    let spec = DatasetSpec {
+        name: "toy",
+        paper_n: 0,
+        n,
+        n_test: 4,
+        d,
+        true_sigma: 0.3,
+        ell_lo: 0.5,
+        ell_hi: 1.5,
+        cluster_frac: 0.0,
+        family,
+        seed: 0,
+    };
+    Dataset { spec, x_train, y_train, x_test, y_test, true_hp: Hyperparams::ones(d) }
+}
+
+fn random_family(rng: &mut Rng) -> KernelFamily {
+    match rng.below(4) {
+        0 => KernelFamily::Matern12,
+        1 => KernelFamily::Matern32,
+        2 => KernelFamily::Matern52,
+        _ => KernelFamily::Rbf,
+    }
+}
+
+#[test]
+fn prop_extended_dense_is_bitwise_equal_to_rebuilt() {
+    check(
+        "online_dense_extend_bitwise",
+        PropConfig { cases: 24, max_size: 16, ..Default::default() },
+        |rng, size| {
+            let d = 1 + rng.below(4);
+            let family = random_family(rng);
+            let n_full = 12 + rng.below(8 + 6 * size);
+            let full_ds = toy_dataset(rng, n_full, d, family);
+            let hp = Hyperparams {
+                ell: (0..d).map(|_| rng.uniform_in(0.4, 2.0)).collect(),
+                sigf: rng.uniform_in(0.5, 1.5),
+                sigma: rng.uniform_in(0.1, 0.9),
+            };
+            // random split into a base plus 1-3 arrival chunks
+            let mut cuts = vec![0, n_full];
+            for _ in 0..1 + rng.below(3) {
+                cuts.push(1 + rng.below(n_full - 1));
+            }
+            cuts.sort_unstable();
+            cuts.dedup();
+            let base_n = cuts[1];
+            let base = full_ds.with_train(
+                full_ds.x_train.gather_rows(&(0..base_n).collect::<Vec<_>>()),
+                full_ds.y_train[..base_n].to_vec(),
+            );
+            let mut grown = DenseOperator::new(&base, 2, 8);
+            grown.set_hp(&hp);
+            for w in cuts[1..].windows(2) {
+                let idx: Vec<usize> = (w[0]..w[1]).collect();
+                grown
+                    .extend(&full_ds.x_train.gather_rows(&idx))
+                    .map_err(|e| e.to_string())?;
+            }
+            let mut full = DenseOperator::new(&full_ds, 2, 8);
+            full.set_hp(&hp);
+            prop_assert!(grown.n() == full.n(), "n {} vs {}", grown.n(), full.n());
+            prop_assert!(grown.x().data == full.x().data, "inputs differ");
+            for (i, (a, b)) in grown.h().data.iter().zip(&full.h().data).enumerate() {
+                prop_assert!(
+                    a.to_bits() == b.to_bits(),
+                    "H entry {i}: {a} vs {b} (family {family:?})"
+                );
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_extended_tiled_matches_extended_dense() {
+    check(
+        "online_tiled_extend_parity",
+        PropConfig { cases: 16, max_size: 12, ..Default::default() },
+        |rng, size| {
+            let d = 1 + rng.below(4);
+            let family = random_family(rng);
+            let n0 = 8 + rng.below(8 + 4 * size);
+            let ds = toy_dataset(rng, n0, d, family);
+            let hp = Hyperparams {
+                ell: (0..d).map(|_| rng.uniform_in(0.4, 2.0)).collect(),
+                sigf: rng.uniform_in(0.5, 1.5),
+                sigma: rng.uniform_in(0.1, 0.9),
+            };
+            let tile = 1 + rng.below(2 * n0);
+            let threads = 1 + rng.below(4);
+            let mut tiled =
+                TiledOperator::with_options(&ds, 2, 8, TiledOptions { tile, threads });
+            tiled.set_hp(&hp);
+            let mut dense = DenseOperator::new(&ds, 2, 8);
+            dense.set_hp(&hp);
+            let chunk = Mat::from_fn(1 + rng.below(2 * n0), d, |_, _| rng.gaussian());
+            tiled.extend(&chunk).map_err(|e| e.to_string())?;
+            dense.extend(&chunk).map_err(|e| e.to_string())?;
+            let n1 = dense.n();
+            let k = tiled.k_width();
+            let v = Mat::from_fn(n1, k, |_, _| rng.gaussian());
+            let (a, b) = (tiled.hv(&v), dense.hv(&v));
+            let err = a.max_abs_diff(&b);
+            prop_assert!(err < 1e-10, "post-extend hv err {err}");
+            let bsz = 1 + rng.below(n1);
+            let idx = rng.sample_indices(n1, bsz);
+            let u = Mat::from_fn(bsz, k, |_, _| rng.gaussian());
+            let err = tiled.k_cols(&idx, &u).max_abs_diff(&dense.k_cols(&idx, &u));
+            prop_assert!(err < 1e-10, "post-extend k_cols err {err}");
+            let err = tiled.k_rows(&idx, &v).max_abs_diff(&dense.k_rows(&idx, &v));
+            prop_assert!(err < 1e-10, "post-extend k_rows err {err}");
+            Ok(())
+        },
+    );
+}
+
+/// Warm-carried online training must reach tolerance in strictly fewer
+/// total epochs than cold restarts on the same chunk schedule (the
+/// acceptance property of the online subsystem), on the tiled backend.
+#[test]
+fn warm_carried_online_beats_cold_restarts_on_tiled() {
+    let ds = igp::data::generate(&igp::data::spec("test").unwrap());
+    let (base, arrivals) = ds.replay_chunks(4);
+    let steps = 3;
+    let opts = TrainerOptions {
+        solver: SolverKind::Ap,
+        estimator: EstimatorKind::Pathwise,
+        warm_start: true,
+        lr: 0.05,
+        seed: 21,
+        ..Default::default()
+    };
+    let mk_op = |d: &Dataset| {
+        TiledOperator::with_options(d, 8, 64, TiledOptions { tile: 96, threads: 2 })
+    };
+
+    let mut warm = Trainer::new(opts.clone(), Box::new(mk_op(&base)), &base);
+    let mut warm_epochs = warm.run(steps).unwrap().total_epochs;
+    for (x, y) in &arrivals {
+        warm.extend_data(x, y).unwrap();
+        warm_epochs += warm.run(steps).unwrap().total_epochs;
+    }
+    assert_eq!(warm.operator().n(), ds.spec.n);
+
+    let mut cold_epochs = 0.0;
+    let mut acc_x = base.x_train.clone();
+    let mut acc_y = base.y_train.clone();
+    for arrival in 0..4 {
+        if arrival > 0 {
+            let (x, y) = &arrivals[arrival - 1];
+            acc_x.append_rows(x);
+            acc_y.extend_from_slice(y);
+        }
+        let acc = ds.with_train(acc_x.clone(), acc_y.clone());
+        let mut cold = Trainer::new(opts.clone(), Box::new(mk_op(&acc)), &acc);
+        cold_epochs += cold.run(steps).unwrap().total_epochs;
+    }
+
+    assert!(
+        warm_epochs < cold_epochs,
+        "warm-carried {warm_epochs} vs cold restarts {cold_epochs}"
+    );
+}

@@ -348,7 +348,7 @@ fn prop_checkpoint_roundtrip_on_tiled_backend() {
         first.run(steps_a).map_err(|e| e.to_string())?;
         let ck = first.checkpoint();
         let mut resumed = mk_trainer();
-        resumed.restore(&ck);
+        resumed.restore(&ck).map_err(|e| e.to_string())?;
         resumed.run(steps_b).map_err(|e| e.to_string())?;
 
         let ta = straight.theta();
