@@ -1,0 +1,104 @@
+//! Prediction serving over the amortised pathwise posterior: the full
+//! train -> serve -> extend -> serve-again lifecycle the serving subsystem
+//! exists for.
+//!
+//! * train on an initial prefix of the dataset;
+//! * wrap the trainer in a [`PredictionService`] and answer queries at the
+//!   held-out split — the posterior artifact is pulled from the cache the
+//!   training tail already populated, so serving costs **zero** extra
+//!   solves;
+//! * an online arrival (`extend_data`) invalidates the artifact; the next
+//!   query refreshes it with exactly **one warm solve** from the carried
+//!   solution store — not a cold restart;
+//! * keep training after the arrival and serve again.
+//!
+//!     cargo run --release --example serve -- [dataset] [steps] [batch] [threads]
+
+use igp::prelude::*;
+
+fn main() -> anyhow::Result<()> {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let dataset = args.first().map(String::as_str).unwrap_or("test");
+    let steps: usize = args.get(1).map(|s| s.parse()).transpose()?.unwrap_or(4);
+    let batch: usize = args.get(2).map(|s| s.parse()).transpose()?.unwrap_or(64);
+    let threads: usize = args.get(3).map(|s| s.parse()).transpose()?.unwrap_or(0);
+
+    let ds = igp::data::generate(&igp::data::spec(dataset)?);
+    let (base, arrivals) = ds.replay_chunks(2);
+    let (x_new, y_new) = &arrivals[0];
+    println!(
+        "{dataset}: train on {} rows, serve, absorb {} arrival rows, serve again\n",
+        base.spec.n,
+        x_new.rows
+    );
+
+    let op = TiledOperator::with_options(&base, 16, 128, TiledOptions { tile: 256, threads });
+    let opts = TrainerOptions {
+        solver: SolverKind::Ap,
+        estimator: EstimatorKind::Pathwise,
+        warm_start: true,
+        lr: 0.05,
+        seed: 17,
+        threads,
+        ..Default::default()
+    };
+    let mut trainer = Trainer::new(opts, Box::new(op), &base);
+    let out = trainer.run(steps)?;
+    println!(
+        "trained {steps} steps: rmse={:.4} llh={:.4} ({:.1} epochs)",
+        out.final_metrics.rmse, out.final_metrics.llh, out.total_epochs
+    );
+
+    // --- serve: the training tail already published the artifact --------
+    let solves_after_training = trainer.solve_count();
+    let mut service = PredictionService::new(trainer, ServeOptions { batch, threads });
+    let t0 = std::time::Instant::now();
+    let m = service.score(&ds.x_test, &ds.y_test)?;
+    let secs = t0.elapsed().as_secs_f64();
+    println!(
+        "serve #1 (test split): rmse={:.4} llh={:.4} ({} rows, {:.0} rows/s)",
+        m.rmse,
+        m.llh,
+        ds.x_test.rows,
+        ds.x_test.rows as f64 / secs.max(1e-9)
+    );
+    anyhow::ensure!(m.rmse.is_finite() && m.llh.is_finite());
+    anyhow::ensure!(
+        service.trainer().solve_count() == solves_after_training,
+        "serving from the cached artifact must not re-solve"
+    );
+
+    // --- online arrival: artifact goes stale, refresh is one warm solve -
+    service.extend_data(x_new, y_new)?;
+    let solves_before_refresh = service.trainer().solve_count();
+    let (mean, var) = service.predict(&ds.x_test)?;
+    anyhow::ensure!(mean.iter().all(|v| v.is_finite()));
+    anyhow::ensure!(var.iter().all(|v| *v > 0.0));
+    anyhow::ensure!(
+        service.trainer().solve_count() == solves_before_refresh + 1,
+        "post-arrival refresh must cost exactly one (warm) solve"
+    );
+    println!(
+        "serve #2 after {}-row arrival: refreshed with one warm solve (n = {})",
+        x_new.rows,
+        service.trainer().operator().n()
+    );
+
+    // --- keep training on the grown dataset, then serve once more -------
+    let out = service.trainer_mut().run(steps)?;
+    let m = service.score(&ds.x_test, &ds.y_test)?;
+    println!(
+        "serve #3 after {steps} more steps: rmse={:.4} llh={:.4} ({:.1} epochs)",
+        m.rmse, m.llh, out.total_epochs
+    );
+    anyhow::ensure!(m.rmse.is_finite() && m.llh.is_finite());
+
+    let st = service.stats();
+    println!(
+        "\nservice counters: {} rows in {} batches; artifact builds={} hits={}",
+        st.rows_served, st.batches, st.artifact_builds, st.artifact_hits
+    );
+    anyhow::ensure!(st.rows_served as usize == 3 * ds.x_test.rows);
+    anyhow::ensure!(st.artifact_hits >= 2, "serve cycles should hit the artifact cache");
+    Ok(())
+}

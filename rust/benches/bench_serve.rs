@@ -1,0 +1,90 @@
+//! Prediction-serving throughput: rows/sec through [`PredictionService`]
+//! over the amortised pathwise posterior — serial vs threaded sweeps,
+//! dense vs tiled backends, and a batch-size sweep.  Pure Rust, no
+//! artifacts needed.  The artifact is built once per trained model (cache
+//! hit on every query), so this measures the serving hot path alone.
+//!
+//! Threading knobs differ by backend: the tiled backend parallelises over
+//! query rows inside `predict_at` (its own `TiledOptions::threads` pool),
+//! while the dense backend uses the generic block fan-out driven by
+//! `ServeOptions::{batch, threads}` — so the batch sweep runs on dense,
+//! where the knob actually governs the work partition.
+
+use igp::coordinator::{Trainer, TrainerOptions};
+use igp::data;
+use igp::estimator::EstimatorKind;
+use igp::linalg::Mat;
+use igp::operators::{BackendKind, TiledOptions};
+use igp::serve::{PredictionService, ServeOptions};
+use igp::solvers::SolverKind;
+use igp::util::bench::Bencher;
+
+fn trained(ds: &data::Dataset, backend: BackendKind, threads: usize) -> Trainer {
+    let op = igp::operators::make_cpu_backend(
+        backend,
+        ds,
+        8,
+        64,
+        TiledOptions { tile: 256, threads },
+    )
+    .unwrap();
+    let opts = TrainerOptions {
+        solver: SolverKind::Ap,
+        estimator: EstimatorKind::Pathwise,
+        warm_start: true,
+        lr: 0.05,
+        seed: 13,
+        ..Default::default()
+    };
+    let mut t = Trainer::new(opts, op, ds);
+    t.run(2).unwrap();
+    t
+}
+
+/// A query workload: the test split tiled up to `rows` rows.
+fn queries(ds: &data::Dataset, rows: usize) -> Mat {
+    let idx: Vec<usize> = (0..rows).map(|i| i % ds.x_test.rows).collect();
+    ds.x_test.gather_rows(&idx)
+}
+
+fn main() {
+    let b = Bencher::default();
+    let ds = data::generate(&data::spec("protein").unwrap());
+    let xq = queries(&ds, 2048);
+    let rows = xq.rows as f64;
+
+    // dense vs tiled, serial vs threaded (batch fixed at 64)
+    for backend in [BackendKind::Dense, BackendKind::Tiled] {
+        for threads in [1usize, 0] {
+            let mut service = PredictionService::new(
+                trained(&ds, backend, threads),
+                ServeOptions { batch: 64, threads },
+            );
+            let label = format!(
+                "serve/{}/{} {} rows",
+                backend.name(),
+                if threads == 1 { "serial" } else { "threaded" },
+                xq.rows
+            );
+            let r = b.run(&label, None, || {
+                let (mean, _var) = service.predict(&xq).unwrap();
+                assert_eq!(mean.len(), xq.rows);
+            });
+            println!("   -> {label}: {:.0} rows/s", rows / r.median());
+        }
+    }
+
+    // batch-size sweep on the dense backend (generic fan-out), threaded
+    let mut trainer = Some(trained(&ds, BackendKind::Dense, 0));
+    for batch in [16, 64, 256, 1024] {
+        let t = trainer.take().unwrap();
+        let mut service = PredictionService::new(t, ServeOptions { batch, threads: 0 });
+        let label = format!("serve/dense/batch={batch} {} rows", xq.rows);
+        let r = b.run(&label, None, || {
+            let (mean, _var) = service.predict(&xq).unwrap();
+            assert_eq!(mean.len(), xq.rows);
+        });
+        println!("   -> {label}: {:.0} rows/s", rows / r.median());
+        trainer = Some(service.into_trainer());
+    }
+}

@@ -17,16 +17,18 @@
 pub mod checkpoint;
 pub mod init;
 
+use std::sync::Arc;
 use std::time::Instant;
 
 use anyhow::Result;
 
 use crate::data::Dataset;
 use crate::estimator::{EstimatorKind, ProbeSet};
-use crate::gp::{metrics, Metrics};
+use crate::gp::{metrics, pathwise_variances, Metrics};
 use crate::linalg::Mat;
 use crate::operators::KernelOperator;
 use crate::optim::{Adam, SoftplusParams};
+use crate::serve::{ArtifactCache, PosteriorArtifact};
 use crate::solvers::{
     autotune_lr, make_solver, LinearSolver, PreconditionerCache, SharedPreconditionerCache,
     SolveOptions, SolveReport, SolverKind,
@@ -144,6 +146,10 @@ pub struct Trainer {
     /// factorisations are shared across training, prediction and
     /// evaluation solves.
     precond: SharedPreconditionerCache,
+    /// Posterior-snapshot store for the serving path, keyed on
+    /// (hyperparameter bits, n): `evaluate` publishes the state it just
+    /// computed, `posterior_artifact` serves from it without re-solving.
+    artifacts: ArtifactCache,
     /// Lifetime solver-work accounting (epochs / wall seconds across every
     /// solve, including prediction, evaluation and autotune probes).
     /// `run` reports per-run deltas of these.
@@ -205,6 +211,7 @@ impl Trainer {
             solve_opts,
             sgd_lr_resolved: None,
             precond,
+            artifacts: ArtifactCache::default(),
             spent_epochs: 0.0,
             spent_solver_secs: 0.0,
             step_count: 0,
@@ -244,6 +251,11 @@ impl Trainer {
         &self.precond
     }
 
+    /// The posterior-snapshot cache (diagnostics / serve counters).
+    pub fn artifact_cache(&self) -> &ArtifactCache {
+        &self.artifacts
+    }
+
     /// One metered solve: every epoch and second of solver work anywhere
     /// in the trainer goes through here so nothing is dropped from the
     /// reported totals.
@@ -259,6 +271,13 @@ impl Trainer {
     /// Metered solves over the trainer's lifetime (tests / diagnostics).
     pub fn solve_count(&self) -> u64 {
         self.solve_count
+    }
+
+    /// Epochs spent across every metered solve over the trainer's lifetime
+    /// (serve telemetry: lets a service report what its artifact refreshes
+    /// cost; `run` reports per-run deltas of the same counter).
+    pub fn total_spent_epochs(&self) -> f64 {
+        self.spent_epochs
     }
 
     /// Test targets (for experiment-side metric recomputation).
@@ -411,6 +430,9 @@ impl Trainer {
         self.probes.extend_rows(x_new.rows, &mut chunk_rng);
         self.v_store.append_rows(&Mat::zeros(x_new.rows, self.v_store.cols));
         self.precond.invalidate_all();
+        // every posterior snapshot was taken at the old n: the serving path
+        // must refresh (one warm solve) before answering the next query
+        self.artifacts.invalidate_all();
         if self.opts.block_size.is_none() {
             self.solve_opts.block_size = preferred_block(self.op.as_ref());
         }
@@ -570,7 +592,23 @@ impl Trainer {
     /// of pathwise solves is run and `v` is ignored (this is exactly the
     /// amortisation gap the paper quantifies) — callers pass `None` so no
     /// solve is wasted producing an input this path throws away.
+    ///
+    /// The posterior state computed here is published in the artifact
+    /// cache, so a [`Trainer::posterior_artifact`] call at the same
+    /// hyperparameters (the serving path) reuses it — bitwise — without
+    /// another solve.
     fn evaluate(&mut self, v: Option<&Mat>) -> Result<Metrics> {
+        let art = self.build_artifact(v)?;
+        let (mean, samples) = self.op.predict(&art.vy, &art.zhat, &art.omega0, &art.wts);
+        let var = pathwise_variances(&samples, art.noise_var);
+        Ok(metrics(&mean, &var, &self.y_test))
+    }
+
+    /// Build the amortised posterior snapshot at the operator's current
+    /// hyperparameters — from the solved batch `v` (pathwise) or a fresh
+    /// metered evaluation solve (standard) — and publish it in the
+    /// artifact cache.
+    fn build_artifact(&mut self, v: Option<&Mat>) -> Result<Arc<PosteriorArtifact>> {
         let (zhat, omega0, wts, vy) = match self.opts.estimator {
             EstimatorKind::Pathwise => {
                 let v = v.expect("pathwise evaluation needs the solved batch");
@@ -601,18 +639,44 @@ impl Trainer {
                 (pw.zhat(&vs), pw.omega0.clone(), pw.wts.clone(), vs.col(0))
             }
         };
-        let (mean, samples) = self.op.predict(&vy, &zhat, &omega0, &wts);
-        let noise_var = self.op.hp().noise_var();
-        let var: Vec<f64> = (0..samples.rows)
-            .map(|i| {
-                let row = samples.row(i);
-                let mu: f64 = row.iter().sum::<f64>() / row.len() as f64;
-                let v: f64 =
-                    row.iter().map(|x| (x - mu) * (x - mu)).sum::<f64>() / (row.len() - 1).max(1) as f64;
-                v + noise_var
-            })
-            .collect();
-        Ok(metrics(&mean, &var, &self.y_test))
+        let art = Arc::new(PosteriorArtifact {
+            theta: self.op.hp().pack(),
+            n: self.op.n(),
+            vy,
+            zhat,
+            omega0,
+            wts,
+            noise_var: self.op.hp().noise_var(),
+        });
+        self.artifacts.insert(self.op.hp(), self.op.n(), art.clone());
+        Ok(art)
+    }
+
+    /// The amortised posterior snapshot at the *current* hyperparameters
+    /// and data — the export point of the serving subsystem
+    /// ([`crate::serve::PredictionService`] answers every query from it).
+    ///
+    /// Served from the artifact cache when one was already built at this
+    /// (theta, n) — e.g. by the evaluation `run`'s tail always performs —
+    /// so repeated serve/refresh cycles never re-solve.  On a miss (fresh
+    /// hyperparameters, or data grown by [`Trainer::extend_data`]), one
+    /// solve refreshes it: warm-started from the carried `v_store` for the
+    /// pathwise estimator, so an online arrival costs a warm solve rather
+    /// than a cold restart.  The solve is metered like any other.
+    pub fn posterior_artifact(&mut self) -> Result<Arc<PosteriorArtifact>> {
+        let theta = self.params.theta();
+        let hp = crate::kernels::Hyperparams::unpack(&theta, self.op.d());
+        if let Some(art) = self.artifacts.get(&hp, self.op.n()) {
+            return Ok(art);
+        }
+        self.op.set_hp(&hp);
+        match self.opts.estimator {
+            EstimatorKind::Pathwise => {
+                let v = self.solve_for_prediction()?;
+                self.build_artifact(Some(&v))
+            }
+            EstimatorKind::Standard => self.build_artifact(None),
+        }
     }
 }
 
@@ -982,6 +1046,54 @@ mod tests {
         let (mut p, _) = trainer(SolverKind::Cg, EstimatorKind::Pathwise, true);
         p.run(steps).unwrap();
         assert_eq!(p.solve_count(), steps as u64 + 1);
+    }
+
+    #[test]
+    fn posterior_artifact_reuses_the_tail_evaluation_state() {
+        // run()'s tail always evaluates, publishing the posterior snapshot
+        // at the final theta — a serve-side artifact fetch right after must
+        // hit the cache instead of re-solving (the LRU is what makes
+        // repeated serve/refresh cycles free)
+        for estimator in [EstimatorKind::Pathwise, EstimatorKind::Standard] {
+            let (mut t, _) = trainer(SolverKind::Cg, estimator, true);
+            t.run(3).unwrap();
+            let solves = t.solve_count();
+            let hits = t.artifact_cache().hits();
+            let art = t.posterior_artifact().unwrap();
+            assert_eq!(t.solve_count(), solves, "{estimator:?}: artifact fetch re-solved");
+            assert_eq!(t.artifact_cache().hits(), hits + 1);
+            assert_eq!(art.theta, t.theta(), "{estimator:?}: artifact theta mismatch");
+            assert_eq!(art.n, t.operator().n());
+            assert_eq!(art.vy.len(), t.operator().n());
+            assert_eq!(art.zhat.rows, t.operator().n());
+            // a second fetch is also free
+            let art2 = t.posterior_artifact().unwrap();
+            assert!(Arc::ptr_eq(&art, &art2));
+        }
+    }
+
+    #[test]
+    fn extend_data_invalidates_the_artifact_and_refreshes_warm() {
+        // online arrival: the snapshot is stale (old n); the next fetch
+        // must pay exactly one (warm) solve and come back at the new n
+        let (_ds, base, chunks) = online_fixture();
+        let mut t = online_trainer(&base, true, 7);
+        t.run(2).unwrap();
+        let art_old = t.posterior_artifact().unwrap();
+        assert_eq!(art_old.n, base.spec.n);
+        let (x, y) = &chunks[0];
+        t.extend_data(x, y).unwrap();
+        assert!(t.artifact_cache().is_empty(), "extend_data must invalidate snapshots");
+        let solves = t.solve_count();
+        let art_new = t.posterior_artifact().unwrap();
+        assert_eq!(t.solve_count(), solves + 1, "refresh must cost exactly one solve");
+        assert_eq!(art_new.n, base.spec.n + x.rows);
+        assert_eq!(art_new.vy.len(), art_new.n);
+        // and the refreshed snapshot is immediately cached
+        let solves = t.solve_count();
+        let again = t.posterior_artifact().unwrap();
+        assert!(Arc::ptr_eq(&art_new, &again));
+        assert_eq!(t.solve_count(), solves);
     }
 
     /// Online fixture: the "test" dataset replayed as a 128-row prefix

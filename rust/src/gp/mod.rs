@@ -125,6 +125,23 @@ fn dl_weight(sq: f64, family: KernelFamily) -> f64 {
     }
 }
 
+/// Per-row pathwise predictive variances from posterior samples [t, s]:
+/// the unbiased sample variance across the s pathwise draws plus the
+/// observation noise.  Single source for `Trainer::evaluate` and the
+/// prediction-serving path — the serve parity suite demands bitwise-equal
+/// variances between the two, so the summation order here is load-bearing.
+pub fn pathwise_variances(samples: &Mat, noise_var: f64) -> Vec<f64> {
+    (0..samples.rows)
+        .map(|i| {
+            let row = samples.row(i);
+            let mu: f64 = row.iter().sum::<f64>() / row.len() as f64;
+            let v: f64 = row.iter().map(|x| (x - mu) * (x - mu)).sum::<f64>()
+                / (row.len() - 1).max(1) as f64;
+            v + noise_var
+        })
+        .collect()
+}
+
 /// Predictive metrics from mean/variance predictions.
 #[derive(Clone, Copy, Debug, PartialEq)]
 pub struct Metrics {

@@ -56,6 +56,7 @@ pub mod linalg;
 pub mod operators;
 pub mod optim;
 pub mod runtime;
+pub mod serve;
 pub mod solvers;
 pub mod util;
 
@@ -69,6 +70,7 @@ pub mod prelude {
     pub use crate::operators::{
         BackendKind, DenseOperator, KernelOperator, TiledOperator, TiledOptions, XlaOperator,
     };
+    pub use crate::serve::{PosteriorArtifact, PredictionService, ServeOptions};
     pub use crate::solvers::{SolveOptions, SolverKind};
     pub use crate::util::rng::Rng;
 }

@@ -7,6 +7,7 @@ use igp::config::RunConfig;
 use igp::coordinator::{Trainer, TrainerOptions};
 use igp::estimator::EstimatorKind;
 use igp::operators::{BackendKind, KernelOperator, TiledOptions, XlaOperator};
+use igp::serve::{PredictionService, ServeOptions};
 use igp::solvers::SolverKind;
 use igp::util::logging;
 
@@ -29,6 +30,7 @@ fn dispatch(args: &[String]) -> Result<()> {
     };
     match cmd.as_str() {
         "train" => cmd_train(&args[1..]),
+        "serve" => cmd_serve(&args[1..]),
         "exp" => experiments::dispatch(&args[1..]),
         "list-datasets" => {
             for s in igp::data::registry() {
@@ -59,6 +61,11 @@ USAGE:
               [--probes S] [--rff M] [--online K]
               [--steps N] [--lr F] [--max-epochs N] [--seed N]
               [--artifacts DIR] [--out results.csv]
+    igp serve [train flags] [--batch N] [--score in.csv [out.csv]]
+              train, then answer queries from the amortised pathwise
+              posterior: --score reads query rows (d columns) from in.csv
+              and writes mean,var per row (stdout if out.csv is omitted);
+              without --score the held-out split is served and scored
     igp exp <id|all> [--out DIR] [--splits N] [--steps N]
               ids: table1 table7 fig1 fig3 fig4 fig5 fig6 fig7 fig9 fig10
     igp list-datasets
@@ -181,15 +188,17 @@ fn cmd_train_online(rc: &RunConfig, out_path: Option<&str>) -> Result<()> {
     Ok(())
 }
 
-fn cmd_train(args: &[String]) -> Result<()> {
-    let p = cli::Parser::new(
-        args,
-        &[
-            "config", "dataset", "solver", "estimator", "steps", "lr", "max-epochs",
-            "seed", "artifacts", "out", "tolerance", "backend", "tile", "threads",
-            "probes", "rff", "online",
-        ],
-    )?;
+/// Option names (taking a value) shared by `train` and `serve`.
+const TRAIN_VALUE_KEYS: &[&str] = &[
+    "config", "dataset", "solver", "estimator", "steps", "lr", "max-epochs",
+    "seed", "artifacts", "out", "tolerance", "backend", "tile", "threads",
+    "probes", "rff", "online",
+];
+
+/// Resolve a [`RunConfig`] from `--config` plus flag overrides — single
+/// source for the `train` and `serve` commands so their training setups
+/// cannot drift apart.
+fn run_config_from_args(p: &cli::Parser) -> Result<RunConfig> {
     let mut rc = match p.get("config") {
         Some(path) => RunConfig::from_doc(&igp::config::parse_file(path)?)?,
         None => RunConfig::default(),
@@ -243,6 +252,12 @@ fn cmd_train(args: &[String]) -> Result<()> {
         rc.online_chunks = v;
     }
     rc.validate()?;
+    Ok(rc)
+}
+
+fn cmd_train(args: &[String]) -> Result<()> {
+    let p = cli::Parser::new(args, TRAIN_VALUE_KEYS)?;
+    let rc = run_config_from_args(&p)?;
 
     if rc.online_chunks > 1 {
         return cmd_train_online(&rc, p.get("out"));
@@ -308,5 +323,117 @@ fn cmd_train(args: &[String]) -> Result<()> {
         w.flush()?;
         igp::info!("telemetry written to {path}");
     }
+    Ok(())
+}
+
+/// `igp serve`: train, then answer queries from the amortised pathwise
+/// posterior through [`PredictionService`].  `--score in.csv [out.csv]`
+/// scores arbitrary query rows (d columns; one optional header line);
+/// without it the dataset's held-out split is served and scored, so the
+/// command doubles as an end-to-end smoke of the serving path.
+fn cmd_serve(args: &[String]) -> Result<()> {
+    let mut keys: Vec<&str> = TRAIN_VALUE_KEYS.to_vec();
+    keys.extend(["batch", "score"]);
+    let p = cli::Parser::new(args, &keys)?;
+    let rc = run_config_from_args(&p)?;
+    anyhow::ensure!(
+        rc.backend != "xla",
+        "serve needs a query-capable pure-Rust backend (dense|tiled): \
+         XLA artifacts fix the prediction shape to the baked-in test split"
+    );
+    anyhow::ensure!(
+        rc.online_chunks <= 1,
+        "serve trains on the full dataset; drive online arrivals through the \
+         API or examples/serve.rs"
+    );
+    let batch = p.get_parsed::<usize>("batch")?.unwrap_or(64);
+    anyhow::ensure!(batch > 0, "--batch must be positive");
+    let score_in = p.get("score");
+    // `--score in.csv out.csv` leaves out.csv as a positional; `--out`
+    // also works
+    let out_path = p.get("out").or_else(|| p.positional.first().map(String::as_str));
+    // when predictions stream to stdout, diagnostics must go to stderr or
+    // they would corrupt the documented machine-readable mean,var stream
+    let csv_to_stdout = score_in.is_some() && out_path.is_none();
+    let diag = |msg: String| {
+        if csv_to_stdout {
+            eprintln!("{msg}");
+        } else {
+            println!("{msg}");
+        }
+    };
+
+    let ds = igp::data::generate(&igp::data::spec(&rc.dataset)?);
+    let backend = BackendKind::parse(&rc.backend)?;
+    let topts = TiledOptions { tile: rc.tile, threads: rc.threads };
+    let op = igp::operators::make_cpu_backend(backend, &ds, rc.probes, rc.rff, topts)?;
+    igp::info!("backend: {} (serving batch = {batch})", backend.name());
+    let opts = trainer_options(&rc, None)?;
+    let mut trainer = Trainer::new(opts, op, &ds);
+    let out = trainer.run(rc.outer_steps)?;
+    diag(format!(
+        "trained {} steps on {}: rmse={:.4} llh={:.4} ({:.1} epochs, {:.2}s solver)",
+        rc.outer_steps,
+        rc.dataset,
+        out.final_metrics.rmse,
+        out.final_metrics.llh,
+        out.total_epochs,
+        out.solver_secs
+    ));
+
+    let mut service =
+        PredictionService::new(trainer, ServeOptions { batch, threads: rc.threads });
+    match score_in {
+        Some(input) => {
+            let x = igp::util::csv::read_matrix(input)?;
+            anyhow::ensure!(
+                x.cols == ds.spec.d,
+                "{input}: query rows have {} columns but the model has d = {}",
+                x.cols,
+                ds.spec.d
+            );
+            let t0 = std::time::Instant::now();
+            let (mean, var) = service.predict(&x)?;
+            let secs = t0.elapsed().as_secs_f64();
+            match out_path {
+                Some(path) => {
+                    let mut w = igp::util::csv::CsvWriter::create(path, &["mean", "var"])?;
+                    for (m, v) in mean.iter().zip(&var) {
+                        w.row_display(&[m, v])?;
+                    }
+                    w.flush()?;
+                    diag(format!("scored {} rows -> {path}", x.rows));
+                }
+                None => {
+                    println!("mean,var");
+                    for (m, v) in mean.iter().zip(&var) {
+                        println!("{m},{v}");
+                    }
+                }
+            }
+            diag(format!(
+                "served {} rows in {secs:.3}s ({:.0} rows/s)",
+                x.rows,
+                x.rows as f64 / secs.max(1e-9)
+            ));
+        }
+        None => {
+            let t0 = std::time::Instant::now();
+            let m = service.score(&ds.x_test, &ds.y_test)?;
+            let secs = t0.elapsed().as_secs_f64();
+            diag(format!(
+                "test split: rmse={:.4} llh={:.4} ({} rows in {secs:.3}s, {:.0} rows/s)",
+                m.rmse,
+                m.llh,
+                ds.x_test.rows,
+                ds.x_test.rows as f64 / secs.max(1e-9)
+            ));
+        }
+    }
+    let st = service.stats();
+    diag(format!(
+        "service: {} rows, {} batches, artifact builds={} hits={}",
+        st.rows_served, st.batches, st.artifact_builds, st.artifact_hits
+    ));
     Ok(())
 }

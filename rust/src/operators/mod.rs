@@ -135,14 +135,130 @@ pub trait KernelOperator {
     /// Pathwise probe targets Xi = Phi(X) wts + sigma * noise  [n, s].
     fn rff_eval(&self, omega0: &Mat, wts: &Mat, noise: &Mat) -> Mat;
 
+    /// Pathwise-conditioned predictions at *arbitrary* query inputs
+    /// `x_query` [b, d]: (mean [b], samples [b, s]).  This is the serving
+    /// primitive — unlike [`KernelOperator::predict`], it is not tied to
+    /// the dataset's baked-in test split.
+    ///
+    /// Contract (enforced by `tests/serve_parity.rs`): results are
+    /// *per-row independent* — predicting a query set in one call, or
+    /// split into arbitrary row batches, or under any thread count, gives
+    /// bitwise-identical values — and the tiled and dense backends agree
+    /// bitwise (both mirror `Mat::matmul`'s accumulation order; see the
+    /// note on [`Mat::matmul`]).
+    ///
+    /// Backends with static shapes (compiled XLA artifacts) cannot take
+    /// arbitrary query matrices and return an error.
+    fn predict_at(
+        &self,
+        _x_query: &Mat,
+        _vy: &[f64],
+        _zhat: &Mat,
+        _omega0: &Mat,
+        _wts: &Mat,
+    ) -> anyhow::Result<(Vec<f64>, Mat)> {
+        anyhow::bail!(
+            "this backend has static shapes and cannot evaluate arbitrary query points"
+        )
+    }
+
     /// Pathwise-conditioned predictions at the held-out test inputs:
-    /// (mean [t], samples [t, s]).
-    fn predict(&self, vy: &[f64], zhat: &Mat, omega0: &Mat, wts: &Mat) -> (Vec<f64>, Mat);
+    /// (mean [t], samples [t, s]).  Default: [`KernelOperator::predict_at`]
+    /// on the stored test split; the XLA backend overrides with its
+    /// compiled static-shape path.
+    fn predict(&self, vy: &[f64], zhat: &Mat, omega0: &Mat, wts: &Mat) -> (Vec<f64>, Mat) {
+        self.predict_at(self.x_test(), vy, zhat, omega0, wts)
+            .expect("backend cannot predict at its stored test inputs")
+    }
+
+    /// Batched serving sweep: split `x_query` into blocks of `batch` rows,
+    /// evaluate each block through [`KernelOperator::predict_at`] and
+    /// concatenate in block order (an order-canonical reduction, so the
+    /// result is bitwise-identical for every batch size and thread count
+    /// by the per-row-independence contract above).  The default runs the
+    /// blocks serially; the pure-Rust backends override with the threaded
+    /// sweep ([`predict_batched_threaded`]).
+    fn predict_batched(
+        &self,
+        x_query: &Mat,
+        batch: usize,
+        _threads: usize,
+        vy: &[f64],
+        zhat: &Mat,
+        omega0: &Mat,
+        wts: &Mat,
+    ) -> anyhow::Result<(Vec<f64>, Mat)> {
+        let b = batch.max(1);
+        let s = wts.cols;
+        let mut mean = Vec::with_capacity(x_query.rows);
+        let mut samples = Mat::zeros(0, s);
+        let mut r0 = 0;
+        while r0 < x_query.rows {
+            let r1 = (r0 + b).min(x_query.rows);
+            let idx: Vec<usize> = (r0..r1).collect();
+            let (m, smp) = self.predict_at(&x_query.gather_rows(&idx), vy, zhat, omega0, wts)?;
+            mean.extend_from_slice(&m);
+            samples.append_rows(&smp);
+            r0 = r1;
+        }
+        Ok((mean, samples))
+    }
 
     /// Exact MLL value+gradient if the backend has an exact path.
     fn exact_mll(&self, _y: &[f64]) -> Option<(f64, Vec<f64>)> {
         None
     }
+}
+
+/// Below this many query rows the batched serving sweep stays on the
+/// calling thread: spawning scoped workers costs tens of microseconds,
+/// which dwarfs a small prediction batch.  Thread count never changes the
+/// bits, so the threshold is purely a performance knob.
+pub(crate) const SERVE_PAR_MIN_ROWS: usize = 128;
+
+/// Threaded serving sweep shared by the pure-Rust backends: query blocks
+/// of `batch` rows are distributed over the deterministic strided pool
+/// ([`crate::util::parallel::parallel_map_slots`]) and concatenated in
+/// block order — an order-canonical reduction.  Every row's result depends
+/// only on that row, so the output is **bitwise-identical** for every
+/// thread count and batch size; small queries fall back to the serial
+/// in-line path (same bits).
+pub(crate) fn predict_batched_threaded<T: KernelOperator + Sync>(
+    op: &T,
+    x_query: &Mat,
+    batch: usize,
+    threads: usize,
+    vy: &[f64],
+    zhat: &Mat,
+    omega0: &Mat,
+    wts: &Mat,
+) -> anyhow::Result<(Vec<f64>, Mat)> {
+    let b = batch.max(1);
+    let rows = x_query.rows;
+    let s = wts.cols;
+    if rows == 0 {
+        return Ok((Vec::new(), Mat::zeros(0, s)));
+    }
+    let nb = (rows + b - 1) / b;
+    let t = if nb <= 1 || rows < SERVE_PAR_MIN_ROWS {
+        1
+    } else {
+        crate::util::parallel::num_threads(if threads == 0 { None } else { Some(threads) })
+    };
+    let parts = crate::util::parallel::parallel_map_slots(nb, t, |bi| {
+        let r0 = bi * b;
+        let r1 = (r0 + b).min(rows);
+        let idx: Vec<usize> = (r0..r1).collect();
+        op.predict_at(&x_query.gather_rows(&idx), vy, zhat, omega0, wts)
+    });
+    let mut mean = Vec::with_capacity(rows);
+    let mut samples = Mat::zeros(0, s);
+    for p in parts {
+        let (m, smp) = p?;
+        mean.extend_from_slice(&m);
+        samples.append_rows(&smp);
+    }
+    Ok((mean, samples))
 }
 
 /// Shared Rust implementation of the RFF feature map (mirrors
@@ -378,12 +494,27 @@ impl KernelOperator for DenseOperator {
         xi
     }
 
-    fn predict(&self, vy: &[f64], zhat: &Mat, omega0: &Mat, wts: &Mat) -> (Vec<f64>, Mat) {
-        let kx = kernels::kernel_matrix(&self.x_test, &self.x, &self.hp, self.family);
+    fn predict_at(
+        &self,
+        x_query: &Mat,
+        vy: &[f64],
+        zhat: &Mat,
+        omega0: &Mat,
+        wts: &Mat,
+    ) -> anyhow::Result<(Vec<f64>, Mat)> {
+        anyhow::ensure!(
+            x_query.cols == self.d(),
+            "predict_at: query has d = {} but the model has d = {}",
+            x_query.cols,
+            self.d()
+        );
+        assert_eq!(vy.len(), self.n());
+        assert_eq!(zhat.rows, self.n());
+        let kx = kernels::kernel_matrix(x_query, &self.x, &self.hp, self.family);
         let mean = kx.matvec(vy);
-        let phi_t = rff_features(&self.x_test, omega0, &self.hp);
-        let mut samples = phi_t.matmul(wts); // [t, s]
-        // + K(Xt, X) (vy - zhat)
+        let phi_t = rff_features(x_query, omega0, &self.hp);
+        let mut samples = phi_t.matmul(wts); // [b, s]
+        // + K(Xq, X) (vy - zhat)
         let mut u = zhat.clone();
         for j in 0..u.cols {
             for i in 0..u.rows {
@@ -391,7 +522,20 @@ impl KernelOperator for DenseOperator {
             }
         }
         samples.add_assign(&kx.matmul(&u));
-        (mean, samples)
+        Ok((mean, samples))
+    }
+
+    fn predict_batched(
+        &self,
+        x_query: &Mat,
+        batch: usize,
+        threads: usize,
+        vy: &[f64],
+        zhat: &Mat,
+        omega0: &Mat,
+        wts: &Mat,
+    ) -> anyhow::Result<(Vec<f64>, Mat)> {
+        predict_batched_threaded(self, x_query, batch, threads, vy, zhat, omega0, wts)
     }
 
     fn exact_mll(&self, y: &[f64]) -> Option<(f64, Vec<f64>)> {
@@ -545,6 +689,45 @@ mod tests {
         // shape-mismatched chunks are rejected
         assert!(grown.extend(&Mat::zeros(3, 2)).is_err());
         assert!(grown.extend(&Mat::zeros(0, 4)).is_err());
+    }
+
+    #[test]
+    fn predict_at_is_row_independent_and_backs_predict() {
+        // serving contract: predict_at on the stored test split IS predict,
+        // and splitting the query into arbitrary batches (or going through
+        // predict_batched at any thread count) never changes a bit
+        let mut o = op();
+        o.set_hp(&Hyperparams { ell: vec![0.8; 4], sigf: 1.1, sigma: 0.3 });
+        let mut rng = Rng::new(7);
+        let (n, m, s) = (o.n(), 8, 3);
+        let omega0 = Mat::from_fn(o.d(), m, |_, _| rng.gaussian());
+        let wts = Mat::from_fn(2 * m, s, |_, _| rng.gaussian());
+        let zhat = Mat::from_fn(n, s, |_, _| rng.gaussian());
+        let vy = rng.gaussian_vec(n);
+        let (mean, samples) = o.predict(&vy, &zhat, &omega0, &wts);
+        let (mean_at, samples_at) = o.predict_at(o.x_test(), &vy, &zhat, &omega0, &wts).unwrap();
+        assert!(mean.iter().zip(&mean_at).all(|(a, b)| a.to_bits() == b.to_bits()));
+        assert!(samples.data.iter().zip(&samples_at.data).all(|(a, b)| a.to_bits() == b.to_bits()));
+        // arbitrary (non-test-split) queries, split into ragged batches
+        let xq = Mat::from_fn(37, o.d(), |_, _| rng.gaussian());
+        let (m_once, s_once) = o.predict_at(&xq, &vy, &zhat, &omega0, &wts).unwrap();
+        for batch in [1, 5, 16, 64] {
+            for threads in [0, 1, 3] {
+                let (m_b, s_b) = o
+                    .predict_batched(&xq, batch, threads, &vy, &zhat, &omega0, &wts)
+                    .unwrap();
+                assert!(
+                    m_once.iter().zip(&m_b).all(|(a, b)| a.to_bits() == b.to_bits()),
+                    "batch={batch} threads={threads}: mean differs"
+                );
+                assert!(
+                    s_once.data.iter().zip(&s_b.data).all(|(a, b)| a.to_bits() == b.to_bits()),
+                    "batch={batch} threads={threads}: samples differ"
+                );
+            }
+        }
+        // width mismatch is rejected instead of producing garbage
+        assert!(o.predict_at(&Mat::zeros(3, 2), &vy, &zhat, &omega0, &wts).is_err());
     }
 
     #[test]

@@ -376,12 +376,34 @@ impl KernelOperator for TiledOperator {
         out
     }
 
-    /// Pathwise-conditioned predictions, row-parallel over the test points
-    /// with per-worker K(X_t_i, X) row and Phi(x_t_i) scratch buffers.
-    fn predict(&self, vy: &[f64], zhat: &Mat, omega0: &Mat, wts: &Mat) -> (Vec<f64>, Mat) {
+    /// Pathwise-conditioned predictions at arbitrary query inputs,
+    /// row-parallel with per-worker K(x_q, X) row and Phi(x_q) scratch
+    /// buffers — query blocks stream against the training rows in
+    /// O(b·n·d) without ever materialising K(X*, X).
+    ///
+    /// The accumulation order deliberately mirrors the dense path
+    /// ([`super::rff_fill_row`] for features, `Mat::matmul`'s k-major
+    /// order for the feature product, and the K(Xq, X)(vy - zhat)
+    /// correction summed into a separate buffer before one final add, like
+    /// dense's `matmul` + `add_assign`): the serve parity suite demands
+    /// tiled == dense **bitwise** at arbitrary query points.
+    fn predict_at(
+        &self,
+        x_query: &Mat,
+        vy: &[f64],
+        zhat: &Mat,
+        omega0: &Mat,
+        wts: &Mat,
+    ) -> anyhow::Result<(Vec<f64>, Mat)> {
         let n = self.n();
         let d = self.d();
-        let tn = self.x_test.rows;
+        anyhow::ensure!(
+            x_query.cols == d,
+            "predict_at: query has d = {} but the model has d = {}",
+            x_query.cols,
+            d
+        );
+        let tq = x_query.rows;
         assert_eq!(vy.len(), n);
         assert_eq!(zhat.rows, n);
         assert_eq!(omega0.rows, d);
@@ -392,7 +414,7 @@ impl KernelOperator for TiledOperator {
         let amp = self.hp.sigf * (1.0 / m as f64).sqrt();
         // packed output: column 0 = mean, columns 1..=s = samples
         let width = 1 + s;
-        let mut packed = Mat::zeros(tn, width);
+        let mut packed = Mat::zeros(tq, width);
         parallel_row_blocks(
             &mut packed.data,
             width,
@@ -401,9 +423,10 @@ impl KernelOperator for TiledOperator {
             |r0, rows, block| {
                 let mut krow = vec![0.0; n];
                 let mut phi = vec![0.0; 2 * m];
+                let mut corr = vec![0.0; s];
                 for r in 0..rows {
                     let i = r0 + r;
-                    let xt = self.x_test.row(i);
+                    let xt = x_query.row(i);
                     for j in 0..n {
                         krow[j] = kernels::kval(xt, self.x.row(j), &self.hp, self.family);
                     }
@@ -420,7 +443,10 @@ impl KernelOperator for TiledOperator {
                             srow[q] += pc * wrow[q];
                         }
                     }
-                    // + K(Xt, X) (vy - zhat)
+                    // + K(Xq, X) (vy - zhat): accumulated apart, added once
+                    for v in corr.iter_mut() {
+                        *v = 0.0;
+                    }
                     for j in 0..n {
                         let kj = krow[j];
                         if kj == 0.0 {
@@ -428,20 +454,41 @@ impl KernelOperator for TiledOperator {
                         }
                         let zr = zhat.row(j);
                         for q in 0..s {
-                            srow[q] += kj * (vy[j] - zr[q]);
+                            corr[q] += kj * (vy[j] - zr[q]);
                         }
+                    }
+                    for q in 0..s {
+                        srow[q] += corr[q];
                     }
                 }
             },
         );
-        let mut mean = Vec::with_capacity(tn);
-        let mut samples = Mat::zeros(tn, s);
-        for i in 0..tn {
+        let mut mean = Vec::with_capacity(tq);
+        let mut samples = Mat::zeros(tq, s);
+        for i in 0..tq {
             let prow = packed.row(i);
             mean.push(prow[0]);
             samples.row_mut(i).copy_from_slice(&prow[1..]);
         }
-        (mean, samples)
+        Ok((mean, samples))
+    }
+
+    /// The tiled backend's `predict_at` already parallelises over query
+    /// rows on its own worker pool (`parallel_row_blocks` in `tile`-row
+    /// blocks), so the generic block fan-out would only nest thread pools
+    /// and copy each block.  Results are per-row independent, so
+    /// forwarding the whole query produces identical bits.
+    fn predict_batched(
+        &self,
+        x_query: &Mat,
+        _batch: usize,
+        _threads: usize,
+        vy: &[f64],
+        zhat: &Mat,
+        omega0: &Mat,
+        wts: &Mat,
+    ) -> anyhow::Result<(Vec<f64>, Mat)> {
+        self.predict_at(x_query, vy, zhat, omega0, wts)
     }
 
     /// Exact MLL via the O(n³) Cholesky baseline — only sane at small n,
@@ -594,6 +641,36 @@ mod tests {
             assert!((a - b).abs() < 1e-10);
         }
         assert!(s1.max_abs_diff(&s2) < 1e-10, "{}", s1.max_abs_diff(&s2));
+    }
+
+    #[test]
+    fn predict_at_is_bitwise_equal_to_dense() {
+        // the serving contract is stronger than the tolerance-based parity
+        // of the training-path products: at arbitrary query points, tiled
+        // and dense must agree in every bit, for any tile size and thread
+        // count, whole-query or batched
+        let mut rng = Rng::new(11);
+        for (tile, threads) in [(1, 1), (7, 2), (64, 3), (300, 4)] {
+            let (tiled, dense) = ops(tile, threads);
+            let (d, m, s, n) = (tiled.d(), 8, 3, tiled.n());
+            let omega0 = Mat::from_fn(d, m, |_, _| rng.gaussian());
+            let wts = Mat::from_fn(2 * m, s, |_, _| rng.gaussian());
+            let zhat = Mat::from_fn(n, s, |_, _| rng.gaussian());
+            let vy = rng.gaussian_vec(n);
+            let xq = Mat::from_fn(29, d, |_, _| rng.gaussian());
+            let (m1, s1) = tiled.predict_at(&xq, &vy, &zhat, &omega0, &wts).unwrap();
+            let (m2, s2) = dense.predict_at(&xq, &vy, &zhat, &omega0, &wts).unwrap();
+            for (i, (a, b)) in m1.iter().zip(&m2).enumerate() {
+                assert_eq!(a.to_bits(), b.to_bits(), "tile={tile} mean row {i}: {a} vs {b}");
+            }
+            for (i, (a, b)) in s1.data.iter().zip(&s2.data).enumerate() {
+                assert_eq!(a.to_bits(), b.to_bits(), "tile={tile} sample {i}: {a} vs {b}");
+            }
+            // batched sweep keeps the bits too
+            let (mb, sb) = tiled.predict_batched(&xq, 8, threads, &vy, &zhat, &omega0, &wts).unwrap();
+            assert!(m1.iter().zip(&mb).all(|(a, b)| a.to_bits() == b.to_bits()));
+            assert!(s1.data.iter().zip(&sb.data).all(|(a, b)| a.to_bits() == b.to_bits()));
+        }
     }
 
     #[test]

@@ -69,13 +69,31 @@ impl LinearSolver for ApSolver {
         let mut iterations = 0usize;
         let (mut ry, mut rz) = residual_norms_t(&r, threads);
         let tol = opts.tolerance;
-        // budget guard uses the full-block cost; a ragged tail iteration
-        // (block does not divide n — routine after online arrivals) is
-        // charged its actual, smaller fraction below
-        let epoch_per_iter = bsz as f64 / n as f64;
-
         let nblocks = (n + bsz - 1) / bsz;
-        while (ry > tol || rz > tol) && epochs + epoch_per_iter <= opts.max_epochs {
+        // Budget guard: the loop continues while the *cheapest selectable*
+        // block still fits the budget.  With a ragged tail (block does not
+        // divide n — routine after online arrivals) that is the tail's
+        // actual fraction, not the full-block cost: pricing every
+        // iteration at full-block cost made the solver exit without
+        // running a tail iteration it could afford.  Greedy selection then
+        // restricts itself to affordable blocks, so the budget is never
+        // exceeded either.
+        let block_cost =
+            |blk: usize| (((blk + 1) * bsz).min(n) - blk * bsz) as f64 / n as f64;
+        let min_epoch_per_iter = block_cost(nblocks - 1).min(block_cost(0));
+        // Greedy no-progress guard: solving block I leaves r[I] at fp dust,
+        // so greedy re-selecting I *immediately* means every other block is
+        // either unaffordable (budget edge: only the cheap tail fits) or
+        // equally negligible — the iteration would charge its epoch
+        // fraction for a near-zero update.  Stop instead of burning the
+        // remaining budget on no-ops.
+        let mut last_greedy: Option<usize> = None;
+
+        while (ry > tol || rz > tol) && epochs + min_epoch_per_iter <= opts.max_epochs {
+            // affordability uses the same `epochs + cost <= max` expression
+            // as the loop guard, so uniform-block runs behave exactly as
+            // before the ragged-tail guard fix
+            let affordable = |blk: usize| epochs + block_cost(blk) <= opts.max_epochs;
             let blk = match opts.ap_selection {
                 ApSelection::Greedy => {
                     let scores = match &pre {
@@ -85,16 +103,43 @@ impl LinearSolver for ApSolver {
                         }
                         None => recurrence::block_scores(&r, bsz, threads),
                     };
-                    scores
+                    // a NaN/Inf block score means the residual has blown up
+                    // (divergence): bail out with a divergence report, like
+                    // SGD's finiteness guard, instead of panicking in the
+                    // comparator below
+                    if scores.iter().any(|s| !s.is_finite()) {
+                        break;
+                    }
+                    let best = match scores
                         .iter()
                         .enumerate()
+                        .filter(|(i, _)| affordable(*i))
                         .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
                         .map(|(i, _)| i)
-                        .unwrap()
+                    {
+                        Some(i) => i,
+                        // loop guard makes the affordable set nonempty;
+                        // defensive fp edge
+                        None => break,
+                    };
+                    if last_greedy == Some(best) {
+                        break;
+                    }
+                    last_greedy = Some(best);
+                    best
                 }
-                ApSelection::Random => self.rng.below(nblocks),
+                ApSelection::Random => {
+                    let b = self.rng.below(nblocks);
+                    if !affordable(b) {
+                        break;
+                    }
+                    b
+                }
                 ApSelection::Cyclic => {
                     let b = self.cursor % nblocks;
+                    if !affordable(b) {
+                        break;
+                    }
                     self.cursor += 1;
                     b
                 }
@@ -128,6 +173,12 @@ impl LinearSolver for ApSolver {
             let (a, b_) = residual_norms_t(&r, threads);
             ry = a;
             rz = b_;
+            // divergence guard: NaN norms make both `> tol` comparisons
+            // false, so without this check a blown-up solve would exit the
+            // loop *looking* converged on the probe side; report it instead
+            if !ry.is_finite() || !rz.is_finite() {
+                break;
+            }
         }
 
         norm.finish_t(&mut v, threads);
@@ -325,6 +376,75 @@ mod tests {
             let rep = ApSolver::default().solve(&op, &b, &mut v, &o);
             assert!(rep.converged, "{sel:?}: {rep:?}");
         }
+    }
+
+    #[test]
+    fn budget_between_tail_and_full_block_cost_still_runs_the_tail() {
+        // regression: the budget guard priced every iteration at the
+        // full-block cost (bsz/n), so a remaining budget that fits only
+        // the cheaper ragged tail block exited without running the tail
+        // iteration it could afford.  n = 256, bsz = 48 -> five 48-row
+        // blocks plus a 16-row tail; budget 0.1 epochs sits between the
+        // tail cost (16/256 = 0.0625) and the full cost (48/256 = 0.1875).
+        let (op, b) = setup();
+        let mut v = Mat::zeros(op.n(), op.k_width());
+        let opts = SolveOptions {
+            tolerance: 1e-12,
+            max_epochs: 0.1,
+            block_size: 48,
+            ..Default::default()
+        };
+        let rep = ApSolver::default().solve(&op, &b, &mut v, &opts);
+        assert_eq!(rep.iterations, 1, "the affordable tail iteration must run");
+        assert!((rep.epochs - 16.0 / 256.0).abs() < 1e-12, "{}", rep.epochs);
+        assert!(rep.epochs <= opts.max_epochs + 1e-12);
+        // greedy selection restricted itself to the affordable tail block:
+        // only the last 16 rows moved
+        let k = op.k_width();
+        assert!(v.data[..240 * k].iter().all(|&x| x == 0.0), "non-tail rows touched");
+        assert!(v.data[240 * k..].iter().any(|&x| x != 0.0), "tail rows untouched");
+    }
+
+    #[test]
+    fn budget_edge_does_not_burn_epochs_re_solving_the_tail() {
+        // at the budget edge only the tail block is affordable; once it is
+        // solved, greedy would re-select it forever (its fp-dust score is
+        // the max of a singleton set), charging real epoch fractions for
+        // no-op iterations.  The consecutive-repeat guard must stop after
+        // the one useful tail solve.  Budget 0.19 affords three tail
+        // iterations (3 * 0.0625) but only the first does work.
+        let (op, b) = setup();
+        let mut v = Mat::zeros(op.n(), op.k_width());
+        let opts = SolveOptions {
+            tolerance: 1e-12,
+            max_epochs: 0.19,
+            block_size: 48,
+            ..Default::default()
+        };
+        let rep = ApSolver::default().solve(&op, &b, &mut v, &opts);
+        assert_eq!(rep.iterations, 1, "no-op tail re-solves burned budget");
+        assert!((rep.epochs - 16.0 / 256.0).abs() < 1e-12, "{}", rep.epochs);
+    }
+
+    #[test]
+    fn nan_residual_reports_divergence_instead_of_panicking() {
+        // regression: greedy selection compared block scores with
+        // partial_cmp().unwrap(), so a NaN score (diverged residual)
+        // panicked the process; it must report divergence the way SGD's
+        // finiteness guard does
+        let (op, mut b) = setup();
+        b[(5, 2)] = f64::NAN; // poison one probe column
+        let mut v = Mat::zeros(op.n(), op.k_width());
+        let opts = SolveOptions {
+            tolerance: 0.01,
+            max_epochs: 100.0,
+            block_size: 64,
+            ..Default::default()
+        };
+        let rep = ApSolver::default().solve(&op, &b, &mut v, &opts);
+        assert!(!rep.converged);
+        assert!(!rep.rz.is_finite(), "report must reflect the divergence: {rep:?}");
+        assert_eq!(rep.iterations, 0, "no useful work is possible on a NaN residual");
     }
 
     #[test]

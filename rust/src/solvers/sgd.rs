@@ -94,11 +94,18 @@ impl SgdSolver {
             recurrence::col_sq_sums(&r, threads).iter().sum();
 
         let mut momentum = Mat::zeros(n, k);
-        // Polyak tail averaging (optional): average iterates after the
-        // first half of the budget.
+        // Polyak tail averaging (optional): average iterates over the back
+        // half of the budget *actually available to this attempt*.  The
+        // window is anchored past the warm-start residual cost (`epochs`
+        // starts at `norm.warm_epoch_cost`, not 0) and `opts.max_epochs`
+        // is already this attempt's budget (backoff retries shrink it), so
+        // warm starts and retries keep the intended back-half coverage —
+        // measuring against the raw budget made averaging start almost
+        // immediately under warm starts (or swallow early noisy iterates
+        // on retries).
         let mut polyak_sum: Option<Mat> = None;
         let mut polyak_count = 0usize;
-        let polyak_start = opts.max_epochs * 0.5;
+        let polyak_start = polyak_window_start(opts.max_epochs, norm.warm_epoch_cost);
         let mut epochs = norm.warm_epoch_cost;
         let mut iterations = 0usize;
         let (mut ry, mut rz) = residual_norms_t(&r, threads);
@@ -178,6 +185,17 @@ impl SgdSolver {
             init_residual_sq,
         }
     }
+}
+
+/// First epoch value at which Polyak tail averaging engages: the midpoint
+/// of the iteration budget actually available to the attempt — what is
+/// left of `max_epochs` after the warm-start residual cost (`warm_cost`,
+/// where the epoch counter starts).  Cold starts (`warm_cost = 0`) keep
+/// the historical `0.5 * max_epochs`; warm starts and shrunk backoff-retry
+/// budgets get the genuine back half instead of a window that opened
+/// before the first iteration.
+fn polyak_window_start(max_epochs: f64, warm_cost: f64) -> f64 {
+    warm_cost + 0.5 * (max_epochs - warm_cost).max(0.0)
 }
 
 /// Learning-rate auto-tune mirroring the paper's protocol: pick the largest
@@ -451,6 +469,133 @@ mod tests {
             assert_eq!(rep, rep1, "threads={t}");
             assert_eq!(v.data, v1.data, "threads={t}");
         }
+    }
+
+    #[test]
+    fn polyak_window_start_is_anchored_to_the_attempt_budget() {
+        // cold start: historical behaviour (back half of the raw budget)
+        assert_eq!(polyak_window_start(2.0, 0.0), 1.0);
+        // warm start: the epoch counter starts at 1.0, so the old raw
+        // formula (0.5 * 2.0 = 1.0) opened the window before the first
+        // iteration; the anchored window covers the genuine back half
+        assert_eq!(polyak_window_start(2.0, 1.0), 1.5);
+        // shrunk backoff-retry budget under a warm start: the old formula
+        // (0.5 * 1.5 = 0.75) again opened immediately
+        assert_eq!(polyak_window_start(1.5, 1.0), 1.25);
+        // degenerate budget below the warm cost: the window clamps shut at
+        // the warm cost instead of going negative
+        assert_eq!(polyak_window_start(0.5, 1.0), 1.0);
+    }
+
+    #[test]
+    fn warm_start_polyak_averages_only_the_back_half() {
+        // regression: polyak_start = max_epochs * 0.5 was measured against
+        // the raw budget, but a warm start pays 1.0 epoch for the exact
+        // initial residual before iterating — with budget 2.0 the window
+        // opened at 1.0 (i.e. before iteration one), so ALL iterates were
+        // averaged instead of the back half.  n = 256, b = 64 -> exactly
+        // 0.25 epochs per iteration (exact in fp), budget 2.0 -> 4
+        // iterations; the fixed window [1.5, 2.0) covers iterates 3 and 4.
+        let (op, b) = setup();
+        // converged-ish warm start so warm_epoch_cost = 1.0
+        let mut v0 = Mat::zeros(op.n(), op.k_width());
+        let warmup = SolveOptions {
+            tolerance: 0.05,
+            max_epochs: 400.0,
+            block_size: 64,
+            sgd_lr: 8.0,
+            sgd_backoff: false,
+            ..Default::default()
+        };
+        SgdSolver::with_seed(3).solve(&op, &b, &mut v0, &warmup);
+        assert!(v0.data.iter().any(|&x| x != 0.0));
+
+        let run = |budget: f64, polyak: bool| {
+            let opts = SolveOptions {
+                tolerance: 1e-16, // never converges: budget governs
+                max_epochs: budget,
+                block_size: 64,
+                sgd_lr: 8.0,
+                sgd_backoff: false,
+                sgd_polyak: polyak,
+                ..Default::default()
+            };
+            let mut v = v0.clone();
+            // fixed seed: identical minibatch draws, so shorter runs are
+            // exact prefixes of longer ones
+            SgdSolver::with_seed(7).solve(&op, &b, &mut v, &opts);
+            v
+        };
+        let avg = run(2.0, true);
+        let v3 = run(1.75, false); // iterate after 3 iterations
+        let v4 = run(2.0, false); // iterate after 4 iterations
+        for i in 0..avg.data.len() {
+            let want = 0.5 * (v3.data[i] + v4.data[i]);
+            assert!(
+                (avg.data[i] - want).abs() <= 1e-11 * (1.0 + want.abs()),
+                "elem {i}: polyak {} vs back-half mean {want}",
+                avg.data[i]
+            );
+        }
+    }
+
+    #[test]
+    fn backoff_retry_polyak_matches_standalone_attempt_with_shrunk_budget() {
+        // retry path: after a diverged attempt the backoff re-solves with
+        // the *remaining* budget; the polyak window must behave exactly as
+        // a standalone solve given that shrunk budget (same warm-start
+        // anchoring).  Reconstruct attempt-by-attempt with a second solver
+        // sharing the minibatch stream and demand bitwise equality.
+        let (op, b) = setup();
+        let mut v0 = Mat::zeros(op.n(), op.k_width());
+        let warmup = SolveOptions {
+            tolerance: 0.05,
+            max_epochs: 400.0,
+            block_size: 64,
+            sgd_lr: 8.0,
+            sgd_backoff: false,
+            ..Default::default()
+        };
+        SgdSolver::with_seed(3).solve(&op, &b, &mut v0, &warmup);
+
+        let base = SolveOptions {
+            tolerance: 1e-16,
+            max_epochs: 12.0,
+            block_size: 64,
+            sgd_lr: 64.0, // diverges; backoff halves toward the stable 8.0
+            sgd_backoff: true,
+            sgd_polyak: true,
+            ..Default::default()
+        };
+        let mut v_backoff = v0.clone();
+        let rep = SgdSolver::with_seed(11).solve(&op, &b, &mut v_backoff, &base);
+        assert!(v_backoff.data.iter().all(|x| x.is_finite()), "{rep:?}");
+
+        // mirror the backoff loop through the public API (backoff off per
+        // attempt), sharing one solver so the rng stream lines up
+        let mut solver = SgdSolver::with_seed(11);
+        let mut lr = base.sgd_lr;
+        let mut spent = 0.0;
+        let mut v_rec = v0.clone();
+        for attempt in 0..4 {
+            let o = SolveOptions {
+                sgd_backoff: false,
+                sgd_lr: lr,
+                max_epochs: (base.max_epochs - spent).max(0.0),
+                ..base.clone()
+            };
+            let mut v = v0.clone();
+            let r = solver.solve(&op, &b, &mut v, &o);
+            spent += r.epochs;
+            let diverged =
+                !r.ry.is_finite() || !r.rz.is_finite() || r.ry > 3.0 || r.rz > 3.0;
+            if !diverged || attempt == 3 || o.max_epochs <= 0.0 {
+                v_rec = v;
+                break;
+            }
+            lr *= 0.5;
+        }
+        assert_eq!(v_backoff.data, v_rec.data, "retry attempt drifted from standalone solve");
     }
 
     #[test]

@@ -1,10 +1,64 @@
-//! CSV and markdown-table writers for experiment results.
+//! CSV and markdown-table writers for experiment results, plus a tiny
+//! numeric-CSV reader for the serving path's `--score` input files.
 
 use std::fs::{self, File};
 use std::io::{BufWriter, Write};
 use std::path::Path;
 
-use anyhow::Result;
+use anyhow::{Context, Result};
+
+use crate::linalg::Mat;
+
+/// Parse a numeric CSV into a row-major matrix.  Blank lines are skipped;
+/// one leading header row (any field that does not parse as f64) is
+/// tolerated and skipped; every data row must have the same number of
+/// comma-separated fields.
+pub fn parse_matrix(text: &str) -> Result<Mat> {
+    let mut rows: Vec<Vec<f64>> = Vec::new();
+    let mut cols: Option<usize> = None;
+    let mut saw_lines = false;
+    for (lineno, raw) in text.lines().enumerate() {
+        let line = raw.trim();
+        if line.is_empty() {
+            continue;
+        }
+        let first_line = !saw_lines;
+        saw_lines = true;
+        let parsed: std::result::Result<Vec<f64>, _> =
+            line.split(',').map(|f| f.trim().parse::<f64>()).collect();
+        match parsed {
+            Ok(vals) => {
+                match cols {
+                    Some(c) => anyhow::ensure!(
+                        vals.len() == c,
+                        "line {}: {} fields but earlier rows have {c}",
+                        lineno + 1,
+                        vals.len()
+                    ),
+                    None => cols = Some(vals.len()),
+                }
+                rows.push(vals);
+            }
+            Err(e) => {
+                // a single leading header row is fine; anything later is not
+                anyhow::ensure!(first_line, "line {}: unparsable field ({e})", lineno + 1);
+            }
+        }
+    }
+    let cols = cols.ok_or_else(|| anyhow::anyhow!("no numeric rows found"))?;
+    let mut m = Mat::zeros(rows.len(), cols);
+    for (i, r) in rows.iter().enumerate() {
+        m.row_mut(i).copy_from_slice(r);
+    }
+    Ok(m)
+}
+
+/// [`parse_matrix`] from a file path.
+pub fn read_matrix<P: AsRef<Path>>(path: P) -> Result<Mat> {
+    let text = fs::read_to_string(&path)
+        .with_context(|| format!("reading {}", path.as_ref().display()))?;
+    parse_matrix(&text).with_context(|| format!("parsing {}", path.as_ref().display()))
+}
 
 /// Incremental CSV writer with a fixed header.
 pub struct CsvWriter {
@@ -105,6 +159,43 @@ mod tests {
         let dir = std::env::temp_dir().join("igp_csv_test2");
         let mut w = CsvWriter::create(dir.join("t.csv"), &["a", "b"]).unwrap();
         w.row(&["1".into()]).unwrap();
+    }
+
+    #[test]
+    fn parse_matrix_reads_numeric_rows() {
+        let m = parse_matrix("1.0, 2.0\n3.5,-4\n\n5,6\n").unwrap();
+        assert_eq!((m.rows, m.cols), (3, 2));
+        assert_eq!(m.data, vec![1.0, 2.0, 3.5, -4.0, 5.0, 6.0]);
+    }
+
+    #[test]
+    fn parse_matrix_skips_a_leading_header() {
+        let m = parse_matrix("x1,x2\n1,2\n3,4\n").unwrap();
+        assert_eq!((m.rows, m.cols), (2, 2));
+        assert_eq!(m.data, vec![1.0, 2.0, 3.0, 4.0]);
+    }
+
+    #[test]
+    fn parse_matrix_rejects_ragged_and_garbage_rows() {
+        assert!(parse_matrix("1,2\n3\n").is_err());
+        assert!(parse_matrix("1,2\nnope,4\n").is_err());
+        assert!(parse_matrix("\n\n").is_err());
+        assert!(parse_matrix("header,row\n").is_err()); // header but no data
+    }
+
+    #[test]
+    fn read_matrix_roundtrips_a_written_file() {
+        let dir = std::env::temp_dir().join("igp_csv_read_test");
+        let path = dir.join("q.csv");
+        {
+            let mut w = CsvWriter::create(&path, &["a", "b"]).unwrap();
+            w.row(&["0.5".into(), "1.5".into()]).unwrap();
+            w.flush().unwrap();
+        }
+        let m = read_matrix(&path).unwrap();
+        assert_eq!((m.rows, m.cols), (1, 2));
+        assert_eq!(m.data, vec![0.5, 1.5]);
+        assert!(read_matrix(dir.join("missing.csv")).is_err());
     }
 
     #[test]

@@ -1,0 +1,259 @@
+//! Serving parity: the acceptance bar of the prediction-serving subsystem
+//! (after Maddox et al. 2021, predictive quality is the bar — the serving
+//! path must be *exactly* the evaluate path, not just fast).
+//!
+//! * `PredictionService` on the dataset's own test split is bitwise-equal
+//!   to `Trainer::evaluate`'s mean/variance (checked through the metric
+//!   bits and through the artifact directly);
+//! * tiled `predict_at` == dense `predict_at` bitwise at arbitrary query
+//!   batches;
+//! * threaded == serial for several thread counts and batch sizes;
+//! * artifact refresh after `extend_data` matches a from-scratch rebuild
+//!   and costs exactly one warm solve.
+
+use igp::coordinator::{Trainer, TrainerOptions};
+use igp::data::Dataset;
+use igp::estimator::EstimatorKind;
+use igp::gp::pathwise_variances;
+use igp::kernels::Hyperparams;
+use igp::linalg::Mat;
+use igp::operators::{DenseOperator, KernelOperator, TiledOperator, TiledOptions};
+use igp::serve::{PredictionService, ServeOptions};
+use igp::solvers::SolverKind;
+use igp::util::rng::Rng;
+
+fn dataset() -> Dataset {
+    igp::data::generate(&igp::data::spec("test").unwrap())
+}
+
+fn trainer(ds: &Dataset, estimator: EstimatorKind, seed: u64) -> Trainer {
+    let op = DenseOperator::new(ds, 8, 32);
+    let opts = TrainerOptions {
+        solver: SolverKind::Ap,
+        estimator,
+        warm_start: true,
+        lr: 0.1,
+        epoch_cap: 200.0,
+        block_size: Some(64),
+        seed,
+        ..Default::default()
+    };
+    Trainer::new(opts, Box::new(op), ds)
+}
+
+fn bits_eq(a: &[f64], b: &[f64]) -> bool {
+    a.len() == b.len() && a.iter().zip(b).all(|(x, y)| x.to_bits() == y.to_bits())
+}
+
+#[test]
+fn service_on_the_test_split_is_bitwise_equal_to_evaluate() {
+    for estimator in [EstimatorKind::Pathwise, EstimatorKind::Standard] {
+        let ds = dataset();
+        let mut t = trainer(&ds, estimator, 7);
+        let out = t.run(5).unwrap();
+        let solves = t.solve_count();
+
+        // reference mean/variance straight from the artifact the tail
+        // evaluation published (the exact state evaluate used)
+        let art = t.posterior_artifact().unwrap();
+        let (ref_mean, ref_samples) = t
+            .operator()
+            .predict_at(&ds.x_test, &art.vy, &art.zhat, &art.omega0, &art.wts)
+            .unwrap();
+        let ref_var = pathwise_variances(&ref_samples, art.noise_var);
+
+        let mut service = PredictionService::new(t, ServeOptions { batch: 17, threads: 2 });
+        let (mean, var) = service.predict(&ds.x_test).unwrap();
+        assert!(bits_eq(&mean, &ref_mean), "{estimator:?}: service mean drifted");
+        assert!(bits_eq(&var, &ref_var), "{estimator:?}: service variance drifted");
+
+        // the metrics recomputed from the served values carry the same
+        // bits as the evaluate path's final_metrics
+        let m = service.score(&ds.x_test, &ds.y_test).unwrap();
+        assert_eq!(
+            m.rmse.to_bits(),
+            out.final_metrics.rmse.to_bits(),
+            "{estimator:?}: rmse bits differ"
+        );
+        assert_eq!(
+            m.llh.to_bits(),
+            out.final_metrics.llh.to_bits(),
+            "{estimator:?}: llh bits differ"
+        );
+        // and none of it re-solved anything
+        assert_eq!(service.trainer().solve_count(), solves, "{estimator:?}: serving re-solved");
+    }
+}
+
+#[test]
+fn tiled_predict_at_is_bitwise_equal_to_dense_on_arbitrary_queries() {
+    let ds = dataset();
+    let hp = Hyperparams { ell: vec![0.9, 1.2, 0.7, 1.1], sigf: 1.2, sigma: 0.35 };
+    let mut dense = DenseOperator::new(&ds, 4, 16);
+    dense.set_hp(&hp);
+    let mut rng = Rng::new(3);
+    let n = dense.n();
+    let (m, s) = (8, 3);
+    let omega0 = Mat::from_fn(dense.d(), m, |_, _| rng.gaussian());
+    let wts = Mat::from_fn(2 * m, s, |_, _| rng.gaussian());
+    let zhat = Mat::from_fn(n, s, |_, _| rng.gaussian());
+    let vy = rng.gaussian_vec(n);
+    // query batches of several shapes, none of them the stored test split
+    for rows in [1, 7, 64, 333] {
+        let xq = Mat::from_fn(rows, dense.d(), |_, _| rng.gaussian());
+        let (dm, dsamp) = dense.predict_at(&xq, &vy, &zhat, &omega0, &wts).unwrap();
+        for (tile, threads) in [(1, 1), (32, 2), (256, 4), (500, 3)] {
+            let mut tiled =
+                TiledOperator::with_options(&ds, 4, 16, TiledOptions { tile, threads });
+            tiled.set_hp(&hp);
+            let (tm, tsamp) = tiled.predict_at(&xq, &vy, &zhat, &omega0, &wts).unwrap();
+            assert!(
+                bits_eq(&tm, &dm),
+                "rows={rows} tile={tile} threads={threads}: mean bits differ"
+            );
+            assert!(
+                bits_eq(&tsamp.data, &dsamp.data),
+                "rows={rows} tile={tile} threads={threads}: sample bits differ"
+            );
+        }
+    }
+}
+
+#[test]
+fn threaded_service_is_bitwise_equal_to_serial() {
+    // identical trainers (deterministic from the seed) wrapped in services
+    // with different thread counts and batch sizes must serve identical
+    // bits — the order-canonical reduction contract
+    let ds = dataset();
+    let mut rng = Rng::new(9);
+    let xq = Mat::from_fn(301, ds.spec.d, |_, _| rng.gaussian());
+    let serve = |threads: usize, batch: usize| -> (Vec<f64>, Vec<f64>) {
+        let mut t = trainer(&ds, EstimatorKind::Pathwise, 21);
+        t.run(3).unwrap();
+        let mut service = PredictionService::new(t, ServeOptions { batch, threads });
+        service.predict(&xq).unwrap()
+    };
+    let (mean1, var1) = serve(1, 32);
+    for threads in [2, 3, 8] {
+        let (m, v) = serve(threads, 32);
+        assert!(bits_eq(&m, &mean1), "threads={threads}: mean bits differ");
+        assert!(bits_eq(&v, &var1), "threads={threads}: variance bits differ");
+    }
+    // batch size is equally irrelevant to the bits (per-row independence)
+    for batch in [1, 50, 1024] {
+        let (m, v) = serve(4, batch);
+        assert!(bits_eq(&m, &mean1), "batch={batch}: mean bits differ");
+        assert!(bits_eq(&v, &var1), "batch={batch}: variance bits differ");
+    }
+}
+
+#[test]
+fn artifact_refresh_after_extend_matches_a_from_scratch_rebuild() {
+    // two identical trainers follow the same train -> extend schedule; one
+    // serves through the service (lazy artifact refresh on first query),
+    // the other rebuilds its artifact directly — the served values must be
+    // bitwise identical, and the service must pay exactly one warm solve
+    let ds = dataset();
+    let (base, chunks) = ds.replay_chunks(2);
+    let (x_new, y_new) = &chunks[0];
+    let mut rng = Rng::new(31);
+    let xq = Mat::from_fn(50, ds.spec.d, |_, _| rng.gaussian());
+
+    let mut a = trainer(&base, EstimatorKind::Pathwise, 5);
+    a.run(4).unwrap();
+    a.extend_data(x_new, y_new).unwrap();
+    let solves_before = a.solve_count();
+    let mut service = PredictionService::new(a, ServeOptions { batch: 16, threads: 2 });
+    let (mean_service, var_service) = service.predict(&xq).unwrap();
+    assert_eq!(
+        service.trainer().solve_count(),
+        solves_before + 1,
+        "lazy refresh must cost exactly one solve"
+    );
+
+    let mut b = trainer(&base, EstimatorKind::Pathwise, 5);
+    b.run(4).unwrap();
+    b.extend_data(x_new, y_new).unwrap();
+    let art = b.posterior_artifact().unwrap();
+    assert_eq!(art.n, base.spec.n + x_new.rows);
+    let (mean_direct, samples) = b
+        .operator()
+        .predict_at(&xq, &art.vy, &art.zhat, &art.omega0, &art.wts)
+        .unwrap();
+    let var_direct = pathwise_variances(&samples, art.noise_var);
+
+    assert!(bits_eq(&mean_service, &mean_direct), "refreshed mean drifted");
+    assert!(bits_eq(&var_service, &var_direct), "refreshed variance drifted");
+
+    // the refresh really was warm: the warm-carried store should need
+    // fewer epochs than a cold artifact build on the same grown data
+    let mut cold = trainer(
+        &ds.with_train(
+            {
+                let mut x = base.x_train.clone();
+                x.append_rows(x_new);
+                x
+            },
+            {
+                let mut y = base.y_train.clone();
+                y.extend_from_slice(y_new);
+                y
+            },
+        ),
+        EstimatorKind::Pathwise,
+        5,
+    );
+    // same hyperparameters as the warm trainer so the comparison is fair
+    cold.set_init_theta(&service.trainer().theta());
+    let warm_epochs = {
+        // rebuild b's artifact from scratch to read its refresh cost:
+        // instead, measure through telemetry-free epoch deltas on a third
+        // identical warm trainer
+        let mut c = trainer(&base, EstimatorKind::Pathwise, 5);
+        c.run(4).unwrap();
+        c.extend_data(x_new, y_new).unwrap();
+        let before = c.total_spent_epochs();
+        let _ = c.posterior_artifact().unwrap();
+        c.total_spent_epochs() - before
+    };
+    let cold_epochs = {
+        let before = cold.total_spent_epochs();
+        let _ = cold.posterior_artifact().unwrap();
+        cold.total_spent_epochs() - before
+    };
+    assert!(
+        warm_epochs < cold_epochs,
+        "warm refresh ({warm_epochs} epochs) should beat a cold build ({cold_epochs})"
+    );
+}
+
+#[test]
+fn service_queue_accumulates_and_flushes_in_order() {
+    let ds = dataset();
+    let mut t = trainer(&ds, EstimatorKind::Pathwise, 11);
+    t.run(3).unwrap();
+    let mut rng = Rng::new(13);
+    let q1 = Mat::from_fn(10, ds.spec.d, |_, _| rng.gaussian());
+    let q2 = Mat::from_fn(23, ds.spec.d, |_, _| rng.gaussian());
+    let mut all = q1.clone();
+    all.append_rows(&q2);
+
+    let mut service = PredictionService::new(t, ServeOptions { batch: 8, threads: 1 });
+    service.enqueue(&q1).unwrap();
+    service.enqueue(&q2).unwrap();
+    assert_eq!(service.pending_rows(), 33);
+    let (mean_flush, var_flush) = service.flush().unwrap();
+    assert_eq!(service.pending_rows(), 0);
+    let (mean_once, var_once) = service.predict(&all).unwrap();
+    assert!(bits_eq(&mean_flush, &mean_once));
+    assert!(bits_eq(&var_flush, &var_once));
+    // dimension mismatches are rejected
+    assert!(service.enqueue(&Mat::zeros(2, ds.spec.d + 1)).is_err());
+    assert!(service.predict(&Mat::zeros(2, ds.spec.d + 1)).is_err());
+    // empty queries are fine
+    let (m, v) = service.predict(&Mat::zeros(0, ds.spec.d)).unwrap();
+    assert!(m.is_empty() && v.is_empty());
+    let st = service.stats();
+    assert_eq!(st.rows_served, 66);
+    assert!(st.batches >= 10); // ceil(33/8) twice
+}
