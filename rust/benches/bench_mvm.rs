@@ -2,16 +2,24 @@
 //! * pure-Rust section (always runs): multi-threaded matrix-free
 //!   `TiledOperator` vs single-threaded tiled vs the materialised
 //!   `DenseOperator`, up to n = 4096 where dense storage is at its limit.
+//! * panel-vs-reference section: the Gram-trick panel engine against the
+//!   retained scalar `kval` path on the same shapes — the ablation behind
+//!   the panel engine's multi-× claim (acceptance: >= 2x at n >= 4096 on
+//!   both backends).
 //! * XLA section (needs `make artifacts`): Pallas kmv_full vs the pure-jnp
 //!   reference artifact.
+//!
+//! Flags (after `cargo bench --bench bench_mvm --`): `--json PATH` emits
+//! machine-readable records (see `igp::util::bench`), `--quick` restricts
+//! to the tiny `test` config (CI smoke).
 
 mod common;
 
 use igp::data;
-use igp::kernels::Hyperparams;
+use igp::kernels::{self, Hyperparams, KernelFamily};
 use igp::linalg::Mat;
 use igp::operators::{DenseOperator, KernelOperator, TiledOperator, TiledOptions};
-use igp::util::bench::Bencher;
+use igp::util::bench::{quick_mode, Bencher, JsonReport};
 use igp::util::rng::Rng;
 
 /// Kernel-eval + matmul flop estimate for one H@V.
@@ -20,9 +28,17 @@ fn hv_flops(n: usize, d: usize, k: usize) -> f64 {
     n * n * (3.0 * d as f64 + 6.0 + 2.0 * k as f64)
 }
 
-fn rust_backends() {
+fn configs(quick: bool) -> &'static [&'static str] {
+    if quick {
+        &["test"]
+    } else {
+        &["test", "pol", "protein", "houseelectric"]
+    }
+}
+
+fn rust_backends(json: &mut Option<JsonReport>, quick: bool) {
     let b = Bencher::default();
-    for config in ["test", "pol", "protein", "houseelectric"] {
+    for &config in configs(quick) {
         let ds = data::generate(&data::spec(config).unwrap());
         let (s, m) = (8, 64);
         let hp = Hyperparams { ell: vec![1.0; ds.spec.d], sigf: 1.1, sigma: 0.3 };
@@ -31,35 +47,122 @@ fn rust_backends() {
         tiled.set_hp(&hp);
         let mut rng = Rng::new(0);
         let v = Mat::from_fn(tiled.n(), tiled.k_width(), |_, _| rng.gaussian());
-        let flops = hv_flops(tiled.n(), tiled.d(), tiled.k_width());
+        let (n, d) = (tiled.n(), tiled.d());
+        let flops = hv_flops(n, d, tiled.k_width());
 
-        b.run(
+        let r = b.run(
             &format!("{config}/hv tiled t{} (rust)", tiled.threads()),
             Some(flops),
             || {
                 std::hint::black_box(tiled.hv(&v));
             },
         );
+        if let Some(j) = json.as_mut() {
+            j.push("hv", "tiled", n, d, tiled.threads(), &r);
+        }
 
         let mut tiled1 =
             TiledOperator::with_options(&ds, s, m, TiledOptions { tile: 256, threads: 1 });
         tiled1.set_hp(&hp);
-        b.run(&format!("{config}/hv tiled t1 (rust)"), Some(flops), || {
+        let r = b.run(&format!("{config}/hv tiled t1 (rust)"), Some(flops), || {
             std::hint::black_box(tiled1.hv(&v));
         });
+        if let Some(j) = json.as_mut() {
+            j.push("hv", "tiled", n, d, 1, &r);
+        }
 
         let mut dense = DenseOperator::new(&ds, s, m);
         dense.set_hp(&hp);
-        b.run(&format!("{config}/hv dense (rust)"), Some(flops), || {
+        let r = b.run(&format!("{config}/hv dense (rust)"), Some(flops), || {
             std::hint::black_box(dense.hv(&v));
         });
+        if let Some(j) = json.as_mut() {
+            j.push("hv", "dense", n, d, 1, &r);
+        }
     }
 }
 
-fn xla_backends() {
+/// H @ V through the retained scalar `kval` path — the pre-panel per-pair
+/// math, kept in `igp::kernels` as the reference.  This is what the panel
+/// engine is benchmarked against.
+fn scalar_kval_hv(x: &Mat, hp: &Hyperparams, family: KernelFamily, v: &Mat) -> Mat {
+    let (n, k) = (x.rows, v.cols);
+    let noise_var = hp.noise_var();
+    let mut out = Mat::zeros(n, k);
+    for i in 0..n {
+        let xi = x.row(i);
+        let orow = &mut out.data[i * k..(i + 1) * k];
+        for j in 0..n {
+            let mut kij = kernels::kval(xi, x.row(j), hp, family);
+            if i == j {
+                kij += noise_var;
+            }
+            let vrow = v.row(j);
+            for q in 0..k {
+                orow[q] += kij * vrow[q];
+            }
+        }
+    }
+    out
+}
+
+/// Panel engine vs retained scalar path, per backend:
+/// * tiled: `hv` (panel, t=1 for apples-to-apples, plus t=auto) vs a
+///   single-threaded scalar-kval sweep of the same product;
+/// * dense: `set_hp + hv` (panel materialise) vs scalar `h_matrix` +
+///   matmul — the dense backend pays its kernel evaluations at
+///   materialisation time, so that is where the panel win shows.
+fn panel_vs_reference(json: &mut Option<JsonReport>, quick: bool) {
+    let b = Bencher::default();
+    for &config in configs(quick) {
+        let ds = data::generate(&data::spec(config).unwrap());
+        let (s, m) = (8, 64);
+        let hp = Hyperparams { ell: vec![1.0; ds.spec.d], sigf: 1.1, sigma: 0.3 };
+        let mut rng = Rng::new(1);
+
+        let mut tiled1 =
+            TiledOperator::with_options(&ds, s, m, TiledOptions { tile: 256, threads: 1 });
+        tiled1.set_hp(&hp);
+        let (n, d) = (tiled1.n(), tiled1.d());
+        let v = Mat::from_fn(n, tiled1.k_width(), |_, _| rng.gaussian());
+        let flops = hv_flops(n, d, tiled1.k_width());
+
+        let r = b.run(&format!("{config}/hv panel tiled t1"), Some(flops), || {
+            std::hint::black_box(tiled1.hv(&v));
+        });
+        if let Some(j) = json.as_mut() {
+            j.push("hv_panel", "tiled", n, d, 1, &r);
+        }
+        let r = b.run(&format!("{config}/hv kval-ref tiled t1"), Some(flops), || {
+            std::hint::black_box(scalar_kval_hv(&ds.x_train, &hp, ds.spec.family, &v));
+        });
+        if let Some(j) = json.as_mut() {
+            j.push("hv_kval_ref", "tiled", n, d, 1, &r);
+        }
+
+        let mut dense = DenseOperator::new(&ds, s, m);
+        let r = b.run(&format!("{config}/materialise+hv panel dense"), Some(flops), || {
+            dense.set_hp(&hp); // panel H rebuild: the kernel-eval cost
+            std::hint::black_box(dense.hv(&v));
+        });
+        if let Some(j) = json.as_mut() {
+            j.push("materialise_hv_panel", "dense", n, d, 1, &r);
+        }
+        let r = b.run(&format!("{config}/materialise+hv kval-ref dense"), Some(flops), || {
+            let h = kernels::h_matrix(&ds.x_train, &hp, ds.spec.family);
+            std::hint::black_box(h.matmul(&v));
+        });
+        if let Some(j) = json.as_mut() {
+            j.push("materialise_hv_kval_ref", "dense", n, d, 1, &r);
+        }
+    }
+}
+
+fn xla_backends(json: &mut Option<JsonReport>, quick: bool) {
     common::skip_or(|| {
         let b = Bencher::default();
-        for config in ["test", "pol", "protein"] {
+        let configs: &[&str] = if quick { &["test"] } else { &["test", "pol", "protein"] };
+        for &config in configs {
             if !std::path::Path::new(&format!("artifacts/{config}/meta.txt")).exists() {
                 continue;
             }
@@ -74,17 +177,29 @@ fn xla_backends() {
             let v = Mat::from_fn(op.n(), op.k_width(), |_, _| rng.gaussian());
             let flops = hv_flops(op.n(), op.d(), op.k_width());
 
-            b.run(&format!("{config}/hv pallas (xla)"), Some(flops), || {
+            let r = b.run(&format!("{config}/hv pallas (xla)"), Some(flops), || {
                 std::hint::black_box(op.hv(&v));
             });
-            b.run(&format!("{config}/hv jnp-ref (xla)"), Some(flops), || {
+            if let Some(j) = json.as_mut() {
+                j.push("hv", "xla-pallas", op.n(), op.d(), 0, &r);
+            }
+            let r = b.run(&format!("{config}/hv jnp-ref (xla)"), Some(flops), || {
                 std::hint::black_box(op.hv_ref(&v));
             });
+            if let Some(j) = json.as_mut() {
+                j.push("hv", "xla-jnp", op.n(), op.d(), 0, &r);
+            }
         }
     });
 }
 
 fn main() {
-    rust_backends();
-    xla_backends();
+    let quick = quick_mode();
+    let mut json = JsonReport::from_args();
+    rust_backends(&mut json, quick);
+    panel_vs_reference(&mut json, quick);
+    xla_backends(&mut json, quick);
+    if let Some(j) = &json {
+        j.write().expect("bench json write");
+    }
 }

@@ -17,7 +17,7 @@ use igp::linalg::Mat;
 use igp::operators::{BackendKind, TiledOptions};
 use igp::serve::{PredictionService, ServeOptions};
 use igp::solvers::SolverKind;
-use igp::util::bench::Bencher;
+use igp::util::bench::{quick_mode, Bencher, JsonReport};
 
 fn trained(ds: &data::Dataset, backend: BackendKind, threads: usize) -> Trainer {
     let op = igp::operators::make_cpu_backend(
@@ -48,9 +48,11 @@ fn queries(ds: &data::Dataset, rows: usize) -> Mat {
 }
 
 fn main() {
+    let quick = quick_mode();
+    let mut json = JsonReport::from_args();
     let b = Bencher::default();
-    let ds = data::generate(&data::spec("protein").unwrap());
-    let xq = queries(&ds, 2048);
+    let ds = data::generate(&data::spec(if quick { "test" } else { "protein" }).unwrap());
+    let xq = queries(&ds, if quick { 256 } else { 2048 });
     let rows = xq.rows as f64;
 
     // dense vs tiled, serial vs threaded (batch fixed at 64)
@@ -71,6 +73,9 @@ fn main() {
                 assert_eq!(mean.len(), xq.rows);
             });
             println!("   -> {label}: {:.0} rows/s", rows / r.median());
+            if let Some(j) = json.as_mut() {
+                j.push("serve", backend.name(), ds.spec.n, ds.spec.d, threads, &r);
+            }
         }
     }
 
@@ -85,6 +90,13 @@ fn main() {
             assert_eq!(mean.len(), xq.rows);
         });
         println!("   -> {label}: {:.0} rows/s", rows / r.median());
+        if let Some(j) = json.as_mut() {
+            j.push(&format!("serve-batch{batch}"), "dense", ds.spec.n, ds.spec.d, 0, &r);
+        }
         trainer = Some(service.into_trainer());
+    }
+
+    if let Some(j) = &json {
+        j.write().expect("bench json write");
     }
 }

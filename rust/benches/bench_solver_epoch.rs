@@ -3,6 +3,9 @@
 //!
 //! Pure-Rust section (always runs) compares the dense and tiled backends;
 //! the XLA section needs `make artifacts`.
+//!
+//! Flags (after `--`): `--json PATH` emits machine-readable records,
+//! `--quick` restricts to the tiny `test` config (CI smoke).
 
 mod common;
 
@@ -12,7 +15,7 @@ use igp::kernels::Hyperparams;
 use igp::linalg::Mat;
 use igp::operators::{DenseOperator, KernelOperator, TiledOperator};
 use igp::solvers::{make_solver, SolveOptions, SolverKind};
-use igp::util::bench::Bencher;
+use igp::util::bench::{quick_mode, Bencher, JsonReport};
 use igp::util::rng::Rng;
 
 fn epoch_opts(block: usize) -> SolveOptions {
@@ -25,9 +28,10 @@ fn epoch_opts(block: usize) -> SolveOptions {
     }
 }
 
-fn rust_backends() {
+fn rust_backends(json: &mut Option<JsonReport>, quick: bool) {
     let b = Bencher::default();
-    for config in ["test", "protein"] {
+    let configs: &[&str] = if quick { &["test"] } else { &["test", "protein"] };
+    for &config in configs {
         let ds = data::generate(&data::spec(config).unwrap());
         let hp = Hyperparams { ell: vec![1.0; ds.spec.d], sigf: 1.0, sigma: 0.3 };
         let block = (ds.spec.n / 16).clamp(32, 256);
@@ -40,11 +44,13 @@ fn rust_backends() {
         let mut rng = Rng::new(1);
         let probes = ProbeSet::sample(EstimatorKind::Pathwise, &tiled, &mut rng);
         let targets = probes.targets(&tiled, &ds.y_train);
+        let (n, d) = (tiled.n(), tiled.d());
 
         for kind in [SolverKind::Cg, SolverKind::Ap, SolverKind::Sgd] {
+            let op_name = format!("{}-epoch", kind.name());
             let mut solver = make_solver(kind);
             let opts = epoch_opts(block);
-            b.run(
+            let r = b.run(
                 &format!("{config}/{}-epoch tiled t{} (rust)", kind.name(), tiled.threads()),
                 None,
                 || {
@@ -52,11 +58,17 @@ fn rust_backends() {
                     std::hint::black_box(solver.solve(&tiled, &targets, &mut v, &opts));
                 },
             );
+            if let Some(j) = json.as_mut() {
+                j.push(&op_name, "tiled", n, d, tiled.threads(), &r);
+            }
             let mut solver = make_solver(kind);
-            b.run(&format!("{config}/{}-epoch dense (rust)", kind.name()), None, || {
+            let r = b.run(&format!("{config}/{}-epoch dense (rust)", kind.name()), None, || {
                 let mut v = Mat::zeros(dense.n(), dense.k_width());
                 std::hint::black_box(solver.solve(&dense, &targets, &mut v, &opts));
             });
+            if let Some(j) = json.as_mut() {
+                j.push(&op_name, "dense", n, d, 1, &r);
+            }
         }
     }
 }
@@ -66,10 +78,11 @@ fn rust_backends() {
 /// solver-recurrence layer (`SolveOptions::threads`).  The two rows per
 /// solver isolate what the recurrence layer buys on top of the operator
 /// products; outputs are bitwise-identical by construction.
-fn recurrence_threads() {
+fn recurrence_threads(json: &mut Option<JsonReport>, quick: bool) {
     let b = Bencher::default();
     let auto = igp::solvers::recurrence::resolve_threads(0);
-    for config in ["test", "protein"] {
+    let configs: &[&str] = if quick { &["test"] } else { &["test", "protein"] };
+    for &config in configs {
         let ds = data::generate(&data::spec(config).unwrap());
         let hp = Hyperparams { ell: vec![1.0; ds.spec.d], sigf: 1.0, sigma: 0.3 };
         let block = (ds.spec.n / 16).clamp(32, 256);
@@ -82,27 +95,35 @@ fn recurrence_threads() {
             for (label, threads) in [("serial t1", 1usize), ("threaded auto", 0)] {
                 let mut solver = make_solver(kind);
                 let opts = SolveOptions { threads, ..epoch_opts(block) };
-                b.run(
-                    &format!(
-                        "{config}/{}-epoch recurrence {label} (t={})",
-                        kind.name(),
-                        if threads == 0 { auto } else { threads }
-                    ),
+                let t = if threads == 0 { auto } else { threads };
+                let r = b.run(
+                    &format!("{config}/{}-epoch recurrence {label} (t={t})", kind.name()),
                     None,
                     || {
                         let mut v = Mat::zeros(dense.n(), dense.k_width());
                         std::hint::black_box(solver.solve(&dense, &targets, &mut v, &opts));
                     },
                 );
+                if let Some(j) = json.as_mut() {
+                    j.push(
+                        &format!("{}-epoch-recurrence", kind.name()),
+                        "dense",
+                        dense.n(),
+                        dense.d(),
+                        t,
+                        &r,
+                    );
+                }
             }
         }
     }
 }
 
-fn xla_backends() {
+fn xla_backends(quick: bool) {
     common::skip_or(|| {
         let b = Bencher::default();
-        for config in ["test", "pol"] {
+        let configs: &[&str] = if quick { &["test"] } else { &["test", "pol"] };
+        for &config in configs {
             let (mut op, ds) = common::load(config);
             op.set_hp(&Hyperparams { ell: vec![1.0; op.d()], sigf: 1.0, sigma: 0.3 });
             let mut rng = Rng::new(1);
@@ -122,7 +143,12 @@ fn xla_backends() {
 }
 
 fn main() {
-    rust_backends();
-    recurrence_threads();
-    xla_backends();
+    let quick = quick_mode();
+    let mut json = JsonReport::from_args();
+    rust_backends(&mut json, quick);
+    recurrence_threads(&mut json, quick);
+    xla_backends(quick);
+    if let Some(j) = &json {
+        j.write().expect("bench json write");
+    }
 }

@@ -1,9 +1,21 @@
 //! Rust mirror of the kernel-family math in `python/compile/kernels/common.py`.
 //!
-//! Used by the synthetic data generator, the dense test operator, AP block
-//! factors and the pivoted-Cholesky preconditioner.  The numerics are kept
-//! bit-comparable with the JAX side (same formulas, f64) and cross-checked
-//! in the integration tests.
+//! Two evaluation paths live here:
+//!
+//! * the **scalar reference path** (`kval` / `kernel_matrix` / `h_matrix` /
+//!   `kernel_row`): one pair at a time, `(a − b)/ell` differences — used by
+//!   the synthetic data generator, the exact-GP oracle and as the
+//!   independent reference in tolerance tests;
+//! * the **panel engine** ([`panel`]): blocked, norm-cached Gram-trick
+//!   evaluation of whole tiles — the production path every operator
+//!   backend, the Woodbury preconditioner and AP's block factors route
+//!   through.  Values differ from the scalar path by Gram-trick rounding
+//!   (~1e-14 on standardised data); see the `panel` module docs.
+//!
+//! The numerics are kept bit-comparable with the JAX side (same formulas,
+//! f64) and cross-checked in the integration tests.
+
+pub mod panel;
 
 use crate::linalg::Mat;
 

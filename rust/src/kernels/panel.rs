@@ -1,0 +1,445 @@
+//! The kernel panel engine: blocked, norm-cached Gram-trick evaluation of
+//! whole kernel tiles — the single hot path behind every O(n²d) kernel
+//! product in the crate.
+//!
+//! The scalar reference path ([`super::kval`]) re-applies the lengthscale
+//! and walks the d-loop once *per pair*: O(n²·3d) flops, no vectorisation,
+//! per-row work recomputed n times.  The panel engine instead
+//!
+//! 1. caches the lengthscale-scaled rows `Xs = X / ell` and their squared
+//!    norms once per hyperparameter setting ([`ScaledX`], keyed on the
+//!    lengthscale bits + n, invalidated on hyperparameter change and grown
+//!    in place by [`ScaledX::extend`] for online data arrival);
+//! 2. computes tile cross-products `Xi · Xjᵀ` with a register-blocked,
+//!    4-wide unrolled micro-kernel ([`crate::linalg::micro`], shared with
+//!    `Mat::matmul`'s row update);
+//! 3. forms squared scaled distances as `‖xi‖² + ‖xj‖² − 2⟨xi, xj⟩`,
+//!    clamped at 0 (the Gram trick can go fractionally negative for
+//!    duplicate/near-duplicate rows by cancellation);
+//! 4. applies the kernel profile (RBF/Matérn exponentials) over the whole
+//!    panel.
+//!
+//! Determinism contract: every panel entry is a *pure function of its
+//! global (i, j) pair* — each cross-product accumulates over the feature
+//! dimension in plain ascending order regardless of tile boundaries,
+//! unroll lane or worker — so panel evaluation is bitwise-identical for
+//! every tile size and thread count.  Both pure-Rust operator backends
+//! call the same fill functions, which is what upgrades the tiled==dense
+//! `hv` parity from tolerance-level to *bitwise* by construction.
+//!
+//! Values legitimately differ from the scalar path by Gram-trick rounding
+//! (`(a/ell − b/ell)` vs `(a − b)/ell`, plus the cancellation in step 3):
+//! on standardised data the per-entry difference is O(ε·‖x‖²), about
+//! 1e-14.  `kval` is kept as the independent reference for tolerance
+//! tests; the diagonal is exact (the cached norm and the cross-product
+//! share [`micro::dot`]'s association, so `sq_ii` is exactly 0 and
+//! `k_ii = sigf²` bit-for-bit).
+
+use std::ops::Range;
+
+use crate::linalg::{micro, Mat};
+
+use super::{Hyperparams, KernelFamily};
+
+/// Column width of one materialisation panel: keeps the streamed slice of
+/// scaled rows (256·d f64) resident in L1/L2 while a block of output rows
+/// reuses it.  Purely a performance knob — entry values are
+/// position-independent, so the chunking never changes bits.
+pub const PANEL_COLS: usize = 256;
+
+/// Lengthscale-scaled inputs with cached squared row norms — the
+/// per-hyperparameter state of the panel engine.
+///
+/// Keyed on the exact f64 bits of the lengthscales plus the row count:
+/// [`ScaledX::refresh`] rebuilds only when either changes (a
+/// sigf/sigma-only hyperparameter step keeps the cache), and
+/// [`ScaledX::extend`] grows it in place for online data arrival with the
+/// appended rows scaled exactly as a fresh build would scale them, so the
+/// grown cache is bitwise-identical to [`ScaledX::new`] on the
+/// concatenated inputs.
+#[derive(Clone, Debug)]
+pub struct ScaledX {
+    key: Vec<u64>,
+    xs: Mat,
+    sq: Vec<f64>,
+}
+
+impl ScaledX {
+    pub fn new(x: &Mat, ell: &[f64]) -> Self {
+        assert_eq!(x.cols, ell.len(), "ScaledX: d = {} but {} lengthscales", x.cols, ell.len());
+        let mut sx = ScaledX {
+            key: ell.iter().map(|e| e.to_bits()).collect(),
+            xs: Mat::zeros(0, x.cols),
+            sq: Vec::with_capacity(x.rows),
+        };
+        sx.append(x, ell);
+        sx
+    }
+
+    pub fn n(&self) -> usize {
+        self.xs.rows
+    }
+
+    pub fn d(&self) -> usize {
+        self.xs.cols
+    }
+
+    /// Scaled row `x_i / ell` (elementwise division — the same expression
+    /// the RFF feature map uses, so routing RFF row fills through the
+    /// cache keeps their bits unchanged).
+    #[inline]
+    pub fn row(&self, i: usize) -> &[f64] {
+        self.xs.row(i)
+    }
+
+    /// Cached squared norm `‖x_i / ell‖²`.
+    #[inline]
+    pub fn sq(&self, i: usize) -> f64 {
+        self.sq[i]
+    }
+
+    /// True when this cache is valid for (`ell`, `n`): the lengthscale
+    /// bits and row count both match.
+    pub fn matches(&self, ell: &[f64], n: usize) -> bool {
+        self.xs.rows == n
+            && self.key.len() == ell.len()
+            && self.key.iter().zip(ell).all(|(k, e)| *k == e.to_bits())
+    }
+
+    /// Revalidate against (`x`, `ell`): rebuild on a key mismatch, no-op
+    /// (and `false`) when the cache is already valid.
+    pub fn refresh(&mut self, x: &Mat, ell: &[f64]) -> bool {
+        if self.matches(ell, x.rows) {
+            return false;
+        }
+        *self = ScaledX::new(x, ell);
+        true
+    }
+
+    /// Grow in place for newly arrived rows (online data arrival).  The
+    /// lengthscales must match the cache key — the coordinator extends at
+    /// unchanged hyperparameters.
+    pub fn extend(&mut self, x_new: &Mat, ell: &[f64]) {
+        assert!(
+            self.matches(ell, self.xs.rows),
+            "ScaledX::extend: lengthscales changed since the cache was built"
+        );
+        self.append(x_new, ell);
+    }
+
+    /// Row subset (AP blocks, k_cols/k_rows batches, pivoted-Cholesky
+    /// pivots): rows and norms are *copied*, never recomputed, so gathered
+    /// entries keep exactly the bits of the full-set entries.
+    pub fn gather(&self, idx: &[usize]) -> ScaledX {
+        ScaledX {
+            key: self.key.clone(),
+            xs: self.xs.gather_rows(idx),
+            sq: idx.iter().map(|&i| self.sq[i]).collect(),
+        }
+    }
+
+    fn append(&mut self, x: &Mat, ell: &[f64]) {
+        assert_eq!(x.cols, self.xs.cols);
+        let d = x.cols;
+        self.xs.data.reserve(x.rows * d);
+        for i in 0..x.rows {
+            let start = self.xs.data.len();
+            for (r, &v) in x.row(i).iter().enumerate() {
+                self.xs.data.push(v / ell[r]);
+            }
+            self.xs.rows += 1;
+            let row = &self.xs.data[start..start + d];
+            self.sq.push(micro::dot(row, row));
+        }
+    }
+}
+
+/// One panel row: `out[c] = sf2 · g(clamp(sq_i + sq_{j0+c} − 2⟨xs_i,
+/// xs_{j0+c}⟩, 0))` for `c in 0..out.len()`.  First pass fills the clamped
+/// squared distances through the 4-wide cross-product micro-kernel, second
+/// pass applies the kernel profile over the whole panel row.
+pub fn fill_row(
+    a: &ScaledX,
+    i: usize,
+    b: &ScaledX,
+    j0: usize,
+    sf2: f64,
+    family: KernelFamily,
+    out: &mut [f64],
+) {
+    debug_assert_eq!(a.d(), b.d());
+    debug_assert!(j0 + out.len() <= b.n());
+    let ai = a.row(i);
+    let sqa = a.sq[i];
+    let jn = out.len();
+    let mut c = 0;
+    while c + 4 <= jn {
+        let j = j0 + c;
+        let (s0, s1, s2, s3) =
+            micro::dot4(ai, b.row(j), b.row(j + 1), b.row(j + 2), b.row(j + 3));
+        out[c] = (sqa + b.sq[j] - 2.0 * s0).max(0.0);
+        out[c + 1] = (sqa + b.sq[j + 1] - 2.0 * s1).max(0.0);
+        out[c + 2] = (sqa + b.sq[j + 2] - 2.0 * s2).max(0.0);
+        out[c + 3] = (sqa + b.sq[j + 3] - 2.0 * s3).max(0.0);
+        c += 4;
+    }
+    while c < jn {
+        let j = j0 + c;
+        let s = micro::dot(ai, b.row(j));
+        out[c] = (sqa + b.sq[j] - 2.0 * s).max(0.0);
+        c += 1;
+    }
+    for v in out.iter_mut() {
+        *v = sf2 * family.unit_cov(*v);
+    }
+}
+
+/// Fill a row-major `[i1−i0, j1−j0]` panel (stride `j1−j0`) of
+/// K(A[i0..i1], B[j0..j1]).
+pub fn fill_panel(
+    a: &ScaledX,
+    i0: usize,
+    i1: usize,
+    b: &ScaledX,
+    j0: usize,
+    j1: usize,
+    sf2: f64,
+    family: KernelFamily,
+    out: &mut [f64],
+) {
+    let w = j1 - j0;
+    debug_assert!(out.len() >= (i1 - i0) * w);
+    for (r, i) in (i0..i1).enumerate() {
+        fill_row(a, i, b, j0, sf2, family, &mut out[r * w..(r + 1) * w]);
+    }
+}
+
+/// Accumulate `out_rows += panel · V[j0..j0+w]` against all k RHS columns
+/// with `Mat::matmul`'s exact k-major association — ascending j, skipping
+/// exact zeros, [`micro::axpy`] inner update.  `panel` is row-major
+/// `[rows, w]`; `out_rows` is row-major `[rows, v.cols]`.
+pub fn apply_panel(
+    panel: &[f64],
+    rows: usize,
+    w: usize,
+    j0: usize,
+    v: &Mat,
+    out_rows: &mut [f64],
+) {
+    let k = v.cols;
+    debug_assert!(panel.len() >= rows * w);
+    debug_assert!(out_rows.len() >= rows * k);
+    debug_assert!(j0 + w <= v.rows);
+    for r in 0..rows {
+        let prow = &panel[r * w..(r + 1) * w];
+        let orow = &mut out_rows[r * k..(r + 1) * k];
+        for (jj, &a) in prow.iter().enumerate() {
+            if a == 0.0 {
+                continue;
+            }
+            micro::axpy(orow, a, v.row(j0 + jj));
+        }
+    }
+}
+
+/// Full cross-covariance K(A, B) `[a.n, b.n]` — the panel-engine
+/// counterpart of [`super::kernel_matrix`].  Columns are filled in
+/// [`PANEL_COLS`] chunks so a slice of B's scaled rows stays cache-hot
+/// across all of A's rows; chunking never changes bits (entry values are
+/// position-independent).
+pub fn cross_matrix(a: &ScaledX, b: &ScaledX, sf2: f64, family: KernelFamily) -> Mat {
+    let (an, bn) = (a.n(), b.n());
+    let mut out = Mat::zeros(an, bn);
+    let mut j0 = 0;
+    while j0 < bn {
+        let j1 = (j0 + PANEL_COLS).min(bn);
+        for i in 0..an {
+            fill_row(a, i, b, j0, sf2, family, &mut out.data[i * bn + j0..i * bn + j1]);
+        }
+        j0 = j1;
+    }
+    out
+}
+
+/// Cross-covariance between two row ranges of the *same* point set —
+/// what the dense backend's online rank-extension needs for its
+/// cross/corner blocks.
+pub fn cross_block(
+    sx: &ScaledX,
+    rows: Range<usize>,
+    cols: Range<usize>,
+    sf2: f64,
+    family: KernelFamily,
+) -> Mat {
+    let w = cols.len();
+    let mut out = Mat::zeros(rows.len(), w);
+    for (r, i) in rows.enumerate() {
+        fill_row(sx, i, sx, cols.start, sf2, family, out.row_mut(r));
+    }
+    out
+}
+
+/// Regularised kernel matrix H = K(X, X) + sigma² I via the panel engine
+/// — the counterpart of [`super::h_matrix`] for the dense backend's
+/// materialisation.
+pub fn h_panel(sx: &ScaledX, hp: &Hyperparams, family: KernelFamily) -> Mat {
+    let mut h = cross_matrix(sx, sx, hp.sigf * hp.sigf, family);
+    h.add_diag(hp.noise_var());
+    h
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::kernels::{self, Hyperparams, KernelFamily};
+    use crate::util::rng::Rng;
+
+    fn hp(d: usize, seed: u64) -> Hyperparams {
+        let mut rng = Rng::new(seed);
+        Hyperparams {
+            ell: (0..d).map(|_| rng.uniform_in(0.4, 2.0)).collect(),
+            sigf: rng.uniform_in(0.5, 1.5),
+            sigma: rng.uniform_in(0.1, 0.9),
+        }
+    }
+
+    #[test]
+    fn cross_matrix_matches_kval_reference() {
+        let mut rng = Rng::new(0);
+        for family in [
+            KernelFamily::Matern12,
+            KernelFamily::Matern32,
+            KernelFamily::Matern52,
+            KernelFamily::Rbf,
+        ] {
+            let (n, d) = (23, 3); // n deliberately not a multiple of 4
+            let x = crate::linalg::Mat::from_fn(n, d, |_, _| rng.gaussian());
+            let hp = hp(d, 7);
+            let sx = ScaledX::new(&x, &hp.ell);
+            let km = cross_matrix(&sx, &sx, hp.sigf * hp.sigf, family);
+            for i in 0..n {
+                for j in 0..n {
+                    let want = kernels::kval(x.row(i), x.row(j), &hp, family);
+                    assert!(
+                        (km[(i, j)] - want).abs() < 1e-12,
+                        "{family:?} ({i},{j}): {} vs {want}",
+                        km[(i, j)]
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn diagonal_is_exact_and_duplicates_clamp() {
+        let mut rng = Rng::new(1);
+        let (n, d) = (12, 4);
+        let mut x = crate::linalg::Mat::from_fn(n, d, |_, _| rng.gaussian());
+        // exact duplicate and near-duplicate rows: the Gram trick cancels
+        // catastrophically here; the clamp must keep sq >= 0
+        let r0 = x.row(0).to_vec();
+        x.row_mut(1).copy_from_slice(&r0);
+        let mut r2 = x.row(2).to_vec();
+        r2[0] += 1e-9;
+        x.row_mut(3).copy_from_slice(&r2);
+        let hp = hp(d, 9);
+        let sf2 = hp.sigf * hp.sigf;
+        let sx = ScaledX::new(&x, &hp.ell);
+        for family in [KernelFamily::Matern12, KernelFamily::Rbf] {
+            let km = cross_matrix(&sx, &sx, sf2, family);
+            for i in 0..n {
+                assert_eq!(km[(i, i)].to_bits(), sf2.to_bits(), "diag {i}");
+                for j in 0..n {
+                    assert!(km[(i, j)] <= sf2 + 1e-15, "({i},{j}) above sigf^2");
+                    assert!(km[(i, j)] > 0.0);
+                }
+            }
+            // duplicate pair evaluates to exactly sigf^2 too
+            assert_eq!(km[(0, 1)].to_bits(), sf2.to_bits());
+        }
+    }
+
+    #[test]
+    fn fill_is_tile_and_symmetry_invariant() {
+        let mut rng = Rng::new(2);
+        let (n, d) = (19, 5);
+        let x = crate::linalg::Mat::from_fn(n, d, |_, _| rng.gaussian());
+        let hp = hp(d, 11);
+        let sf2 = hp.sigf * hp.sigf;
+        let sx = ScaledX::new(&x, &hp.ell);
+        let fam = KernelFamily::Matern32;
+        let full = cross_matrix(&sx, &sx, sf2, fam);
+        // any sub-panel reproduces the same bits
+        for (i0, i1, j0, j1) in [(0, n, 0, n), (3, 9, 5, 6), (1, 2, 0, n), (0, n, 17, n)] {
+            let w = j1 - j0;
+            let mut panel = vec![0.0; (i1 - i0) * w];
+            fill_panel(&sx, i0, i1, &sx, j0, j1, sf2, fam, &mut panel);
+            for (r, i) in (i0..i1).enumerate() {
+                for (c, j) in (j0..j1).enumerate() {
+                    assert_eq!(
+                        panel[r * w + c].to_bits(),
+                        full[(i, j)].to_bits(),
+                        "panel ({i0}..{i1},{j0}..{j1}) entry ({i},{j})"
+                    );
+                }
+            }
+        }
+        // bitwise symmetry (the dense extension's transpose trick relies
+        // on it)
+        for i in 0..n {
+            for j in 0..n {
+                assert_eq!(full[(i, j)].to_bits(), full[(j, i)].to_bits());
+            }
+        }
+    }
+
+    #[test]
+    fn scaled_x_refresh_and_extend_rules() {
+        let mut rng = Rng::new(3);
+        let (n, d) = (10, 3);
+        let x = crate::linalg::Mat::from_fn(n, d, |_, _| rng.gaussian());
+        let ell = vec![0.7, 1.3, 0.9];
+        let mut sx = ScaledX::new(&x, &ell);
+        assert!(sx.matches(&ell, n));
+        // same lengthscales: refresh is a no-op (sigf/sigma-only steps keep
+        // the cache)
+        assert!(!sx.refresh(&x, &ell));
+        // changed lengthscales: rebuild
+        let ell2 = vec![0.7, 1.3, 1.0];
+        assert!(sx.refresh(&x, &ell2));
+        assert!(sx.matches(&ell2, n));
+        // extend grows bitwise-identically to a fresh build on the
+        // concatenated inputs
+        let chunk = crate::linalg::Mat::from_fn(4, d, |_, _| rng.gaussian());
+        sx.extend(&chunk, &ell2);
+        let mut full = x.clone();
+        full.append_rows(&chunk);
+        let fresh = ScaledX::new(&full, &ell2);
+        assert_eq!(sx.n(), fresh.n());
+        for i in 0..sx.n() {
+            assert_eq!(sx.sq(i).to_bits(), fresh.sq(i).to_bits(), "sq {i}");
+            for (a, b) in sx.row(i).iter().zip(fresh.row(i)) {
+                assert_eq!(a.to_bits(), b.to_bits());
+            }
+        }
+        // gather copies bits
+        let g = sx.gather(&[3, 0, 11]);
+        assert_eq!(g.sq(0).to_bits(), sx.sq(3).to_bits());
+        assert_eq!(g.row(2), sx.row(11));
+    }
+
+    #[test]
+    fn apply_panel_matches_matmul_bitwise() {
+        let mut rng = Rng::new(4);
+        let (rows, w, k) = (6, 11, 5);
+        let panel: Vec<f64> = (0..rows * w).map(|_| rng.gaussian()).collect();
+        let v = crate::linalg::Mat::from_fn(w, k, |_, _| rng.gaussian());
+        let pm = crate::linalg::Mat::from_vec(rows, w, panel.clone());
+        let want = pm.matmul(&v);
+        let mut out = vec![0.0; rows * k];
+        apply_panel(&panel, rows, w, 0, &v, &mut out);
+        for (a, b) in out.iter().zip(&want.data) {
+            assert_eq!(a.to_bits(), b.to_bits());
+        }
+    }
+}

@@ -1,0 +1,110 @@
+//! Register-blocked micro-kernels shared by `Mat::matmul`'s row update and
+//! the kernel panel engine (`crate::kernels::panel`).
+//!
+//! Everything here is written so the floating-point association of each
+//! *output element* is a plain ascending-index sum, independent of the
+//! unroll factor: `dot4` keeps four independent accumulators (one per
+//! output), and `axpy` unrolls across independent output elements.  That
+//! makes the bits of every caller identical to the corresponding scalar
+//! loop — the determinism and backend-parity contracts upstream
+//! (`Mat::matmul`'s load-bearing k-major order, tiled==dense bitwise
+//! equality) survive the blocking.
+
+/// Plain ascending-order dot product — the canonical association every
+/// other kernel here reproduces.  Also the single source of the squared
+/// row norms cached in `ScaledX` (the Gram-trick diagonal is exactly zero
+/// only because the norm and the cross-product use the same sum order).
+#[inline(always)]
+pub fn dot(a: &[f64], b: &[f64]) -> f64 {
+    debug_assert_eq!(a.len(), b.len());
+    let mut s = 0.0;
+    for r in 0..a.len() {
+        s += a[r] * b[r];
+    }
+    s
+}
+
+/// Four dot products of `a` against `b0..b3` in one pass — the 4-wide
+/// unrolled core of the panel cross-product `Xi · Xjᵀ`.  Each accumulator
+/// sums in ascending index order, so every output is bitwise-identical to
+/// [`dot`] on the same pair.
+#[inline(always)]
+pub fn dot4(
+    a: &[f64],
+    b0: &[f64],
+    b1: &[f64],
+    b2: &[f64],
+    b3: &[f64],
+) -> (f64, f64, f64, f64) {
+    let d = a.len();
+    let (mut s0, mut s1, mut s2, mut s3) = (0.0, 0.0, 0.0, 0.0);
+    for r in 0..d {
+        let ar = a[r];
+        s0 += ar * b0[r];
+        s1 += ar * b1[r];
+        s2 += ar * b2[r];
+        s3 += ar * b3[r];
+    }
+    (s0, s1, s2, s3)
+}
+
+/// `out[j] += a * b[j]` — the k-major axpy at the heart of `Mat::matmul`'s
+/// row update and the panel tile-apply.  4-wide unrolled; the per-element
+/// accumulators are independent, so the bits match the plain loop for
+/// every length.
+#[inline(always)]
+pub fn axpy(out: &mut [f64], a: f64, b: &[f64]) {
+    debug_assert_eq!(out.len(), b.len());
+    let n = out.len();
+    let n4 = n - n % 4;
+    let mut j = 0;
+    while j < n4 {
+        out[j] += a * b[j];
+        out[j + 1] += a * b[j + 1];
+        out[j + 2] += a * b[j + 2];
+        out[j + 3] += a * b[j + 3];
+        j += 4;
+    }
+    while j < n {
+        out[j] += a * b[j];
+        j += 1;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn dot4_is_bitwise_equal_to_dot() {
+        let mut rng = Rng::new(0);
+        for d in [1, 3, 4, 7, 17] {
+            let a: Vec<f64> = rng.gaussian_vec(d);
+            let bs: Vec<Vec<f64>> = (0..4).map(|_| rng.gaussian_vec(d)).collect();
+            let (s0, s1, s2, s3) = dot4(&a, &bs[0], &bs[1], &bs[2], &bs[3]);
+            for (got, b) in [s0, s1, s2, s3].iter().zip(&bs) {
+                assert_eq!(got.to_bits(), dot(&a, b).to_bits(), "d={d}");
+            }
+        }
+    }
+
+    #[test]
+    fn axpy_is_bitwise_equal_to_plain_loop() {
+        let mut rng = Rng::new(1);
+        for n in [0, 1, 3, 4, 5, 8, 13] {
+            let base = rng.gaussian_vec(n);
+            let b = rng.gaussian_vec(n);
+            let a = rng.gaussian();
+            let mut got = base.clone();
+            axpy(&mut got, a, &b);
+            let mut want = base;
+            for j in 0..n {
+                want[j] += a * b[j];
+            }
+            for (x, y) in got.iter().zip(&want) {
+                assert_eq!(x.to_bits(), y.to_bits(), "n={n}");
+            }
+        }
+    }
+}

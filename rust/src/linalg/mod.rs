@@ -7,6 +7,7 @@
 //! are sufficient; the O(n^2) solver hot path runs in XLA, not here.
 
 mod chol;
+pub mod micro;
 mod pivoted;
 mod power;
 
@@ -108,15 +109,32 @@ impl Mat {
     /// the accumulation order (blocking, SIMD reassociation), relax those
     /// tests and the tiled implementations together.
     pub fn matmul(&self, other: &Mat) -> Mat {
+        let mut out = Mat::zeros(self.rows, other.cols);
+        self.matmul_into(other, &mut out);
+        out
+    }
+
+    /// [`Mat::matmul`] writing into a caller-owned (correctly shaped)
+    /// output, zeroed here — so hot loops can reuse the allocation.
+    /// Bitwise-identical to `matmul`.
+    pub fn matmul_into(&self, other: &Mat, out: &mut Mat) {
         assert_eq!(self.cols, other.rows, "matmul shape mismatch");
         let (m, kk, n) = (self.rows, self.cols, other.cols);
-        let mut out = Mat::zeros(m, n);
+        assert_eq!(
+            (out.rows, out.cols),
+            (m, n),
+            "matmul_into: output is {}x{} but the product is {}x{}",
+            out.rows,
+            out.cols,
+            m,
+            n
+        );
+        out.data.fill(0.0);
         for i in 0..m {
             let a_row = self.row(i);
             let out_row = &mut out.data[i * n..(i + 1) * n];
             matmul_row(a_row, other, kk, n, out_row);
         }
-        out
     }
 
     /// [`Mat::matmul`] with output rows spread over `threads` workers
@@ -213,17 +231,17 @@ impl Mat {
 }
 
 /// One output row of `matmul` — the single source of the k-major (ikj)
-/// accumulation order shared by the serial and threaded products.
+/// accumulation order shared by the serial and threaded products.  The
+/// inner axpy is the register-blocked micro-kernel shared with the kernel
+/// panel engine's tile-apply ([`micro::axpy`], bitwise-equal to the plain
+/// loop), so both paths carry exactly the same association.
 #[inline]
 fn matmul_row(a_row: &[f64], other: &Mat, kk: usize, n: usize, out_row: &mut [f64]) {
     for (k, &a) in a_row.iter().enumerate().take(kk) {
         if a == 0.0 {
             continue;
         }
-        let b_row = &other.data[k * n..(k + 1) * n];
-        for j in 0..n {
-            out_row[j] += a * b_row[j];
-        }
+        micro::axpy(out_row, a, &other.data[k * n..(k + 1) * n]);
     }
 }
 
@@ -274,6 +292,19 @@ mod tests {
         for t in [1, 2, 4, 7] {
             assert_eq!(a.matmul_threaded(&b, t), serial, "threads={t}");
         }
+    }
+
+    #[test]
+    fn matmul_into_reuses_dirty_output_bitwise() {
+        let mut rng = crate::util::rng::Rng::new(12);
+        let a = Mat::from_fn(9, 7, |_, _| rng.gaussian());
+        let b = Mat::from_fn(7, 5, |_, _| rng.gaussian());
+        let want = a.matmul(&b);
+        let mut out = Mat::from_fn(9, 5, |_, _| rng.gaussian()); // dirty
+        a.matmul_into(&b, &mut out);
+        assert_eq!(out, want);
+        a.matmul_into(&b, &mut out); // and again, reusing the buffer
+        assert_eq!(out, want);
     }
 
     #[test]

@@ -20,15 +20,22 @@
 //! | backend | memory   | `set_hp` | parallelism        | knobs              |
 //! |---------|----------|----------|--------------------|--------------------|
 //! | dense   | O(n²)    | O(n²)    | single-threaded    | —                  |
-//! | tiled   | O(n·d)¹  | O(1)     | `threads` workers  | `tile`, `threads`  |
+//! | tiled   | O(n·d)   | O(n·d)¹  | `threads` workers  | `tile`, `threads`  |
 //! | xla     | device   | O(1)     | XLA-managed        | artifact shapes    |
 //!
-//! ¹ resident state; `hv` additionally allocates O(threads·n·(s+1))
-//!   *transient* per-worker scratch for its symmetric tile reduction.
+//! ¹ only when the lengthscales change (the [`ScaledX`] panel cache is
+//!   rebuilt); sigf/sigma-only steps are O(1).  Per-call scratch is one
+//!   tile panel per worker, pooled through [`HvScratch`].
+//!
+//! Every pairwise kernel evaluation in both pure-Rust backends goes
+//! through the shared panel engine ([`crate::kernels::panel`]): same fill
+//! functions, same accumulation order, so tiled == dense is **bitwise**
+//! on `hv`, `k_cols`, `k_rows` and `predict_at` by construction.
 
 pub mod tiled;
 
 use crate::data::Dataset;
+use crate::kernels::panel::{self, ScaledX};
 use crate::kernels::{self, Hyperparams, KernelFamily};
 use crate::linalg::Mat;
 
@@ -107,6 +114,19 @@ pub trait KernelOperator {
 
     /// H @ V for the full batch V [n, s+1].
     fn hv(&self, v: &Mat) -> Mat;
+
+    /// H @ V into a caller-owned output with reusable scratch — the
+    /// allocation-free form of [`KernelOperator::hv`] for solver inner
+    /// loops (`hv` stays as a thin allocating wrapper).  `out` must be
+    /// [n, v.cols] and is fully overwritten; `scratch` pools per-worker
+    /// panel buffers across calls.
+    ///
+    /// Contract: bitwise-identical to `hv` for every (out, scratch) reuse
+    /// pattern.  The default clones through `hv` for backends without a
+    /// buffer-reusing path (XLA).
+    fn hv_into(&self, v: &Mat, out: &mut Mat, _scratch: &HvScratch) {
+        *out = self.hv(v);
+    }
 
     /// K(X, X[idx]) @ U with U [idx.len(), s+1]  (AP column update; the
     /// sigma^2 part of H[:, idx] is applied by the caller as a scatter).
@@ -210,6 +230,32 @@ pub trait KernelOperator {
     }
 }
 
+/// Reusable scratch for [`KernelOperator::hv_into`]: a pool of panel
+/// buffers shared by the worker threads (workers check a buffer out per
+/// row-block and return it, so steady state holds one buffer per worker
+/// and solver loops stop allocating per iteration).  Buffer contents are
+/// fully overwritten before every read, so pooling never affects bits.
+#[derive(Default)]
+pub struct HvScratch {
+    bufs: std::sync::Mutex<Vec<Vec<f64>>>,
+}
+
+impl HvScratch {
+    /// Check out a buffer of at least `len` elements (contents arbitrary).
+    pub fn take(&self, len: usize) -> Vec<f64> {
+        let mut b = self.bufs.lock().unwrap().pop().unwrap_or_default();
+        if b.len() < len {
+            b.resize(len, 0.0);
+        }
+        b
+    }
+
+    /// Return a buffer to the pool.
+    pub fn put(&self, buf: Vec<f64>) {
+        self.bufs.lock().unwrap().push(buf);
+    }
+}
+
 /// Below this many query rows the batched serving sweep stays on the
 /// calling thread: spawning scoped workers costs tens of microseconds,
 /// which dwarfs a small prediction batch.  Thread count never changes the
@@ -263,15 +309,24 @@ pub(crate) fn predict_batched_threaded<T: KernelOperator + Sync>(
 
 /// Shared Rust implementation of the RFF feature map (mirrors
 /// model._rff_features): Phi = sigf sqrt(1/m) [cos(Xs W0), sin(Xs W0)].
+/// Scales the rows through a transient [`ScaledX`]; backends that already
+/// hold a panel cache use [`rff_features_scaled`] directly.
 pub fn rff_features(x: &Mat, omega0: &Mat, hp: &Hyperparams) -> Mat {
-    let (n, d) = (x.rows, x.cols);
+    rff_features_scaled(&ScaledX::new(x, &hp.ell), omega0, hp.sigf)
+}
+
+/// [`rff_features`] over pre-scaled rows.  `ScaledX` rows are exactly
+/// `x_i / ell` — the same elementwise expression the historical fill
+/// computed inline — so routing through the cache changes no bits.
+pub(crate) fn rff_features_scaled(sx: &ScaledX, omega0: &Mat, sigf: f64) -> Mat {
+    let (n, d) = (sx.n(), sx.d());
     let m = omega0.cols;
     assert_eq!(omega0.rows, d);
-    let amp = hp.sigf * (1.0 / m as f64).sqrt();
+    let amp = sigf * (1.0 / m as f64).sqrt();
     let mut phi = Mat::zeros(n, 2 * m);
     for i in 0..n {
         let row = &mut phi.data[i * 2 * m..(i + 1) * 2 * m];
-        rff_fill_row(x.row(i), omega0, &hp.ell, amp, row);
+        rff_fill_row(sx.row(i), omega0, amp, row);
     }
     phi
 }
@@ -303,20 +358,25 @@ pub(crate) fn noise_grad(a: &Mat, b: &Mat, w: &[f64], sigma: f64) -> f64 {
     2.0 * sigma * dot_sum
 }
 
-/// One row of the RFF feature map: `phi[..2m] = amp [cos(z_c), sin(z_c)]`
-/// with `z_c = sum_r x_r / ell_r * omega0[r, c]`.
+/// One row of the RFF feature map over a *pre-scaled* input row
+/// (`xs = x / ell`, from [`ScaledX`]): `phi[..2m] = amp [cos(z_c),
+/// sin(z_c)]` with `z_c = sum_r xs_r * omega0[r, c]`.
 ///
 /// The single source of the feature formula for `rff_features` and the
 /// tiled backend's `rff_eval`/`predict` — the loop order here is
-/// load-bearing: tiled↔dense parity tests require bitwise-identical values.
-pub(crate) fn rff_fill_row(xi: &[f64], omega0: &Mat, ell: &[f64], amp: f64, phi: &mut [f64]) {
+/// load-bearing: tiled↔dense parity tests require bitwise-identical
+/// values, and the pre-scaled form is bit-for-bit the historical
+/// `x_r / ell_r * omega0[r, c]` (division precomputed per row instead of
+/// per feature), so pathwise targets are unchanged across the panel-engine
+/// refactor.
+pub(crate) fn rff_fill_row(xs: &[f64], omega0: &Mat, amp: f64, phi: &mut [f64]) {
     let m = omega0.cols;
-    debug_assert_eq!(omega0.rows, xi.len());
+    debug_assert_eq!(omega0.rows, xs.len());
     debug_assert_eq!(phi.len(), 2 * m);
     for c in 0..m {
         let mut z = 0.0;
-        for r in 0..xi.len() {
-            z += xi[r] / ell[r] * omega0[(r, c)];
+        for r in 0..xs.len() {
+            z += xs[r] * omega0[(r, c)];
         }
         phi[c] = amp * z.cos();
         phi[m + c] = amp * z.sin();
@@ -327,7 +387,9 @@ pub(crate) fn rff_fill_row(xi: &[f64], omega0: &Mat, ell: &[f64], amp: f64, phi:
 // DenseOperator
 // ---------------------------------------------------------------------------
 
-/// Pure-Rust reference backend: materialises H once per `set_hp`.
+/// Pure-Rust reference backend: materialises H once per `set_hp`, through
+/// the panel engine (tile-blocked Gram-trick fills over the [`ScaledX`]
+/// cache instead of one `kval` per pair).
 #[derive(Clone)]
 pub struct DenseOperator {
     x: Mat,
@@ -336,13 +398,15 @@ pub struct DenseOperator {
     m: usize,
     family: KernelFamily,
     hp: Hyperparams,
+    scaled: ScaledX,
     h: Mat,
 }
 
 impl DenseOperator {
     pub fn new(ds: &Dataset, s: usize, m: usize) -> Self {
         let hp = Hyperparams::ones(ds.spec.d);
-        let h = kernels::h_matrix(&ds.x_train, &hp, ds.spec.family);
+        let scaled = ScaledX::new(&ds.x_train, &hp.ell);
+        let h = panel::h_panel(&scaled, &hp, ds.spec.family);
         DenseOperator {
             x: ds.x_train.clone(),
             x_test: ds.x_test.clone(),
@@ -350,6 +414,7 @@ impl DenseOperator {
             m,
             family: ds.spec.family,
             hp,
+            scaled,
             h,
         }
     }
@@ -357,6 +422,10 @@ impl DenseOperator {
     /// Direct access to the materialised H (tests / diagnostics).
     pub fn h(&self) -> &Mat {
         &self.h
+    }
+
+    fn sf2(&self) -> f64 {
+        self.hp.sigf * self.hp.sigf
     }
 }
 
@@ -388,7 +457,8 @@ impl KernelOperator for DenseOperator {
 
     fn set_hp(&mut self, hp: &Hyperparams) {
         self.hp = hp.clone();
-        self.h = kernels::h_matrix(&self.x, hp, self.family);
+        self.scaled.refresh(&self.x, &hp.ell);
+        self.h = panel::h_panel(&self.scaled, hp, self.family);
     }
 
     /// Online data arrival: rank-extend the cached H in place,
@@ -397,9 +467,11 @@ impl KernelOperator for DenseOperator {
     ///
     /// so only the new cross/corner blocks are fresh kernel evaluations —
     /// O(n1 * n_new) instead of the O(n1^2) full rebuild `set_hp` pays.
-    /// Every entry comes from the same `kval` calls a rebuild would make,
-    /// so the extended H is bitwise-identical to a fresh build on the
-    /// concatenated data (the online parity tests assert this).
+    /// The [`ScaledX`] cache grows in place first, and every block entry
+    /// comes from the same panel fills a rebuild would make (panel entries
+    /// are pure per-(i, j) functions of the grown cache), so the extended
+    /// H is bitwise-identical to a fresh build on the concatenated data
+    /// (the online parity tests assert this).
     fn extend(&mut self, x_new: &Mat) -> anyhow::Result<()> {
         anyhow::ensure!(x_new.rows > 0, "extend: empty chunk");
         anyhow::ensure!(
@@ -411,12 +483,13 @@ impl KernelOperator for DenseOperator {
         let n0 = self.x.rows;
         let nn = x_new.rows;
         let n1 = n0 + nn;
-        let k_on = kernels::kernel_matrix(&self.x, x_new, &self.hp, self.family); // [n0, nn]
-        // lower block by symmetry: kval is bitwise-symmetric ((a-b)² ==
-        // (b-a)² with identical coordinate sum order), so the transpose
-        // halves the dominant kernel-evaluation cost of the extension
+        self.scaled.extend(x_new, &self.hp.ell);
+        let k_on = panel::cross_block(&self.scaled, 0..n0, n0..n1, self.sf2(), self.family); // [n0, nn]
+        // lower block by symmetry: the panel fill is bitwise-symmetric
+        // (commutative dot and norm sum; see the panel module docs), so
+        // the transpose halves the dominant kernel-evaluation cost
         let k_no = k_on.transpose(); // [nn, n0]
-        let mut k_nn = kernels::kernel_matrix(x_new, x_new, &self.hp, self.family);
+        let mut k_nn = panel::cross_block(&self.scaled, n0..n1, n0..n1, self.sf2(), self.family);
         k_nn.add_diag(self.hp.noise_var());
         let mut h = Mat::zeros(n1, n1);
         for i in 0..n0 {
@@ -439,17 +512,22 @@ impl KernelOperator for DenseOperator {
         self.h.matmul(v)
     }
 
+    fn hv_into(&self, v: &Mat, out: &mut Mat, _scratch: &HvScratch) {
+        assert_eq!(v.rows, self.n());
+        self.h.matmul_into(v, out);
+    }
+
     fn k_cols(&self, idx: &[usize], u: &Mat) -> Mat {
         assert_eq!(u.rows, idx.len());
-        let xb = self.x.gather_rows(idx);
-        let km = kernels::kernel_matrix(&self.x, &xb, &self.hp, self.family);
+        let sb = self.scaled.gather(idx);
+        let km = panel::cross_matrix(&self.scaled, &sb, self.sf2(), self.family);
         km.matmul(u)
     }
 
     fn k_rows(&self, idx: &[usize], v: &Mat) -> Mat {
         assert_eq!(v.rows, self.n());
-        let xa = self.x.gather_rows(idx);
-        let km = kernels::kernel_matrix(&xa, &self.x, &self.hp, self.family);
+        let sa = self.scaled.gather(idx);
+        let km = panel::cross_matrix(&sa, &self.scaled, self.sf2(), self.family);
         km.matmul(v)
     }
 
@@ -484,7 +562,7 @@ impl KernelOperator for DenseOperator {
     }
 
     fn rff_eval(&self, omega0: &Mat, wts: &Mat, noise: &Mat) -> Mat {
-        let phi = rff_features(&self.x, omega0, &self.hp);
+        let phi = rff_features_scaled(&self.scaled, omega0, self.hp.sigf);
         let mut xi = phi.matmul(wts);
         assert_eq!(xi.rows, noise.rows);
         assert_eq!(xi.cols, noise.cols);
@@ -510,9 +588,10 @@ impl KernelOperator for DenseOperator {
         );
         assert_eq!(vy.len(), self.n());
         assert_eq!(zhat.rows, self.n());
-        let kx = kernels::kernel_matrix(x_query, &self.x, &self.hp, self.family);
+        let qs = ScaledX::new(x_query, &self.hp.ell);
+        let kx = panel::cross_matrix(&qs, &self.scaled, self.sf2(), self.family);
         let mean = kx.matvec(vy);
-        let phi_t = rff_features(x_query, omega0, &self.hp);
+        let phi_t = rff_features_scaled(&qs, omega0, self.hp.sigf);
         let mut samples = phi_t.matmul(wts); // [b, s]
         // + K(Xq, X) (vy - zhat)
         let mut u = zhat.clone();
@@ -579,8 +658,16 @@ mod tests {
         let mut rng = Rng::new(0);
         let v = Mat::from_fn(o.n(), o.k_width(), |_, _| rng.gaussian());
         let hv = o.hv(&v);
+        // reference H from the scalar kval path: the panel engine's
+        // Gram-trick values differ by ~1e-14 per entry, amplified by the
+        // O(n) product accumulation — hence the tolerance
         let want = kernels::h_matrix(o.x(), &hp, o.family()).matmul(&v);
-        assert!(hv.max_abs_diff(&want) < 1e-12);
+        assert!(hv.max_abs_diff(&want) < 1e-10);
+        // hv_into reuses a dirty buffer bitwise
+        let mut out = Mat::from_fn(o.n(), o.k_width(), |_, _| 7.5);
+        let scratch = HvScratch::default();
+        o.hv_into(&v, &mut out, &scratch);
+        assert_eq!(out.data, hv.data);
     }
 
     #[test]

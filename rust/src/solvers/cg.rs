@@ -7,7 +7,7 @@ use super::{
     SharedPreconditionerCache, SolveOptions, SolveReport, SolverKind,
 };
 use crate::linalg::Mat;
-use crate::operators::KernelOperator;
+use crate::operators::{HvScratch, KernelOperator};
 
 pub struct CgSolver {
     /// Preconditioner store keyed on (hyperparameter bits, rank) —
@@ -46,9 +46,13 @@ impl LinearSolver for CgSolver {
         let mut iterations = 0usize;
         let (mut ry, mut rz) = residual_norms_t(&r, threads);
         let tol = opts.tolerance;
+        // per-iteration operator product reuses one output buffer and one
+        // panel-scratch pool for the whole solve (no allocation churn)
+        let mut hd = Mat::zeros(r.rows, r.cols);
+        let scratch = HvScratch::default();
 
         while (ry > tol || rz > tol) && epochs + 1.0 <= opts.max_epochs {
-            let hd = op.hv(&d);
+            op.hv_into(&d, &mut hd, &scratch);
             epochs += 1.0;
             iterations += 1;
 

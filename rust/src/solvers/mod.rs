@@ -264,7 +264,8 @@ impl Normalized {
         recurrence::scale_cols(v0, &inv, threads);
         let warm = v0.data.iter().any(|&x| x != 0.0);
         let (r, cost) = if warm {
-            let hv = op.hv(v0);
+            let mut hv = Mat::zeros(v0.rows, v0.cols);
+            op.hv_into(v0, &mut hv, &crate::operators::HvScratch::default());
             let mut r = bs.clone();
             recurrence::sub_assign(&mut r, &hv, threads);
             (r, 1.0)

@@ -8,11 +8,14 @@
 //!   M^-1 R = (R - L C^-1 (L^T R)) / sigma^2,   C = sigma^2 I_rho + L^T L.
 //!
 //! Built matrix-free from kernel rows (O(rho^2 n + rho n d)); the apply is
-//! O(n rho k) per CG iteration.  The build is parallel end to end — kernel
-//! rows, the pivoted-Cholesky column updates and the Gram accumulation
-//! C = L^T L all run on the deterministic worker pool, with results
-//! bitwise-identical for every thread count (order-canonical blocked
-//! reductions; see [`super::recurrence`]).
+//! O(n rho k) per CG iteration.  Kernel rows (and AP's diagonal kernel
+//! blocks below) are evaluated through the Gram-trick panel engine
+//! ([`crate::kernels::panel`]) over one per-build [`ScaledX`] cache, and
+//! the build is parallel end to end — kernel rows, the pivoted-Cholesky
+//! column updates and the Gram accumulation C = L^T L all run on the
+//! deterministic worker pool, with results bitwise-identical for every
+//! thread count (order-canonical blocked reductions; see
+//! [`super::recurrence`]).
 //!
 //! [`PreconditionerCache`] — a coordinator-owned store keyed on
 //! (hyperparameter bits, rank).  The outer loop solves several systems per
@@ -24,7 +27,8 @@
 
 use std::sync::{Arc, Mutex};
 
-use crate::kernels::{self, Hyperparams, KernelFamily};
+use crate::kernels::panel::{self, ScaledX};
+use crate::kernels::{Hyperparams, KernelFamily};
 use crate::linalg::{pivoted_cholesky_threaded, Cholesky, Mat};
 use crate::operators::KernelOperator;
 use crate::util::parallel::{num_threads, parallel_map_slots, parallel_row_blocks};
@@ -71,16 +75,17 @@ impl WoodburyPreconditioner {
         let t = num_threads(if threads == 0 { None } else { Some(threads) });
         let sf2 = hp.sigf * hp.sigf;
         let diag = vec![sf2; n];
-        // kernel rows evaluated row-parallel inside the pivot closure
+        // one ScaledX for the whole build (O(n·d)); kernel rows are then
+        // Gram-trick panel fills, row-parallel inside the pivot closure —
+        // each entry is a pure function of (i, j), so the row is
+        // bitwise-identical for every thread count and block split
+        let sx = ScaledX::new(x, &hp.ell);
         let kernel_row_par = |i: usize| -> Vec<f64> {
             let mut out = vec![0.0; n];
             let tk = if n * x.cols < (1 << 14) { 1 } else { t };
             let block = ((n + tk - 1) / tk).max(1);
-            let xi = x.row(i);
             parallel_row_blocks(&mut out, 1, block, tk, |r0, rows, blk| {
-                for (r, o) in blk.iter_mut().enumerate() {
-                    *o = kernels::kval(xi, x.row(r0 + r), hp, family);
-                }
+                panel::fill_row(&sx, i, &sx, r0, sf2, family, &mut blk[..rows]);
             });
             out
         };
@@ -286,13 +291,18 @@ impl PreconditionerCache {
         let x = op.x();
         let hp = op.hp();
         let fam = op.family();
+        let sf2 = hp.sigf * hp.sigf;
         let nblocks = (n + block_size - 1) / block_size;
         let t = num_threads(if threads == 0 { None } else { Some(threads) });
+        // one ScaledX shared by all block builds; each block gathers its
+        // rows (norms copied, not recomputed) and panel-fills its diagonal
+        // kernel block
+        let sx = ScaledX::new(x, &hp.ell);
         let factors = parallel_map_slots(nblocks, t.min(nblocks), |blk| {
             let idx: Vec<usize> =
                 (blk * block_size..((blk + 1) * block_size).min(n)).collect();
-            let xb = x.gather_rows(&idx);
-            let mut h_blk = kernels::kernel_matrix(&xb, &xb, hp, fam);
+            let sb = sx.gather(&idx);
+            let mut h_blk = panel::cross_matrix(&sb, &sb, sf2, fam);
             h_blk.add_diag(hp.noise_var());
             Cholesky::factor(&h_blk).expect("AP block SPD")
         });

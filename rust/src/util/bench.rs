@@ -7,6 +7,20 @@
 //! ```text
 //! bench <name> ... median 12.3ms mean 12.5ms p10 11.9ms p90 13.0ms [thr 4.1 GF/s]
 //! ```
+//!
+//! Machine-readable perf trajectory: bench binaries accept `--json PATH`
+//! (args after `cargo bench --bench <name> --`).  [`JsonReport`] collects
+//! one [`BenchRecord`] per case and writes a JSON array of
+//!
+//! ```text
+//! {"op": "hv", "backend": "tiled", "n": 4096, "d": 9, "threads": 8,
+//!  "ns_per_op": 123456.789}
+//! ```
+//!
+//! — `op` names the measured operation, `backend` the compute backend,
+//! `n`/`d` the problem shape, `threads` the worker count and `ns_per_op`
+//! the median wall time per operation in nanoseconds.  `--quick` restricts
+//! the sweep to tiny shapes (CI smoke).
 
 use std::time::{Duration, Instant};
 
@@ -94,9 +108,125 @@ impl Bencher {
     }
 }
 
+/// One machine-readable benchmark record (see the module docs for the
+/// field meanings and the serialised shape).
+#[derive(Clone, Debug, PartialEq)]
+pub struct BenchRecord {
+    pub op: String,
+    pub backend: String,
+    pub n: usize,
+    pub d: usize,
+    pub threads: usize,
+    pub ns_per_op: f64,
+}
+
+/// Collector for the `--json PATH` bench mode.
+pub struct JsonReport {
+    path: std::path::PathBuf,
+    records: Vec<BenchRecord>,
+}
+
+impl JsonReport {
+    /// Parse `--json PATH` from the process args (`cargo bench --bench x
+    /// -- --json out.json`).  `None` when the flag is absent.
+    pub fn from_args() -> Option<JsonReport> {
+        let args: Vec<String> = std::env::args().collect();
+        let i = args.iter().position(|a| a == "--json")?;
+        let path = args.get(i + 1).expect("--json needs a PATH argument");
+        Some(JsonReport { path: path.into(), records: Vec::new() })
+    }
+
+    pub fn at(path: impl Into<std::path::PathBuf>) -> JsonReport {
+        JsonReport { path: path.into(), records: Vec::new() }
+    }
+
+    /// Record one case (median wall time from `res`).
+    pub fn push(
+        &mut self,
+        op: &str,
+        backend: &str,
+        n: usize,
+        d: usize,
+        threads: usize,
+        res: &BenchResult,
+    ) {
+        self.records.push(BenchRecord {
+            op: op.to_string(),
+            backend: backend.to_string(),
+            n,
+            d,
+            threads,
+            ns_per_op: res.median() * 1e9,
+        });
+    }
+
+    pub fn records(&self) -> &[BenchRecord] {
+        &self.records
+    }
+
+    /// Serialise the records (insertion order) as a JSON array.
+    pub fn render(&self) -> String {
+        let mut s = String::from("[\n");
+        for (i, r) in self.records.iter().enumerate() {
+            s.push_str(&format!(
+                "  {{\"op\": \"{}\", \"backend\": \"{}\", \"n\": {}, \"d\": {}, \
+                 \"threads\": {}, \"ns_per_op\": {:.3}}}{}\n",
+                json_escape(&r.op),
+                json_escape(&r.backend),
+                r.n,
+                r.d,
+                r.threads,
+                r.ns_per_op,
+                if i + 1 < self.records.len() { "," } else { "" }
+            ));
+        }
+        s.push_str("]\n");
+        s
+    }
+
+    /// Write the report to its path, announcing where it went.
+    pub fn write(&self) -> std::io::Result<()> {
+        std::fs::write(&self.path, self.render())?;
+        println!("bench json: {} records -> {}", self.records.len(), self.path.display());
+        Ok(())
+    }
+}
+
+fn json_escape(s: &str) -> String {
+    s.replace('\\', "\\\\").replace('"', "\\\"")
+}
+
+/// True when the bench was invoked with `--quick` (tiny shapes only — the
+/// CI smoke mode that keeps the JSON emitter from rotting).
+pub fn quick_mode() -> bool {
+    std::env::args().any(|a| a == "--quick")
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
+
+    #[test]
+    fn json_report_renders_parseable_records() {
+        let mut j = JsonReport::at("/tmp/unused.json");
+        let b = Bencher { warmup: 0, samples: 3 };
+        let r = b.run("case", None, || {
+            std::hint::black_box(1 + 1);
+        });
+        j.push("hv", "tiled", 256, 4, 8, &r);
+        j.push("hv", "den\"se", 512, 9, 1, &r);
+        let s = j.render();
+        assert!(s.starts_with("[\n") && s.ends_with("]\n"), "{s}");
+        assert!(s.contains("\"op\": \"hv\""), "{s}");
+        assert!(s.contains("\"backend\": \"tiled\""), "{s}");
+        assert!(s.contains("\"n\": 256"), "{s}");
+        assert!(s.contains("\"threads\": 8"), "{s}");
+        assert!(s.contains("\"ns_per_op\": "), "{s}");
+        assert!(s.contains("den\\\"se"), "quote must be escaped: {s}");
+        // exactly one separating comma for two records
+        assert_eq!(s.matches("},\n").count(), 1, "{s}");
+        assert_eq!(j.records().len(), 2);
+    }
 
     #[test]
     fn bench_reports_sane_stats() {

@@ -1,0 +1,289 @@
+//! Property tests for the kernel panel engine (`igp::kernels::panel`):
+//!
+//! * panel evaluation matches the retained scalar `kval` reference within
+//!   1e-8 across all kernel families, ARD lengthscales, ragged tile tails
+//!   and duplicate/near-duplicate rows (the Gram-trick cancellation clamp);
+//! * tiled == dense `hv` is **bitwise** on the panel path for every
+//!   thread count and tile size (both backends share the panel fills and
+//!   `Mat::matmul`'s accumulation order);
+//! * `hv`/`hv_into` are bit-deterministic across repeated calls, buffer
+//!   reuse, thread counts and extensions (regression for the old
+//!   thread-partial reduction scheme).
+
+use igp::data::{Dataset, DatasetSpec};
+use igp::kernels::panel::{self, ScaledX};
+use igp::kernels::{self, Hyperparams, KernelFamily};
+use igp::linalg::Mat;
+use igp::operators::{DenseOperator, HvScratch, KernelOperator, TiledOperator, TiledOptions};
+use igp::prop_assert;
+use igp::util::proptest::{check, PropConfig};
+use igp::util::rng::Rng;
+
+fn random_family(rng: &mut Rng) -> KernelFamily {
+    match rng.below(4) {
+        0 => KernelFamily::Matern12,
+        1 => KernelFamily::Matern32,
+        2 => KernelFamily::Matern52,
+        _ => KernelFamily::Rbf,
+    }
+}
+
+fn random_hp(rng: &mut Rng, d: usize) -> Hyperparams {
+    Hyperparams {
+        // genuinely ARD: every dimension draws its own lengthscale
+        ell: (0..d).map(|_| rng.uniform_in(0.3, 2.5)).collect(),
+        sigf: rng.uniform_in(0.5, 1.5),
+        sigma: rng.uniform_in(0.1, 0.9),
+    }
+}
+
+/// Random inputs with planted exact-duplicate and near-duplicate rows —
+/// the worst case for the Gram trick's `‖xi‖² + ‖xj‖² − 2⟨xi,xj⟩`
+/// cancellation.  Exact duplicates clamp to a bit-exact sigf² (the clamp
+/// plus the shared-dot diagonal property); the near-duplicate offset of
+/// 1e-4 keeps the true squared distance well above the ~1e-13
+/// cancellation noise floor, which is what a 1e-8 agreement with the
+/// scalar reference requires for the sqrt-amplifying Matérn families —
+/// still a ~1e-10 relative cancellation in the Gram expression.
+fn inputs_with_duplicates(rng: &mut Rng, n: usize, d: usize) -> Mat {
+    let mut x = Mat::from_fn(n, d, |_, _| rng.gaussian());
+    if n >= 4 {
+        let r0 = x.row(0).to_vec();
+        x.row_mut(1).copy_from_slice(&r0); // exact duplicate
+        let mut r2 = x.row(2).to_vec();
+        r2[0] += 1e-4; // near-duplicate
+        x.row_mut(3).copy_from_slice(&r2);
+    }
+    x
+}
+
+#[test]
+fn prop_panel_matches_kval_reference() {
+    check(
+        "panel_vs_kval",
+        PropConfig { cases: 32, max_size: 24, ..Default::default() },
+        |rng, size| {
+            let n = 4 + rng.below(4 + 4 * size.max(1)); // rarely a multiple of 4: ragged tails
+            let d = 1 + rng.below(6);
+            let family = random_family(rng);
+            let x = inputs_with_duplicates(rng, n, d);
+            let hp = random_hp(rng, d);
+            let sf2 = hp.sigf * hp.sigf;
+            let sx = ScaledX::new(&x, &hp.ell);
+            let km = panel::cross_matrix(&sx, &sx, sf2, family);
+            for i in 0..n {
+                for j in 0..n {
+                    let want = kernels::kval(x.row(i), x.row(j), &hp, family);
+                    prop_assert!(
+                        (km[(i, j)] - want).abs() <= 1e-8,
+                        "{family:?} n={n} d={d} ({i},{j}): panel {} vs kval {want}",
+                        km[(i, j)]
+                    );
+                    prop_assert!(
+                        km[(i, j)] <= sf2 + 1e-12,
+                        "clamp failed: k({i},{j}) = {} > sigf^2 = {sf2}",
+                        km[(i, j)]
+                    );
+                }
+                // the diagonal is exact: the cached norm and the
+                // cross-product share one dot, so sq_ii clamps to 0
+                prop_assert!(
+                    km[(i, i)].to_bits() == sf2.to_bits(),
+                    "diag {i}: {} vs sigf^2 {sf2}",
+                    km[(i, i)]
+                );
+            }
+            // exact duplicates collapse to a bit-exact sigf^2 (clamp +
+            // shared-dot property), matching kval's zero-distance value
+            if n >= 4 {
+                prop_assert!(
+                    km[(0, 1)].to_bits() == sf2.to_bits(),
+                    "duplicate pair: {} vs sigf^2 {sf2}",
+                    km[(0, 1)]
+                );
+            }
+            // ragged sub-panels reproduce the same bits as the full fill
+            let i0 = rng.below(n);
+            let j0 = rng.below(n);
+            let w = 1 + rng.below(n - j0);
+            let rows = 1 + rng.below(n - i0);
+            let mut sub = vec![0.0; rows * w];
+            panel::fill_panel(&sx, i0, i0 + rows, &sx, j0, j0 + w, sf2, family, &mut sub);
+            for r in 0..rows {
+                for c in 0..w {
+                    prop_assert!(
+                        sub[r * w + c].to_bits() == km[(i0 + r, j0 + c)].to_bits(),
+                        "sub-panel ({},{}) differs from full fill",
+                        i0 + r,
+                        j0 + c
+                    );
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+fn toy_dataset(rng: &mut Rng, n: usize, d: usize, family: KernelFamily) -> Dataset {
+    let x_train = inputs_with_duplicates(rng, n, d);
+    let y_train = rng.gaussian_vec(n);
+    let x_test = Mat::from_fn(4, d, |_, _| rng.gaussian());
+    let y_test = rng.gaussian_vec(4);
+    let spec = DatasetSpec {
+        name: "toy",
+        paper_n: 0,
+        n,
+        n_test: 4,
+        d,
+        true_sigma: 0.3,
+        ell_lo: 0.5,
+        ell_hi: 1.5,
+        cluster_frac: 0.0,
+        family,
+        seed: 0,
+    };
+    Dataset { spec, x_train, y_train, x_test, y_test, true_hp: Hyperparams::ones(d) }
+}
+
+#[test]
+fn prop_hv_is_bitwise_tiled_eq_dense_for_every_thread_count() {
+    check(
+        "panel_hv_bitwise_parity",
+        PropConfig { cases: 20, max_size: 16, ..Default::default() },
+        |rng, size| {
+            let n = 8 + rng.below(8 + 6 * size.max(1));
+            let d = 1 + rng.below(5);
+            let family = random_family(rng);
+            let ds = toy_dataset(rng, n, d, family);
+            let hp = random_hp(rng, d);
+            let s = 1 + rng.below(4);
+            let mut dense = DenseOperator::new(&ds, s, 8);
+            dense.set_hp(&hp);
+            let v = Mat::from_fn(n, s + 1, |_, _| rng.gaussian());
+            let want = dense.hv(&v);
+            let tile = match rng.below(3) {
+                0 => 1,
+                1 => 1 + rng.below(n),
+                _ => n + 1 + rng.below(32),
+            };
+            for threads in 1..=4 {
+                let mut tiled =
+                    TiledOperator::with_options(&ds, s, 8, TiledOptions { tile, threads });
+                tiled.set_hp(&hp);
+                let got = tiled.hv(&v);
+                for (i, (a, b)) in got.data.iter().zip(&want.data).enumerate() {
+                    prop_assert!(
+                        a.to_bits() == b.to_bits(),
+                        "tile={tile} threads={threads} elem {i}: {a} vs {b}"
+                    );
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn hv_into_is_deterministic_across_reuse_threads_and_extension() {
+    // regression for the old scheme: `hv` summed thread partials into a
+    // freshly zeroed Mat each call.  The panel path has no partials —
+    // output rows are disjoint — and must be bit-stable across repeated
+    // calls, dirty-buffer reuse, every thread count and online extension.
+    let mut rng = Rng::new(42);
+    let ds = toy_dataset(&mut rng, 97, 3, KernelFamily::Matern52);
+    let hp = Hyperparams { ell: vec![0.8, 1.3, 0.6], sigf: 1.2, sigma: 0.35 };
+    let v = Mat::from_fn(97, 4, |_, _| rng.gaussian());
+
+    let mut reference: Option<Mat> = None;
+    for threads in [1, 2, 3, 5] {
+        let mut op =
+            TiledOperator::with_options(&ds, 3, 8, TiledOptions { tile: 17, threads });
+        op.set_hp(&hp);
+        let scratch = HvScratch::default();
+        let mut out = Mat::from_fn(97, 4, |_, _| f64::NAN); // dirty, incl. NaN
+        op.hv_into(&v, &mut out, &scratch);
+        let first = out.clone();
+        op.hv_into(&v, &mut out, &scratch); // scratch + buffer reuse
+        assert_eq!(out.data, first.data, "threads={threads}: reuse changed bits");
+        assert_eq!(op.hv(&v).data, first.data, "threads={threads}: hv != hv_into");
+        match &reference {
+            None => reference = Some(first),
+            Some(want) => assert_eq!(
+                first.data, want.data,
+                "threads={threads}: thread count changed bits"
+            ),
+        }
+    }
+
+    // extension keeps determinism and the bitwise dense parity
+    let mut tiled =
+        TiledOperator::with_options(&ds, 3, 8, TiledOptions { tile: 17, threads: 3 });
+    tiled.set_hp(&hp);
+    let mut dense = DenseOperator::new(&ds, 3, 8);
+    dense.set_hp(&hp);
+    let chunk = Mat::from_fn(21, 3, |_, _| rng.gaussian());
+    tiled.extend(&chunk).unwrap();
+    dense.extend(&chunk).unwrap();
+    let v2 = Mat::from_fn(tiled.n(), 4, |_, _| rng.gaussian());
+    let a = tiled.hv(&v2);
+    let b = dense.hv(&v2);
+    assert!(a.data.iter().zip(&b.data).all(|(x, y)| x.to_bits() == y.to_bits()));
+    assert_eq!(tiled.hv(&v2), a);
+}
+
+#[test]
+fn prop_k_cols_k_rows_and_predict_are_bitwise_across_backends() {
+    // the panel engine routes every kernel-evaluation site of both
+    // backends through the same fills, so the remaining operator products
+    // are bitwise too — not just hv
+    check(
+        "panel_products_bitwise_parity",
+        PropConfig { cases: 16, max_size: 12, ..Default::default() },
+        |rng, size| {
+            let n = 8 + rng.below(8 + 6 * size.max(1));
+            let d = 1 + rng.below(5);
+            let family = random_family(rng);
+            let ds = toy_dataset(rng, n, d, family);
+            let hp = random_hp(rng, d);
+            let s = 1 + rng.below(3);
+            let m = 4 + rng.below(8);
+            let tile = 1 + rng.below(n + 8);
+            let threads = 1 + rng.below(4);
+            let mut dense = DenseOperator::new(&ds, s, m);
+            dense.set_hp(&hp);
+            let mut tiled =
+                TiledOperator::with_options(&ds, s, m, TiledOptions { tile, threads });
+            tiled.set_hp(&hp);
+
+            let bsz = 1 + rng.below(n);
+            let idx = rng.sample_indices(n, bsz);
+            let u = Mat::from_fn(bsz, s + 1, |_, _| rng.gaussian());
+            let bits_eq = |a: &Mat, b: &Mat| {
+                a.data.iter().zip(&b.data).all(|(x, y)| x.to_bits() == y.to_bits())
+            };
+            prop_assert!(
+                bits_eq(&tiled.k_cols(&idx, &u), &dense.k_cols(&idx, &u)),
+                "k_cols differs in bits (tile={tile} threads={threads})"
+            );
+            let v = Mat::from_fn(n, s + 1, |_, _| rng.gaussian());
+            prop_assert!(
+                bits_eq(&tiled.k_rows(&idx, &v), &dense.k_rows(&idx, &v)),
+                "k_rows differs in bits (tile={tile} threads={threads})"
+            );
+
+            let omega0 = Mat::from_fn(d, m, |_, _| rng.gaussian());
+            let wts = Mat::from_fn(2 * m, s, |_, _| rng.gaussian());
+            let zhat = Mat::from_fn(n, s, |_, _| rng.gaussian());
+            let vy = rng.gaussian_vec(n);
+            let xq = Mat::from_fn(1 + rng.below(16), d, |_, _| rng.gaussian());
+            let (m1, s1) = tiled.predict_at(&xq, &vy, &zhat, &omega0, &wts).unwrap();
+            let (m2, s2) = dense.predict_at(&xq, &vy, &zhat, &omega0, &wts).unwrap();
+            prop_assert!(
+                m1.iter().zip(&m2).all(|(a, b)| a.to_bits() == b.to_bits()),
+                "predict_at mean differs in bits"
+            );
+            prop_assert!(bits_eq(&s1, &s2), "predict_at samples differ in bits");
+            Ok(())
+        },
+    );
+}
