@@ -2,6 +2,9 @@
 //! * pure-Rust section (always runs): multi-threaded matrix-free
 //!   `TiledOperator` vs single-threaded tiled vs the materialised
 //!   `DenseOperator`, up to n = 4096 where dense storage is at its limit.
+//! * sharded-vs-monolithic section: the row-sharded tiled layout
+//!   (per-shard panel caches, canonical-order partial folds) against the
+//!   monolithic tiled sweep it is bitwise-equal to.
 //! * panel-vs-reference section: the Gram-trick panel engine against the
 //!   retained scalar `kval` path on the same shapes — the ablation behind
 //!   the panel engine's multi-× claim (acceptance: >= 2x at n >= 4096 on
@@ -18,7 +21,7 @@ mod common;
 use igp::data;
 use igp::kernels::{self, Hyperparams, KernelFamily};
 use igp::linalg::Mat;
-use igp::operators::{DenseOperator, KernelOperator, TiledOperator, TiledOptions};
+use igp::operators::{DenseOperator, KernelOperator, ShardedOperator, TiledOperator, TiledOptions};
 use igp::util::bench::{quick_mode, Bencher, JsonReport};
 use igp::util::rng::Rng;
 
@@ -78,6 +81,53 @@ fn rust_backends(json: &mut Option<JsonReport>, quick: bool) {
         });
         if let Some(j) = json.as_mut() {
             j.push("hv", "dense", n, d, 1, &r);
+        }
+    }
+}
+
+/// Sharded vs monolithic H@V on the tiled layout: same tile size and
+/// thread pool, S row shards with per-shard panel caches.  Results are
+/// bitwise-identical by construction (tests/sharded_parity.rs), so this
+/// section isolates the *cost* of the shard decomposition — the partial
+/// folds and per-shard cache walks — against the monolithic sweep.
+fn sharded_vs_monolithic(json: &mut Option<JsonReport>, quick: bool) {
+    let b = Bencher::default();
+    for &config in configs(quick) {
+        let ds = data::generate(&data::spec(config).unwrap());
+        let (s, m) = (8, 64);
+        let hp = Hyperparams { ell: vec![1.0; ds.spec.d], sigf: 1.1, sigma: 0.3 };
+
+        let mut tiled = TiledOperator::new(&ds, s, m);
+        tiled.set_hp(&hp);
+        let mut rng = Rng::new(2);
+        let v = Mat::from_fn(tiled.n(), tiled.k_width(), |_, _| rng.gaussian());
+        let (n, d) = (tiled.n(), tiled.d());
+        let flops = hv_flops(n, d, tiled.k_width());
+
+        let r = b.run(
+            &format!("{config}/hv monolithic t{} (rust)", tiled.threads()),
+            Some(flops),
+            || {
+                std::hint::black_box(tiled.hv(&v));
+            },
+        );
+        if let Some(j) = json.as_mut() {
+            j.push("hv_sharded", "monolithic", n, d, tiled.threads(), &r);
+        }
+
+        for shards in [1usize, 2, 4, 8] {
+            let mut op = ShardedOperator::new(&ds, s, m, shards);
+            op.set_hp(&hp);
+            let r = b.run(
+                &format!("{config}/hv sharded S={shards} t{} (rust)", op.threads()),
+                Some(flops),
+                || {
+                    std::hint::black_box(op.hv(&v));
+                },
+            );
+            if let Some(j) = json.as_mut() {
+                j.push("hv_sharded", &format!("sharded-s{shards}"), n, d, op.threads(), &r);
+            }
         }
     }
 }
@@ -197,6 +247,7 @@ fn main() {
     let quick = quick_mode();
     let mut json = JsonReport::from_args();
     rust_backends(&mut json, quick);
+    sharded_vs_monolithic(&mut json, quick);
     panel_vs_reference(&mut json, quick);
     xla_backends(&mut json, quick);
     if let Some(j) = &json {

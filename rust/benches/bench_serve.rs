@@ -26,6 +26,7 @@ fn trained(ds: &data::Dataset, backend: BackendKind, threads: usize) -> Trainer 
         8,
         64,
         TiledOptions { tile: 256, threads },
+        1,
     )
     .unwrap();
     let opts = TrainerOptions {

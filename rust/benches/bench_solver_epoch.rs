@@ -13,7 +13,7 @@ use igp::data;
 use igp::estimator::{EstimatorKind, ProbeSet};
 use igp::kernels::Hyperparams;
 use igp::linalg::Mat;
-use igp::operators::{DenseOperator, KernelOperator, TiledOperator};
+use igp::operators::{DenseOperator, KernelOperator, ShardedOperator, TiledOperator};
 use igp::solvers::{make_solver, SolveOptions, SolverKind};
 use igp::util::bench::{quick_mode, Bencher, JsonReport};
 use igp::util::rng::Rng;
@@ -68,6 +68,73 @@ fn rust_backends(json: &mut Option<JsonReport>, quick: bool) {
             });
             if let Some(j) = json.as_mut() {
                 j.push(&op_name, "dense", n, d, 1, &r);
+            }
+        }
+    }
+}
+
+/// Sharded-operator section: per-solver epoch latency against the
+/// row-sharded tiled layout (S = 4), plus CG with the matching
+/// block-Jacobi-of-shards preconditioner (`precond_shards`) against the
+/// global Woodbury build — the factorisation cost scales per shard, the
+/// preconditioner is weaker, and this records both sides of that trade.
+fn sharded_backend(json: &mut Option<JsonReport>, quick: bool) {
+    let b = Bencher::default();
+    let configs: &[&str] = if quick { &["test"] } else { &["test", "protein"] };
+    for &config in configs {
+        let ds = data::generate(&data::spec(config).unwrap());
+        let hp = Hyperparams { ell: vec![1.0; ds.spec.d], sigf: 1.0, sigma: 0.3 };
+        let block = (ds.spec.n / 16).clamp(32, 256);
+        let shards = 4usize;
+
+        let mut op = ShardedOperator::new(&ds, 8, 64, shards);
+        op.set_hp(&hp);
+        let mut rng = Rng::new(1);
+        let probes = ProbeSet::sample(EstimatorKind::Pathwise, &op, &mut rng);
+        let targets = probes.targets(&op, &ds.y_train);
+        let (n, d) = (op.n(), op.d());
+
+        for kind in [SolverKind::Cg, SolverKind::Ap, SolverKind::Sgd] {
+            let mut solver = make_solver(kind);
+            let opts = epoch_opts(block);
+            let r = b.run(
+                &format!("{config}/{}-epoch sharded S={shards} (rust)", kind.name()),
+                None,
+                || {
+                    let mut v = Mat::zeros(n, op.k_width());
+                    std::hint::black_box(solver.solve(&op, &targets, &mut v, &opts));
+                },
+            );
+            if let Some(j) = json.as_mut() {
+                j.push(
+                    &format!("{}-epoch-sharded", kind.name()),
+                    &format!("sharded-s{shards}"),
+                    n,
+                    d,
+                    op.threads(),
+                    &r,
+                );
+            }
+        }
+
+        // preconditioner build + one CG iteration, global vs block-Jacobi
+        for (label, precond_shards) in [("woodbury", 0usize), ("block-jacobi", shards)] {
+            let mut solver = make_solver(SolverKind::Cg);
+            let opts = SolveOptions {
+                precond_rank: 64.min(n / 4),
+                precond_shards,
+                ..epoch_opts(block)
+            };
+            let r = b.run(
+                &format!("{config}/cg-precond {label} S={precond_shards} (rust)"),
+                None,
+                || {
+                    let mut v = Mat::zeros(n, op.k_width());
+                    std::hint::black_box(solver.solve(&op, &targets, &mut v, &opts));
+                },
+            );
+            if let Some(j) = json.as_mut() {
+                j.push(&format!("cg-precond-{label}"), "sharded-s4", n, d, op.threads(), &r);
             }
         }
     }
@@ -146,6 +213,7 @@ fn main() {
     let quick = quick_mode();
     let mut json = JsonReport::from_args();
     rust_backends(&mut json, quick);
+    sharded_backend(&mut json, quick);
     recurrence_threads(&mut json, quick);
     xla_backends(quick);
     if let Some(j) = &json {

@@ -203,6 +203,10 @@ pub struct RunConfig {
     pub rff: usize,
     /// Tile edge for the tiled backend.
     pub tile: usize,
+    /// Row shards for the tiled backend (1 = monolithic).  Each shard owns
+    /// its own panel cache; products fold shard partials in canonical
+    /// order, so results are bitwise-identical to the monolithic operator.
+    pub shards: usize,
     /// Worker threads for the tiled backend (0 = auto).
     pub threads: usize,
     /// Online data-arrival mode: replay the dataset in this many chunks,
@@ -227,6 +231,7 @@ impl Default for RunConfig {
             probes: 16,
             rff: 256,
             tile: 256,
+            shards: 1,
             threads: 0,
             online_chunks: 0,
         }
@@ -255,6 +260,7 @@ impl RunConfig {
                     "probes" => rc.probes = v.as_int()? as usize,
                     "rff" => rc.rff = v.as_int()? as usize,
                     "tile" => rc.tile = v.as_int()? as usize,
+                    "shards" => rc.shards = v.as_int()? as usize,
                     "threads" => rc.threads = v.as_int()? as usize,
                     "online_chunks" => rc.online_chunks = v.as_int()? as usize,
                     other => bail!("unknown run config key '{other}'"),
@@ -288,6 +294,12 @@ impl RunConfig {
         }
         if self.tile == 0 {
             bail!("tile must be positive");
+        }
+        if self.shards == 0 {
+            bail!("shards must be positive (1 = monolithic)");
+        }
+        if self.shards > 1 && self.backend != "tiled" {
+            bail!("shards > 1 requires the tiled backend, got '{}'", self.backend);
         }
         if self.online_chunks > 1 && self.backend == "xla" {
             bail!("online mode needs a resizable backend (dense|tiled); xla artifacts have static shapes");
@@ -387,6 +399,21 @@ mod tests {
         assert!(RunConfig::from_doc(&bad).is_err());
         let zero_tile = parse(r#"tile = 0"#).unwrap();
         assert!(RunConfig::from_doc(&zero_tile).is_err());
+    }
+
+    #[test]
+    fn run_config_shards() {
+        let doc = parse("shards = 3").unwrap();
+        assert_eq!(RunConfig::from_doc(&doc).unwrap().shards, 3);
+        // default is monolithic
+        assert_eq!(RunConfig::default().shards, 1);
+        let zero = parse("shards = 0").unwrap();
+        assert!(RunConfig::from_doc(&zero).is_err());
+        // only the tiled backend has a sharded layout
+        let dense = parse("shards = 2\nbackend = \"dense\"").unwrap();
+        assert!(RunConfig::from_doc(&dense).is_err());
+        let one_dense = parse("shards = 1\nbackend = \"dense\"").unwrap();
+        assert!(RunConfig::from_doc(&one_dense).is_ok());
     }
 
     #[test]

@@ -184,6 +184,10 @@ impl Trainer {
             tolerance: opts.tolerance,
             max_epochs: opts.max_epochs.unwrap_or(opts.epoch_cap),
             precond_rank: opts.precond_rank,
+            // block-Jacobi preconditioning stays opt-in at the solver
+            // layer: the trainer's telemetry must not depend on how the
+            // *operator* is sharded
+            precond_shards: 0,
             block_size: block,
             sgd_lr: opts.sgd_lr.unwrap_or(0.0), // resolved on first step
             sgd_momentum: 0.9,

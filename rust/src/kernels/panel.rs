@@ -138,6 +138,35 @@ impl ScaledX {
         }
     }
 
+    /// Row subset gathered across several caches that jointly cover one
+    /// contiguous global index space — the sharded operator's counterpart
+    /// of [`ScaledX::gather`].  Part `p` owns global rows
+    /// `starts[p] .. starts[p] + parts[p].n()` (starts ascending).  Rows
+    /// and norms are copied from the owning part, and per-shard caches
+    /// hold exactly the bits a monolithic cache holds for those rows, so
+    /// the result is bitwise-identical to gathering from one.
+    pub fn gather_parts(parts: &[ScaledX], starts: &[usize], idx: &[usize]) -> ScaledX {
+        assert!(!parts.is_empty() && parts.len() == starts.len());
+        let d = parts[0].d();
+        let mut out = ScaledX {
+            key: parts[0].key.clone(),
+            xs: Mat::zeros(0, d),
+            sq: Vec::with_capacity(idx.len()),
+        };
+        out.xs.data.reserve(idx.len() * d);
+        for &gi in idx {
+            let p = match starts.binary_search(&gi) {
+                Ok(p) => p,
+                Err(p) => p - 1,
+            };
+            let li = gi - starts[p];
+            out.xs.data.extend_from_slice(parts[p].row(li));
+            out.xs.rows += 1;
+            out.sq.push(parts[p].sq(li));
+        }
+        out
+    }
+
     fn append(&mut self, x: &Mat, ell: &[f64]) {
         assert_eq!(x.cols, self.xs.cols);
         let d = x.cols;
@@ -426,6 +455,34 @@ mod tests {
         let g = sx.gather(&[3, 0, 11]);
         assert_eq!(g.sq(0).to_bits(), sx.sq(3).to_bits());
         assert_eq!(g.row(2), sx.row(11));
+    }
+
+    #[test]
+    fn gather_parts_matches_monolithic_gather_bitwise() {
+        let mut rng = Rng::new(5);
+        let (n, d) = (17, 3);
+        let x = crate::linalg::Mat::from_fn(n, d, |_, _| rng.gaussian());
+        let ell = vec![0.8, 1.1, 0.6];
+        let whole = ScaledX::new(&x, &ell);
+        // split 0..17 into ragged parts 0..6, 6..12, 12..17
+        let bounds = [(0usize, 6usize), (6, 12), (12, 17)];
+        let mut parts = Vec::new();
+        let mut starts = Vec::new();
+        for &(a, b) in &bounds {
+            let rows: Vec<usize> = (a..b).collect();
+            parts.push(ScaledX::new(&x.gather_rows(&rows), &ell));
+            starts.push(a);
+        }
+        let idx = vec![0, 5, 6, 11, 12, 16, 3, 14];
+        let got = ScaledX::gather_parts(&parts, &starts, &idx);
+        let want = whole.gather(&idx);
+        assert_eq!(got.n(), want.n());
+        for i in 0..got.n() {
+            assert_eq!(got.sq(i).to_bits(), want.sq(i).to_bits(), "sq {i}");
+            for (a, b) in got.row(i).iter().zip(want.row(i)) {
+                assert_eq!(a.to_bits(), b.to_bits());
+            }
+        }
     }
 
     #[test]

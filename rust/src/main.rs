@@ -57,7 +57,7 @@ fn print_help() {
 USAGE:
     igp train [--config FILE] [--dataset D] [--solver cg|ap|sgd]
               [--estimator standard|pathwise] [--warm-start]
-              [--backend dense|tiled|xla] [--tile N] [--threads N]
+              [--backend dense|tiled|xla] [--tile N] [--shards S] [--threads N]
               [--probes S] [--rff M] [--online K]
               [--steps N] [--lr F] [--max-epochs N] [--seed N]
               [--artifacts DIR] [--out results.csv]
@@ -73,7 +73,9 @@ USAGE:
 
 BACKENDS:
     tiled  (default) matrix-free multi-threaded CPU backend, O(n*d) memory;
-           knobs: --tile (block edge, default 256), --threads (0 = auto)
+           knobs: --tile (block edge, default 256), --threads (0 = auto),
+           --shards (row shards with per-shard panel caches, default 1;
+           bitwise-identical results for every shard count)
     dense  pure-Rust oracle materialising H, O(n^2) memory (tiny n only)
     xla    compiled PJRT artifacts (needs `make artifacts` + xla feature)
 
@@ -127,7 +129,8 @@ fn cmd_train_online(rc: &RunConfig, out_path: Option<&str>) -> Result<()> {
     let backend = BackendKind::parse(&rc.backend)?;
     let (base, chunks) = ds.replay_chunks(rc.online_chunks);
     let topts = TiledOptions { tile: rc.tile, threads: rc.threads };
-    let op = igp::operators::make_cpu_backend(backend, &base, rc.probes, rc.rff, topts)?;
+    let op =
+        igp::operators::make_cpu_backend(backend, &base, rc.probes, rc.rff, topts, rc.shards)?;
     igp::info!(
         "backend: {} (online: {} arrivals of ~{} rows)",
         backend.name(),
@@ -191,8 +194,8 @@ fn cmd_train_online(rc: &RunConfig, out_path: Option<&str>) -> Result<()> {
 /// Option names (taking a value) shared by `train` and `serve`.
 const TRAIN_VALUE_KEYS: &[&str] = &[
     "config", "dataset", "solver", "estimator", "steps", "lr", "max-epochs",
-    "seed", "artifacts", "out", "tolerance", "backend", "tile", "threads",
-    "probes", "rff", "online",
+    "seed", "artifacts", "out", "tolerance", "backend", "tile", "shards",
+    "threads", "probes", "rff", "online",
 ];
 
 /// Resolve a [`RunConfig`] from `--config` plus flag overrides — single
@@ -239,6 +242,9 @@ fn run_config_from_args(p: &cli::Parser) -> Result<RunConfig> {
     if let Some(v) = p.get_parsed::<usize>("tile")? {
         rc.tile = v;
     }
+    if let Some(v) = p.get_parsed::<usize>("shards")? {
+        rc.shards = v;
+    }
     if let Some(v) = p.get_parsed::<usize>("threads")? {
         rc.threads = v;
     }
@@ -276,7 +282,7 @@ fn cmd_train(args: &[String]) -> Result<()> {
         kind => {
             let topts = TiledOptions { tile: rc.tile, threads: rc.threads };
             (
-                igp::operators::make_cpu_backend(kind, &ds, rc.probes, rc.rff, topts)?,
+                igp::operators::make_cpu_backend(kind, &ds, rc.probes, rc.rff, topts, rc.shards)?,
                 None,
             )
         }
@@ -366,7 +372,7 @@ fn cmd_serve(args: &[String]) -> Result<()> {
     let ds = igp::data::generate(&igp::data::spec(&rc.dataset)?);
     let backend = BackendKind::parse(&rc.backend)?;
     let topts = TiledOptions { tile: rc.tile, threads: rc.threads };
-    let op = igp::operators::make_cpu_backend(backend, &ds, rc.probes, rc.rff, topts)?;
+    let op = igp::operators::make_cpu_backend(backend, &ds, rc.probes, rc.rff, topts, rc.shards)?;
     igp::info!("backend: {} (serving batch = {batch})", backend.name());
     let opts = trainer_options(&rc, None)?;
     let mut trainer = Trainer::new(opts, op, &ds);

@@ -15,6 +15,11 @@
 //!   accelerator path.  Lives in `runtime::xla_op`, re-exported here, and
 //!   requires the `xla` cargo feature plus compiled artifacts.
 //!
+//! A fourth layout, [`ShardedOperator`] (`--shards S`, lives in `sharded`),
+//! partitions the tiled backend's rows into S shards with per-shard panel
+//! caches — bitwise-identical products, per-shard memory scaling, and a
+//! partial-buffer communication contract for future multi-process runs.
+//!
 //! Memory/knob summary:
 //!
 //! | backend | memory   | `set_hp` | parallelism        | knobs              |
@@ -32,6 +37,7 @@
 //! functions, same accumulation order, so tiled == dense is **bitwise**
 //! on `hv`, `k_cols`, `k_rows` and `predict_at` by construction.
 
+pub mod sharded;
 pub mod tiled;
 
 use crate::data::Dataset;
@@ -40,6 +46,7 @@ use crate::kernels::{self, Hyperparams, KernelFamily};
 use crate::linalg::Mat;
 
 pub use crate::runtime::xla_op::XlaOperator;
+pub use sharded::ShardedOperator;
 pub use tiled::{TiledOperator, TiledOptions};
 
 /// Which [`KernelOperator`] implementation to run against.
@@ -71,16 +78,29 @@ impl BackendKind {
 
 /// Construct a pure-Rust backend for a dataset (`Dense` or `Tiled`; the
 /// `Xla` backend needs a compiled [`crate::runtime::Model`] and is built by
-/// the caller).  `s` = probe count, `m` = RFF feature pairs.
+/// the caller).  `s` = probe count, `m` = RFF feature pairs.  `shards > 1`
+/// selects the sharded tiled layout ([`ShardedOperator`]) — bitwise-equal
+/// products, per-shard panel caches; only the tiled backend shards.
 pub fn make_cpu_backend(
     kind: BackendKind,
     ds: &Dataset,
     s: usize,
     m: usize,
     opts: TiledOptions,
+    shards: usize,
 ) -> anyhow::Result<Box<dyn KernelOperator>> {
+    if shards > 1 && kind != BackendKind::Tiled {
+        anyhow::bail!(
+            "--shards {} requires the tiled backend (got '{}')",
+            shards,
+            kind.name()
+        );
+    }
     Ok(match kind {
         BackendKind::Dense => Box::new(DenseOperator::new(ds, s, m)),
+        BackendKind::Tiled if shards > 1 => {
+            Box::new(ShardedOperator::with_options(ds, s, m, opts, shards))
+        }
         BackendKind::Tiled => Box::new(TiledOperator::with_options(ds, s, m, opts)),
         BackendKind::Xla => anyhow::bail!(
             "backend 'xla' needs compiled artifacts; construct XlaOperator from a runtime Model"

@@ -1,0 +1,717 @@
+//! [`ShardedOperator`]: the tiled backend partitioned into S row shards,
+//! each owning its own [`ScaledX`] panel cache over a contiguous range of
+//! training rows — the operator layout for n ≫ 10⁵, where a single
+//! monolithic panel cache (and a single global preconditioner build) is
+//! the wall.
+//!
+//! **Partitioning rule.**  `util::parallel::shard_ranges(n, S)` assigns
+//! contiguous, balanced row ranges (the first `n % S` shards get one extra
+//! row).  Online arrivals ([`ShardedOperator::extend`]) append to the
+//! *last* shard: earlier shard boundaries never move, so global row
+//! indices — and with them the warm-start store, probe rows and the
+//! partial-buffer contract — stay stable across arrivals (the last shard
+//! simply grows ragged).
+//!
+//! **Bitwise-parity contract.**  Every product is *bitwise-identical* to a
+//! [`TiledOperator`](super::TiledOperator) with the same tile size and
+//! thread count, for every shard count (enforced by
+//! `tests/sharded_parity.rs`).  Two facts make this work:
+//!
+//! 1. panel entries are pure functions of their global (i, j) pair, and a
+//!    per-shard cache holds exactly the bits a monolithic cache holds for
+//!    the shard's rows — so any panel or kernel-row *segment* filled from
+//!    a shard cache reproduces the monolithic fill's bits;
+//! 2. [`panel::apply_panel`] accumulates each output row one column at a
+//!    time in ascending global j — so splitting the column sweep at shard
+//!    boundaries (and re-tiling within each shard) never changes the
+//!    floating-point association.
+//!
+//! `hv_into` therefore sweeps the shards' column ranges **in place, in
+//! ascending shard order** on the existing strided pool.  That is
+//! deliberately *not* "sum S independent partial buffers" — summing
+//! separately accumulated partials would reassociate the additions.  The
+//! multi-process communication contract is still partial-buffer-shaped:
+//! [`ShardedOperator::hv_shard_partial`] computes the `hv_into`-shaped
+//! [n, k] buffer contributed by one shard's columns, and a multi-node
+//! deployment exchanges exactly those buffers (their fold agrees with
+//! `hv` to floating-point reassociation, tested here); only the in-process
+//! accumulation order upgrade is what buys bitwise equality.
+
+use crate::data::Dataset;
+use crate::kernels::panel::{self, ScaledX};
+use crate::kernels::{self, Hyperparams, KernelFamily};
+use crate::linalg::{micro, Mat};
+use crate::util::parallel::{num_threads, parallel_reduce, parallel_row_blocks, shard_ranges};
+use crate::util::stats;
+
+use super::{dl_weight, rff_fill_row, HvScratch, KernelOperator, TiledOptions};
+
+/// Matrix-free kernel operator over S contiguous row shards, each with its
+/// own panel cache (O(n·d) total memory, like the tiled backend, but no
+/// single allocation or cache scales beyond the largest shard — the full
+/// X is kept only for the trait's `x()` accessor and the scalar-path
+/// `grad_quad`/`exact_mll`).
+pub struct ShardedOperator {
+    x: Mat,
+    x_test: Mat,
+    s: usize,
+    m: usize,
+    family: KernelFamily,
+    hp: Hyperparams,
+    /// Per-shard panel caches; shard k owns global rows
+    /// `starts[k] .. starts[k] + shards[k].n()` (contiguous, ascending).
+    shards: Vec<ScaledX>,
+    starts: Vec<usize>,
+    tile: usize,
+    threads: usize,
+}
+
+impl ShardedOperator {
+    /// Build with default tile/thread options.
+    pub fn new(ds: &Dataset, s: usize, m: usize, shards: usize) -> Self {
+        Self::with_options(ds, s, m, TiledOptions::default(), shards)
+    }
+
+    pub fn with_options(
+        ds: &Dataset,
+        s: usize,
+        m: usize,
+        opts: TiledOptions,
+        shards: usize,
+    ) -> Self {
+        let hp = Hyperparams::ones(ds.spec.d);
+        let x = ds.x_train.clone();
+        let (parts, starts) = build_shards(&x, &hp.ell, shards);
+        ShardedOperator {
+            x,
+            x_test: ds.x_test.clone(),
+            s,
+            m,
+            family: ds.spec.family,
+            hp,
+            shards: parts,
+            starts,
+            tile: opts.tile.max(1),
+            threads: num_threads(if opts.threads == 0 { None } else { Some(opts.threads) }),
+        }
+    }
+
+    pub fn num_shards(&self) -> usize {
+        self.shards.len()
+    }
+
+    pub fn tile_size(&self) -> usize {
+        self.tile
+    }
+
+    pub fn threads(&self) -> usize {
+        self.threads
+    }
+
+    /// Global row range owned by shard `k` (diagnostics / preconditioner
+    /// shard alignment).
+    pub fn shard_range(&self, k: usize) -> (usize, usize) {
+        (self.starts[k], self.starts[k] + self.shards[k].n())
+    }
+
+    /// Owning shard and local index of global row `i`.
+    #[inline]
+    fn owner(&self, i: usize) -> (usize, usize) {
+        let p = match self.starts.binary_search(&i) {
+            Ok(p) => p,
+            Err(p) => p - 1,
+        };
+        (p, i - self.starts[p])
+    }
+
+    #[inline]
+    fn shard_end(&self, k: usize) -> usize {
+        self.starts[k] + self.shards[k].n()
+    }
+
+    fn sf2(&self) -> f64 {
+        self.hp.sigf * self.hp.sigf
+    }
+
+    /// Number of row/col tiles covering n points (scalar grad path).
+    fn ntiles(&self) -> usize {
+        let n = self.x.rows;
+        (n + self.tile - 1) / self.tile
+    }
+
+    /// Row range of tile `b` (scalar grad path).
+    fn tile_range(&self, b: usize) -> (usize, usize) {
+        let n = self.x.rows;
+        (b * self.tile, ((b + 1) * self.tile).min(n))
+    }
+
+    /// Fill the row-major panel K(X[i0..i1], X[j0..j1]) where the column
+    /// window lives inside column shard `sx` (global base `sbase`) and the
+    /// *row* range may span several shards: split it at shard boundaries
+    /// and fill each segment from the owning cache.  Entries are pure per
+    /// global (i, j), so this is bitwise equal to a monolithic fill.
+    fn fill_panel_rows(
+        &self,
+        i0: usize,
+        i1: usize,
+        sx: &ScaledX,
+        sbase: usize,
+        j0: usize,
+        j1: usize,
+        out: &mut [f64],
+    ) {
+        let w = j1 - j0;
+        let sf2 = self.sf2();
+        let mut i = i0;
+        while i < i1 {
+            let (rk, li) = self.owner(i);
+            let seg_end = i1.min(self.shard_end(rk));
+            panel::fill_panel(
+                &self.shards[rk],
+                li,
+                li + (seg_end - i),
+                sx,
+                j0 - sbase,
+                j1 - sbase,
+                sf2,
+                self.family,
+                &mut out[(i - i0) * w..(seg_end - i0) * w],
+            );
+            i = seg_end;
+        }
+    }
+
+    /// Fill one full-n kernel row K(a_i, X), segment-per-shard in
+    /// ascending shard order — bitwise equal to the monolithic fill.
+    fn fill_krow(&self, a: &ScaledX, i: usize, krow: &mut [f64]) {
+        let sf2 = self.sf2();
+        for (sk, sx) in self.shards.iter().enumerate() {
+            let sbase = self.starts[sk];
+            panel::fill_row(a, i, sx, 0, sf2, self.family, &mut krow[sbase..sbase + sx.n()]);
+        }
+    }
+
+    /// The multi-process communication contract: the `hv_into`-shaped
+    /// [n, k] partial contributed by shard `shard`'s *columns*,
+    /// `out = (K(X, X[cols]) + σ²·I[:, cols]) · v[cols, :]`.  A multi-node
+    /// deployment computes one of these per shard owner and exchanges only
+    /// these buffers; their shard-order fold equals `hv(v)` up to
+    /// floating-point reassociation.  The in-process `hv_into` instead
+    /// accumulates the shard sweeps in place (ascending shard order),
+    /// which is what keeps it *bitwise* equal to the monolithic operator.
+    pub fn hv_shard_partial(&self, shard: usize, v: &Mat, out: &mut Mat) {
+        let n = self.n();
+        assert!(shard < self.shards.len(), "hv_shard_partial: no shard {shard}");
+        assert_eq!(v.rows, n);
+        let k = v.cols;
+        assert_eq!((out.rows, out.cols), (n, k));
+        let noise_var = self.hp.noise_var();
+        let tile = self.tile;
+        let sbase = self.starts[shard];
+        let send = self.shard_end(shard);
+        let sx = &self.shards[shard];
+        parallel_row_blocks(&mut out.data, k, tile, self.threads, |r0, rows, block| {
+            block.fill(0.0);
+            let mut pbuf = vec![0.0; rows * tile];
+            let mut j0 = sbase;
+            while j0 < send {
+                let j1 = (j0 + tile).min(send);
+                let w = j1 - j0;
+                let panel = &mut pbuf[..rows * w];
+                self.fill_panel_rows(r0, r0 + rows, sx, sbase, j0, j1, panel);
+                // the diagonal rows inside this shard's column range carry
+                // the sigma² I contribution of the partial
+                let (d0, d1) = (r0.max(j0), (r0 + rows).min(j1));
+                for i in d0..d1 {
+                    panel[(i - r0) * w + (i - j0)] += noise_var;
+                }
+                panel::apply_panel(panel, rows, w, j0, v, block);
+                j0 = j1;
+            }
+        });
+    }
+}
+
+fn build_shards(x: &Mat, ell: &[f64], shards: usize) -> (Vec<ScaledX>, Vec<usize>) {
+    let ranges = shard_ranges(x.rows, shards);
+    let mut parts = Vec::with_capacity(ranges.len());
+    let mut starts = Vec::with_capacity(ranges.len());
+    for &(r0, r1) in &ranges {
+        let rows: Vec<usize> = (r0..r1).collect();
+        parts.push(ScaledX::new(&x.gather_rows(&rows), ell));
+        starts.push(r0);
+    }
+    (parts, starts)
+}
+
+impl KernelOperator for ShardedOperator {
+    fn n(&self) -> usize {
+        self.x.rows
+    }
+    fn d(&self) -> usize {
+        self.x.cols
+    }
+    fn s(&self) -> usize {
+        self.s
+    }
+    fn m(&self) -> usize {
+        self.m
+    }
+    fn family(&self) -> KernelFamily {
+        self.family
+    }
+    fn x(&self) -> &Mat {
+        &self.x
+    }
+    fn x_test(&self) -> &Mat {
+        &self.x_test
+    }
+    fn hp(&self) -> &Hyperparams {
+        &self.hp
+    }
+
+    fn set_hp(&mut self, hp: &Hyperparams) {
+        assert_eq!(hp.ell.len(), self.d());
+        self.hp = hp.clone();
+        // rebuild only the caches whose lengthscale key changed (all or
+        // none in practice); sigf/sigma-only steps keep every shard
+        for sk in 0..self.shards.len() {
+            let sn = self.shards[sk].n();
+            if self.shards[sk].matches(&hp.ell, sn) {
+                continue;
+            }
+            let r0 = self.starts[sk];
+            let rows: Vec<usize> = (r0..r0 + sn).collect();
+            let xs = self.x.gather_rows(&rows);
+            self.shards[sk] = ScaledX::new(&xs, &hp.ell);
+        }
+    }
+
+    /// Online data arrival: the appended rows go to the *last* shard, so
+    /// earlier shard boundaries (and the partial-buffer contract) stay
+    /// fixed and the last shard grows ragged — O(n_new·d), and the grown
+    /// cache rows are bitwise-identical to a fresh build's.
+    fn extend(&mut self, x_new: &Mat) -> anyhow::Result<()> {
+        anyhow::ensure!(x_new.rows > 0, "extend: empty chunk");
+        anyhow::ensure!(
+            x_new.cols == self.x.cols,
+            "extend: chunk has d = {} but the operator holds d = {}",
+            x_new.cols,
+            self.x.cols
+        );
+        self.x.append_rows(x_new);
+        self.shards
+            .last_mut()
+            .expect("sharded operator always has at least one shard")
+            .extend(x_new, &self.hp.ell);
+        Ok(())
+    }
+
+    /// Thin allocating wrapper over [`ShardedOperator::hv_into`].
+    fn hv(&self, v: &Mat) -> Mat {
+        let mut out = Mat::zeros(self.n(), v.cols);
+        self.hv_into(v, &mut out, &HvScratch::default());
+        out
+    }
+
+    /// H @ V, row-block-parallel on the existing strided pool.  Each
+    /// worker owns a disjoint block of output rows and sweeps the shards'
+    /// column ranges in ascending shard order, re-tiling within each
+    /// shard; panels are filled from the per-shard caches (row segments
+    /// split at shard boundaries) and accumulated in place.  Because
+    /// [`panel::apply_panel`] walks columns one ascending-j axpy at a
+    /// time, the extra window boundaries at shard edges never change the
+    /// association — bitwise equal to the monolithic tiled sweep.
+    fn hv_into(&self, v: &Mat, out: &mut Mat, scratch: &HvScratch) {
+        let n = self.n();
+        assert_eq!(v.rows, n);
+        let k = v.cols;
+        assert_eq!(
+            (out.rows, out.cols),
+            (n, k),
+            "hv_into: output is {}x{} but the product is {}x{}",
+            out.rows,
+            out.cols,
+            n,
+            k
+        );
+        let noise_var = self.hp.noise_var();
+        let tile = self.tile;
+        parallel_row_blocks(&mut out.data, k, tile, self.threads, |r0, rows, block| {
+            block.fill(0.0);
+            let mut pbuf = scratch.take(rows * tile);
+            for (sk, sx) in self.shards.iter().enumerate() {
+                let sbase = self.starts[sk];
+                let send = sbase + sx.n();
+                let mut j0 = sbase;
+                while j0 < send {
+                    let j1 = (j0 + tile).min(send);
+                    let w = j1 - j0;
+                    let panel = &mut pbuf[..rows * w];
+                    self.fill_panel_rows(r0, r0 + rows, sx, sbase, j0, j1, panel);
+                    // sigma² I where the panel crosses the global diagonal
+                    let (d0, d1) = (r0.max(j0), (r0 + rows).min(j1));
+                    for i in d0..d1 {
+                        panel[(i - r0) * w + (i - j0)] += noise_var;
+                    }
+                    panel::apply_panel(panel, rows, w, j0, v, block);
+                    j0 = j1;
+                }
+            }
+            scratch.put(pbuf);
+        });
+    }
+
+    /// K(X, X[idx]) @ U: the batch rows are gathered *across* shards
+    /// ([`ScaledX::gather_parts`], bit-equal to a monolithic gather), each
+    /// output row is one panel row filled from its owning shard.
+    fn k_cols(&self, idx: &[usize], u: &Mat) -> Mat {
+        assert_eq!(u.rows, idx.len());
+        let n = self.n();
+        let nb = idx.len();
+        let k = u.cols;
+        let sb = ScaledX::gather_parts(&self.shards, &self.starts, idx);
+        let sf2 = self.sf2();
+        let mut out = Mat::zeros(n, k);
+        parallel_row_blocks(&mut out.data, k, self.tile, self.threads, |r0, rows, block| {
+            let mut krow = vec![0.0; nb];
+            for r in 0..rows {
+                let i = r0 + r;
+                let (rk, li) = self.owner(i);
+                panel::fill_row(&self.shards[rk], li, &sb, 0, sf2, self.family, &mut krow);
+                panel::apply_panel(&krow, 1, nb, 0, u, &mut block[r * k..(r + 1) * k]);
+            }
+        });
+        out
+    }
+
+    /// K(X[idx], X) @ V: one full-n kernel row per batch row, filled
+    /// segment-per-shard in ascending shard order, applied in ascending-j
+    /// `matmul` order — bitwise equal to tiled/dense.
+    fn k_rows(&self, idx: &[usize], v: &Mat) -> Mat {
+        let n = self.n();
+        assert_eq!(v.rows, n);
+        let k = v.cols;
+        let sa = ScaledX::gather_parts(&self.shards, &self.starts, idx);
+        let mut out = Mat::zeros(idx.len(), k);
+        let rows_total = idx.len().max(1);
+        let block = (rows_total + self.threads - 1) / self.threads;
+        parallel_row_blocks(&mut out.data, k, block, self.threads, |r0, rows, blk| {
+            let mut krow = vec![0.0; n];
+            for r in 0..rows {
+                self.fill_krow(&sa, r0 + r, &mut krow);
+                panel::apply_panel(&krow, 1, n, 0, v, &mut blk[r * k..(r + 1) * k]);
+            }
+        });
+        out
+    }
+
+    /// Identical to the tiled backend's scalar-path gradient: the
+    /// lengthscale gradient needs per-dimension differences, which the
+    /// per-shard Gram caches do not expose, so this walks the full X over
+    /// the same (tile, threads) grid — bitwise equal to tiled by
+    /// construction.
+    fn grad_quad(&self, a: &Mat, b: &Mat, w: &[f64]) -> Vec<f64> {
+        let (n, d) = (self.n(), self.d());
+        assert_eq!(a.rows, n);
+        assert_eq!(b.rows, n);
+        assert_eq!(a.cols, b.cols);
+        assert_eq!(w.len(), a.cols);
+        let k = a.cols;
+        let aw = super::weighted_cols(a, w);
+        let nb = self.ntiles();
+        let sf2 = self.hp.sigf * self.hp.sigf;
+        let partials = parallel_reduce(
+            nb * nb,
+            self.threads,
+            || vec![0.0; d + 2],
+            |grad, p| {
+                let (bi, bj) = (p / nb, p % nb);
+                let (i0, i1) = self.tile_range(bi);
+                let (j0, j1) = self.tile_range(bj);
+                for i in i0..i1 {
+                    let awi = &aw.data[i * k..(i + 1) * k];
+                    let xi = self.x.row(i);
+                    for j in j0..j1 {
+                        let bj_row = &b.data[j * k..(j + 1) * k];
+                        let cij = stats::dot(awi, bj_row);
+                        if cij == 0.0 {
+                            continue;
+                        }
+                        let xj = self.x.row(j);
+                        let sq = kernels::sqdist_scaled(xi, xj, &self.hp.ell);
+                        let h_r = dl_weight(sq, self.family);
+                        for kk in 0..d {
+                            let dlt = (xi[kk] - xj[kk]) / self.hp.ell[kk];
+                            grad[kk] += cij * sf2 * h_r * dlt * dlt / self.hp.ell[kk];
+                        }
+                        grad[d] += cij * 2.0 * sf2 * self.family.unit_cov(sq) / self.hp.sigf;
+                    }
+                }
+            },
+        );
+        let mut grad = vec![0.0; d + 2];
+        for p in &partials {
+            for (g, v) in grad.iter_mut().zip(p) {
+                *g += v;
+            }
+        }
+        grad[d + 1] = super::noise_grad(a, b, w, self.hp.sigma);
+        grad
+    }
+
+    /// Xi = Phi(X) wts + sigma * noise: row-parallel, the scaled feature
+    /// row read from the owning shard's cache (bit-identical rows).
+    fn rff_eval(&self, omega0: &Mat, wts: &Mat, noise: &Mat) -> Mat {
+        let n = self.n();
+        let d = self.d();
+        assert_eq!(omega0.rows, d);
+        let m = omega0.cols;
+        assert_eq!(wts.rows, 2 * m);
+        let s = wts.cols;
+        assert_eq!((noise.rows, noise.cols), (n, s));
+        let amp = self.hp.sigf * (1.0 / m as f64).sqrt();
+        let sigma = self.hp.sigma;
+        let mut out = Mat::zeros(n, s);
+        parallel_row_blocks(&mut out.data, s, self.tile, self.threads, |r0, rows, block| {
+            let mut phi = vec![0.0; 2 * m];
+            for r in 0..rows {
+                let i = r0 + r;
+                let (rk, li) = self.owner(i);
+                rff_fill_row(self.shards[rk].row(li), omega0, amp, &mut phi);
+                let orow = &mut block[r * s..(r + 1) * s];
+                for (c, &pc) in phi.iter().enumerate() {
+                    if pc == 0.0 {
+                        continue;
+                    }
+                    micro::axpy(orow, pc, wts.row(c));
+                }
+                let nrow = noise.row(i);
+                for q in 0..s {
+                    orow[q] += sigma * nrow[q];
+                }
+            }
+        });
+        out
+    }
+
+    /// Pathwise-conditioned predictions at arbitrary queries: the query
+    /// kernel row is filled segment-per-shard in ascending shard order,
+    /// everything downstream mirrors the tiled/dense accumulation order —
+    /// bitwise equal to both.
+    fn predict_at(
+        &self,
+        x_query: &Mat,
+        vy: &[f64],
+        zhat: &Mat,
+        omega0: &Mat,
+        wts: &Mat,
+    ) -> anyhow::Result<(Vec<f64>, Mat)> {
+        let n = self.n();
+        let d = self.d();
+        anyhow::ensure!(
+            x_query.cols == d,
+            "predict_at: query has d = {} but the model has d = {}",
+            x_query.cols,
+            d
+        );
+        let tq = x_query.rows;
+        assert_eq!(vy.len(), n);
+        assert_eq!(zhat.rows, n);
+        assert_eq!(omega0.rows, d);
+        let m = omega0.cols;
+        assert_eq!(wts.rows, 2 * m);
+        let s = wts.cols;
+        assert_eq!(zhat.cols, s);
+        let amp = self.hp.sigf * (1.0 / m as f64).sqrt();
+        let qs = ScaledX::new(x_query, &self.hp.ell);
+        let width = 1 + s;
+        let mut packed = Mat::zeros(tq, width);
+        parallel_row_blocks(
+            &mut packed.data,
+            width,
+            self.tile,
+            self.threads,
+            |r0, rows, block| {
+                let mut krow = vec![0.0; n];
+                let mut phi = vec![0.0; 2 * m];
+                let mut corr = vec![0.0; s];
+                for r in 0..rows {
+                    let i = r0 + r;
+                    self.fill_krow(&qs, i, &mut krow);
+                    let orow = &mut block[r * width..(r + 1) * width];
+                    orow[0] = stats::dot(&krow, vy);
+                    rff_fill_row(qs.row(i), omega0, amp, &mut phi);
+                    let srow = &mut orow[1..];
+                    for (c, &pc) in phi.iter().enumerate() {
+                        if pc == 0.0 {
+                            continue;
+                        }
+                        micro::axpy(srow, pc, wts.row(c));
+                    }
+                    for v in corr.iter_mut() {
+                        *v = 0.0;
+                    }
+                    for j in 0..n {
+                        let kj = krow[j];
+                        if kj == 0.0 {
+                            continue;
+                        }
+                        let zr = zhat.row(j);
+                        for q in 0..s {
+                            corr[q] += kj * (vy[j] - zr[q]);
+                        }
+                    }
+                    for q in 0..s {
+                        srow[q] += corr[q];
+                    }
+                }
+            },
+        );
+        let mut mean = Vec::with_capacity(tq);
+        let mut samples = Mat::zeros(tq, s);
+        for i in 0..tq {
+            let prow = packed.row(i);
+            mean.push(prow[0]);
+            samples.row_mut(i).copy_from_slice(&prow[1..]);
+        }
+        Ok((mean, samples))
+    }
+
+    /// `predict_at` already parallelises over query rows internally;
+    /// forwarding the whole query produces identical bits (same reasoning
+    /// as the tiled backend).
+    fn predict_batched(
+        &self,
+        x_query: &Mat,
+        _batch: usize,
+        _threads: usize,
+        vy: &[f64],
+        zhat: &Mat,
+        omega0: &Mat,
+        wts: &Mat,
+    ) -> anyhow::Result<(Vec<f64>, Mat)> {
+        self.predict_at(x_query, vy, zhat, omega0, wts)
+    }
+
+    /// Exact MLL via the O(n³) Cholesky baseline on the full X (only sane
+    /// at small n; callers gate via `track_exact`).
+    fn exact_mll(&self, y: &[f64]) -> Option<(f64, Vec<f64>)> {
+        let gp = crate::gp::ExactGp::fit(&self.x, y, &self.hp, self.family).ok()?;
+        Some((gp.mll(y), gp.mll_grad()))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data;
+    use crate::operators::TiledOperator;
+    use crate::util::rng::Rng;
+
+    fn ops(tile: usize, threads: usize, shards: usize) -> (ShardedOperator, TiledOperator) {
+        let ds = data::generate(&data::spec("test").unwrap());
+        let hp = Hyperparams { ell: vec![0.9, 1.2, 0.7, 1.1], sigf: 1.2, sigma: 0.35 };
+        let mut sharded =
+            ShardedOperator::with_options(&ds, 4, 16, TiledOptions { tile, threads }, shards);
+        sharded.set_hp(&hp);
+        let mut tiled = TiledOperator::with_options(&ds, 4, 16, TiledOptions { tile, threads });
+        tiled.set_hp(&hp);
+        (sharded, tiled)
+    }
+
+    #[test]
+    fn shard_layout_is_contiguous_and_balanced() {
+        let (op, _) = ops(64, 2, 5);
+        assert_eq!(op.num_shards(), 5);
+        let mut covered = 0;
+        for k in 0..op.num_shards() {
+            let (a, b) = op.shard_range(k);
+            assert_eq!(a, covered);
+            covered = b;
+        }
+        assert_eq!(covered, op.n());
+    }
+
+    #[test]
+    fn hv_matches_tiled_bitwise_across_shard_counts() {
+        for shards in [1, 2, 3, 5, 8] {
+            let (sharded, tiled) = ops(48, 3, shards);
+            let mut rng = Rng::new(0);
+            let v = Mat::from_fn(sharded.n(), sharded.k_width(), |_, _| rng.gaussian());
+            let a = sharded.hv(&v);
+            let b = tiled.hv(&v);
+            for (i, (x, y)) in a.data.iter().zip(&b.data).enumerate() {
+                assert_eq!(x.to_bits(), y.to_bits(), "shards={shards} elem {i}: {x} vs {y}");
+            }
+            // hv_into with a reused dirty buffer and shared scratch keeps
+            // the bits
+            let scratch = HvScratch::default();
+            let mut out = Mat::from_fn(sharded.n(), sharded.k_width(), |_, _| -3.25);
+            sharded.hv_into(&v, &mut out, &scratch);
+            assert_eq!(out.data, a.data);
+        }
+    }
+
+    #[test]
+    fn shard_partials_fold_to_hv_within_tolerance() {
+        // the multi-process contract: per-shard column partials summed in
+        // shard order agree with hv up to fp reassociation (NOT bitwise —
+        // that is exactly why hv_into accumulates in place instead)
+        let (op, _) = ops(32, 2, 4);
+        let mut rng = Rng::new(1);
+        let v = Mat::from_fn(op.n(), op.k_width(), |_, _| rng.gaussian());
+        let want = op.hv(&v);
+        let mut sum = Mat::zeros(op.n(), op.k_width());
+        let mut part = Mat::zeros(op.n(), op.k_width());
+        for sk in 0..op.num_shards() {
+            op.hv_shard_partial(sk, &v, &mut part);
+            for (s, p) in sum.data.iter_mut().zip(&part.data) {
+                *s += p;
+            }
+        }
+        let scale = 1.0 + want.data.iter().fold(0.0f64, |a, &x| a.max(x.abs()));
+        let err = sum.max_abs_diff(&want);
+        assert!(err < 1e-10 * scale, "partial fold err {err}");
+    }
+
+    #[test]
+    fn extend_appends_to_the_last_shard_only() {
+        let (mut op, mut tiled) = ops(40, 2, 3);
+        let before: Vec<_> = (0..op.num_shards()).map(|k| op.shard_range(k)).collect();
+        let mut rng = Rng::new(2);
+        let chunk = Mat::from_fn(17, op.d(), |_, _| rng.gaussian());
+        op.extend(&chunk).unwrap();
+        tiled.extend(&chunk).unwrap();
+        for k in 0..op.num_shards() - 1 {
+            assert_eq!(op.shard_range(k), before[k], "boundary {k} moved");
+        }
+        let last = op.num_shards() - 1;
+        assert_eq!(op.shard_range(last).1, before[last].1 + 17);
+        // and products still match tiled bitwise after the ragged growth
+        let v = Mat::from_fn(op.n(), op.k_width(), |_, _| rng.gaussian());
+        let (a, b) = (op.hv(&v), tiled.hv(&v));
+        for (x, y) in a.data.iter().zip(&b.data) {
+            assert_eq!(x.to_bits(), y.to_bits());
+        }
+        // shape-mismatched chunks are rejected
+        assert!(op.extend(&Mat::zeros(2, op.d() + 1)).is_err());
+        assert!(op.extend(&Mat::zeros(0, op.d())).is_err());
+    }
+
+    #[test]
+    fn set_hp_keeps_caches_on_scale_only_steps() {
+        let (mut op, mut tiled) = ops(64, 2, 4);
+        let mut rng = Rng::new(3);
+        let v = Mat::from_fn(op.n(), op.k_width(), |_, _| rng.gaussian());
+        for sigma in [0.1, 0.5, 0.9] {
+            let hp = Hyperparams { ell: vec![1.0; 4], sigf: 1.0, sigma };
+            op.set_hp(&hp);
+            tiled.set_hp(&hp);
+            let (a, b) = (op.hv(&v), tiled.hv(&v));
+            for (x, y) in a.data.iter().zip(&b.data) {
+                assert_eq!(x.to_bits(), y.to_bits());
+            }
+        }
+    }
+}

@@ -55,7 +55,12 @@ impl LinearSolver for ApSolver {
             && opts.precond_rank > 0
             && opts.ap_selection == ApSelection::Greedy
         {
-            Some(self.cache.woodbury(op, opts.precond_rank, threads))
+            Some(self.cache.solver_preconditioner(
+                op,
+                opts.precond_rank,
+                opts.precond_shards,
+                threads,
+            ))
         } else {
             None
         };
@@ -82,11 +87,16 @@ impl LinearSolver for ApSolver {
             |blk: usize| (((blk + 1) * bsz).min(n) - blk * bsz) as f64 / n as f64;
         let min_epoch_per_iter = block_cost(nblocks - 1).min(block_cost(0));
         // Greedy no-progress guard: solving block I leaves r[I] at fp dust,
-        // so greedy re-selecting I *immediately* means every other block is
-        // either unaffordable (budget edge: only the cheap tail fits) or
-        // equally negligible — the iteration would charge its epoch
-        // fraction for a near-zero update.  Stop instead of burning the
-        // remaining budget on no-ops.
+        // so re-selecting I *immediately* would charge an epoch fraction
+        // for a near-zero update.  Mask the previous block from the
+        // candidate set for one round instead of stopping outright: under
+        // preconditioned scoring the M^-1-mixed score of the just-solved
+        // block can legitimately rank highest (the mix pulls in residual
+        // from other rows) while other blocks still carry real residual —
+        // breaking there froze the solve far from tolerance.  If masking
+        // empties the affordable set (budget edge: only the cheap tail
+        // fits), the selection below yields None and the loop stops, which
+        // preserves the old budget-edge behaviour.
         let mut last_greedy: Option<usize> = None;
 
         while (ry > tol || rz > tol) && epochs + min_epoch_per_iter <= opts.max_epochs {
@@ -113,18 +123,15 @@ impl LinearSolver for ApSolver {
                     let best = match scores
                         .iter()
                         .enumerate()
-                        .filter(|(i, _)| affordable(*i))
+                        .filter(|(i, _)| affordable(*i) && Some(*i) != last_greedy)
                         .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
                         .map(|(i, _)| i)
                     {
                         Some(i) => i,
-                        // loop guard makes the affordable set nonempty;
-                        // defensive fp edge
+                        // the affordable set net of the masked previous
+                        // block is empty: nothing useful is selectable
                         None => break,
                     };
-                    if last_greedy == Some(best) {
-                        break;
-                    }
                     last_greedy = Some(best);
                     best
                 }
@@ -455,6 +462,56 @@ mod tests {
             max_epochs: 3000.0,
             block_size: 64,
             precond_rank: 32,
+            ap_block_precond: true,
+            ..Default::default()
+        };
+        let mut v = Mat::zeros(op.n(), op.k_width());
+        let rep = ApSolver::default().solve(&op, &b, &mut v, &opts);
+        assert!(rep.converged, "{rep:?}");
+        let want = Chol::factor(op.h()).unwrap().solve_mat(&b);
+        assert!(v.max_abs_diff(&want) < 1e-4, "{}", v.max_abs_diff(&want));
+    }
+
+    #[test]
+    fn preconditioned_greedy_does_not_stall_on_a_repeat_selection() {
+        // regression: the no-progress guard broke the loop whenever greedy
+        // selected the same block twice running.  Under `ap_block_precond`
+        // the M^-1-mixed score of the just-solved block routinely ranks
+        // highest again (with rank ~ n the mix tracks the *error*, which a
+        // single block solve does not zero), so the solve froze far above
+        // tolerance while other blocks still carried real residual.  The
+        // previous block is now masked for one round instead, and the
+        // solve must reach the same solution as the direct factorisation.
+        let (op, b) = setup();
+        let opts = SolveOptions {
+            tolerance: 1e-6,
+            max_epochs: 3000.0,
+            block_size: 64,
+            precond_rank: 192, // near-full rank: scores follow the error
+            ap_block_precond: true,
+            ..Default::default()
+        };
+        let mut v = Mat::zeros(op.n(), op.k_width());
+        let rep = ApSolver::default().solve(&op, &b, &mut v, &opts);
+        assert!(rep.converged, "preconditioned greedy stalled: {rep:?}");
+        let want = Chol::factor(op.h()).unwrap().solve_mat(&b);
+        assert!(v.max_abs_diff(&want) < 1e-4, "{}", v.max_abs_diff(&want));
+        // the guard still terminates the budget-edge case (see
+        // budget_edge_does_not_burn_epochs_re_solving_the_tail): masking
+        // plus affordability empties the candidate set there
+    }
+
+    #[test]
+    fn sharded_precond_scoring_converges() {
+        // block-Jacobi-of-shards scoring is a different mix than global
+        // Woodbury, but must still steer greedy to a converged solve
+        let (op, b) = setup();
+        let opts = SolveOptions {
+            tolerance: 1e-6,
+            max_epochs: 3000.0,
+            block_size: 64,
+            precond_rank: 32,
+            precond_shards: 4,
             ap_block_precond: true,
             ..Default::default()
         };

@@ -32,8 +32,15 @@ impl LinearSolver for CgSolver {
         opts: &SolveOptions,
     ) -> SolveReport {
         let threads = recurrence::resolve_threads(opts.threads);
-        let pre = self.cache.woodbury(op, opts.precond_rank, threads);
-        let (norm, mut r) = Normalized::setup_t(op, b, v0, threads);
+        let pre =
+            self.cache
+                .solver_preconditioner(op, opts.precond_rank, opts.precond_shards, threads);
+        // one operator-product output buffer and one panel-scratch pool for
+        // the whole solve — the warm-start residual inside setup and every
+        // iteration's hv_into reuse them (no allocation churn)
+        let mut hd = Mat::zeros(b.rows, b.cols);
+        let scratch = HvScratch::default();
+        let (norm, mut r) = Normalized::setup_pooled(op, b, v0, threads, &scratch, &mut hd);
         let mut v = v0.clone();
         let init_residual_sq: f64 =
             recurrence::col_sq_sums(&r, threads).iter().sum();
@@ -46,10 +53,6 @@ impl LinearSolver for CgSolver {
         let mut iterations = 0usize;
         let (mut ry, mut rz) = residual_norms_t(&r, threads);
         let tol = opts.tolerance;
-        // per-iteration operator product reuses one output buffer and one
-        // panel-scratch pool for the whole solve (no allocation churn)
-        let mut hd = Mat::zeros(r.rows, r.cols);
-        let scratch = HvScratch::default();
 
         while (ry > tol || rz > tol) && epochs + 1.0 <= opts.max_epochs {
             op.hv_into(&d, &mut hd, &scratch);
@@ -189,6 +192,35 @@ mod tests {
         let rep_fresh = CgSolver::default().solve(&op, &b, &mut v_fresh, &opts0);
         assert_eq!(rep_reused, rep_fresh, "stale preconditioner leaked across ranks");
         assert_eq!(v_reused.data, v_fresh.data);
+    }
+
+    #[test]
+    fn sharded_preconditioner_converges_to_the_same_solution() {
+        // block-Jacobi-of-shards is a different (weaker) preconditioner,
+        // so iteration counts may differ — but the solution must agree
+        // with the direct solve, and S <= 1 must stay bitwise on the
+        // global-Woodbury path
+        let (op, b) = setup();
+        let base = SolveOptions {
+            tolerance: 1e-8,
+            max_epochs: 500.0,
+            precond_rank: 32,
+            ..Default::default()
+        };
+        let want = Cholesky::factor(op.h()).unwrap().solve_mat(&b);
+        let mut v_global = Mat::zeros(op.n(), op.k_width());
+        let rep_global = CgSolver::default().solve(&op, &b, &mut v_global, &base);
+        assert!(rep_global.converged);
+        let sharded = SolveOptions { precond_shards: 4, ..base.clone() };
+        let mut v_sharded = Mat::zeros(op.n(), op.k_width());
+        let rep_sharded = CgSolver::default().solve(&op, &b, &mut v_sharded, &sharded);
+        assert!(rep_sharded.converged, "{rep_sharded:?}");
+        assert!(v_sharded.max_abs_diff(&want) < 1e-5, "{}", v_sharded.max_abs_diff(&want));
+        let one = SolveOptions { precond_shards: 1, ..base };
+        let mut v_one = Mat::zeros(op.n(), op.k_width());
+        let rep_one = CgSolver::default().solve(&op, &b, &mut v_one, &one);
+        assert_eq!(rep_one, rep_global, "S=1 must be the global path");
+        assert_eq!(v_one.data, v_global.data);
     }
 
     #[test]

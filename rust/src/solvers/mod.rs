@@ -24,11 +24,14 @@ mod sgd;
 
 pub use ap::ApSolver;
 pub use cg::CgSolver;
-pub use precond::{PreconditionerCache, SharedPreconditionerCache, WoodburyPreconditioner};
+pub use precond::{
+    PreconditionerCache, SharedPreconditionerCache, ShardedJacobiPreconditioner, SolverPrecond,
+    WoodburyPreconditioner,
+};
 pub use sgd::{autotune_lr, SgdSolver};
 
 use crate::linalg::Mat;
-use crate::operators::KernelOperator;
+use crate::operators::{HvScratch, KernelOperator};
 
 pub const NORM_EPS: f64 = 1e-12;
 
@@ -97,6 +100,12 @@ pub struct SolveOptions {
     /// AP: score blocks on the preconditioned residual M^-1 r instead of r
     /// (greedy selection only; needs `precond_rank > 0`).  Off by default.
     pub ap_block_precond: bool,
+    /// CG/AP: factor the preconditioner as block-Jacobi over this many row
+    /// shards ([`ShardedJacobiPreconditioner`]) instead of one global
+    /// Woodbury build — per-shard factorisation cost and memory, at the
+    /// price of a weaker preconditioner per unit rank.  0 or 1 keeps the
+    /// global build (the default).
+    pub precond_shards: usize,
 }
 
 impl Default for SolveOptions {
@@ -113,6 +122,7 @@ impl Default for SolveOptions {
             ap_selection: ApSelection::Greedy,
             threads: 0,
             ap_block_precond: false,
+            precond_shards: 0,
         }
     }
 }
@@ -227,11 +237,34 @@ impl Normalized {
     }
 
     /// [`Normalized::setup`] with an explicit recurrence thread count.
+    /// Allocates a fresh warm-start product buffer and scratch pool; inner
+    /// solver loops that already own both should call
+    /// [`Normalized::setup_pooled`] instead.
     pub fn setup_t(
         op: &dyn KernelOperator,
         b: &Mat,
         v0: &mut Mat,
         threads: usize,
+    ) -> (Self, Mat) {
+        let mut hv = Mat::zeros(v0.rows, v0.cols);
+        Self::setup_pooled(op, b, v0, threads, &HvScratch::default(), &mut hv)
+    }
+
+    /// [`Normalized::setup_t`] with a caller-owned warm-start product
+    /// buffer and panel-scratch pool — the allocation-free form for solver
+    /// loops, which reuse the same `hv` output and `scratch` across the
+    /// warm-start residual and every subsequent `hv_into` iteration.  `hv`
+    /// must be [v0.rows, v0.cols] and is fully overwritten when the warm
+    /// start is nonzero (untouched otherwise); bits are identical to
+    /// [`Normalized::setup_t`] for every reuse pattern (the `hv_into`
+    /// contract).
+    pub fn setup_pooled(
+        op: &dyn KernelOperator,
+        b: &Mat,
+        v0: &mut Mat,
+        threads: usize,
+        scratch: &HvScratch,
+        hv: &mut Mat,
     ) -> (Self, Mat) {
         // solve-width checks: catch a store that did not grow with the
         // operator (online data arrival) before it turns into a silent
@@ -264,10 +297,9 @@ impl Normalized {
         recurrence::scale_cols(v0, &inv, threads);
         let warm = v0.data.iter().any(|&x| x != 0.0);
         let (r, cost) = if warm {
-            let mut hv = Mat::zeros(v0.rows, v0.cols);
-            op.hv_into(v0, &mut hv, &crate::operators::HvScratch::default());
+            op.hv_into(v0, hv, scratch);
             let mut r = bs.clone();
-            recurrence::sub_assign(&mut r, &hv, threads);
+            recurrence::sub_assign(&mut r, hv, threads);
             (r, 1.0)
         } else {
             (bs.clone(), 0.0)

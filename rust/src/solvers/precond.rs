@@ -31,7 +31,7 @@ use crate::kernels::panel::{self, ScaledX};
 use crate::kernels::{Hyperparams, KernelFamily};
 use crate::linalg::{pivoted_cholesky_threaded, Cholesky, Mat};
 use crate::operators::KernelOperator;
-use crate::util::parallel::{num_threads, parallel_map_slots, parallel_row_blocks};
+use crate::util::parallel::{num_threads, parallel_map_slots, parallel_row_blocks, shard_ranges};
 
 pub struct WoodburyPreconditioner {
     l: Mat,              // [n, rho]
@@ -161,6 +161,115 @@ impl WoodburyPreconditioner {
 }
 
 // ---------------------------------------------------------------------------
+// ShardedJacobiPreconditioner
+// ---------------------------------------------------------------------------
+
+/// Block-Jacobi-of-shards preconditioner: one independent rank-rho
+/// [`WoodburyPreconditioner`] per row shard (same contiguous balanced
+/// partition as the sharded operator, [`shard_ranges`]),
+///
+///   M = blkdiag(M_1, ..., M_S),   M_s = L_s L_sᵀ + sigma² I  over shard s,
+///
+/// so the pivoted-Cholesky factorisation costs O(rho² n_s + rho n_s d) *per
+/// shard* instead of globally, the factor memory is rho·n_s per shard, and
+/// — the property that matters for the multi-process follow-up — each
+/// shard's factor is built from that shard's rows alone, with the apply
+/// touching only that shard's slice of R.
+///
+/// This is a genuinely different (weaker per unit rank, cheaper per unit n)
+/// operator than the global Woodbury preconditioner, so it is opt-in via
+/// `SolveOptions::precond_shards`; with a single shard it degenerates to
+/// exactly the global factorisation (bitwise — asserted below).
+pub struct ShardedJacobiPreconditioner {
+    parts: Vec<WoodburyPreconditioner>,
+    ranges: Vec<(usize, usize)>,
+}
+
+impl ShardedJacobiPreconditioner {
+    /// Factor each shard of `x` independently at rank `min(rank, shard
+    /// rows)`.  Bitwise-identical output for every thread count (each
+    /// per-shard build already is).
+    pub fn build_threaded(
+        x: &Mat,
+        hp: &Hyperparams,
+        family: KernelFamily,
+        rank: usize,
+        shards: usize,
+        threads: usize,
+    ) -> Self {
+        let ranges = shard_ranges(x.rows, shards);
+        let parts = ranges
+            .iter()
+            .map(|&(r0, r1)| {
+                let rows: Vec<usize> = (r0..r1).collect();
+                let xs = x.gather_rows(&rows);
+                WoodburyPreconditioner::build_threaded(
+                    &xs,
+                    hp,
+                    family,
+                    rank.min(r1 - r0),
+                    threads,
+                )
+            })
+            .collect();
+        ShardedJacobiPreconditioner { parts, ranges }
+    }
+
+    pub fn num_shards(&self) -> usize {
+        self.parts.len()
+    }
+
+    /// Largest per-shard factor rank (telemetry).
+    pub fn rank(&self) -> usize {
+        self.parts.iter().map(|p| p.rank()).max().unwrap_or(0)
+    }
+
+    /// Apply blkdiag(M_s)⁻¹ to every column of R: each shard's contiguous
+    /// row slice goes through its own Woodbury apply, written back in
+    /// place.  Shards never read each other's rows — the communication
+    /// pattern a multi-process deployment needs.
+    pub fn apply_t(&self, r: &Mat, threads: usize) -> Mat {
+        let k = r.cols;
+        let mut out = Mat::zeros(r.rows, k);
+        for (part, &(r0, r1)) in self.parts.iter().zip(&self.ranges) {
+            let rs = Mat::from_vec(r1 - r0, k, r.data[r0 * k..r1 * k].to_vec());
+            let ys = part.apply_t(&rs, threads);
+            out.data[r0 * k..r1 * k].copy_from_slice(&ys.data);
+        }
+        out
+    }
+}
+
+/// What a solver gets back from
+/// [`PreconditionerCache::solver_preconditioner`]: the global Woodbury
+/// factorisation, or the block-Jacobi-of-shards variant when the caller
+/// opted in with `precond_shards > 1`.  One `apply_t` entry point so the
+/// CG/AP hot loops stay agnostic.
+#[derive(Clone)]
+pub enum SolverPrecond {
+    Woodbury(Arc<WoodburyPreconditioner>),
+    BlockJacobi(Arc<ShardedJacobiPreconditioner>),
+}
+
+impl SolverPrecond {
+    pub fn rank(&self) -> usize {
+        match self {
+            SolverPrecond::Woodbury(p) => p.rank(),
+            SolverPrecond::BlockJacobi(p) => p.rank(),
+        }
+    }
+
+    /// Apply M⁻¹ to every column of R (0 threads = auto); bitwise-identical
+    /// for every thread count.
+    pub fn apply_t(&self, r: &Mat, threads: usize) -> Mat {
+        match self {
+            SolverPrecond::Woodbury(p) => p.apply_t(r, threads),
+            SolverPrecond::BlockJacobi(p) => p.apply_t(r, threads),
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
 // PreconditionerCache
 // ---------------------------------------------------------------------------
 
@@ -183,12 +292,18 @@ fn hp_key(hp: &Hyperparams, knob: usize, n: usize) -> HpKey {
     (hp.pack().iter().map(|x| x.to_bits()).collect(), knob, n)
 }
 
+/// Cache key for the block-Jacobi variant: [`HpKey`] with the shard count
+/// alongside the rank knob — changing either rebuilds.
+type JacobiKey = (HpKey, usize);
+
 #[derive(Default)]
 struct CacheInner {
     /// Small LRU lists (linear scan; capacity is single digits).
     woodbury: Vec<(HpKey, Arc<WoodburyPreconditioner>)>,
+    jacobi: Vec<(JacobiKey, Arc<ShardedJacobiPreconditioner>)>,
     ap_blocks: Vec<(HpKey, Arc<Vec<Cholesky>>)>,
     woodbury_builds: u64,
+    jacobi_builds: u64,
     ap_builds: u64,
     hits: u64,
 }
@@ -212,8 +327,10 @@ impl std::fmt::Debug for PreconditionerCache {
         let inner = self.inner.lock().unwrap();
         f.debug_struct("PreconditionerCache")
             .field("woodbury_entries", &inner.woodbury.len())
+            .field("jacobi_entries", &inner.jacobi.len())
             .field("ap_entries", &inner.ap_blocks.len())
             .field("woodbury_builds", &inner.woodbury_builds)
+            .field("jacobi_builds", &inner.jacobi_builds)
             .field("ap_builds", &inner.ap_builds)
             .field("hits", &inner.hits)
             .finish()
@@ -264,6 +381,46 @@ impl PreconditionerCache {
         }
         inner.woodbury.push((key, pre.clone()));
         pre
+    }
+
+    /// The preconditioner a solver should use for this solve: the global
+    /// Woodbury factorisation by default, or the block-Jacobi-of-shards
+    /// variant when `shards > 1` was requested (and `rank > 0` — the
+    /// identity needs no sharding).  Both kinds are cached with the same
+    /// (hyperparameter bits, knobs, n) staleness guarantee.
+    pub fn solver_preconditioner(
+        &self,
+        op: &dyn KernelOperator,
+        rank: usize,
+        shards: usize,
+        threads: usize,
+    ) -> SolverPrecond {
+        if shards <= 1 || rank == 0 {
+            return SolverPrecond::Woodbury(self.woodbury(op, rank, threads));
+        }
+        let key = (hp_key(op.hp(), rank, op.n()), shards);
+        let mut inner = self.inner.lock().unwrap();
+        if let Some(pos) = inner.jacobi.iter().position(|(k, _)| *k == key) {
+            inner.hits += 1;
+            let entry = inner.jacobi.remove(pos);
+            let pre = entry.1.clone();
+            inner.jacobi.push(entry); // LRU: move to back
+            return SolverPrecond::BlockJacobi(pre);
+        }
+        let pre = Arc::new(ShardedJacobiPreconditioner::build_threaded(
+            op.x(),
+            op.hp(),
+            op.family(),
+            rank,
+            shards,
+            threads,
+        ));
+        inner.jacobi_builds += 1;
+        if inner.jacobi.len() >= self.cap {
+            inner.jacobi.remove(0);
+        }
+        inner.jacobi.push((key, pre.clone()));
+        SolverPrecond::BlockJacobi(pre)
     }
 
     /// AP's per-block Cholesky factors for the operator's current
@@ -322,12 +479,18 @@ impl PreconditionerCache {
     pub fn invalidate_all(&self) {
         let mut inner = self.inner.lock().unwrap();
         inner.woodbury.clear();
+        inner.jacobi.clear();
         inner.ap_blocks.clear();
     }
 
     /// Woodbury factorisations built so far (telemetry / regression tests).
     pub fn woodbury_builds(&self) -> u64 {
         self.inner.lock().unwrap().woodbury_builds
+    }
+
+    /// Block-Jacobi-of-shards factorisations built so far.
+    pub fn jacobi_builds(&self) -> u64 {
+        self.inner.lock().unwrap().jacobi_builds
     }
 
     /// AP block factorisations built so far.
@@ -499,6 +662,90 @@ mod tests {
         cache.invalidate_all();
         let _ = cache.woodbury(&op, 16, 1);
         assert_eq!(cache.woodbury_builds(), 3);
+    }
+
+    #[test]
+    fn single_shard_jacobi_matches_global_woodbury_bitwise() {
+        // S = 1 block-Jacobi IS the global factorisation: same rows, same
+        // rank, same build path
+        let mut rng = Rng::new(6);
+        let n = 48;
+        let x = Mat::from_fn(n, 3, |_, _| rng.gaussian());
+        let hp = Hyperparams { ell: vec![0.9; 3], sigf: 1.1, sigma: 0.4 };
+        let fam = KernelFamily::Matern32;
+        let r = Mat::from_fn(n, 4, |_, _| rng.gaussian());
+        let global = WoodburyPreconditioner::build_threaded(&x, &hp, fam, 12, 2);
+        let jac = ShardedJacobiPreconditioner::build_threaded(&x, &hp, fam, 12, 1, 2);
+        assert_eq!(jac.num_shards(), 1);
+        let a = global.apply_t(&r, 2);
+        let b = jac.apply_t(&r, 2);
+        for (x, y) in a.data.iter().zip(&b.data) {
+            assert_eq!(x.to_bits(), y.to_bits());
+        }
+    }
+
+    #[test]
+    fn sharded_jacobi_applies_blockwise_and_stays_spd() {
+        // each shard's slice must equal that shard's own Woodbury apply,
+        // and the quadratic form must stay positive (valid preconditioner)
+        let mut rng = Rng::new(7);
+        let n = 53; // deliberately not divisible by the shard count
+        let x = Mat::from_fn(n, 3, |_, _| rng.gaussian());
+        let hp = Hyperparams { ell: vec![0.8; 3], sigf: 1.0, sigma: 0.3 };
+        let fam = KernelFamily::Matern52;
+        let jac = ShardedJacobiPreconditioner::build_threaded(&x, &hp, fam, 8, 3, 2);
+        assert_eq!(jac.num_shards(), 3);
+        let r = Mat::from_fn(n, 3, |_, _| rng.gaussian());
+        let got = jac.apply_t(&r, 1);
+        for &(r0, r1) in &shard_ranges(n, 3) {
+            let rows: Vec<usize> = (r0..r1).collect();
+            let xs = x.gather_rows(&rows);
+            let part = WoodburyPreconditioner::build_threaded(&xs, &hp, fam, 8, 1);
+            let rs = r.gather_rows(&rows);
+            let want = part.apply_t(&rs, 1);
+            for (a, b) in got.data[r0 * 3..r1 * 3].iter().zip(&want.data) {
+                assert_eq!(a.to_bits(), b.to_bits(), "shard {r0}..{r1}");
+            }
+        }
+        let v = Mat::from_fn(n, 1, |_, _| rng.gaussian());
+        let mv = jac.apply_t(&v, 1);
+        assert!(crate::util::stats::dot(&v.data, &mv.data) > 0.0);
+    }
+
+    #[test]
+    fn solver_preconditioner_routes_and_caches() {
+        let cache = PreconditionerCache::default();
+        let op = test_op(0.4);
+        // shards <= 1 or rank 0: global Woodbury path
+        match cache.solver_preconditioner(&op, 16, 1, 1) {
+            SolverPrecond::Woodbury(_) => {}
+            SolverPrecond::BlockJacobi(_) => panic!("S=1 must stay on the global path"),
+        }
+        match cache.solver_preconditioner(&op, 0, 4, 1) {
+            SolverPrecond::Woodbury(p) => assert_eq!(p.rank(), 0),
+            SolverPrecond::BlockJacobi(_) => panic!("rank 0 must stay on the global path"),
+        }
+        assert_eq!(cache.jacobi_builds(), 0);
+        // opted in: block-Jacobi, cached on (hp, rank, shards, n)
+        let a = match cache.solver_preconditioner(&op, 16, 3, 1) {
+            SolverPrecond::BlockJacobi(p) => p,
+            SolverPrecond::Woodbury(_) => panic!("S=3 must shard"),
+        };
+        assert_eq!(a.num_shards(), 3);
+        let b = match cache.solver_preconditioner(&op, 16, 3, 1) {
+            SolverPrecond::BlockJacobi(p) => p,
+            SolverPrecond::Woodbury(_) => panic!(),
+        };
+        assert!(Arc::ptr_eq(&a, &b), "same (hp, rank, shards) must hit");
+        let c = match cache.solver_preconditioner(&op, 16, 4, 1) {
+            SolverPrecond::BlockJacobi(p) => p,
+            SolverPrecond::Woodbury(_) => panic!(),
+        };
+        assert!(!Arc::ptr_eq(&a, &c), "shard count is part of the key");
+        assert_eq!(cache.jacobi_builds(), 2);
+        cache.invalidate_all();
+        let _ = cache.solver_preconditioner(&op, 16, 3, 1);
+        assert_eq!(cache.jacobi_builds(), 3);
     }
 
     #[test]

@@ -105,6 +105,26 @@ where
         .collect()
 }
 
+/// Contiguous balanced partition of `0..n` into `shards` ranges — the row
+/// ownership rule of the sharded operator layer: the first `n % shards`
+/// shards get one extra row, so shard sizes differ by at most one.  The
+/// shard count is clamped so no range is ever empty while `n > 0` (and a
+/// single `(0, 0)` range is returned for `n == 0`); there is always at
+/// least one range.
+pub fn shard_ranges(n: usize, shards: usize) -> Vec<(usize, usize)> {
+    let s = shards.max(1).min(n.max(1));
+    let q = n / s;
+    let r = n % s;
+    let mut out = Vec::with_capacity(s);
+    let mut start = 0;
+    for k in 0..s {
+        let len = q + usize::from(k < r);
+        out.push((start, start + len));
+        start += len;
+    }
+    out
+}
+
 /// Split a row-major `[n, cols]` buffer into blocks of `block_rows` rows
 /// and run `task(first_row, rows_in_block, block)` over the blocks on up to
 /// `threads` workers.  Blocks are disjoint `&mut` slices, so writes are
@@ -230,5 +250,34 @@ mod tests {
     fn map_slots_zero_is_empty() {
         let got: Vec<u8> = parallel_map_slots(0, 4, |_| unreachable!());
         assert!(got.is_empty());
+    }
+
+    #[test]
+    fn shard_ranges_cover_contiguously_and_balance() {
+        for n in [1, 2, 5, 53, 256, 1000] {
+            for shards in [1, 2, 3, 5, 8, 64] {
+                let ranges = shard_ranges(n, shards);
+                assert_eq!(ranges.len(), shards.min(n));
+                assert_eq!(ranges[0].0, 0);
+                assert_eq!(ranges.last().unwrap().1, n);
+                let mut sizes = Vec::new();
+                for w in ranges.windows(2) {
+                    assert_eq!(w[0].1, w[1].0, "n={n} shards={shards}: gap/overlap");
+                }
+                for &(a, b) in &ranges {
+                    assert!(b > a, "n={n} shards={shards}: empty shard");
+                    sizes.push(b - a);
+                }
+                let (lo, hi) = (*sizes.iter().min().unwrap(), *sizes.iter().max().unwrap());
+                assert!(hi - lo <= 1, "n={n} shards={shards}: sizes {sizes:?}");
+            }
+        }
+    }
+
+    #[test]
+    fn shard_ranges_degenerate_inputs() {
+        assert_eq!(shard_ranges(0, 4), vec![(0, 0)]);
+        assert_eq!(shard_ranges(7, 0), vec![(0, 7)]);
+        assert_eq!(shard_ranges(3, 9), vec![(0, 1), (1, 2), (2, 3)]);
     }
 }

@@ -1,0 +1,189 @@
+//! Property test: [`igp::serve::ServeStats`] must track a simple
+//! reference model under any interleaving of enqueue / flush / predict /
+//! refresh / extend_data:
+//!
+//! * `rows_served` is the total of query rows actually answered;
+//! * `batches` grows by ceil(rows / batch) per non-empty serve;
+//! * every non-empty serve (or explicit refresh) costs exactly one
+//!   artifact *build* when the snapshot is stale (first use, or after an
+//!   online arrival) and exactly one cache *hit* otherwise;
+//! * empty serves (zero query rows, flush of an empty queue) touch
+//!   nothing — no counters, no artifact work.
+
+use igp::coordinator::{Trainer, TrainerOptions};
+use igp::data::{Dataset, DatasetSpec};
+use igp::estimator::EstimatorKind;
+use igp::kernels::{Hyperparams, KernelFamily};
+use igp::linalg::Mat;
+use igp::operators::DenseOperator;
+use igp::serve::{PredictionService, ServeOptions, ServeStats};
+use igp::solvers::SolverKind;
+use igp::util::proptest::{check, PropConfig};
+use igp::util::rng::Rng;
+
+fn toy_dataset(rng: &mut Rng, n: usize, n_test: usize, d: usize) -> Dataset {
+    let x_train = Mat::from_fn(n, d, |_, _| rng.gaussian());
+    let y_train = rng.gaussian_vec(n);
+    let x_test = Mat::from_fn(n_test, d, |_, _| rng.gaussian());
+    let y_test = rng.gaussian_vec(n_test);
+    let spec = DatasetSpec {
+        name: "toy",
+        paper_n: 0,
+        n,
+        n_test,
+        d,
+        true_sigma: 0.3,
+        ell_lo: 0.5,
+        ell_hi: 1.5,
+        cluster_frac: 0.0,
+        family: KernelFamily::Rbf,
+        seed: 0,
+    };
+    Dataset {
+        spec,
+        x_train,
+        y_train,
+        x_test,
+        y_test,
+        true_hp: Hyperparams::ones(d),
+    }
+}
+
+fn service(rng: &mut Rng, size: usize, batch: usize) -> (PredictionService, usize) {
+    let n = 16 + rng.below(8 + 4 * size.max(1));
+    let d = 1 + rng.below(3);
+    let ds = toy_dataset(rng, n, 4, d);
+    let op = Box::new(DenseOperator::new(&ds, 4, 16));
+    let opts = TrainerOptions {
+        solver: SolverKind::Cg,
+        estimator: EstimatorKind::Pathwise,
+        warm_start: true,
+        lr: 0.05,
+        seed: 1 + size as u64,
+        ..Default::default()
+    };
+    // deliberately no run(): the trainer starts with an empty artifact
+    // cache, so the model below starts from all-zero counters
+    let t = Trainer::new(opts, op, &ds);
+    (PredictionService::new(t, ServeOptions { batch, threads: 1 }), d)
+}
+
+/// What one non-empty serve of `rows` rows must do to the counters.
+fn model_serve(exp: &mut ServeStats, have_artifact: &mut bool, rows: usize, batch: usize) {
+    if *have_artifact {
+        exp.artifact_hits += 1;
+    } else {
+        exp.artifact_builds += 1;
+        *have_artifact = true;
+    }
+    exp.rows_served += rows as u64;
+    exp.batches += ((rows + batch - 1) / batch) as u64;
+}
+
+fn stats_check(label: &str, step: usize, got: ServeStats, exp: ServeStats) -> Result<(), String> {
+    if got != exp {
+        return Err(format!("op {step} ({label}): stats {got:?}, expected {exp:?}"));
+    }
+    Ok(())
+}
+
+#[test]
+fn prop_serve_stats_track_the_reference_model() {
+    check(
+        "serve_stats_model",
+        PropConfig { cases: 10, max_size: 8, ..Default::default() },
+        |rng, size| {
+            let batch = 1 + rng.below(5);
+            let (mut svc, d) = service(rng, size, batch);
+            let mut exp = ServeStats::default();
+            let mut have_artifact = false;
+            let mut pending = 0usize;
+            stats_check("init", 0, svc.stats(), exp)?;
+
+            for step in 1..=12 {
+                match rng.below(5) {
+                    0 => {
+                        // enqueue (possibly zero rows): no serving happens
+                        let rows = rng.below(2 * batch + 2);
+                        let x = Mat::from_fn(rows, d, |_, _| rng.gaussian());
+                        svc.enqueue(&x).map_err(|e| e.to_string())?;
+                        pending += rows;
+                        stats_check("enqueue", step, svc.stats(), exp)?;
+                    }
+                    1 => {
+                        // flush serves exactly the queued rows, in one go
+                        let (mean, var) = svc.flush().map_err(|e| e.to_string())?;
+                        if mean.len() != pending || var.len() != pending {
+                            return Err(format!(
+                                "op {step} (flush): served {} rows, {} queued",
+                                mean.len(),
+                                pending
+                            ));
+                        }
+                        if pending > 0 {
+                            model_serve(&mut exp, &mut have_artifact, pending, batch);
+                        }
+                        pending = 0;
+                        stats_check("flush", step, svc.stats(), exp)?;
+                        if svc.pending_rows() != 0 {
+                            return Err(format!("op {step}: flush left a non-empty queue"));
+                        }
+                    }
+                    2 => {
+                        // one-shot predict (possibly zero rows); does not
+                        // disturb the queue
+                        let rows = rng.below(2 * batch + 2);
+                        let xq = Mat::from_fn(rows, d, |_, _| rng.gaussian());
+                        let (mean, var) = svc.predict(&xq).map_err(|e| e.to_string())?;
+                        if mean.len() != rows || var.len() != rows {
+                            return Err(format!("op {step} (predict): wrong output length"));
+                        }
+                        if rows > 0 {
+                            model_serve(&mut exp, &mut have_artifact, rows, batch);
+                        }
+                        stats_check("predict", step, svc.stats(), exp)?;
+                        if svc.pending_rows() != pending {
+                            return Err(format!("op {step}: predict disturbed the queue"));
+                        }
+                    }
+                    3 => {
+                        // online arrival: invalidates the snapshot but must
+                        // leave every lifetime counter in place
+                        let rows = 1 + rng.below(4);
+                        let x = Mat::from_fn(rows, d, |_, _| rng.gaussian());
+                        let y = rng.gaussian_vec(rows);
+                        svc.extend_data(&x, &y).map_err(|e| e.to_string())?;
+                        have_artifact = false;
+                        stats_check("extend_data", step, svc.stats(), exp)?;
+                    }
+                    _ => {
+                        // explicit refresh: pays the build (or hit) without
+                        // serving any rows
+                        svc.refresh().map_err(|e| e.to_string())?;
+                        if have_artifact {
+                            exp.artifact_hits += 1;
+                        } else {
+                            exp.artifact_builds += 1;
+                            have_artifact = true;
+                        }
+                        stats_check("refresh", step, svc.stats(), exp)?;
+                    }
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn empty_serves_do_not_touch_counters_or_the_artifact() {
+    let mut rng = Rng::new(42);
+    let (mut svc, d) = service(&mut rng, 4, 8);
+    let none = Mat::zeros(0, d);
+    let (mean, var) = svc.predict(&none).unwrap();
+    assert!(mean.is_empty() && var.is_empty());
+    let (mean, var) = svc.flush().unwrap();
+    assert!(mean.is_empty() && var.is_empty());
+    assert_eq!(svc.stats(), ServeStats::default());
+    assert!(svc.trainer().artifact_cache().is_empty(), "empty serve built an artifact");
+}

@@ -1,0 +1,373 @@
+//! Property tests: the row-sharded `ShardedOperator` must agree
+//! **bitwise** with the monolithic `TiledOperator` on every
+//! `KernelOperator` method, across random draws of n, d, probe count,
+//! tile size, thread count, kernel family and shard count — including
+//! ragged last shards, shard counts clamped at n, and post-`extend`
+//! growth.  The contract is stronger than the tiled-vs-dense tolerance
+//! suite: sharding is a *layout* change, so every bit must survive it.
+//!
+//! The one documented exception is [`ShardedOperator::hv_shard_partial`]:
+//! folding separately accumulated per-shard partials reassociates the
+//! column sweep, so the fold matches `hv` to FP tolerance, not bitwise.
+
+use igp::coordinator::{Trainer, TrainerOptions};
+use igp::data::{self, Dataset, DatasetSpec};
+use igp::estimator::EstimatorKind;
+use igp::kernels::{Hyperparams, KernelFamily};
+use igp::linalg::Mat;
+use igp::operators::{
+    HvScratch, KernelOperator, ShardedOperator, TiledOperator, TiledOptions,
+};
+use igp::solvers::SolverKind;
+use igp::util::proptest::{check, PropConfig};
+use igp::util::rng::Rng;
+
+fn random_family(rng: &mut Rng) -> KernelFamily {
+    match rng.below(4) {
+        0 => KernelFamily::Matern12,
+        1 => KernelFamily::Matern32,
+        2 => KernelFamily::Matern52,
+        _ => KernelFamily::Rbf,
+    }
+}
+
+fn toy_dataset(rng: &mut Rng, n: usize, n_test: usize, d: usize, family: KernelFamily) -> Dataset {
+    let x_train = Mat::from_fn(n, d, |_, _| rng.gaussian());
+    let y_train = rng.gaussian_vec(n);
+    let x_test = Mat::from_fn(n_test, d, |_, _| rng.gaussian());
+    let y_test = rng.gaussian_vec(n_test);
+    let spec = DatasetSpec {
+        name: "toy",
+        paper_n: 0,
+        n,
+        n_test,
+        d,
+        true_sigma: 0.3,
+        ell_lo: 0.5,
+        ell_hi: 1.5,
+        cluster_frac: 0.0,
+        family,
+        seed: 0,
+    };
+    Dataset {
+        spec,
+        x_train,
+        y_train,
+        x_test,
+        y_test,
+        true_hp: Hyperparams::ones(d),
+    }
+}
+
+/// One random case: the same dataset, hyperparameters, tile size and
+/// thread count behind a monolithic tiled operator and a sharded one.
+struct Case {
+    ds: Dataset,
+    tiled: TiledOperator,
+    sharded: ShardedOperator,
+    shards: usize,
+}
+
+fn random_case_with_shards(rng: &mut Rng, size: usize, shards: usize) -> Case {
+    let n = 8 + rng.below(8 + 6 * size.max(1));
+    let n_test = 1 + rng.below(8);
+    let d = 1 + rng.below(5);
+    let s = 1 + rng.below(4);
+    let m = 4 + rng.below(12);
+    let family = random_family(rng);
+    // tile sizes deliberately include 1, non-divisors of n, and > n
+    let tile = match rng.below(4) {
+        0 => 1,
+        1 => 1 + rng.below(n),
+        2 => n,
+        _ => n + 1 + rng.below(64),
+    };
+    let threads = 1 + rng.below(4);
+    let ds = toy_dataset(rng, n, n_test, d, family);
+    let hp = Hyperparams {
+        ell: (0..d).map(|_| rng.uniform_in(0.4, 2.0)).collect(),
+        sigf: rng.uniform_in(0.5, 1.5),
+        sigma: rng.uniform_in(0.1, 0.9),
+    };
+    let opts = TiledOptions { tile, threads };
+    let mut tiled = TiledOperator::with_options(&ds, s, m, opts.clone());
+    tiled.set_hp(&hp);
+    let mut sharded = ShardedOperator::with_options(&ds, s, m, opts, shards);
+    sharded.set_hp(&hp);
+    Case { ds, tiled, sharded, shards }
+}
+
+fn random_case(rng: &mut Rng, size: usize) -> Case {
+    // the issue's canonical shard counts; the clamp-at-n and deep-ragged
+    // regimes get their own generator below
+    let shards = [1usize, 2, 3, 5, 8][rng.below(5)];
+    random_case_with_shards(rng, size, shards)
+}
+
+fn bitwise(label: &str, got: &Mat, want: &Mat) -> Result<(), String> {
+    if (got.rows, got.cols) != (want.rows, want.cols) {
+        return Err(format!(
+            "{label}: shape ({}, {}) vs ({}, {})",
+            got.rows, got.cols, want.rows, want.cols
+        ));
+    }
+    bitwise_slice(label, &got.data, &want.data)
+}
+
+fn bitwise_slice(label: &str, got: &[f64], want: &[f64]) -> Result<(), String> {
+    if got.len() != want.len() {
+        return Err(format!("{label}: len {} vs {}", got.len(), want.len()));
+    }
+    for (i, (a, b)) in got.iter().zip(want).enumerate() {
+        if a.to_bits() != b.to_bits() {
+            return Err(format!(
+                "{label}: element {i}: {a:e} vs {b:e} ({:#018x} vs {:#018x})",
+                a.to_bits(),
+                b.to_bits()
+            ));
+        }
+    }
+    Ok(())
+}
+
+fn close(label: &str, got: &Mat, want: &Mat) -> Result<(), String> {
+    if (got.rows, got.cols) != (want.rows, want.cols) {
+        return Err(format!(
+            "{label}: shape ({}, {}) vs ({}, {})",
+            got.rows, got.cols, want.rows, want.cols
+        ));
+    }
+    let scale = 1.0 + want.data.iter().fold(0.0f64, |a, &x| a.max(x.abs()));
+    let err = got.max_abs_diff(want);
+    if err > 1e-10 * scale {
+        return Err(format!("{label}: max abs err {err} (scale {scale})"));
+    }
+    Ok(())
+}
+
+#[test]
+fn prop_hv_is_bitwise_equal() {
+    check("sharded_hv_parity", PropConfig { cases: 24, max_size: 16, ..Default::default() }, |rng, size| {
+        let c = random_case(rng, size);
+        let v = Mat::from_fn(c.tiled.n(), c.tiled.k_width(), |_, _| rng.gaussian());
+        let want = c.tiled.hv(&v);
+        bitwise("hv", &c.sharded.hv(&v), &want)?;
+        // hv_into must fully overwrite a dirty buffer through a shared pool
+        let scratch = HvScratch::default();
+        let mut out = Mat::from_fn(c.tiled.n(), c.tiled.k_width(), |_, _| f64::NAN);
+        c.sharded.hv_into(&v, &mut out, &scratch);
+        bitwise("hv_into (dirty buffer)", &out, &want)?;
+        // and pooling must not change bits on a second pass
+        c.sharded.hv_into(&v, &mut out, &scratch);
+        bitwise("hv_into (pooled rerun)", &out, &want)
+    });
+}
+
+#[test]
+fn prop_ragged_and_clamped_shard_counts_are_bitwise_equal() {
+    // shard counts drawn up past n: exercises maximally ragged last
+    // shards and the clamp at S = n (one row per shard)
+    check("sharded_hv_ragged", PropConfig { cases: 16, max_size: 12, ..Default::default() }, |rng, size| {
+        let probe = 8 + rng.below(8 + 6 * size.max(1));
+        let shards = 1 + rng.below(probe + 4);
+        let c = random_case_with_shards(rng, size, shards);
+        let v = Mat::from_fn(c.tiled.n(), c.tiled.k_width(), |_, _| rng.gaussian());
+        bitwise(
+            &format!("hv (S={} over n={})", c.sharded.num_shards(), c.tiled.n()),
+            &c.sharded.hv(&v),
+            &c.tiled.hv(&v),
+        )
+    });
+}
+
+#[test]
+fn prop_shard_partial_fold_matches_hv() {
+    // the multi-process contract: summing per-shard partial products is
+    // a reassociation, so the fold matches to FP tolerance (not bitwise)
+    check("sharded_partial_fold", PropConfig { cases: 16, max_size: 12, ..Default::default() }, |rng, size| {
+        let c = random_case(rng, size);
+        let (n, k) = (c.tiled.n(), c.tiled.k_width());
+        let v = Mat::from_fn(n, k, |_, _| rng.gaussian());
+        let mut fold = Mat::zeros(n, k);
+        for sh in 0..c.sharded.num_shards() {
+            c.sharded.hv_shard_partial(sh, &v, &mut fold);
+        }
+        close("shard-partial fold", &fold, &c.tiled.hv(&v))
+    });
+}
+
+#[test]
+fn prop_k_cols_and_k_rows_are_bitwise_equal() {
+    check("sharded_kcols_krows_parity", PropConfig { cases: 24, max_size: 16, ..Default::default() }, |rng, size| {
+        let c = random_case(rng, size);
+        let n = c.tiled.n();
+        let bsz = 1 + rng.below(n);
+        let idx = rng.sample_indices(n, bsz);
+        let u = Mat::from_fn(bsz, c.tiled.k_width(), |_, _| rng.gaussian());
+        bitwise("k_cols", &c.sharded.k_cols(&idx, &u), &c.tiled.k_cols(&idx, &u))?;
+        let v = Mat::from_fn(n, c.tiled.k_width(), |_, _| rng.gaussian());
+        bitwise("k_rows", &c.sharded.k_rows(&idx, &v), &c.tiled.k_rows(&idx, &v))
+    });
+}
+
+#[test]
+fn prop_grad_quad_and_rff_eval_are_bitwise_equal() {
+    check("sharded_grad_rff_parity", PropConfig { cases: 16, max_size: 12, ..Default::default() }, |rng, size| {
+        let c = random_case(rng, size);
+        let (n, d, s, m) = (c.tiled.n(), c.tiled.d(), c.tiled.s(), c.tiled.m());
+        let k = c.tiled.k_width();
+        let a = Mat::from_fn(n, k, |_, _| rng.gaussian());
+        let b = Mat::from_fn(n, k, |_, _| rng.gaussian());
+        let w: Vec<f64> = (0..k).map(|_| rng.uniform_in(-1.0, 1.0)).collect();
+        bitwise_slice(
+            "grad_quad",
+            &c.sharded.grad_quad(&a, &b, &w),
+            &c.tiled.grad_quad(&a, &b, &w),
+        )?;
+        let omega0 = Mat::from_fn(d, m, |_, _| rng.gaussian());
+        let wts = Mat::from_fn(2 * m, s, |_, _| rng.gaussian());
+        let noise = Mat::from_fn(n, s, |_, _| rng.gaussian());
+        bitwise(
+            "rff_eval",
+            &c.sharded.rff_eval(&omega0, &wts, &noise),
+            &c.tiled.rff_eval(&omega0, &wts, &noise),
+        )
+    });
+}
+
+#[test]
+fn prop_predict_paths_are_bitwise_equal() {
+    check("sharded_predict_parity", PropConfig { cases: 16, max_size: 12, ..Default::default() }, |rng, size| {
+        let c = random_case(rng, size);
+        let (n, d, s, m) = (c.tiled.n(), c.tiled.d(), c.tiled.s(), c.tiled.m());
+        let omega0 = Mat::from_fn(d, m, |_, _| rng.gaussian());
+        let wts = Mat::from_fn(2 * m, s, |_, _| rng.gaussian());
+        let vy = rng.gaussian_vec(n);
+        let zhat = Mat::from_fn(n, s, |_, _| rng.gaussian());
+        // arbitrary query points, not just the held-out test split
+        let tq = 1 + rng.below(12);
+        let xq = Mat::from_fn(tq, d, |_, _| rng.gaussian());
+        let (m1, s1) = c.sharded.predict_at(&xq, &vy, &zhat, &omega0, &wts).map_err(|e| e.to_string())?;
+        let (m2, s2) = c.tiled.predict_at(&xq, &vy, &zhat, &omega0, &wts).map_err(|e| e.to_string())?;
+        bitwise_slice("predict_at mean", &m1, &m2)?;
+        bitwise("predict_at samples", &s1, &s2)?;
+        let batch = 1 + rng.below(tq + 4);
+        let (m3, s3) = c
+            .sharded
+            .predict_batched(&xq, batch, 0, &vy, &zhat, &omega0, &wts)
+            .map_err(|e| e.to_string())?;
+        bitwise_slice("predict_batched mean", &m3, &m2)?;
+        bitwise("predict_batched samples", &s3, &s2)?;
+        // the default predict (at x_test) rides the same path
+        let (m4, s4) = c.sharded.predict(&vy, &zhat, &omega0, &wts);
+        let (m5, s5) = c.tiled.predict(&vy, &zhat, &omega0, &wts);
+        bitwise_slice("predict mean", &m4, &m5)?;
+        bitwise("predict samples", &s4, &s5)
+    });
+}
+
+#[test]
+fn prop_extend_preserves_bitwise_parity() {
+    // grow both operators with the same chunk(s); the sharded layout
+    // appends to its last shard, the monolithic one to its single panel
+    // cache — products must stay bitwise-equal afterwards
+    check("sharded_extend_parity", PropConfig { cases: 16, max_size: 12, ..Default::default() }, |rng, size| {
+        let mut c = random_case(rng, size);
+        let d = c.tiled.d();
+        for _ in 0..1 + rng.below(3) {
+            let grow = 1 + rng.below(9);
+            let x_new = Mat::from_fn(grow, d, |_, _| rng.gaussian());
+            c.tiled.extend(&x_new).map_err(|e| e.to_string())?;
+            c.sharded.extend(&x_new).map_err(|e| e.to_string())?;
+        }
+        let n = c.tiled.n();
+        if c.sharded.n() != n {
+            return Err(format!("extend: sharded n {} vs tiled n {}", c.sharded.n(), n));
+        }
+        let v = Mat::from_fn(n, c.tiled.k_width(), |_, _| rng.gaussian());
+        bitwise("hv after extend", &c.sharded.hv(&v), &c.tiled.hv(&v))?;
+        let idx = rng.sample_indices(n, 1 + rng.below(n));
+        bitwise(
+            "k_rows after extend",
+            &c.sharded.k_rows(&idx, &v),
+            &c.tiled.k_rows(&idx, &v),
+        )?;
+        let (s, m) = (c.tiled.s(), c.tiled.m());
+        let omega0 = Mat::from_fn(d, m, |_, _| rng.gaussian());
+        let wts = Mat::from_fn(2 * m, s, |_, _| rng.gaussian());
+        let vy = rng.gaussian_vec(n);
+        let zhat = Mat::from_fn(n, s, |_, _| rng.gaussian());
+        let xq = Mat::from_fn(1 + rng.below(6), d, |_, _| rng.gaussian());
+        let (m1, s1) = c.sharded.predict_at(&xq, &vy, &zhat, &omega0, &wts).map_err(|e| e.to_string())?;
+        let (m2, s2) = c.tiled.predict_at(&xq, &vy, &zhat, &omega0, &wts).map_err(|e| e.to_string())?;
+        bitwise_slice("predict_at mean after extend", &m1, &m2)?;
+        bitwise("predict_at samples after extend", &s1, &s2)
+    });
+}
+
+/// Everything a training run produces except wall-clock timings, as bit
+/// patterns: if any solver trajectory, epoch count or metric moved by one
+/// ULP between shard counts, this fingerprint catches it.
+fn run_fingerprint(out: &igp::coordinator::TrainOutcome) -> Vec<u64> {
+    let mut fp = Vec::new();
+    for t in &out.telemetry {
+        fp.push(t.step as u64);
+        fp.push(t.ry.to_bits());
+        fp.push(t.rz.to_bits());
+        fp.push(t.iterations as u64);
+        fp.push(t.epochs.to_bits());
+        fp.push(t.converged as u64);
+        fp.push(t.init_residual_sq.to_bits());
+        fp.extend(t.theta.iter().map(|x| x.to_bits()));
+        fp.extend(t.grad.iter().map(|x| x.to_bits()));
+        if let Some(m) = &t.metrics {
+            fp.push(m.rmse.to_bits());
+            fp.push(m.llh.to_bits());
+        }
+    }
+    fp.extend(out.theta.iter().map(|x| x.to_bits()));
+    fp.push(out.final_metrics.rmse.to_bits());
+    fp.push(out.final_metrics.llh.to_bits());
+    fp.push(out.total_epochs.to_bits());
+    fp
+}
+
+#[test]
+fn trainer_telemetry_is_bitwise_identical_across_shard_counts() {
+    // end-to-end: train, grow the dataset online, train again — the full
+    // telemetry stream must be bit-identical for every shard count,
+    // including through the warm-started post-extend solves
+    let ds = data::generate(&data::spec("test").unwrap());
+    let (base, chunks) = ds.replay_chunks(2);
+    let (x_new, y_new) = &chunks[0];
+    let run = |op: Box<dyn KernelOperator>| -> Vec<u64> {
+        let opts = TrainerOptions {
+            solver: SolverKind::Cg,
+            estimator: EstimatorKind::Pathwise,
+            warm_start: true,
+            lr: 0.05,
+            seed: 13,
+            ..Default::default()
+        };
+        let mut t = Trainer::new(opts, op, &base);
+        let mut fp = run_fingerprint(&t.run(3).unwrap());
+        t.extend_data(x_new, y_new).unwrap();
+        fp.extend(run_fingerprint(&t.run(2).unwrap()));
+        fp
+    };
+    let topts = TiledOptions { tile: 96, threads: 2 };
+    let want = run(Box::new(TiledOperator::with_options(&base, 8, 64, topts.clone())));
+    for shards in [1usize, 2, 3, 5, 8] {
+        let got = run(Box::new(ShardedOperator::with_options(
+            &base,
+            8,
+            64,
+            topts.clone(),
+            shards,
+        )));
+        assert_eq!(
+            got, want,
+            "trainer telemetry fingerprint diverged at S = {shards}"
+        );
+    }
+}
