@@ -86,18 +86,36 @@ impl LinearSolver for ApSolver {
         let block_cost =
             |blk: usize| (((blk + 1) * bsz).min(n) - blk * bsz) as f64 / n as f64;
         let min_epoch_per_iter = block_cost(nblocks - 1).min(block_cost(0));
-        // Greedy no-progress guard: solving block I leaves r[I] at fp dust,
-        // so re-selecting I *immediately* would charge an epoch fraction
-        // for a near-zero update.  Mask the previous block from the
-        // candidate set for one round instead of stopping outright: under
-        // preconditioned scoring the M^-1-mixed score of the just-solved
-        // block can legitimately rank highest (the mix pulls in residual
-        // from other rows) while other blocks still carry real residual —
-        // breaking there froze the solve far from tolerance.  If masking
-        // empties the affordable set (budget edge: only the cheap tail
-        // fits), the selection below yields None and the loop stops, which
-        // preserves the old budget-edge behaviour.
+        // Greedy no-progress guards.  Solving block I leaves r[I] at fp
+        // dust, so what a repeat selection *means* depends on the scoring:
+        //
+        // - Direct scoring reads the residual itself, so greedy
+        //   re-selecting the block it just solved means every other block
+        //   carries even less than that block's fp dust — stop.  Masking
+        //   the previous block here instead would make greedy alternate
+        //   between dust blocks when the tolerance sits below the
+        //   achievable residual, burning the whole remaining budget on
+        //   near-zero updates.
+        // - Preconditioned scoring mixes rows through M^-1, so the
+        //   just-solved block can legitimately rank highest again while
+        //   other blocks still carry real residual — breaking there froze
+        //   the solve far from tolerance.  Mask the previous block from
+        //   the candidate set for one round instead.  If masking empties
+        //   the affordable set (budget edge: only the cheap tail fits),
+        //   the selection yields None and the loop stops, preserving the
+        //   old budget-edge behaviour.
+        //
+        // Either way, four full rounds of greedy selections without a new
+        // residual-norm minimum mean the solve is grinding dust (e.g.
+        // masked selection alternating between dust blocks): stop,
+        // bounding the wasted work at ~four epochs instead of the whole
+        // remaining budget.  Several rounds, not one, because block
+        // coordinate descent is monotone in the error's H-norm, not the
+        // residual 2-norm — short non-improving stretches mid-convergence
+        // are legitimate and must not end the solve.
         let mut last_greedy: Option<usize> = None;
+        let mut best_rsum = ry + rz;
+        let mut stalled_iters = 0usize;
 
         while (ry > tol || rz > tol) && epochs + min_epoch_per_iter <= opts.max_epochs {
             // affordability uses the same `epochs + cost <= max` expression
@@ -120,10 +138,13 @@ impl LinearSolver for ApSolver {
                     if scores.iter().any(|s| !s.is_finite()) {
                         break;
                     }
+                    // mask the just-solved block only under preconditioned
+                    // scoring (see the guard comment above the loop)
+                    let masked = if pre.is_some() { last_greedy } else { None };
                     let best = match scores
                         .iter()
                         .enumerate()
-                        .filter(|(i, _)| affordable(*i) && Some(*i) != last_greedy)
+                        .filter(|(i, _)| affordable(*i) && Some(*i) != masked)
                         .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
                         .map(|(i, _)| i)
                     {
@@ -132,6 +153,11 @@ impl LinearSolver for ApSolver {
                         // block is empty: nothing useful is selectable
                         None => break,
                     };
+                    if pre.is_none() && last_greedy == Some(best) {
+                        // direct scoring re-selected the just-solved
+                        // block: all residual is fp dust
+                        break;
+                    }
                     last_greedy = Some(best);
                     best
                 }
@@ -185,6 +211,18 @@ impl LinearSolver for ApSolver {
             // loop *looking* converged on the probe side; report it instead
             if !ry.is_finite() || !rz.is_finite() {
                 break;
+            }
+            // greedy round-level stall stop (see guard comment above)
+            if opts.ap_selection == ApSelection::Greedy {
+                if ry + rz < best_rsum {
+                    best_rsum = ry + rz;
+                    stalled_iters = 0;
+                } else {
+                    stalled_iters += 1;
+                    if stalled_iters >= 4 * nblocks {
+                        break;
+                    }
+                }
             }
         }
 
@@ -455,6 +493,37 @@ mod tests {
     }
 
     #[test]
+    fn unpreconditioned_greedy_stops_at_fp_dust_instead_of_burning_budget() {
+        // regression: masking the previous block unconditionally let
+        // direct-scoring greedy alternate between fp-dust blocks whenever
+        // the tolerance sat below the achievable residual, charging real
+        // epoch fractions for near-zero updates until the whole budget was
+        // gone.  With an unreachable tolerance the solve must still stop
+        // once all residual is dust — on the immediate-repeat break or,
+        // if dust scores alternate, the round-level stall stop.  The buggy
+        // version exits within one block cost of max_epochs; the fix stops
+        // as soon as progress does, so assert a wide margin of unspent
+        // budget (the 1e-6 convergence tests finish far inside 3000).
+        let (op, b) = setup();
+        let mut v = Mat::zeros(op.n(), op.k_width());
+        let opts = SolveOptions {
+            tolerance: 0.0, // unreachable: fp dust never reaches exact zero
+            max_epochs: 3000.0,
+            block_size: 64,
+            ..Default::default()
+        };
+        let rep = ApSolver::default().solve(&op, &b, &mut v, &opts);
+        assert!(!rep.converged);
+        assert!(
+            rep.epochs < 2000.0,
+            "greedy burned the budget grinding fp dust: {rep:?}"
+        );
+        // the work it did do must still be the right answer
+        let want = Chol::factor(op.h()).unwrap().solve_mat(&b);
+        assert!(v.max_abs_diff(&want) < 1e-4, "{}", v.max_abs_diff(&want));
+    }
+
+    #[test]
     fn block_precond_mode_converges_to_same_solution() {
         let (op, b) = setup();
         let opts = SolveOptions {
@@ -496,9 +565,10 @@ mod tests {
         assert!(rep.converged, "preconditioned greedy stalled: {rep:?}");
         let want = Chol::factor(op.h()).unwrap().solve_mat(&b);
         assert!(v.max_abs_diff(&want) < 1e-4, "{}", v.max_abs_diff(&want));
-        // the guard still terminates the budget-edge case (see
-        // budget_edge_does_not_burn_epochs_re_solving_the_tail): masking
-        // plus affordability empties the candidate set there
+        // the budget-edge case (see
+        // budget_edge_does_not_burn_epochs_re_solving_the_tail) still
+        // terminates via the direct-scoring immediate-repeat break, and
+        // masked dust-alternation is bounded by the round-level stall stop
     }
 
     #[test]

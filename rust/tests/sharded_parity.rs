@@ -188,9 +188,15 @@ fn prop_shard_partial_fold_matches_hv() {
         let c = random_case(rng, size);
         let (n, k) = (c.tiled.n(), c.tiled.k_width());
         let v = Mat::from_fn(n, k, |_, _| rng.gaussian());
+        // hv_shard_partial overwrites its output, so each shard's partial
+        // goes into a scratch buffer and is summed into the fold
         let mut fold = Mat::zeros(n, k);
+        let mut part = Mat::zeros(n, k);
         for sh in 0..c.sharded.num_shards() {
-            c.sharded.hv_shard_partial(sh, &v, &mut fold);
+            c.sharded.hv_shard_partial(sh, &v, &mut part);
+            for (f, p) in fold.data.iter_mut().zip(&part.data) {
+                *f += p;
+            }
         }
         close("shard-partial fold", &fold, &c.tiled.hv(&v))
     });
