@@ -9,6 +9,9 @@
 //!   retained scalar `kval` path on the same shapes — the ablation behind
 //!   the panel engine's multi-× claim (acceptance: >= 2x at n >= 4096 on
 //!   both backends).
+//! * precision section: the same H@V in f32 compute (f64 accumulation)
+//!   vs the f64 reference on tiled/dense/sharded backends — the PR-7
+//!   mixed-precision ablation (target: ~2x from halved memory traffic).
 //! * XLA section (needs `make artifacts`): Pallas kmv_full vs the pure-jnp
 //!   reference artifact.
 //!
@@ -208,6 +211,84 @@ fn panel_vs_reference(json: &mut Option<JsonReport>, quick: bool) {
     }
 }
 
+/// f32-vs-f64 compute precision on the same H@V product (tentpole PR 7
+/// ablation): the tiled f64 reference, then the f32 path (f32 panel
+/// cross-products with f64 accumulation) on tiled, dense (materialised
+/// f32-product H) and sharded backends.  Target: ~2x hv throughput from
+/// the halved panel memory traffic.  `hv_into_prec` is driven directly so
+/// the section measures the product, not the solver wrappers.
+fn precision_f32_vs_f64(json: &mut Option<JsonReport>, quick: bool) {
+    use igp::operators::{HvScratch, Precision};
+    let b = Bencher::default();
+    for &config in configs(quick) {
+        let ds = data::generate(&data::spec(config).unwrap());
+        let (s, m) = (8, 64);
+        let hp = Hyperparams { ell: vec![1.0; ds.spec.d], sigf: 1.1, sigma: 0.3 };
+        let mut rng = Rng::new(3);
+
+        let mut tiled = TiledOperator::new(&ds, s, m);
+        tiled.set_hp(&hp);
+        let (n, d) = (tiled.n(), tiled.d());
+        let v = Mat::from_fn(n, tiled.k_width(), |_, _| rng.gaussian());
+        let flops = hv_flops(n, d, tiled.k_width());
+        let scratch = HvScratch::default();
+        let mut out = Mat::zeros(n, tiled.k_width());
+
+        let r = b.run(
+            &format!("{config}/hv tiled f64 t{} (prec)", tiled.threads()),
+            Some(flops),
+            || {
+                tiled.hv_into_prec(&v, &mut out, &scratch, Precision::F64);
+                std::hint::black_box(&out);
+            },
+        );
+        if let Some(j) = json.as_mut() {
+            j.push("hv_prec", "tiled-f64", n, d, tiled.threads(), &r);
+        }
+
+        tiled.set_precision(Precision::F32).unwrap();
+        let r = b.run(
+            &format!("{config}/hv tiled f32 t{} (prec)", tiled.threads()),
+            Some(flops),
+            || {
+                tiled.hv_into_prec(&v, &mut out, &scratch, Precision::F32);
+                std::hint::black_box(&out);
+            },
+        );
+        if let Some(j) = json.as_mut() {
+            j.push("hv_prec", "tiled-f32", n, d, tiled.threads(), &r);
+        }
+
+        // dense pays f32 at materialisation; the product itself is the
+        // same f64 matmul against the f32-product H
+        let mut dense = DenseOperator::new(&ds, s, m);
+        dense.set_hp(&hp);
+        dense.set_precision(Precision::F32).unwrap();
+        let r = b.run(&format!("{config}/hv dense f32 (prec)"), Some(flops), || {
+            dense.hv_into_prec(&v, &mut out, &scratch, Precision::F32);
+            std::hint::black_box(&out);
+        });
+        if let Some(j) = json.as_mut() {
+            j.push("hv_prec", "dense-f32", n, d, 1, &r);
+        }
+
+        let mut sharded = ShardedOperator::new(&ds, s, m, 4);
+        sharded.set_hp(&hp);
+        sharded.set_precision(Precision::F32).unwrap();
+        let r = b.run(
+            &format!("{config}/hv sharded S=4 f32 t{} (prec)", sharded.threads()),
+            Some(flops),
+            || {
+                sharded.hv_into_prec(&v, &mut out, &scratch, Precision::F32);
+                std::hint::black_box(&out);
+            },
+        );
+        if let Some(j) = json.as_mut() {
+            j.push("hv_prec", "sharded-f32", n, d, sharded.threads(), &r);
+        }
+    }
+}
+
 fn xla_backends(json: &mut Option<JsonReport>, quick: bool) {
     common::skip_or(|| {
         let b = Bencher::default();
@@ -249,6 +330,7 @@ fn main() {
     rust_backends(&mut json, quick);
     sharded_vs_monolithic(&mut json, quick);
     panel_vs_reference(&mut json, quick);
+    precision_f32_vs_f64(&mut json, quick);
     xla_backends(&mut json, quick);
     if let Some(j) = &json {
         j.write().expect("bench json write");

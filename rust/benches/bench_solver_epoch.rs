@@ -2,7 +2,9 @@
 //! iteration vs one AP epoch vs one SGD epoch on the same system.
 //!
 //! Pure-Rust section (always runs) compares the dense and tiled backends;
-//! the XLA section needs `make artifacts`.
+//! the precision section runs CG at f32 and f64 compute (the full guarded
+//! f32 path, refinement + drift verify); the XLA section needs
+//! `make artifacts`.
 //!
 //! Flags (after `--`): `--json PATH` emits machine-readable records,
 //! `--quick` restricts to the tiny `test` config (CI smoke).
@@ -186,6 +188,62 @@ fn recurrence_threads(json: &mut Option<JsonReport>, quick: bool) {
     }
 }
 
+/// f32-vs-f64 solve section: CG on the tiled backend at both compute
+/// precisions.  The f32 row exercises the full guarded path — iterative
+/// refinement plus the end-of-solve f64 drift verification — so the
+/// recorded time is what a real `--precision f32` training step pays, not
+/// just the cheaper products.
+fn precision_f32_vs_f64(json: &mut Option<JsonReport>, quick: bool) {
+    use igp::operators::Precision;
+    let b = Bencher::default();
+    let configs: &[&str] = if quick { &["test"] } else { &["test", "protein"] };
+    for &config in configs {
+        let ds = data::generate(&data::spec(config).unwrap());
+        let hp = Hyperparams { ell: vec![1.0; ds.spec.d], sigf: 1.0, sigma: 0.3 };
+        let block = (ds.spec.n / 16).clamp(32, 256);
+
+        let mut tiled = TiledOperator::new(&ds, 8, 64);
+        tiled.set_hp(&hp);
+        let mut rng = Rng::new(4);
+        let probes = ProbeSet::sample(EstimatorKind::Pathwise, &tiled, &mut rng);
+        let targets = probes.targets(&tiled, &ds.y_train);
+        let (n, d) = (tiled.n(), tiled.d());
+
+        // 3-epoch budget: one f32 refinement round costs 1.5 epochs
+        // (inner product + f64 recompute) plus the 1-epoch drift verify,
+        // so the 1-epoch default would never enter the refinement loop
+        let mut solver = make_solver(SolverKind::Cg);
+        let opts = SolveOptions { max_epochs: 3.0, ..epoch_opts(block) };
+        let r = b.run(
+            &format!("{config}/cg-epoch f64 tiled t{} (prec)", tiled.threads()),
+            None,
+            || {
+                let mut v = Mat::zeros(n, tiled.k_width());
+                std::hint::black_box(solver.solve(&tiled, &targets, &mut v, &opts));
+            },
+        );
+        if let Some(j) = json.as_mut() {
+            j.push("cg-epoch-f64", "tiled", n, d, tiled.threads(), &r);
+        }
+
+        tiled.set_precision(Precision::F32).unwrap();
+        let mut solver = make_solver(SolverKind::Cg);
+        let opts =
+            SolveOptions { precision: Precision::F32, max_epochs: 3.0, ..epoch_opts(block) };
+        let r = b.run(
+            &format!("{config}/cg-epoch f32 tiled t{} (prec)", tiled.threads()),
+            None,
+            || {
+                let mut v = Mat::zeros(n, tiled.k_width());
+                std::hint::black_box(solver.solve(&tiled, &targets, &mut v, &opts));
+            },
+        );
+        if let Some(j) = json.as_mut() {
+            j.push("cg-epoch-f32", "tiled", n, d, tiled.threads(), &r);
+        }
+    }
+}
+
 fn xla_backends(quick: bool) {
     common::skip_or(|| {
         let b = Bencher::default();
@@ -215,6 +273,7 @@ fn main() {
     rust_backends(&mut json, quick);
     sharded_backend(&mut json, quick);
     recurrence_threads(&mut json, quick);
+    precision_f32_vs_f64(&mut json, quick);
     xla_backends(quick);
     if let Some(j) = &json {
         j.write().expect("bench json write");

@@ -212,6 +212,11 @@ pub struct RunConfig {
     /// Online data-arrival mode: replay the dataset in this many chunks,
     /// carrying solver/optimiser state across arrivals (0 or 1 = off).
     pub online_chunks: usize,
+    /// Compute precision for operator products: "f64" (default, the
+    /// bitwise-parity reference) or "f32" (reduced-precision compute with
+    /// f64 accumulation, iterative refinement for CG, and an f64
+    /// residual-drift guard on every solver).  CPU backends only.
+    pub precision: String,
 }
 
 impl Default for RunConfig {
@@ -234,6 +239,7 @@ impl Default for RunConfig {
             shards: 1,
             threads: 0,
             online_chunks: 0,
+            precision: "f64".into(),
         }
     }
 }
@@ -263,6 +269,7 @@ impl RunConfig {
                     "shards" => rc.shards = v.as_int()? as usize,
                     "threads" => rc.threads = v.as_int()? as usize,
                     "online_chunks" => rc.online_chunks = v.as_int()? as usize,
+                    "precision" => rc.precision = v.as_str()?.to_string(),
                     other => bail!("unknown run config key '{other}'"),
                 }
             }
@@ -303,6 +310,11 @@ impl RunConfig {
         }
         if self.online_chunks > 1 && self.backend == "xla" {
             bail!("online mode needs a resizable backend (dense|tiled); xla artifacts have static shapes");
+        }
+        // single source of truth for precision names
+        let prec = crate::kernels::panel::Precision::parse(&self.precision)?;
+        if prec.is_f32() && self.backend == "xla" {
+            bail!("precision = \"f32\" is a CPU-backend feature (dense|tiled); xla artifacts are compiled f64");
         }
         Ok(())
     }
@@ -423,6 +435,20 @@ mod tests {
         // static-shape backend cannot grow
         let bad = parse("online_chunks = 4\nbackend = \"xla\"").unwrap();
         assert!(RunConfig::from_doc(&bad).is_err());
+    }
+
+    #[test]
+    fn run_config_precision() {
+        assert_eq!(RunConfig::default().precision, "f64");
+        let doc = parse(r#"precision = "f32""#).unwrap();
+        assert_eq!(RunConfig::from_doc(&doc).unwrap().precision, "f32");
+        let bad = parse(r#"precision = "f16""#).unwrap();
+        assert!(RunConfig::from_doc(&bad).is_err());
+        // xla artifacts are compiled f64: the combination must be rejected
+        let xla = parse("precision = \"f32\"\nbackend = \"xla\"").unwrap();
+        assert!(RunConfig::from_doc(&xla).is_err());
+        let xla64 = parse("precision = \"f64\"\nbackend = \"xla\"").unwrap();
+        assert!(RunConfig::from_doc(&xla64).is_ok());
     }
 
     #[test]

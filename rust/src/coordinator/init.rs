@@ -64,7 +64,10 @@ fn nearest(x: &Mat, centre: usize, k: usize) -> Vec<usize> {
             (d2, i)
         })
         .collect();
-    dist.sort_by(|a, b| a.0.partial_cmp(&b.0).unwrap());
+    // total_cmp, not partial_cmp().unwrap(): a NaN feature (corrupt input
+    // row) must not panic the initialiser — NaN distances order last, so
+    // the k nearest clean rows are still returned
+    dist.sort_by(|a, b| a.0.total_cmp(&b.0));
     dist.into_iter().take(k).map(|(_, i)| i).collect()
 }
 
@@ -103,6 +106,28 @@ mod tests {
         for &i in &idx {
             assert!((4..=6).contains(&i), "{i}");
         }
+    }
+
+    #[test]
+    fn nearest_tolerates_nan_rows_instead_of_panicking() {
+        // regression: the comparator was partial_cmp().unwrap(), so one
+        // NaN feature anywhere in the dataset aborted the whole
+        // initialisation.  NaN distances must sort last (total_cmp: NaN
+        // with a positive sign bit orders above every real), leaving the
+        // clean rows as the nearest set.
+        let mut x = Mat::from_fn(10, 1, |i, _| i as f64);
+        x[(7, 0)] = f64::NAN;
+        let idx = nearest(&x, 5, 3);
+        assert_eq!(idx[0], 5);
+        assert_eq!(idx.len(), 3);
+        for &i in &idx {
+            assert!(i != 7, "NaN row selected as a nearest neighbour");
+            assert!((3..=6).contains(&i), "{i}");
+        }
+        // even a NaN centre must not panic: every distance is NaN, and the
+        // call still returns k indices
+        let idx = nearest(&x, 7, 3);
+        assert_eq!(idx.len(), 3);
     }
 
     #[test]

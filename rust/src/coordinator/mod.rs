@@ -26,7 +26,7 @@ use crate::data::Dataset;
 use crate::estimator::{EstimatorKind, ProbeSet};
 use crate::gp::{metrics, pathwise_variances, Metrics};
 use crate::linalg::Mat;
-use crate::operators::KernelOperator;
+use crate::operators::{KernelOperator, Precision};
 use crate::optim::{Adam, SoftplusParams};
 use crate::serve::{ArtifactCache, PosteriorArtifact};
 use crate::solvers::{
@@ -68,6 +68,13 @@ pub struct TrainerOptions {
     pub threads: usize,
     /// AP: score blocks on the preconditioned residual (off by default).
     pub ap_precond: bool,
+    /// Compute precision for operator products inside the solves.  `F64`
+    /// (the default) is the bitwise-parity reference; `F32` enables the
+    /// reduced-precision path with iterative refinement (CG) and the f64
+    /// residual-drift guard on every solver.  The operator must have been
+    /// switched with `set_precision(F32)` as well — the trainer does this
+    /// when constructed through the CLI wiring.
+    pub precision: Precision,
     pub seed: u64,
 }
 
@@ -90,6 +97,7 @@ impl Default for TrainerOptions {
             predict_every: None,
             threads: 0,
             ap_precond: false,
+            precision: Precision::F64,
             seed: 0,
         }
     }
@@ -196,6 +204,8 @@ impl Trainer {
             ap_selection: crate::solvers::ApSelection::Greedy,
             threads: opts.threads,
             ap_block_precond: opts.ap_precond,
+            precision: opts.precision,
+            drift_ratio: 8.0,
         };
         let mut solver = make_solver(opts.solver);
         let precond: SharedPreconditionerCache = PreconditionerCache::shared();

@@ -8,8 +8,9 @@
 //!
 //! 1. caches the lengthscale-scaled rows `Xs = X / ell` and their squared
 //!    norms once per hyperparameter setting ([`ScaledX`], keyed on the
-//!    lengthscale bits + n, invalidated on hyperparameter change and grown
-//!    in place by [`ScaledX::extend`] for online data arrival);
+//!    lengthscale bits + n + an input-content fingerprint, invalidated on
+//!    hyperparameter or data change and grown in place by
+//!    [`ScaledX::extend`] for online data arrival);
 //! 2. computes tile cross-products `Xi · Xjᵀ` with a register-blocked,
 //!    4-wide unrolled micro-kernel ([`crate::linalg::micro`], shared with
 //!    `Mat::matmul`'s row update);
@@ -47,21 +48,96 @@ use super::{Hyperparams, KernelFamily};
 /// position-independent, so the chunking never changes bits.
 pub const PANEL_COLS: usize = 256;
 
+/// Compute precision of the panel cross-products.
+///
+/// `F64` is the reference path: every product and accumulation in f64,
+/// bitwise-stable across tile/thread/shard counts — the contract all the
+/// parity tests pin.  `F32` forms tile cross-products from an f32 mirror
+/// of the scaled rows ([`ScaledX::ensure_f32`]) but *accumulates into f64
+/// partials in the identical ascending-index order*, so f32 panels keep
+/// the same determinism contract (bitwise-equal across backends at fixed
+/// precision) while halving the memory traffic of the dominant `Xi · Xjᵀ`
+/// stream.  Everything downstream of the panel values (apply, solver
+/// recurrences, residuals) stays f64.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum Precision {
+    #[default]
+    F64,
+    F32,
+}
+
+impl Precision {
+    #[inline]
+    pub fn is_f32(self) -> bool {
+        matches!(self, Precision::F32)
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            Precision::F64 => "f64",
+            Precision::F32 => "f32",
+        }
+    }
+
+    pub fn parse(s: &str) -> anyhow::Result<Precision> {
+        match s {
+            "f64" | "F64" | "double" => Ok(Precision::F64),
+            "f32" | "F32" | "single" => Ok(Precision::F32),
+            other => anyhow::bail!("unknown precision '{other}' (expected f32 or f64)"),
+        }
+    }
+}
+
+const FNV_OFFSET: u64 = 0xcbf29ce484222325;
+const FNV_PRIME: u64 = 0x100000001b3;
+
+/// Streamed FNV-1a over the exact f64 bits of `vals`, continuing from
+/// `h`.  Streaming chunk-by-chunk over concatenated data yields the same
+/// hash as one pass over the concatenation, which is what lets
+/// [`ScaledX::extend`] keep the content fingerprint incremental.
+fn fnv1a_extend(mut h: u64, vals: &[f64]) -> u64 {
+    for v in vals {
+        for b in v.to_bits().to_le_bytes() {
+            h = (h ^ b as u64).wrapping_mul(FNV_PRIME);
+        }
+    }
+    h
+}
+
+/// Lazily built f32 mirror of the scaled rows: the same rows cast to f32,
+/// with squared norms accumulated through `micro::dot::<f32>` — the same
+/// association the f32 cross-product uses, which is what keeps the
+/// Gram-trick diagonal exactly zero at reduced precision too.
+#[derive(Clone, Debug)]
+struct F32Mirror {
+    xs: Vec<f32>,
+    sq: Vec<f64>,
+}
+
 /// Lengthscale-scaled inputs with cached squared row norms — the
 /// per-hyperparameter state of the panel engine.
 ///
-/// Keyed on the exact f64 bits of the lengthscales plus the row count:
-/// [`ScaledX::refresh`] rebuilds only when either changes (a
-/// sigf/sigma-only hyperparameter step keeps the cache), and
-/// [`ScaledX::extend`] grows it in place for online data arrival with the
-/// appended rows scaled exactly as a fresh build would scale them, so the
-/// grown cache is bitwise-identical to [`ScaledX::new`] on the
+/// Keyed on the exact f64 bits of the lengthscales plus the row count,
+/// with an FNV-1a fingerprint of the raw input bits folded in by
+/// [`ScaledX::refresh`]: a sigf/sigma-only hyperparameter step keeps the
+/// cache, while a changed lengthscale *or a same-shape dataset swap*
+/// (e.g. restoring a trainer against different data) rebuilds it.
+/// [`ScaledX::extend`] grows the cache in place for online data arrival
+/// with the appended rows scaled exactly as a fresh build would scale
+/// them, so the grown cache — fingerprint and optional f32 mirror
+/// included — is bitwise-identical to [`ScaledX::new`] on the
 /// concatenated inputs.
 #[derive(Clone, Debug)]
 pub struct ScaledX {
     key: Vec<u64>,
     xs: Mat,
     sq: Vec<f64>,
+    /// FNV-1a over the exact bits of the *unscaled* input rows, streamed
+    /// in arrival order — the content half of the cache key.
+    xfp: u64,
+    /// Lazy f32 mirror for reduced-precision panel compute; carried
+    /// through gather/extend, dropped on rebuild unless re-ensured.
+    f32m: Option<F32Mirror>,
 }
 
 impl ScaledX {
@@ -71,6 +147,8 @@ impl ScaledX {
             key: ell.iter().map(|e| e.to_bits()).collect(),
             xs: Mat::zeros(0, x.cols),
             sq: Vec::with_capacity(x.rows),
+            xfp: FNV_OFFSET,
+            f32m: None,
         };
         sx.append(x, ell);
         sx
@@ -107,13 +185,56 @@ impl ScaledX {
     }
 
     /// Revalidate against (`x`, `ell`): rebuild on a key mismatch, no-op
-    /// (and `false`) when the cache is already valid.
+    /// (and `false`) when the cache is already valid.  The key includes a
+    /// fingerprint of `x`'s content, so swapping in a *different* dataset
+    /// of the same shape rebuilds instead of silently serving stale
+    /// scaled rows; the fingerprint pass is O(n·d), noise against the
+    /// O(n²·d) products the cache feeds.  A pre-existing f32 mirror is
+    /// rebuilt alongside so reduced-precision callers stay consistent.
     pub fn refresh(&mut self, x: &Mat, ell: &[f64]) -> bool {
-        if self.matches(ell, x.rows) {
+        if self.matches(ell, x.rows) && self.xfp == fnv1a_extend(FNV_OFFSET, &x.data) {
             return false;
         }
+        let had_f32 = self.f32m.is_some();
         *self = ScaledX::new(x, ell);
+        if had_f32 {
+            self.ensure_f32();
+        }
         true
+    }
+
+    /// Build the f32 mirror if absent: scaled rows cast to f32, squared
+    /// norms re-accumulated through the f32 dot so the mirror's Gram
+    /// diagonal is exactly zero.  Idempotent; `extend` grows an existing
+    /// mirror in place with the same per-row procedure, so a grown mirror
+    /// is bitwise-identical to a freshly built one.
+    pub fn ensure_f32(&mut self) {
+        if self.f32m.is_some() {
+            return;
+        }
+        let mut m = F32Mirror {
+            xs: Vec::with_capacity(self.xs.data.len()),
+            sq: Vec::with_capacity(self.xs.rows),
+        };
+        Self::grow_mirror(&mut m, &self.xs, 0);
+        self.f32m = Some(m);
+    }
+
+    /// True when the f32 mirror is built and covers every row.
+    pub fn has_f32(&self) -> bool {
+        self.f32m.as_ref().is_some_and(|m| m.sq.len() == self.xs.rows)
+    }
+
+    fn grow_mirror(m: &mut F32Mirror, xs: &Mat, from_row: usize) {
+        let d = xs.cols;
+        for i in from_row..xs.rows {
+            let start = m.xs.len();
+            for &v in xs.row(i) {
+                m.xs.push(v as f32);
+            }
+            let row = &m.xs[start..start + d];
+            m.sq.push(micro::dot(row, row));
+        }
     }
 
     /// Grow in place for newly arrived rows (online data arrival).  The
@@ -129,12 +250,28 @@ impl ScaledX {
 
     /// Row subset (AP blocks, k_cols/k_rows batches, pivoted-Cholesky
     /// pivots): rows and norms are *copied*, never recomputed, so gathered
-    /// entries keep exactly the bits of the full-set entries.
+    /// entries keep exactly the bits of the full-set entries — the f32
+    /// mirror rows included, when one is built.  The parent fingerprint is
+    /// inherited verbatim; gathers are transient and never `refresh`ed.
     pub fn gather(&self, idx: &[usize]) -> ScaledX {
+        let d = self.d();
+        let f32m = self.f32m.as_ref().map(|m| {
+            let mut g = F32Mirror {
+                xs: Vec::with_capacity(idx.len() * d),
+                sq: Vec::with_capacity(idx.len()),
+            };
+            for &i in idx {
+                g.xs.extend_from_slice(&m.xs[i * d..(i + 1) * d]);
+                g.sq.push(m.sq[i]);
+            }
+            g
+        });
         ScaledX {
             key: self.key.clone(),
             xs: self.xs.gather_rows(idx),
             sq: idx.iter().map(|&i| self.sq[i]).collect(),
+            xfp: self.xfp,
+            f32m,
         }
     }
 
@@ -148,10 +285,16 @@ impl ScaledX {
     pub fn gather_parts(parts: &[ScaledX], starts: &[usize], idx: &[usize]) -> ScaledX {
         assert!(!parts.is_empty() && parts.len() == starts.len());
         let d = parts[0].d();
+        let with_mirror = parts.iter().all(|p| p.f32m.is_some());
         let mut out = ScaledX {
             key: parts[0].key.clone(),
             xs: Mat::zeros(0, d),
             sq: Vec::with_capacity(idx.len()),
+            xfp: parts[0].xfp,
+            f32m: with_mirror.then(|| F32Mirror {
+                xs: Vec::with_capacity(idx.len() * d),
+                sq: Vec::with_capacity(idx.len()),
+            }),
         };
         out.xs.data.reserve(idx.len() * d);
         for &gi in idx {
@@ -163,6 +306,11 @@ impl ScaledX {
             out.xs.data.extend_from_slice(parts[p].row(li));
             out.xs.rows += 1;
             out.sq.push(parts[p].sq(li));
+            if let Some(g) = out.f32m.as_mut() {
+                let pm = parts[p].f32m.as_ref().unwrap();
+                g.xs.extend_from_slice(&pm.xs[li * d..(li + 1) * d]);
+                g.sq.push(pm.sq[li]);
+            }
         }
         out
     }
@@ -170,6 +318,8 @@ impl ScaledX {
     fn append(&mut self, x: &Mat, ell: &[f64]) {
         assert_eq!(x.cols, self.xs.cols);
         let d = x.cols;
+        let rows_before = self.xs.rows;
+        self.xfp = fnv1a_extend(self.xfp, &x.data);
         self.xs.data.reserve(x.rows * d);
         for i in 0..x.rows {
             let start = self.xs.data.len();
@@ -180,6 +330,52 @@ impl ScaledX {
             let row = &self.xs.data[start..start + d];
             self.sq.push(micro::dot(row, row));
         }
+        if let Some(mut m) = self.f32m.take() {
+            Self::grow_mirror(&mut m, &self.xs, rows_before);
+            self.f32m = Some(m);
+        }
+    }
+}
+
+/// Generic core of one panel row: clamped squared scaled distances of row
+/// `ai` (norm `sqa`) against the contiguous row block `j0..j0+out.len()`
+/// of the row-major `[?, d]` buffer `bxs` with norms `bsq`.  The element
+/// type `S` sets the product precision; partials always accumulate in f64
+/// in the same ascending-index association, so `S = f64` reproduces the
+/// historical bits exactly and `S = f32` keeps the identical block-order
+/// contract at reduced product precision.
+#[inline(always)]
+fn fill_sq_row<S: micro::Scalar>(
+    ai: &[S],
+    sqa: f64,
+    bxs: &[S],
+    bsq: &[f64],
+    d: usize,
+    j0: usize,
+    out: &mut [f64],
+) {
+    let jn = out.len();
+    let mut c = 0;
+    while c + 4 <= jn {
+        let j = j0 + c;
+        let (s0, s1, s2, s3) = micro::dot4(
+            ai,
+            &bxs[j * d..(j + 1) * d],
+            &bxs[(j + 1) * d..(j + 2) * d],
+            &bxs[(j + 2) * d..(j + 3) * d],
+            &bxs[(j + 3) * d..(j + 4) * d],
+        );
+        out[c] = (sqa + bsq[j] - 2.0 * s0).max(0.0);
+        out[c + 1] = (sqa + bsq[j + 1] - 2.0 * s1).max(0.0);
+        out[c + 2] = (sqa + bsq[j + 2] - 2.0 * s2).max(0.0);
+        out[c + 3] = (sqa + bsq[j + 3] - 2.0 * s3).max(0.0);
+        c += 4;
+    }
+    while c < jn {
+        let j = j0 + c;
+        let s = micro::dot(ai, &bxs[j * d..(j + 1) * d]);
+        out[c] = (sqa + bsq[j] - 2.0 * s).max(0.0);
+        c += 1;
     }
 }
 
@@ -198,28 +394,51 @@ pub fn fill_row(
 ) {
     debug_assert_eq!(a.d(), b.d());
     debug_assert!(j0 + out.len() <= b.n());
-    let ai = a.row(i);
-    let sqa = a.sq[i];
-    let jn = out.len();
-    let mut c = 0;
-    while c + 4 <= jn {
-        let j = j0 + c;
-        let (s0, s1, s2, s3) =
-            micro::dot4(ai, b.row(j), b.row(j + 1), b.row(j + 2), b.row(j + 3));
-        out[c] = (sqa + b.sq[j] - 2.0 * s0).max(0.0);
-        out[c + 1] = (sqa + b.sq[j + 1] - 2.0 * s1).max(0.0);
-        out[c + 2] = (sqa + b.sq[j + 2] - 2.0 * s2).max(0.0);
-        out[c + 3] = (sqa + b.sq[j + 3] - 2.0 * s3).max(0.0);
-        c += 4;
-    }
-    while c < jn {
-        let j = j0 + c;
-        let s = micro::dot(ai, b.row(j));
-        out[c] = (sqa + b.sq[j] - 2.0 * s).max(0.0);
-        c += 1;
-    }
+    let d = b.d();
+    fill_sq_row(a.row(i), a.sq[i], &b.xs.data, &b.sq, d, j0, out);
     for v in out.iter_mut() {
         *v = sf2 * family.unit_cov(*v);
+    }
+}
+
+/// [`fill_row`] against the f32 mirrors of both caches.  Panics if either
+/// side's mirror is missing — operators call [`ScaledX::ensure_f32`] when
+/// switched to f32 compute.
+fn fill_row_f32(
+    a: &ScaledX,
+    i: usize,
+    b: &ScaledX,
+    j0: usize,
+    sf2: f64,
+    family: KernelFamily,
+    out: &mut [f64],
+) {
+    debug_assert_eq!(a.d(), b.d());
+    debug_assert!(j0 + out.len() <= b.n());
+    let am = a.f32m.as_ref().expect("f32 mirror missing on A (call ensure_f32)");
+    let bm = b.f32m.as_ref().expect("f32 mirror missing on B (call ensure_f32)");
+    let d = b.d();
+    fill_sq_row(&am.xs[i * d..(i + 1) * d], am.sq[i], &bm.xs, &bm.sq, d, j0, out);
+    for v in out.iter_mut() {
+        *v = sf2 * family.unit_cov(*v);
+    }
+}
+
+/// Precision-dispatched [`fill_row`]: the `F64` arm is the untouched
+/// reference path, the `F32` arm reads the mirrors.
+pub fn fill_row_prec(
+    a: &ScaledX,
+    i: usize,
+    b: &ScaledX,
+    j0: usize,
+    sf2: f64,
+    family: KernelFamily,
+    out: &mut [f64],
+    prec: Precision,
+) {
+    match prec {
+        Precision::F64 => fill_row(a, i, b, j0, sf2, family, out),
+        Precision::F32 => fill_row_f32(a, i, b, j0, sf2, family, out),
     }
 }
 
@@ -236,10 +455,27 @@ pub fn fill_panel(
     family: KernelFamily,
     out: &mut [f64],
 ) {
+    fill_panel_prec(a, i0, i1, b, j0, j1, sf2, family, out, Precision::F64);
+}
+
+/// Precision-dispatched [`fill_panel`].
+#[allow(clippy::too_many_arguments)]
+pub fn fill_panel_prec(
+    a: &ScaledX,
+    i0: usize,
+    i1: usize,
+    b: &ScaledX,
+    j0: usize,
+    j1: usize,
+    sf2: f64,
+    family: KernelFamily,
+    out: &mut [f64],
+    prec: Precision,
+) {
     let w = j1 - j0;
     debug_assert!(out.len() >= (i1 - i0) * w);
     for (r, i) in (i0..i1).enumerate() {
-        fill_row(a, i, b, j0, sf2, family, &mut out[r * w..(r + 1) * w]);
+        fill_row_prec(a, i, b, j0, sf2, family, &mut out[r * w..(r + 1) * w], prec);
     }
 }
 
@@ -277,13 +513,26 @@ pub fn apply_panel(
 /// across all of A's rows; chunking never changes bits (entry values are
 /// position-independent).
 pub fn cross_matrix(a: &ScaledX, b: &ScaledX, sf2: f64, family: KernelFamily) -> Mat {
+    cross_matrix_prec(a, b, sf2, family, Precision::F64)
+}
+
+/// Precision-dispatched [`cross_matrix`]: the `F64` arm reproduces the
+/// reference bits, the `F32` arm streams the mirrors through the same
+/// chunking (chunking never changes bits at either precision).
+pub fn cross_matrix_prec(
+    a: &ScaledX,
+    b: &ScaledX,
+    sf2: f64,
+    family: KernelFamily,
+    prec: Precision,
+) -> Mat {
     let (an, bn) = (a.n(), b.n());
     let mut out = Mat::zeros(an, bn);
     let mut j0 = 0;
     while j0 < bn {
         let j1 = (j0 + PANEL_COLS).min(bn);
         for i in 0..an {
-            fill_row(a, i, b, j0, sf2, family, &mut out.data[i * bn + j0..i * bn + j1]);
+            fill_row_prec(a, i, b, j0, sf2, family, &mut out.data[i * bn + j0..i * bn + j1], prec);
         }
         j0 = j1;
     }
@@ -482,6 +731,113 @@ mod tests {
             for (a, b) in got.row(i).iter().zip(want.row(i)) {
                 assert_eq!(a.to_bits(), b.to_bits());
             }
+        }
+    }
+
+    #[test]
+    fn refresh_rebuilds_on_same_shape_dataset_swap() {
+        // Regression: the key used to be (lengthscale bits, n) only, so a
+        // same-shape dataset swap silently served stale scaled rows.
+        let mut rng = Rng::new(6);
+        let (n, d) = (9, 3);
+        let x1 = crate::linalg::Mat::from_fn(n, d, |_, _| rng.gaussian());
+        let x2 = crate::linalg::Mat::from_fn(n, d, |_, _| rng.gaussian());
+        let ell = vec![0.9, 1.2, 0.8];
+        let mut sx = ScaledX::new(&x1, &ell);
+        // same data, same ell: still a no-op
+        assert!(!sx.refresh(&x1, &ell));
+        // different data, same shape and ell: must rebuild
+        assert!(sx.refresh(&x2, &ell));
+        let fresh = ScaledX::new(&x2, &ell);
+        for i in 0..n {
+            assert_eq!(sx.sq(i).to_bits(), fresh.sq(i).to_bits());
+            for (a, b) in sx.row(i).iter().zip(fresh.row(i)) {
+                assert_eq!(a.to_bits(), b.to_bits());
+            }
+        }
+        // and back to a no-op once rebuilt
+        assert!(!sx.refresh(&x2, &ell));
+        // a single flipped bit in one entry is enough to invalidate
+        let mut x3 = x2.clone();
+        x3.data[4] = f64::from_bits(x3.data[4].to_bits() ^ 1);
+        assert!(sx.refresh(&x3, &ell));
+    }
+
+    #[test]
+    fn f32_diagonal_is_exact_and_close_to_f64() {
+        let mut rng = Rng::new(7);
+        let (n, d) = (21, 4);
+        let x = crate::linalg::Mat::from_fn(n, d, |_, _| rng.gaussian());
+        let hp = hp(d, 13);
+        let sf2 = hp.sigf * hp.sigf;
+        let mut sx = ScaledX::new(&x, &hp.ell);
+        sx.ensure_f32();
+        assert!(sx.has_f32());
+        for family in [KernelFamily::Matern32, KernelFamily::Rbf] {
+            let k64 = cross_matrix_prec(&sx, &sx, sf2, family, Precision::F64);
+            let k32 = cross_matrix_prec(&sx, &sx, sf2, family, Precision::F32);
+            for i in 0..n {
+                // the mirror's norm and cross-product share the f32 dot's
+                // association, so the Gram diagonal stays exactly sigf²
+                assert_eq!(k32[(i, i)].to_bits(), sf2.to_bits(), "diag {i}");
+                for j in 0..n {
+                    let err = (k32[(i, j)] - k64[(i, j)]).abs();
+                    assert!(err < 1e-5 * sf2.max(1.0), "({i},{j}): err {err}");
+                }
+            }
+        }
+        // f64 entries are untouched by the mirror's existence
+        let k_ref = cross_matrix(&sx, &sx, sf2, KernelFamily::Rbf);
+        let k_prec = cross_matrix_prec(&sx, &sx, sf2, KernelFamily::Rbf, Precision::F64);
+        for (a, b) in k_ref.data.iter().zip(&k_prec.data) {
+            assert_eq!(a.to_bits(), b.to_bits());
+        }
+    }
+
+    #[test]
+    fn f32_mirror_survives_gather_and_extend_bitwise() {
+        let mut rng = Rng::new(8);
+        let (n, d) = (11, 3);
+        let x = crate::linalg::Mat::from_fn(n, d, |_, _| rng.gaussian());
+        let ell = vec![0.7, 1.4, 1.0];
+        let mut sx = ScaledX::new(&x, &ell);
+        sx.ensure_f32();
+        // extend grows the mirror identically to a fresh build on the
+        // concatenated inputs
+        let chunk = crate::linalg::Mat::from_fn(5, d, |_, _| rng.gaussian());
+        sx.extend(&chunk, &ell);
+        assert!(sx.has_f32());
+        let mut full = x.clone();
+        full.append_rows(&chunk);
+        let mut fresh = ScaledX::new(&full, &ell);
+        fresh.ensure_f32();
+        let (sm, fm) = (sx.f32m.as_ref().unwrap(), fresh.f32m.as_ref().unwrap());
+        assert_eq!(sm.xs.len(), fm.xs.len());
+        for (a, b) in sm.xs.iter().zip(&fm.xs) {
+            assert_eq!(a.to_bits(), b.to_bits());
+        }
+        for (a, b) in sm.sq.iter().zip(&fm.sq) {
+            assert_eq!(a.to_bits(), b.to_bits());
+        }
+        // gather carries mirror rows verbatim
+        let idx = vec![2, 0, 13, 7];
+        let g = sx.gather(&idx);
+        assert!(g.has_f32());
+        let gm = g.f32m.as_ref().unwrap();
+        for (r, &i) in idx.iter().enumerate() {
+            assert_eq!(gm.sq[r].to_bits(), sm.sq[i].to_bits());
+            for c in 0..d {
+                assert_eq!(gm.xs[r * d + c].to_bits(), sm.xs[i * d + c].to_bits());
+            }
+        }
+        // gather_parts carries mirrors when every part has one
+        let parts = vec![sx.gather(&[0, 1, 2, 3, 4, 5, 6, 7]), sx.gather(&[8, 9, 10, 11, 12, 13, 14, 15])];
+        let got = ScaledX::gather_parts(&parts, &[0, 8], &idx);
+        assert!(got.has_f32());
+        let want = sx.gather(&idx);
+        let (a, b) = (got.f32m.as_ref().unwrap(), want.f32m.as_ref().unwrap());
+        for (x32, y32) in a.xs.iter().zip(&b.xs) {
+            assert_eq!(x32.to_bits(), y32.to_bits());
         }
     }
 

@@ -10,16 +10,58 @@
 //! (`Mat::matmul`'s load-bearing k-major order, tiled==dense bitwise
 //! equality) survive the blocking.
 
+/// Element scalar for the precision-generic micro-kernels: products are
+/// formed in the element type (`Self::Mul`), then widened to f64 for the
+/// accumulation.  For f64 the widening is the identity, so the generic
+/// kernels are bitwise-identical to the historical f64-only ones; for f32
+/// each product rounds to f32 first (cheap, vectorises twice as wide) and
+/// the running sum stays in f64, which bounds the accumulation error at
+/// the per-product rounding rather than letting it grow with the sum
+/// length.
+pub trait Scalar:
+    Copy + Send + Sync + PartialEq + std::ops::Mul<Output = Self> + 'static
+{
+    fn to_f64(self) -> f64;
+    fn from_f64(v: f64) -> Self;
+}
+
+impl Scalar for f64 {
+    #[inline(always)]
+    fn to_f64(self) -> f64 {
+        self
+    }
+    #[inline(always)]
+    fn from_f64(v: f64) -> Self {
+        v
+    }
+}
+
+impl Scalar for f32 {
+    #[inline(always)]
+    fn to_f64(self) -> f64 {
+        self as f64
+    }
+    #[inline(always)]
+    fn from_f64(v: f64) -> Self {
+        v as f32
+    }
+}
+
 /// Plain ascending-order dot product — the canonical association every
 /// other kernel here reproduces.  Also the single source of the squared
 /// row norms cached in `ScaledX` (the Gram-trick diagonal is exactly zero
 /// only because the norm and the cross-product use the same sum order).
+///
+/// Generic over the element [`Scalar`]: each product is taken in the
+/// element type and accumulated in f64.  `S = f64` (what every existing
+/// call site infers) is bitwise-identical to the historical f64-only
+/// implementation.
 #[inline(always)]
-pub fn dot(a: &[f64], b: &[f64]) -> f64 {
+pub fn dot<S: Scalar>(a: &[S], b: &[S]) -> f64 {
     debug_assert_eq!(a.len(), b.len());
     let mut s = 0.0;
     for r in 0..a.len() {
-        s += a[r] * b[r];
+        s += (a[r] * b[r]).to_f64();
     }
     s
 }
@@ -27,23 +69,23 @@ pub fn dot(a: &[f64], b: &[f64]) -> f64 {
 /// Four dot products of `a` against `b0..b3` in one pass — the 4-wide
 /// unrolled core of the panel cross-product `Xi · Xjᵀ`.  Each accumulator
 /// sums in ascending index order, so every output is bitwise-identical to
-/// [`dot`] on the same pair.
+/// [`dot`] on the same pair (at either precision).
 #[inline(always)]
-pub fn dot4(
-    a: &[f64],
-    b0: &[f64],
-    b1: &[f64],
-    b2: &[f64],
-    b3: &[f64],
+pub fn dot4<S: Scalar>(
+    a: &[S],
+    b0: &[S],
+    b1: &[S],
+    b2: &[S],
+    b3: &[S],
 ) -> (f64, f64, f64, f64) {
     let d = a.len();
     let (mut s0, mut s1, mut s2, mut s3) = (0.0, 0.0, 0.0, 0.0);
     for r in 0..d {
         let ar = a[r];
-        s0 += ar * b0[r];
-        s1 += ar * b1[r];
-        s2 += ar * b2[r];
-        s3 += ar * b3[r];
+        s0 += (ar * b0[r]).to_f64();
+        s1 += (ar * b1[r]).to_f64();
+        s2 += (ar * b2[r]).to_f64();
+        s3 += (ar * b3[r]).to_f64();
     }
     (s0, s1, s2, s3)
 }
@@ -51,7 +93,9 @@ pub fn dot4(
 /// `out[j] += a * b[j]` — the k-major axpy at the heart of `Mat::matmul`'s
 /// row update and the panel tile-apply.  4-wide unrolled; the per-element
 /// accumulators are independent, so the bits match the plain loop for
-/// every length.
+/// every length.  Deliberately f64-only: the apply side of every operator
+/// product accumulates panel *values* (already f64 at either compute
+/// precision) into f64 outputs, so reduced precision never touches it.
 #[inline(always)]
 pub fn axpy(out: &mut [f64], a: f64, b: &[f64]) {
     debug_assert_eq!(out.len(), b.len());
@@ -82,6 +126,36 @@ mod tests {
         for d in [1, 3, 4, 7, 17] {
             let a: Vec<f64> = rng.gaussian_vec(d);
             let bs: Vec<Vec<f64>> = (0..4).map(|_| rng.gaussian_vec(d)).collect();
+            let (s0, s1, s2, s3) = dot4(&a, &bs[0], &bs[1], &bs[2], &bs[3]);
+            for (got, b) in [s0, s1, s2, s3].iter().zip(&bs) {
+                assert_eq!(got.to_bits(), dot(&a, b).to_bits(), "d={d}");
+            }
+        }
+    }
+
+    #[test]
+    fn f32_dot_accumulates_products_in_f64() {
+        let mut rng = Rng::new(7);
+        for d in [1, 3, 4, 9, 33] {
+            let a32: Vec<f32> = rng.gaussian_vec(d).iter().map(|&v| v as f32).collect();
+            let b32: Vec<f32> = rng.gaussian_vec(d).iter().map(|&v| v as f32).collect();
+            // reference: f32 products, f64 running sum, ascending order
+            let mut want = 0.0f64;
+            for r in 0..d {
+                want += (a32[r] * b32[r]) as f64;
+            }
+            assert_eq!(dot(&a32, &b32).to_bits(), want.to_bits(), "d={d}");
+        }
+    }
+
+    #[test]
+    fn f32_dot4_is_bitwise_equal_to_f32_dot() {
+        let mut rng = Rng::new(8);
+        for d in [1, 2, 4, 5, 16] {
+            let a: Vec<f32> = rng.gaussian_vec(d).iter().map(|&v| v as f32).collect();
+            let bs: Vec<Vec<f32>> = (0..4)
+                .map(|_| rng.gaussian_vec(d).iter().map(|&v| v as f32).collect())
+                .collect();
             let (s0, s1, s2, s3) = dot4(&a, &bs[0], &bs[1], &bs[2], &bs[3]);
             for (got, b) in [s0, s1, s2, s3].iter().zip(&bs) {
                 assert_eq!(got.to_bits(), dot(&a, b).to_bits(), "d={d}");

@@ -6,7 +6,7 @@ use anyhow::Result;
 use igp::config::RunConfig;
 use igp::coordinator::{Trainer, TrainerOptions};
 use igp::estimator::EstimatorKind;
-use igp::operators::{BackendKind, KernelOperator, TiledOptions, XlaOperator};
+use igp::operators::{BackendKind, KernelOperator, Precision, TiledOptions, XlaOperator};
 use igp::serve::{PredictionService, ServeOptions};
 use igp::solvers::SolverKind;
 use igp::util::logging;
@@ -58,7 +58,7 @@ USAGE:
     igp train [--config FILE] [--dataset D] [--solver cg|ap|sgd]
               [--estimator standard|pathwise] [--warm-start]
               [--backend dense|tiled|xla] [--tile N] [--shards S] [--threads N]
-              [--probes S] [--rff M] [--online K]
+              [--probes S] [--rff M] [--online K] [--precision f32|f64]
               [--steps N] [--lr F] [--max-epochs N] [--seed N]
               [--artifacts DIR] [--out results.csv]
     igp serve [train flags] [--batch N] [--score in.csv [out.csv]]
@@ -83,6 +83,13 @@ ONLINE MODE:
     --online K replays the dataset in K arrival chunks and trains --steps
     outer steps after each arrival, carrying the warm-start store, probe
     randomness and optimiser state across arrivals (dense/tiled only).
+
+PRECISION:
+    --precision f32 runs the O(n^2) operator products in f32 with f64
+    accumulation (CPU backends only): CG adds an iterative-refinement
+    outer loop, and every solver verifies its answer with an f64 residual
+    recomputation, falling back to the reference f64 path on drift.
+    --precision f64 (default) is the bitwise-parity reference.
 "#
     );
 }
@@ -111,6 +118,7 @@ fn trainer_options(rc: &RunConfig, block: Option<usize>) -> Result<TrainerOption
         seed: rc.seed,
         predict_every: Some(10),
         threads: rc.threads,
+        precision: Precision::parse(&rc.precision)?,
         ..Default::default()
     })
 }
@@ -129,8 +137,12 @@ fn cmd_train_online(rc: &RunConfig, out_path: Option<&str>) -> Result<()> {
     let backend = BackendKind::parse(&rc.backend)?;
     let (base, chunks) = ds.replay_chunks(rc.online_chunks);
     let topts = TiledOptions { tile: rc.tile, threads: rc.threads };
-    let op =
+    let mut op =
         igp::operators::make_cpu_backend(backend, &base, rc.probes, rc.rff, topts, rc.shards)?;
+    let prec = Precision::parse(&rc.precision)?;
+    if prec.is_f32() {
+        op.set_precision(Precision::F32)?;
+    }
     igp::info!(
         "backend: {} (online: {} arrivals of ~{} rows)",
         backend.name(),
@@ -195,7 +207,7 @@ fn cmd_train_online(rc: &RunConfig, out_path: Option<&str>) -> Result<()> {
 const TRAIN_VALUE_KEYS: &[&str] = &[
     "config", "dataset", "solver", "estimator", "steps", "lr", "max-epochs",
     "seed", "artifacts", "out", "tolerance", "backend", "tile", "shards",
-    "threads", "probes", "rff", "online",
+    "threads", "probes", "rff", "online", "precision",
 ];
 
 /// Resolve a [`RunConfig`] from `--config` plus flag overrides — single
@@ -257,6 +269,9 @@ fn run_config_from_args(p: &cli::Parser) -> Result<RunConfig> {
     if let Some(v) = p.get_parsed::<usize>("online")? {
         rc.online_chunks = v;
     }
+    if let Some(v) = p.get("precision") {
+        rc.precision = v.to_string();
+    }
     rc.validate()?;
     Ok(rc)
 }
@@ -281,10 +296,12 @@ fn cmd_train(args: &[String]) -> Result<()> {
         }
         kind => {
             let topts = TiledOptions { tile: rc.tile, threads: rc.threads };
-            (
-                igp::operators::make_cpu_backend(kind, &ds, rc.probes, rc.rff, topts, rc.shards)?,
-                None,
-            )
+            let mut op =
+                igp::operators::make_cpu_backend(kind, &ds, rc.probes, rc.rff, topts, rc.shards)?;
+            if Precision::parse(&rc.precision)?.is_f32() {
+                op.set_precision(Precision::F32)?;
+            }
+            (op, None)
         }
     };
     igp::info!("backend: {}", backend.name());
@@ -372,7 +389,11 @@ fn cmd_serve(args: &[String]) -> Result<()> {
     let ds = igp::data::generate(&igp::data::spec(&rc.dataset)?);
     let backend = BackendKind::parse(&rc.backend)?;
     let topts = TiledOptions { tile: rc.tile, threads: rc.threads };
-    let op = igp::operators::make_cpu_backend(backend, &ds, rc.probes, rc.rff, topts, rc.shards)?;
+    let mut op =
+        igp::operators::make_cpu_backend(backend, &ds, rc.probes, rc.rff, topts, rc.shards)?;
+    if Precision::parse(&rc.precision)?.is_f32() {
+        op.set_precision(Precision::F32)?;
+    }
     igp::info!("backend: {} (serving batch = {batch})", backend.name());
     let opts = trainer_options(&rc, None)?;
     let mut trainer = Trainer::new(opts, op, &ds);

@@ -45,6 +45,7 @@ use crate::kernels::panel::{self, ScaledX};
 use crate::kernels::{self, Hyperparams, KernelFamily};
 use crate::linalg::Mat;
 
+pub use crate::kernels::panel::Precision;
 pub use crate::runtime::xla_op::XlaOperator;
 pub use sharded::ShardedOperator;
 pub use tiled::{TiledOperator, TiledOptions};
@@ -128,6 +129,28 @@ pub trait KernelOperator {
     /// Update hyperparameters (invalidates any cached factorisations).
     fn set_hp(&mut self, hp: &Hyperparams);
 
+    /// Compute precision this backend has been switched to.  `F64` (the
+    /// default, and the only mode most backends support) is the bitwise
+    /// reference; `F32` means the backend holds f32 mirrors and the
+    /// `*_prec` product variants below may run reduced-precision panels.
+    fn precision(&self) -> Precision {
+        Precision::F64
+    }
+
+    /// Switch the backend's compute precision.  `F32` builds the f32
+    /// mirrors of the panel caches (lazily, O(n·d)); backends without a
+    /// reduced-precision path reject it.  Switching never perturbs the
+    /// f64 products — `hv`/`k_cols`/… stay the bitwise reference at any
+    /// setting; only the `*_prec` variants consult the mode.
+    fn set_precision(&mut self, prec: Precision) -> anyhow::Result<()> {
+        match prec {
+            Precision::F64 => Ok(()),
+            Precision::F32 => {
+                anyhow::bail!("this backend does not support f32 compute")
+            }
+        }
+    }
+
     fn k_width(&self) -> usize {
         self.s() + 1
     }
@@ -148,12 +171,34 @@ pub trait KernelOperator {
         *out = self.hv(v);
     }
 
+    /// [`KernelOperator::hv_into`] at an explicit compute precision.  The
+    /// `F64` arm is *the same code path* as `hv_into` (bitwise-identical);
+    /// the `F32` arm is only meaningful after `set_precision(F32)` and
+    /// runs reduced-precision panel products with f64 accumulation in the
+    /// identical block order.  The default ignores the mode and stays on
+    /// the f64 path, which is correct for backends without f32 support.
+    fn hv_into_prec(&self, v: &Mat, out: &mut Mat, scratch: &HvScratch, _prec: Precision) {
+        self.hv_into(v, out, scratch);
+    }
+
     /// K(X, X[idx]) @ U with U [idx.len(), s+1]  (AP column update; the
     /// sigma^2 part of H[:, idx] is applied by the caller as a scatter).
     fn k_cols(&self, idx: &[usize], u: &Mat) -> Mat;
 
+    /// [`KernelOperator::k_cols`] at an explicit compute precision (same
+    /// contract as [`KernelOperator::hv_into_prec`]).
+    fn k_cols_prec(&self, idx: &[usize], u: &Mat, _prec: Precision) -> Mat {
+        self.k_cols(idx, u)
+    }
+
     /// K(X[idx], X) @ V with V [n, s+1]  (SGD row batch).
     fn k_rows(&self, idx: &[usize], v: &Mat) -> Mat;
+
+    /// [`KernelOperator::k_rows`] at an explicit compute precision (same
+    /// contract as [`KernelOperator::hv_into_prec`]).
+    fn k_rows_prec(&self, idx: &[usize], v: &Mat, _prec: Precision) -> Mat {
+        self.k_rows(idx, v)
+    }
 
     /// All d+2 components of  sum_j w_j a_j^T (dH/dtheta) b_j.
     fn grad_quad(&self, a: &Mat, b: &Mat, w: &[f64]) -> Vec<f64>;
@@ -200,6 +245,22 @@ pub trait KernelOperator {
         anyhow::bail!(
             "this backend has static shapes and cannot evaluate arbitrary query points"
         )
+    }
+
+    /// [`KernelOperator::predict_at`] at an explicit compute precision
+    /// (same contract as [`KernelOperator::hv_into_prec`]; the serving
+    /// layer may trade cross-covariance precision for throughput while
+    /// keeping the f64 path for comparison).
+    fn predict_at_prec(
+        &self,
+        x_query: &Mat,
+        vy: &[f64],
+        zhat: &Mat,
+        omega0: &Mat,
+        wts: &Mat,
+        _prec: Precision,
+    ) -> anyhow::Result<(Vec<f64>, Mat)> {
+        self.predict_at(x_query, vy, zhat, omega0, wts)
     }
 
     /// Pathwise-conditioned predictions at the held-out test inputs:
@@ -420,6 +481,10 @@ pub struct DenseOperator {
     hp: Hyperparams,
     scaled: ScaledX,
     h: Mat,
+    precision: Precision,
+    /// H materialised with f32 panel products (values stored in f64) —
+    /// present iff `precision` is F32.  `h` stays the f64 reference.
+    h32: Option<Mat>,
 }
 
 impl DenseOperator {
@@ -436,6 +501,8 @@ impl DenseOperator {
             hp,
             scaled,
             h,
+            precision: Precision::F64,
+            h32: None,
         }
     }
 
@@ -446,6 +513,55 @@ impl DenseOperator {
 
     fn sf2(&self) -> f64 {
         self.hp.sigf * self.hp.sigf
+    }
+
+    fn rebuild_h32(&mut self) {
+        self.scaled.ensure_f32();
+        let mut h = panel::cross_matrix_prec(
+            &self.scaled,
+            &self.scaled,
+            self.sf2(),
+            self.family,
+            Precision::F32,
+        );
+        h.add_diag(self.hp.noise_var());
+        self.h32 = Some(h);
+    }
+
+    fn predict_at_impl(
+        &self,
+        x_query: &Mat,
+        vy: &[f64],
+        zhat: &Mat,
+        omega0: &Mat,
+        wts: &Mat,
+        prec: Precision,
+    ) -> anyhow::Result<(Vec<f64>, Mat)> {
+        anyhow::ensure!(
+            x_query.cols == self.d(),
+            "predict_at: query has d = {} but the model has d = {}",
+            x_query.cols,
+            self.d()
+        );
+        assert_eq!(vy.len(), self.n());
+        assert_eq!(zhat.rows, self.n());
+        let mut qs = ScaledX::new(x_query, &self.hp.ell);
+        if prec.is_f32() {
+            qs.ensure_f32();
+        }
+        let kx = panel::cross_matrix_prec(&qs, &self.scaled, self.sf2(), self.family, prec);
+        let mean = kx.matvec(vy);
+        let phi_t = rff_features_scaled(&qs, omega0, self.hp.sigf);
+        let mut samples = phi_t.matmul(wts); // [b, s]
+        // + K(Xq, X) (vy - zhat)
+        let mut u = zhat.clone();
+        for j in 0..u.cols {
+            for i in 0..u.rows {
+                u[(i, j)] = vy[i] - u[(i, j)];
+            }
+        }
+        samples.add_assign(&kx.matmul(&u));
+        Ok((mean, samples))
     }
 }
 
@@ -479,6 +595,22 @@ impl KernelOperator for DenseOperator {
         self.hp = hp.clone();
         self.scaled.refresh(&self.x, &hp.ell);
         self.h = panel::h_panel(&self.scaled, hp, self.family);
+        if self.precision.is_f32() {
+            self.rebuild_h32();
+        }
+    }
+
+    fn precision(&self) -> Precision {
+        self.precision
+    }
+
+    fn set_precision(&mut self, prec: Precision) -> anyhow::Result<()> {
+        self.precision = prec;
+        match prec {
+            Precision::F32 => self.rebuild_h32(),
+            Precision::F64 => self.h32 = None,
+        }
+        Ok(())
     }
 
     /// Online data arrival: rank-extend the cached H in place,
@@ -524,6 +656,9 @@ impl KernelOperator for DenseOperator {
         }
         self.h = h;
         self.x.append_rows(x_new);
+        if self.precision.is_f32() {
+            self.rebuild_h32();
+        }
         Ok(())
     }
 
@@ -537,6 +672,18 @@ impl KernelOperator for DenseOperator {
         self.h.matmul_into(v, out);
     }
 
+    fn hv_into_prec(&self, v: &Mat, out: &mut Mat, scratch: &HvScratch, prec: Precision) {
+        if !prec.is_f32() {
+            return self.hv_into(v, out, scratch);
+        }
+        let h32 = self
+            .h32
+            .as_ref()
+            .expect("f32 compute requested but set_precision(F32) was not called");
+        assert_eq!(v.rows, self.n());
+        h32.matmul_into(v, out);
+    }
+
     fn k_cols(&self, idx: &[usize], u: &Mat) -> Mat {
         assert_eq!(u.rows, idx.len());
         let sb = self.scaled.gather(idx);
@@ -544,10 +691,30 @@ impl KernelOperator for DenseOperator {
         km.matmul(u)
     }
 
+    fn k_cols_prec(&self, idx: &[usize], u: &Mat, prec: Precision) -> Mat {
+        if !prec.is_f32() {
+            return self.k_cols(idx, u);
+        }
+        assert_eq!(u.rows, idx.len());
+        let sb = self.scaled.gather(idx);
+        let km = panel::cross_matrix_prec(&self.scaled, &sb, self.sf2(), self.family, prec);
+        km.matmul(u)
+    }
+
     fn k_rows(&self, idx: &[usize], v: &Mat) -> Mat {
         assert_eq!(v.rows, self.n());
         let sa = self.scaled.gather(idx);
         let km = panel::cross_matrix(&sa, &self.scaled, self.sf2(), self.family);
+        km.matmul(v)
+    }
+
+    fn k_rows_prec(&self, idx: &[usize], v: &Mat, prec: Precision) -> Mat {
+        if !prec.is_f32() {
+            return self.k_rows(idx, v);
+        }
+        assert_eq!(v.rows, self.n());
+        let sa = self.scaled.gather(idx);
+        let km = panel::cross_matrix_prec(&sa, &self.scaled, self.sf2(), self.family, prec);
         km.matmul(v)
     }
 
@@ -600,28 +767,19 @@ impl KernelOperator for DenseOperator {
         omega0: &Mat,
         wts: &Mat,
     ) -> anyhow::Result<(Vec<f64>, Mat)> {
-        anyhow::ensure!(
-            x_query.cols == self.d(),
-            "predict_at: query has d = {} but the model has d = {}",
-            x_query.cols,
-            self.d()
-        );
-        assert_eq!(vy.len(), self.n());
-        assert_eq!(zhat.rows, self.n());
-        let qs = ScaledX::new(x_query, &self.hp.ell);
-        let kx = panel::cross_matrix(&qs, &self.scaled, self.sf2(), self.family);
-        let mean = kx.matvec(vy);
-        let phi_t = rff_features_scaled(&qs, omega0, self.hp.sigf);
-        let mut samples = phi_t.matmul(wts); // [b, s]
-        // + K(Xq, X) (vy - zhat)
-        let mut u = zhat.clone();
-        for j in 0..u.cols {
-            for i in 0..u.rows {
-                u[(i, j)] = vy[i] - u[(i, j)];
-            }
-        }
-        samples.add_assign(&kx.matmul(&u));
-        Ok((mean, samples))
+        self.predict_at_impl(x_query, vy, zhat, omega0, wts, Precision::F64)
+    }
+
+    fn predict_at_prec(
+        &self,
+        x_query: &Mat,
+        vy: &[f64],
+        zhat: &Mat,
+        omega0: &Mat,
+        wts: &Mat,
+        prec: Precision,
+    ) -> anyhow::Result<(Vec<f64>, Mat)> {
+        self.predict_at_impl(x_query, vy, zhat, omega0, wts, prec)
     }
 
     fn predict_batched(

@@ -44,7 +44,7 @@ use crate::linalg::{micro, Mat};
 use crate::util::parallel::{num_threads, parallel_reduce, parallel_row_blocks, shard_ranges};
 use crate::util::stats;
 
-use super::{dl_weight, rff_fill_row, HvScratch, KernelOperator, TiledOptions};
+use super::{dl_weight, rff_fill_row, HvScratch, KernelOperator, Precision, TiledOptions};
 
 /// Matrix-free kernel operator over S contiguous row shards, each with its
 /// own panel cache (O(n·d) total memory, like the tiled backend, but no
@@ -64,6 +64,7 @@ pub struct ShardedOperator {
     starts: Vec<usize>,
     tile: usize,
     threads: usize,
+    precision: Precision,
 }
 
 impl ShardedOperator {
@@ -93,6 +94,7 @@ impl ShardedOperator {
             starts,
             tile: opts.tile.max(1),
             threads: num_threads(if opts.threads == 0 { None } else { Some(opts.threads) }),
+            precision: Precision::F64,
         }
     }
 
@@ -150,6 +152,7 @@ impl ShardedOperator {
     /// *row* range may span several shards: split it at shard boundaries
     /// and fill each segment from the owning cache.  Entries are pure per
     /// global (i, j), so this is bitwise equal to a monolithic fill.
+    #[allow(clippy::too_many_arguments)]
     fn fill_panel_rows(
         &self,
         i0: usize,
@@ -159,6 +162,7 @@ impl ShardedOperator {
         j0: usize,
         j1: usize,
         out: &mut [f64],
+        prec: Precision,
     ) {
         let w = j1 - j0;
         let sf2 = self.sf2();
@@ -166,7 +170,7 @@ impl ShardedOperator {
         while i < i1 {
             let (rk, li) = self.owner(i);
             let seg_end = i1.min(self.shard_end(rk));
-            panel::fill_panel(
+            panel::fill_panel_prec(
                 &self.shards[rk],
                 li,
                 li + (seg_end - i),
@@ -176,6 +180,7 @@ impl ShardedOperator {
                 sf2,
                 self.family,
                 &mut out[(i - i0) * w..(seg_end - i0) * w],
+                prec,
             );
             i = seg_end;
         }
@@ -183,11 +188,20 @@ impl ShardedOperator {
 
     /// Fill one full-n kernel row K(a_i, X), segment-per-shard in
     /// ascending shard order — bitwise equal to the monolithic fill.
-    fn fill_krow(&self, a: &ScaledX, i: usize, krow: &mut [f64]) {
+    fn fill_krow(&self, a: &ScaledX, i: usize, krow: &mut [f64], prec: Precision) {
         let sf2 = self.sf2();
         for (sk, sx) in self.shards.iter().enumerate() {
             let sbase = self.starts[sk];
-            panel::fill_row(a, i, sx, 0, sf2, self.family, &mut krow[sbase..sbase + sx.n()]);
+            panel::fill_row_prec(
+                a,
+                i,
+                sx,
+                0,
+                sf2,
+                self.family,
+                &mut krow[sbase..sbase + sx.n()],
+                prec,
+            );
         }
     }
 
@@ -218,7 +232,10 @@ impl ShardedOperator {
                 let j1 = (j0 + tile).min(send);
                 let w = j1 - j0;
                 let panel = &mut pbuf[..rows * w];
-                self.fill_panel_rows(r0, r0 + rows, sx, sbase, j0, j1, panel);
+                // the communication contract stays f64-only: exchanged
+                // partials are the trusted reference a multi-node fold
+                // would verify reduced-precision local compute against
+                self.fill_panel_rows(r0, r0 + rows, sx, sbase, j0, j1, panel, Precision::F64);
                 // the diagonal rows inside this shard's column range carry
                 // the sigma² I contribution of the partial
                 let (d0, d1) = (r0.max(j0), (r0 + rows).min(j1));
@@ -229,6 +246,179 @@ impl ShardedOperator {
                 j0 = j1;
             }
         });
+    }
+
+    /// Shared body of `hv_into`/`hv_into_prec`: identical shard sweep,
+    /// tiling and apply order at both precisions — only the panel fill
+    /// dispatches on `prec`.
+    fn hv_into_impl(&self, v: &Mat, out: &mut Mat, scratch: &HvScratch, prec: Precision) {
+        let n = self.n();
+        assert_eq!(v.rows, n);
+        let k = v.cols;
+        assert_eq!(
+            (out.rows, out.cols),
+            (n, k),
+            "hv_into: output is {}x{} but the product is {}x{}",
+            out.rows,
+            out.cols,
+            n,
+            k
+        );
+        let noise_var = self.hp.noise_var();
+        let tile = self.tile;
+        parallel_row_blocks(&mut out.data, k, tile, self.threads, |r0, rows, block| {
+            block.fill(0.0);
+            let mut pbuf = scratch.take(rows * tile);
+            for (sk, sx) in self.shards.iter().enumerate() {
+                let sbase = self.starts[sk];
+                let send = sbase + sx.n();
+                let mut j0 = sbase;
+                while j0 < send {
+                    let j1 = (j0 + tile).min(send);
+                    let w = j1 - j0;
+                    let panel = &mut pbuf[..rows * w];
+                    self.fill_panel_rows(r0, r0 + rows, sx, sbase, j0, j1, panel, prec);
+                    // sigma² I where the panel crosses the global diagonal
+                    let (d0, d1) = (r0.max(j0), (r0 + rows).min(j1));
+                    for i in d0..d1 {
+                        panel[(i - r0) * w + (i - j0)] += noise_var;
+                    }
+                    panel::apply_panel(panel, rows, w, j0, v, block);
+                    j0 = j1;
+                }
+            }
+            scratch.put(pbuf);
+        });
+    }
+
+    fn k_cols_impl(&self, idx: &[usize], u: &Mat, prec: Precision) -> Mat {
+        assert_eq!(u.rows, idx.len());
+        let n = self.n();
+        let nb = idx.len();
+        let k = u.cols;
+        let sb = ScaledX::gather_parts(&self.shards, &self.starts, idx);
+        let sf2 = self.sf2();
+        let mut out = Mat::zeros(n, k);
+        parallel_row_blocks(&mut out.data, k, self.tile, self.threads, |r0, rows, block| {
+            let mut krow = vec![0.0; nb];
+            for r in 0..rows {
+                let i = r0 + r;
+                let (rk, li) = self.owner(i);
+                panel::fill_row_prec(
+                    &self.shards[rk],
+                    li,
+                    &sb,
+                    0,
+                    sf2,
+                    self.family,
+                    &mut krow,
+                    prec,
+                );
+                panel::apply_panel(&krow, 1, nb, 0, u, &mut block[r * k..(r + 1) * k]);
+            }
+        });
+        out
+    }
+
+    fn k_rows_impl(&self, idx: &[usize], v: &Mat, prec: Precision) -> Mat {
+        let n = self.n();
+        assert_eq!(v.rows, n);
+        let k = v.cols;
+        let sa = ScaledX::gather_parts(&self.shards, &self.starts, idx);
+        let mut out = Mat::zeros(idx.len(), k);
+        let rows_total = idx.len().max(1);
+        let block = (rows_total + self.threads - 1) / self.threads;
+        parallel_row_blocks(&mut out.data, k, block, self.threads, |r0, rows, blk| {
+            let mut krow = vec![0.0; n];
+            for r in 0..rows {
+                self.fill_krow(&sa, r0 + r, &mut krow, prec);
+                panel::apply_panel(&krow, 1, n, 0, v, &mut blk[r * k..(r + 1) * k]);
+            }
+        });
+        out
+    }
+
+    fn predict_at_impl(
+        &self,
+        x_query: &Mat,
+        vy: &[f64],
+        zhat: &Mat,
+        omega0: &Mat,
+        wts: &Mat,
+        prec: Precision,
+    ) -> anyhow::Result<(Vec<f64>, Mat)> {
+        let n = self.n();
+        let d = self.d();
+        anyhow::ensure!(
+            x_query.cols == d,
+            "predict_at: query has d = {} but the model has d = {}",
+            x_query.cols,
+            d
+        );
+        let tq = x_query.rows;
+        assert_eq!(vy.len(), n);
+        assert_eq!(zhat.rows, n);
+        assert_eq!(omega0.rows, d);
+        let m = omega0.cols;
+        assert_eq!(wts.rows, 2 * m);
+        let s = wts.cols;
+        assert_eq!(zhat.cols, s);
+        let amp = self.hp.sigf * (1.0 / m as f64).sqrt();
+        let mut qs = ScaledX::new(x_query, &self.hp.ell);
+        if prec.is_f32() {
+            qs.ensure_f32();
+        }
+        let width = 1 + s;
+        let mut packed = Mat::zeros(tq, width);
+        parallel_row_blocks(
+            &mut packed.data,
+            width,
+            self.tile,
+            self.threads,
+            |r0, rows, block| {
+                let mut krow = vec![0.0; n];
+                let mut phi = vec![0.0; 2 * m];
+                let mut corr = vec![0.0; s];
+                for r in 0..rows {
+                    let i = r0 + r;
+                    self.fill_krow(&qs, i, &mut krow, prec);
+                    let orow = &mut block[r * width..(r + 1) * width];
+                    orow[0] = stats::dot(&krow, vy);
+                    rff_fill_row(qs.row(i), omega0, amp, &mut phi);
+                    let srow = &mut orow[1..];
+                    for (c, &pc) in phi.iter().enumerate() {
+                        if pc == 0.0 {
+                            continue;
+                        }
+                        micro::axpy(srow, pc, wts.row(c));
+                    }
+                    for v in corr.iter_mut() {
+                        *v = 0.0;
+                    }
+                    for j in 0..n {
+                        let kj = krow[j];
+                        if kj == 0.0 {
+                            continue;
+                        }
+                        let zr = zhat.row(j);
+                        for q in 0..s {
+                            corr[q] += kj * (vy[j] - zr[q]);
+                        }
+                    }
+                    for q in 0..s {
+                        srow[q] += corr[q];
+                    }
+                }
+            },
+        );
+        let mut mean = Vec::with_capacity(tq);
+        let mut samples = Mat::zeros(tq, s);
+        for i in 0..tq {
+            let prow = packed.row(i);
+            mean.push(prow[0]);
+            samples.row_mut(i).copy_from_slice(&prow[1..]);
+        }
+        Ok((mean, samples))
     }
 }
 
@@ -284,7 +474,24 @@ impl KernelOperator for ShardedOperator {
             let rows: Vec<usize> = (r0..r0 + sn).collect();
             let xs = self.x.gather_rows(&rows);
             self.shards[sk] = ScaledX::new(&xs, &hp.ell);
+            if self.precision.is_f32() {
+                self.shards[sk].ensure_f32();
+            }
         }
+    }
+
+    fn precision(&self) -> Precision {
+        self.precision
+    }
+
+    fn set_precision(&mut self, prec: Precision) -> anyhow::Result<()> {
+        self.precision = prec;
+        if prec.is_f32() {
+            for sx in &mut self.shards {
+                sx.ensure_f32();
+            }
+        }
+        Ok(())
     }
 
     /// Online data arrival: the appended rows go to the *last* shard, so
@@ -323,87 +530,33 @@ impl KernelOperator for ShardedOperator {
     /// time, the extra window boundaries at shard edges never change the
     /// association — bitwise equal to the monolithic tiled sweep.
     fn hv_into(&self, v: &Mat, out: &mut Mat, scratch: &HvScratch) {
-        let n = self.n();
-        assert_eq!(v.rows, n);
-        let k = v.cols;
-        assert_eq!(
-            (out.rows, out.cols),
-            (n, k),
-            "hv_into: output is {}x{} but the product is {}x{}",
-            out.rows,
-            out.cols,
-            n,
-            k
-        );
-        let noise_var = self.hp.noise_var();
-        let tile = self.tile;
-        parallel_row_blocks(&mut out.data, k, tile, self.threads, |r0, rows, block| {
-            block.fill(0.0);
-            let mut pbuf = scratch.take(rows * tile);
-            for (sk, sx) in self.shards.iter().enumerate() {
-                let sbase = self.starts[sk];
-                let send = sbase + sx.n();
-                let mut j0 = sbase;
-                while j0 < send {
-                    let j1 = (j0 + tile).min(send);
-                    let w = j1 - j0;
-                    let panel = &mut pbuf[..rows * w];
-                    self.fill_panel_rows(r0, r0 + rows, sx, sbase, j0, j1, panel);
-                    // sigma² I where the panel crosses the global diagonal
-                    let (d0, d1) = (r0.max(j0), (r0 + rows).min(j1));
-                    for i in d0..d1 {
-                        panel[(i - r0) * w + (i - j0)] += noise_var;
-                    }
-                    panel::apply_panel(panel, rows, w, j0, v, block);
-                    j0 = j1;
-                }
-            }
-            scratch.put(pbuf);
-        });
+        self.hv_into_impl(v, out, scratch, Precision::F64);
+    }
+
+    fn hv_into_prec(&self, v: &Mat, out: &mut Mat, scratch: &HvScratch, prec: Precision) {
+        self.hv_into_impl(v, out, scratch, prec);
     }
 
     /// K(X, X[idx]) @ U: the batch rows are gathered *across* shards
     /// ([`ScaledX::gather_parts`], bit-equal to a monolithic gather), each
     /// output row is one panel row filled from its owning shard.
     fn k_cols(&self, idx: &[usize], u: &Mat) -> Mat {
-        assert_eq!(u.rows, idx.len());
-        let n = self.n();
-        let nb = idx.len();
-        let k = u.cols;
-        let sb = ScaledX::gather_parts(&self.shards, &self.starts, idx);
-        let sf2 = self.sf2();
-        let mut out = Mat::zeros(n, k);
-        parallel_row_blocks(&mut out.data, k, self.tile, self.threads, |r0, rows, block| {
-            let mut krow = vec![0.0; nb];
-            for r in 0..rows {
-                let i = r0 + r;
-                let (rk, li) = self.owner(i);
-                panel::fill_row(&self.shards[rk], li, &sb, 0, sf2, self.family, &mut krow);
-                panel::apply_panel(&krow, 1, nb, 0, u, &mut block[r * k..(r + 1) * k]);
-            }
-        });
-        out
+        self.k_cols_impl(idx, u, Precision::F64)
+    }
+
+    fn k_cols_prec(&self, idx: &[usize], u: &Mat, prec: Precision) -> Mat {
+        self.k_cols_impl(idx, u, prec)
     }
 
     /// K(X[idx], X) @ V: one full-n kernel row per batch row, filled
     /// segment-per-shard in ascending shard order, applied in ascending-j
     /// `matmul` order — bitwise equal to tiled/dense.
     fn k_rows(&self, idx: &[usize], v: &Mat) -> Mat {
-        let n = self.n();
-        assert_eq!(v.rows, n);
-        let k = v.cols;
-        let sa = ScaledX::gather_parts(&self.shards, &self.starts, idx);
-        let mut out = Mat::zeros(idx.len(), k);
-        let rows_total = idx.len().max(1);
-        let block = (rows_total + self.threads - 1) / self.threads;
-        parallel_row_blocks(&mut out.data, k, block, self.threads, |r0, rows, blk| {
-            let mut krow = vec![0.0; n];
-            for r in 0..rows {
-                self.fill_krow(&sa, r0 + r, &mut krow);
-                panel::apply_panel(&krow, 1, n, 0, v, &mut blk[r * k..(r + 1) * k]);
-            }
-        });
-        out
+        self.k_rows_impl(idx, v, Precision::F64)
+    }
+
+    fn k_rows_prec(&self, idx: &[usize], v: &Mat, prec: Precision) -> Mat {
+        self.k_rows_impl(idx, v, prec)
     }
 
     /// Identical to the tiled backend's scalar-path gradient: the
@@ -507,75 +660,19 @@ impl KernelOperator for ShardedOperator {
         omega0: &Mat,
         wts: &Mat,
     ) -> anyhow::Result<(Vec<f64>, Mat)> {
-        let n = self.n();
-        let d = self.d();
-        anyhow::ensure!(
-            x_query.cols == d,
-            "predict_at: query has d = {} but the model has d = {}",
-            x_query.cols,
-            d
-        );
-        let tq = x_query.rows;
-        assert_eq!(vy.len(), n);
-        assert_eq!(zhat.rows, n);
-        assert_eq!(omega0.rows, d);
-        let m = omega0.cols;
-        assert_eq!(wts.rows, 2 * m);
-        let s = wts.cols;
-        assert_eq!(zhat.cols, s);
-        let amp = self.hp.sigf * (1.0 / m as f64).sqrt();
-        let qs = ScaledX::new(x_query, &self.hp.ell);
-        let width = 1 + s;
-        let mut packed = Mat::zeros(tq, width);
-        parallel_row_blocks(
-            &mut packed.data,
-            width,
-            self.tile,
-            self.threads,
-            |r0, rows, block| {
-                let mut krow = vec![0.0; n];
-                let mut phi = vec![0.0; 2 * m];
-                let mut corr = vec![0.0; s];
-                for r in 0..rows {
-                    let i = r0 + r;
-                    self.fill_krow(&qs, i, &mut krow);
-                    let orow = &mut block[r * width..(r + 1) * width];
-                    orow[0] = stats::dot(&krow, vy);
-                    rff_fill_row(qs.row(i), omega0, amp, &mut phi);
-                    let srow = &mut orow[1..];
-                    for (c, &pc) in phi.iter().enumerate() {
-                        if pc == 0.0 {
-                            continue;
-                        }
-                        micro::axpy(srow, pc, wts.row(c));
-                    }
-                    for v in corr.iter_mut() {
-                        *v = 0.0;
-                    }
-                    for j in 0..n {
-                        let kj = krow[j];
-                        if kj == 0.0 {
-                            continue;
-                        }
-                        let zr = zhat.row(j);
-                        for q in 0..s {
-                            corr[q] += kj * (vy[j] - zr[q]);
-                        }
-                    }
-                    for q in 0..s {
-                        srow[q] += corr[q];
-                    }
-                }
-            },
-        );
-        let mut mean = Vec::with_capacity(tq);
-        let mut samples = Mat::zeros(tq, s);
-        for i in 0..tq {
-            let prow = packed.row(i);
-            mean.push(prow[0]);
-            samples.row_mut(i).copy_from_slice(&prow[1..]);
-        }
-        Ok((mean, samples))
+        self.predict_at_impl(x_query, vy, zhat, omega0, wts, Precision::F64)
+    }
+
+    fn predict_at_prec(
+        &self,
+        x_query: &Mat,
+        vy: &[f64],
+        zhat: &Mat,
+        omega0: &Mat,
+        wts: &Mat,
+        prec: Precision,
+    ) -> anyhow::Result<(Vec<f64>, Mat)> {
+        self.predict_at_impl(x_query, vy, zhat, omega0, wts, prec)
     }
 
     /// `predict_at` already parallelises over query rows internally;

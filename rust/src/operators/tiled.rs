@@ -37,7 +37,7 @@ use crate::linalg::{micro, Mat};
 use crate::util::parallel::{num_threads, parallel_reduce, parallel_row_blocks};
 use crate::util::stats;
 
-use super::{dl_weight, rff_fill_row, HvScratch, KernelOperator};
+use super::{dl_weight, rff_fill_row, HvScratch, KernelOperator, Precision};
 
 /// Tuning knobs for the tiled backend.
 #[derive(Clone, Debug)]
@@ -66,6 +66,7 @@ pub struct TiledOperator {
     scaled: ScaledX,
     tile: usize,
     threads: usize,
+    precision: Precision,
 }
 
 impl TiledOperator {
@@ -87,6 +88,7 @@ impl TiledOperator {
             scaled,
             tile: opts.tile.max(1),
             threads: num_threads(if opts.threads == 0 { None } else { Some(opts.threads) }),
+            precision: Precision::F64,
         }
     }
 
@@ -112,6 +114,183 @@ impl TiledOperator {
 
     fn sf2(&self) -> f64 {
         self.hp.sigf * self.hp.sigf
+    }
+
+    /// Shared body of `hv_into`/`hv_into_prec`: identical tiling, worker
+    /// schedule and apply order at both precisions — only the panel fill
+    /// dispatches on `prec`, so the F64 instantiation is the pre-existing
+    /// bitwise-reference path.
+    fn hv_into_impl(&self, v: &Mat, out: &mut Mat, scratch: &HvScratch, prec: Precision) {
+        let n = self.n();
+        assert_eq!(v.rows, n);
+        let k = v.cols;
+        assert_eq!(
+            (out.rows, out.cols),
+            (n, k),
+            "hv_into: output is {}x{} but the product is {}x{}",
+            out.rows,
+            out.cols,
+            n,
+            k
+        );
+        let noise_var = self.hp.noise_var();
+        let sf2 = self.sf2();
+        let tile = self.tile;
+        parallel_row_blocks(&mut out.data, k, tile, self.threads, |r0, rows, block| {
+            block.fill(0.0);
+            let mut pbuf = scratch.take(rows * tile);
+            let mut j0 = 0;
+            while j0 < n {
+                let j1 = (j0 + tile).min(n);
+                let w = j1 - j0;
+                let panel = &mut pbuf[..rows * w];
+                panel::fill_panel_prec(
+                    &self.scaled,
+                    r0,
+                    r0 + rows,
+                    &self.scaled,
+                    j0,
+                    j1,
+                    sf2,
+                    self.family,
+                    panel,
+                    prec,
+                );
+                // sigma^2 I where the panel crosses the global diagonal —
+                // the same `k_ii + noise_var` the dense add_diag produces
+                let (d0, d1) = (r0.max(j0), (r0 + rows).min(j1));
+                for i in d0..d1 {
+                    panel[(i - r0) * w + (i - j0)] += noise_var;
+                }
+                panel::apply_panel(panel, rows, w, j0, v, block);
+                j0 = j1;
+            }
+            scratch.put(pbuf);
+        });
+    }
+
+    fn k_cols_impl(&self, idx: &[usize], u: &Mat, prec: Precision) -> Mat {
+        assert_eq!(u.rows, idx.len());
+        let n = self.n();
+        let nb = idx.len();
+        let k = u.cols;
+        let sb = self.scaled.gather(idx);
+        let sf2 = self.sf2();
+        let mut out = Mat::zeros(n, k);
+        parallel_row_blocks(&mut out.data, k, self.tile, self.threads, |r0, rows, block| {
+            let mut krow = vec![0.0; nb];
+            for r in 0..rows {
+                let i = r0 + r;
+                panel::fill_row_prec(&self.scaled, i, &sb, 0, sf2, self.family, &mut krow, prec);
+                panel::apply_panel(&krow, 1, nb, 0, u, &mut block[r * k..(r + 1) * k]);
+            }
+        });
+        out
+    }
+
+    fn k_rows_impl(&self, idx: &[usize], v: &Mat, prec: Precision) -> Mat {
+        let n = self.n();
+        assert_eq!(v.rows, n);
+        let k = v.cols;
+        let sa = self.scaled.gather(idx);
+        let sf2 = self.sf2();
+        let mut out = Mat::zeros(idx.len(), k);
+        let rows_total = idx.len().max(1);
+        let block = (rows_total + self.threads - 1) / self.threads;
+        parallel_row_blocks(&mut out.data, k, block, self.threads, |r0, rows, blk| {
+            let mut krow = vec![0.0; n];
+            for r in 0..rows {
+                panel::fill_row_prec(&sa, r0 + r, &self.scaled, 0, sf2, self.family, &mut krow, prec);
+                panel::apply_panel(&krow, 1, n, 0, v, &mut blk[r * k..(r + 1) * k]);
+            }
+        });
+        out
+    }
+
+    fn predict_at_impl(
+        &self,
+        x_query: &Mat,
+        vy: &[f64],
+        zhat: &Mat,
+        omega0: &Mat,
+        wts: &Mat,
+        prec: Precision,
+    ) -> anyhow::Result<(Vec<f64>, Mat)> {
+        let n = self.n();
+        let d = self.d();
+        anyhow::ensure!(
+            x_query.cols == d,
+            "predict_at: query has d = {} but the model has d = {}",
+            x_query.cols,
+            d
+        );
+        let tq = x_query.rows;
+        assert_eq!(vy.len(), n);
+        assert_eq!(zhat.rows, n);
+        assert_eq!(omega0.rows, d);
+        let m = omega0.cols;
+        assert_eq!(wts.rows, 2 * m);
+        let s = wts.cols;
+        assert_eq!(zhat.cols, s);
+        let amp = self.hp.sigf * (1.0 / m as f64).sqrt();
+        let mut qs = ScaledX::new(x_query, &self.hp.ell);
+        if prec.is_f32() {
+            qs.ensure_f32();
+        }
+        let sf2 = self.sf2();
+        // packed output: column 0 = mean, columns 1..=s = samples
+        let width = 1 + s;
+        let mut packed = Mat::zeros(tq, width);
+        parallel_row_blocks(
+            &mut packed.data,
+            width,
+            self.tile,
+            self.threads,
+            |r0, rows, block| {
+                let mut krow = vec![0.0; n];
+                let mut phi = vec![0.0; 2 * m];
+                let mut corr = vec![0.0; s];
+                for r in 0..rows {
+                    let i = r0 + r;
+                    panel::fill_row_prec(&qs, i, &self.scaled, 0, sf2, self.family, &mut krow, prec);
+                    let orow = &mut block[r * width..(r + 1) * width];
+                    orow[0] = stats::dot(&krow, vy);
+                    rff_fill_row(qs.row(i), omega0, amp, &mut phi);
+                    let srow = &mut orow[1..];
+                    for (c, &pc) in phi.iter().enumerate() {
+                        if pc == 0.0 {
+                            continue;
+                        }
+                        micro::axpy(srow, pc, wts.row(c));
+                    }
+                    // + K(Xq, X) (vy - zhat): accumulated apart, added once
+                    for v in corr.iter_mut() {
+                        *v = 0.0;
+                    }
+                    for j in 0..n {
+                        let kj = krow[j];
+                        if kj == 0.0 {
+                            continue;
+                        }
+                        let zr = zhat.row(j);
+                        for q in 0..s {
+                            corr[q] += kj * (vy[j] - zr[q]);
+                        }
+                    }
+                    for q in 0..s {
+                        srow[q] += corr[q];
+                    }
+                }
+            },
+        );
+        let mut mean = Vec::with_capacity(tq);
+        let mut samples = Mat::zeros(tq, s);
+        for i in 0..tq {
+            let prow = packed.row(i);
+            mean.push(prow[0]);
+            samples.row_mut(i).copy_from_slice(&prow[1..]);
+        }
+        Ok((mean, samples))
     }
 }
 
@@ -147,6 +326,23 @@ impl KernelOperator for TiledOperator {
         // rebuilds only when the lengthscale bits changed (O(n·d));
         // sigf/sigma-only steps keep the cache
         self.scaled.refresh(&self.x, &hp.ell);
+        if self.precision.is_f32() {
+            // refresh carries an existing mirror across rebuilds; this is
+            // a no-op belt for the never-built case
+            self.scaled.ensure_f32();
+        }
+    }
+
+    fn precision(&self) -> Precision {
+        self.precision
+    }
+
+    fn set_precision(&mut self, prec: Precision) -> anyhow::Result<()> {
+        self.precision = prec;
+        if prec.is_f32() {
+            self.scaled.ensure_f32();
+        }
+        Ok(())
     }
 
     /// Online data arrival: append the new rows to X and grow the panel
@@ -191,51 +387,11 @@ impl KernelOperator for TiledOperator {
     /// writes are disjoint, so no reduction exists, and the only scratch
     /// is one tile panel per worker, pooled in `scratch`.
     fn hv_into(&self, v: &Mat, out: &mut Mat, scratch: &HvScratch) {
-        let n = self.n();
-        assert_eq!(v.rows, n);
-        let k = v.cols;
-        assert_eq!(
-            (out.rows, out.cols),
-            (n, k),
-            "hv_into: output is {}x{} but the product is {}x{}",
-            out.rows,
-            out.cols,
-            n,
-            k
-        );
-        let noise_var = self.hp.noise_var();
-        let sf2 = self.sf2();
-        let tile = self.tile;
-        parallel_row_blocks(&mut out.data, k, tile, self.threads, |r0, rows, block| {
-            block.fill(0.0);
-            let mut pbuf = scratch.take(rows * tile);
-            let mut j0 = 0;
-            while j0 < n {
-                let j1 = (j0 + tile).min(n);
-                let w = j1 - j0;
-                let panel = &mut pbuf[..rows * w];
-                panel::fill_panel(
-                    &self.scaled,
-                    r0,
-                    r0 + rows,
-                    &self.scaled,
-                    j0,
-                    j1,
-                    sf2,
-                    self.family,
-                    panel,
-                );
-                // sigma^2 I where the panel crosses the global diagonal —
-                // the same `k_ii + noise_var` the dense add_diag produces
-                let (d0, d1) = (r0.max(j0), (r0 + rows).min(j1));
-                for i in d0..d1 {
-                    panel[(i - r0) * w + (i - j0)] += noise_var;
-                }
-                panel::apply_panel(panel, rows, w, j0, v, block);
-                j0 = j1;
-            }
-            scratch.put(pbuf);
-        });
+        self.hv_into_impl(v, out, scratch, Precision::F64);
+    }
+
+    fn hv_into_prec(&self, v: &Mat, out: &mut Mat, scratch: &HvScratch, prec: Precision) {
+        self.hv_into_impl(v, out, scratch, prec);
     }
 
     /// K(X, X[idx]) @ U, row-parallel over tiles of X (the sigma^2 scatter
@@ -245,22 +401,11 @@ impl KernelOperator for TiledOperator {
     /// over the gathered [`ScaledX`] — bitwise equal to the dense backend's
     /// `cross_matrix(...).matmul(u)` (AP trajectories match dense exactly).
     fn k_cols(&self, idx: &[usize], u: &Mat) -> Mat {
-        assert_eq!(u.rows, idx.len());
-        let n = self.n();
-        let nb = idx.len();
-        let k = u.cols;
-        let sb = self.scaled.gather(idx);
-        let sf2 = self.sf2();
-        let mut out = Mat::zeros(n, k);
-        parallel_row_blocks(&mut out.data, k, self.tile, self.threads, |r0, rows, block| {
-            let mut krow = vec![0.0; nb];
-            for r in 0..rows {
-                let i = r0 + r;
-                panel::fill_row(&self.scaled, i, &sb, 0, sf2, self.family, &mut krow);
-                panel::apply_panel(&krow, 1, nb, 0, u, &mut block[r * k..(r + 1) * k]);
-            }
-        });
-        out
+        self.k_cols_impl(idx, u, Precision::F64)
+    }
+
+    fn k_cols_prec(&self, idx: &[usize], u: &Mat, prec: Precision) -> Mat {
+        self.k_cols_impl(idx, u, prec)
     }
 
     /// K(X[idx], X) @ V, parallel over the (small) batch rows.
@@ -270,22 +415,11 @@ impl KernelOperator for TiledOperator {
     /// `cross_matrix(...).matmul(v)` (SGD trajectories match dense
     /// exactly).
     fn k_rows(&self, idx: &[usize], v: &Mat) -> Mat {
-        let n = self.n();
-        assert_eq!(v.rows, n);
-        let k = v.cols;
-        let sa = self.scaled.gather(idx);
-        let sf2 = self.sf2();
-        let mut out = Mat::zeros(idx.len(), k);
-        let rows_total = idx.len().max(1);
-        let block = (rows_total + self.threads - 1) / self.threads;
-        parallel_row_blocks(&mut out.data, k, block, self.threads, |r0, rows, blk| {
-            let mut krow = vec![0.0; n];
-            for r in 0..rows {
-                panel::fill_row(&sa, r0 + r, &self.scaled, 0, sf2, self.family, &mut krow);
-                panel::apply_panel(&krow, 1, n, 0, v, &mut blk[r * k..(r + 1) * k]);
-            }
-        });
-        out
+        self.k_rows_impl(idx, v, Precision::F64)
+    }
+
+    fn k_rows_prec(&self, idx: &[usize], v: &Mat, prec: Precision) -> Mat {
+        self.k_rows_impl(idx, v, prec)
     }
 
     /// sum_j w_j a_j^T (dH/dtheta) b_j, tiled over (i, j) pairs with the
@@ -397,78 +531,19 @@ impl KernelOperator for TiledOperator {
         omega0: &Mat,
         wts: &Mat,
     ) -> anyhow::Result<(Vec<f64>, Mat)> {
-        let n = self.n();
-        let d = self.d();
-        anyhow::ensure!(
-            x_query.cols == d,
-            "predict_at: query has d = {} but the model has d = {}",
-            x_query.cols,
-            d
-        );
-        let tq = x_query.rows;
-        assert_eq!(vy.len(), n);
-        assert_eq!(zhat.rows, n);
-        assert_eq!(omega0.rows, d);
-        let m = omega0.cols;
-        assert_eq!(wts.rows, 2 * m);
-        let s = wts.cols;
-        assert_eq!(zhat.cols, s);
-        let amp = self.hp.sigf * (1.0 / m as f64).sqrt();
-        let qs = ScaledX::new(x_query, &self.hp.ell);
-        let sf2 = self.sf2();
-        // packed output: column 0 = mean, columns 1..=s = samples
-        let width = 1 + s;
-        let mut packed = Mat::zeros(tq, width);
-        parallel_row_blocks(
-            &mut packed.data,
-            width,
-            self.tile,
-            self.threads,
-            |r0, rows, block| {
-                let mut krow = vec![0.0; n];
-                let mut phi = vec![0.0; 2 * m];
-                let mut corr = vec![0.0; s];
-                for r in 0..rows {
-                    let i = r0 + r;
-                    panel::fill_row(&qs, i, &self.scaled, 0, sf2, self.family, &mut krow);
-                    let orow = &mut block[r * width..(r + 1) * width];
-                    orow[0] = stats::dot(&krow, vy);
-                    rff_fill_row(qs.row(i), omega0, amp, &mut phi);
-                    let srow = &mut orow[1..];
-                    for (c, &pc) in phi.iter().enumerate() {
-                        if pc == 0.0 {
-                            continue;
-                        }
-                        micro::axpy(srow, pc, wts.row(c));
-                    }
-                    // + K(Xq, X) (vy - zhat): accumulated apart, added once
-                    for v in corr.iter_mut() {
-                        *v = 0.0;
-                    }
-                    for j in 0..n {
-                        let kj = krow[j];
-                        if kj == 0.0 {
-                            continue;
-                        }
-                        let zr = zhat.row(j);
-                        for q in 0..s {
-                            corr[q] += kj * (vy[j] - zr[q]);
-                        }
-                    }
-                    for q in 0..s {
-                        srow[q] += corr[q];
-                    }
-                }
-            },
-        );
-        let mut mean = Vec::with_capacity(tq);
-        let mut samples = Mat::zeros(tq, s);
-        for i in 0..tq {
-            let prow = packed.row(i);
-            mean.push(prow[0]);
-            samples.row_mut(i).copy_from_slice(&prow[1..]);
-        }
-        Ok((mean, samples))
+        self.predict_at_impl(x_query, vy, zhat, omega0, wts, Precision::F64)
+    }
+
+    fn predict_at_prec(
+        &self,
+        x_query: &Mat,
+        vy: &[f64],
+        zhat: &Mat,
+        omega0: &Mat,
+        wts: &Mat,
+        prec: Precision,
+    ) -> anyhow::Result<(Vec<f64>, Mat)> {
+        self.predict_at_impl(x_query, vy, zhat, omega0, wts, prec)
     }
 
     /// The tiled backend's `predict_at` already parallelises over query

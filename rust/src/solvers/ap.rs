@@ -9,11 +9,12 @@
 //! not dominate.
 
 use super::{
-    recurrence, residual_norms_t, ApSelection, LinearSolver, Normalized, PreconditionerCache,
-    SharedPreconditionerCache, SolveOptions, SolveReport, SolverKind,
+    drift_exceeded, recurrence, residual_norms_t, verify_residuals_f64, ApSelection, LinearSolver,
+    Normalized, PreconditionerCache, SharedPreconditionerCache, SolveOptions, SolveReport,
+    SolverKind,
 };
 use crate::linalg::Mat;
-use crate::operators::KernelOperator;
+use crate::operators::{KernelOperator, Precision};
 use crate::util::rng::Rng;
 
 pub struct ApSolver {
@@ -33,14 +34,22 @@ impl Default for ApSolver {
     }
 }
 
-impl LinearSolver for ApSolver {
-    fn solve(
+impl ApSolver {
+    /// The solve body, parameterised on compute precision.  `F64` is the
+    /// bitwise-parity reference path: the cost scale is exactly 1.0 (an
+    /// IEEE-exact multiply), the products go through the plain `k_cols`,
+    /// and every historical exact-epoch-count property is preserved.
+    /// `F32` prices each block product at half an epoch fraction (half the
+    /// memory traffic) and routes it through `k_cols_prec`.
+    fn solve_impl(
         &mut self,
         op: &dyn KernelOperator,
         b_mat: &Mat,
         v0: &mut Mat,
         opts: &SolveOptions,
+        prec: Precision,
     ) -> SolveReport {
+        let cost_scale = if prec.is_f32() { 0.5 } else { 1.0 };
         let bsz = opts.block_size;
         let n = op.n();
         let threads = recurrence::resolve_threads(opts.threads);
@@ -84,7 +93,7 @@ impl LinearSolver for ApSolver {
         // restricts itself to affordable blocks, so the budget is never
         // exceeded either.
         let block_cost =
-            |blk: usize| (((blk + 1) * bsz).min(n) - blk * bsz) as f64 / n as f64;
+            |blk: usize| cost_scale * ((((blk + 1) * bsz).min(n) - blk * bsz) as f64 / n as f64);
         let min_epoch_per_iter = block_cost(nblocks - 1).min(block_cost(0));
         // Greedy no-progress guards.  Solving block I leaves r[I] at fp
         // dust, so what a repeat selection *means* depends on the scoring:
@@ -192,7 +201,7 @@ impl LinearSolver for ApSolver {
             }
 
             // r -= K(X, X_I) u  (operator product) and the sigma^2 scatter
-            let ku = op.k_cols(&idx, &u); // [n, k]
+            let ku = op.k_cols_prec(&idx, &u, prec); // [n, k]
             recurrence::sub_assign(&mut r, &ku, threads);
             for (bi, &i) in idx.iter().enumerate() {
                 let rr = r.row_mut(i);
@@ -201,7 +210,7 @@ impl LinearSolver for ApSolver {
                 }
             }
 
-            epochs += idx.len() as f64 / n as f64;
+            epochs += cost_scale * (idx.len() as f64 / n as f64);
             iterations += 1;
             let (a, b_) = residual_norms_t(&r, threads);
             ry = a;
@@ -236,6 +245,38 @@ impl LinearSolver for ApSolver {
             converged: ry <= tol && rz <= tol,
             init_residual_sq,
         }
+    }
+}
+
+impl LinearSolver for ApSolver {
+    fn solve(
+        &mut self,
+        op: &dyn KernelOperator,
+        b_mat: &Mat,
+        v0: &mut Mat,
+        opts: &SolveOptions,
+    ) -> SolveReport {
+        if !(opts.precision.is_f32() && op.precision().is_f32()) {
+            return self.solve_impl(op, b_mat, v0, opts, Precision::F64);
+        }
+        let threads = recurrence::resolve_threads(opts.threads);
+        let backup = v0.clone();
+        let mut rep = self.solve_impl(op, b_mat, v0, opts, Precision::F32);
+        // drift guard: one f64 epoch verifying the incrementally-tracked
+        // residual against the reference operator.  On excessive drift the
+        // warm start is restored and the untouched f64 path reruns; with
+        // greedy selection (the default, stateless across solves) that
+        // rerun is bitwise-equal to a pure --precision f64 solve.
+        let (ry64, rz64) = verify_residuals_f64(op, b_mat, v0, threads);
+        rep.epochs += 1.0;
+        if drift_exceeded(&rep, ry64, rz64, opts.drift_ratio) {
+            let wasted = rep.epochs;
+            *v0 = backup;
+            let mut rep64 = self.solve_impl(op, b_mat, v0, opts, Precision::F64);
+            rep64.epochs += wasted;
+            return rep64;
+        }
+        rep
     }
 
     fn kind(&self) -> SolverKind {

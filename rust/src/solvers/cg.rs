@@ -3,11 +3,22 @@
 //! One iteration touches every entry of H once, so 1 iteration = 1 epoch.
 
 use super::{
-    recurrence, residual_norms_t, LinearSolver, Normalized, PreconditionerCache,
-    SharedPreconditionerCache, SolveOptions, SolveReport, SolverKind,
+    drift_exceeded, recurrence, residual_norms_t, verify_residuals_f64, LinearSolver, Normalized,
+    PreconditionerCache, SharedPreconditionerCache, SolveOptions, SolveReport, SolverKind,
+    NORM_EPS,
 };
 use crate::linalg::Mat;
-use crate::operators::{HvScratch, KernelOperator};
+use crate::operators::{HvScratch, KernelOperator, Precision};
+
+/// Epoch cost of one f32 operator product: half the memory traffic of the
+/// f64 pass (the paper's epoch is a bandwidth unit, not a flop count).
+const F32_EPOCH: f64 = 0.5;
+
+/// Inner f32 rounds solve the correction system H dv = r only loosely —
+/// iterative refinement recovers the remaining accuracy in the f64 outer
+/// loop, and pushing an f32 inner solve much below this wastes epochs on
+/// digits the reduced precision cannot represent.
+const INNER_TOL: f64 = 0.05;
 
 pub struct CgSolver {
     /// Preconditioner store keyed on (hyperparameter bits, rank) —
@@ -23,8 +34,11 @@ impl Default for CgSolver {
     }
 }
 
-impl LinearSolver for CgSolver {
-    fn solve(
+impl CgSolver {
+    /// The reference f64 path — untouched by the precision work, so a
+    /// `--precision f64` run (and the drift-guard fallback) stays
+    /// bitwise-identical to the historical solver.
+    fn solve_f64(
         &mut self,
         op: &dyn KernelOperator,
         b: &Mat,
@@ -92,6 +106,163 @@ impl LinearSolver for CgSolver {
             rz,
             converged: ry <= tol && rz <= tol,
             init_residual_sq,
+        }
+    }
+
+    /// f32 compute with iterative refinement: inner PCG rounds run the
+    /// operator products in f32 (f64 accumulation) against a loosely
+    /// normalised correction system, and the outer loop recomputes the
+    /// true residual with the retained f64 reference product.  A final
+    /// drift guard falls back to [`CgSolver::solve_f64`] — same solver
+    /// instance, so the preconditioner cache is shared and the fallback
+    /// answer is bitwise-equal to a pure f64 run.
+    fn solve_refined(
+        &mut self,
+        op: &dyn KernelOperator,
+        b: &Mat,
+        v0: &mut Mat,
+        opts: &SolveOptions,
+    ) -> SolveReport {
+        let threads = recurrence::resolve_threads(opts.threads);
+        let backup = v0.clone();
+        let pre =
+            self.cache
+                .solver_preconditioner(op, opts.precond_rank, opts.precond_shards, threads);
+        let mut hd = Mat::zeros(b.rows, b.cols);
+        let scratch = HvScratch::default();
+        let (norm, mut r) = Normalized::setup_pooled(op, b, v0, threads, &scratch, &mut hd);
+        let mut v = v0.clone();
+        let init_residual_sq: f64 = recurrence::col_sq_sums(&r, threads).iter().sum();
+
+        let mut epochs = norm.warm_epoch_cost;
+        let mut iterations = 0usize;
+        let (mut ry, mut rz) = residual_norms_t(&r, threads);
+        let tol = opts.tolerance;
+        let cols = b.cols;
+        let mut stalls = 0usize;
+        let mut prev = ry.max(rz);
+
+        // Each outer round needs at least one f32 product plus the
+        // mandatory f64 residual recomputation to make progress.
+        while (ry > tol || rz > tol)
+            && epochs + F32_EPOCH + 1.0 <= opts.max_epochs
+            && stalls < 2
+        {
+            // normalise the correction RHS so the inner relative tolerance
+            // stays meaningful as the outer residual shrinks
+            let mut rnorms = recurrence::col_norms(&r, threads);
+            for n in &mut rnorms {
+                *n += NORM_EPS;
+            }
+            let rinv: Vec<f64> = rnorms.iter().map(|&x| 1.0 / x).collect();
+            let mut ri = r.clone();
+            recurrence::scale_cols(&mut ri, &rinv, threads);
+
+            let mut dv = Mat::zeros(b.rows, cols);
+            let mut p = pre.apply_t(&ri, threads);
+            let mut d = p.clone();
+            let mut gamma = recurrence::col_dots(&ri, &p, threads);
+            let (mut iry, mut irz) = residual_norms_t(&ri, threads);
+            while (iry > INNER_TOL || irz > INNER_TOL)
+                && epochs + F32_EPOCH + 1.0 <= opts.max_epochs
+            {
+                op.hv_into_prec(&d, &mut hd, &scratch, Precision::F32);
+                epochs += F32_EPOCH;
+                iterations += 1;
+                let denom = recurrence::col_dots(&d, &hd, threads);
+                let alpha: Vec<f64> = gamma
+                    .iter()
+                    .zip(&denom)
+                    .map(|(&g, &dn)| if dn > 0.0 { g / dn } else { 0.0 })
+                    .collect();
+                recurrence::axpy_cols(&mut dv, &alpha, &d, threads);
+                let neg_alpha: Vec<f64> = alpha.iter().map(|a| -a).collect();
+                recurrence::axpy_cols(&mut ri, &neg_alpha, &hd, threads);
+                // preconditioner application stays f64 — it is O(n k rank),
+                // not an O(n^2) product, and mixed-precision CG is far more
+                // sensitive to preconditioner noise than to product noise
+                p = pre.apply_t(&ri, threads);
+                let gamma_new = recurrence::col_dots(&ri, &p, threads);
+                let beta: Vec<f64> = gamma_new
+                    .iter()
+                    .zip(&gamma)
+                    .map(|(&gn, &g)| if g.abs() > 0.0 { gn / g } else { 0.0 })
+                    .collect();
+                recurrence::direction_update(&mut d, &p, &beta, threads);
+                gamma = gamma_new;
+                let (a, b_) = residual_norms_t(&ri, threads);
+                iry = a;
+                irz = b_;
+                if !(iry.is_finite() && irz.is_finite()) {
+                    break;
+                }
+            }
+
+            // undo the correction normalisation, apply, and recompute the
+            // true residual with the f64 reference product
+            recurrence::scale_cols(&mut dv, &rnorms, threads);
+            recurrence::add_assign(&mut v, &dv, threads);
+            op.hv_into(&v, &mut hd, &scratch);
+            epochs += 1.0;
+            r = norm.b.clone();
+            recurrence::sub_assign(&mut r, &hd, threads);
+            let (a, b_) = residual_norms_t(&r, threads);
+            ry = a;
+            rz = b_;
+            if !(ry.is_finite() && rz.is_finite()) {
+                break;
+            }
+            // two consecutive rounds with < 10% improvement = the f32
+            // floor; further rounds would burn epochs without progress
+            let cur = ry.max(rz);
+            if cur > 0.9 * prev {
+                stalls += 1;
+            } else {
+                stalls = 0;
+            }
+            prev = cur;
+        }
+
+        norm.finish_t(&mut v, threads);
+        *v0 = v;
+        let mut rep = SolveReport {
+            iterations,
+            epochs,
+            ry,
+            rz,
+            converged: ry <= tol && rz <= tol,
+            init_residual_sq,
+        };
+
+        // drift guard: one extra f64 epoch to verify the solution against
+        // the reference operator; on excessive drift restore the warm
+        // start and rerun the untouched f64 path, charging the wasted
+        // f32 epochs to the fallback's report
+        let (ry64, rz64) = verify_residuals_f64(op, b, v0, threads);
+        rep.epochs += 1.0;
+        if drift_exceeded(&rep, ry64, rz64, opts.drift_ratio) {
+            let wasted = rep.epochs;
+            *v0 = backup;
+            let mut rep64 = self.solve_f64(op, b, v0, opts);
+            rep64.epochs += wasted;
+            return rep64;
+        }
+        rep
+    }
+}
+
+impl LinearSolver for CgSolver {
+    fn solve(
+        &mut self,
+        op: &dyn KernelOperator,
+        b: &Mat,
+        v0: &mut Mat,
+        opts: &SolveOptions,
+    ) -> SolveReport {
+        if opts.precision.is_f32() && op.precision().is_f32() {
+            self.solve_refined(op, b, v0, opts)
+        } else {
+            self.solve_f64(op, b, v0, opts)
         }
     }
 

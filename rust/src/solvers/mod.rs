@@ -31,7 +31,7 @@ pub use precond::{
 pub use sgd::{autotune_lr, SgdSolver};
 
 use crate::linalg::Mat;
-use crate::operators::{HvScratch, KernelOperator};
+use crate::operators::{HvScratch, KernelOperator, Precision};
 
 pub const NORM_EPS: f64 = 1e-12;
 
@@ -106,6 +106,24 @@ pub struct SolveOptions {
     /// price of a weaker preconditioner per unit rank.  0 or 1 keeps the
     /// global build (the default).
     pub precond_shards: usize,
+    /// Compute precision for the O(n^2) operator products.  `F64` (the
+    /// default) is the bitwise-parity reference path.  `F32` runs kernel
+    /// products in f32 with f64 accumulation — CG wraps it in an
+    /// iterative-refinement outer loop, AP/SGD apply their updates from
+    /// reduced-precision products directly — and every solve ends with a
+    /// drift guard (see [`SolveOptions::drift_ratio`]).  Takes effect only
+    /// when the operator also reports
+    /// [`KernelOperator::precision`]` == F32` (i.e. `set_precision(F32)`
+    /// succeeded on the backend); otherwise the f64 path runs untouched.
+    pub precision: Precision,
+    /// Residual-drift guard ratio (Maddox et al.-style low-precision
+    /// monitoring): after an f32 solve, the residual is recomputed in f64
+    /// against the reference operator; if the f64 residual exceeds the
+    /// solver's internally-tracked residual by more than this factor (or
+    /// is non-finite), the solve falls back to the untouched f64 path and
+    /// returns its (bitwise-reference) answer, with the wasted f32 epochs
+    /// added to the report.  Ignored for `precision = F64`.
+    pub drift_ratio: f64,
 }
 
 impl Default for SolveOptions {
@@ -123,6 +141,8 @@ impl Default for SolveOptions {
             threads: 0,
             ap_block_precond: false,
             precond_shards: 0,
+            precision: Precision::F64,
+            drift_ratio: 8.0,
         }
     }
 }
@@ -217,6 +237,47 @@ pub fn residual_norms_t(r: &Mat, threads: usize) -> (f64, f64) {
         0.0
     };
     (ry, rz)
+}
+
+/// Recompute the relative residuals of  H v = b  in full f64 against the
+/// operator's reference path, ignoring any reduced-precision mode: returns
+/// `(ry, rz)` with `r_j = ||b_j - (H v)_j|| / (||b_j|| + NORM_EPS)`, split
+/// as (column 0, mean of columns 1..) exactly like [`residual_norms`].
+///
+/// Because the solvers track residuals of the unit-normalised system
+/// b~ = b / (||b|| + eps), whose residual is r~_j = r_j / (||b_j|| + eps),
+/// the values returned here are directly comparable to
+/// [`SolveReport::ry`]/[`SolveReport::rz`].  Costs one epoch.
+pub fn verify_residuals_f64(
+    op: &dyn KernelOperator,
+    b: &Mat,
+    v: &Mat,
+    threads: usize,
+) -> (f64, f64) {
+    let mut hv = Mat::zeros(v.rows, v.cols);
+    op.hv_into(v, &mut hv, &HvScratch::default());
+    let mut r = b.clone();
+    recurrence::sub_assign(&mut r, &hv, threads);
+    let bn = recurrence::col_norms(b, threads);
+    let rn = recurrence::col_norms(&r, threads);
+    let rel: Vec<f64> = rn.iter().zip(&bn).map(|(&r, &b)| r / (b + NORM_EPS)).collect();
+    let ry = rel[0];
+    let rz = if rel.len() > 1 {
+        rel[1..].iter().sum::<f64>() / (rel.len() - 1) as f64
+    } else {
+        0.0
+    };
+    (ry, rz)
+}
+
+/// Drift-guard predicate shared by the three solvers' f32 paths: true when
+/// the f64-recomputed residual exceeds the solver's internal residual by
+/// more than `drift_ratio`, or is non-finite (the `!(..)` form catches
+/// NaN).  `drift_ratio = 0.0` deterministically forces the fallback, since
+/// an honest recomputation always drifts by some nonzero factor.
+pub(crate) fn drift_exceeded(rep: &SolveReport, ry64: f64, rz64: f64, drift_ratio: f64) -> bool {
+    let drift = (ry64 / rep.ry.max(1e-300)).max(rz64 / rep.rz.max(1e-300));
+    !(drift <= drift_ratio)
 }
 
 /// Normalisation bookkeeping shared by all solvers: scales the system to

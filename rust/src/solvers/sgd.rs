@@ -6,10 +6,11 @@
 //! One iteration touches b/n of H's entries -> one epoch = n/b iterations.
 
 use super::{
-    recurrence, residual_norms_t, LinearSolver, Normalized, SolveOptions, SolveReport, SolverKind,
+    drift_exceeded, recurrence, residual_norms_t, verify_residuals_f64, LinearSolver, Normalized,
+    SolveOptions, SolveReport, SolverKind,
 };
 use crate::linalg::Mat;
-use crate::operators::{HvScratch, KernelOperator};
+use crate::operators::{HvScratch, KernelOperator, Precision};
 use crate::util::rng::Rng;
 
 pub struct SgdSolver {
@@ -28,13 +29,20 @@ impl SgdSolver {
     }
 }
 
-impl LinearSolver for SgdSolver {
-    fn solve(
+impl SgdSolver {
+    /// The solve body (backoff loop + attempts), parameterised on compute
+    /// precision.  `F64` is the bitwise-parity reference path — the cost
+    /// scale is exactly 1.0 and the minibatch products go through the
+    /// plain `k_rows` — so every historical exact-epoch-count property is
+    /// preserved.  `F32` routes the minibatch gradient products through
+    /// `k_rows_prec` at half the epoch fraction each.
+    fn solve_impl(
         &mut self,
         op: &dyn KernelOperator,
         b_mat: &Mat,
         v0: &mut Mat,
         opts: &SolveOptions,
+        prec: Precision,
     ) -> SolveReport {
         // Learning-rate backoff: the optimal SGD rate shrinks as the
         // hyperparameters sharpen during optimisation (paper Section 5
@@ -77,7 +85,7 @@ impl LinearSolver for SgdSolver {
             o.max_epochs = remaining + start;
             let mut v = v0.clone();
             let mut rep =
-                self.attempt(op, &norm, r_init.clone(), &mut v, &o, threads, start, guard);
+                self.attempt(op, &norm, r_init.clone(), &mut v, &o, threads, start, guard, prec);
             spent += rep.epochs - start;
             spent_iters += rep.iterations;
             rep.epochs = spent;
@@ -94,6 +102,39 @@ impl LinearSolver for SgdSolver {
             crate::debuglog!("sgd diverged (attempt {attempt}), retrying with lr={lr}");
         }
         unreachable!("backoff loop returns")
+    }
+}
+
+impl LinearSolver for SgdSolver {
+    fn solve(
+        &mut self,
+        op: &dyn KernelOperator,
+        b_mat: &Mat,
+        v0: &mut Mat,
+        opts: &SolveOptions,
+    ) -> SolveReport {
+        if !(opts.precision.is_f32() && op.precision().is_f32()) {
+            return self.solve_impl(op, b_mat, v0, opts, Precision::F64);
+        }
+        let threads = recurrence::resolve_threads(opts.threads);
+        let backup = v0.clone();
+        let mut rep = self.solve_impl(op, b_mat, v0, opts, Precision::F32);
+        // drift guard: SGD's internal residual is already only an estimate
+        // (the sparse upper-bound heuristic), so the f64 verification
+        // doubles as the paper's recommended exactness check — on drift
+        // past the ratio, restore the warm start and rerun in f64.  (The
+        // rerun draws fresh minibatches — the rng advanced during the f32
+        // attempt — so it is a fresh f64 solve, not a bitwise replay.)
+        let (ry64, rz64) = verify_residuals_f64(op, b_mat, v0, threads);
+        rep.epochs += 1.0;
+        if drift_exceeded(&rep, ry64, rz64, opts.drift_ratio) {
+            let wasted = rep.epochs;
+            *v0 = backup;
+            let mut rep64 = self.solve_impl(op, b_mat, v0, opts, Precision::F64);
+            rep64.epochs += wasted;
+            return rep64;
+        }
+        rep
     }
 
     fn kind(&self) -> SolverKind {
@@ -137,6 +178,7 @@ impl SgdSolver {
         threads: usize,
         start_epochs: f64,
         guard: f64,
+        prec: Precision,
     ) -> SolveReport {
         let n = op.n();
         let k = norm.b.cols;
@@ -161,14 +203,18 @@ impl SgdSolver {
         let mut iterations = 0usize;
         let (mut ry, mut rz) = residual_norms_t(&r, threads);
         let tol = opts.tolerance;
-        let epoch_per_iter = bsz as f64 / n as f64;
+        // f32 minibatch products cost half the memory traffic; the f64
+        // multiply by exactly 1.0 keeps the reference path's epoch
+        // accounting bitwise-unchanged
+        let cost_scale = if prec.is_f32() { 0.5 } else { 1.0 };
+        let epoch_per_iter = cost_scale * (bsz as f64 / n as f64);
         let step = opts.sgd_lr / bsz as f64;
         let rho = opts.sgd_momentum;
 
         while (ry > tol || rz > tol) && epochs + epoch_per_iter <= opts.max_epochs {
             let idx = self.rng.sample_indices(n, bsz);
             // g[I] = H[I,:] v - b[I]  = K(X_I, X) v + sigma^2 v[I] - b[I]
-            let mut g = op.k_rows(&idx, &v); // [b, k]
+            let mut g = op.k_rows_prec(&idx, v, prec); // [b, k]
             for (bi, &i) in idx.iter().enumerate() {
                 let gr = g.row_mut(bi);
                 let vr = &v.data[i * k..(i + 1) * k];

@@ -1,0 +1,329 @@
+//! Property tests for the precision-generic compute layer.
+//!
+//! Three contracts, in descending order of strictness:
+//!
+//! 1. **f64 is the untouched bitwise reference.**  Building the f32
+//!    mirrors (`set_precision(F32)`) must not move a single bit of any
+//!    f64 product — `hv`, `hv_into_prec(F64)`, `k_cols`, `k_rows` and
+//!    `predict_at` all reproduce their pre-mirror outputs exactly, on
+//!    every backend.
+//! 2. **f32 is layout-independent.**  The f32 products accumulate f32
+//!    kernel entries into f64 in ascending index order, so the tiled and
+//!    sharded backends must agree *bitwise* at f32 just as they do at
+//!    f64.  (Dense-f32 goes through a materialised `h32` matrix and is
+//!    held to tolerance, mirroring the dense-vs-tiled f64 suite.)
+//! 3. **f32 + refinement reaches f64 quality.**  CG with `precision =
+//!    F32` must converge to the solver tolerance as verified by an
+//!    independent f64 residual recomputation, and a drift guard forced
+//!    with `drift_ratio = 0` must return the pure-f64 answer bitwise.
+
+use igp::data::{Dataset, DatasetSpec};
+use igp::kernels::{Hyperparams, KernelFamily};
+use igp::linalg::Mat;
+use igp::operators::{
+    DenseOperator, HvScratch, KernelOperator, Precision, ShardedOperator, TiledOperator,
+    TiledOptions,
+};
+use igp::solvers::{make_solver, verify_residuals_f64, SolveOptions, SolverKind};
+use igp::util::proptest::{check, PropConfig};
+use igp::util::rng::Rng;
+
+fn random_family(rng: &mut Rng) -> KernelFamily {
+    match rng.below(4) {
+        0 => KernelFamily::Matern12,
+        1 => KernelFamily::Matern32,
+        2 => KernelFamily::Matern52,
+        _ => KernelFamily::Rbf,
+    }
+}
+
+fn toy_dataset(rng: &mut Rng, n: usize, n_test: usize, d: usize, family: KernelFamily) -> Dataset {
+    let x_train = Mat::from_fn(n, d, |_, _| rng.gaussian());
+    let y_train = rng.gaussian_vec(n);
+    let x_test = Mat::from_fn(n_test, d, |_, _| rng.gaussian());
+    let y_test = rng.gaussian_vec(n_test);
+    let spec = DatasetSpec {
+        name: "toy",
+        paper_n: 0,
+        n,
+        n_test,
+        d,
+        true_sigma: 0.3,
+        ell_lo: 0.5,
+        ell_hi: 1.5,
+        cluster_frac: 0.0,
+        family,
+        seed: 0,
+    };
+    Dataset { spec, x_train, y_train, x_test, y_test, true_hp: Hyperparams::ones(d) }
+}
+
+/// One random case: the same dataset and hyperparameters behind all
+/// three CPU backends.
+struct Ops {
+    tiled: TiledOperator,
+    dense: DenseOperator,
+    sharded: ShardedOperator,
+}
+
+fn random_ops(rng: &mut Rng, size: usize) -> Ops {
+    let n = 8 + rng.below(8 + 6 * size.max(1));
+    let n_test = 1 + rng.below(6);
+    let d = 1 + rng.below(5);
+    let s = 1 + rng.below(4);
+    let m = 4 + rng.below(12);
+    let tile = 1 + rng.below(n + 8);
+    let threads = 1 + rng.below(4);
+    let shards = 1 + rng.below(4);
+    let family = random_family(rng);
+    let ds = toy_dataset(rng, n, n_test, d, family);
+    let hp = Hyperparams {
+        ell: (0..d).map(|_| rng.uniform_in(0.4, 2.0)).collect(),
+        sigf: rng.uniform_in(0.5, 1.5),
+        sigma: rng.uniform_in(0.1, 0.9),
+    };
+    let opts = TiledOptions { tile, threads };
+    let mut tiled = TiledOperator::with_options(&ds, s, m, opts.clone());
+    tiled.set_hp(&hp);
+    let mut dense = DenseOperator::new(&ds, s, m);
+    dense.set_hp(&hp);
+    let mut sharded = ShardedOperator::with_options(&ds, s, m, opts, shards);
+    sharded.set_hp(&hp);
+    Ops { tiled, dense, sharded }
+}
+
+fn bitwise(label: &str, got: &Mat, want: &Mat) -> Result<(), String> {
+    if (got.rows, got.cols) != (want.rows, want.cols) {
+        return Err(format!(
+            "{label}: shape ({}, {}) vs ({}, {})",
+            got.rows, got.cols, want.rows, want.cols
+        ));
+    }
+    bitwise_slice(label, &got.data, &want.data)
+}
+
+fn bitwise_slice(label: &str, got: &[f64], want: &[f64]) -> Result<(), String> {
+    if got.len() != want.len() {
+        return Err(format!("{label}: len {} vs {}", got.len(), want.len()));
+    }
+    for (i, (a, b)) in got.iter().zip(want).enumerate() {
+        if a.to_bits() != b.to_bits() {
+            return Err(format!(
+                "{label}: element {i}: {a:e} vs {b:e} ({:#018x} vs {:#018x})",
+                a.to_bits(),
+                b.to_bits()
+            ));
+        }
+    }
+    Ok(())
+}
+
+/// Max elementwise difference, relative to the magnitude scale of `want`.
+fn close(label: &str, got: &Mat, want: &Mat, tol: f64) -> Result<(), String> {
+    if (got.rows, got.cols) != (want.rows, want.cols) {
+        return Err(format!(
+            "{label}: shape ({}, {}) vs ({}, {})",
+            got.rows, got.cols, want.rows, want.cols
+        ));
+    }
+    let scale = 1.0 + want.data.iter().fold(0.0f64, |m, v| m.max(v.abs()));
+    for (i, (a, b)) in got.data.iter().zip(&want.data).enumerate() {
+        let err = (a - b).abs() / scale;
+        if !(err <= tol) {
+            return Err(format!("{label}: element {i}: {a:e} vs {b:e} (rel err {err:e})"));
+        }
+    }
+    Ok(())
+}
+
+/// Contract 1: enabling the f32 mirrors leaves every f64 product
+/// bitwise-identical on all three backends — `F64` stays the untouched
+/// reference path no matter what precision state the operator carries.
+#[test]
+fn prop_f64_products_unchanged_by_f32_mirrors() {
+    check("f64_unchanged_by_mirrors", PropConfig { cases: 16, max_size: 10, ..Default::default() }, |rng, size| {
+        let mut o = random_ops(rng, size);
+        let (n, d, s, m) = (o.tiled.n(), o.tiled.d(), o.tiled.s(), o.tiled.m());
+        let k = o.tiled.k_width();
+        let v = Mat::from_fn(n, k, |_, _| rng.gaussian());
+        let nb = 1 + rng.below(n);
+        let idx = rng.sample_indices(n, nb);
+        let u = Mat::from_fn(idx.len(), k, |_, _| rng.gaussian());
+        let omega0 = Mat::from_fn(d, m, |_, _| rng.gaussian());
+        let wts = Mat::from_fn(2 * m, s, |_, _| rng.gaussian());
+        let vy = rng.gaussian_vec(n);
+        let zhat = Mat::from_fn(n, s, |_, _| rng.gaussian());
+        let xq = Mat::from_fn(1 + rng.below(6), d, |_, _| rng.gaussian());
+
+        // reference products before any f32 state exists
+        let hv_t = o.tiled.hv(&v);
+        let hv_d = o.dense.hv(&v);
+        let hv_s = o.sharded.hv(&v);
+        let kc_t = o.tiled.k_cols(&idx, &u);
+        let kr_t = o.tiled.k_rows(&idx, &v);
+        let (pm_t, ps_t) = o.tiled.predict_at(&xq, &vy, &zhat, &omega0, &wts).map_err(|e| e.to_string())?;
+
+        o.tiled.set_precision(Precision::F32).map_err(|e| e.to_string())?;
+        o.dense.set_precision(Precision::F32).map_err(|e| e.to_string())?;
+        o.sharded.set_precision(Precision::F32).map_err(|e| e.to_string())?;
+
+        bitwise("tiled hv after mirror", &o.tiled.hv(&v), &hv_t)?;
+        bitwise("dense hv after mirror", &o.dense.hv(&v), &hv_d)?;
+        bitwise("sharded hv after mirror", &o.sharded.hv(&v), &hv_s)?;
+
+        // the explicit-precision entry points at F64 are the same path
+        let scratch = HvScratch::default();
+        let mut out = Mat::from_fn(n, k, |_, _| f64::NAN);
+        o.tiled.hv_into_prec(&v, &mut out, &scratch, Precision::F64);
+        bitwise("tiled hv_into_prec(F64)", &out, &hv_t)?;
+        o.sharded.hv_into_prec(&v, &mut out, &scratch, Precision::F64);
+        bitwise("sharded hv_into_prec(F64)", &out, &hv_s)?;
+        o.dense.hv_into_prec(&v, &mut out, &scratch, Precision::F64);
+        bitwise("dense hv_into_prec(F64)", &out, &hv_d)?;
+
+        bitwise("k_cols_prec(F64)", &o.tiled.k_cols_prec(&idx, &u, Precision::F64), &kc_t)?;
+        bitwise("k_rows_prec(F64)", &o.tiled.k_rows_prec(&idx, &v, Precision::F64), &kr_t)?;
+        let (pm, ps) = o
+            .tiled
+            .predict_at_prec(&xq, &vy, &zhat, &omega0, &wts, Precision::F64)
+            .map_err(|e| e.to_string())?;
+        bitwise_slice("predict_at_prec(F64) mean", &pm, &pm_t)?;
+        bitwise("predict_at_prec(F64) samples", &ps, &ps_t)
+    });
+}
+
+/// Contract 2: f32 products are close to f64 and layout-independent —
+/// tiled and sharded agree bitwise at f32 (same mirror bits, same
+/// ascending-index f64 accumulation), dense agrees to tolerance through
+/// its materialised `h32`.
+#[test]
+fn prop_f32_products_close_and_layout_independent() {
+    check("f32_products", PropConfig { cases: 16, max_size: 10, ..Default::default() }, |rng, size| {
+        let mut o = random_ops(rng, size);
+        let n = o.tiled.n();
+        let k = o.tiled.k_width();
+        o.tiled.set_precision(Precision::F32).map_err(|e| e.to_string())?;
+        o.dense.set_precision(Precision::F32).map_err(|e| e.to_string())?;
+        o.sharded.set_precision(Precision::F32).map_err(|e| e.to_string())?;
+
+        let v = Mat::from_fn(n, k, |_, _| rng.gaussian());
+        let scratch = HvScratch::default();
+        let mut hv_t = Mat::zeros(n, k);
+        let mut hv_s = Mat::zeros(n, k);
+        let mut hv_d = Mat::zeros(n, k);
+        o.tiled.hv_into_prec(&v, &mut hv_t, &scratch, Precision::F32);
+        o.sharded.hv_into_prec(&v, &mut hv_s, &scratch, Precision::F32);
+        o.dense.hv_into_prec(&v, &mut hv_d, &scratch, Precision::F32);
+        bitwise("f32 hv tiled vs sharded", &hv_s, &hv_t)?;
+        close("f32 hv dense vs tiled", &hv_d, &hv_t, 1e-5)?;
+        close("f32 hv vs f64 hv", &hv_t, &o.tiled.hv(&v), 5e-4)?;
+
+        let nb = 1 + rng.below(n);
+        let idx = rng.sample_indices(n, nb);
+        let u = Mat::from_fn(idx.len(), k, |_, _| rng.gaussian());
+        let kc_t = o.tiled.k_cols_prec(&idx, &u, Precision::F32);
+        bitwise(
+            "f32 k_cols tiled vs sharded",
+            &o.sharded.k_cols_prec(&idx, &u, Precision::F32),
+            &kc_t,
+        )?;
+        close("f32 k_cols vs f64", &kc_t, &o.tiled.k_cols(&idx, &u), 5e-4)?;
+
+        let kr_t = o.tiled.k_rows_prec(&idx, &v, Precision::F32);
+        bitwise(
+            "f32 k_rows tiled vs sharded",
+            &o.sharded.k_rows_prec(&idx, &v, Precision::F32),
+            &kr_t,
+        )?;
+        close("f32 k_rows vs f64", &kr_t, &o.tiled.k_rows(&idx, &v), 5e-4)
+    });
+}
+
+/// Contract 3a: CG at `precision = F32` (iterative refinement) converges
+/// to the solver tolerance, as certified by an independent f64 residual
+/// recomputation against the reference operator — not by the solver's
+/// own bookkeeping.
+#[test]
+fn prop_cg_f32_refinement_reaches_f64_tolerance() {
+    check("cg_f32_refinement", PropConfig { cases: 10, max_size: 8, ..Default::default() }, |rng, size| {
+        let mut o = random_ops(rng, size);
+        o.tiled.set_precision(Precision::F32).map_err(|e| e.to_string())?;
+        let n = o.tiled.n();
+        let k = o.tiled.k_width();
+        let b = Mat::from_fn(n, k, |_, _| rng.gaussian());
+        let tol = 1e-4;
+        let opts32 = SolveOptions {
+            tolerance: tol,
+            max_epochs: 400.0,
+            precond_rank: 8,
+            precision: Precision::F32,
+            ..Default::default()
+        };
+        let mut v32 = Mat::zeros(n, k);
+        let rep32 = make_solver(SolverKind::Cg).solve(&o.tiled, &b, &mut v32, &opts32);
+        if !rep32.converged {
+            return Err(format!("f32 CG failed to converge: {rep32:?}"));
+        }
+        // certify with a from-scratch f64 residual, allowing only the
+        // normalisation round-off between raw and solver-internal space
+        let (ry, rz) = verify_residuals_f64(&o.tiled, &b, &v32, 1);
+        if !(ry <= 2.0 * tol && rz <= 2.0 * tol) {
+            return Err(format!("f64-verified residual too high: ry={ry:e} rz={rz:e}"));
+        }
+        // and the solution agrees with the pure-f64 solve to residual level
+        let opts64 = SolveOptions { precision: Precision::F64, ..opts32 };
+        let mut v64 = Mat::zeros(n, k);
+        let rep64 = make_solver(SolverKind::Cg).solve(&o.tiled, &b, &mut v64, &opts64);
+        if !rep64.converged {
+            return Err(format!("f64 CG failed to converge: {rep64:?}"));
+        }
+        close("f32-refined vs f64 solution", &v32, &v64, 1e-2)
+    });
+}
+
+/// Contract 3b: a tripped drift guard must hand back the *reference*
+/// answer.  `drift_ratio = 0` makes the guard fire unconditionally, so
+/// the f32 solve is thrown away and the fallback rerun — same solver
+/// instance, same warm start — must match a pure f64 solve bitwise,
+/// with the wasted f32 epochs charged on top.
+#[test]
+fn prop_drift_guard_fallback_is_bitwise_f64() {
+    check("drift_guard_fallback", PropConfig { cases: 10, max_size: 8, ..Default::default() }, |rng, size| {
+        let mut o = random_ops(rng, size);
+        o.tiled.set_precision(Precision::F32).map_err(|e| e.to_string())?;
+        let n = o.tiled.n();
+        let k = o.tiled.k_width();
+        let b = Mat::from_fn(n, k, |_, _| rng.gaussian());
+        let base = SolveOptions {
+            tolerance: 1e-4,
+            max_epochs: 200.0,
+            precond_rank: 8,
+            ..Default::default()
+        };
+        let forced = SolveOptions {
+            precision: Precision::F32,
+            drift_ratio: 0.0,
+            ..base.clone()
+        };
+        let mut v_guard = Mat::zeros(n, k);
+        let rep_guard = make_solver(SolverKind::Cg).solve(&o.tiled, &b, &mut v_guard, &forced);
+        let mut v_f64 = Mat::zeros(n, k);
+        let rep_f64 = make_solver(SolverKind::Cg).solve(&o.tiled, &b, &mut v_f64, &base);
+        bitwise("guard-fallback solution vs pure f64", &v_guard, &v_f64)?;
+        if rep_guard.ry.to_bits() != rep_f64.ry.to_bits()
+            || rep_guard.rz.to_bits() != rep_f64.rz.to_bits()
+            || rep_guard.iterations != rep_f64.iterations
+            || rep_guard.converged != rep_f64.converged
+        {
+            return Err(format!("fallback report diverged: {rep_guard:?} vs {rep_f64:?}"));
+        }
+        // the wasted f32 work (plus the verify epoch) is billed on top
+        if !(rep_guard.epochs > rep_f64.epochs) {
+            return Err(format!(
+                "fallback must charge wasted epochs: {} vs {}",
+                rep_guard.epochs, rep_f64.epochs
+            ));
+        }
+        Ok(())
+    });
+}

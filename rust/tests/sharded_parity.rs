@@ -16,7 +16,7 @@ use igp::estimator::EstimatorKind;
 use igp::kernels::{Hyperparams, KernelFamily};
 use igp::linalg::Mat;
 use igp::operators::{
-    HvScratch, KernelOperator, ShardedOperator, TiledOperator, TiledOptions,
+    DenseOperator, HvScratch, KernelOperator, ShardedOperator, TiledOperator, TiledOptions,
 };
 use igp::solvers::SolverKind;
 use igp::util::proptest::{check, PropConfig};
@@ -308,6 +308,72 @@ fn prop_extend_preserves_bitwise_parity() {
         let (m2, s2) = c.tiled.predict_at(&xq, &vy, &zhat, &omega0, &wts).map_err(|e| e.to_string())?;
         bitwise_slice("predict_at mean after extend", &m1, &m2)?;
         bitwise("predict_at samples after extend", &s1, &s2)
+    });
+}
+
+#[test]
+fn prop_dense_and_tiled_hv_into_tolerate_dirty_buffers() {
+    // the sharded dirty-buffer prop above has dense/tiled mirrors: hv_into
+    // must fully overwrite whatever is in the output (NaN poison included)
+    // and pooled scratch reuse must not change a bit vs the allocating hv
+    check("dense_tiled_hv_into_dirty", PropConfig { cases: 16, max_size: 12, ..Default::default() }, |rng, size| {
+        let n = 8 + rng.below(8 + 6 * size.max(1));
+        let d = 1 + rng.below(5);
+        let s = 1 + rng.below(4);
+        let m = 4 + rng.below(12);
+        let tile = 1 + rng.below(n + 8);
+        let threads = 1 + rng.below(4);
+        let ds = toy_dataset(rng, n, 2, d, random_family(rng));
+        let hp = Hyperparams {
+            ell: (0..d).map(|_| rng.uniform_in(0.4, 2.0)).collect(),
+            sigf: rng.uniform_in(0.5, 1.5),
+            sigma: rng.uniform_in(0.1, 0.9),
+        };
+        let mut tiled = TiledOperator::with_options(&ds, s, m, TiledOptions { tile, threads });
+        tiled.set_hp(&hp);
+        let mut dense = DenseOperator::new(&ds, s, m);
+        dense.set_hp(&hp);
+
+        let k = tiled.k_width();
+        let v = Mat::from_fn(n, k, |_, _| rng.gaussian());
+        let scratch = HvScratch::default();
+
+        let want = tiled.hv(&v);
+        let mut out = Mat::from_fn(n, k, |_, _| f64::NAN);
+        tiled.hv_into(&v, &mut out, &scratch);
+        bitwise("tiled hv_into (dirty buffer)", &out, &want)?;
+        tiled.hv_into(&v, &mut out, &scratch);
+        bitwise("tiled hv_into (pooled rerun)", &out, &want)?;
+
+        // dense agrees with tiled only to tolerance, so its dirty-buffer
+        // contract is checked against its own allocating hv
+        let want = dense.hv(&v);
+        let mut out = Mat::from_fn(n, k, |_, _| f64::NAN);
+        dense.hv_into(&v, &mut out, &scratch);
+        bitwise("dense hv_into (dirty buffer)", &out, &want)?;
+        dense.hv_into(&v, &mut out, &scratch);
+        bitwise("dense hv_into (pooled rerun)", &out, &want)
+    });
+}
+
+#[test]
+fn prop_matmul_into_is_bitwise_equal_to_matmul() {
+    // Mat::matmul allocates a zeroed output; matmul_into writes into a
+    // caller buffer.  The two must agree bitwise for any shape, including
+    // degenerate inner dimensions, and regardless of the buffer's prior
+    // contents.
+    check("matmul_into_parity", PropConfig { cases: 32, max_size: 16, ..Default::default() }, |rng, size| {
+        let m = 1 + rng.below(4 + 2 * size.max(1));
+        let kk = rng.below(4 + 2 * size.max(1)); // 0 = empty inner dim
+        let n = 1 + rng.below(4 + 2 * size.max(1));
+        let a = Mat::from_fn(m, kk, |_, _| rng.gaussian());
+        let b = Mat::from_fn(kk, n, |_, _| rng.gaussian());
+        let want = a.matmul(&b);
+        let mut out = Mat::from_fn(m, n, |_, _| f64::NAN);
+        a.matmul_into(&b, &mut out);
+        bitwise("matmul_into (dirty buffer)", &out, &want)?;
+        a.matmul_into(&b, &mut out);
+        bitwise("matmul_into (rerun)", &out, &want)
     });
 }
 
