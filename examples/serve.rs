@@ -1,20 +1,33 @@
 //! Prediction serving over the amortised pathwise posterior: the full
 //! train -> serve -> extend -> serve-again lifecycle the serving subsystem
-//! exists for.
+//! exists for, including all three staleness policies, the deadline-aware
+//! request queue and a two-tenant fleet over one shared artifact cache.
 //!
 //! * train on an initial prefix of the dataset;
 //! * wrap the trainer in a [`PredictionService`] and answer queries at the
 //!   held-out split — the posterior artifact is pulled from the cache the
 //!   training tail already populated, so serving costs **zero** extra
 //!   solves;
-//! * an online arrival (`extend_data`) invalidates the artifact; the next
-//!   query refreshes it with exactly **one warm solve** from the carried
-//!   solution store — not a cold restart;
-//! * keep training after the arrival and serve again.
+//! * an online arrival (`extend_data`) invalidates the artifact; what
+//!   happens next is the staleness policy's call:
+//!   - `refuse` rejects queries with a typed error until `refresh()`;
+//!   - `serve_stale` answers from the retained pre-arrival snapshot —
+//!     bitwise the pre-arrival answers, zero solves;
+//!   - `refresh_first` pays exactly **one warm solve** from the carried
+//!     solution store (not a cold restart), then answers fresh;
+//! * deadline-tagged requests drain earliest-deadline-first, coalesced
+//!   into shared evaluation batches, bitwise-identical to serving each
+//!   request alone;
+//! * a [`ModelFleet`] serves two differently-seeded tenants over ONE
+//!   shared capacity-bounded artifact cache.
 //!
 //!     cargo run --release --example serve -- [dataset] [steps] [batch] [threads]
 
 use igp::prelude::*;
+
+fn bitwise_eq(a: &[f64], b: &[f64]) -> bool {
+    a.len() == b.len() && a.iter().zip(b).all(|(x, y)| x.to_bits() == y.to_bits())
+}
 
 fn main() -> anyhow::Result<()> {
     let args: Vec<String> = std::env::args().skip(1).collect();
@@ -27,22 +40,26 @@ fn main() -> anyhow::Result<()> {
     let (base, arrivals) = ds.replay_chunks(2);
     let (x_new, y_new) = &arrivals[0];
     println!(
-        "{dataset}: train on {} rows, serve, absorb {} arrival rows, serve again\n",
+        "{dataset}: train on {} rows, serve, absorb {} arrival rows under each \
+         staleness policy, serve again\n",
         base.spec.n,
         x_new.rows
     );
 
-    let op = TiledOperator::with_options(&base, 16, 128, TiledOptions { tile: 256, threads });
-    let opts = TrainerOptions {
-        solver: SolverKind::Ap,
-        estimator: EstimatorKind::Pathwise,
-        warm_start: true,
-        lr: 0.05,
-        seed: 17,
-        threads,
-        ..Default::default()
+    let make_trainer = |seed: u64| -> Trainer {
+        let op = TiledOperator::with_options(&base, 16, 128, TiledOptions { tile: 256, threads });
+        let opts = TrainerOptions {
+            solver: SolverKind::Ap,
+            estimator: EstimatorKind::Pathwise,
+            warm_start: true,
+            lr: 0.05,
+            seed,
+            threads,
+            ..Default::default()
+        };
+        Trainer::new(opts, Box::new(op), &base)
     };
-    let mut trainer = Trainer::new(opts, Box::new(op), &base);
+    let mut trainer = make_trainer(17);
     let out = trainer.run(steps)?;
     println!(
         "trained {steps} steps: rmse={:.4} llh={:.4} ({:.1} epochs)",
@@ -51,7 +68,10 @@ fn main() -> anyhow::Result<()> {
 
     // --- serve: the training tail already published the artifact --------
     let solves_after_training = trainer.solve_count();
-    let mut service = PredictionService::new(trainer, ServeOptions { batch, threads });
+    let mut service = PredictionService::new(
+        trainer,
+        ServeOptions { batch, threads, ..Default::default() },
+    );
     let t0 = std::time::Instant::now();
     let m = service.score(&ds.x_test, &ds.y_test)?;
     let secs = t0.elapsed().as_secs_f64();
@@ -68,37 +88,130 @@ fn main() -> anyhow::Result<()> {
         "serving from the cached artifact must not re-solve"
     );
 
-    // --- online arrival: artifact goes stale, refresh is one warm solve -
+    // --- online arrival under each staleness policy ----------------------
+    let (mean_pre, var_pre) = service.predict(&ds.x_test)?;
+    service.set_policy(StalenessPolicy::Refuse);
     service.extend_data(x_new, y_new)?;
-    let solves_before_refresh = service.trainer().solve_count();
-    let (mean, var) = service.predict(&ds.x_test)?;
-    anyhow::ensure!(mean.iter().all(|v| v.is_finite()));
-    anyhow::ensure!(var.iter().all(|v| *v > 0.0));
+
+    // refuse: queries inside the staleness window get a typed rejection
+    let err = service.predict(&ds.x_test).expect_err("policy refuse must reject");
+    println!("policy refuse    : rejected as expected ({err:#})");
+
+    // serve_stale: the retained pre-arrival snapshot answers — bitwise the
+    // pre-arrival answers, and not a single extra solve
+    service.set_policy(StalenessPolicy::ServeStale);
+    let solves = service.trainer().solve_count();
+    let (mean_stale, var_stale) = service.predict(&ds.x_test)?;
     anyhow::ensure!(
-        service.trainer().solve_count() == solves_before_refresh + 1,
+        service.trainer().solve_count() == solves,
+        "serve_stale must not solve"
+    );
+    anyhow::ensure!(
+        bitwise_eq(&mean_stale, &mean_pre) && bitwise_eq(&var_stale, &var_pre),
+        "stale answers must be bitwise the pre-arrival answers"
+    );
+    println!(
+        "policy serve_stale: answered {} rows from the pre-arrival snapshot (0 solves)",
+        mean_stale.len()
+    );
+
+    // refresh_first: exactly one warm solve, then fresh answers
+    service.set_policy(StalenessPolicy::RefreshFirst);
+    let solves = service.trainer().solve_count();
+    let (mean_fresh, var_fresh) = service.predict(&ds.x_test)?;
+    anyhow::ensure!(mean_fresh.iter().all(|v| v.is_finite()));
+    anyhow::ensure!(var_fresh.iter().all(|v| *v > 0.0));
+    anyhow::ensure!(
+        service.trainer().solve_count() == solves + 1,
         "post-arrival refresh must cost exactly one (warm) solve"
     );
     println!(
-        "serve #2 after {}-row arrival: refreshed with one warm solve (n = {})",
-        x_new.rows,
+        "policy refresh_first: one warm solve, fresh answers at n = {}",
         service.trainer().operator().n()
     );
 
-    // --- keep training on the grown dataset, then serve once more -------
+    // --- deadline-aware micro-batching -----------------------------------
+    // three requests, deadlines 3 / 1 / none: the drain answers them
+    // earliest-deadline-first in coalesced batches, each bitwise equal to
+    // its direct answer
+    let rows = ds.x_test.rows;
+    let idx_a: Vec<usize> = (0..rows / 2).collect();
+    let idx_b: Vec<usize> = (rows / 2..rows).collect();
+    let xa = ds.x_test.gather_rows(&idx_a);
+    let xb = ds.x_test.gather_rows(&idx_b);
+    let id_a = service.enqueue_with_deadline(&xa, Some(3))?;
+    let id_b = service.enqueue_with_deadline(&xb, Some(1))?;
+    let id_c = service.enqueue_with_deadline(&xa, None)?;
+    let results = service.drain()?;
+    let order: Vec<u64> = results.iter().map(|r| r.id).collect();
+    anyhow::ensure!(
+        order == vec![id_b, id_a, id_c],
+        "drain must serve earliest-deadline-first (got {order:?})"
+    );
+    anyhow::ensure!(
+        bitwise_eq(&results[1].mean, &mean_fresh[..rows / 2])
+            && bitwise_eq(&results[0].mean, &mean_fresh[rows / 2..]),
+        "queued answers must be bitwise the direct answers"
+    );
+    println!(
+        "deadline drain   : {} requests answered EDF in {} rows total",
+        results.len(),
+        results.iter().map(|r| r.mean.len()).sum::<usize>()
+    );
+
+    // --- keep training on the grown dataset, then serve once more --------
     let out = service.trainer_mut().run(steps)?;
     let m = service.score(&ds.x_test, &ds.y_test)?;
     println!(
-        "serve #3 after {steps} more steps: rmse={:.4} llh={:.4} ({:.1} epochs)",
+        "serve after {steps} more steps: rmse={:.4} llh={:.4} ({:.1} epochs)",
         m.rmse, m.llh, out.total_epochs
     );
     anyhow::ensure!(m.rmse.is_finite() && m.llh.is_finite());
 
     let st = service.stats();
     println!(
-        "\nservice counters: {} rows in {} batches; artifact builds={} hits={}",
-        st.rows_served, st.batches, st.artifact_builds, st.artifact_hits
+        "\nservice counters: {} rows in {} batches; artifact builds={} hits={} \
+         stale_rows={} rejected={}",
+        st.counters.rows_served,
+        st.counters.batches,
+        st.counters.artifact_builds,
+        st.counters.artifact_hits,
+        st.counters.stale_rows_served,
+        st.counters.rejected
     );
-    anyhow::ensure!(st.rows_served as usize == 3 * ds.x_test.rows);
-    anyhow::ensure!(st.artifact_hits >= 2, "serve cycles should hit the artifact cache");
+    println!(
+        "latency: p50={:.3}ms p99={:.3}ms ({:.0} rows/s in backend eval)",
+        st.p50_ns() as f64 * 1e-6,
+        st.p99_ns() as f64 * 1e-6,
+        st.rows_per_sec()
+    );
+    anyhow::ensure!(st.counters.stale_rows_served as usize == rows);
+    anyhow::ensure!(st.counters.rejected == 1, "the refuse policy rejection is counted");
+    anyhow::ensure!(st.counters.artifact_hits >= 2, "serve cycles should hit the artifact cache");
+    anyhow::ensure!(st.latency.count() > 0 && st.p99_ns() >= st.p50_ns());
+
+    // --- two-tenant fleet over one shared artifact cache ------------------
+    let mut fleet = ModelFleet::new(2);
+    for (name, seed) in [("alpha", 17u64), ("beta", 23u64)] {
+        let mut t = make_trainer(seed);
+        t.run(steps)?;
+        fleet.add_tenant(name, t, ServeOptions { batch, threads, ..Default::default() })?;
+    }
+    // beta's deadline is earlier: it drains first despite being added last
+    fleet.enqueue("alpha", &xa, Some(9))?;
+    fleet.enqueue("beta", &xb, Some(1))?;
+    let outcome = fleet.drain();
+    anyhow::ensure!(outcome.refused.is_empty());
+    let served: Vec<&str> = outcome.answered.iter().map(|(n, _)| n.as_str()).collect();
+    anyhow::ensure!(served == vec!["beta", "alpha"], "fleet drain is deadline-ordered");
+    anyhow::ensure!(fleet.cache().len() <= fleet.cache().capacity());
+    println!(
+        "\nfleet: served {:?}; shared cache {}/{} entries, builds={} hits={}",
+        served,
+        fleet.cache().len(),
+        fleet.cache().capacity(),
+        fleet.cache().builds(),
+        fleet.cache().hits()
+    );
     Ok(())
 }

@@ -61,7 +61,7 @@ fn main() {
         for threads in [1usize, 0] {
             let mut service = PredictionService::new(
                 trained(&ds, backend, threads),
-                ServeOptions { batch: 64, threads },
+                ServeOptions { batch: 64, threads, ..Default::default() },
             );
             let label = format!(
                 "serve/{}/{} {} rows",
@@ -76,6 +76,22 @@ fn main() {
             println!("   -> {label}: {:.0} rows/s", rows / r.median());
             if let Some(j) = json.as_mut() {
                 j.push("serve", backend.name(), ds.spec.n, ds.spec.d, threads, &r);
+                // the service's own observability: per-request latency
+                // quantiles + rows/sec across the whole timed traffic
+                let st = service.stats();
+                j.push_with(
+                    "serve-latency",
+                    backend.name(),
+                    ds.spec.n,
+                    ds.spec.d,
+                    threads,
+                    r.median() * 1e9,
+                    &[
+                        ("p50_ns", st.p50_ns() as f64),
+                        ("p99_ns", st.p99_ns() as f64),
+                        ("rows_per_sec", st.rows_per_sec()),
+                    ],
+                );
             }
         }
     }
@@ -84,7 +100,8 @@ fn main() {
     let mut trainer = Some(trained(&ds, BackendKind::Dense, 0));
     for batch in [16, 64, 256, 1024] {
         let t = trainer.take().unwrap();
-        let mut service = PredictionService::new(t, ServeOptions { batch, threads: 0 });
+        let mut service =
+            PredictionService::new(t, ServeOptions { batch, threads: 0, ..Default::default() });
         let label = format!("serve/dense/batch={batch} {} rows", xq.rows);
         let r = b.run(&label, None, || {
             let (mean, _var) = service.predict(&xq).unwrap();
@@ -95,6 +112,43 @@ fn main() {
             j.push(&format!("serve-batch{batch}"), "dense", ds.spec.n, ds.spec.d, 0, &r);
         }
         trainer = Some(service.into_trainer());
+    }
+
+    // queue path: enqueue the workload as deadline-tagged requests and
+    // drain — measures the micro-batching overhead over direct predict
+    {
+        let mut service = PredictionService::new(
+            trained(&ds, BackendKind::Tiled, 0),
+            ServeOptions { batch: 64, threads: 0, ..Default::default() },
+        );
+        let half = xq.rows / 2;
+        let idx_a: Vec<usize> = (0..half).collect();
+        let idx_b: Vec<usize> = (half..xq.rows).collect();
+        let (xa, xb) = (xq.gather_rows(&idx_a), xq.gather_rows(&idx_b));
+        let label = format!("serve/tiled/queue-drain {} rows", xq.rows);
+        let r = b.run(&label, None, || {
+            service.enqueue_with_deadline(&xa, Some(2)).unwrap();
+            service.enqueue_with_deadline(&xb, Some(1)).unwrap();
+            let results = service.drain().unwrap();
+            assert_eq!(results.len(), 2);
+        });
+        println!("   -> {label}: {:.0} rows/s", rows / r.median());
+        if let Some(j) = json.as_mut() {
+            let st = service.stats();
+            j.push_with(
+                "serve-latency",
+                "tiled-queue",
+                ds.spec.n,
+                ds.spec.d,
+                0,
+                r.median() * 1e9,
+                &[
+                    ("p50_ns", st.p50_ns() as f64),
+                    ("p99_ns", st.p99_ns() as f64),
+                    ("rows_per_sec", st.rows_per_sec()),
+                ],
+            );
+        }
     }
 
     if let Some(j) = &json {

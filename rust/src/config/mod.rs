@@ -217,6 +217,16 @@ pub struct RunConfig {
     /// f64 accumulation, iterative refinement for CG, and an f64
     /// residual-drift guard on every solver).  CPU backends only.
     pub precision: String,
+    /// Staleness policy of the serving engine: what happens to queries
+    /// that arrive between an online data arrival and the warm refresh
+    /// solve — refuse | serve_stale | refresh_first.
+    pub serve_policy: String,
+    /// Serving admission cap in queued rows (0 = unbounded): requests
+    /// past the cap are rejected with a typed queue-full error.
+    pub serve_queue_cap: usize,
+    /// Default logical deadline tick attached to enqueued serve requests
+    /// (None = no deadline; smaller ticks drain first).
+    pub serve_deadline: Option<u64>,
 }
 
 impl Default for RunConfig {
@@ -240,6 +250,9 @@ impl Default for RunConfig {
             threads: 0,
             online_chunks: 0,
             precision: "f64".into(),
+            serve_policy: "refresh_first".into(),
+            serve_queue_cap: 0,
+            serve_deadline: None,
         }
     }
 }
@@ -270,6 +283,9 @@ impl RunConfig {
                     "threads" => rc.threads = v.as_int()? as usize,
                     "online_chunks" => rc.online_chunks = v.as_int()? as usize,
                     "precision" => rc.precision = v.as_str()?.to_string(),
+                    "serve_policy" => rc.serve_policy = v.as_str()?.to_string(),
+                    "serve_queue_cap" => rc.serve_queue_cap = v.as_int()? as usize,
+                    "serve_deadline" => rc.serve_deadline = Some(v.as_int()? as u64),
                     other => bail!("unknown run config key '{other}'"),
                 }
             }
@@ -316,6 +332,8 @@ impl RunConfig {
         if prec.is_f32() && self.backend == "xla" {
             bail!("precision = \"f32\" is a CPU-backend feature (dense|tiled); xla artifacts are compiled f64");
         }
+        // single source of truth for staleness-policy names
+        crate::serve::StalenessPolicy::parse(&self.serve_policy)?;
         Ok(())
     }
 }
@@ -449,6 +467,29 @@ mod tests {
         assert!(RunConfig::from_doc(&xla).is_err());
         let xla64 = parse("precision = \"f64\"\nbackend = \"xla\"").unwrap();
         assert!(RunConfig::from_doc(&xla64).is_ok());
+    }
+
+    #[test]
+    fn run_config_serve_keys() {
+        let rc = RunConfig::default();
+        assert_eq!(rc.serve_policy, "refresh_first");
+        assert_eq!(rc.serve_queue_cap, 0);
+        assert_eq!(rc.serve_deadline, None);
+        let doc = parse(
+            r#"
+            serve_policy = "serve_stale"
+            serve_queue_cap = 128
+            serve_deadline = 7
+            "#,
+        )
+        .unwrap();
+        let rc = RunConfig::from_doc(&doc).unwrap();
+        assert_eq!(rc.serve_policy, "serve_stale");
+        assert_eq!(rc.serve_queue_cap, 128);
+        assert_eq!(rc.serve_deadline, Some(7));
+        // policy names go through StalenessPolicy::parse
+        let bad = parse(r#"serve_policy = "drop""#).unwrap();
+        assert!(RunConfig::from_doc(&bad).is_err());
     }
 
     #[test]

@@ -28,7 +28,7 @@ use crate::gp::{metrics, pathwise_variances, Metrics};
 use crate::linalg::Mat;
 use crate::operators::{KernelOperator, Precision};
 use crate::optim::{Adam, SoftplusParams};
-use crate::serve::{ArtifactCache, PosteriorArtifact};
+use crate::serve::{ArtifactCache, PosteriorArtifact, SharedArtifactCache, TenantId};
 use crate::solvers::{
     autotune_lr, make_solver, LinearSolver, PreconditionerCache, SharedPreconditionerCache,
     SolveOptions, SolveReport, SolverKind,
@@ -155,9 +155,14 @@ pub struct Trainer {
     /// evaluation solves.
     precond: SharedPreconditionerCache,
     /// Posterior-snapshot store for the serving path, keyed on
-    /// (hyperparameter bits, n): `evaluate` publishes the state it just
-    /// computed, `posterior_artifact` serves from it without re-solving.
-    artifacts: ArtifactCache,
+    /// (tenant, hyperparameter bits, n): `evaluate` publishes the state it
+    /// just computed, `posterior_artifact` serves from it without
+    /// re-solving.  Private by default; a fleet swaps in its shared cache
+    /// via [`Trainer::set_artifact_cache`].
+    artifacts: SharedArtifactCache,
+    /// This trainer's id inside its artifact cache (0 until a fleet
+    /// assigns one) — entries and counters are attributed per tenant.
+    tenant: TenantId,
     /// Lifetime solver-work accounting (epochs / wall seconds across every
     /// solve, including prediction, evaluation and autotune probes).
     /// `run` reports per-run deltas of these.
@@ -225,7 +230,8 @@ impl Trainer {
             solve_opts,
             sgd_lr_resolved: None,
             precond,
-            artifacts: ArtifactCache::default(),
+            artifacts: std::sync::Arc::new(ArtifactCache::default()),
+            tenant: 0,
             spent_epochs: 0.0,
             spent_solver_secs: 0.0,
             step_count: 0,
@@ -268,6 +274,22 @@ impl Trainer {
     /// The posterior-snapshot cache (diagnostics / serve counters).
     pub fn artifact_cache(&self) -> &ArtifactCache {
         &self.artifacts
+    }
+
+    /// This trainer's tenant id inside its artifact cache (0 = private /
+    /// unassigned).
+    pub fn tenant(&self) -> TenantId {
+        self.tenant
+    }
+
+    /// Join a shared artifact cache under `tenant`: the private cache's
+    /// entries and per-tenant counters migrate (nothing is re-counted as
+    /// a build), so a trainer can be promoted into a fleet mid-life
+    /// without losing its snapshots or its accounting.
+    pub fn set_artifact_cache(&mut self, cache: SharedArtifactCache, tenant: TenantId) {
+        let old = std::mem::replace(&mut self.artifacts, cache);
+        self.tenant = tenant;
+        self.artifacts.absorb(tenant, &old);
     }
 
     /// One metered solve: every epoch and second of solver work anywhere
@@ -444,9 +466,10 @@ impl Trainer {
         self.probes.extend_rows(x_new.rows, &mut chunk_rng);
         self.v_store.append_rows(&Mat::zeros(x_new.rows, self.v_store.cols));
         self.precond.invalidate_all();
-        // every posterior snapshot was taken at the old n: the serving path
-        // must refresh (one warm solve) before answering the next query
-        self.artifacts.invalidate_all();
+        // every posterior snapshot of THIS tenant was taken at the old n:
+        // the serving path must refresh (one warm solve) before answering
+        // the next query; co-tenants of a shared cache are unaffected
+        self.artifacts.invalidate_tenant(self.tenant);
         if self.opts.block_size.is_none() {
             self.solve_opts.block_size = preferred_block(self.op.as_ref());
         }
@@ -662,7 +685,7 @@ impl Trainer {
             wts,
             noise_var: self.op.hp().noise_var(),
         });
-        self.artifacts.insert(self.op.hp(), self.op.n(), art.clone());
+        self.artifacts.insert(self.tenant, self.op.hp(), self.op.n(), art.clone());
         Ok(art)
     }
 
@@ -680,7 +703,7 @@ impl Trainer {
     pub fn posterior_artifact(&mut self) -> Result<Arc<PosteriorArtifact>> {
         let theta = self.params.theta();
         let hp = crate::kernels::Hyperparams::unpack(&theta, self.op.d());
-        if let Some(art) = self.artifacts.get(&hp, self.op.n()) {
+        if let Some(art) = self.artifacts.get(self.tenant, &hp, self.op.n()) {
             return Ok(art);
         }
         self.op.set_hp(&hp);

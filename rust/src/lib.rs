@@ -70,7 +70,10 @@ pub mod prelude {
     pub use crate::operators::{
         BackendKind, DenseOperator, KernelOperator, TiledOperator, TiledOptions, XlaOperator,
     };
-    pub use crate::serve::{PosteriorArtifact, PredictionService, ServeOptions};
+    pub use crate::serve::{
+        ModelFleet, PosteriorArtifact, PredictionService, ServeError, ServeOptions, ServeStats,
+        StalenessPolicy,
+    };
     pub use crate::solvers::{SolveOptions, SolverKind};
     pub use crate::util::rng::Rng;
 }

@@ -7,7 +7,7 @@ use igp::config::RunConfig;
 use igp::coordinator::{Trainer, TrainerOptions};
 use igp::estimator::EstimatorKind;
 use igp::operators::{BackendKind, KernelOperator, Precision, TiledOptions, XlaOperator};
-use igp::serve::{PredictionService, ServeOptions};
+use igp::serve::{ModelFleet, PredictionService, ServeOptions, StalenessPolicy};
 use igp::solvers::SolverKind;
 use igp::util::logging;
 
@@ -62,10 +62,18 @@ USAGE:
               [--steps N] [--lr F] [--max-epochs N] [--seed N]
               [--artifacts DIR] [--out results.csv]
     igp serve [train flags] [--batch N] [--score in.csv [out.csv]]
+              [--policy refuse|serve_stale|refresh_first] [--queue-cap N]
+              [--deadline T] [--tenants N]
               train, then answer queries from the amortised pathwise
               posterior: --score reads query rows (d columns) from in.csv
               and writes mean,var per row (stdout if out.csv is omitted);
-              without --score the held-out split is served and scored
+              without --score the held-out split is served and scored.
+              --deadline routes the query through the request queue with
+              logical deadline tick T; --queue-cap bounds queued rows;
+              --policy picks the staleness policy for online arrivals;
+              --tenants N trains N models (seed, seed+1, ...) and serves
+              them as a fleet over ONE shared artifact cache, draining
+              deadline-staggered requests earliest-deadline-first
     igp exp <id|all> [--out DIR] [--splits N] [--steps N]
               ids: table1 table7 fig1 fig3 fig4 fig5 fig6 fig7 fig9 fig10
     igp list-datasets
@@ -349,16 +357,44 @@ fn cmd_train(args: &[String]) -> Result<()> {
     Ok(())
 }
 
+/// Build and train one CPU-backend trainer from a run config (the serve
+/// paths construct several of these for a fleet — same recipe, different
+/// seed, so tenants are genuinely different models of the same dataset).
+fn build_cpu_trainer(rc: &RunConfig, ds: &igp::data::Dataset, seed: u64) -> Result<Trainer> {
+    let backend = BackendKind::parse(&rc.backend)?;
+    let topts = TiledOptions { tile: rc.tile, threads: rc.threads };
+    let mut op =
+        igp::operators::make_cpu_backend(backend, ds, rc.probes, rc.rff, topts, rc.shards)?;
+    if Precision::parse(&rc.precision)?.is_f32() {
+        op.set_precision(Precision::F32)?;
+    }
+    let mut opts = trainer_options(rc, None)?;
+    opts.seed = seed;
+    Ok(Trainer::new(opts, op, ds))
+}
+
 /// `igp serve`: train, then answer queries from the amortised pathwise
 /// posterior through [`PredictionService`].  `--score in.csv [out.csv]`
 /// scores arbitrary query rows (d columns; one optional header line);
 /// without it the dataset's held-out split is served and scored, so the
 /// command doubles as an end-to-end smoke of the serving path.
+/// `--deadline` routes queries through the request queue; `--tenants N`
+/// serves a fleet over one shared artifact cache.
 fn cmd_serve(args: &[String]) -> Result<()> {
     let mut keys: Vec<&str> = TRAIN_VALUE_KEYS.to_vec();
-    keys.extend(["batch", "score"]);
+    keys.extend(["batch", "score", "policy", "queue-cap", "deadline", "tenants"]);
     let p = cli::Parser::new(args, &keys)?;
-    let rc = run_config_from_args(&p)?;
+    let mut rc = run_config_from_args(&p)?;
+    if let Some(v) = p.get("policy") {
+        rc.serve_policy = v.to_string();
+    }
+    if let Some(v) = p.get_parsed::<usize>("queue-cap")? {
+        rc.serve_queue_cap = v;
+    }
+    if let Some(v) = p.get_parsed::<u64>("deadline")? {
+        rc.serve_deadline = Some(v);
+    }
+    rc.validate()?;
     anyhow::ensure!(
         rc.backend != "xla",
         "serve needs a query-capable pure-Rust backend (dense|tiled): \
@@ -371,7 +407,16 @@ fn cmd_serve(args: &[String]) -> Result<()> {
     );
     let batch = p.get_parsed::<usize>("batch")?.unwrap_or(64);
     anyhow::ensure!(batch > 0, "--batch must be positive");
+    let tenants = p.get_parsed::<usize>("tenants")?.unwrap_or(1);
+    anyhow::ensure!(tenants >= 1, "--tenants must be at least 1");
     let score_in = p.get("score");
+    if tenants > 1 {
+        anyhow::ensure!(
+            score_in.is_none(),
+            "--tenants serves the held-out split fleet-wide; --score is single-tenant"
+        );
+        return cmd_serve_fleet(&rc, tenants, batch);
+    }
     // `--score in.csv out.csv` leaves out.csv as a positional; `--out`
     // also works
     let out_path = p.get("out").or_else(|| p.positional.first().map(String::as_str));
@@ -387,16 +432,12 @@ fn cmd_serve(args: &[String]) -> Result<()> {
     };
 
     let ds = igp::data::generate(&igp::data::spec(&rc.dataset)?);
-    let backend = BackendKind::parse(&rc.backend)?;
-    let topts = TiledOptions { tile: rc.tile, threads: rc.threads };
-    let mut op =
-        igp::operators::make_cpu_backend(backend, &ds, rc.probes, rc.rff, topts, rc.shards)?;
-    if Precision::parse(&rc.precision)?.is_f32() {
-        op.set_precision(Precision::F32)?;
-    }
-    igp::info!("backend: {} (serving batch = {batch})", backend.name());
-    let opts = trainer_options(&rc, None)?;
-    let mut trainer = Trainer::new(opts, op, &ds);
+    igp::info!(
+        "backend: {} (serving batch = {batch}, policy = {})",
+        rc.backend,
+        rc.serve_policy
+    );
+    let mut trainer = build_cpu_trainer(&rc, &ds, rc.seed)?;
     let out = trainer.run(rc.outer_steps)?;
     diag(format!(
         "trained {} steps on {}: rmse={:.4} llh={:.4} ({:.1} epochs, {:.2}s solver)",
@@ -408,8 +449,33 @@ fn cmd_serve(args: &[String]) -> Result<()> {
         out.solver_secs
     ));
 
-    let mut service =
-        PredictionService::new(trainer, ServeOptions { batch, threads: rc.threads });
+    let mut service = PredictionService::new(
+        trainer,
+        ServeOptions {
+            batch,
+            threads: rc.threads,
+            policy: StalenessPolicy::parse(&rc.serve_policy)?,
+            queue_cap: rc.serve_queue_cap,
+        },
+    );
+    // with --deadline the query goes through the request queue (admission
+    // cap, EDF drain) instead of the direct path — bitwise-identical
+    // answers, but the latency histogram measures enqueue→answer
+    let serve_through_queue = |service: &mut PredictionService,
+                               x: &igp::linalg::Mat,
+                               deadline: Option<u64>|
+     -> Result<(Vec<f64>, Vec<f64>)> {
+        match deadline {
+            None => service.predict(x),
+            Some(tick) => {
+                service.enqueue_with_deadline(x, Some(tick))?;
+                let mut results = service.drain()?;
+                anyhow::ensure!(results.len() == 1, "one request in, one result out");
+                let r = results.pop().unwrap();
+                Ok((r.mean, r.var))
+            }
+        }
+    };
     match score_in {
         Some(input) => {
             let x = igp::util::csv::read_matrix(input)?;
@@ -420,7 +486,7 @@ fn cmd_serve(args: &[String]) -> Result<()> {
                 ds.spec.d
             );
             let t0 = std::time::Instant::now();
-            let (mean, var) = service.predict(&x)?;
+            let (mean, var) = serve_through_queue(&mut service, &x, rc.serve_deadline)?;
             let secs = t0.elapsed().as_secs_f64();
             match out_path {
                 Some(path) => {
@@ -446,7 +512,8 @@ fn cmd_serve(args: &[String]) -> Result<()> {
         }
         None => {
             let t0 = std::time::Instant::now();
-            let m = service.score(&ds.x_test, &ds.y_test)?;
+            let (mean, var) = serve_through_queue(&mut service, &ds.x_test, rc.serve_deadline)?;
+            let m = igp::gp::metrics(&mean, &var, &ds.y_test);
             let secs = t0.elapsed().as_secs_f64();
             diag(format!(
                 "test split: rmse={:.4} llh={:.4} ({} rows in {secs:.3}s, {:.0} rows/s)",
@@ -459,8 +526,124 @@ fn cmd_serve(args: &[String]) -> Result<()> {
     }
     let st = service.stats();
     diag(format!(
-        "service: {} rows, {} batches, artifact builds={} hits={}",
-        st.rows_served, st.batches, st.artifact_builds, st.artifact_hits
+        "service: {} rows, {} batches, artifact builds={} hits={} evictions={}",
+        st.counters.rows_served,
+        st.counters.batches,
+        st.counters.artifact_builds,
+        st.counters.artifact_hits,
+        st.counters.artifact_evictions
     ));
+    diag(format!(
+        "latency: p50={:.3}ms p99={:.3}ms ({:.0} rows/s in backend eval)",
+        st.p50_ns() as f64 * 1e-6,
+        st.p99_ns() as f64 * 1e-6,
+        st.rows_per_sec()
+    ));
+    Ok(())
+}
+
+/// `igp serve --tenants N`: a multi-tenant fleet over one shared artifact
+/// cache.  Each tenant is the same training recipe at seed, seed+1, ... —
+/// genuinely different models — and the held-out split is partitioned
+/// across them with staggered deadline ticks (later tenants get earlier
+/// deadlines), so the drain demonstrably runs earliest-deadline-first.
+fn cmd_serve_fleet(rc: &RunConfig, tenants: usize, batch: usize) -> Result<()> {
+    let ds = igp::data::generate(&igp::data::spec(&rc.dataset)?);
+    anyhow::ensure!(
+        ds.x_test.rows >= tenants,
+        "--tenants {tenants} exceeds the {} held-out rows",
+        ds.x_test.rows
+    );
+    let serve_opts = ServeOptions {
+        batch,
+        threads: rc.threads,
+        policy: StalenessPolicy::parse(&rc.serve_policy)?,
+        queue_cap: rc.serve_queue_cap,
+    };
+    // the shared cache holds one artifact per tenant: the point of the
+    // fleet is bounded memory, not a cache big enough to never evict
+    let mut fleet = ModelFleet::new(tenants);
+    for i in 0..tenants {
+        let name = format!("tenant{i}");
+        let mut trainer = build_cpu_trainer(rc, &ds, rc.seed + i as u64)?;
+        let out = trainer.run(rc.outer_steps)?;
+        println!(
+            "{name}: trained {} steps (seed {}): rmse={:.4} llh={:.4}",
+            rc.outer_steps,
+            rc.seed + i as u64,
+            out.final_metrics.rmse,
+            out.final_metrics.llh
+        );
+        fleet.add_tenant(&name, trainer, serve_opts.clone())?;
+    }
+
+    // partition the held-out split across tenants; tenant i's request gets
+    // deadline tick (tenants - i), so the LAST-added tenant drains FIRST
+    let rows = ds.x_test.rows;
+    let mut bounds = Vec::with_capacity(tenants + 1);
+    for i in 0..=tenants {
+        bounds.push(i * rows / tenants);
+    }
+    for i in 0..tenants {
+        let idx: Vec<usize> = (bounds[i]..bounds[i + 1]).collect();
+        let slice = ds.x_test.gather_rows(&idx);
+        fleet.enqueue(&format!("tenant{i}"), &slice, Some((tenants - i) as u64))?;
+    }
+    println!("fleet: {} queued rows across {tenants} tenants", fleet.pending_rows());
+
+    let t0 = std::time::Instant::now();
+    let outcome = fleet.drain();
+    let secs = t0.elapsed().as_secs_f64();
+    for (name, err) in &outcome.refused {
+        println!("{name}: refused ({err})");
+    }
+    println!(
+        "drained {} requests in {secs:.3}s, service order: {}",
+        outcome.answered.len(),
+        outcome
+            .answered
+            .iter()
+            .map(|(n, _)| n.as_str())
+            .collect::<Vec<_>>()
+            .join(", ")
+    );
+    for i in 0..tenants {
+        let name = format!("tenant{i}");
+        let answers: Vec<&igp::serve::RequestResult> = outcome
+            .answered
+            .iter()
+            .filter(|(n, _)| *n == name)
+            .map(|(_, r)| r)
+            .collect();
+        let (mut mean, mut var) = (Vec::new(), Vec::new());
+        for r in &answers {
+            mean.extend_from_slice(&r.mean);
+            var.extend_from_slice(&r.var);
+        }
+        let y = &ds.y_test[bounds[i]..bounds[i + 1]];
+        let m = igp::gp::metrics(&mean, &var, y);
+        let st = fleet.stats(&name).expect("tenant exists");
+        println!(
+            "{name}: {} rows rmse={:.4} llh={:.4} | p50={:.3}ms p99={:.3}ms | \
+             builds={} hits={} evictions={}",
+            st.counters.rows_served,
+            m.rmse,
+            m.llh,
+            st.p50_ns() as f64 * 1e-6,
+            st.p99_ns() as f64 * 1e-6,
+            st.counters.artifact_builds,
+            st.counters.artifact_hits,
+            st.counters.artifact_evictions
+        );
+    }
+    let cache = fleet.cache();
+    println!(
+        "shared cache: {}/{} entries, builds={} hits={} evictions={}",
+        cache.len(),
+        cache.capacity(),
+        cache.builds(),
+        cache.hits(),
+        cache.evictions()
+    );
     Ok(())
 }

@@ -276,9 +276,14 @@ pub trait KernelOperator {
     /// evaluate each block through [`KernelOperator::predict_at`] and
     /// concatenate in block order (an order-canonical reduction, so the
     /// result is bitwise-identical for every batch size and thread count
-    /// by the per-row-independence contract above).  The default runs the
-    /// blocks serially; the pure-Rust backends override with the threaded
-    /// sweep ([`predict_batched_threaded`]).
+    /// by the per-row-independence contract above).  The third return is
+    /// the number of evaluation blocks actually executed — counted here at
+    /// the execution site, because backends that coalesce the whole query
+    /// into one internally-parallel pass (tiled, sharded) run 1 block
+    /// where the generic fan-out runs ceil(rows / batch); the serving
+    /// stats report this, not a formula.  The default runs the blocks
+    /// serially; the pure-Rust backends override with the threaded sweep
+    /// ([`predict_batched_threaded`]).
     fn predict_batched(
         &self,
         x_query: &Mat,
@@ -288,11 +293,12 @@ pub trait KernelOperator {
         zhat: &Mat,
         omega0: &Mat,
         wts: &Mat,
-    ) -> anyhow::Result<(Vec<f64>, Mat)> {
+    ) -> anyhow::Result<(Vec<f64>, Mat, u64)> {
         let b = batch.max(1);
         let s = wts.cols;
         let mut mean = Vec::with_capacity(x_query.rows);
         let mut samples = Mat::zeros(0, s);
+        let mut blocks = 0u64;
         let mut r0 = 0;
         while r0 < x_query.rows {
             let r1 = (r0 + b).min(x_query.rows);
@@ -300,9 +306,10 @@ pub trait KernelOperator {
             let (m, smp) = self.predict_at(&x_query.gather_rows(&idx), vy, zhat, omega0, wts)?;
             mean.extend_from_slice(&m);
             samples.append_rows(&smp);
+            blocks += 1;
             r0 = r1;
         }
-        Ok((mean, samples))
+        Ok((mean, samples, blocks))
     }
 
     /// Exact MLL value+gradient if the backend has an exact path.
@@ -359,12 +366,12 @@ pub(crate) fn predict_batched_threaded<T: KernelOperator + Sync>(
     zhat: &Mat,
     omega0: &Mat,
     wts: &Mat,
-) -> anyhow::Result<(Vec<f64>, Mat)> {
+) -> anyhow::Result<(Vec<f64>, Mat, u64)> {
     let b = batch.max(1);
     let rows = x_query.rows;
     let s = wts.cols;
     if rows == 0 {
-        return Ok((Vec::new(), Mat::zeros(0, s)));
+        return Ok((Vec::new(), Mat::zeros(0, s), 0));
     }
     let nb = (rows + b - 1) / b;
     let t = if nb <= 1 || rows < SERVE_PAR_MIN_ROWS {
@@ -385,7 +392,7 @@ pub(crate) fn predict_batched_threaded<T: KernelOperator + Sync>(
         mean.extend_from_slice(&m);
         samples.append_rows(&smp);
     }
-    Ok((mean, samples))
+    Ok((mean, samples, nb as u64))
 }
 
 /// Shared Rust implementation of the RFF feature map (mirrors
@@ -791,7 +798,7 @@ impl KernelOperator for DenseOperator {
         zhat: &Mat,
         omega0: &Mat,
         wts: &Mat,
-    ) -> anyhow::Result<(Vec<f64>, Mat)> {
+    ) -> anyhow::Result<(Vec<f64>, Mat, u64)> {
         predict_batched_threaded(self, x_query, batch, threads, vy, zhat, omega0, wts)
     }
 
@@ -978,9 +985,11 @@ mod tests {
         let (m_once, s_once) = o.predict_at(&xq, &vy, &zhat, &omega0, &wts).unwrap();
         for batch in [1, 5, 16, 64] {
             for threads in [0, 1, 3] {
-                let (m_b, s_b) = o
+                let (m_b, s_b, blocks) = o
                     .predict_batched(&xq, batch, threads, &vy, &zhat, &omega0, &wts)
                     .unwrap();
+                // dense fans out into ceil(rows / batch) executed blocks
+                assert_eq!(blocks, ((xq.rows + batch - 1) / batch) as u64);
                 assert!(
                     m_once.iter().zip(&m_b).all(|(a, b)| a.to_bits() == b.to_bits()),
                     "batch={batch} threads={threads}: mean differs"

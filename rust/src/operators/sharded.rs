@@ -677,7 +677,7 @@ impl KernelOperator for ShardedOperator {
 
     /// `predict_at` already parallelises over query rows internally;
     /// forwarding the whole query produces identical bits (same reasoning
-    /// as the tiled backend).
+    /// as the tiled backend) and counts as ONE executed evaluation block.
     fn predict_batched(
         &self,
         x_query: &Mat,
@@ -687,8 +687,10 @@ impl KernelOperator for ShardedOperator {
         zhat: &Mat,
         omega0: &Mat,
         wts: &Mat,
-    ) -> anyhow::Result<(Vec<f64>, Mat)> {
-        self.predict_at(x_query, vy, zhat, omega0, wts)
+    ) -> anyhow::Result<(Vec<f64>, Mat, u64)> {
+        let blocks = if x_query.rows == 0 { 0 } else { 1 };
+        let (mean, samples) = self.predict_at(x_query, vy, zhat, omega0, wts)?;
+        Ok((mean, samples, blocks))
     }
 
     /// Exact MLL via the O(n³) Cholesky baseline on the full X (only sane

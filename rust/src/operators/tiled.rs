@@ -550,7 +550,9 @@ impl KernelOperator for TiledOperator {
     /// rows on its own worker pool (`parallel_row_blocks` in `tile`-row
     /// blocks), so the generic block fan-out would only nest thread pools
     /// and copy each block.  Results are per-row independent, so
-    /// forwarding the whole query produces identical bits.
+    /// forwarding the whole query produces identical bits — and counts as
+    /// ONE executed evaluation block, which is what the serving stats
+    /// report.
     fn predict_batched(
         &self,
         x_query: &Mat,
@@ -560,8 +562,10 @@ impl KernelOperator for TiledOperator {
         zhat: &Mat,
         omega0: &Mat,
         wts: &Mat,
-    ) -> anyhow::Result<(Vec<f64>, Mat)> {
-        self.predict_at(x_query, vy, zhat, omega0, wts)
+    ) -> anyhow::Result<(Vec<f64>, Mat, u64)> {
+        let blocks = if x_query.rows == 0 { 0 } else { 1 };
+        let (mean, samples) = self.predict_at(x_query, vy, zhat, omega0, wts)?;
+        Ok((mean, samples, blocks))
     }
 
     /// Exact MLL via the O(n³) Cholesky baseline — only sane at small n,
@@ -721,8 +725,10 @@ mod tests {
             for (i, (a, b)) in s1.data.iter().zip(&s2.data).enumerate() {
                 assert_eq!(a.to_bits(), b.to_bits(), "tile={tile} sample {i}: {a} vs {b}");
             }
-            // batched sweep keeps the bits too
-            let (mb, sb) = tiled.predict_batched(&xq, 8, threads, &vy, &zhat, &omega0, &wts).unwrap();
+            // batched sweep keeps the bits too, coalesced into ONE block
+            let (mb, sb, blocks) =
+                tiled.predict_batched(&xq, 8, threads, &vy, &zhat, &omega0, &wts).unwrap();
+            assert_eq!(blocks, 1, "tiled coalesces the query into one executed block");
             assert!(m1.iter().zip(&mb).all(|(a, b)| a.to_bits() == b.to_bits()));
             assert!(s1.data.iter().zip(&sb.data).all(|(a, b)| a.to_bits() == b.to_bits()));
         }

@@ -1,0 +1,82 @@
+//! The immutable unit of amortised serving: a posterior snapshot.
+
+use crate::linalg::Mat;
+
+/// Immutable snapshot of the amortised pathwise posterior at one
+/// (hyperparameter, dataset-size) point: everything
+/// [`crate::operators::KernelOperator::predict_at`] needs to answer
+/// arbitrary queries without touching the solver again.
+#[derive(Clone, Debug)]
+pub struct PosteriorArtifact {
+    /// Packed hyperparameters the snapshot was taken at ([ell.., sigf, sigma]).
+    pub theta: Vec<f64>,
+    /// Training rows at snapshot time (staleness detection, with `theta`).
+    pub n: usize,
+    /// Solved mean weights v_y = H⁻¹ y.
+    pub vy: Vec<f64>,
+    /// Pathwise-conditioning probes ẑ = H⁻¹ ξ  [n, s].
+    pub zhat: Mat,
+    /// RFF base frequencies of the posterior samples [d, m].
+    pub omega0: Mat,
+    /// RFF weights [2m, s].
+    pub wts: Mat,
+    /// Observation noise variance σ² at `theta` (added to sample variances).
+    pub noise_var: f64,
+}
+
+impl PosteriorArtifact {
+    /// The snapshot re-expressed against a *grown* training set of
+    /// `n_new >= n` rows: the solved weights for rows that arrived after
+    /// the snapshot are zero, so every kernel-row contraction picks up
+    /// only exact `+ k·0.0` terms — the served values are numerically the
+    /// pre-arrival answers.  This is what the `serve_stale` policy
+    /// evaluates while a refresh is being avoided; `n` keeps the
+    /// *snapshot* size so staleness stays visible.
+    pub fn zero_padded(&self, n_new: usize) -> PosteriorArtifact {
+        assert!(
+            n_new >= self.vy.len(),
+            "zero_padded: cannot shrink a snapshot ({} -> {n_new} rows)",
+            self.vy.len()
+        );
+        let mut vy = self.vy.clone();
+        vy.resize(n_new, 0.0);
+        let mut zhat = self.zhat.clone();
+        zhat.append_rows(&Mat::zeros(n_new - self.zhat.rows, self.zhat.cols));
+        PosteriorArtifact {
+            theta: self.theta.clone(),
+            n: self.n,
+            vy,
+            zhat,
+            omega0: self.omega0.clone(),
+            wts: self.wts.clone(),
+            noise_var: self.noise_var,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn zero_padding_extends_rows_and_keeps_the_snapshot_n() {
+        let art = PosteriorArtifact {
+            theta: vec![1.0, 2.0],
+            n: 3,
+            vy: vec![0.5, -0.25, 4.0],
+            zhat: Mat::from_fn(3, 2, |i, j| (i * 2 + j) as f64),
+            omega0: Mat::zeros(2, 4),
+            wts: Mat::zeros(8, 2),
+            noise_var: 0.09,
+        };
+        let padded = art.zero_padded(5);
+        assert_eq!(padded.n, 3, "snapshot n must stay the pre-arrival size");
+        assert_eq!(padded.vy, vec![0.5, -0.25, 4.0, 0.0, 0.0]);
+        assert_eq!(padded.zhat.rows, 5);
+        assert_eq!(&padded.zhat.data[..6], &art.zhat.data[..]);
+        assert!(padded.zhat.data[6..].iter().all(|v| *v == 0.0));
+        // padding to the same size is the identity
+        let same = art.zero_padded(3);
+        assert_eq!(same.vy, art.vy);
+    }
+}

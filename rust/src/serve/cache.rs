@@ -1,0 +1,363 @@
+//! Tenant-aware LRU store of posterior snapshots.
+//!
+//! One shared, capacity-bounded cache backs an entire model fleet: keys
+//! carry a [`TenantId`] alongside the exact hyperparameter bits and the
+//! training size n, so N tenants cost one LRU instead of N, and the
+//! per-tenant build / hit / eviction counters let each tenant's service
+//! report what the shared store did on its behalf.  Mirrors
+//! [`crate::solvers::PreconditionerCache`]: interior-mutable behind a
+//! `Mutex` so diagnostics read counters through `&self`, and shared
+//! across owners as an `Arc` ([`SharedArtifactCache`]).
+
+use std::collections::BTreeMap;
+use std::sync::{Arc, Mutex};
+
+use crate::kernels::Hyperparams;
+
+use super::artifact::PosteriorArtifact;
+
+/// Identifies one tenant (model / hyperparameter version) inside a shared
+/// cache.  A trainer outside any fleet uses tenant 0 on its private cache.
+pub type TenantId = u64;
+
+/// Shared handle: the coordinator and the fleet both hold one.
+pub type SharedArtifactCache = Arc<ArtifactCache>;
+
+/// Cache key: tenant plus the exact f64 bit patterns of the packed
+/// hyperparameters plus the training size n — the same staleness notion as
+/// the preconditioner cache: the outer loop revisits the *same* theta
+/// several times per serve/refresh cycle, any genuine hyperparameter step
+/// changes the bits, and online data arrival grows n at unchanged
+/// hyperparameters.
+type ArtifactKey = (TenantId, Vec<u64>, usize);
+
+fn artifact_key(tenant: TenantId, hp: &Hyperparams, n: usize) -> ArtifactKey {
+    (tenant, hp.pack().iter().map(|x| x.to_bits()).collect(), n)
+}
+
+/// Per-tenant accounting of what the shared store did on a tenant's
+/// behalf.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct TenantCacheStats {
+    /// Snapshots built (published) for this tenant.
+    pub builds: u64,
+    /// Cache hits served to this tenant.
+    pub hits: u64,
+    /// This tenant's entries evicted by LRU pressure (from any tenant).
+    pub evictions: u64,
+}
+
+#[derive(Default)]
+struct ArtifactInner {
+    /// Small LRU list (linear scan; capacity is single digits).
+    entries: Vec<(ArtifactKey, Arc<PosteriorArtifact>)>,
+    builds: u64,
+    hits: u64,
+    evictions: u64,
+    per_tenant: BTreeMap<TenantId, TenantCacheStats>,
+}
+
+impl ArtifactInner {
+    fn tenant(&mut self, t: TenantId) -> &mut TenantCacheStats {
+        self.per_tenant.entry(t).or_default()
+    }
+
+    /// Evict the LRU entry, charging the eviction to the entry's owner.
+    fn evict_front(&mut self) {
+        let (key, _) = self.entries.remove(0);
+        self.evictions += 1;
+        self.tenant(key.0).evictions += 1;
+    }
+}
+
+/// Store of posterior snapshots: LRU over (tenant, hyperparameter bits,
+/// n), interior-mutable so diagnostics can read counters behind `&self`.
+pub struct ArtifactCache {
+    inner: Mutex<ArtifactInner>,
+    cap: usize,
+}
+
+impl Default for ArtifactCache {
+    /// Two snapshots: a `PosteriorArtifact` holds O(n·s) state (`zhat`
+    /// plus `vy`), and every evaluation publishes one, so a training-only
+    /// run at large n must not pin a deep history it will never read.
+    /// Serving fetches the *latest* theta; one extra slot covers the
+    /// serve → tweak → serve-back cycle.  Fleets size the shared cache
+    /// explicitly ([`ArtifactCache::with_capacity`]).
+    fn default() -> Self {
+        ArtifactCache::with_capacity(2)
+    }
+}
+
+impl std::fmt::Debug for ArtifactCache {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        let inner = self.inner.lock().unwrap();
+        f.debug_struct("ArtifactCache")
+            .field("entries", &inner.entries.len())
+            .field("builds", &inner.builds)
+            .field("hits", &inner.hits)
+            .field("evictions", &inner.evictions)
+            .finish()
+    }
+}
+
+impl ArtifactCache {
+    /// `cap` snapshots are retained (LRU eviction), across all tenants.
+    pub fn with_capacity(cap: usize) -> Self {
+        ArtifactCache { inner: Mutex::new(ArtifactInner::default()), cap: cap.max(1) }
+    }
+
+    /// A shareable handle (fleet construction / coordinator injection).
+    pub fn shared_with_capacity(cap: usize) -> SharedArtifactCache {
+        Arc::new(ArtifactCache::with_capacity(cap))
+    }
+
+    /// The cached snapshot for (tenant, hp, n), if any (counts a hit and
+    /// refreshes its LRU position).
+    pub fn get(
+        &self,
+        tenant: TenantId,
+        hp: &Hyperparams,
+        n: usize,
+    ) -> Option<Arc<PosteriorArtifact>> {
+        let key = artifact_key(tenant, hp, n);
+        let mut inner = self.inner.lock().unwrap();
+        let pos = inner.entries.iter().position(|(k, _)| *k == key)?;
+        inner.hits += 1;
+        inner.tenant(tenant).hits += 1;
+        let entry = inner.entries.remove(pos);
+        let art = entry.1.clone();
+        inner.entries.push(entry); // LRU: move to back
+        Some(art)
+    }
+
+    /// Publish a freshly built snapshot (replacing any entry with the same
+    /// key — the new one was built from newer solver state).  A full cache
+    /// evicts its LRU entry, charged to the evicted entry's tenant.
+    pub fn insert(
+        &self,
+        tenant: TenantId,
+        hp: &Hyperparams,
+        n: usize,
+        art: Arc<PosteriorArtifact>,
+    ) {
+        let key = artifact_key(tenant, hp, n);
+        let mut inner = self.inner.lock().unwrap();
+        if let Some(pos) = inner.entries.iter().position(|(k, _)| *k == key) {
+            inner.entries.remove(pos);
+        } else if inner.entries.len() >= self.cap {
+            inner.evict_front();
+        }
+        inner.builds += 1;
+        inner.tenant(tenant).builds += 1;
+        inner.entries.push((key, art));
+    }
+
+    /// Drop one tenant's snapshots.  Called on that tenant's online data
+    /// arrival: its entries were built for the old n (the n in the key
+    /// already prevents wrong reuse; invalidation frees the memory), and
+    /// the other tenants' snapshots must survive.  Counters are preserved.
+    pub fn invalidate_tenant(&self, tenant: TenantId) {
+        self.inner.lock().unwrap().entries.retain(|(k, _)| k.0 != tenant);
+    }
+
+    /// Drop every snapshot, every tenant.  Counters are preserved.
+    pub fn invalidate_all(&self) {
+        self.inner.lock().unwrap().entries.clear();
+    }
+
+    /// Adopt another cache's entries and counters under `tenant` — the
+    /// migration performed when a trainer with a private cache joins a
+    /// fleet.  Entries are re-keyed to `tenant` and inserted respecting
+    /// this cache's capacity (LRU order preserved, evictions charged as
+    /// usual); build/hit counters transfer so "artifacts built over the
+    /// trainer's life" stays a lifetime number, and are *not* re-counted
+    /// as fresh builds.
+    pub fn absorb(&self, tenant: TenantId, other: &ArtifactCache) {
+        let mut src = other.inner.lock().unwrap();
+        let entries = std::mem::take(&mut src.entries);
+        let (builds, hits) = (src.builds, src.hits);
+        src.builds = 0;
+        src.hits = 0;
+        drop(src);
+        let mut inner = self.inner.lock().unwrap();
+        inner.builds += builds;
+        inner.hits += hits;
+        let t = inner.tenant(tenant);
+        t.builds += builds;
+        t.hits += hits;
+        for ((_, bits, n), art) in entries {
+            let key = (tenant, bits, n);
+            if let Some(pos) = inner.entries.iter().position(|(k, _)| *k == key) {
+                inner.entries.remove(pos);
+            } else if inner.entries.len() >= self.cap {
+                inner.evict_front();
+            }
+            inner.entries.push((key, art));
+        }
+    }
+
+    /// Snapshots built so far, all tenants (telemetry / regression tests).
+    pub fn builds(&self) -> u64 {
+        self.inner.lock().unwrap().builds
+    }
+
+    /// Cache hits so far, all tenants.
+    pub fn hits(&self) -> u64 {
+        self.inner.lock().unwrap().hits
+    }
+
+    /// LRU evictions so far, all tenants.
+    pub fn evictions(&self) -> u64 {
+        self.inner.lock().unwrap().evictions
+    }
+
+    /// One tenant's build / hit / eviction counters.
+    pub fn tenant_stats(&self, tenant: TenantId) -> TenantCacheStats {
+        self.inner
+            .lock()
+            .unwrap()
+            .per_tenant
+            .get(&tenant)
+            .copied()
+            .unwrap_or_default()
+    }
+
+    /// Live entries, all tenants.
+    pub fn len(&self) -> usize {
+        self.inner.lock().unwrap().entries.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Live entries belonging to `tenant`.
+    pub fn len_for(&self, tenant: TenantId) -> usize {
+        self.inner
+            .lock()
+            .unwrap()
+            .entries
+            .iter()
+            .filter(|(k, _)| k.0 == tenant)
+            .count()
+    }
+
+    /// The capacity bound (entries never exceed it).
+    pub fn capacity(&self) -> usize {
+        self.cap
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::Mat;
+
+    fn dummy_artifact(tag: f64) -> Arc<PosteriorArtifact> {
+        Arc::new(PosteriorArtifact {
+            theta: vec![tag],
+            n: 1,
+            vy: vec![tag],
+            zhat: Mat::zeros(1, 1),
+            omega0: Mat::zeros(1, 1),
+            wts: Mat::zeros(2, 1),
+            noise_var: 0.0,
+        })
+    }
+
+    fn hp(sigma: f64) -> Hyperparams {
+        Hyperparams { ell: vec![1.0, 2.0], sigf: 1.0, sigma }
+    }
+
+    #[test]
+    fn cache_hits_on_same_key_and_misses_on_changes() {
+        let cache = ArtifactCache::default();
+        assert!(cache.get(0, &hp(0.3), 10).is_none());
+        cache.insert(0, &hp(0.3), 10, dummy_artifact(1.0));
+        assert_eq!(cache.builds(), 1);
+        let a = cache.get(0, &hp(0.3), 10).expect("hit");
+        assert_eq!(a.theta, vec![1.0]);
+        assert_eq!(cache.hits(), 1);
+        // tenant, hyperparameter bits and n are all part of the key
+        assert!(cache.get(1, &hp(0.3), 10).is_none());
+        assert!(cache.get(0, &hp(0.31), 10).is_none());
+        assert!(cache.get(0, &hp(0.3), 11).is_none());
+    }
+
+    #[test]
+    fn cache_replaces_same_key_and_evicts_lru() {
+        let cache = ArtifactCache::with_capacity(2);
+        cache.insert(0, &hp(0.1), 5, dummy_artifact(1.0));
+        cache.insert(0, &hp(0.1), 5, dummy_artifact(2.0)); // replace, not grow
+        assert_eq!(cache.len(), 1);
+        assert_eq!(cache.get(0, &hp(0.1), 5).unwrap().theta, vec![2.0]);
+        cache.insert(0, &hp(0.2), 5, dummy_artifact(3.0));
+        // touch 0.1 so 0.2 becomes the LRU victim of the next insert
+        let _ = cache.get(0, &hp(0.1), 5);
+        cache.insert(0, &hp(0.3), 5, dummy_artifact(4.0));
+        assert!(cache.get(0, &hp(0.2), 5).is_none());
+        assert!(cache.get(0, &hp(0.1), 5).is_some());
+        assert!(cache.get(0, &hp(0.3), 5).is_some());
+        assert_eq!(cache.evictions(), 1);
+    }
+
+    #[test]
+    fn cache_invalidate_keeps_counters() {
+        let cache = ArtifactCache::default();
+        cache.insert(0, &hp(0.1), 5, dummy_artifact(1.0));
+        let _ = cache.get(0, &hp(0.1), 5);
+        cache.invalidate_all();
+        assert!(cache.is_empty());
+        assert_eq!(cache.builds(), 1);
+        assert_eq!(cache.hits(), 1);
+        assert!(cache.get(0, &hp(0.1), 5).is_none());
+    }
+
+    #[test]
+    fn invalidate_tenant_spares_the_other_tenants() {
+        let cache = ArtifactCache::with_capacity(4);
+        cache.insert(1, &hp(0.1), 5, dummy_artifact(1.0));
+        cache.insert(2, &hp(0.1), 5, dummy_artifact(2.0));
+        cache.insert(2, &hp(0.2), 5, dummy_artifact(3.0));
+        cache.invalidate_tenant(2);
+        assert_eq!(cache.len(), 1);
+        assert!(cache.get(1, &hp(0.1), 5).is_some(), "tenant 1 must survive");
+        assert!(cache.get(2, &hp(0.1), 5).is_none());
+    }
+
+    #[test]
+    fn per_tenant_counters_attribute_evictions_to_the_victim() {
+        let cache = ArtifactCache::with_capacity(2);
+        cache.insert(1, &hp(0.1), 5, dummy_artifact(1.0));
+        cache.insert(2, &hp(0.2), 5, dummy_artifact(2.0));
+        let _ = cache.get(2, &hp(0.2), 5);
+        // tenant 3's insert evicts tenant 1's LRU entry
+        cache.insert(3, &hp(0.3), 5, dummy_artifact(3.0));
+        assert_eq!(cache.tenant_stats(1), TenantCacheStats { builds: 1, hits: 0, evictions: 1 });
+        assert_eq!(cache.tenant_stats(2), TenantCacheStats { builds: 1, hits: 1, evictions: 0 });
+        assert_eq!(cache.tenant_stats(3), TenantCacheStats { builds: 1, hits: 0, evictions: 0 });
+        assert_eq!(cache.builds(), 3);
+        assert_eq!(cache.evictions(), 1);
+        assert_eq!(cache.len_for(1), 0);
+        assert_eq!(cache.len_for(2), 1);
+    }
+
+    #[test]
+    fn absorb_migrates_entries_and_counters_without_recounting_builds() {
+        let private = ArtifactCache::with_capacity(2);
+        private.insert(0, &hp(0.1), 5, dummy_artifact(1.0));
+        let _ = private.get(0, &hp(0.1), 5);
+        let shared = ArtifactCache::shared_with_capacity(3);
+        shared.insert(1, &hp(0.9), 9, dummy_artifact(9.0));
+        shared.absorb(7, &private);
+        // the entry moved under tenant 7 and serves without a rebuild
+        assert!(shared.get(7, &hp(0.1), 5).is_some());
+        assert!(private.is_empty(), "absorb must drain the source");
+        // counters transferred, not re-counted: 1 migrated + 1 native build
+        assert_eq!(shared.builds(), 2);
+        assert_eq!(shared.tenant_stats(7).builds, 1);
+        assert_eq!(shared.tenant_stats(7).hits, 2); // 1 migrated + the get above
+        assert_eq!(private.builds(), 0);
+    }
+}

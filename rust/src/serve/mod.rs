@@ -1,180 +1,95 @@
 //! Prediction serving over amortised pathwise posteriors: the subsystem
-//! that turns a trained [`Trainer`] into a query-answering engine.
+//! that turns trained [`Trainer`]s into a traffic-facing query engine.
 //!
 //! The paper's pathwise estimator exists to *amortise prediction*
 //! (improvement i): the solved probe columns are simultaneously the
 //! gradient probes and the pathwise-conditioning terms of eq. 16, so once
 //! training has solved its batch, answering a query is one O(n·d) kernel
-//! row plus an RFF feature row — no further linear solves.  Three pieces
-//! make that a serving path instead of a test-split-only evaluation:
+//! row plus an RFF feature row — no further linear solves.  The layers
+//! that make that a serving engine instead of a test-split evaluation:
 //!
-//! * [`PosteriorArtifact`] — an immutable snapshot of the amortised state
-//!   (solved `v_y`, `zhat`, `omega0`, `wts`, hyperparameters), exported by
-//!   [`Trainer::posterior_artifact`];
-//! * [`ArtifactCache`] — a small LRU keyed on (hyperparameter bits, n),
-//!   mirroring the preconditioner cache, so repeated serve/refresh cycles
-//!   at unchanged hyperparameters never re-solve;
-//! * [`PredictionService`] — request batching (queries accumulate into
-//!   blocks of a configurable batch size), threaded batched evaluation on
-//!   the deterministic strided pool with order-canonical reductions
-//!   (bitwise-identical for every thread count; serial fallback for small
-//!   batches), throughput counters, and staleness handling: an online
-//!   arrival ([`Trainer::extend_data`]) invalidates the artifact, and the
-//!   next query refreshes it from the warm-carried solution store — one
-//!   warm solve, not a cold restart.
+//! * [`artifact`] — [`PosteriorArtifact`], the immutable snapshot of the
+//!   amortised state, exported by [`Trainer::posterior_artifact`];
+//! * [`cache`] — the tenant-aware LRU ([`ArtifactCache`]): one shared,
+//!   capacity-bounded store backs a whole fleet, with per-tenant
+//!   build/hit/eviction accounting;
+//! * [`queue`] — [`RequestQueue`]: admission-capped accumulation of
+//!   requests with optional logical deadline ticks, drained
+//!   earliest-deadline-first;
+//! * [`policy`] — [`StalenessPolicy`] (`refuse | serve_stale |
+//!   refresh_first`) decides what happens to queries that arrive between
+//!   an online arrival and the one warm refresh solve, and [`ServeError`]
+//!   is the typed error surface;
+//! * [`stats`] — [`ServeStats`]: deterministic counters plus a
+//!   fixed-bucket enqueue→answer latency histogram (p50/p99, rows/sec);
+//! * [`tenant`] — [`ModelFleet`]: many named tenants over one shared
+//!   cache;
+//! * [`PredictionService`] (here) — the per-tenant engine tying them
+//!   together: deadline-aware micro-batching over the deterministic
+//!   strided pool with order-canonical reductions, so queue-served
+//!   answers are **bitwise-identical** to serving each request alone for
+//!   every batch size, thread count and interleaving.
 //!
 //! Acceptance bar (after Maddox et al. 2021, "When are Iterative GPs
 //! Reliably Accurate?"): the serving path is parity-tested against the
 //! evaluate path — `tests/serve_parity.rs` demands bitwise-equal
-//! mean/variance on the stored test split, tiled == dense bitwise at
-//! arbitrary query points, and thread-count invariance.
+//! mean/variance on the stored test split, and `tests/serve_fleet.rs`
+//! extends the bar across interleaved multi-tenant traffic.
 
-use std::sync::{Arc, Mutex};
+pub mod artifact;
+pub mod cache;
+pub mod policy;
+pub mod queue;
+pub mod stats;
+pub mod tenant;
+
+use std::sync::Arc;
+use std::time::Instant;
 
 use anyhow::Result;
 
 use crate::coordinator::Trainer;
 use crate::gp::{metrics, pathwise_variances, Metrics};
-use crate::kernels::Hyperparams;
 use crate::linalg::Mat;
 use crate::operators::KernelOperator;
 
+pub use artifact::PosteriorArtifact;
+pub use cache::{ArtifactCache, SharedArtifactCache, TenantCacheStats, TenantId};
+pub use policy::{ServeError, StalenessPolicy};
+pub use queue::{PendingRequest, RequestId, RequestQueue};
+pub use stats::{LatencyHistogram, ServeCounters, ServeStats, LATENCY_BUCKETS};
+pub use tenant::{FleetDrain, ModelFleet};
+
 // ---------------------------------------------------------------------------
-// PosteriorArtifact
+// ServeOptions
 // ---------------------------------------------------------------------------
 
-/// Immutable snapshot of the amortised pathwise posterior at one
-/// (hyperparameter, dataset-size) point: everything
-/// [`crate::operators::KernelOperator::predict_at`] needs to answer
-/// arbitrary queries without touching the solver again.
+/// Serving knobs.
 #[derive(Clone, Debug)]
-pub struct PosteriorArtifact {
-    /// Packed hyperparameters the snapshot was taken at ([ell.., sigf, sigma]).
-    pub theta: Vec<f64>,
-    /// Training rows at snapshot time (staleness detection, with `theta`).
-    pub n: usize,
-    /// Solved mean weights v_y = H⁻¹ y.
-    pub vy: Vec<f64>,
-    /// Pathwise-conditioning probes ẑ = H⁻¹ ξ  [n, s].
-    pub zhat: Mat,
-    /// RFF base frequencies of the posterior samples [d, m].
-    pub omega0: Mat,
-    /// RFF weights [2m, s].
-    pub wts: Mat,
-    /// Observation noise variance σ² at `theta` (added to sample variances).
-    pub noise_var: f64,
+pub struct ServeOptions {
+    /// Rows per evaluation block: queued queries are coalesced and served
+    /// in blocks of this size (the unit of the threaded sweep).
+    pub batch: usize,
+    /// Worker threads for the batched sweep (0 = auto: `IGP_THREADS`, else
+    /// all cores).  Results are bitwise-identical for every value.
+    pub threads: usize,
+    /// What to do with queries that arrive while the artifact is
+    /// data-stale (between an online arrival and its refresh solve).
+    pub policy: StalenessPolicy,
+    /// Admission cap: maximum queued rows across pending requests
+    /// (0 = unbounded).  Requests past the cap are rejected with
+    /// [`ServeError::QueueFull`].
+    pub queue_cap: usize,
 }
 
-// ---------------------------------------------------------------------------
-// ArtifactCache
-// ---------------------------------------------------------------------------
-
-/// Cache key: exact f64 bit patterns of the packed hyperparameters plus
-/// the training size n — the same staleness notion as the preconditioner
-/// cache: the outer loop revisits the *same* theta several times per
-/// serve/refresh cycle, any genuine hyperparameter step changes the bits,
-/// and online data arrival grows n at unchanged hyperparameters.
-type ArtifactKey = (Vec<u64>, usize);
-
-fn artifact_key(hp: &Hyperparams, n: usize) -> ArtifactKey {
-    (hp.pack().iter().map(|x| x.to_bits()).collect(), n)
-}
-
-#[derive(Default)]
-struct ArtifactInner {
-    /// Small LRU list (linear scan; capacity is single digits).
-    entries: Vec<(ArtifactKey, Arc<PosteriorArtifact>)>,
-    builds: u64,
-    hits: u64,
-}
-
-/// Coordinator-owned store of posterior snapshots, mirroring
-/// [`crate::solvers::PreconditionerCache`]: LRU over (hyperparameter bits,
-/// n), interior-mutable so diagnostics can read counters behind `&self`.
-pub struct ArtifactCache {
-    inner: Mutex<ArtifactInner>,
-    cap: usize,
-}
-
-impl Default for ArtifactCache {
-    /// Two snapshots: a `PosteriorArtifact` holds O(n·s) state (`zhat`
-    /// plus `vy`), and every evaluation publishes one, so a training-only
-    /// run at large n must not pin a deep history it will never read.
-    /// Serving fetches the *latest* theta; one extra slot covers the
-    /// serve → tweak → serve-back cycle.
+impl Default for ServeOptions {
     fn default() -> Self {
-        ArtifactCache::with_capacity(2)
-    }
-}
-
-impl std::fmt::Debug for ArtifactCache {
-    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
-        let inner = self.inner.lock().unwrap();
-        f.debug_struct("ArtifactCache")
-            .field("entries", &inner.entries.len())
-            .field("builds", &inner.builds)
-            .field("hits", &inner.hits)
-            .finish()
-    }
-}
-
-impl ArtifactCache {
-    /// `cap` snapshots are retained (LRU eviction).
-    pub fn with_capacity(cap: usize) -> Self {
-        ArtifactCache { inner: Mutex::new(ArtifactInner::default()), cap: cap.max(1) }
-    }
-
-    /// The cached snapshot for (hp, n), if any (counts a hit and refreshes
-    /// its LRU position).
-    pub fn get(&self, hp: &Hyperparams, n: usize) -> Option<Arc<PosteriorArtifact>> {
-        let key = artifact_key(hp, n);
-        let mut inner = self.inner.lock().unwrap();
-        let pos = inner.entries.iter().position(|(k, _)| *k == key)?;
-        inner.hits += 1;
-        let entry = inner.entries.remove(pos);
-        let art = entry.1.clone();
-        inner.entries.push(entry); // LRU: move to back
-        Some(art)
-    }
-
-    /// Publish a freshly built snapshot (replacing any entry with the same
-    /// key — the new one was built from newer solver state).
-    pub fn insert(&self, hp: &Hyperparams, n: usize, art: Arc<PosteriorArtifact>) {
-        let key = artifact_key(hp, n);
-        let mut inner = self.inner.lock().unwrap();
-        if let Some(pos) = inner.entries.iter().position(|(k, _)| *k == key) {
-            inner.entries.remove(pos);
-        } else if inner.entries.len() >= self.cap {
-            inner.entries.remove(0);
+        ServeOptions {
+            batch: 64,
+            threads: 0,
+            policy: StalenessPolicy::RefreshFirst,
+            queue_cap: 0,
         }
-        inner.builds += 1;
-        inner.entries.push((key, art));
-    }
-
-    /// Drop every snapshot.  Called on online data arrival: all entries
-    /// were built for the old n (the n in the key already prevents wrong
-    /// reuse; invalidation frees the memory).  Counters are preserved.
-    pub fn invalidate_all(&self) {
-        self.inner.lock().unwrap().entries.clear();
-    }
-
-    /// Snapshots built so far (telemetry / regression tests).
-    pub fn builds(&self) -> u64 {
-        self.inner.lock().unwrap().builds
-    }
-
-    /// Cache hits so far.
-    pub fn hits(&self) -> u64 {
-        self.inner.lock().unwrap().hits
-    }
-
-    /// Live entries.
-    pub fn len(&self) -> usize {
-        self.inner.lock().unwrap().entries.len()
-    }
-
-    pub fn is_empty(&self) -> bool {
-        self.len() == 0
     }
 }
 
@@ -182,63 +97,92 @@ impl ArtifactCache {
 // PredictionService
 // ---------------------------------------------------------------------------
 
-/// Serving knobs.
+/// One answered request, routed back by id ([`PredictionService::drain`]).
 #[derive(Clone, Debug)]
-pub struct ServeOptions {
-    /// Rows per evaluation block: queued queries are served in blocks of
-    /// this size (the unit of the threaded sweep).
-    pub batch: usize,
-    /// Worker threads for the batched sweep (0 = auto: `IGP_THREADS`, else
-    /// all cores).  Results are bitwise-identical for every value.
-    pub threads: usize,
-}
-
-impl Default for ServeOptions {
-    fn default() -> Self {
-        ServeOptions { batch: 64, threads: 0 }
-    }
-}
-
-/// Throughput / cache counters of one service instance.
-#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
-pub struct ServeStats {
-    /// Query rows answered.
-    pub rows_served: u64,
-    /// Logical evaluation blocks (ceil(rows / batch) per request) — the
-    /// unit of the generic fan-out.  Backends may coalesce: the tiled
-    /// backend serves each request in one internally row-parallel pass.
-    pub batches: u64,
-    /// Posterior snapshots built (solve-refreshes) over the trainer's life.
-    pub artifact_builds: u64,
-    /// Snapshot cache hits over the trainer's life.
-    pub artifact_hits: u64,
+pub struct RequestResult {
+    pub id: RequestId,
+    pub deadline: Option<u64>,
+    /// Posterior mean per query row (request row order preserved).
+    pub mean: Vec<f64>,
+    /// Predictive variance (with observation noise) per query row.
+    pub var: Vec<f64>,
+    /// Enqueue→answer latency.
+    pub latency_ns: u64,
+    /// Whether the answer came from a marked-stale snapshot
+    /// (`serve_stale` policy inside a staleness window).
+    pub stale: bool,
 }
 
 /// A query-answering engine over a trained [`Trainer`].
 ///
 /// The service owns the trainer: queries are answered from the cached
 /// [`PosteriorArtifact`] (refreshed lazily — at most one solve per
-/// (hyperparameter, n) point), and online arrivals go through
-/// [`PredictionService::extend_data`], after which the next query refreshes
-/// the artifact from the warm-carried solution store.
+/// (hyperparameter, n) point).  Requests accumulate through
+/// [`PredictionService::enqueue_with_deadline`] under an admission cap and
+/// are drained earliest-deadline-first, coalesced into batch-sized
+/// evaluation blocks that split and merge across request boundaries while
+/// preserving per-request row order — bitwise-identical to serving each
+/// request alone, by the per-row-independence contract of
+/// [`KernelOperator::predict_at`].  Online arrivals go through
+/// [`PredictionService::extend_data`]; queries inside the staleness window
+/// are refused, served stale, or held for the one warm refresh solve
+/// according to [`ServeOptions::policy`].
 pub struct PredictionService {
     trainer: Trainer,
     opts: ServeOptions,
-    /// Accumulated-but-unserved query rows ([`PredictionService::enqueue`]).
-    pending: Mat,
+    queue: RequestQueue,
     rows_served: u64,
     batches: u64,
+    stale_rows_served: u64,
+    rejected: u64,
+    latency: LatencyHistogram,
+    serve_ns: u64,
+    /// The artifact most recently served or refreshed (the candidate
+    /// `serve_stale` snapshot for the next arrival).
+    last_served: Option<Arc<PosteriorArtifact>>,
+    /// Pre-arrival snapshot retained while data-stale (`serve_stale`).
+    stale_snapshot: Option<Arc<PosteriorArtifact>>,
+    /// `stale_snapshot` zero-padded to the current n (lazily built, reset
+    /// when n grows again).
+    stale_padded: Option<Arc<PosteriorArtifact>>,
+    /// Set by [`PredictionService::extend_data`], cleared by the refresh
+    /// that answers it.  Arrivals driven directly through
+    /// [`PredictionService::trainer_mut`] bypass the policy window and
+    /// behave like `refresh_first` (the artifact key already forces the
+    /// warm solve).
+    data_stale: bool,
 }
 
 impl PredictionService {
     pub fn new(trainer: Trainer, opts: ServeOptions) -> Self {
         let d = trainer.operator().d();
         let opts = ServeOptions { batch: opts.batch.max(1), ..opts };
-        PredictionService { trainer, opts, pending: Mat::zeros(0, d), rows_served: 0, batches: 0 }
+        let queue = RequestQueue::new(d, opts.queue_cap);
+        PredictionService {
+            trainer,
+            opts,
+            queue,
+            rows_served: 0,
+            batches: 0,
+            stale_rows_served: 0,
+            rejected: 0,
+            latency: LatencyHistogram::default(),
+            serve_ns: 0,
+            last_served: None,
+            stale_snapshot: None,
+            stale_padded: None,
+            data_stale: false,
+        }
     }
 
     pub fn options(&self) -> &ServeOptions {
         &self.opts
+    }
+
+    /// Switch the staleness policy mid-traffic (queued requests are kept;
+    /// the new policy applies from the next serve).
+    pub fn set_policy(&mut self, policy: StalenessPolicy) {
+        self.opts.policy = policy;
     }
 
     pub fn trainer(&self) -> &Trainer {
@@ -257,34 +201,109 @@ impl PredictionService {
         self.trainer
     }
 
-    /// Queue query rows for the next [`PredictionService::flush`].
+    /// Queue query rows for the next [`PredictionService::flush`] (no
+    /// deadline; back-compat convenience over
+    /// [`PredictionService::enqueue_with_deadline`]).
     pub fn enqueue(&mut self, x: &Mat) -> Result<()> {
-        anyhow::ensure!(
-            x.cols == self.pending.cols,
-            "enqueue: query has d = {} but the model has d = {}",
-            x.cols,
-            self.pending.cols
-        );
-        self.pending.append_rows(x);
+        self.enqueue_with_deadline(x, None)?;
         Ok(())
+    }
+
+    /// Admit a request with an optional logical deadline tick (smaller =
+    /// sooner; `None` = served after every deadlined request).  Typed
+    /// rejections: [`ServeError::QueueFull`] past the admission cap
+    /// (counted in [`ServeCounters::rejected`]),
+    /// [`ServeError::DimensionMismatch`] on width mismatch — either way
+    /// the queue is untouched.
+    pub fn enqueue_with_deadline(
+        &mut self,
+        x: &Mat,
+        deadline: Option<u64>,
+    ) -> std::result::Result<RequestId, ServeError> {
+        match self.queue.push(x, deadline) {
+            Ok(id) => Ok(id),
+            Err(e) => {
+                if matches!(e, ServeError::QueueFull { .. }) {
+                    self.rejected += 1;
+                }
+                Err(e)
+            }
+        }
     }
 
     /// Queued-but-unserved rows.
     pub fn pending_rows(&self) -> usize {
-        self.pending.rows
+        self.queue.rows()
     }
 
-    /// Serve every queued row (in enqueue order): (mean, variance).
+    /// Queued-but-unserved requests.
+    pub fn pending_requests(&self) -> usize {
+        self.queue.len()
+    }
+
+    /// The earliest deadline among queued requests (fleet scheduling).
+    pub fn earliest_deadline(&self) -> Option<u64> {
+        self.queue.earliest_deadline()
+    }
+
+    /// Serve every queued row in enqueue order: (mean, variance)
+    /// concatenated across requests.  On error nothing is answered and
+    /// **nothing is dropped** — the queue is restored exactly as it was.
     pub fn flush(&mut self) -> Result<(Vec<f64>, Vec<f64>)> {
-        let d = self.pending.cols;
-        let queued = std::mem::replace(&mut self.pending, Mat::zeros(0, d));
-        self.serve(&queued)
+        let items = self.queue.take_fifo();
+        match self.serve_requests(&items) {
+            Ok((mean, var, _)) => Ok((mean, var)),
+            Err(e) => {
+                self.queue.restore(items);
+                Err(e.into())
+            }
+        }
+    }
+
+    /// Serve every queued request earliest-deadline-first, coalesced into
+    /// batch-sized evaluation blocks across request boundaries, results
+    /// routed back by request id with per-request latency.  Answers are
+    /// bitwise-identical to serving each request alone.  On error the
+    /// queue is restored untouched.
+    pub fn drain(&mut self) -> std::result::Result<Vec<RequestResult>, ServeError> {
+        let items = self.queue.take_edf();
+        match self.serve_requests(&items) {
+            Ok((mean, var, stale)) => {
+                let mut out = Vec::with_capacity(items.len());
+                let mut r0 = 0;
+                for p in &items {
+                    let r1 = r0 + p.x.rows;
+                    let latency_ns = p.enqueued.elapsed().as_nanos() as u64;
+                    self.latency.record(latency_ns);
+                    out.push(RequestResult {
+                        id: p.id,
+                        deadline: p.deadline,
+                        mean: mean[r0..r1].to_vec(),
+                        var: var[r0..r1].to_vec(),
+                        latency_ns,
+                        stale,
+                    });
+                    r0 = r1;
+                }
+                Ok(out)
+            }
+            Err(e) => {
+                self.queue.restore(items);
+                Err(e)
+            }
+        }
     }
 
     /// One-shot query: posterior mean and predictive variance (with
-    /// observation noise) at each row of `x_query`.
+    /// observation noise) at each row of `x_query`.  Records one
+    /// enqueue→answer latency sample (enqueue and answer coincide).
     pub fn predict(&mut self, x_query: &Mat) -> Result<(Vec<f64>, Vec<f64>)> {
-        self.serve(x_query)
+        let t0 = Instant::now();
+        let (mean, var, _) = self.serve_rows(x_query)?;
+        if x_query.rows > 0 {
+            self.latency.record(t0.elapsed().as_nanos() as u64);
+        }
+        Ok((mean, var))
     }
 
     /// Predict and score against known targets.
@@ -295,120 +314,154 @@ impl PredictionService {
             x_query.rows,
             y_true.len()
         );
-        let (mean, var) = self.serve(x_query)?;
+        let (mean, var) = self.predict(x_query)?;
         Ok(metrics(&mean, &var, y_true))
     }
 
-    /// Online data arrival: grow the trainer in place.  The current
-    /// artifact is invalidated ([`Trainer::extend_data`] clears the cache
-    /// and the key's n changes); the next query triggers one *warm* solve
-    /// from the carried solution store.
+    /// Online data arrival: grow the trainer in place.  The artifact is
+    /// invalidated ([`Trainer::extend_data`] drops this tenant's cache
+    /// entries and the key's n changes); what happens to queries before
+    /// the warm refresh solve is governed by [`ServeOptions::policy`].
     pub fn extend_data(&mut self, x_new: &Mat, y_new: &[f64]) -> Result<()> {
-        self.trainer.extend_data(x_new, y_new)
+        self.trainer.extend_data(x_new, y_new)?;
+        if !self.data_stale {
+            // retain the pre-arrival snapshot: it is what `serve_stale`
+            // answers from during the staleness window
+            self.stale_snapshot = self.last_served.take();
+        }
+        self.data_stale = true;
+        self.stale_padded = None; // n grew again: re-pad lazily
+        Ok(())
     }
 
-    /// Force an artifact refresh now (e.g. to pay the solve outside the
-    /// serving hot path).  Cached snapshots make this free when nothing
-    /// changed.
+    /// Force an artifact refresh now (e.g. to pay the warm solve outside
+    /// the serving hot path).  Clears the staleness window; cached
+    /// snapshots make this free when nothing changed.
     pub fn refresh(&mut self) -> Result<Arc<PosteriorArtifact>> {
-        self.trainer.posterior_artifact()
+        let art = self.refresh_artifact().map_err(anyhow::Error::from)?;
+        Ok(art)
     }
 
     pub fn stats(&self) -> ServeStats {
+        let tc = self.trainer.artifact_cache().tenant_stats(self.trainer.tenant());
         ServeStats {
-            rows_served: self.rows_served,
-            batches: self.batches,
-            artifact_builds: self.trainer.artifact_cache().builds(),
-            artifact_hits: self.trainer.artifact_cache().hits(),
+            counters: ServeCounters {
+                rows_served: self.rows_served,
+                batches: self.batches,
+                artifact_builds: tc.builds,
+                artifact_hits: tc.hits,
+                artifact_evictions: tc.evictions,
+                stale_rows_served: self.stale_rows_served,
+                rejected: self.rejected,
+            },
+            latency: self.latency.clone(),
+            serve_ns: self.serve_ns,
         }
     }
 
-    fn serve(&mut self, x_query: &Mat) -> Result<(Vec<f64>, Vec<f64>)> {
-        anyhow::ensure!(
-            x_query.cols == self.trainer.operator().d(),
-            "predict: query has d = {} but the model has d = {}",
-            x_query.cols,
-            self.trainer.operator().d()
-        );
-        if x_query.rows == 0 {
-            return Ok((Vec::new(), Vec::new()));
+    /// Serve a batch of queued requests as one coalesced sweep (the
+    /// evaluation blocks split/merge across request boundaries; per-row
+    /// independence keeps the bits identical to serving each alone).
+    fn serve_requests(
+        &mut self,
+        items: &[PendingRequest],
+    ) -> std::result::Result<(Vec<f64>, Vec<f64>, bool), ServeError> {
+        let d = self.trainer.operator().d();
+        let mut x_all = Mat::zeros(0, d);
+        for p in items {
+            x_all.append_rows(&p.x);
         }
-        let art = self.trainer.posterior_artifact()?;
-        let (mean, samples) = self.trainer.operator().predict_batched(
-            x_query,
-            self.opts.batch,
-            self.opts.threads,
-            &art.vy,
-            &art.zhat,
-            &art.omega0,
-            &art.wts,
-        )?;
+        self.serve_rows(&x_all)
+    }
+
+    /// The serve core: resolve the artifact under the staleness policy,
+    /// run the batched sweep, account rows/blocks/latency.
+    fn serve_rows(
+        &mut self,
+        x_query: &Mat,
+    ) -> std::result::Result<(Vec<f64>, Vec<f64>, bool), ServeError> {
+        let d = self.trainer.operator().d();
+        if x_query.cols != d {
+            return Err(ServeError::DimensionMismatch { got: x_query.cols, want: d });
+        }
+        if x_query.rows == 0 {
+            return Ok((Vec::new(), Vec::new(), false));
+        }
+        let (art, stale) = self.artifact_for_serve()?;
+        let t0 = Instant::now();
+        let (mean, samples, blocks) = self
+            .trainer
+            .operator()
+            .predict_batched(
+                x_query,
+                self.opts.batch,
+                self.opts.threads,
+                &art.vy,
+                &art.zhat,
+                &art.omega0,
+                &art.wts,
+            )
+            .map_err(|e| ServeError::Internal { message: format!("{e:#}") })?;
+        self.serve_ns += t0.elapsed().as_nanos() as u64;
         let var = pathwise_variances(&samples, art.noise_var);
         self.rows_served += x_query.rows as u64;
-        self.batches += ((x_query.rows + self.opts.batch - 1) / self.opts.batch) as u64;
-        Ok((mean, var))
-    }
-}
-
-#[cfg(test)]
-mod tests {
-    use super::*;
-
-    fn dummy_artifact(tag: f64) -> Arc<PosteriorArtifact> {
-        Arc::new(PosteriorArtifact {
-            theta: vec![tag],
-            n: 1,
-            vy: vec![tag],
-            zhat: Mat::zeros(1, 1),
-            omega0: Mat::zeros(1, 1),
-            wts: Mat::zeros(2, 1),
-            noise_var: 0.0,
-        })
+        self.batches += blocks;
+        if stale {
+            self.stale_rows_served += x_query.rows as u64;
+        }
+        Ok((mean, var, stale))
     }
 
-    fn hp(sigma: f64) -> Hyperparams {
-        Hyperparams { ell: vec![1.0, 2.0], sigf: 1.0, sigma }
+    /// Resolve the artifact to answer from.  Fresh path: the cache (hit,
+    /// or one lazy build on hyperparameter drift).  Inside a staleness
+    /// window, the policy decides: refuse (typed error, counted),
+    /// serve the retained zero-padded snapshot, or pay the warm refresh.
+    fn artifact_for_serve(
+        &mut self,
+    ) -> std::result::Result<(Arc<PosteriorArtifact>, bool), ServeError> {
+        if !self.data_stale {
+            let art = self.fetch_artifact()?;
+            return Ok((art, false));
+        }
+        match self.opts.policy {
+            StalenessPolicy::Refuse => {
+                self.rejected += 1;
+                Err(ServeError::Stale {
+                    artifact_n: self.stale_snapshot.as_ref().map(|a| a.n).unwrap_or(0),
+                    data_n: self.trainer.operator().n(),
+                })
+            }
+            StalenessPolicy::ServeStale => match self.stale_snapshot.clone() {
+                Some(snap) => {
+                    let n = self.trainer.operator().n();
+                    if self.stale_padded.as_ref().map(|p| p.vy.len()) != Some(n) {
+                        self.stale_padded = Some(Arc::new(snap.zero_padded(n)));
+                    }
+                    Ok((self.stale_padded.clone().unwrap(), true))
+                }
+                // nothing was ever served: there is no stale answer to
+                // give, so the first query pays the (warm) build
+                None => self.refresh_artifact().map(|a| (a, false)),
+            },
+            StalenessPolicy::RefreshFirst => self.refresh_artifact().map(|a| (a, false)),
+        }
     }
 
-    #[test]
-    fn cache_hits_on_same_key_and_misses_on_changes() {
-        let cache = ArtifactCache::default();
-        assert!(cache.get(&hp(0.3), 10).is_none());
-        cache.insert(&hp(0.3), 10, dummy_artifact(1.0));
-        assert_eq!(cache.builds(), 1);
-        let a = cache.get(&hp(0.3), 10).expect("hit");
-        assert_eq!(a.theta, vec![1.0]);
-        assert_eq!(cache.hits(), 1);
-        // hyperparameter bits and n are both part of the key
-        assert!(cache.get(&hp(0.31), 10).is_none());
-        assert!(cache.get(&hp(0.3), 11).is_none());
+    /// Fetch/refresh through the trainer and close the staleness window.
+    fn refresh_artifact(&mut self) -> std::result::Result<Arc<PosteriorArtifact>, ServeError> {
+        let art = self.fetch_artifact()?;
+        self.data_stale = false;
+        self.stale_snapshot = None;
+        self.stale_padded = None;
+        Ok(art)
     }
 
-    #[test]
-    fn cache_replaces_same_key_and_evicts_lru() {
-        let cache = ArtifactCache::with_capacity(2);
-        cache.insert(&hp(0.1), 5, dummy_artifact(1.0));
-        cache.insert(&hp(0.1), 5, dummy_artifact(2.0)); // replace, not grow
-        assert_eq!(cache.len(), 1);
-        assert_eq!(cache.get(&hp(0.1), 5).unwrap().theta, vec![2.0]);
-        cache.insert(&hp(0.2), 5, dummy_artifact(3.0));
-        // touch 0.1 so 0.2 becomes the LRU victim of the next insert
-        let _ = cache.get(&hp(0.1), 5);
-        cache.insert(&hp(0.3), 5, dummy_artifact(4.0));
-        assert!(cache.get(&hp(0.2), 5).is_none());
-        assert!(cache.get(&hp(0.1), 5).is_some());
-        assert!(cache.get(&hp(0.3), 5).is_some());
-    }
-
-    #[test]
-    fn cache_invalidate_keeps_counters() {
-        let cache = ArtifactCache::default();
-        cache.insert(&hp(0.1), 5, dummy_artifact(1.0));
-        let _ = cache.get(&hp(0.1), 5);
-        cache.invalidate_all();
-        assert!(cache.is_empty());
-        assert_eq!(cache.builds(), 1);
-        assert_eq!(cache.hits(), 1);
-        assert!(cache.get(&hp(0.1), 5).is_none());
+    fn fetch_artifact(&mut self) -> std::result::Result<Arc<PosteriorArtifact>, ServeError> {
+        let art = self
+            .trainer
+            .posterior_artifact()
+            .map_err(|e| ServeError::Internal { message: format!("{e:#}") })?;
+        self.last_served = Some(art.clone());
+        Ok(art)
     }
 }

@@ -1,0 +1,120 @@
+//! Admission control and staleness policy for the serving engine.
+//!
+//! An online arrival ([`crate::coordinator::Trainer::extend_data`])
+//! invalidates a tenant's posterior snapshot mid-traffic.  The
+//! [`StalenessPolicy`] decides what happens to queries that arrive before
+//! the one warm refresh solve has been paid; [`ServeError`] is the typed
+//! error surface of the queue/policy layer, so callers can distinguish an
+//! admission rejection from a staleness refusal without string matching.
+
+/// What the service does with queries while its artifact is data-stale
+/// (the trainer's n grew past the snapshot's n).
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum StalenessPolicy {
+    /// Reject stale-window queries with [`ServeError::Stale`]; the caller
+    /// decides when to pay the refresh ([`super::PredictionService::refresh`]).
+    Refuse,
+    /// Answer from the retained pre-arrival snapshot (zero-padded to the
+    /// grown n — numerically the pre-arrival answers), recording the
+    /// served rows as stale in the stats.  No solve is paid.
+    ServeStale,
+    /// Pay the one warm refresh solve before answering — every answer is
+    /// fresh; the first post-arrival query carries the solve latency.
+    /// This is the default (the pre-policy behaviour).
+    #[default]
+    RefreshFirst,
+}
+
+impl StalenessPolicy {
+    /// Parse a config/CLI name (single source of truth for the accepted
+    /// spellings, mirroring `BackendKind::parse`).
+    pub fn parse(s: &str) -> anyhow::Result<StalenessPolicy> {
+        match s {
+            "refuse" => Ok(StalenessPolicy::Refuse),
+            "serve_stale" => Ok(StalenessPolicy::ServeStale),
+            "refresh_first" => Ok(StalenessPolicy::RefreshFirst),
+            other => anyhow::bail!(
+                "staleness policy must be refuse|serve_stale|refresh_first, got '{other}'"
+            ),
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            StalenessPolicy::Refuse => "refuse",
+            StalenessPolicy::ServeStale => "serve_stale",
+            StalenessPolicy::RefreshFirst => "refresh_first",
+        }
+    }
+}
+
+/// Typed errors of the queue / admission / staleness layer.  Implements
+/// `std::error::Error`, so `?` converts into `anyhow::Error` at the
+/// service boundary while tests can still match on the variant.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum ServeError {
+    /// The admission cap would be exceeded: the request was rejected and
+    /// the queue left untouched.
+    QueueFull { queued_rows: usize, incoming_rows: usize, cap_rows: usize },
+    /// The artifact is data-stale and the policy is
+    /// [`StalenessPolicy::Refuse`].
+    Stale { artifact_n: usize, data_n: usize },
+    /// Query width does not match the model.
+    DimensionMismatch { got: usize, want: usize },
+    /// The fleet has no tenant by this name.
+    UnknownTenant { name: String },
+    /// A lower layer (artifact refresh / backend evaluation) failed; the
+    /// chained message is preserved.
+    Internal { message: String },
+}
+
+impl std::fmt::Display for ServeError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            ServeError::QueueFull { queued_rows, incoming_rows, cap_rows } => write!(
+                f,
+                "queue full: {queued_rows} rows queued + {incoming_rows} incoming exceeds the \
+                 admission cap of {cap_rows} rows"
+            ),
+            ServeError::Stale { artifact_n, data_n } => write!(
+                f,
+                "artifact is stale (snapshot at n = {artifact_n}, data at n = {data_n}) and the \
+                 policy is 'refuse'; refresh() or switch to serve_stale|refresh_first"
+            ),
+            ServeError::DimensionMismatch { got, want } => {
+                write!(f, "query has d = {got} but the model has d = {want}")
+            }
+            ServeError::UnknownTenant { name } => write!(f, "no tenant named '{name}'"),
+            ServeError::Internal { message } => write!(f, "serve failed: {message}"),
+        }
+    }
+}
+
+impl std::error::Error for ServeError {}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn policy_names_roundtrip() {
+        for p in [
+            StalenessPolicy::Refuse,
+            StalenessPolicy::ServeStale,
+            StalenessPolicy::RefreshFirst,
+        ] {
+            assert_eq!(StalenessPolicy::parse(p.name()).unwrap(), p);
+        }
+        assert!(StalenessPolicy::parse("drop").is_err());
+        assert_eq!(StalenessPolicy::default(), StalenessPolicy::RefreshFirst);
+    }
+
+    #[test]
+    fn errors_convert_into_anyhow_with_their_message() {
+        let e = ServeError::QueueFull { queued_rows: 10, incoming_rows: 5, cap_rows: 12 };
+        let any: anyhow::Error = e.into();
+        assert!(any.to_string().contains("admission cap"), "{any}");
+        let e = ServeError::Stale { artifact_n: 100, data_n: 150 };
+        assert!(e.to_string().contains("stale"), "{e}");
+    }
+}

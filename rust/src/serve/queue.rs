@@ -1,0 +1,191 @@
+//! The request queue: admission-capped accumulation of query requests
+//! with optional deadline ticks, drained earliest-deadline-first.
+//!
+//! A request keeps its rows contiguous and remembers its enqueue instant
+//! (the start of the enqueue→answer latency the stats layer records).
+//! Deadlines are *logical ticks* (u64, smaller = sooner, `None` = latest)
+//! — the scheduler only needs an ordering, and logical ticks keep the
+//! drain order deterministic for the parity tests.  Ties break by arrival
+//! id, so the drain order is a total order and every interleaving serves
+//! bitwise-identical answers.
+
+use std::time::Instant;
+
+use crate::linalg::Mat;
+
+use super::policy::ServeError;
+
+/// Identifies one enqueued request within its service; results are routed
+/// back under this id.
+pub type RequestId = u64;
+
+/// One queued request: `x.rows` query rows awaiting an answer.
+#[derive(Clone, Debug)]
+pub struct PendingRequest {
+    pub id: RequestId,
+    pub x: Mat,
+    /// Logical deadline tick (`None` = no deadline: served after every
+    /// deadlined request).
+    pub deadline: Option<u64>,
+    /// When the request entered the queue (latency measurement origin).
+    pub enqueued: Instant,
+}
+
+impl PendingRequest {
+    /// The EDF sort key: deadline first (`None` last), arrival id breaks
+    /// ties deterministically.
+    fn edf_key(&self) -> (u64, RequestId) {
+        (self.deadline.unwrap_or(u64::MAX), self.id)
+    }
+}
+
+/// FIFO accumulation + EDF drain with a row-count admission cap.
+pub struct RequestQueue {
+    d: usize,
+    /// Admission cap in *rows* across all queued requests (0 = unbounded).
+    cap_rows: usize,
+    items: Vec<PendingRequest>,
+    rows: usize,
+    next_id: RequestId,
+}
+
+impl RequestQueue {
+    pub fn new(d: usize, cap_rows: usize) -> Self {
+        RequestQueue { d, cap_rows, items: Vec::new(), rows: 0, next_id: 0 }
+    }
+
+    /// Admit a request.  Rejections (wrong width, cap exceeded) leave the
+    /// queue untouched; zero-row requests are admitted and answered empty.
+    pub fn push(&mut self, x: &Mat, deadline: Option<u64>) -> Result<RequestId, ServeError> {
+        if x.cols != self.d {
+            return Err(ServeError::DimensionMismatch { got: x.cols, want: self.d });
+        }
+        if self.cap_rows > 0 && self.rows + x.rows > self.cap_rows {
+            return Err(ServeError::QueueFull {
+                queued_rows: self.rows,
+                incoming_rows: x.rows,
+                cap_rows: self.cap_rows,
+            });
+        }
+        let id = self.next_id;
+        self.next_id += 1;
+        self.rows += x.rows;
+        self.items.push(PendingRequest { id, x: x.clone(), deadline, enqueued: Instant::now() });
+        Ok(id)
+    }
+
+    /// Queued-but-unserved rows.
+    pub fn rows(&self) -> usize {
+        self.rows
+    }
+
+    /// Queued requests.
+    pub fn len(&self) -> usize {
+        self.items.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.items.is_empty()
+    }
+
+    /// Take every queued request in arrival order (the `flush` contract:
+    /// answers concatenate in enqueue order).
+    pub fn take_fifo(&mut self) -> Vec<PendingRequest> {
+        self.rows = 0;
+        std::mem::take(&mut self.items)
+    }
+
+    /// Take every queued request earliest-deadline-first (deadline tick,
+    /// then arrival id — a deterministic total order).
+    pub fn take_edf(&mut self) -> Vec<PendingRequest> {
+        let mut items = self.take_fifo();
+        items.sort_by_key(PendingRequest::edf_key);
+        items
+    }
+
+    /// Put requests back (the error path of a failed serve: nothing was
+    /// answered, so nothing may be dropped).  Arrival order is restored
+    /// from the ids, which also merges correctly with anything enqueued
+    /// since the take.
+    pub fn restore(&mut self, items: Vec<PendingRequest>) {
+        self.rows += items.iter().map(|p| p.x.rows).sum::<usize>();
+        self.items.extend(items);
+        self.items.sort_by_key(|p| p.id);
+    }
+
+    /// The earliest deadline among queued requests (`None` when the queue
+    /// is empty or entirely deadline-free) — the fleet orders tenants by
+    /// this.
+    pub fn earliest_deadline(&self) -> Option<u64> {
+        self.items.iter().filter_map(|p| p.deadline).min()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn q(rows: usize) -> Mat {
+        Mat::zeros(rows, 3)
+    }
+
+    #[test]
+    fn edf_orders_by_deadline_then_arrival() {
+        let mut queue = RequestQueue::new(3, 0);
+        let a = queue.push(&q(1), Some(9)).unwrap();
+        let b = queue.push(&q(2), None).unwrap();
+        let c = queue.push(&q(1), Some(2)).unwrap();
+        let d = queue.push(&q(3), Some(9)).unwrap();
+        assert_eq!(queue.rows(), 7);
+        assert_eq!(queue.earliest_deadline(), Some(2));
+        let order: Vec<RequestId> = queue.take_edf().iter().map(|p| p.id).collect();
+        // deadline 2, then the two deadline-9 requests in arrival order,
+        // then the deadline-free request
+        assert_eq!(order, vec![c, a, d, b]);
+        assert_eq!(queue.rows(), 0);
+        assert!(queue.is_empty());
+    }
+
+    #[test]
+    fn fifo_take_keeps_arrival_order() {
+        let mut queue = RequestQueue::new(3, 0);
+        let a = queue.push(&q(1), Some(5)).unwrap();
+        let b = queue.push(&q(1), Some(1)).unwrap();
+        let order: Vec<RequestId> = queue.take_fifo().iter().map(|p| p.id).collect();
+        assert_eq!(order, vec![a, b]);
+    }
+
+    #[test]
+    fn admission_cap_rejects_without_disturbing_the_queue() {
+        let mut queue = RequestQueue::new(3, 4);
+        queue.push(&q(3), None).unwrap();
+        let err = queue.push(&q(2), None).unwrap_err();
+        assert_eq!(
+            err,
+            ServeError::QueueFull { queued_rows: 3, incoming_rows: 2, cap_rows: 4 }
+        );
+        assert_eq!(queue.rows(), 3);
+        // a fitting request is still admitted after the rejection
+        queue.push(&q(1), None).unwrap();
+        assert_eq!(queue.rows(), 4);
+        // width mismatches are typed too
+        assert_eq!(
+            queue.push(&Mat::zeros(1, 2), None).unwrap_err(),
+            ServeError::DimensionMismatch { got: 2, want: 3 }
+        );
+    }
+
+    #[test]
+    fn restore_rebuilds_arrival_order_and_row_count() {
+        let mut queue = RequestQueue::new(3, 0);
+        let a = queue.push(&q(2), Some(7)).unwrap();
+        let b = queue.push(&q(1), Some(1)).unwrap();
+        let taken = queue.take_edf();
+        assert_eq!(queue.rows(), 0);
+        queue.restore(taken);
+        assert_eq!(queue.rows(), 3);
+        let c = queue.push(&q(1), None).unwrap();
+        let order: Vec<RequestId> = queue.take_fifo().iter().map(|p| p.id).collect();
+        assert_eq!(order, vec![a, b, c]);
+    }
+}

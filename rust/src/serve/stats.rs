@@ -1,0 +1,211 @@
+//! Serving observability: deterministic throughput counters plus a
+//! fixed-bucket latency histogram.
+//!
+//! The counters ([`ServeCounters`]) are exactly reproducible — property
+//! tests compare them against a reference model with `==` — so they live
+//! apart from the wall-clock measurements ([`LatencyHistogram`], serve
+//! seconds), which are monotone but not reproducible.  The histogram uses
+//! power-of-two microsecond buckets (bucket i counts latencies below
+//! `2^i` µs, the last bucket is the overflow): 24 fixed buckets cover
+//! 1 µs .. ~4 s with zero allocation and O(1) recording, and quantiles
+//! read as bucket upper bounds — a conservative (never-understating)
+//! p50/p99, the convention of fixed-bucket production histograms.
+
+/// Number of histogram buckets.  Bucket `i < LATENCY_BUCKETS - 1` counts
+/// latencies in `[2^(i-1), 2^i)` µs (bucket 0: `[0, 1)` µs); the final
+/// bucket counts everything at or above `2^(LATENCY_BUCKETS-2)` µs (~4 s).
+pub const LATENCY_BUCKETS: usize = 24;
+
+/// Fixed-bucket enqueue→answer latency histogram (power-of-two µs bounds).
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct LatencyHistogram {
+    counts: [u64; LATENCY_BUCKETS],
+    count: u64,
+    total_ns: u64,
+    max_ns: u64,
+}
+
+impl Default for LatencyHistogram {
+    fn default() -> Self {
+        LatencyHistogram { counts: [0; LATENCY_BUCKETS], count: 0, total_ns: 0, max_ns: 0 }
+    }
+}
+
+impl LatencyHistogram {
+    /// The bucket a latency of `ns` nanoseconds falls into.
+    fn bucket(ns: u64) -> usize {
+        let mut i = 0;
+        while i < LATENCY_BUCKETS - 1 && ns >= Self::upper_bound_ns(i) {
+            i += 1;
+        }
+        i
+    }
+
+    /// Exclusive upper bound of bucket `i` in ns (`2^i` µs); the overflow
+    /// bucket has no bound.
+    pub fn upper_bound_ns(i: usize) -> u64 {
+        1000u64 << i
+    }
+
+    /// Record one request's latency.
+    pub fn record(&mut self, ns: u64) {
+        self.counts[Self::bucket(ns)] += 1;
+        self.count += 1;
+        self.total_ns = self.total_ns.saturating_add(ns);
+        self.max_ns = self.max_ns.max(ns);
+    }
+
+    /// Recorded requests.
+    pub fn count(&self) -> u64 {
+        self.count
+    }
+
+    /// Per-bucket counts (telemetry emission).
+    pub fn buckets(&self) -> &[u64; LATENCY_BUCKETS] {
+        &self.counts
+    }
+
+    /// Largest recorded latency.
+    pub fn max_ns(&self) -> u64 {
+        self.max_ns
+    }
+
+    /// Mean latency in ns (0 when empty).
+    pub fn mean_ns(&self) -> u64 {
+        if self.count == 0 { 0 } else { self.total_ns / self.count }
+    }
+
+    /// The `q`-quantile in ns, reported as the containing bucket's upper
+    /// bound (capped at the observed maximum, so an all-in-one-bucket
+    /// histogram never overstates past its own max).  0 when empty.
+    pub fn quantile_ns(&self, q: f64) -> u64 {
+        if self.count == 0 {
+            return 0;
+        }
+        let target = ((q.clamp(0.0, 1.0) * self.count as f64).ceil() as u64).max(1);
+        let mut seen = 0u64;
+        for (i, c) in self.counts.iter().enumerate() {
+            seen += c;
+            if seen >= target {
+                return if i == LATENCY_BUCKETS - 1 {
+                    self.max_ns
+                } else {
+                    Self::upper_bound_ns(i).min(self.max_ns)
+                };
+            }
+        }
+        self.max_ns
+    }
+
+    pub fn p50_ns(&self) -> u64 {
+        self.quantile_ns(0.50)
+    }
+
+    pub fn p99_ns(&self) -> u64 {
+        self.quantile_ns(0.99)
+    }
+}
+
+/// Deterministic throughput / cache / policy counters of one service —
+/// exactly reproducible for a given op sequence, so property tests model
+/// them with plain `==`.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct ServeCounters {
+    /// Query rows answered.
+    pub rows_served: u64,
+    /// Evaluation blocks actually executed at the backend — counted at the
+    /// execution site, so a backend that coalesces a request into one
+    /// internally-parallel pass (tiled/sharded) counts 1 where the generic
+    /// block fan-out (dense) counts ceil(rows / batch).
+    pub batches: u64,
+    /// Posterior snapshots built for this tenant over the trainer's life.
+    pub artifact_builds: u64,
+    /// Snapshot cache hits for this tenant over the trainer's life.
+    pub artifact_hits: u64,
+    /// This tenant's snapshots evicted by shared-cache LRU pressure.
+    pub artifact_evictions: u64,
+    /// Rows answered from a marked-stale snapshot (`serve_stale` policy).
+    pub stale_rows_served: u64,
+    /// Requests rejected at admission (queue cap) or by the `refuse`
+    /// staleness policy.
+    pub rejected: u64,
+}
+
+/// Full observability snapshot: the deterministic counters plus the
+/// latency histogram and total serve wall time.
+#[derive(Clone, Debug, Default)]
+pub struct ServeStats {
+    pub counters: ServeCounters,
+    /// Per-request enqueue→answer latency (one-shot `predict` records its
+    /// serve wall time — enqueue and answer coincide).
+    pub latency: LatencyHistogram,
+    /// Wall nanoseconds inside backend evaluation across every serve.
+    pub serve_ns: u64,
+}
+
+impl ServeStats {
+    pub fn p50_ns(&self) -> u64 {
+        self.latency.p50_ns()
+    }
+
+    pub fn p99_ns(&self) -> u64 {
+        self.latency.p99_ns()
+    }
+
+    /// Serving throughput: rows answered per second of backend evaluation
+    /// wall time (0 when nothing was served).
+    pub fn rows_per_sec(&self) -> f64 {
+        if self.serve_ns == 0 {
+            0.0
+        } else {
+            self.counters.rows_served as f64 / (self.serve_ns as f64 * 1e-9)
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn buckets_are_power_of_two_microseconds() {
+        assert_eq!(LatencyHistogram::bucket(0), 0);
+        assert_eq!(LatencyHistogram::bucket(999), 0); // < 1 µs
+        assert_eq!(LatencyHistogram::bucket(1000), 1); // [1, 2) µs
+        assert_eq!(LatencyHistogram::bucket(1999), 1);
+        assert_eq!(LatencyHistogram::bucket(2000), 2);
+        assert_eq!(LatencyHistogram::bucket(1_000_000), 10); // 1 ms -> [512, 1024) µs
+        assert_eq!(LatencyHistogram::upper_bound_ns(10), 1_024_000);
+        // the overflow bucket swallows anything huge
+        assert_eq!(LatencyHistogram::bucket(u64::MAX), LATENCY_BUCKETS - 1);
+    }
+
+    #[test]
+    fn quantiles_read_bucket_upper_bounds_capped_at_max() {
+        let mut h = LatencyHistogram::default();
+        assert_eq!(h.p50_ns(), 0);
+        for _ in 0..99 {
+            h.record(1500); // bucket 1, bound 2000
+        }
+        h.record(5_000_000); // one slow request
+        assert_eq!(h.count(), 100);
+        assert_eq!(h.p50_ns(), 2000);
+        assert_eq!(h.p99_ns(), 2000);
+        assert_eq!(h.quantile_ns(1.0), 5_000_000); // bucket bound capped at max
+        assert_eq!(h.max_ns(), 5_000_000);
+        // a single-sample histogram reports its own value at every quantile
+        let mut one = LatencyHistogram::default();
+        one.record(700);
+        assert_eq!(one.p50_ns(), 700); // bound 1000 capped at max 700
+        assert_eq!(one.p99_ns(), 700);
+    }
+
+    #[test]
+    fn rows_per_sec_uses_serve_wall_time() {
+        let mut st = ServeStats::default();
+        assert_eq!(st.rows_per_sec(), 0.0);
+        st.counters.rows_served = 500;
+        st.serve_ns = 250_000_000; // 0.25 s
+        assert!((st.rows_per_sec() - 2000.0).abs() < 1e-9);
+    }
+}

@@ -1,0 +1,177 @@
+//! The multi-tenant fleet: many named models served over ONE shared,
+//! capacity-bounded artifact cache.
+//!
+//! Each tenant is a full [`PredictionService`] (its own trainer, queue,
+//! policy and stats); what they share is the [`ArtifactCache`] — the
+//! memory-bounded store of posterior snapshots — so fleet memory is
+//! capped by the cache capacity rather than growing with tenant count,
+//! and the per-tenant build/hit/eviction counters expose exactly who is
+//! paying for whom under LRU pressure.
+//!
+//! Scheduling is deadline-aware but never mixes tenants in one
+//! evaluation batch (different tenants answer from different artifacts):
+//! [`ModelFleet::drain`] visits tenants ordered by their earliest
+//! pending deadline (tie-break: tenant insertion order, a deterministic
+//! total order) and lets each service coalesce its own queue EDF-wise.
+//! Per-tenant answers therefore stay bitwise-identical to a fleet of
+//! isolated services — the property `tests/serve_fleet.rs` checks.
+
+use std::sync::Arc;
+
+use anyhow::Result;
+
+use crate::coordinator::Trainer;
+use crate::linalg::Mat;
+
+use super::artifact::PosteriorArtifact;
+use super::cache::{ArtifactCache, SharedArtifactCache, TenantId};
+use super::policy::ServeError;
+use super::queue::RequestId;
+use super::stats::ServeStats;
+use super::{PredictionService, RequestResult, ServeOptions};
+
+/// The outcome of one fleet drain: answered requests in service order,
+/// plus per-tenant refusals (their queues were restored, nothing is
+/// dropped — the caller decides whether to refresh and re-drain).
+#[derive(Debug, Default)]
+pub struct FleetDrain {
+    /// `(tenant name, result)` in the order served.
+    pub answered: Vec<(String, RequestResult)>,
+    /// Tenants whose serve was refused (e.g. stale under `refuse`); their
+    /// requests remain queued.
+    pub refused: Vec<(String, ServeError)>,
+}
+
+/// Named tenants over one shared artifact cache.
+pub struct ModelFleet {
+    cache: SharedArtifactCache,
+    tenants: Vec<(String, PredictionService)>,
+    next_tenant: TenantId,
+}
+
+impl ModelFleet {
+    /// A fleet whose shared cache holds at most `cache_capacity` posterior
+    /// snapshots across all tenants.
+    pub fn new(cache_capacity: usize) -> Self {
+        Self::with_cache(ArtifactCache::shared_with_capacity(cache_capacity))
+    }
+
+    /// A fleet over an existing shared cache (e.g. one also used outside
+    /// the fleet).
+    pub fn with_cache(cache: SharedArtifactCache) -> Self {
+        ModelFleet { cache, tenants: Vec::new(), next_tenant: 1 }
+    }
+
+    /// Add a named tenant.  The trainer's private artifact cache is
+    /// absorbed into the shared one (entries and counters migrate; nothing
+    /// is re-counted as a build).
+    pub fn add_tenant(&mut self, name: &str, mut trainer: Trainer, opts: ServeOptions) -> Result<()> {
+        anyhow::ensure!(
+            self.tenants.iter().all(|(t, _)| t != name),
+            "fleet already has a tenant named '{name}'"
+        );
+        let id = self.next_tenant;
+        self.next_tenant += 1;
+        trainer.set_artifact_cache(self.cache.clone(), id);
+        self.tenants.push((name.to_string(), PredictionService::new(trainer, opts)));
+        Ok(())
+    }
+
+    /// Tenant names in insertion order.
+    pub fn names(&self) -> Vec<&str> {
+        self.tenants.iter().map(|(n, _)| n.as_str()).collect()
+    }
+
+    pub fn len(&self) -> usize {
+        self.tenants.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.tenants.is_empty()
+    }
+
+    /// The shared artifact cache (fleet-wide totals, capacity, length).
+    pub fn cache(&self) -> &ArtifactCache {
+        &self.cache
+    }
+
+    pub fn tenant(&self, name: &str) -> Option<&PredictionService> {
+        self.tenants.iter().find(|(n, _)| n == name).map(|(_, s)| s)
+    }
+
+    pub fn tenant_mut(&mut self, name: &str) -> Option<&mut PredictionService> {
+        self.tenants.iter_mut().find(|(n, _)| n == name).map(|(_, s)| s)
+    }
+
+    fn find_mut(&mut self, name: &str) -> std::result::Result<&mut PredictionService, ServeError> {
+        self.tenant_mut(name).ok_or_else(|| ServeError::UnknownTenant { name: name.to_string() })
+    }
+
+    /// Admit a request for `name` with an optional deadline tick.
+    pub fn enqueue(
+        &mut self,
+        name: &str,
+        x: &Mat,
+        deadline: Option<u64>,
+    ) -> std::result::Result<RequestId, ServeError> {
+        self.find_mut(name)?.enqueue_with_deadline(x, deadline)
+    }
+
+    /// Queued rows across every tenant.
+    pub fn pending_rows(&self) -> usize {
+        self.tenants.iter().map(|(_, s)| s.pending_rows()).sum()
+    }
+
+    /// Serve every queued request fleet-wide.  Tenants are visited
+    /// ordered by earliest pending deadline (insertion order breaks
+    /// ties); within a tenant the service drains EDF with coalesced
+    /// batches.  A refused tenant keeps its queue (see [`FleetDrain`]);
+    /// other tenants still get served.
+    pub fn drain(&mut self) -> FleetDrain {
+        let mut order: Vec<usize> = (0..self.tenants.len())
+            .filter(|&i| self.tenants[i].1.pending_requests() > 0)
+            .collect();
+        order.sort_by_key(|&i| (self.tenants[i].1.earliest_deadline().unwrap_or(u64::MAX), i));
+        let mut out = FleetDrain::default();
+        for i in order {
+            let (name, svc) = &mut self.tenants[i];
+            match svc.drain() {
+                Ok(results) => {
+                    out.answered.extend(results.into_iter().map(|r| (name.clone(), r)));
+                }
+                Err(e) => out.refused.push((name.clone(), e)),
+            }
+        }
+        out
+    }
+
+    /// Drain a single tenant's queue (EDF within the tenant).
+    pub fn drain_tenant(
+        &mut self,
+        name: &str,
+    ) -> std::result::Result<Vec<RequestResult>, ServeError> {
+        self.find_mut(name)?.drain()
+    }
+
+    /// One-shot query against a tenant.
+    pub fn predict(&mut self, name: &str, x: &Mat) -> Result<(Vec<f64>, Vec<f64>)> {
+        Ok(self.find_mut(name).map_err(anyhow::Error::from)?.predict(x)?)
+    }
+
+    /// Online data arrival for one tenant: its artifact is invalidated
+    /// (its staleness policy governs the window); other tenants'
+    /// snapshots are untouched.
+    pub fn extend_data(&mut self, name: &str, x_new: &Mat, y_new: &[f64]) -> Result<()> {
+        self.find_mut(name).map_err(anyhow::Error::from)?.extend_data(x_new, y_new)
+    }
+
+    /// Pay a tenant's refresh solve now (closing its staleness window).
+    pub fn refresh(&mut self, name: &str) -> Result<Arc<PosteriorArtifact>> {
+        self.find_mut(name).map_err(anyhow::Error::from)?.refresh()
+    }
+
+    /// A tenant's observability snapshot.
+    pub fn stats(&self, name: &str) -> Option<ServeStats> {
+        self.tenant(name).map(|s| s.stats())
+    }
+}

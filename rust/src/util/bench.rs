@@ -118,6 +118,10 @@ pub struct BenchRecord {
     pub d: usize,
     pub threads: usize,
     pub ns_per_op: f64,
+    /// Additional numeric fields serialised verbatim after `ns_per_op`
+    /// (e.g. the serving benches attach `p50_ns` / `p99_ns` /
+    /// `rows_per_sec` latency observability).
+    pub extra: Vec<(String, f64)>,
 }
 
 /// Collector for the `--json PATH` bench mode.
@@ -150,13 +154,30 @@ impl JsonReport {
         threads: usize,
         res: &BenchResult,
     ) {
+        self.push_with(op, backend, n, d, threads, res.median() * 1e9, &[]);
+    }
+
+    /// Record one case with extra numeric fields (serialised after
+    /// `ns_per_op`) and an explicit nanosecond figure — the serving
+    /// benches use this to attach p50/p99/rows-per-sec observability.
+    pub fn push_with(
+        &mut self,
+        op: &str,
+        backend: &str,
+        n: usize,
+        d: usize,
+        threads: usize,
+        ns_per_op: f64,
+        extra: &[(&str, f64)],
+    ) {
         self.records.push(BenchRecord {
             op: op.to_string(),
             backend: backend.to_string(),
             n,
             d,
             threads,
-            ns_per_op: res.median() * 1e9,
+            ns_per_op,
+            extra: extra.iter().map(|(k, v)| (k.to_string(), *v)).collect(),
         });
     }
 
@@ -168,15 +189,21 @@ impl JsonReport {
     pub fn render(&self) -> String {
         let mut s = String::from("[\n");
         for (i, r) in self.records.iter().enumerate() {
+            let extra: String = r
+                .extra
+                .iter()
+                .map(|(k, v)| format!(", \"{}\": {:.3}", json_escape(k), v))
+                .collect();
             s.push_str(&format!(
                 "  {{\"op\": \"{}\", \"backend\": \"{}\", \"n\": {}, \"d\": {}, \
-                 \"threads\": {}, \"ns_per_op\": {:.3}}}{}\n",
+                 \"threads\": {}, \"ns_per_op\": {:.3}{}}}{}\n",
                 json_escape(&r.op),
                 json_escape(&r.backend),
                 r.n,
                 r.d,
                 r.threads,
                 r.ns_per_op,
+                extra,
                 if i + 1 < self.records.len() { "," } else { "" }
             ));
         }
@@ -226,6 +253,26 @@ mod tests {
         // exactly one separating comma for two records
         assert_eq!(s.matches("},\n").count(), 1, "{s}");
         assert_eq!(j.records().len(), 2);
+    }
+
+    #[test]
+    fn json_report_renders_extra_fields_after_ns_per_op() {
+        let mut j = JsonReport::at("/tmp/unused.json");
+        j.push_with(
+            "serve-latency",
+            "tiled",
+            128,
+            4,
+            2,
+            1000.0,
+            &[("p50_ns", 1500.0), ("p99_ns", 9000.5), ("rows_per_sec", 250000.0)],
+        );
+        let s = j.render();
+        assert!(s.contains("\"ns_per_op\": 1000.000, \"p50_ns\": 1500.000"), "{s}");
+        assert!(s.contains("\"p99_ns\": 9000.500"), "{s}");
+        assert!(s.contains("\"rows_per_sec\": 250000.000"), "{s}");
+        // extras come before the closing brace, with no trailing comma
+        assert!(s.contains("250000.000}"), "{s}");
     }
 
     #[test]

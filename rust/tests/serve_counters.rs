@@ -1,22 +1,25 @@
-//! Property test: [`igp::serve::ServeStats`] must track a simple
+//! Property test: [`igp::serve::ServeCounters`] must track a simple
 //! reference model under any interleaving of enqueue / flush / predict /
 //! refresh / extend_data:
 //!
 //! * `rows_served` is the total of query rows actually answered;
-//! * `batches` grows by ceil(rows / batch) per non-empty serve;
+//! * `batches` counts evaluation blocks actually executed — on the dense
+//!   backend's generic fan-out that is ceil(rows / batch) per non-empty
+//!   serve, while the tiled backend coalesces each serve into ONE
+//!   internally-parallel pass (regression-tested below);
 //! * every non-empty serve (or explicit refresh) costs exactly one
 //!   artifact *build* when the snapshot is stale (first use, or after an
 //!   online arrival) and exactly one cache *hit* otherwise;
 //! * empty serves (zero query rows, flush of an empty queue) touch
-//!   nothing — no counters, no artifact work.
+//!   nothing — no counters, no artifact work, no latency samples.
 
 use igp::coordinator::{Trainer, TrainerOptions};
 use igp::data::{Dataset, DatasetSpec};
 use igp::estimator::EstimatorKind;
 use igp::kernels::{Hyperparams, KernelFamily};
 use igp::linalg::Mat;
-use igp::operators::DenseOperator;
-use igp::serve::{PredictionService, ServeOptions, ServeStats};
+use igp::operators::{DenseOperator, TiledOperator, TiledOptions};
+use igp::serve::{PredictionService, ServeCounters, ServeOptions};
 use igp::solvers::SolverKind;
 use igp::util::proptest::{check, PropConfig};
 use igp::util::rng::Rng;
@@ -65,11 +68,13 @@ fn service(rng: &mut Rng, size: usize, batch: usize) -> (PredictionService, usiz
     // deliberately no run(): the trainer starts with an empty artifact
     // cache, so the model below starts from all-zero counters
     let t = Trainer::new(opts, op, &ds);
-    (PredictionService::new(t, ServeOptions { batch, threads: 1 }), d)
+    let so = ServeOptions { batch, threads: 1, ..Default::default() };
+    (PredictionService::new(t, so), d)
 }
 
-/// What one non-empty serve of `rows` rows must do to the counters.
-fn model_serve(exp: &mut ServeStats, have_artifact: &mut bool, rows: usize, batch: usize) {
+/// What one non-empty serve of `rows` rows must do to the counters (dense
+/// backend: the generic fan-out executes ceil(rows / batch) blocks).
+fn model_serve(exp: &mut ServeCounters, have_artifact: &mut bool, rows: usize, batch: usize) {
     if *have_artifact {
         exp.artifact_hits += 1;
     } else {
@@ -80,9 +85,14 @@ fn model_serve(exp: &mut ServeStats, have_artifact: &mut bool, rows: usize, batc
     exp.batches += ((rows + batch - 1) / batch) as u64;
 }
 
-fn stats_check(label: &str, step: usize, got: ServeStats, exp: ServeStats) -> Result<(), String> {
+fn stats_check(
+    label: &str,
+    step: usize,
+    got: ServeCounters,
+    exp: ServeCounters,
+) -> Result<(), String> {
     if got != exp {
-        return Err(format!("op {step} ({label}): stats {got:?}, expected {exp:?}"));
+        return Err(format!("op {step} ({label}): counters {got:?}, expected {exp:?}"));
     }
     Ok(())
 }
@@ -95,10 +105,10 @@ fn prop_serve_stats_track_the_reference_model() {
         |rng, size| {
             let batch = 1 + rng.below(5);
             let (mut svc, d) = service(rng, size, batch);
-            let mut exp = ServeStats::default();
+            let mut exp = ServeCounters::default();
             let mut have_artifact = false;
             let mut pending = 0usize;
-            stats_check("init", 0, svc.stats(), exp)?;
+            stats_check("init", 0, svc.stats().counters, exp)?;
 
             for step in 1..=12 {
                 match rng.below(5) {
@@ -108,7 +118,7 @@ fn prop_serve_stats_track_the_reference_model() {
                         let x = Mat::from_fn(rows, d, |_, _| rng.gaussian());
                         svc.enqueue(&x).map_err(|e| e.to_string())?;
                         pending += rows;
-                        stats_check("enqueue", step, svc.stats(), exp)?;
+                        stats_check("enqueue", step, svc.stats().counters, exp)?;
                     }
                     1 => {
                         // flush serves exactly the queued rows, in one go
@@ -124,7 +134,7 @@ fn prop_serve_stats_track_the_reference_model() {
                             model_serve(&mut exp, &mut have_artifact, pending, batch);
                         }
                         pending = 0;
-                        stats_check("flush", step, svc.stats(), exp)?;
+                        stats_check("flush", step, svc.stats().counters, exp)?;
                         if svc.pending_rows() != 0 {
                             return Err(format!("op {step}: flush left a non-empty queue"));
                         }
@@ -141,7 +151,7 @@ fn prop_serve_stats_track_the_reference_model() {
                         if rows > 0 {
                             model_serve(&mut exp, &mut have_artifact, rows, batch);
                         }
-                        stats_check("predict", step, svc.stats(), exp)?;
+                        stats_check("predict", step, svc.stats().counters, exp)?;
                         if svc.pending_rows() != pending {
                             return Err(format!("op {step}: predict disturbed the queue"));
                         }
@@ -154,7 +164,7 @@ fn prop_serve_stats_track_the_reference_model() {
                         let y = rng.gaussian_vec(rows);
                         svc.extend_data(&x, &y).map_err(|e| e.to_string())?;
                         have_artifact = false;
-                        stats_check("extend_data", step, svc.stats(), exp)?;
+                        stats_check("extend_data", step, svc.stats().counters, exp)?;
                     }
                     _ => {
                         // explicit refresh: pays the build (or hit) without
@@ -166,7 +176,7 @@ fn prop_serve_stats_track_the_reference_model() {
                             exp.artifact_builds += 1;
                             have_artifact = true;
                         }
-                        stats_check("refresh", step, svc.stats(), exp)?;
+                        stats_check("refresh", step, svc.stats().counters, exp)?;
                     }
                 }
             }
@@ -184,6 +194,40 @@ fn empty_serves_do_not_touch_counters_or_the_artifact() {
     assert!(mean.is_empty() && var.is_empty());
     let (mean, var) = svc.flush().unwrap();
     assert!(mean.is_empty() && var.is_empty());
-    assert_eq!(svc.stats(), ServeStats::default());
+    assert_eq!(svc.stats().counters, ServeCounters::default());
+    assert_eq!(svc.stats().latency.count(), 0, "empty serves record no latency");
     assert!(svc.trainer().artifact_cache().is_empty(), "empty serve built an artifact");
+}
+
+#[test]
+fn tiled_backend_counts_executed_blocks_not_a_formula() {
+    // the tiled backend coalesces each serve into one internally-parallel
+    // pass: `batches` must count that ONE executed block, not the generic
+    // ceil(rows / batch) fan-out the dense backend runs
+    let mut rng = Rng::new(7);
+    let ds = toy_dataset(&mut rng, 24, 6, 2);
+    let op = Box::new(TiledOperator::with_options(
+        &ds,
+        4,
+        16,
+        TiledOptions { tile: 8, threads: 1 },
+    ));
+    let opts = TrainerOptions {
+        solver: SolverKind::Cg,
+        estimator: EstimatorKind::Pathwise,
+        warm_start: true,
+        lr: 0.05,
+        seed: 5,
+        ..Default::default()
+    };
+    let t = Trainer::new(opts, op, &ds);
+    let mut svc =
+        PredictionService::new(t, ServeOptions { batch: 2, threads: 1, ..Default::default() });
+    let xq = Mat::from_fn(9, 2, |_, _| rng.gaussian());
+    svc.predict(&xq).unwrap(); // ceil(9/2) = 5 generic blocks, but 1 executed
+    let c = svc.stats().counters;
+    assert_eq!(c.rows_served, 9);
+    assert_eq!(c.batches, 1, "tiled serve must count one executed block");
+    svc.predict(&xq).unwrap();
+    assert_eq!(svc.stats().counters.batches, 2);
 }

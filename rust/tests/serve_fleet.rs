@@ -1,0 +1,337 @@
+//! Multi-tenant fleet property test: interleaved traffic through a
+//! [`ModelFleet`] over ONE shared capacity-bounded artifact cache must be
+//! **bitwise-identical** to a fleet of isolated per-tenant services, while
+//! the shared LRU's per-tenant build / hit / eviction counters track an
+//! explicit reference model and the cache never exceeds its capacity.
+//!
+//! The tenants use the Standard estimator deliberately: its artifact
+//! builds draw their probes from an evaluation stream keyed by
+//! `(seed, step)` and touch no trainer state, so a rebuild forced by a
+//! cross-tenant LRU eviction is bitwise the evicted snapshot — which is
+//! exactly what makes the shared cache *safe* to bound.
+
+use std::collections::HashMap;
+
+use igp::coordinator::{Trainer, TrainerOptions};
+use igp::data::{Dataset, DatasetSpec};
+use igp::estimator::EstimatorKind;
+use igp::kernels::{Hyperparams, KernelFamily};
+use igp::linalg::Mat;
+use igp::operators::DenseOperator;
+use igp::serve::{
+    ModelFleet, PredictionService, ServeCounters, ServeError, ServeOptions, StalenessPolicy,
+};
+use igp::solvers::SolverKind;
+use igp::util::proptest::{check, PropConfig};
+use igp::util::rng::Rng;
+
+fn toy_dataset(rng: &mut Rng, n: usize, n_test: usize, d: usize) -> Dataset {
+    let x_train = Mat::from_fn(n, d, |_, _| rng.gaussian());
+    let y_train = rng.gaussian_vec(n);
+    let x_test = Mat::from_fn(n_test, d, |_, _| rng.gaussian());
+    let y_test = rng.gaussian_vec(n_test);
+    let spec = DatasetSpec {
+        name: "toy",
+        paper_n: 0,
+        n,
+        n_test,
+        d,
+        true_sigma: 0.3,
+        ell_lo: 0.5,
+        ell_hi: 1.5,
+        cluster_frac: 0.0,
+        family: KernelFamily::Rbf,
+        seed: 0,
+    };
+    Dataset { spec, x_train, y_train, x_test, y_test, true_hp: Hyperparams::ones(d) }
+}
+
+fn make_trainer(ds: &Dataset, seed: u64) -> Trainer {
+    let op = Box::new(DenseOperator::new(ds, 4, 16));
+    let opts = TrainerOptions {
+        solver: SolverKind::Cg,
+        estimator: EstimatorKind::Standard,
+        warm_start: true,
+        lr: 0.05,
+        seed,
+        ..Default::default()
+    };
+    // deliberately no run(): theta stays at its init, so cache keys vary
+    // only in (tenant, n) and Standard rebuilds are bitwise reproducible
+    Trainer::new(opts, op, ds)
+}
+
+fn bits_eq(a: &[f64], b: &[f64]) -> bool {
+    a.len() == b.len() && a.iter().zip(b).all(|(x, y)| x.to_bits() == y.to_bits())
+}
+
+/// Reference model of the shared LRU: keys in recency order (front =
+/// next victim), per-tenant counters written into `exp`.
+struct LruModel {
+    cap: usize,
+    keys: Vec<(usize, usize)>, // (tenant index, n)
+}
+
+impl LruModel {
+    /// One serve/refresh-time artifact access: a hit refreshes recency, a
+    /// miss builds (evicting the LRU entry of a full cache, charged to the
+    /// victim's tenant).
+    fn access(&mut self, exp: &mut [ServeCounters], t: usize, n: usize) {
+        if let Some(pos) = self.keys.iter().position(|k| *k == (t, n)) {
+            exp[t].artifact_hits += 1;
+            let k = self.keys.remove(pos);
+            self.keys.push(k);
+        } else {
+            if self.keys.len() >= self.cap {
+                let (victim, _) = self.keys.remove(0);
+                exp[victim].artifact_evictions += 1;
+            }
+            exp[t].artifact_builds += 1;
+            self.keys.push((t, n));
+        }
+    }
+
+    /// Online arrival: the tenant's snapshots drop, everyone else's stay.
+    fn invalidate(&mut self, t: usize) {
+        self.keys.retain(|k| k.0 != t);
+    }
+}
+
+#[test]
+fn prop_fleet_traffic_is_bitwise_isolated_and_lru_accounted() {
+    const NAMES: [&str; 3] = ["alpha", "beta", "gamma"];
+    const CACHE_CAP: usize = 2; // 3 tenants over 2 slots: constant churn
+    check(
+        "serve_fleet_model",
+        PropConfig { cases: 6, max_size: 6, ..Default::default() },
+        |rng, size| {
+            let gamma_cap = 6 + rng.below(4); // row admission cap, gamma only
+            let d = 1 + rng.below(3);
+            let batch = 1 + rng.below(5);
+
+            let mut fleet = ModelFleet::new(CACHE_CAP);
+            let mut mirrors: Vec<PredictionService> = Vec::new();
+            let mut ns: Vec<usize> = Vec::new();
+            for (i, name) in NAMES.iter().enumerate() {
+                let n = 16 + rng.below(8 + 4 * size.max(1));
+                let ds = toy_dataset(rng, n, 4, d);
+                let seed = 100 + size as u64 * 10 + i as u64;
+                let queue_cap = if i == 2 { gamma_cap } else { 0 };
+                let so = ServeOptions { batch, threads: 1, queue_cap, ..Default::default() };
+                fleet
+                    .add_tenant(name, make_trainer(&ds, seed), so)
+                    .map_err(|e| e.to_string())?;
+                // the isolated reference: an identical trainer behind a
+                // plain service with a PRIVATE cache and different batching
+                // — parity across them is the whole point of the test
+                let mso = ServeOptions { batch: 32, threads: 1, ..Default::default() };
+                mirrors.push(PredictionService::new(make_trainer(&ds, seed), mso));
+                ns.push(n);
+            }
+
+            let mut lru = LruModel { cap: CACHE_CAP, keys: Vec::new() };
+            let mut exp = vec![ServeCounters::default(); NAMES.len()];
+            // (id, deadline, rows) per tenant, in arrival order
+            let mut pending: Vec<Vec<(u64, Option<u64>, usize)>> =
+                vec![Vec::new(); NAMES.len()];
+            let mut stash: Vec<HashMap<u64, Mat>> = vec![HashMap::new(); NAMES.len()];
+
+            for step in 1..=10 {
+                let t = rng.below(NAMES.len());
+                let name = NAMES[t];
+                match rng.below(5) {
+                    0 | 1 => {
+                        // admit a deadline-tagged request (gamma may bounce
+                        // off its row cap — typed, counted, queue untouched)
+                        let rows = 1 + rng.below(4);
+                        let x = Mat::from_fn(rows, d, |_, _| rng.gaussian());
+                        let deadline =
+                            if rng.below(3) == 0 { None } else { Some(rng.below(10) as u64) };
+                        let queued: usize = pending[t].iter().map(|p| p.2).sum();
+                        let res = fleet.enqueue(name, &x, deadline);
+                        if t == 2 && queued + rows > gamma_cap {
+                            match res {
+                                Err(ServeError::QueueFull { .. }) => exp[t].rejected += 1,
+                                other => {
+                                    return Err(format!(
+                                        "op {step}: expected QueueFull, got {other:?}"
+                                    ))
+                                }
+                            }
+                        } else {
+                            let id = res.map_err(|e| format!("op {step}: {e}"))?;
+                            stash[t].insert(id, x);
+                            pending[t].push((id, deadline, rows));
+                        }
+                    }
+                    2 => {
+                        // fleet-wide drain: tenants by earliest deadline
+                        // (insertion order breaks ties), EDF within each
+                        let mut order: Vec<usize> =
+                            (0..NAMES.len()).filter(|&i| !pending[i].is_empty()).collect();
+                        order.sort_by_key(|&i| {
+                            (
+                                pending[i].iter().filter_map(|p| p.1).min().unwrap_or(u64::MAX),
+                                i,
+                            )
+                        });
+                        let mut expect_ids = Vec::new();
+                        for &i in &order {
+                            let mut reqs = pending[i].clone();
+                            reqs.sort_by_key(|p| (p.1.unwrap_or(u64::MAX), p.0));
+                            let rows: usize = reqs.iter().map(|p| p.2).sum();
+                            lru.access(&mut exp, i, ns[i]);
+                            exp[i].rows_served += rows as u64;
+                            exp[i].batches += ((rows + batch - 1) / batch) as u64;
+                            expect_ids.extend(reqs.iter().map(|p| (i, p.0)));
+                            pending[i].clear();
+                        }
+                        let out = fleet.drain();
+                        if !out.refused.is_empty() {
+                            return Err(format!(
+                                "op {step}: unexpected refusals {:?}",
+                                out.refused
+                            ));
+                        }
+                        let got: Vec<(usize, u64)> = out
+                            .answered
+                            .iter()
+                            .map(|(n, r)| {
+                                (NAMES.iter().position(|x| x == n).unwrap(), r.id)
+                            })
+                            .collect();
+                        if got != expect_ids {
+                            return Err(format!(
+                                "op {step}: drain order {got:?}, expected {expect_ids:?}"
+                            ));
+                        }
+                        // bitwise parity with the isolated services
+                        for (nm, r) in &out.answered {
+                            let i = NAMES.iter().position(|x| x == nm).unwrap();
+                            let x = stash[i]
+                                .remove(&r.id)
+                                .ok_or_else(|| format!("op {step}: unknown id {}", r.id))?;
+                            let (mean, var) =
+                                mirrors[i].predict(&x).map_err(|e| e.to_string())?;
+                            if !bits_eq(&r.mean, &mean) || !bits_eq(&r.var, &var) {
+                                return Err(format!(
+                                    "op {step}: tenant {nm} request {} drifted from its \
+                                     isolated mirror",
+                                    r.id
+                                ));
+                            }
+                            if r.stale {
+                                return Err(format!(
+                                    "op {step}: refresh_first must never serve stale"
+                                ));
+                            }
+                        }
+                    }
+                    3 => {
+                        // online arrival: same chunk to tenant and mirror;
+                        // only this tenant's shared-cache entries drop
+                        let rows = 1 + rng.below(3);
+                        let x = Mat::from_fn(rows, d, |_, _| rng.gaussian());
+                        let y = rng.gaussian_vec(rows);
+                        fleet.extend_data(name, &x, &y).map_err(|e| e.to_string())?;
+                        mirrors[t].extend_data(&x, &y).map_err(|e| e.to_string())?;
+                        lru.invalidate(t);
+                        ns[t] += rows;
+                    }
+                    _ => {
+                        // explicit refresh: pays the build/hit, serves no rows
+                        fleet.refresh(name).map_err(|e| e.to_string())?;
+                        lru.access(&mut exp, t, ns[t]);
+                    }
+                }
+
+                // invariants after every op
+                let len = fleet.cache().len();
+                if len != lru.keys.len() || len > CACHE_CAP {
+                    return Err(format!(
+                        "op {step}: shared cache holds {len} entries, model {} (cap {})",
+                        lru.keys.len(),
+                        CACHE_CAP
+                    ));
+                }
+                for (i, name) in NAMES.iter().enumerate() {
+                    let got = fleet.stats(name).unwrap().counters;
+                    if got != exp[i] {
+                        return Err(format!(
+                            "op {step}: tenant {name} counters {got:?}, expected {:?}",
+                            exp[i]
+                        ));
+                    }
+                }
+                let pend: usize = pending.iter().flatten().map(|p| p.2).sum();
+                if fleet.pending_rows() != pend {
+                    return Err(format!(
+                        "op {step}: fleet queues {} rows, model {pend}",
+                        fleet.pending_rows()
+                    ));
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn refused_tenants_keep_their_queues_and_the_rest_still_serve() {
+    let mut rng = Rng::new(3);
+    let d = 2;
+    let ds_a = toy_dataset(&mut rng, 20, 4, d);
+    let ds_b = toy_dataset(&mut rng, 24, 4, d);
+    let mut fleet = ModelFleet::new(2);
+    fleet
+        .add_tenant(
+            "strict",
+            make_trainer(&ds_a, 1),
+            ServeOptions {
+                batch: 8,
+                threads: 1,
+                policy: StalenessPolicy::Refuse,
+                ..Default::default()
+            },
+        )
+        .unwrap();
+    fleet
+        .add_tenant(
+            "fresh",
+            make_trainer(&ds_b, 2),
+            ServeOptions { batch: 8, threads: 1, ..Default::default() },
+        )
+        .unwrap();
+    // duplicate names are rejected up front
+    assert!(fleet.add_tenant("fresh", make_trainer(&ds_b, 9), Default::default()).is_err());
+
+    // put "strict" inside a staleness window
+    let xa = Mat::from_fn(3, d, |_, _| rng.gaussian());
+    fleet.predict("strict", &xa).unwrap();
+    let chunk = Mat::from_fn(2, d, |_, _| rng.gaussian());
+    let y = rng.gaussian_vec(2);
+    fleet.extend_data("strict", &chunk, &y).unwrap();
+
+    fleet.enqueue("strict", &xa, Some(1)).unwrap();
+    let xb = Mat::from_fn(2, d, |_, _| rng.gaussian());
+    fleet.enqueue("fresh", &xb, Some(5)).unwrap();
+
+    let out = fleet.drain();
+    assert_eq!(out.answered.len(), 1, "the fresh tenant must still be served");
+    assert_eq!(out.answered[0].0, "fresh");
+    assert_eq!(out.refused.len(), 1);
+    assert_eq!(out.refused[0].0, "strict");
+    assert!(matches!(out.refused[0].1, ServeError::Stale { .. }));
+    // nothing dropped: the refused queue survives until refresh()
+    assert_eq!(fleet.tenant("strict").unwrap().pending_rows(), 3);
+    fleet.refresh("strict").unwrap();
+    let served = fleet.drain_tenant("strict").unwrap();
+    assert_eq!(served.len(), 1);
+    assert_eq!(served[0].mean.len(), 3);
+
+    // unknown tenants get a typed error, not a panic
+    assert!(matches!(
+        fleet.enqueue("nobody", &xa, None),
+        Err(ServeError::UnknownTenant { .. })
+    ));
+}

@@ -62,7 +62,8 @@ fn service_on_the_test_split_is_bitwise_equal_to_evaluate() {
             .unwrap();
         let ref_var = pathwise_variances(&ref_samples, art.noise_var);
 
-        let mut service = PredictionService::new(t, ServeOptions { batch: 17, threads: 2 });
+        let mut service =
+            PredictionService::new(t, ServeOptions { batch: 17, threads: 2, ..Default::default() });
         let (mean, var) = service.predict(&ds.x_test).unwrap();
         assert!(bits_eq(&mean, &ref_mean), "{estimator:?}: service mean drifted");
         assert!(bits_eq(&var, &ref_var), "{estimator:?}: service variance drifted");
@@ -130,7 +131,8 @@ fn threaded_service_is_bitwise_equal_to_serial() {
     let serve = |threads: usize, batch: usize| -> (Vec<f64>, Vec<f64>) {
         let mut t = trainer(&ds, EstimatorKind::Pathwise, 21);
         t.run(3).unwrap();
-        let mut service = PredictionService::new(t, ServeOptions { batch, threads });
+        let mut service =
+            PredictionService::new(t, ServeOptions { batch, threads, ..Default::default() });
         service.predict(&xq).unwrap()
     };
     let (mean1, var1) = serve(1, 32);
@@ -163,7 +165,8 @@ fn artifact_refresh_after_extend_matches_a_from_scratch_rebuild() {
     a.run(4).unwrap();
     a.extend_data(x_new, y_new).unwrap();
     let solves_before = a.solve_count();
-    let mut service = PredictionService::new(a, ServeOptions { batch: 16, threads: 2 });
+    let mut service =
+        PredictionService::new(a, ServeOptions { batch: 16, threads: 2, ..Default::default() });
     let (mean_service, var_service) = service.predict(&xq).unwrap();
     assert_eq!(
         service.trainer().solve_count(),
@@ -238,7 +241,8 @@ fn service_queue_accumulates_and_flushes_in_order() {
     let mut all = q1.clone();
     all.append_rows(&q2);
 
-    let mut service = PredictionService::new(t, ServeOptions { batch: 8, threads: 1 });
+    let mut service =
+        PredictionService::new(t, ServeOptions { batch: 8, threads: 1, ..Default::default() });
     service.enqueue(&q1).unwrap();
     service.enqueue(&q2).unwrap();
     assert_eq!(service.pending_rows(), 33);
@@ -254,6 +258,6 @@ fn service_queue_accumulates_and_flushes_in_order() {
     let (m, v) = service.predict(&Mat::zeros(0, ds.spec.d)).unwrap();
     assert!(m.is_empty() && v.is_empty());
     let st = service.stats();
-    assert_eq!(st.rows_served, 66);
-    assert!(st.batches >= 10); // ceil(33/8) twice
+    assert_eq!(st.counters.rows_served, 66);
+    assert!(st.counters.batches >= 10); // ceil(33/8) twice (dense fan-out)
 }

@@ -1,0 +1,199 @@
+//! Staleness-policy and flush-error regressions for
+//! [`igp::serve::PredictionService`]:
+//!
+//! * a failed flush/drain restores the queue — the error path must not
+//!   drop queued queries (regression: an early version `mem::replace`d
+//!   the queue away before serving, losing everything on error);
+//! * `serve_stale` answers bitwise the pre-arrival answers with **zero**
+//!   solves, while `refresh_first` pays exactly **one** warm solve and
+//!   answers from the grown posterior — observably different answers;
+//! * `refuse` rejects with a typed [`ServeError::Stale`] (counted in
+//!   `rejected`) until `refresh()` closes the window.
+
+use igp::coordinator::{Trainer, TrainerOptions};
+use igp::data::{Dataset, DatasetSpec};
+use igp::estimator::EstimatorKind;
+use igp::kernels::{Hyperparams, KernelFamily};
+use igp::linalg::Mat;
+use igp::operators::DenseOperator;
+use igp::serve::{PredictionService, ServeError, ServeOptions, StalenessPolicy};
+use igp::solvers::SolverKind;
+use igp::util::rng::Rng;
+
+fn toy_dataset(rng: &mut Rng, n: usize, d: usize) -> Dataset {
+    let x_train = Mat::from_fn(n, d, |_, _| rng.gaussian());
+    let y_train = rng.gaussian_vec(n);
+    let x_test = Mat::from_fn(4, d, |_, _| rng.gaussian());
+    let y_test = rng.gaussian_vec(4);
+    let spec = DatasetSpec {
+        name: "toy",
+        paper_n: 0,
+        n,
+        n_test: 4,
+        d,
+        true_sigma: 0.3,
+        ell_lo: 0.5,
+        ell_hi: 1.5,
+        cluster_frac: 0.0,
+        family: KernelFamily::Rbf,
+        seed: 0,
+    };
+    Dataset { spec, x_train, y_train, x_test, y_test, true_hp: Hyperparams::ones(d) }
+}
+
+fn service(rng: &mut Rng, n: usize, d: usize, policy: StalenessPolicy) -> PredictionService {
+    let ds = toy_dataset(rng, n, d);
+    let op = Box::new(DenseOperator::new(&ds, 4, 16));
+    let opts = TrainerOptions {
+        solver: SolverKind::Cg,
+        estimator: EstimatorKind::Pathwise,
+        warm_start: true,
+        lr: 0.05,
+        seed: 11,
+        ..Default::default()
+    };
+    let t = Trainer::new(opts, op, &ds);
+    PredictionService::new(t, ServeOptions { batch: 8, threads: 1, policy, ..Default::default() })
+}
+
+fn bits_eq(a: &[f64], b: &[f64]) -> bool {
+    a.len() == b.len() && a.iter().zip(b).all(|(x, y)| x.to_bits() == y.to_bits())
+}
+
+#[test]
+fn failed_flush_restores_the_queue_instead_of_dropping_it() {
+    let mut rng = Rng::new(1);
+    let d = 2;
+    let mut svc = service(&mut rng, 20, d, StalenessPolicy::RefreshFirst);
+    let q1 = Mat::from_fn(3, d, |_, _| rng.gaussian());
+    let q2 = Mat::from_fn(5, d, |_, _| rng.gaussian());
+    svc.enqueue(&q1).unwrap();
+    svc.enqueue(&q2).unwrap();
+
+    // open a staleness window, then make the serve fail under `refuse`
+    let x_new = Mat::from_fn(2, d, |_, _| rng.gaussian());
+    let y_new = rng.gaussian_vec(2);
+    svc.extend_data(&x_new, &y_new).unwrap();
+    svc.set_policy(StalenessPolicy::Refuse);
+    assert!(svc.flush().is_err(), "refuse inside the staleness window must fail the flush");
+    assert_eq!(svc.pending_rows(), 8, "a failed flush dropped queued queries");
+    assert_eq!(svc.pending_requests(), 2);
+    assert_eq!(svc.stats().counters.rows_served, 0);
+
+    // the queue survived intact: the same flush succeeds once allowed
+    svc.set_policy(StalenessPolicy::RefreshFirst);
+    let (mean, var) = svc.flush().unwrap();
+    assert_eq!((mean.len(), var.len()), (8, 8));
+    assert_eq!(svc.pending_rows(), 0);
+    // ... answered in enqueue order: bitwise the one-shot answer
+    let mut all = q1.clone();
+    all.append_rows(&q2);
+    let (mean_once, var_once) = svc.predict(&all).unwrap();
+    assert!(bits_eq(&mean, &mean_once), "flushed mean drifted from the one-shot answer");
+    assert!(bits_eq(&var, &var_once), "flushed variance drifted from the one-shot answer");
+}
+
+#[test]
+fn serve_stale_is_bitwise_pre_arrival_and_refresh_first_pays_one_warm_solve() {
+    let mut rng = Rng::new(2);
+    let d = 3;
+    let mut svc = service(&mut rng, 24, d, StalenessPolicy::ServeStale);
+    let xq = Mat::from_fn(7, d, |_, _| rng.gaussian());
+
+    // pre-arrival serve: pays the one artifact build
+    let (mean_pre, var_pre) = svc.predict(&xq).unwrap();
+    let solves = svc.trainer().solve_count();
+
+    let x_new = Mat::from_fn(3, d, |_, _| rng.gaussian());
+    let y_new = rng.gaussian_vec(3);
+    svc.extend_data(&x_new, &y_new).unwrap();
+
+    // serve_stale: bitwise the pre-arrival answers, zero solves, counted
+    let (mean_stale, var_stale) = svc.predict(&xq).unwrap();
+    assert!(bits_eq(&mean_stale, &mean_pre), "stale mean must be bitwise pre-arrival");
+    assert!(bits_eq(&var_stale, &var_pre), "stale variance must be bitwise pre-arrival");
+    assert_eq!(svc.trainer().solve_count(), solves, "serve_stale must not solve");
+    assert_eq!(svc.stats().counters.stale_rows_served, 7);
+
+    // queued requests carry the stale marker too
+    svc.enqueue_with_deadline(&xq, Some(1)).unwrap();
+    let r = svc.drain().unwrap();
+    assert!(r[0].stale, "drained answers inside the window are marked stale");
+    assert!(bits_eq(&r[0].mean, &mean_pre));
+    assert_eq!(svc.trainer().solve_count(), solves);
+
+    // refresh_first: exactly one warm solve, and the answers move — the
+    // behavioural difference between the two policies
+    svc.set_policy(StalenessPolicy::RefreshFirst);
+    let (mean_fresh, var_fresh) = svc.predict(&xq).unwrap();
+    assert_eq!(
+        svc.trainer().solve_count(),
+        solves + 1,
+        "the refresh must cost exactly one (warm) solve"
+    );
+    assert!(
+        !bits_eq(&mean_fresh, &mean_stale),
+        "the grown posterior must answer differently from the stale snapshot"
+    );
+    assert!(var_fresh.iter().all(|v| *v > 0.0));
+    assert_eq!(
+        svc.stats().counters.stale_rows_served,
+        14,
+        "fresh serves are not stale-counted"
+    );
+
+    // window closed: the snapshot is gone, serve_stale now serves fresh
+    svc.set_policy(StalenessPolicy::ServeStale);
+    let (m2, _) = svc.predict(&xq).unwrap();
+    assert!(bits_eq(&m2, &mean_fresh));
+}
+
+#[test]
+fn refuse_rejects_typed_until_refresh_closes_the_window() {
+    let mut rng = Rng::new(3);
+    let d = 2;
+    let mut svc = service(&mut rng, 18, d, StalenessPolicy::Refuse);
+    let xq = Mat::from_fn(4, d, |_, _| rng.gaussian());
+    // no arrival yet: refuse is inert
+    svc.predict(&xq).unwrap();
+
+    let x_new = Mat::from_fn(2, d, |_, _| rng.gaussian());
+    let y_new = rng.gaussian_vec(2);
+    svc.extend_data(&x_new, &y_new).unwrap();
+    let n_new = svc.trainer().operator().n();
+
+    svc.enqueue_with_deadline(&xq, Some(1)).unwrap();
+    let err = svc.drain().unwrap_err();
+    assert_eq!(err, ServeError::Stale { artifact_n: 18, data_n: n_new });
+    assert_eq!(svc.pending_rows(), 4, "a refused drain must keep the queue");
+    assert!(svc.predict(&xq).is_err());
+    assert_eq!(svc.stats().counters.rejected, 2, "each refused serve attempt is counted");
+    assert_eq!(svc.stats().counters.rows_served, 4, "only the pre-arrival serve answered");
+
+    // refresh() closes the window; the kept queue then drains fine
+    svc.refresh().unwrap();
+    let r = svc.drain().unwrap();
+    assert_eq!(r.len(), 1);
+    assert_eq!(r[0].mean.len(), 4);
+    assert!(!r[0].stale);
+    assert_eq!(svc.pending_rows(), 0);
+}
+
+#[test]
+fn serve_stale_without_a_prior_snapshot_pays_the_build_and_serves_fresh() {
+    let mut rng = Rng::new(4);
+    let d = 2;
+    let mut svc = service(&mut rng, 16, d, StalenessPolicy::ServeStale);
+    // arrival before anything was ever served: no snapshot to answer from,
+    // so the first query falls through to the (warm) build
+    let x_new = Mat::from_fn(2, d, |_, _| rng.gaussian());
+    let y_new = rng.gaussian_vec(2);
+    svc.extend_data(&x_new, &y_new).unwrap();
+    let xq = Mat::from_fn(3, d, |_, _| rng.gaussian());
+    let (mean, _var) = svc.predict(&xq).unwrap();
+    assert_eq!(mean.len(), 3);
+    let c = svc.stats().counters;
+    assert_eq!(c.stale_rows_served, 0, "nothing stale was ever served");
+    assert_eq!(c.artifact_builds, 1);
+    assert_eq!(svc.trainer().solve_count(), 1);
+}

@@ -258,7 +258,7 @@ fn prop_predict_paths_are_bitwise_equal() {
         bitwise_slice("predict_at mean", &m1, &m2)?;
         bitwise("predict_at samples", &s1, &s2)?;
         let batch = 1 + rng.below(tq + 4);
-        let (m3, s3) = c
+        let (m3, s3, _) = c
             .sharded
             .predict_batched(&xq, batch, 0, &vy, &zhat, &omega0, &wts)
             .map_err(|e| e.to_string())?;
