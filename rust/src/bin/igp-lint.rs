@@ -1,0 +1,120 @@
+//! `igp-lint` — the determinism & panic-safety lint pass, as a binary.
+//!
+//! ```text
+//! igp-lint [--root DIR] [--baseline FILE] [--json FILE] [--update-baseline]
+//! ```
+//!
+//! Exit codes: 0 clean, 1 violations found, 2 usage or I/O error.  The
+//! default root is this crate's own directory, so `cargo run --bin
+//! igp-lint` lints the tree it was built from; the default baseline is
+//! `lint-baseline.json` at the repo root (one level above the crate).
+
+use igp::lint::{self, Baseline};
+use igp::util::bench::{render_flat_records, JsonField};
+use std::path::PathBuf;
+use std::process::ExitCode;
+
+const USAGE: &str = "usage: igp-lint [--root DIR] [--baseline FILE] [--json FILE] [--update-baseline]";
+
+fn main() -> ExitCode {
+    match run() {
+        Ok(code) => code,
+        Err(msg) => {
+            eprintln!("igp-lint: error: {msg}");
+            ExitCode::from(2)
+        }
+    }
+}
+
+fn run() -> Result<ExitCode, String> {
+    let mut root = PathBuf::from(env!("CARGO_MANIFEST_DIR"));
+    let mut baseline_path: Option<PathBuf> = None;
+    let mut json_path: Option<PathBuf> = None;
+    let mut update = false;
+    let mut args = std::env::args().skip(1);
+    while let Some(arg) = args.next() {
+        match arg.as_str() {
+            "--root" => root = PathBuf::from(args.next().ok_or("--root needs a directory")?),
+            "--baseline" => {
+                baseline_path = Some(PathBuf::from(args.next().ok_or("--baseline needs a file")?))
+            }
+            "--json" => json_path = Some(PathBuf::from(args.next().ok_or("--json needs a file")?)),
+            "--update-baseline" => update = true,
+            "--help" | "-h" => {
+                println!("{USAGE}");
+                return Ok(ExitCode::SUCCESS);
+            }
+            other => return Err(format!("unknown argument {other:?}\n{USAGE}")),
+        }
+    }
+    let baseline_path = baseline_path.unwrap_or_else(|| root.join("../lint-baseline.json"));
+
+    let files = lint::collect_sources(&root)
+        .map_err(|e| format!("scanning {}: {e}", root.display()))?;
+
+    if update {
+        let fresh = lint::baseline_from(&files);
+        std::fs::write(&baseline_path, fresh.render())
+            .map_err(|e| format!("writing {}: {e}", baseline_path.display()))?;
+        println!("igp-lint: baseline updated: {}", baseline_path.display());
+    }
+
+    let text = std::fs::read_to_string(&baseline_path).map_err(|e| {
+        format!(
+            "reading baseline {}: {e} (run with --update-baseline to create it)",
+            baseline_path.display()
+        )
+    })?;
+    let baseline = Baseline::parse(&text)
+        .map_err(|e| format!("parsing {}: {e}", baseline_path.display()))?;
+
+    let report = lint::lint_sources(&files, Some(&baseline));
+
+    for v in &report.violations {
+        if v.line == 0 {
+            println!("{}: [{}] {}", v.file, v.rule, v.message);
+        } else {
+            println!("{}:{}: [{}] {}", v.file, v.line, v.rule, v.message);
+        }
+    }
+    for note in &report.notes {
+        println!("note: {note}");
+    }
+
+    if let Some(path) = json_path {
+        let records: Vec<Vec<(String, JsonField)>> = report
+            .violations
+            .iter()
+            .map(|v| {
+                vec![
+                    ("rule".to_string(), JsonField::Str(v.rule.to_string())),
+                    ("file".to_string(), JsonField::Str(v.file.clone())),
+                    ("line".to_string(), JsonField::Int(v.line as i64)),
+                    ("message".to_string(), JsonField::Str(v.message.clone())),
+                ]
+            })
+            .collect();
+        std::fs::write(&path, render_flat_records(&records))
+            .map_err(|e| format!("writing {}: {e}", path.display()))?;
+    }
+
+    if report.violations.is_empty() {
+        println!(
+            "igp-lint: clean — {} files scanned, {} suppression(s) honoured",
+            report.files_scanned, report.suppressed
+        );
+        Ok(ExitCode::SUCCESS)
+    } else {
+        println!(
+            "igp-lint: {} violation(s) across {} file(s)",
+            report.violations.len(),
+            {
+                let mut f: Vec<&str> = report.violations.iter().map(|v| v.file.as_str()).collect();
+                f.sort();
+                f.dedup();
+                f.len()
+            }
+        );
+        Ok(ExitCode::from(1))
+    }
+}

@@ -53,6 +53,7 @@ pub mod estimator;
 pub mod gp;
 pub mod kernels;
 pub mod linalg;
+pub mod lint;
 pub mod operators;
 pub mod optim;
 pub mod runtime;

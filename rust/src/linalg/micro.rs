@@ -47,6 +47,21 @@ impl Scalar for f32 {
     }
 }
 
+/// Order-canonical float sum: a plain ascending-index fold, bitwise
+/// identical to `xs.iter().sum::<f64>()`.  Solver/operator code routes
+/// scalar reductions through this (or the recurrence/parallel helpers)
+/// instead of ad-hoc `.sum()` calls so the association order that the
+/// bitwise-parity contracts depend on is named in exactly one place —
+/// the `ordered-reduction` lint rule enforces the routing.
+#[inline(always)]
+pub fn sum(xs: &[f64]) -> f64 {
+    let mut s = 0.0;
+    for &x in xs {
+        s += x;
+    }
+    s
+}
+
 /// Plain ascending-order dot product — the canonical association every
 /// other kernel here reproduces.  Also the single source of the squared
 /// row norms cached in `ScaledX` (the Gram-trick diagonal is exactly zero
@@ -119,6 +134,16 @@ pub fn axpy(out: &mut [f64], a: f64, b: &[f64]) {
 mod tests {
     use super::*;
     use crate::util::rng::Rng;
+
+    #[test]
+    fn sum_is_bitwise_equal_to_iter_sum() {
+        let mut rng = Rng::new(11);
+        for n in [0, 1, 2, 5, 17, 64] {
+            let xs = rng.gaussian_vec(n);
+            let want: f64 = xs.iter().sum();
+            assert_eq!(sum(&xs).to_bits(), want.to_bits(), "n={n}");
+        }
+    }
 
     #[test]
     fn dot4_is_bitwise_equal_to_dot() {

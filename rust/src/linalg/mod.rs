@@ -15,6 +15,38 @@ pub use chol::Cholesky;
 pub use pivoted::{pivoted_cholesky, pivoted_cholesky_threaded, PivotedCholesky};
 pub use power::{inverse_power_iteration, power_iteration};
 
+/// Typed errors of the factorisation layer.
+///
+/// The vendored mini-`anyhow` has no downcasting, so failures callers need
+/// to *match on* (a preconditioner build hitting a poisoned hyperparameter,
+/// say, which solvers turn into a divergence report rather than a crash)
+/// are concrete enums, mirroring `serve::ServeError`.  At `anyhow` API
+/// boundaries `?` still converts via the blanket `From<E: Error>`.
+#[derive(Clone, Debug, PartialEq)]
+pub enum LinalgError {
+    /// A factorisation input carried a NaN/inf diagonal entry — typically a
+    /// non-finite kernel variance from a poisoned hyperparameter.
+    NonFiniteDiagonal { index: usize, value: f64 },
+    /// A dense factorisation failed (`what` names the matrix being
+    /// factorised, `detail` carries the underlying report).
+    Factorization { what: &'static str, detail: String },
+}
+
+impl std::fmt::Display for LinalgError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            LinalgError::NonFiniteDiagonal { index, value } => {
+                write!(f, "non-finite diagonal entry {value} at index {index}")
+            }
+            LinalgError::Factorization { what, detail } => {
+                write!(f, "factorisation of {what} failed: {detail}")
+            }
+        }
+    }
+}
+
+impl std::error::Error for LinalgError {}
+
 /// Row-major dense matrix.
 #[derive(Clone, Debug, PartialEq)]
 pub struct Mat {
@@ -226,6 +258,7 @@ impl Mat {
 
     pub fn trace(&self) -> f64 {
         assert_eq!(self.rows, self.cols);
+        // lint:allow(ordered-reduction): serial ascending fold over a strided diagonal is already canonical
         (0..self.rows).map(|i| self[(i, i)]).sum()
     }
 }

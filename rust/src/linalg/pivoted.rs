@@ -3,7 +3,7 @@
 //! al. 2019).  Works matrix-free: only the diagonal and selected rows of K
 //! are evaluated, so the cost is O(rank^2 n + rank * n * d).
 
-use super::Mat;
+use super::{LinalgError, Mat};
 use crate::util::parallel::{num_threads, parallel_row_blocks};
 
 /// Partial Cholesky factor: K ~= L L^T with L [n, rank].
@@ -18,12 +18,17 @@ pub struct PivotedCholesky {
 const PAR_MIN_ELEMS: usize = 1 << 16;
 
 /// `diag[i]` = K_ii; `row(i)` returns the dense row K_i.
+///
+/// A non-finite diagonal entry (NaN/inf kernel variance, e.g. from a
+/// poisoned hyperparameter) is a typed [`LinalgError::NonFiniteDiagonal`]
+/// instead of a panic, so preconditioner builds degrade into a reported
+/// failure rather than killing the training run.
 pub fn pivoted_cholesky(
     n: usize,
     rank: usize,
     diag: &[f64],
     row: impl FnMut(usize) -> Vec<f64>,
-) -> PivotedCholesky {
+) -> Result<PivotedCholesky, LinalgError> {
     pivoted_cholesky_threaded(n, rank, diag, row, 0)
 }
 
@@ -39,7 +44,7 @@ pub fn pivoted_cholesky_threaded(
     diag: &[f64],
     mut row: impl FnMut(usize) -> Vec<f64>,
     threads: usize,
-) -> PivotedCholesky {
+) -> Result<PivotedCholesky, LinalgError> {
     assert_eq!(diag.len(), n);
     let rank = rank.min(n);
     let t = num_threads(if threads == 0 { None } else { Some(threads) });
@@ -47,19 +52,31 @@ pub fn pivoted_cholesky_threaded(
     let mut l = Mat::zeros(n, rank);
     let mut pivots = Vec::with_capacity(rank);
     for k in 0..rank {
-        // greedy pivot: largest remaining diagonal
-        let (p, &dp) = d
-            .iter()
-            .enumerate()
-            .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
-            .unwrap();
+        // Greedy pivot: largest remaining diagonal under the *total* float
+        // order (partial_cmp().unwrap() panicked on NaN).  Last max wins,
+        // matching max_by's tie rule, so pivot sequences — and therefore
+        // factors — are bit-for-bit what the old comparator produced on
+        // finite input.
+        let mut p = 0;
+        for i in 1..n {
+            if d[i].total_cmp(&d[p]).is_ge() {
+                p = i;
+            }
+        }
+        let dp = d[p];
+        // NaN orders above +inf in the total order, so a poisoned entry is
+        // always *selected* — catch it here and report, rather than letting
+        // NaN spread through the factor.
+        if !dp.is_finite() {
+            return Err(LinalgError::NonFiniteDiagonal { index: p, value: dp });
+        }
         if dp <= 1e-12 {
             // numerically exhausted: shrink rank
             let mut small = Mat::zeros(n, k);
             for i in 0..n {
                 small.row_mut(i).copy_from_slice(&l.row(i)[..k]);
             }
-            return PivotedCholesky { l: small, pivots };
+            return Ok(PivotedCholesky { l: small, pivots });
         }
         pivots.push(p);
         let sqrt_dp = dp.sqrt();
@@ -89,7 +106,7 @@ pub fn pivoted_cholesky_threaded(
         // exact zero for the pivot column residual
         d[p] = 0.0;
     }
-    PivotedCholesky { l, pivots }
+    Ok(PivotedCholesky { l, pivots })
 }
 
 impl PivotedCholesky {
@@ -120,7 +137,7 @@ mod tests {
     fn full_rank_reconstructs_low_rank_matrix() {
         let a = spd(24, 1);
         let diag: Vec<f64> = (0..24).map(|i| a[(i, i)]).collect();
-        let pc = pivoted_cholesky(24, 8, &diag, |i| a.row(i).to_vec());
+        let pc = pivoted_cholesky(24, 8, &diag, |i| a.row(i).to_vec()).unwrap();
         let rec = pc.reconstruct();
         assert!(rec.max_abs_diff(&a) < 1e-6, "{}", rec.max_abs_diff(&a));
     }
@@ -135,7 +152,7 @@ mod tests {
         let diag: Vec<f64> = (0..n).map(|i| a[(i, i)]).collect();
         let mut prev = f64::INFINITY;
         for rank in [2, 8, 16, 32] {
-            let pc = pivoted_cholesky(n, rank, &diag, |i| a.row(i).to_vec());
+            let pc = pivoted_cholesky(n, rank, &diag, |i| a.row(i).to_vec()).unwrap();
             let mut err = pc.reconstruct();
             err.sub_assign(&a);
             let e = err.fro_norm();
@@ -149,7 +166,7 @@ mod tests {
     fn pivots_are_distinct() {
         let a = spd(16, 3);
         let diag: Vec<f64> = (0..16).map(|i| a[(i, i)]).collect();
-        let pc = pivoted_cholesky(16, 4, &diag, |i| a.row(i).to_vec());
+        let pc = pivoted_cholesky(16, 4, &diag, |i| a.row(i).to_vec()).unwrap();
         let mut p = pc.pivots.clone();
         p.sort_unstable();
         p.dedup();
@@ -164,9 +181,11 @@ mod tests {
         let mut a = g.matmul(&g.transpose());
         a.add_diag(0.2);
         let diag: Vec<f64> = (0..n).map(|i| a[(i, i)]).collect();
-        let serial = pivoted_cholesky_threaded(n, 12, &diag, |i| a.row(i).to_vec(), 1);
+        let serial =
+            pivoted_cholesky_threaded(n, 12, &diag, |i| a.row(i).to_vec(), 1).unwrap();
         for t in [2, 4] {
-            let par = pivoted_cholesky_threaded(n, 12, &diag, |i| a.row(i).to_vec(), t);
+            let par =
+                pivoted_cholesky_threaded(n, 12, &diag, |i| a.row(i).to_vec(), t).unwrap();
             assert_eq!(par.pivots, serial.pivots, "t={t}");
             assert_eq!(par.l, serial.l, "t={t}");
         }
@@ -176,8 +195,32 @@ mod tests {
     fn rank_capped_at_numerical_rank() {
         let a = spd(20, 4); // numerical rank ~4
         let diag: Vec<f64> = (0..20).map(|i| a[(i, i)]).collect();
-        let pc = pivoted_cholesky(20, 16, &diag, |i| a.row(i).to_vec());
+        let pc = pivoted_cholesky(20, 16, &diag, |i| a.row(i).to_vec()).unwrap();
         assert!(pc.rank() <= 16);
         assert!(pc.rank() >= 4);
+    }
+
+    #[test]
+    fn nan_diagonal_is_a_typed_error_not_a_panic() {
+        // Regression: pivot selection used max_by(partial_cmp().unwrap()),
+        // which panics as soon as a NaN diagonal entry reaches the
+        // comparator.  Under total_cmp the NaN is *selected* (it orders
+        // above +inf) and reported as a typed error naming the bad index.
+        let diag = vec![1.0, f64::NAN, 2.0];
+        let err = pivoted_cholesky(3, 2, &diag, |_| vec![0.0; 3]).unwrap_err();
+        match err {
+            LinalgError::NonFiniteDiagonal { index, value } => {
+                assert_eq!(index, 1);
+                assert!(value.is_nan());
+            }
+            other => panic!("wrong error variant: {other:?}"),
+        }
+    }
+
+    #[test]
+    fn infinite_diagonal_is_a_typed_error_too() {
+        let diag = vec![1.0, 2.0, f64::INFINITY, 3.0];
+        let err = pivoted_cholesky(4, 2, &diag, |_| vec![0.0; 4]).unwrap_err();
+        assert!(matches!(err, LinalgError::NonFiniteDiagonal { index: 2, .. }), "{err:?}");
     }
 }

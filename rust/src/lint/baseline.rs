@@ -1,0 +1,228 @@
+//! The ratchet baseline: per-rule, per-file grandfathered violation
+//! counts, stored as `lint-baseline.json` at the repo root.  Counts may
+//! only go down — a count above baseline fails the run, a count below
+//! it asks for `--update-baseline` so the ceiling follows the progress.
+//!
+//! Parsing and rendering are hand-rolled over the one fixed shape the
+//! file uses (the crate is dependency-free by policy):
+//!
+//! ```json
+//! {
+//!   "version": 1,
+//!   "rules": { "<rule>": { "<file>": <count> } }
+//! }
+//! ```
+
+use std::collections::BTreeMap;
+
+/// Grandfathered counts, keyed rule → file → count.  `BTreeMap` keeps
+/// rendering (and therefore diffs) stable.
+#[derive(Clone, Debug, Default, PartialEq, Eq)]
+pub struct Baseline {
+    pub rules: BTreeMap<String, BTreeMap<String, usize>>,
+}
+
+impl Baseline {
+    pub fn count(&self, rule: &str, file: &str) -> usize {
+        self.rules.get(rule).and_then(|m| m.get(file)).copied().unwrap_or(0)
+    }
+
+    pub fn set(&mut self, rule: &str, file: &str, count: usize) {
+        if count > 0 {
+            self.rules.entry(rule.to_string()).or_default().insert(file.to_string(), count);
+        }
+    }
+
+    /// Strict parse of the baseline shape above.
+    pub fn parse(text: &str) -> Result<Baseline, String> {
+        let mut p = Parser { b: text.as_bytes(), i: 0 };
+        let mut out = Baseline::default();
+        p.ws();
+        p.eat(b'{')?;
+        let mut first = true;
+        loop {
+            p.ws();
+            if p.peek() == Some(b'}') {
+                p.i += 1;
+                break;
+            }
+            if !first {
+                p.eat(b',')?;
+                p.ws();
+            }
+            first = false;
+            let key = p.string()?;
+            p.ws();
+            p.eat(b':')?;
+            p.ws();
+            match key.as_str() {
+                "version" => {
+                    let v = p.number()?;
+                    if v != 1 {
+                        return Err(format!("unsupported baseline version {v}"));
+                    }
+                }
+                "rules" => {
+                    p.eat(b'{')?;
+                    let mut first_rule = true;
+                    loop {
+                        p.ws();
+                        if p.peek() == Some(b'}') {
+                            p.i += 1;
+                            break;
+                        }
+                        if !first_rule {
+                            p.eat(b',')?;
+                            p.ws();
+                        }
+                        first_rule = false;
+                        let rule = p.string()?;
+                        p.ws();
+                        p.eat(b':')?;
+                        p.ws();
+                        p.eat(b'{')?;
+                        let mut files = BTreeMap::new();
+                        let mut first_file = true;
+                        loop {
+                            p.ws();
+                            if p.peek() == Some(b'}') {
+                                p.i += 1;
+                                break;
+                            }
+                            if !first_file {
+                                p.eat(b',')?;
+                                p.ws();
+                            }
+                            first_file = false;
+                            let file = p.string()?;
+                            p.ws();
+                            p.eat(b':')?;
+                            p.ws();
+                            let count = p.number()?;
+                            files.insert(file, count);
+                        }
+                        out.rules.insert(rule, files);
+                    }
+                }
+                other => return Err(format!("unknown baseline key {other:?}")),
+            }
+        }
+        p.ws();
+        if p.i != p.b.len() {
+            return Err(format!("trailing bytes at offset {}", p.i));
+        }
+        Ok(out)
+    }
+
+    /// Render in the exact shape `parse` accepts, keys sorted, with a
+    /// trailing newline (diff-friendly; byte-stable across runs).
+    pub fn render(&self) -> String {
+        let mut s = String::from("{\n  \"version\": 1,\n  \"rules\": {");
+        let live: Vec<_> = self.rules.iter().filter(|(_, files)| !files.is_empty()).collect();
+        for (ri, (rule, files)) in live.iter().enumerate() {
+            s.push_str(if ri == 0 { "\n" } else { ",\n" });
+            s.push_str(&format!("    {}: {{\n", quote(rule)));
+            for (fi, (file, count)) in files.iter().enumerate() {
+                if fi > 0 {
+                    s.push_str(",\n");
+                }
+                s.push_str(&format!("      {}: {count}", quote(file)));
+            }
+            s.push_str("\n    }");
+        }
+        if live.is_empty() {
+            s.push_str("}\n}\n");
+        } else {
+            s.push_str("\n  }\n}\n");
+        }
+        s
+    }
+}
+
+fn quote(s: &str) -> String {
+    let mut out = String::with_capacity(s.len() + 2);
+    out.push('"');
+    for c in s.chars() {
+        match c {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            _ => out.push(c),
+        }
+    }
+    out.push('"');
+    out
+}
+
+struct Parser<'a> {
+    b: &'a [u8],
+    i: usize,
+}
+
+impl Parser<'_> {
+    fn peek(&self) -> Option<u8> {
+        self.b.get(self.i).copied()
+    }
+
+    fn ws(&mut self) {
+        while self.peek().is_some_and(|c| c.is_ascii_whitespace()) {
+            self.i += 1;
+        }
+    }
+
+    fn eat(&mut self, want: u8) -> Result<(), String> {
+        match self.peek() {
+            Some(c) if c == want => {
+                self.i += 1;
+                Ok(())
+            }
+            got => Err(format!(
+                "expected {:?} at offset {}, found {:?}",
+                want as char,
+                self.i,
+                got.map(|c| c as char)
+            )),
+        }
+    }
+
+    fn string(&mut self) -> Result<String, String> {
+        self.eat(b'"')?;
+        let mut out = Vec::new();
+        loop {
+            match self.peek() {
+                Some(b'"') => {
+                    self.i += 1;
+                    return String::from_utf8(out).map_err(|e| e.to_string());
+                }
+                Some(b'\\') => {
+                    self.i += 1;
+                    match self.peek() {
+                        Some(c @ (b'"' | b'\\' | b'/')) => {
+                            out.push(c);
+                            self.i += 1;
+                        }
+                        other => return Err(format!("unsupported escape {other:?}")),
+                    }
+                }
+                Some(c) => {
+                    out.push(c);
+                    self.i += 1;
+                }
+                None => return Err("unterminated string".into()),
+            }
+        }
+    }
+
+    fn number(&mut self) -> Result<usize, String> {
+        let start = self.i;
+        while self.peek().is_some_and(|c| c.is_ascii_digit()) {
+            self.i += 1;
+        }
+        if self.i == start {
+            return Err(format!("expected a number at offset {start}"));
+        }
+        std::str::from_utf8(&self.b[start..self.i])
+            .ok()
+            .and_then(|s| s.parse().ok())
+            .ok_or_else(|| format!("bad number at offset {start}"))
+    }
+}

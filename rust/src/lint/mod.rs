@@ -1,0 +1,173 @@
+//! # `igp-lint` — determinism & panic-safety static analysis
+//!
+//! A zero-dependency lint pass over `rust/src/**` enforcing the
+//! invariants this codebase's correctness arguments rest on: total
+//! float orderings (no NaN panics), order-canonical reductions (bitwise
+//! parallel/serial parity), centralised threading, deterministic
+//! iteration, the f32/f64 precision contract, and a ratcheted ban on
+//! `unwrap`/`expect` in library code.  See the rule table in
+//! `rust/README.md` for the motivating bug behind each rule.
+//!
+//! The pass has three layers:
+//!
+//! * [`scan`] — strips comments/strings (offset-preserving), masks test
+//!   regions, and parses suppression directives of the form
+//!   `lint:allow(<rule>): <why>` (in a line comment; covers that line
+//!   and the next; the reason is mandatory).
+//! * [`rules`] — pattern rules over the stripped text.
+//! * [`baseline`] — the `lint-baseline.json` ratchet for grandfathered
+//!   `lib-unwrap` sites: counts may only go down.
+//!
+//! Entry points: [`lint_sources`] for in-memory fixtures (tests) and
+//! [`lint_tree`] for a crate directory (the `igp-lint` binary and the
+//! tree-cleanliness integration test).
+
+pub mod baseline;
+pub mod rules;
+pub mod scan;
+
+pub use baseline::Baseline;
+pub use rules::{Violation, MALFORMED_ALLOW, RATCHETED, RULES};
+
+use scan::SourceFile;
+use std::collections::BTreeMap;
+use std::io;
+use std::path::Path;
+
+/// Outcome of a lint run: actionable findings plus advisory notes
+/// (ratchet-tightening opportunities).  Clean means `violations` empty.
+#[derive(Debug, Default)]
+pub struct LintReport {
+    pub violations: Vec<Violation>,
+    pub notes: Vec<String>,
+    pub files_scanned: usize,
+    pub suppressed: usize,
+}
+
+/// Lint in-memory `(path, text)` pairs.  Paths are crate-relative with
+/// `/` separators (`src/...`) — rule scoping keys off them.  With a
+/// baseline, ratcheted rules are folded into per-file count comparisons;
+/// without one, every ratcheted violation is reported individually.
+pub fn lint_sources(files: &[(String, String)], baseline: Option<&Baseline>) -> LintReport {
+    let mut report = LintReport { files_scanned: files.len(), ..LintReport::default() };
+    // per ratcheted rule: file -> current count (post-suppression)
+    let mut ratchet_counts: BTreeMap<&'static str, BTreeMap<String, usize>> = BTreeMap::new();
+    for (path, text) in files {
+        let sf = SourceFile::new(path, text);
+        for allow in &sf.allows {
+            let names_known = allow.rules.iter().any(|r| RULES.contains(&r.as_str()));
+            if names_known && !allow.reason_ok {
+                report.violations.push(Violation {
+                    rule: MALFORMED_ALLOW,
+                    file: path.clone(),
+                    line: allow.line,
+                    message: "suppression without a reason; every allow must say why \
+                              the invariant is safe to waive here"
+                        .into(),
+                });
+            }
+        }
+        for v in rules::check_file(&sf) {
+            if suppressed(&sf, v.rule, v.line) {
+                report.suppressed += 1;
+            } else if RATCHETED.contains(&v.rule) && baseline.is_some() {
+                *ratchet_counts.entry(v.rule).or_default().entry(v.file).or_insert(0) += 1;
+            } else {
+                report.violations.push(v);
+            }
+        }
+    }
+    if let Some(base) = baseline {
+        for &rule in RATCHETED {
+            let current = ratchet_counts.remove(rule).unwrap_or_default();
+            let baseline_files = base.rules.get(rule).cloned().unwrap_or_default();
+            let mut all_files: Vec<&String> = current.keys().chain(baseline_files.keys()).collect();
+            all_files.sort();
+            all_files.dedup();
+            for file in all_files {
+                let cur = current.get(file).copied().unwrap_or(0);
+                let grand = baseline_files.get(file).copied().unwrap_or(0);
+                if cur > grand {
+                    report.violations.push(Violation {
+                        rule,
+                        file: file.clone(),
+                        line: 0,
+                        message: format!(
+                            "{cur} {rule} sites but the baseline grandfathers {grand}; \
+                             fix the new sites (the ratchet only goes down)"
+                        ),
+                    });
+                } else if cur < grand {
+                    report.notes.push(format!(
+                        "{file}: {rule} improved {grand} -> {cur}; run \
+                         `igp-lint --update-baseline` to lock in the progress"
+                    ));
+                }
+            }
+        }
+    }
+    report.violations.sort_by(|a, b| (&a.file, a.line, a.rule).cmp(&(&b.file, b.line, b.rule)));
+    report
+}
+
+/// Recompute a baseline from the current tree state: per-file counts of
+/// every ratcheted rule, after suppressions.
+pub fn baseline_from(files: &[(String, String)]) -> Baseline {
+    let mut out = Baseline::default();
+    let mut counts: BTreeMap<(&'static str, String), usize> = BTreeMap::new();
+    for (path, text) in files {
+        let sf = SourceFile::new(path, text);
+        for v in rules::check_file(&sf) {
+            if RATCHETED.contains(&v.rule) && !suppressed(&sf, v.rule, v.line) {
+                *counts.entry((v.rule, v.file)).or_insert(0) += 1;
+            }
+        }
+    }
+    for ((rule, file), count) in counts {
+        out.set(rule, &file, count);
+    }
+    out
+}
+
+fn suppressed(sf: &SourceFile, rule: &str, line: usize) -> bool {
+    sf.allows.iter().any(|a| {
+        a.reason_ok
+            && (a.line == line || a.line + 1 == line)
+            && a.rules.iter().any(|r| r.as_str() == rule)
+    })
+}
+
+/// Collect `(relative_path, text)` for every `.rs` file under
+/// `<crate_root>/src`, sorted by path (the walk itself must be
+/// deterministic, for the same reason the code it scans must be).
+pub fn collect_sources(crate_root: &Path) -> io::Result<Vec<(String, String)>> {
+    let src = crate_root.join("src");
+    let mut stack = vec![src.clone()];
+    let mut files = Vec::new();
+    while let Some(dir) = stack.pop() {
+        let mut entries: Vec<_> = std::fs::read_dir(&dir)?.collect::<io::Result<_>>()?;
+        entries.sort_by_key(|e| e.file_name());
+        for entry in entries {
+            let path = entry.path();
+            if path.is_dir() {
+                stack.push(path);
+            } else if path.extension().is_some_and(|e| e == "rs") {
+                let rel = path
+                    .strip_prefix(crate_root)
+                    .unwrap_or(&path)
+                    .components()
+                    .map(|c| c.as_os_str().to_string_lossy())
+                    .collect::<Vec<_>>()
+                    .join("/");
+                files.push((rel, std::fs::read_to_string(&path)?));
+            }
+        }
+    }
+    files.sort_by(|a, b| a.0.cmp(&b.0));
+    Ok(files)
+}
+
+/// Lint a crate directory (the one holding `src/`).
+pub fn lint_tree(crate_root: &Path, baseline: Option<&Baseline>) -> io::Result<LintReport> {
+    Ok(lint_sources(&collect_sources(crate_root)?, baseline))
+}

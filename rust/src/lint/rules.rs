@@ -1,0 +1,238 @@
+//! The rule set.  Each rule pattern-matches on the stripped text of a
+//! [`SourceFile`] (so comments and string literals never fire) and
+//! yields candidate [`Violation`]s; suppression, test-region exemption
+//! and the ratchet baseline are applied by the caller in `lint::`.
+
+use super::scan::{contains, find_from, SourceFile};
+
+/// `partial_cmp(..).unwrap()` and float comparators built on
+/// `partial_cmp` — both panic (or misbehave) on NaN; use `total_cmp`.
+pub const FLOAT_TOTAL_ORDER: &str = "float-total-order";
+/// Ad-hoc float reductions in numeric code; route through the
+/// order-canonical helpers so parallel/serial results stay bitwise equal.
+pub const ORDERED_REDUCTION: &str = "ordered-reduction";
+/// Raw `std::thread` spawns outside `util/parallel.rs`.
+pub const NO_RAW_THREADS: &str = "no-raw-threads";
+/// `HashMap`/`HashSet` in deterministic paths: iteration order is
+/// randomised per process, which breaks bitwise reproducibility.
+pub const NONDET_ITERATION: &str = "nondeterministic-iteration";
+/// `as f32` truncation outside the two blessed demotion sites.
+pub const PRECISION_CAST: &str = "precision-cast";
+/// `unwrap()`/`expect()` in non-test library code (ratcheted).
+pub const LIB_UNWRAP: &str = "lib-unwrap";
+/// Synthesised for a suppression directive that names a known rule but
+/// carries no reason; never suppressible.
+pub const MALFORMED_ALLOW: &str = "malformed-allow";
+
+/// Every suppressible rule, in reporting order.
+pub const RULES: &[&str] = &[
+    FLOAT_TOTAL_ORDER,
+    ORDERED_REDUCTION,
+    NO_RAW_THREADS,
+    NONDET_ITERATION,
+    PRECISION_CAST,
+    LIB_UNWRAP,
+];
+
+/// Rules whose existing violation counts are grandfathered by
+/// `lint-baseline.json` and may only go down.
+pub const RATCHETED: &[&str] = &[LIB_UNWRAP];
+
+/// One finding, before or after baseline filtering.  `line` is 1-based;
+/// line 0 is used for per-file ratchet summaries.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct Violation {
+    pub rule: &'static str,
+    pub file: String,
+    pub line: usize,
+    pub message: String,
+}
+
+/// Run every rule over one prepared file.  Returns candidates in file
+/// order, deduplicated per rule and line.
+pub fn check_file(sf: &SourceFile) -> Vec<Violation> {
+    let mut out = Vec::new();
+    float_total_order(sf, &mut out);
+    ordered_reduction(sf, &mut out);
+    no_raw_threads(sf, &mut out);
+    nondet_iteration(sf, &mut out);
+    precision_cast(sf, &mut out);
+    lib_unwrap(sf, &mut out);
+    out.sort_by(|a, b| (a.line, a.rule).cmp(&(b.line, b.rule)));
+    // the two float-total-order patterns double-fire on one-line
+    // comparators; other rules keep one finding per *site* so the
+    // ratchet counts sites, not lines
+    out.dedup_by(|a, b| a.rule == FLOAT_TOTAL_ORDER && b.rule == FLOAT_TOTAL_ORDER && a.line == b.line);
+    out
+}
+
+fn is_ident(b: u8) -> bool {
+    b.is_ascii_alphanumeric() || b == b'_'
+}
+
+/// The statement window after a match: up to `max` bytes, truncated at
+/// the first `;` so a pattern never leaks into the next statement.
+fn window(hay: &[u8], start: usize, max: usize) -> &[u8] {
+    let end = (start + max).min(hay.len());
+    let w = &hay[start..end];
+    match w.iter().position(|&c| c == b';') {
+        Some(p) => &w[..p],
+        None => w,
+    }
+}
+
+fn each_match(sf: &SourceFile, needle: &str, mut f: impl FnMut(usize, usize)) {
+    let hay = sf.stripped.as_bytes();
+    let nb = needle.as_bytes();
+    let mut from = 0usize;
+    while let Some(p) = find_from(hay, nb, from) {
+        f(p, sf.line_of(p));
+        from = p + nb.len();
+    }
+}
+
+fn float_total_order(sf: &SourceFile, out: &mut Vec<Violation>) {
+    // applies to test code too: a NaN-panicking comparator in a test
+    // helper is the same latent crash
+    let hay = sf.stripped.as_bytes();
+    each_match(sf, ".partial_cmp(", |p, line| {
+        if contains(window(hay, p, 64), b".unwrap()") {
+            out.push(Violation {
+                rule: FLOAT_TOTAL_ORDER,
+                file: sf.path.clone(),
+                line,
+                message: "partial_cmp(..).unwrap() panics on NaN; compare with f64::total_cmp".into(),
+            });
+        }
+    });
+    for family in ["sort_by(", "sort_unstable_by(", "max_by(", "min_by("] {
+        each_match(sf, family, |p, line| {
+            if contains(window(hay, p, 160), b"partial_cmp") {
+                out.push(Violation {
+                    rule: FLOAT_TOTAL_ORDER,
+                    file: sf.path.clone(),
+                    line,
+                    message: format!(
+                        "{family}..) comparator built on partial_cmp; use f64::total_cmp for a total order"
+                    ),
+                });
+            }
+        });
+    }
+}
+
+fn ordered_reduction(sf: &SourceFile, out: &mut Vec<Violation>) {
+    let in_scope = ["src/solvers/", "src/operators/", "src/kernels/", "src/linalg/"]
+        .iter()
+        .any(|d| sf.path.starts_with(d));
+    let canonical_home = sf.path == "src/linalg/micro.rs" || sf.path == "src/solvers/recurrence.rs";
+    if !in_scope || canonical_home {
+        return;
+    }
+    let hay = sf.stripped.as_bytes();
+    let mut push = |line: usize| {
+        if !sf.is_test_line(line) {
+            out.push(Violation {
+                rule: ORDERED_REDUCTION,
+                file: sf.path.clone(),
+                line,
+                message: "ad-hoc float reduction; route through linalg::micro::sum or \
+                          util::parallel so the association order stays canonical"
+                    .into(),
+            });
+        }
+    };
+    for needle in [".sum()", ".sum::<", ".product()"] {
+        each_match(sf, needle, |_, line| push(line));
+    }
+    each_match(sf, ".fold(", |p, line| {
+        let w = window(hay, p, 48);
+        // folds seeded with a float accumulate in iteration order; max/min
+        // folds are order-insensitive and stay allowed
+        if contains(w, b"0.0") && !contains(w, b"max") && !contains(w, b"min") {
+            push(line);
+        }
+    });
+}
+
+fn no_raw_threads(sf: &SourceFile, out: &mut Vec<Violation>) {
+    if sf.path == "src/util/parallel.rs" {
+        return;
+    }
+    for needle in ["thread::spawn", ".spawn("] {
+        each_match(sf, needle, |_, line| {
+            out.push(Violation {
+                rule: NO_RAW_THREADS,
+                file: sf.path.clone(),
+                line,
+                message: "raw thread spawn; go through util::parallel so worker counts, \
+                          panic propagation and result order stay deterministic"
+                    .into(),
+            });
+        });
+    }
+}
+
+fn nondet_iteration(sf: &SourceFile, out: &mut Vec<Violation>) {
+    if sf.path.starts_with("src/runtime/") {
+        return;
+    }
+    let hay = sf.stripped.as_bytes();
+    for needle in ["HashMap", "HashSet"] {
+        each_match(sf, needle, |p, line| {
+            let pre_ok = p == 0 || !is_ident(hay[p - 1]);
+            let post = p + needle.len();
+            let post_ok = post >= hay.len() || !is_ident(hay[post]);
+            if pre_ok && post_ok && !sf.is_test_line(line) {
+                out.push(Violation {
+                    rule: NONDET_ITERATION,
+                    file: sf.path.clone(),
+                    line,
+                    message: format!(
+                        "{needle} iteration order is randomised per process; use BTreeMap/BTreeSet \
+                         (or a Vec) in deterministic paths"
+                    ),
+                });
+            }
+        });
+    }
+}
+
+fn precision_cast(sf: &SourceFile, out: &mut Vec<Violation>) {
+    if sf.path == "src/kernels/panel.rs" || sf.path == "src/linalg/micro.rs" {
+        return;
+    }
+    let hay = sf.stripped.as_bytes();
+    each_match(sf, "as f32", |p, line| {
+        let pre_ok = p == 0 || !is_ident(hay[p - 1]);
+        let post = p + "as f32".len();
+        let post_ok = post >= hay.len() || !is_ident(hay[post]);
+        if pre_ok && post_ok && !sf.is_test_line(line) {
+            out.push(Violation {
+                rule: PRECISION_CAST,
+                file: sf.path.clone(),
+                line,
+                message: "f32 demotion outside kernels::panel / linalg::micro; the precision \
+                          contract keeps every other path f64"
+                    .into(),
+            });
+        }
+    });
+}
+
+fn lib_unwrap(sf: &SourceFile, out: &mut Vec<Violation>) {
+    for needle in [".unwrap()", ".expect("] {
+        each_match(sf, needle, |_, line| {
+            if !sf.is_test_line(line) {
+                out.push(Violation {
+                    rule: LIB_UNWRAP,
+                    file: sf.path.clone(),
+                    line,
+                    message: "unwrap/expect in library code; return a typed error instead \
+                              (grandfathered sites are ratcheted by lint-baseline.json)"
+                        .into(),
+                });
+            }
+        });
+    }
+}

@@ -1,0 +1,300 @@
+//! Lexical preprocessing for `igp-lint`.
+//!
+//! The scanner is deliberately *not* a parser: it classifies bytes into
+//! code / comment / string / char-literal with a small state machine and
+//! blanks everything that is not code with spaces, preserving byte
+//! offsets and line numbers exactly.  Rules pattern-match on the
+//! stripped text only, so occurrences inside comments or string
+//! literals can never fire, while suppression directives are read from
+//! the *raw* lines (they live in comments by construction).
+
+/// A source file prepared for rule matching.
+pub struct SourceFile {
+    /// Crate-relative path with `/` separators, e.g. `src/solvers/cg.rs`.
+    pub path: String,
+    /// Original text (directive parsing, context snippets).
+    pub raw: String,
+    /// Same length as `raw`, with comments, strings and char literals
+    /// blanked to spaces (newlines kept, so offsets and lines agree).
+    pub stripped: String,
+    /// Byte offset of the start of each line (index 0 = line 1).
+    pub line_starts: Vec<usize>,
+    /// Per line (0-indexed): is this line inside `#[cfg(test)]` /
+    /// `#[test]` code?
+    pub test_mask: Vec<bool>,
+    /// Parsed suppression directives, in file order.
+    pub allows: Vec<Allow>,
+}
+
+/// One suppression directive.  It covers its own line and the line
+/// directly below it, for the rules it names, and only when a non-empty
+/// reason follows the rule list.
+pub struct Allow {
+    /// 1-based line the directive sits on.
+    pub line: usize,
+    /// Rule names inside the parentheses (may include unknown names;
+    /// those are inert).
+    pub rules: Vec<String>,
+    /// Whether a `: reason` with non-empty reason text was present.
+    pub reason_ok: bool,
+}
+
+impl SourceFile {
+    pub fn new(path: &str, raw: &str) -> SourceFile {
+        let stripped = strip(raw);
+        let line_starts = line_starts(raw);
+        let test_mask = test_mask(&stripped, &line_starts);
+        let allows = parse_allows(raw);
+        SourceFile { path: path.to_string(), raw: raw.to_string(), stripped, line_starts, test_mask, allows }
+    }
+
+    /// 1-based line number of a byte offset into `stripped`/`raw`.
+    pub fn line_of(&self, off: usize) -> usize {
+        self.line_starts.partition_point(|&s| s <= off)
+    }
+
+    /// Is the (1-based) line inside test-only code?
+    pub fn is_test_line(&self, line: usize) -> bool {
+        line >= 1 && self.test_mask.get(line - 1).copied().unwrap_or(false)
+    }
+}
+
+fn is_ident(b: u8) -> bool {
+    b.is_ascii_alphanumeric() || b == b'_'
+}
+
+/// First occurrence of `needle` in `hay` at or after `from`.
+pub fn find_from(hay: &[u8], needle: &[u8], from: usize) -> Option<usize> {
+    if needle.is_empty() || hay.len() < needle.len() {
+        return None;
+    }
+    (from..=hay.len() - needle.len()).find(|&i| &hay[i..i + needle.len()] == needle)
+}
+
+pub fn contains(hay: &[u8], needle: &[u8]) -> bool {
+    find_from(hay, needle, 0).is_some()
+}
+
+fn line_starts(raw: &str) -> Vec<usize> {
+    let mut starts = vec![0usize];
+    for (i, b) in raw.bytes().enumerate() {
+        if b == b'\n' && i + 1 < raw.len() {
+            starts.push(i + 1);
+        }
+    }
+    starts
+}
+
+/// Blank comments, string literals and char literals with spaces,
+/// keeping newlines so byte offsets map 1:1 onto the original text.
+pub fn strip(raw: &str) -> String {
+    let b = raw.as_bytes();
+    let n = b.len();
+    let mut out = b.to_vec();
+    let blank = |out: &mut [u8], from: usize, to: usize| {
+        for slot in out.iter_mut().take(to.min(n)).skip(from) {
+            if *slot != b'\n' {
+                *slot = b' ';
+            }
+        }
+    };
+    let mut i = 0usize;
+    while i < n {
+        let c = b[i];
+        if c == b'/' && i + 1 < n && b[i + 1] == b'/' {
+            let mut j = i;
+            while j < n && b[j] != b'\n' {
+                j += 1;
+            }
+            blank(&mut out, i, j);
+            i = j;
+        } else if c == b'/' && i + 1 < n && b[i + 1] == b'*' {
+            // block comments nest in Rust
+            let mut depth = 1usize;
+            let mut j = i + 2;
+            while j < n && depth > 0 {
+                if b[j] == b'/' && j + 1 < n && b[j + 1] == b'*' {
+                    depth += 1;
+                    j += 2;
+                } else if b[j] == b'*' && j + 1 < n && b[j + 1] == b'/' {
+                    depth -= 1;
+                    j += 2;
+                } else {
+                    j += 1;
+                }
+            }
+            blank(&mut out, i, j);
+            i = j;
+        } else if c == b'"' {
+            let j = skip_plain_string(b, i);
+            blank(&mut out, i, j);
+            i = j;
+        } else if (c == b'r' || c == b'b') && (i == 0 || !is_ident(b[i - 1])) {
+            // raw / byte string prefixes: r"..", r#".."#, b"..", br"..", br#".."#
+            let mut j = i + 1;
+            if c == b'b' && j < n && b[j] == b'r' {
+                j += 1;
+            }
+            let raw_form = j > i + 1 || c == b'r';
+            let mut hashes = 0usize;
+            if raw_form {
+                while j < n && b[j] == b'#' {
+                    hashes += 1;
+                    j += 1;
+                }
+            }
+            if j < n && b[j] == b'"' {
+                let end = if raw_form {
+                    skip_raw_string(b, j, hashes)
+                } else {
+                    skip_plain_string(b, j)
+                };
+                blank(&mut out, i, end);
+                i = end;
+            } else {
+                i += 1;
+            }
+        } else if c == b'\'' {
+            if i + 1 < n && b[i + 1] == b'\\' {
+                // escaped char literal, e.g. '\n', '\'', '\u{1F600}'
+                let mut j = i + 2;
+                if j < n && b[j] == b'u' {
+                    while j < n && b[j] != b'}' {
+                        j += 1;
+                    }
+                }
+                j += 1;
+                while j < n && b[j] != b'\'' {
+                    j += 1;
+                }
+                blank(&mut out, i, (j + 1).min(n));
+                i = (j + 1).min(n);
+            } else if i + 2 < n && b[i + 2] == b'\'' {
+                // one-byte char literal 'x'
+                blank(&mut out, i, i + 3);
+                i += 3;
+            } else {
+                // multi-byte char literal ('é') has only continuation
+                // bytes (>= 0x80) before the closing quote; anything
+                // else is a lifetime, which needs no blanking
+                let mut j = i + 1;
+                while j < n && j <= i + 4 && b[j] >= 0x80 {
+                    j += 1;
+                }
+                if j > i + 1 && j < n && b[j] == b'\'' {
+                    blank(&mut out, i, j + 1);
+                    i = j + 1;
+                } else {
+                    i += 1;
+                }
+            }
+        } else {
+            i += 1;
+        }
+    }
+    String::from_utf8_lossy(&out).into_owned()
+}
+
+/// Byte offset just past the closing quote of a `"…"` string starting
+/// at `start` (which must point at the opening quote).
+fn skip_plain_string(b: &[u8], start: usize) -> usize {
+    let n = b.len();
+    let mut j = start + 1;
+    while j < n {
+        match b[j] {
+            b'\\' => j += 2,
+            b'"' => return j + 1,
+            _ => j += 1,
+        }
+    }
+    n
+}
+
+fn skip_raw_string(b: &[u8], quote: usize, hashes: usize) -> usize {
+    let n = b.len();
+    let mut j = quote + 1;
+    while j < n {
+        if b[j] == b'"' && j + hashes < n && b[j + 1..j + 1 + hashes].iter().all(|&h| h == b'#') {
+            return j + 1 + hashes;
+        }
+        j += 1;
+    }
+    n
+}
+
+/// Mark every line covered by a `#[cfg(test)]` or `#[test]` item.  The
+/// walk from the attribute skips intervening attributes and signatures
+/// to the item's `{`, then brace-matches to its end (a `;` at bracket
+/// depth 0 first means an item with no body, e.g. `#[cfg(test)] use …;`).
+fn test_mask(stripped: &str, line_starts: &[usize]) -> Vec<bool> {
+    let b = stripped.as_bytes();
+    let mut mask = vec![false; line_starts.len()];
+    for pat in [&b"#[cfg(test)]"[..], &b"#[test]"[..]] {
+        let mut from = 0usize;
+        while let Some(p) = find_from(b, pat, from) {
+            from = p + pat.len();
+            let mut j = from;
+            let mut nest = 0isize; // () and [] nesting along the signature
+            let mut end = b.len();
+            while j < b.len() {
+                match b[j] {
+                    b'(' | b'[' => nest += 1,
+                    b')' | b']' => nest -= 1,
+                    b';' if nest == 0 => {
+                        end = j + 1;
+                        break;
+                    }
+                    b'{' => {
+                        let mut depth = 1isize;
+                        let mut k = j + 1;
+                        while k < b.len() && depth > 0 {
+                            match b[k] {
+                                b'{' => depth += 1,
+                                b'}' => depth -= 1,
+                                _ => {}
+                            }
+                            k += 1;
+                        }
+                        end = k;
+                        break;
+                    }
+                    _ => {}
+                }
+                j += 1;
+            }
+            let l0 = line_starts.partition_point(|&s| s <= p);
+            let l1 = line_starts.partition_point(|&s| s < end);
+            for l in l0..=l1.min(mask.len()) {
+                mask[l - 1] = true;
+            }
+        }
+    }
+    mask
+}
+
+/// Parse suppression directives from the raw lines.  A directive must
+/// sit in a `//` comment and name its rules in parentheses; suppression
+/// additionally requires a trailing `: reason` (checked by the caller
+/// via [`Allow::reason_ok`]).
+fn parse_allows(raw: &str) -> Vec<Allow> {
+    let marker = "lint:allow(";
+    let mut out = Vec::new();
+    for (idx, line) in raw.lines().enumerate() {
+        let Some(slash) = line.find("//") else { continue };
+        let Some(rel) = line[slash..].find(marker) else { continue };
+        let body = &line[slash + rel + marker.len()..];
+        let Some(close) = body.find(')') else {
+            out.push(Allow { line: idx + 1, rules: Vec::new(), reason_ok: false });
+            continue;
+        };
+        let rules: Vec<String> = body[..close]
+            .split(',')
+            .map(|s| s.trim().to_string())
+            .filter(|s| !s.is_empty())
+            .collect();
+        let after = body[close + 1..].trim_start();
+        let reason_ok = after.starts_with(':') && !after[1..].trim().is_empty();
+        out.push(Allow { line: idx + 1, rules, reason_ok });
+    }
+    out
+}

@@ -13,7 +13,7 @@ use super::{
     Normalized, PreconditionerCache, SharedPreconditionerCache, SolveOptions, SolveReport,
     SolverKind,
 };
-use crate::linalg::Mat;
+use crate::linalg::{micro, Mat};
 use crate::operators::{KernelOperator, Precision};
 use crate::util::rng::Rng;
 
@@ -54,7 +54,12 @@ impl ApSolver {
         let n = op.n();
         let threads = recurrence::resolve_threads(opts.threads);
         let noise_var = op.hp().noise_var();
-        let factors = self.cache.ap_block_factors(op, bsz, threads);
+        // a failed block factorisation (typed LinalgError from a poisoned
+        // hyperparameter) becomes an aborted report, like any divergence
+        let factors = match self.cache.ap_block_factors(op, bsz, threads) {
+            Ok(f) => f,
+            Err(_) => return SolveReport::aborted(),
+        };
         // optional block preconditioning: greedy selection scores the
         // M^-1-preconditioned residual, steering sweeps toward blocks
         // whose error survives the low-rank correction (greedy-only: the
@@ -64,20 +69,22 @@ impl ApSolver {
             && opts.precond_rank > 0
             && opts.ap_selection == ApSelection::Greedy
         {
-            Some(self.cache.solver_preconditioner(
+            match self.cache.solver_preconditioner(
                 op,
                 opts.precond_rank,
                 opts.precond_shards,
                 threads,
-            ))
+            ) {
+                Ok(pre) => Some(pre),
+                Err(_) => return SolveReport::aborted(),
+            }
         } else {
             None
         };
 
         let (norm, mut r) = Normalized::setup_t(op, b_mat, v0, threads);
         let mut v = v0.clone();
-        let init_residual_sq: f64 =
-            recurrence::col_sq_sums(&r, threads).iter().sum();
+        let init_residual_sq: f64 = micro::sum(&recurrence::col_sq_sums(&r, threads));
 
         let mut epochs = norm.warm_epoch_cost;
         let mut iterations = 0usize;
@@ -154,7 +161,7 @@ impl ApSolver {
                         .iter()
                         .enumerate()
                         .filter(|(i, _)| affordable(*i) && Some(*i) != masked)
-                        .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+                        .max_by(|a, b| a.1.total_cmp(b.1))
                         .map(|(i, _)| i)
                     {
                         Some(i) => i,
@@ -531,6 +538,53 @@ mod tests {
         assert!(!rep.converged);
         assert!(!rep.rz.is_finite(), "report must reflect the divergence: {rep:?}");
         assert_eq!(rep.iterations, 0, "no useful work is possible on a NaN residual");
+    }
+
+    #[test]
+    fn nan_score_under_preconditioned_scoring_bails_instead_of_panicking() {
+        // regression: the preconditioned-scoring sibling of the greedy
+        // selection above kept its own partial_cmp().unwrap() after the
+        // direct-scoring path was fixed, so a NaN block score under
+        // `ap_block_precond` still panicked.  total_cmp orders NaN above
+        // every finite score, the finiteness guard catches it, and the
+        // solve reports divergence.
+        let (op, mut b) = setup();
+        b[(5, 2)] = f64::NAN; // poison one probe column
+        let mut v = Mat::zeros(op.n(), op.k_width());
+        let opts = SolveOptions {
+            tolerance: 0.01,
+            max_epochs: 100.0,
+            block_size: 64,
+            precond_rank: 32,
+            ap_block_precond: true,
+            ..Default::default()
+        };
+        let rep = ApSolver::default().solve(&op, &b, &mut v, &opts);
+        assert!(!rep.converged);
+        assert!(!rep.rz.is_finite(), "report must reflect the divergence: {rep:?}");
+        assert_eq!(rep.iterations, 0, "no useful work is possible on a NaN residual");
+    }
+
+    #[test]
+    fn poisoned_hyperparameters_abort_instead_of_panicking() {
+        // a NaN sigf poisons the kernel diagonal the preconditioner's
+        // pivoted Cholesky pivots on; the typed LinalgError from the build
+        // must surface as an aborted report, not a panic
+        let (mut op, b) = setup();
+        op.set_hp(&Hyperparams { ell: vec![1.0; 4], sigf: f64::NAN, sigma: 0.4 });
+        let mut v = Mat::zeros(op.n(), op.k_width());
+        let opts = SolveOptions {
+            tolerance: 1e-6,
+            max_epochs: 100.0,
+            block_size: 64,
+            precond_rank: 32,
+            ap_block_precond: true,
+            ..Default::default()
+        };
+        let rep = ApSolver::default().solve(&op, &b, &mut v, &opts);
+        assert!(!rep.converged);
+        assert_eq!(rep.iterations, 0);
+        assert!(rep.ry.is_nan() && rep.rz.is_nan(), "{rep:?}");
     }
 
     #[test]

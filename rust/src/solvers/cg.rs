@@ -7,7 +7,7 @@ use super::{
     PreconditionerCache, SharedPreconditionerCache, SolveOptions, SolveReport, SolverKind,
     NORM_EPS,
 };
-use crate::linalg::Mat;
+use crate::linalg::{micro, Mat};
 use crate::operators::{HvScratch, KernelOperator, Precision};
 
 /// Epoch cost of one f32 operator product: half the memory traffic of the
@@ -46,9 +46,15 @@ impl CgSolver {
         opts: &SolveOptions,
     ) -> SolveReport {
         let threads = recurrence::resolve_threads(opts.threads);
-        let pre =
-            self.cache
-                .solver_preconditioner(op, opts.precond_rank, opts.precond_shards, threads);
+        // a failed factorisation (typed LinalgError from a poisoned
+        // hyperparameter) becomes an aborted report, like any divergence
+        let pre = match self
+            .cache
+            .solver_preconditioner(op, opts.precond_rank, opts.precond_shards, threads)
+        {
+            Ok(pre) => pre,
+            Err(_) => return SolveReport::aborted(),
+        };
         // one operator-product output buffer and one panel-scratch pool for
         // the whole solve — the warm-start residual inside setup and every
         // iteration's hv_into reuse them (no allocation churn)
@@ -56,8 +62,7 @@ impl CgSolver {
         let scratch = HvScratch::default();
         let (norm, mut r) = Normalized::setup_pooled(op, b, v0, threads, &scratch, &mut hd);
         let mut v = v0.clone();
-        let init_residual_sq: f64 =
-            recurrence::col_sq_sums(&r, threads).iter().sum();
+        let init_residual_sq: f64 = micro::sum(&recurrence::col_sq_sums(&r, threads));
 
         let mut p = pre.apply_t(&r, threads);
         let mut d = p.clone();
@@ -125,14 +130,18 @@ impl CgSolver {
     ) -> SolveReport {
         let threads = recurrence::resolve_threads(opts.threads);
         let backup = v0.clone();
-        let pre =
-            self.cache
-                .solver_preconditioner(op, opts.precond_rank, opts.precond_shards, threads);
+        let pre = match self
+            .cache
+            .solver_preconditioner(op, opts.precond_rank, opts.precond_shards, threads)
+        {
+            Ok(pre) => pre,
+            Err(_) => return SolveReport::aborted(),
+        };
         let mut hd = Mat::zeros(b.rows, b.cols);
         let scratch = HvScratch::default();
         let (norm, mut r) = Normalized::setup_pooled(op, b, v0, threads, &scratch, &mut hd);
         let mut v = v0.clone();
-        let init_residual_sq: f64 = recurrence::col_sq_sums(&r, threads).iter().sum();
+        let init_residual_sq: f64 = micro::sum(&recurrence::col_sq_sums(&r, threads));
 
         let mut epochs = norm.warm_epoch_cost;
         let mut iterations = 0usize;
@@ -415,6 +424,22 @@ mod tests {
             assert_eq!(rep, rep1, "threads={t}");
             assert_eq!(v.data, v1.data, "threads={t}");
         }
+    }
+
+    #[test]
+    fn poisoned_hyperparameters_abort_instead_of_panicking() {
+        // A NaN signal variance poisons the kernel diagonal the pivoted
+        // Cholesky pivots on.  The typed LinalgError from the build must
+        // surface as an aborted (non-converged, NaN-residual) report — the
+        // same contract as the solvers' divergence reports — not a panic.
+        let (mut op, b) = setup();
+        op.set_hp(&Hyperparams { ell: vec![1.0; 4], sigf: f64::NAN, sigma: 0.4 });
+        let mut v = Mat::zeros(op.n(), op.k_width());
+        let opts = SolveOptions { precond_rank: 32, ..Default::default() };
+        let rep = CgSolver::default().solve(&op, &b, &mut v, &opts);
+        assert!(!rep.converged);
+        assert_eq!(rep.iterations, 0);
+        assert!(rep.ry.is_nan() && rep.rz.is_nan(), "{rep:?}");
     }
 
     #[test]

@@ -163,6 +163,26 @@ pub struct SolveReport {
     pub init_residual_sq: f64,
 }
 
+impl SolveReport {
+    /// The report for a solve that could not start — e.g. a preconditioner
+    /// build hit a typed [`crate::linalg::LinalgError`] (non-finite kernel
+    /// diagonal from a poisoned hyperparameter, non-SPD core).  Mirrors the
+    /// solvers' NaN-residual divergence reports: zero iterations/epochs,
+    /// NaN residuals, `converged = false`, so the outer loop treats it like
+    /// any other diverged step instead of crashing.  `v0` is left
+    /// untouched by callers returning this.
+    pub(crate) fn aborted() -> SolveReport {
+        SolveReport {
+            iterations: 0,
+            epochs: 0.0,
+            ry: f64::NAN,
+            rz: f64::NAN,
+            converged: false,
+            init_residual_sq: f64::NAN,
+        }
+    }
+}
+
 /// Common solver interface.  `v0` carries the warm start in and the
 /// (raw-space) solution out.
 pub trait LinearSolver {
@@ -232,7 +252,7 @@ pub fn residual_norms_t(r: &Mat, threads: usize) -> (f64, f64) {
     let norms = recurrence::col_norms(r, threads);
     let ry = norms[0];
     let rz = if norms.len() > 1 {
-        norms[1..].iter().sum::<f64>() / (norms.len() - 1) as f64
+        crate::linalg::micro::sum(&norms[1..]) / (norms.len() - 1) as f64
     } else {
         0.0
     };
@@ -263,7 +283,7 @@ pub fn verify_residuals_f64(
     let rel: Vec<f64> = rn.iter().zip(&bn).map(|(&r, &b)| r / (b + NORM_EPS)).collect();
     let ry = rel[0];
     let rz = if rel.len() > 1 {
-        rel[1..].iter().sum::<f64>() / (rel.len() - 1) as f64
+        crate::linalg::micro::sum(&rel[1..]) / (rel.len() - 1) as f64
     } else {
         0.0
     };

@@ -29,7 +29,7 @@ use std::sync::{Arc, Mutex};
 
 use crate::kernels::panel::{self, ScaledX};
 use crate::kernels::{Hyperparams, KernelFamily};
-use crate::linalg::{pivoted_cholesky_threaded, Cholesky, Mat};
+use crate::linalg::{pivoted_cholesky_threaded, Cholesky, LinalgError, Mat};
 use crate::operators::KernelOperator;
 use crate::util::parallel::{num_threads, parallel_map_slots, parallel_row_blocks, shard_ranges};
 
@@ -55,7 +55,16 @@ impl WoodburyPreconditioner {
         }
     }
 
-    pub fn build(x: &Mat, hp: &Hyperparams, family: KernelFamily, rank: usize) -> Self {
+    /// Build the rank-`rank` factorisation.  A non-finite kernel diagonal
+    /// (poisoned hyperparameter) or a non-SPD Woodbury core is a typed
+    /// [`LinalgError`], not a panic — solvers turn it into a divergence
+    /// report so a bad outer-loop step cannot kill the training run.
+    pub fn build(
+        x: &Mat,
+        hp: &Hyperparams,
+        family: KernelFamily,
+        rank: usize,
+    ) -> Result<Self, LinalgError> {
         Self::build_threaded(x, hp, family, rank, 0)
     }
 
@@ -67,9 +76,9 @@ impl WoodburyPreconditioner {
         family: KernelFamily,
         rank: usize,
         threads: usize,
-    ) -> Self {
+    ) -> Result<Self, LinalgError> {
         if rank == 0 {
-            return Self::identity();
+            return Ok(Self::identity());
         }
         let n = x.rows;
         let t = num_threads(if threads == 0 { None } else { Some(threads) });
@@ -89,7 +98,7 @@ impl WoodburyPreconditioner {
             });
             out
         };
-        let pc = pivoted_cholesky_threaded(n, rank, &diag, kernel_row_par, t);
+        let pc = pivoted_cholesky_threaded(n, rank, &diag, kernel_row_par, t)?;
         let rho = pc.rank();
         let noise_var = hp.noise_var();
         // C = sigma^2 I + L^T L: order-canonical blocked row reduction —
@@ -126,9 +135,12 @@ impl WoodburyPreconditioner {
             }
         }
         c.add_diag(noise_var);
-        let c_chol = Cholesky::factor(&c).expect("woodbury core SPD");
+        let c_chol = Cholesky::factor(&c).map_err(|e| LinalgError::Factorization {
+            what: "woodbury core (sigma^2 I + L^T L)",
+            detail: format!("{e:#}"),
+        })?;
         let lt = pc.l.transpose();
-        WoodburyPreconditioner { l: pc.l, lt, c_chol, noise_var }
+        Ok(WoodburyPreconditioner { l: pc.l, lt, c_chol, noise_var })
     }
 
     pub fn rank(&self) -> usize {
@@ -196,23 +208,21 @@ impl ShardedJacobiPreconditioner {
         rank: usize,
         shards: usize,
         threads: usize,
-    ) -> Self {
+    ) -> Result<Self, LinalgError> {
         let ranges = shard_ranges(x.rows, shards);
-        let parts = ranges
-            .iter()
-            .map(|&(r0, r1)| {
-                let rows: Vec<usize> = (r0..r1).collect();
-                let xs = x.gather_rows(&rows);
-                WoodburyPreconditioner::build_threaded(
-                    &xs,
-                    hp,
-                    family,
-                    rank.min(r1 - r0),
-                    threads,
-                )
-            })
-            .collect();
-        ShardedJacobiPreconditioner { parts, ranges }
+        let mut parts = Vec::with_capacity(ranges.len());
+        for &(r0, r1) in &ranges {
+            let rows: Vec<usize> = (r0..r1).collect();
+            let xs = x.gather_rows(&rows);
+            parts.push(WoodburyPreconditioner::build_threaded(
+                &xs,
+                hp,
+                family,
+                rank.min(r1 - r0),
+                threads,
+            )?);
+        }
+        Ok(ShardedJacobiPreconditioner { parts, ranges })
     }
 
     pub fn num_shards(&self) -> usize {
@@ -358,7 +368,7 @@ impl PreconditionerCache {
         op: &dyn KernelOperator,
         rank: usize,
         threads: usize,
-    ) -> Arc<WoodburyPreconditioner> {
+    ) -> Result<Arc<WoodburyPreconditioner>, LinalgError> {
         let key = hp_key(op.hp(), rank, op.n());
         let mut inner = self.inner.lock().unwrap();
         if let Some(pos) = inner.woodbury.iter().position(|(k, _)| *k == key) {
@@ -366,21 +376,23 @@ impl PreconditionerCache {
             let entry = inner.woodbury.remove(pos);
             let pre = entry.1.clone();
             inner.woodbury.push(entry); // LRU: move to back
-            return pre;
+            return Ok(pre);
         }
+        // a failed build is reported, never cached — a later request at the
+        // same key (e.g. after the outer loop steps back) retries cleanly
         let pre = Arc::new(WoodburyPreconditioner::build_threaded(
             op.x(),
             op.hp(),
             op.family(),
             rank,
             threads,
-        ));
+        )?);
         inner.woodbury_builds += 1;
         if inner.woodbury.len() >= self.cap {
             inner.woodbury.remove(0);
         }
         inner.woodbury.push((key, pre.clone()));
-        pre
+        Ok(pre)
     }
 
     /// The preconditioner a solver should use for this solve: the global
@@ -394,9 +406,9 @@ impl PreconditionerCache {
         rank: usize,
         shards: usize,
         threads: usize,
-    ) -> SolverPrecond {
+    ) -> Result<SolverPrecond, LinalgError> {
         if shards <= 1 || rank == 0 {
-            return SolverPrecond::Woodbury(self.woodbury(op, rank, threads));
+            return Ok(SolverPrecond::Woodbury(self.woodbury(op, rank, threads)?));
         }
         let key = (hp_key(op.hp(), rank, op.n()), shards);
         let mut inner = self.inner.lock().unwrap();
@@ -405,7 +417,7 @@ impl PreconditionerCache {
             let entry = inner.jacobi.remove(pos);
             let pre = entry.1.clone();
             inner.jacobi.push(entry); // LRU: move to back
-            return SolverPrecond::BlockJacobi(pre);
+            return Ok(SolverPrecond::BlockJacobi(pre));
         }
         let pre = Arc::new(ShardedJacobiPreconditioner::build_threaded(
             op.x(),
@@ -414,13 +426,13 @@ impl PreconditionerCache {
             rank,
             shards,
             threads,
-        ));
+        )?);
         inner.jacobi_builds += 1;
         if inner.jacobi.len() >= self.cap {
             inner.jacobi.remove(0);
         }
         inner.jacobi.push((key, pre.clone()));
-        SolverPrecond::BlockJacobi(pre)
+        Ok(SolverPrecond::BlockJacobi(pre))
     }
 
     /// AP's per-block Cholesky factors for the operator's current
@@ -434,7 +446,7 @@ impl PreconditionerCache {
         op: &dyn KernelOperator,
         block_size: usize,
         threads: usize,
-    ) -> Arc<Vec<Cholesky>> {
+    ) -> Result<Arc<Vec<Cholesky>>, LinalgError> {
         let key = hp_key(op.hp(), block_size, op.n());
         let mut inner = self.inner.lock().unwrap();
         if let Some(pos) = inner.ap_blocks.iter().position(|(k, _)| *k == key) {
@@ -442,7 +454,7 @@ impl PreconditionerCache {
             let entry = inner.ap_blocks.remove(pos);
             let factors = entry.1.clone();
             inner.ap_blocks.push(entry);
-            return factors;
+            return Ok(factors);
         }
         let n = op.n();
         let x = op.x();
@@ -455,21 +467,29 @@ impl PreconditionerCache {
         // rows (norms copied, not recomputed) and panel-fills its diagonal
         // kernel block
         let sx = ScaledX::new(x, &hp.ell);
-        let factors = parallel_map_slots(nblocks, t.min(nblocks), |blk| {
+        // per-block factorisation failures (non-SPD block from a poisoned
+        // hyperparameter) come back as values and surface as one typed
+        // error, never a panic inside a pool worker
+        let results = parallel_map_slots(nblocks, t.min(nblocks), |blk| {
             let idx: Vec<usize> =
                 (blk * block_size..((blk + 1) * block_size).min(n)).collect();
             let sb = sx.gather(&idx);
             let mut h_blk = panel::cross_matrix(&sb, &sb, sf2, fam);
             h_blk.add_diag(hp.noise_var());
-            Cholesky::factor(&h_blk).expect("AP block SPD")
+            Cholesky::factor(&h_blk).map_err(|e| LinalgError::Factorization {
+                what: "AP diagonal kernel block",
+                detail: format!("block {blk}: {e:#}"),
+            })
         });
+        let factors: Vec<Cholesky> =
+            results.into_iter().collect::<Result<_, LinalgError>>()?;
         let factors = Arc::new(factors);
         inner.ap_builds += 1;
         if inner.ap_blocks.len() >= self.cap {
             inner.ap_blocks.remove(0);
         }
         inner.ap_blocks.push((key, factors.clone()));
-        factors
+        Ok(factors)
     }
 
     /// Drop every cached factorisation of both kinds.  Called by the
@@ -519,7 +539,7 @@ mod tests {
         let x = Mat::from_fn(n, 2, |_, _| rng.gaussian());
         let hp = Hyperparams { ell: vec![1.0, 1.0], sigf: 1.2, sigma: 0.5 };
         let fam = KernelFamily::Matern32;
-        let pre = WoodburyPreconditioner::build(&x, &hp, fam, n);
+        let pre = WoodburyPreconditioner::build(&x, &hp, fam, n).unwrap();
         let h = h_matrix(&x, &hp, fam);
         let b = Mat::from_fn(n, 3, |_, _| rng.gaussian());
         let got = pre.apply(&b);
@@ -541,7 +561,7 @@ mod tests {
         let n = 32;
         let x = Mat::from_fn(n, 3, |_, _| rng.gaussian());
         let hp = Hyperparams { ell: vec![0.8; 3], sigf: 1.0, sigma: 0.3 };
-        let pre = WoodburyPreconditioner::build(&x, &hp, KernelFamily::Matern32, 8);
+        let pre = WoodburyPreconditioner::build(&x, &hp, KernelFamily::Matern32, 8).unwrap();
         for _ in 0..5 {
             let v = Mat::from_fn(n, 1, |_, _| rng.gaussian());
             let mv = pre.apply(&v);
@@ -558,10 +578,10 @@ mod tests {
         let hp = Hyperparams { ell: vec![0.9; 3], sigf: 1.1, sigma: 0.4 };
         let fam = KernelFamily::Matern52;
         let r = Mat::from_fn(n, 5, |_, _| rng.gaussian());
-        let serial = WoodburyPreconditioner::build_threaded(&x, &hp, fam, 16, 1);
+        let serial = WoodburyPreconditioner::build_threaded(&x, &hp, fam, 16, 1).unwrap();
         let want = serial.apply_t(&r, 1);
         for t in [2, 4] {
-            let pre = WoodburyPreconditioner::build_threaded(&x, &hp, fam, 16, t);
+            let pre = WoodburyPreconditioner::build_threaded(&x, &hp, fam, 16, t).unwrap();
             assert_eq!(pre.l, serial.l, "t={t}");
             assert_eq!(pre.apply_t(&r, t), want, "t={t}");
         }
@@ -580,13 +600,13 @@ mod tests {
         // the rank-64 factorisation for the rank-8 request
         let cache = PreconditionerCache::default();
         let op = test_op(0.4);
-        let p64 = cache.woodbury(&op, 64, 1);
-        let p8 = cache.woodbury(&op, 8, 1);
+        let p64 = cache.woodbury(&op, 64, 1).unwrap();
+        let p8 = cache.woodbury(&op, 8, 1).unwrap();
         assert_eq!(cache.woodbury_builds(), 2);
         assert!(p8.rank() <= 8, "rank {} leaked from the rank-64 entry", p8.rank());
         assert!(p64.rank() > p8.rank());
         // rank 0 must yield the identity, not any cached factorisation
-        let p0 = cache.woodbury(&op, 0, 1);
+        let p0 = cache.woodbury(&op, 0, 1).unwrap();
         assert_eq!(p0.rank(), 0);
     }
 
@@ -594,13 +614,13 @@ mod tests {
     fn cache_rebuilds_on_hp_change_and_hits_otherwise() {
         let cache = PreconditionerCache::default();
         let op = test_op(0.4);
-        let a = cache.woodbury(&op, 16, 1);
-        let b = cache.woodbury(&op, 16, 1);
+        let a = cache.woodbury(&op, 16, 1).unwrap();
+        let b = cache.woodbury(&op, 16, 1).unwrap();
         assert!(Arc::ptr_eq(&a, &b), "same hp+rank must hit");
         assert_eq!(cache.woodbury_builds(), 1);
         assert_eq!(cache.hits(), 1);
         let op2 = test_op(0.7);
-        let c = cache.woodbury(&op2, 16, 1);
+        let c = cache.woodbury(&op2, 16, 1).unwrap();
         assert!(!Arc::ptr_eq(&a, &c));
         assert_eq!(cache.woodbury_builds(), 2);
     }
@@ -611,9 +631,9 @@ mod tests {
         let op = test_op(0.5);
         let mut rng = Rng::new(3);
         let r = Mat::from_fn(op.n(), 4, |_, _| rng.gaussian());
-        let cached = cache.woodbury(&op, 24, 2);
+        let cached = cache.woodbury(&op, 24, 2).unwrap();
         let fresh =
-            WoodburyPreconditioner::build_threaded(op.x(), op.hp(), op.family(), 24, 4);
+            WoodburyPreconditioner::build_threaded(op.x(), op.hp(), op.family(), 24, 4).unwrap();
         assert_eq!(cached.apply_t(&r, 3), fresh.apply_t(&r, 1));
     }
 
@@ -621,17 +641,17 @@ mod tests {
     fn ap_factors_cached_and_keyed_on_block_size() {
         let cache = PreconditionerCache::default();
         let op = test_op(0.4);
-        let fa = cache.ap_block_factors(&op, 64, 2);
-        let fb = cache.ap_block_factors(&op, 64, 2);
+        let fa = cache.ap_block_factors(&op, 64, 2).unwrap();
+        let fb = cache.ap_block_factors(&op, 64, 2).unwrap();
         assert!(Arc::ptr_eq(&fa, &fb));
-        let fc = cache.ap_block_factors(&op, 32, 2);
+        let fc = cache.ap_block_factors(&op, 32, 2).unwrap();
         assert_eq!(fa.len(), op.n() / 64);
         assert_eq!(fc.len(), op.n() / 32);
         assert_eq!(cache.ap_builds(), 2);
         // block-parallel build matches the serial one factor-for-factor
-        let serial = cache.ap_block_factors(&test_op(0.9), 64, 1);
+        let serial = cache.ap_block_factors(&test_op(0.9), 64, 1).unwrap();
         let op2 = test_op(0.9);
-        let par = PreconditionerCache::default().ap_block_factors(&op2, 64, 4);
+        let par = PreconditionerCache::default().ap_block_factors(&op2, 64, 4).unwrap();
         for (a, b) in serial.iter().zip(par.iter()) {
             assert_eq!(a.l, b.l);
         }
@@ -644,15 +664,15 @@ mod tests {
         // old n (wrong shape, silently wrong apply)
         let cache = PreconditionerCache::default();
         let mut op = test_op(0.4);
-        let p_small = cache.woodbury(&op, 16, 1);
-        let f_small = cache.ap_block_factors(&op, 64, 1);
+        let p_small = cache.woodbury(&op, 16, 1).unwrap();
+        let f_small = cache.ap_block_factors(&op, 64, 1).unwrap();
         let mut rng = Rng::new(5);
         let chunk = Mat::from_fn(64, op.d(), |_, _| rng.gaussian());
         op.extend(&chunk).unwrap();
-        let p_big = cache.woodbury(&op, 16, 1);
+        let p_big = cache.woodbury(&op, 16, 1).unwrap();
         assert!(!Arc::ptr_eq(&p_small, &p_big), "stale preconditioner served after extend");
         assert_eq!(p_big.l.rows, op.n());
-        let f_big = cache.ap_block_factors(&op, 64, 1);
+        let f_big = cache.ap_block_factors(&op, 64, 1).unwrap();
         assert!(!Arc::ptr_eq(&f_small, &f_big));
         assert_eq!(f_big.len(), op.n() / 64);
         assert_eq!(cache.woodbury_builds(), 2);
@@ -660,7 +680,7 @@ mod tests {
         // invalidate_all drops the entries (next request rebuilds) but
         // keeps the counters
         cache.invalidate_all();
-        let _ = cache.woodbury(&op, 16, 1);
+        let _ = cache.woodbury(&op, 16, 1).unwrap();
         assert_eq!(cache.woodbury_builds(), 3);
     }
 
@@ -674,8 +694,8 @@ mod tests {
         let hp = Hyperparams { ell: vec![0.9; 3], sigf: 1.1, sigma: 0.4 };
         let fam = KernelFamily::Matern32;
         let r = Mat::from_fn(n, 4, |_, _| rng.gaussian());
-        let global = WoodburyPreconditioner::build_threaded(&x, &hp, fam, 12, 2);
-        let jac = ShardedJacobiPreconditioner::build_threaded(&x, &hp, fam, 12, 1, 2);
+        let global = WoodburyPreconditioner::build_threaded(&x, &hp, fam, 12, 2).unwrap();
+        let jac = ShardedJacobiPreconditioner::build_threaded(&x, &hp, fam, 12, 1, 2).unwrap();
         assert_eq!(jac.num_shards(), 1);
         let a = global.apply_t(&r, 2);
         let b = jac.apply_t(&r, 2);
@@ -693,14 +713,14 @@ mod tests {
         let x = Mat::from_fn(n, 3, |_, _| rng.gaussian());
         let hp = Hyperparams { ell: vec![0.8; 3], sigf: 1.0, sigma: 0.3 };
         let fam = KernelFamily::Matern52;
-        let jac = ShardedJacobiPreconditioner::build_threaded(&x, &hp, fam, 8, 3, 2);
+        let jac = ShardedJacobiPreconditioner::build_threaded(&x, &hp, fam, 8, 3, 2).unwrap();
         assert_eq!(jac.num_shards(), 3);
         let r = Mat::from_fn(n, 3, |_, _| rng.gaussian());
         let got = jac.apply_t(&r, 1);
         for &(r0, r1) in &shard_ranges(n, 3) {
             let rows: Vec<usize> = (r0..r1).collect();
             let xs = x.gather_rows(&rows);
-            let part = WoodburyPreconditioner::build_threaded(&xs, &hp, fam, 8, 1);
+            let part = WoodburyPreconditioner::build_threaded(&xs, &hp, fam, 8, 1).unwrap();
             let rs = r.gather_rows(&rows);
             let want = part.apply_t(&rs, 1);
             for (a, b) in got.data[r0 * 3..r1 * 3].iter().zip(&want.data) {
@@ -717,34 +737,34 @@ mod tests {
         let cache = PreconditionerCache::default();
         let op = test_op(0.4);
         // shards <= 1 or rank 0: global Woodbury path
-        match cache.solver_preconditioner(&op, 16, 1, 1) {
+        match cache.solver_preconditioner(&op, 16, 1, 1).unwrap() {
             SolverPrecond::Woodbury(_) => {}
             SolverPrecond::BlockJacobi(_) => panic!("S=1 must stay on the global path"),
         }
-        match cache.solver_preconditioner(&op, 0, 4, 1) {
+        match cache.solver_preconditioner(&op, 0, 4, 1).unwrap() {
             SolverPrecond::Woodbury(p) => assert_eq!(p.rank(), 0),
             SolverPrecond::BlockJacobi(_) => panic!("rank 0 must stay on the global path"),
         }
         assert_eq!(cache.jacobi_builds(), 0);
         // opted in: block-Jacobi, cached on (hp, rank, shards, n)
-        let a = match cache.solver_preconditioner(&op, 16, 3, 1) {
+        let a = match cache.solver_preconditioner(&op, 16, 3, 1).unwrap() {
             SolverPrecond::BlockJacobi(p) => p,
             SolverPrecond::Woodbury(_) => panic!("S=3 must shard"),
         };
         assert_eq!(a.num_shards(), 3);
-        let b = match cache.solver_preconditioner(&op, 16, 3, 1) {
+        let b = match cache.solver_preconditioner(&op, 16, 3, 1).unwrap() {
             SolverPrecond::BlockJacobi(p) => p,
             SolverPrecond::Woodbury(_) => panic!(),
         };
         assert!(Arc::ptr_eq(&a, &b), "same (hp, rank, shards) must hit");
-        let c = match cache.solver_preconditioner(&op, 16, 4, 1) {
+        let c = match cache.solver_preconditioner(&op, 16, 4, 1).unwrap() {
             SolverPrecond::BlockJacobi(p) => p,
             SolverPrecond::Woodbury(_) => panic!(),
         };
         assert!(!Arc::ptr_eq(&a, &c), "shard count is part of the key");
         assert_eq!(cache.jacobi_builds(), 2);
         cache.invalidate_all();
-        let _ = cache.solver_preconditioner(&op, 16, 3, 1);
+        let _ = cache.solver_preconditioner(&op, 16, 3, 1).unwrap();
         assert_eq!(cache.jacobi_builds(), 3);
     }
 
@@ -752,12 +772,12 @@ mod tests {
     fn cache_evicts_lru() {
         let cache = PreconditionerCache::with_capacity(2);
         let op = test_op(0.4);
-        cache.woodbury(&op, 4, 1);
-        cache.woodbury(&op, 8, 1);
-        cache.woodbury(&op, 12, 1); // evicts rank 4
-        cache.woodbury(&op, 8, 1); // still cached
+        cache.woodbury(&op, 4, 1).unwrap();
+        cache.woodbury(&op, 8, 1).unwrap();
+        cache.woodbury(&op, 12, 1).unwrap(); // evicts rank 4
+        cache.woodbury(&op, 8, 1).unwrap(); // still cached
         assert_eq!(cache.hits(), 1);
-        cache.woodbury(&op, 4, 1); // rebuilt
+        cache.woodbury(&op, 4, 1).unwrap(); // rebuilt
         assert_eq!(cache.woodbury_builds(), 4);
     }
 }

@@ -9,7 +9,7 @@ use super::{
     drift_exceeded, recurrence, residual_norms_t, verify_residuals_f64, LinearSolver, Normalized,
     SolveOptions, SolveReport, SolverKind,
 };
-use crate::linalg::Mat;
+use crate::linalg::{micro, Mat};
 use crate::operators::{HvScratch, KernelOperator, Precision};
 use crate::util::rng::Rng;
 
@@ -60,7 +60,7 @@ impl SgdSolver {
         let scratch = HvScratch::default();
         let mut hv = Mat::zeros(b_mat.rows, b_mat.cols);
         let (norm, r_init) = Normalized::setup_pooled(op, b_mat, v0, threads, &scratch, &mut hv);
-        let init_residual_sq: f64 = recurrence::col_sq_sums(&r_init, threads).iter().sum();
+        let init_residual_sq: f64 = micro::sum(&recurrence::col_sq_sums(&r_init, threads));
         let (ry0, rz0) = residual_norms_t(&r_init, threads);
         // Divergence guard scaled to the initial residual: a cold start (or
         // a fresh warm start) begins at ~1 per normalised column, keeping

@@ -32,7 +32,7 @@ pub struct BenchResult {
 impl BenchResult {
     fn sorted_secs(&self) -> Vec<f64> {
         let mut v: Vec<f64> = self.samples.iter().map(|d| d.as_secs_f64()).collect();
-        v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        sort_total(&mut v);
         v
     }
 
@@ -51,6 +51,13 @@ impl BenchResult {
         let idx = ((v.len() as f64 - 1.0) * p).round() as usize;
         v[idx]
     }
+}
+
+/// Ascending total-order sort for timing samples. `Duration::as_secs_f64`
+/// can never yield NaN, but derived figures can; `total_cmp` keeps a NaN
+/// from panicking the comparator mid-report (it sorts last instead).
+fn sort_total(v: &mut [f64]) {
+    v.sort_by(|a, b| a.total_cmp(b));
 }
 
 fn fmt_time(s: f64) -> String {
@@ -185,30 +192,26 @@ impl JsonReport {
         &self.records
     }
 
-    /// Serialise the records (insertion order) as a JSON array.
+    /// Serialise the records (insertion order) as a JSON array in the
+    /// repo-wide flat record shape (see [`render_flat_records`]).
     pub fn render(&self) -> String {
-        let mut s = String::from("[\n");
-        for (i, r) in self.records.iter().enumerate() {
-            let extra: String = r
-                .extra
-                .iter()
-                .map(|(k, v)| format!(", \"{}\": {:.3}", json_escape(k), v))
-                .collect();
-            s.push_str(&format!(
-                "  {{\"op\": \"{}\", \"backend\": \"{}\", \"n\": {}, \"d\": {}, \
-                 \"threads\": {}, \"ns_per_op\": {:.3}{}}}{}\n",
-                json_escape(&r.op),
-                json_escape(&r.backend),
-                r.n,
-                r.d,
-                r.threads,
-                r.ns_per_op,
-                extra,
-                if i + 1 < self.records.len() { "," } else { "" }
-            ));
-        }
-        s.push_str("]\n");
-        s
+        let records: Vec<Vec<(String, JsonField)>> = self
+            .records
+            .iter()
+            .map(|r| {
+                let mut fields = vec![
+                    ("op".to_string(), JsonField::Str(r.op.clone())),
+                    ("backend".to_string(), JsonField::Str(r.backend.clone())),
+                    ("n".to_string(), JsonField::Int(r.n as i64)),
+                    ("d".to_string(), JsonField::Int(r.d as i64)),
+                    ("threads".to_string(), JsonField::Int(r.threads as i64)),
+                    ("ns_per_op".to_string(), JsonField::F3(r.ns_per_op)),
+                ];
+                fields.extend(r.extra.iter().map(|(k, v)| (k.clone(), JsonField::F3(*v))));
+                fields
+            })
+            .collect();
+        render_flat_records(&records)
     }
 
     /// Write the report to its path, announcing where it went.
@@ -221,6 +224,46 @@ impl JsonReport {
 
 fn json_escape(s: &str) -> String {
     s.replace('\\', "\\\\").replace('"', "\\\"")
+}
+
+/// One field of a flat JSON record: a string, an integer, or a float
+/// printed with three decimals (the repo's bench-record convention).
+#[derive(Clone, Debug, PartialEq)]
+pub enum JsonField {
+    Str(String),
+    Int(i64),
+    F3(f64),
+}
+
+impl JsonField {
+    fn render(&self) -> String {
+        match self {
+            JsonField::Str(s) => format!("\"{}\"", json_escape(s)),
+            JsonField::Int(i) => i.to_string(),
+            JsonField::F3(x) => format!("{x:.3}"),
+        }
+    }
+}
+
+/// Render records in the repo's shared machine-readable shape: a JSON
+/// array with one single-line object per record, fields in insertion
+/// order.  `BENCH_*.json` and the `igp-lint --json` report both use this
+/// so downstream tooling can parse every artifact the same way.
+pub fn render_flat_records(records: &[Vec<(String, JsonField)>]) -> String {
+    let mut s = String::from("[\n");
+    for (i, fields) in records.iter().enumerate() {
+        let body: Vec<String> = fields
+            .iter()
+            .map(|(k, v)| format!("\"{}\": {}", json_escape(k), v.render()))
+            .collect();
+        s.push_str(&format!(
+            "  {{{}}}{}\n",
+            body.join(", "),
+            if i + 1 < records.len() { "," } else { "" }
+        ));
+    }
+    s.push_str("]\n");
+    s
 }
 
 /// True when the bench was invoked with `--quick` (tiny shapes only — the
@@ -273,6 +316,29 @@ mod tests {
         assert!(s.contains("\"rows_per_sec\": 250000.000"), "{s}");
         // extras come before the closing brace, with no trailing comma
         assert!(s.contains("250000.000}"), "{s}");
+    }
+
+    #[test]
+    fn percentile_sort_orders_nan_last_instead_of_panicking() {
+        // Regression: sorted_secs() used sort_by(partial_cmp().unwrap()),
+        // which panics the comparator on NaN.  total_cmp gives NaN a
+        // defined slot (after +inf) so a poisoned sample degrades the
+        // percentile instead of killing the bench mid-JSON-report.
+        let mut v = vec![1.0, f64::NAN, 0.5, 2.0];
+        sort_total(&mut v);
+        assert_eq!(&v[..3], &[0.5, 1.0, 2.0]);
+        assert!(v[3].is_nan());
+    }
+
+    #[test]
+    fn flat_records_render_matches_jsonreport_shape() {
+        let rec = vec![
+            ("rule".to_string(), JsonField::Str("lib-unwrap".to_string())),
+            ("line".to_string(), JsonField::Int(42)),
+            ("score".to_string(), JsonField::F3(1.5)),
+        ];
+        let s = render_flat_records(&[rec]);
+        assert_eq!(s, "[\n  {\"rule\": \"lib-unwrap\", \"line\": 42, \"score\": 1.500}\n]\n");
     }
 
     #[test]

@@ -1,0 +1,319 @@
+//! Fixture tests for the `igp-lint` rule engine, plus the acceptance
+//! test that the tree itself is clean against the checked-in baseline.
+//!
+//! This file lives in `tests/` (outside `src/`), so the lint pass never
+//! scans it — fixture strings below can freely contain violations and
+//! suppression directives without tripping the self-scan.
+
+use igp::lint::{self, Baseline, LintReport};
+use std::path::Path;
+
+fn lint_one(path: &str, text: &str) -> LintReport {
+    lint::lint_sources(&[(path.to_string(), text.to_string())], None)
+}
+
+fn rules_of(report: &LintReport) -> Vec<&'static str> {
+    report.violations.iter().map(|v| v.rule).collect()
+}
+
+// ---------------------------------------------------------------- rules
+
+#[test]
+fn float_total_order_flags_partial_cmp_unwrap_and_comparators() {
+    let bad = "pub fn f(v: &mut Vec<f64>) {\n    v.sort_by(|a, b| a.partial_cmp(b).unwrap());\n}\n";
+    let r = lint_one("src/foo.rs", bad);
+    assert!(rules_of(&r).contains(&"float-total-order"), "{:?}", r.violations);
+    // both patterns fire on the same line but dedup to one finding
+    assert_eq!(rules_of(&r).iter().filter(|r| **r == "float-total-order").count(), 1);
+    assert_eq!(r.violations.iter().find(|v| v.rule == "float-total-order").map(|v| v.line), Some(2));
+
+    let bad2 = "pub fn g(xs: &[f64]) -> Option<f64> {\n    xs.iter().cloned().max_by(|a, b| a.partial_cmp(b).unwrap())\n}\n";
+    let r2 = lint_one("src/foo.rs", bad2);
+    assert!(rules_of(&r2).contains(&"float-total-order"), "{:?}", r2.violations);
+
+    let good = "pub fn f(v: &mut Vec<f64>) {\n    v.sort_by(|a, b| a.total_cmp(b));\n}\npub fn g(xs: &[f64]) -> Option<f64> {\n    xs.iter().cloned().max_by(|a, b| a.total_cmp(b))\n}\n";
+    let rg = lint_one("src/foo.rs", good);
+    assert!(!rules_of(&rg).contains(&"float-total-order"), "{:?}", rg.violations);
+}
+
+#[test]
+fn float_total_order_applies_inside_test_code_too() {
+    // a NaN-panicking comparator in a test helper is the same latent
+    // crash, so the test-region exemption does NOT apply to this rule
+    let fixture = "#[cfg(test)]\nmod tests {\n    fn sorted(mut v: Vec<f64>) -> Vec<f64> {\n        v.sort_by(|a, b| a.partial_cmp(b).unwrap());\n        v\n    }\n}\n";
+    let r = lint_one("src/foo.rs", fixture);
+    assert!(rules_of(&r).contains(&"float-total-order"), "{:?}", r.violations);
+    // ...while lib-unwrap IS test-exempt, so the unwrap itself is free
+    assert!(!rules_of(&r).contains(&"lib-unwrap"), "{:?}", r.violations);
+}
+
+#[test]
+fn ordered_reduction_is_scoped_to_numeric_dirs_and_helper_homes() {
+    let body = "pub fn total(xs: &[f64]) -> f64 {\n    xs.iter().sum()\n}\n";
+    assert!(rules_of(&lint_one("src/solvers/foo.rs", body)).contains(&"ordered-reduction"));
+    assert!(rules_of(&lint_one("src/operators/foo.rs", body)).contains(&"ordered-reduction"));
+    // out of scope: reductions in util/serve/etc are not solver math
+    assert!(!rules_of(&lint_one("src/util/foo.rs", body)).contains(&"ordered-reduction"));
+    // the canonical helpers themselves are where reductions belong
+    assert!(!rules_of(&lint_one("src/linalg/micro.rs", body)).contains(&"ordered-reduction"));
+    assert!(!rules_of(&lint_one("src/solvers/recurrence.rs", body)).contains(&"ordered-reduction"));
+
+    let turbofish = "pub fn total(xs: &[f64]) -> f64 {\n    xs.iter().sum::<f64>() * 2.0\n}\n";
+    assert!(rules_of(&lint_one("src/linalg/foo.rs", turbofish)).contains(&"ordered-reduction"));
+
+    let fold = "pub fn total(xs: &[f64]) -> f64 {\n    xs.iter().fold(0.0, |a, x| a + x)\n}\n";
+    assert!(rules_of(&lint_one("src/solvers/foo.rs", fold)).contains(&"ordered-reduction"));
+    // max/min folds are order-insensitive and stay allowed
+    let fold_max = "pub fn peak(xs: &[f64]) -> f64 {\n    xs.iter().cloned().fold(0.0, f64::max)\n}\n";
+    assert!(!rules_of(&lint_one("src/solvers/foo.rs", fold_max)).contains(&"ordered-reduction"));
+}
+
+#[test]
+fn ordered_reduction_is_exempt_in_test_code() {
+    let fixture = "#[cfg(test)]\nmod tests {\n    fn total(xs: &[f64]) -> f64 {\n        xs.iter().sum()\n    }\n}\n";
+    let r = lint_one("src/solvers/foo.rs", fixture);
+    assert!(r.violations.is_empty(), "{:?}", r.violations);
+}
+
+#[test]
+fn no_raw_threads_allows_only_the_parallel_module() {
+    let body = "pub fn go() {\n    std::thread::spawn(|| {});\n}\n";
+    assert!(rules_of(&lint_one("src/solvers/foo.rs", body)).contains(&"no-raw-threads"));
+    assert!(!rules_of(&lint_one("src/util/parallel.rs", body)).contains(&"no-raw-threads"));
+    let scoped = "pub fn go() {\n    std::thread::scope(|s| {\n        s.spawn(|| {});\n    });\n}\n";
+    assert!(rules_of(&lint_one("src/serve/foo.rs", scoped)).contains(&"no-raw-threads"));
+}
+
+#[test]
+fn nondeterministic_iteration_allows_runtime_and_respects_ident_boundaries() {
+    let body = "use std::collections::HashMap;\npub fn f() -> HashMap<u32, u32> {\n    HashMap::new()\n}\n";
+    let r = lint_one("src/solvers/foo.rs", body);
+    assert!(rules_of(&r).contains(&"nondeterministic-iteration"), "{:?}", r.violations);
+    // runtime/ marshals into external APIs keyed by name; allowlisted
+    assert!(!rules_of(&lint_one("src/runtime/foo.rs", body)).contains(&"nondeterministic-iteration"));
+    // identifier boundaries: a type that merely embeds the name is fine
+    let embedded = "pub struct MyHashMapLike;\npub fn f() -> MyHashMapLike {\n    MyHashMapLike\n}\n";
+    let re = lint_one("src/solvers/foo.rs", embedded);
+    assert!(re.violations.is_empty(), "{:?}", re.violations);
+}
+
+#[test]
+fn precision_cast_allows_only_the_blessed_demotion_sites() {
+    let body = "pub fn demote(x: f64) -> f32 {\n    x as f32\n}\n";
+    assert!(rules_of(&lint_one("src/solvers/foo.rs", body)).contains(&"precision-cast"));
+    assert!(!rules_of(&lint_one("src/kernels/panel.rs", body)).contains(&"precision-cast"));
+    assert!(!rules_of(&lint_one("src/linalg/micro.rs", body)).contains(&"precision-cast"));
+    // test code may build f32 fixtures freely
+    let test_code = "#[cfg(test)]\nmod tests {\n    fn d(x: f64) -> f32 {\n        x as f32\n    }\n}\n";
+    assert!(lint_one("src/solvers/foo.rs", test_code).violations.is_empty());
+}
+
+#[test]
+fn lib_unwrap_flags_library_code_but_not_tests() {
+    let body = "pub fn f(x: Option<u32>) -> u32 {\n    x.unwrap()\n}\npub fn g(x: Option<u32>) -> u32 {\n    x.expect(\"present\")\n}\n";
+    let r = lint_one("src/foo.rs", body);
+    assert_eq!(rules_of(&r).iter().filter(|r| **r == "lib-unwrap").count(), 2, "{:?}", r.violations);
+    let test_code = "#[test]\nfn t() {\n    Some(1u32).unwrap();\n}\n";
+    assert!(lint_one("src/foo.rs", test_code).violations.is_empty());
+}
+
+// ------------------------------------------------------------ stripping
+
+#[test]
+fn patterns_inside_comments_and_strings_never_fire() {
+    let fixture = concat!(
+        "// v.sort_by(|a, b| a.partial_cmp(b).unwrap());\n",
+        "/* x.unwrap() and std::thread::spawn too,\n   even /* nested */ x.unwrap() */\n",
+        "pub fn f() -> &'static str {\n",
+        "    let _c = 'x';\n",
+        "    let _raw = r#\"x.unwrap() as f32\"#;\n",
+        "    \".unwrap() HashMap as f32\"\n",
+        "}\n",
+    );
+    let r = lint_one("src/solvers/foo.rs", fixture);
+    assert!(r.violations.is_empty(), "{:?}", r.violations);
+}
+
+#[test]
+fn lifetimes_do_not_confuse_the_char_literal_scanner() {
+    let fixture = "pub fn f<'a>(x: &'a str) -> &'a str {\n    x\n}\npub fn g(x: Option<u32>) -> u32 {\n    x.unwrap()\n}\n";
+    let r = lint_one("src/foo.rs", fixture);
+    // the unwrap after the lifetimes must still be visible to the scanner
+    assert_eq!(rules_of(&r), vec!["lib-unwrap"], "{:?}", r.violations);
+}
+
+// ---------------------------------------------------------- suppression
+
+#[test]
+fn allow_with_reason_suppresses_the_next_line_and_its_own_line() {
+    let above = "pub fn total(xs: &[f64]) -> f64 {\n    // lint:allow(ordered-reduction): fixture waiver\n    xs.iter().sum()\n}\n";
+    let r = lint_one("src/solvers/foo.rs", above);
+    assert!(r.violations.is_empty(), "{:?}", r.violations);
+    assert_eq!(r.suppressed, 1);
+
+    let trailing = "pub fn total(xs: &[f64]) -> f64 {\n    xs.iter().sum() // lint:allow(ordered-reduction): fixture waiver\n}\n";
+    let rt = lint_one("src/solvers/foo.rs", trailing);
+    assert!(rt.violations.is_empty(), "{:?}", rt.violations);
+    assert_eq!(rt.suppressed, 1);
+}
+
+#[test]
+fn allow_only_covers_the_rules_it_names() {
+    let fixture = "pub fn f(xs: &[f64]) -> f64 {\n    // lint:allow(lib-unwrap): wrong rule named\n    xs.iter().sum()\n}\n";
+    let r = lint_one("src/solvers/foo.rs", fixture);
+    assert_eq!(rules_of(&r), vec!["ordered-reduction"], "{:?}", r.violations);
+    // a two-rule directive covers both
+    let both = "pub fn f(xs: &[f64]) -> f64 {\n    // lint:allow(ordered-reduction, lib-unwrap): fixture waiver\n    xs.iter().sum()\n}\n";
+    assert!(lint_one("src/solvers/foo.rs", both).violations.is_empty());
+}
+
+#[test]
+fn allow_without_reason_is_malformed_and_suppresses_nothing() {
+    let fixture = "pub fn total(xs: &[f64]) -> f64 {\n    // lint:allow(ordered-reduction)\n    xs.iter().sum()\n}\n";
+    let r = lint_one("src/solvers/foo.rs", fixture);
+    let mut rules = rules_of(&r);
+    rules.sort();
+    assert_eq!(rules, vec!["malformed-allow", "ordered-reduction"], "{:?}", r.violations);
+    // empty reason after the colon is just as malformed
+    let empty = "pub fn total(xs: &[f64]) -> f64 {\n    // lint:allow(ordered-reduction):   \n    xs.iter().sum()\n}\n";
+    assert!(rules_of(&lint_one("src/solvers/foo.rs", empty)).contains(&"malformed-allow"));
+}
+
+#[test]
+fn allow_naming_only_unknown_rules_is_inert() {
+    // unknown names must not error (forward-compat with rule renames)
+    // and must not demand a reason either
+    let fixture = "pub fn f() -> u32 {\n    // lint:allow(no-such-rule)\n    7\n}\n";
+    let r = lint_one("src/solvers/foo.rs", fixture);
+    assert!(r.violations.is_empty(), "{:?}", r.violations);
+}
+
+// -------------------------------------------------------------- ratchet
+
+#[test]
+fn ratchet_passes_at_baseline_fails_above_and_notes_below() {
+    let two = "pub fn f(a: Option<u32>, b: Option<u32>) -> u32 {\n    a.unwrap() + b.unwrap()\n}\n";
+    let files = vec![("src/foo.rs".to_string(), two.to_string())];
+    let baseline = lint::baseline_from(&files);
+    assert_eq!(baseline.count("lib-unwrap", "src/foo.rs"), 2);
+
+    // at baseline: clean
+    let r = lint::lint_sources(&files, Some(&baseline));
+    assert!(r.violations.is_empty(), "{:?}", r.violations);
+    assert!(r.notes.is_empty(), "{:?}", r.notes);
+
+    // one more site: a single per-file summary violation
+    let three = "pub fn f(a: Option<u32>, b: Option<u32>) -> u32 {\n    a.unwrap() + b.unwrap() + a.unwrap()\n}\n";
+    let worse = vec![("src/foo.rs".to_string(), three.to_string())];
+    let rw = lint::lint_sources(&worse, Some(&baseline));
+    assert_eq!(rules_of(&rw), vec!["lib-unwrap"], "{:?}", rw.violations);
+    assert_eq!(rw.violations[0].line, 0);
+    assert!(rw.violations[0].message.contains("baseline"), "{}", rw.violations[0].message);
+
+    // one fewer: clean, but with a tighten-the-ratchet note
+    let one = "pub fn f(a: Option<u32>) -> u32 {\n    a.unwrap()\n}\n";
+    let better = vec![("src/foo.rs".to_string(), one.to_string())];
+    let rb = lint::lint_sources(&better, Some(&baseline));
+    assert!(rb.violations.is_empty(), "{:?}", rb.violations);
+    assert_eq!(rb.notes.len(), 1, "{:?}", rb.notes);
+    assert!(rb.notes[0].contains("--update-baseline"), "{}", rb.notes[0]);
+
+    // updating the baseline locks the better count in
+    let updated = lint::baseline_from(&better);
+    assert_eq!(updated.count("lib-unwrap", "src/foo.rs"), 1);
+    assert!(lint::lint_sources(&better, Some(&updated)).notes.is_empty());
+}
+
+#[test]
+fn without_a_baseline_ratcheted_violations_report_individually() {
+    let two = "pub fn f(a: Option<u32>) -> u32 {\n    a.unwrap() + a.unwrap()\n}\n";
+    let r = lint_one("src/foo.rs", two);
+    // two sites on one line are two findings — the ratchet counts sites
+    assert_eq!(rules_of(&r), vec!["lib-unwrap", "lib-unwrap"], "{:?}", r.violations);
+    assert_eq!(r.violations[0].line, 2);
+}
+
+#[test]
+fn baseline_render_parse_roundtrips_byte_stable() {
+    let mut b = Baseline::default();
+    b.set("lib-unwrap", "src/z.rs", 3);
+    b.set("lib-unwrap", "src/a.rs", 1);
+    let text = b.render();
+    let re = Baseline::parse(&text).expect("rendered baseline parses");
+    assert_eq!(re, b);
+    assert_eq!(re.render(), text, "render must be a fixed point");
+    // keys come out sorted regardless of insertion order
+    let a = text.find("src/a.rs").expect("a present");
+    let z = text.find("src/z.rs").expect("z present");
+    assert!(a < z, "{text}");
+    // the empty baseline also roundtrips
+    let empty = Baseline::default();
+    assert_eq!(Baseline::parse(&empty.render()).expect("empty parses"), empty);
+}
+
+#[test]
+fn suppressed_ratcheted_sites_do_not_count_against_the_baseline() {
+    let fixture = "pub fn f(a: Option<u32>) -> u32 {\n    // lint:allow(lib-unwrap): fixture waiver\n    a.unwrap()\n}\n";
+    let files = vec![("src/foo.rs".to_string(), fixture.to_string())];
+    assert_eq!(lint::baseline_from(&files).count("lib-unwrap", "src/foo.rs"), 0);
+    let r = lint::lint_sources(&files, Some(&Baseline::default()));
+    assert!(r.violations.is_empty(), "{:?}", r.violations);
+    assert_eq!(r.suppressed, 1);
+}
+
+// ----------------------------------------------------------- acceptance
+
+#[test]
+fn the_tree_is_lint_clean_against_the_checked_in_baseline() {
+    let crate_root = Path::new(env!("CARGO_MANIFEST_DIR"));
+    let baseline_path = crate_root.join("../lint-baseline.json");
+    let text = std::fs::read_to_string(&baseline_path)
+        .expect("lint-baseline.json must be checked in at the repo root");
+    let baseline = Baseline::parse(&text).expect("checked-in baseline must parse");
+    let report = lint::lint_tree(crate_root, Some(&baseline)).expect("tree must be readable");
+    assert!(
+        report.violations.is_empty(),
+        "igp-lint must be clean on the tree (fix or suppress with a reason):\n{:#?}",
+        report.violations
+    );
+    assert!(report.files_scanned > 40, "the walk found only {} files", report.files_scanned);
+}
+
+#[test]
+fn binary_end_to_end_exit_codes_and_json_report() {
+    let dir = std::env::temp_dir().join(format!("igp-lint-e2e-{}", std::process::id()));
+    let src = dir.join("src");
+    std::fs::create_dir_all(&src).expect("temp fixture tree");
+    std::fs::write(src.join("foo.rs"), "pub fn f(x: Option<u32>) -> u32 {\n    x.unwrap()\n}\n")
+        .expect("fixture source");
+    let baseline = dir.join("baseline.json");
+    std::fs::write(&baseline, Baseline::default().render()).expect("fixture baseline");
+    let json = dir.join("report.json");
+
+    let run = |extra: &[&str]| {
+        let mut cmd = std::process::Command::new(env!("CARGO_BIN_EXE_igp-lint"));
+        cmd.arg("--root").arg(&dir).arg("--baseline").arg(&baseline).arg("--json").arg(&json);
+        for a in extra {
+            cmd.arg(a);
+        }
+        cmd.output().expect("igp-lint runs")
+    };
+
+    // above baseline: exit 1 and a machine-readable report
+    let out = run(&[]);
+    assert_eq!(out.status.code(), Some(1), "stdout: {}", String::from_utf8_lossy(&out.stdout));
+    let report = std::fs::read_to_string(&json).expect("json report written");
+    assert!(report.starts_with("[\n") && report.ends_with("]\n"), "{report}");
+    assert!(report.contains("\"rule\": \"lib-unwrap\""), "{report}");
+    assert!(report.contains("\"file\": \"src/foo.rs\""), "{report}");
+
+    // --update-baseline grandfathers the site; the same run is then clean
+    let out2 = run(&["--update-baseline"]);
+    assert_eq!(out2.status.code(), Some(0), "stdout: {}", String::from_utf8_lossy(&out2.stdout));
+    let rebased = std::fs::read_to_string(&baseline).expect("baseline rewritten");
+    assert!(rebased.contains("\"src/foo.rs\": 1"), "{rebased}");
+    let clean = std::fs::read_to_string(&json).expect("json rewritten");
+    assert_eq!(clean, "[\n]\n", "a clean run writes an empty record array");
+
+    let _ = std::fs::remove_dir_all(&dir);
+}

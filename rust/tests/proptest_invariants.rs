@@ -410,8 +410,8 @@ fn prop_cached_preconditioner_applies_like_fresh() {
         let cache = igp::solvers::PreconditionerCache::default();
         // warm the cache, then fetch again (hit) and compare with a build
         // that never saw the cache, under different thread counts
-        let first = cache.woodbury(&op, rank, 1 + size % 4);
-        let cached = cache.woodbury(&op, rank, 1);
+        let first = cache.woodbury(&op, rank, 1 + size % 4).unwrap();
+        let cached = cache.woodbury(&op, rank, 1).unwrap();
         prop_assert!(cache.hits() >= 1, "second fetch must hit");
         let fresh = igp::solvers::WoodburyPreconditioner::build_threaded(
             op.x(),
@@ -419,7 +419,8 @@ fn prop_cached_preconditioner_applies_like_fresh() {
             op.family(),
             rank,
             1,
-        );
+        )
+        .unwrap();
         let applied_cached = cached.apply_t(&b, 2 + size % 3);
         let applied_fresh = fresh.apply_t(&b, 1);
         let bit_equal = applied_cached
