@@ -244,6 +244,57 @@ fn precision_f32_vs_f64(json: &mut Option<JsonReport>, quick: bool) {
     }
 }
 
+/// Supervision-overhead section: one full trainer outer step with the
+/// fault-injection supervisor unarmed vs armed-but-benign (a `seed=`-only
+/// plan).  Unarmed, the supervised path *is* the plain path — no clone,
+/// no wrapper, no branch inside the solver.  Armed-benign pays the
+/// warm-start snapshot, the Adam rollback bookkeeping and the per-site
+/// schedule draws without a single fault firing, so the delta between the
+/// two records is the whole price of supervision.
+fn supervision_overhead(json: &mut Option<JsonReport>) {
+    use std::sync::Arc;
+
+    use igp::coordinator::{Trainer, TrainerOptions};
+    use igp::fault::FaultPlan;
+
+    let b = Bencher::default();
+    let ds = data::generate(&data::spec("test").unwrap());
+    let make = || {
+        let opts = TrainerOptions {
+            solver: SolverKind::Cg,
+            estimator: EstimatorKind::Pathwise,
+            warm_start: true,
+            lr: 0.05,
+            seed: 13,
+            ..Default::default()
+        };
+        Trainer::new(opts, Box::new(TiledOperator::new(&ds, 8, 64)), &ds)
+    };
+    let (n, d) = (ds.spec.n, ds.spec.d);
+
+    let mut plain = make();
+    let r = b.run("test/train-step unsupervised (chaos off)", None, || {
+        std::hint::black_box(plain.run(1).expect("unsupervised train step"));
+    });
+    if let Some(j) = json.as_mut() {
+        j.push("train-step-unsupervised", "tiled", n, d, 0, &r);
+    }
+
+    let mut armed = make();
+    armed.arm_faults(Arc::new(FaultPlan::parse("seed=7").expect("benign plan")));
+    let r = b.run("test/train-step supervised (chaos armed, benign)", None, || {
+        std::hint::black_box(armed.run(1).expect("supervised train step"));
+    });
+    if let Some(j) = json.as_mut() {
+        j.push("train-step-supervised", "tiled", n, d, 0, &r);
+    }
+    assert_eq!(
+        armed.recovery_stats().total_events(),
+        0,
+        "benign plan must never fire"
+    );
+}
+
 fn xla_backends(quick: bool) {
     common::skip_or(|| {
         let b = Bencher::default();
@@ -274,6 +325,7 @@ fn main() {
     sharded_backend(&mut json, quick);
     recurrence_threads(&mut json, quick);
     precision_f32_vs_f64(&mut json, quick);
+    supervision_overhead(&mut json);
     xla_backends(quick);
     if let Some(j) = &json {
         j.write().expect("bench json write");

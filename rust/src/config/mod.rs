@@ -227,6 +227,10 @@ pub struct RunConfig {
     /// Default logical deadline tick attached to enqueued serve requests
     /// (None = no deadline; smaller ticks drain first).
     pub serve_deadline: Option<u64>,
+    /// Deterministic fault-injection plan (chaos spec, e.g.
+    /// `"seed=7;solver@3;panel~0.01"`).  None = unarmed: the supervisor
+    /// hooks are zero-cost no-ops and every run is bitwise the seed run.
+    pub chaos: Option<String>,
 }
 
 impl Default for RunConfig {
@@ -253,6 +257,7 @@ impl Default for RunConfig {
             serve_policy: "refresh_first".into(),
             serve_queue_cap: 0,
             serve_deadline: None,
+            chaos: None,
         }
     }
 }
@@ -286,6 +291,7 @@ impl RunConfig {
                     "serve_policy" => rc.serve_policy = v.as_str()?.to_string(),
                     "serve_queue_cap" => rc.serve_queue_cap = v.as_int()? as usize,
                     "serve_deadline" => rc.serve_deadline = Some(v.as_int()? as u64),
+                    "chaos" => rc.chaos = Some(v.as_str()?.to_string()),
                     other => bail!("unknown run config key '{other}'"),
                 }
             }
@@ -334,6 +340,10 @@ impl RunConfig {
         }
         // single source of truth for staleness-policy names
         crate::serve::StalenessPolicy::parse(&self.serve_policy)?;
+        // single source of truth for the chaos spec grammar
+        if let Some(spec) = &self.chaos {
+            crate::fault::FaultPlan::parse(spec)?;
+        }
         Ok(())
     }
 }
@@ -453,6 +463,21 @@ mod tests {
         // static-shape backend cannot grow
         let bad = parse("online_chunks = 4\nbackend = \"xla\"").unwrap();
         assert!(RunConfig::from_doc(&bad).is_err());
+    }
+
+    #[test]
+    fn run_config_chaos_spec() {
+        assert_eq!(RunConfig::default().chaos, None);
+        let doc = parse(r#"chaos = "seed=7;solver@3;panel~0.01""#).unwrap();
+        assert_eq!(
+            RunConfig::from_doc(&doc).unwrap().chaos.as_deref(),
+            Some("seed=7;solver@3;panel~0.01")
+        );
+        // the spec is validated through the one grammar
+        let bad = parse(r#"chaos = "seed=7;warp@3""#).unwrap();
+        assert!(RunConfig::from_doc(&bad).is_err());
+        let bad_prob = parse(r#"chaos = "panel~2.0""#).unwrap();
+        assert!(RunConfig::from_doc(&bad_prob).is_err());
     }
 
     #[test]

@@ -6,25 +6,35 @@
 //! 32h in Table 10) — a crash without checkpoints loses the accumulated
 //! warm-start progress, which is exactly the asset warm starting builds.
 //!
-//! Format (little-endian): magic "IGPCKPT2", then length-prefixed f64
-//! vectors in fixed order: nu, adam_m, adam_v, v_store (+ rows/cols), plus
-//! step counter, seed, the trainer RNG state and the resolved SGD
-//! learning rate.  No external serde available offline.  Version-1 files
-//! ("IGPCKPT1", no RNG/lr trailer) still load — with `rng: None`, a
-//! restore keeps the trainer's current stream, which is only exactly
-//! reproducible for warm-started runs (frozen probes); cold-start runs
-//! need v2.
+//! Format v3 (little-endian): magic "IGPCKPT3", a payload, then the
+//! FNV-1a 64 hash of the payload ([`crate::fault::fnv1a`]) so torn writes
+//! and media corruption surface as a typed
+//! [`FaultError::CheckpointChecksum`] instead of a garbage load.  The
+//! payload is the v2 layout: length-prefixed f64 vectors in fixed order
+//! (nu, adam_m, adam_v, v_store + rows/cols) after step/seed/adam_t
+//! counters, then the trainer RNG state and the resolved SGD learning
+//! rate.  No external serde available offline.
+//!
+//! Older files still load: "IGPCKPT2" (same payload, no checksum) and
+//! "IGPCKPT1" (no RNG/lr trailer; `rng: None` keeps the trainer's current
+//! stream, exactly reproducible only for warm-started runs).  Every
+//! section length is validated against the bytes actually present before
+//! any allocation, so a truncated or length-corrupted file of ANY version
+//! is a typed [`FaultError::CheckpointTruncated`] /
+//! [`FaultError::CheckpointMalformed`] — never a panic, oversized
+//! allocation, or silent zero-fill.
 
-use std::io::{Read, Write};
 use std::path::Path;
 
 use anyhow::{bail, Context, Result};
 
+use crate::fault::{fnv1a, FaultError};
 use crate::linalg::Mat;
 use crate::util::rng::RngState;
 
 const MAGIC_V1: &[u8; 8] = b"IGPCKPT1";
 const MAGIC_V2: &[u8; 8] = b"IGPCKPT2";
+const MAGIC_V3: &[u8; 8] = b"IGPCKPT3";
 
 #[derive(Clone, Debug, PartialEq)]
 pub struct Checkpoint {
@@ -46,136 +56,240 @@ pub struct Checkpoint {
     pub sgd_lr: Option<f64>,
 }
 
-fn write_vec(out: &mut impl Write, v: &[f64]) -> Result<()> {
-    out.write_all(&(v.len() as u64).to_le_bytes())?;
+fn push_u64(out: &mut Vec<u8>, v: u64) {
+    out.extend_from_slice(&v.to_le_bytes());
+}
+
+fn push_vec(out: &mut Vec<u8>, v: &[f64]) {
+    push_u64(out, v.len() as u64);
     for x in v {
-        out.write_all(&x.to_le_bytes())?;
+        out.extend_from_slice(&x.to_le_bytes());
     }
-    Ok(())
 }
 
-fn read_u64(inp: &mut impl Read) -> Result<u64> {
-    let mut b = [0u8; 8];
-    inp.read_exact(&mut b)?;
-    Ok(u64::from_le_bytes(b))
+/// Bounds-checked byte-slice reader shared by every checkpoint version:
+/// each read names its section and validates the requested length against
+/// the bytes remaining BEFORE allocating or copying, so corrupted on-disk
+/// lengths surface as typed errors instead of multi-gigabyte allocations
+/// or `read_exact` zero-fill surprises.
+struct Cursor<'a> {
+    buf: &'a [u8],
+    pos: usize,
 }
 
-fn read_vec(inp: &mut impl Read) -> Result<Vec<f64>> {
-    let len = read_u64(inp)? as usize;
-    if len > (1 << 28) {
-        bail!("checkpoint vector too large ({len})");
+impl<'a> Cursor<'a> {
+    fn new(buf: &'a [u8]) -> Cursor<'a> {
+        Cursor { buf, pos: 0 }
     }
-    let mut v = Vec::with_capacity(len);
-    let mut b = [0u8; 8];
-    for _ in 0..len {
-        inp.read_exact(&mut b)?;
-        v.push(f64::from_le_bytes(b));
+
+    fn remaining(&self) -> usize {
+        self.buf.len() - self.pos
     }
-    Ok(v)
+
+    fn take(&mut self, n: usize, section: &'static str) -> Result<&'a [u8], FaultError> {
+        if n > self.remaining() {
+            return Err(FaultError::CheckpointTruncated {
+                section,
+                need: n,
+                have: self.remaining(),
+            });
+        }
+        let s = &self.buf[self.pos..self.pos + n];
+        self.pos += n;
+        Ok(s)
+    }
+
+    fn u64(&mut self, section: &'static str) -> Result<u64, FaultError> {
+        let b = self.take(8, section)?;
+        let mut w = [0u8; 8];
+        w.copy_from_slice(b);
+        Ok(u64::from_le_bytes(w))
+    }
+
+    fn f64(&mut self, section: &'static str) -> Result<f64, FaultError> {
+        Ok(f64::from_bits(self.u64(section)?))
+    }
+
+    /// Length-prefixed f64 vector; the byte count implied by the prefix is
+    /// validated against the remaining bytes before the allocation.
+    fn vec(&mut self, section: &'static str) -> Result<Vec<f64>, FaultError> {
+        let len = self.u64(section)? as usize;
+        let need = len.checked_mul(8).ok_or(FaultError::CheckpointMalformed {
+            detail: format!("section '{section}' length overflows: {len} elements"),
+        })?;
+        let bytes = self.take(need, section)?;
+        let mut v = Vec::with_capacity(len);
+        for c in bytes.chunks_exact(8) {
+            let mut w = [0u8; 8];
+            w.copy_from_slice(c);
+            v.push(f64::from_le_bytes(w));
+        }
+        Ok(v)
+    }
 }
 
 impl Checkpoint {
-    pub fn save<P: AsRef<Path>>(&self, path: P) -> Result<()> {
-        if let Some(parent) = path.as_ref().parent() {
-            std::fs::create_dir_all(parent)?;
-        }
-        let mut out = std::io::BufWriter::new(std::fs::File::create(&path)?);
-        out.write_all(MAGIC_V2)?;
-        out.write_all(&self.step.to_le_bytes())?;
-        out.write_all(&self.seed.to_le_bytes())?;
-        out.write_all(&self.adam_t.to_le_bytes())?;
-        write_vec(&mut out, &self.nu)?;
-        write_vec(&mut out, &self.adam_m)?;
-        write_vec(&mut out, &self.adam_v)?;
-        out.write_all(&(self.v_store.rows as u64).to_le_bytes())?;
-        out.write_all(&(self.v_store.cols as u64).to_le_bytes())?;
-        write_vec(&mut out, &self.v_store.data)?;
+    /// The version-3 payload (everything between the magic and the
+    /// checksum; byte-identical to a v2 file's body).
+    fn payload(&self) -> Vec<u8> {
+        let mut out = Vec::new();
+        push_u64(&mut out, self.step);
+        push_u64(&mut out, self.seed);
+        push_u64(&mut out, self.adam_t);
+        push_vec(&mut out, &self.nu);
+        push_vec(&mut out, &self.adam_m);
+        push_vec(&mut out, &self.adam_v);
+        push_u64(&mut out, self.v_store.rows as u64);
+        push_u64(&mut out, self.v_store.cols as u64);
+        push_vec(&mut out, &self.v_store.data);
         // RNG state: presence flag, 4 state words, spare flag + value
         match &self.rng {
             Some(st) => {
-                out.write_all(&1u64.to_le_bytes())?;
+                push_u64(&mut out, 1);
                 for w in st.s {
-                    out.write_all(&w.to_le_bytes())?;
+                    push_u64(&mut out, w);
                 }
                 match st.gauss_spare {
                     Some(g) => {
-                        out.write_all(&1u64.to_le_bytes())?;
-                        out.write_all(&g.to_le_bytes())?;
+                        push_u64(&mut out, 1);
+                        push_u64(&mut out, g.to_bits());
                     }
-                    None => out.write_all(&0u64.to_le_bytes())?,
+                    None => push_u64(&mut out, 0),
                 }
             }
-            None => out.write_all(&0u64.to_le_bytes())?,
+            None => push_u64(&mut out, 0),
         }
         // resolved SGD learning rate: presence flag + value
         match self.sgd_lr {
             Some(lr) => {
-                out.write_all(&1u64.to_le_bytes())?;
-                out.write_all(&lr.to_le_bytes())?;
+                push_u64(&mut out, 1);
+                push_u64(&mut out, lr.to_bits());
             }
-            None => out.write_all(&0u64.to_le_bytes())?,
+            None => push_u64(&mut out, 0),
         }
-        out.flush()?;
+        out
+    }
+
+    /// The complete v3 on-disk image: magic + payload + FNV-1a(payload).
+    /// Exposed so the chaos checkpoint site can corrupt the exact bytes a
+    /// save would write.
+    pub fn file_bytes(&self) -> Vec<u8> {
+        let payload = self.payload();
+        let mut out = Vec::with_capacity(8 + payload.len() + 8);
+        out.extend_from_slice(MAGIC_V3);
+        let sum = fnv1a(&payload);
+        out.extend_from_slice(&payload);
+        out.extend_from_slice(&sum.to_le_bytes());
+        out
+    }
+
+    pub fn save<P: AsRef<Path>>(&self, path: P) -> Result<()> {
+        if let Some(parent) = path.as_ref().parent() {
+            std::fs::create_dir_all(parent)?;
+        }
+        std::fs::write(&path, self.file_bytes())
+            .with_context(|| format!("writing {}", path.as_ref().display()))?;
         Ok(())
     }
 
     pub fn load<P: AsRef<Path>>(path: P) -> Result<Self> {
-        let mut inp = std::io::BufReader::new(
-            std::fs::File::open(&path)
-                .with_context(|| format!("opening {}", path.as_ref().display()))?,
-        );
-        let mut magic = [0u8; 8];
-        inp.read_exact(&mut magic)?;
-        let version = match &magic {
+        let bytes = std::fs::read(&path)
+            .with_context(|| format!("opening {}", path.as_ref().display()))?;
+        Self::from_bytes(&bytes)
+    }
+
+    /// Parse a checkpoint image of any supported version (the on-disk
+    /// byte layout of [`Checkpoint::file_bytes`] and its v1/v2
+    /// predecessors).  Every length is validated before use; corruption
+    /// is always a typed error.
+    pub fn from_bytes(bytes: &[u8]) -> Result<Self> {
+        let mut cur = Cursor::new(bytes);
+        let magic = cur.take(8, "magic")?;
+        let version = match magic {
             m if m == MAGIC_V1 => 1,
             m if m == MAGIC_V2 => 2,
+            m if m == MAGIC_V3 => 3,
             _ => bail!("not an igp checkpoint (bad magic)"),
         };
-        let step = read_u64(&mut inp)?;
-        let seed = read_u64(&mut inp)?;
-        let adam_t = read_u64(&mut inp)?;
-        let nu = read_vec(&mut inp)?;
-        let adam_m = read_vec(&mut inp)?;
-        let adam_v = read_vec(&mut inp)?;
-        let rows = read_u64(&mut inp)? as usize;
-        let cols = read_u64(&mut inp)? as usize;
-        let data = read_vec(&mut inp)?;
-        if data.len() != rows * cols {
-            bail!("checkpoint v_store shape mismatch: {}x{cols} vs {} values", rows, data.len());
+        let body = if version >= 3 {
+            // magic | payload | 8-byte checksum — verify before parsing
+            if cur.remaining() < 8 {
+                return Err(FaultError::CheckpointTruncated {
+                    section: "checksum",
+                    need: 8,
+                    have: cur.remaining(),
+                })?;
+            }
+            let payload = &bytes[8..bytes.len() - 8];
+            let mut w = [0u8; 8];
+            w.copy_from_slice(&bytes[bytes.len() - 8..]);
+            let stored = u64::from_le_bytes(w);
+            let computed = fnv1a(payload);
+            if stored != computed {
+                return Err(FaultError::CheckpointChecksum { stored, computed })?;
+            }
+            payload
+        } else {
+            &bytes[8..]
+        };
+        let mut cur = Cursor::new(body);
+        let step = cur.u64("step")?;
+        let seed = cur.u64("seed")?;
+        let adam_t = cur.u64("adam_t")?;
+        let nu = cur.vec("nu")?;
+        let adam_m = cur.vec("adam_m")?;
+        let adam_v = cur.vec("adam_v")?;
+        let rows = cur.u64("v_store shape")? as usize;
+        let cols = cur.u64("v_store shape")? as usize;
+        let data = cur.vec("v_store")?;
+        let cells = rows.checked_mul(cols).ok_or(FaultError::CheckpointMalformed {
+            detail: format!("v_store shape {rows}x{cols} overflows"),
+        })?;
+        if data.len() != cells {
+            return Err(FaultError::CheckpointMalformed {
+                detail: format!(
+                    "v_store shape mismatch: {rows}x{cols} vs {} values",
+                    data.len()
+                ),
+            })?;
         }
         let rng = if version >= 2 {
-            match read_u64(&mut inp)? {
+            match cur.u64("rng flag")? {
                 0 => None,
                 1 => {
                     let mut s = [0u64; 4];
                     for w in &mut s {
-                        *w = read_u64(&mut inp)?;
+                        *w = cur.u64("rng state")?;
                     }
-                    let gauss_spare = match read_u64(&mut inp)? {
+                    let gauss_spare = match cur.u64("rng spare flag")? {
                         0 => None,
-                        1 => {
-                            let mut b = [0u8; 8];
-                            inp.read_exact(&mut b)?;
-                            Some(f64::from_le_bytes(b))
+                        1 => Some(cur.f64("rng spare")?),
+                        other => {
+                            return Err(FaultError::CheckpointMalformed {
+                                detail: format!("bad rng spare flag {other}"),
+                            })?
                         }
-                        other => bail!("bad rng spare flag {other}"),
                     };
                     Some(RngState { s, gauss_spare })
                 }
-                other => bail!("bad rng presence flag {other}"),
+                other => {
+                    return Err(FaultError::CheckpointMalformed {
+                        detail: format!("bad rng presence flag {other}"),
+                    })?
+                }
             }
         } else {
             None
         };
         let sgd_lr = if version >= 2 {
-            match read_u64(&mut inp)? {
+            match cur.u64("sgd_lr flag")? {
                 0 => None,
-                1 => {
-                    let mut b = [0u8; 8];
-                    inp.read_exact(&mut b)?;
-                    Some(f64::from_le_bytes(b))
+                1 => Some(cur.f64("sgd_lr")?),
+                other => {
+                    return Err(FaultError::CheckpointMalformed {
+                        detail: format!("bad sgd_lr presence flag {other}"),
+                    })?
                 }
-                other => bail!("bad sgd_lr presence flag {other}"),
             }
         } else {
             None
@@ -237,24 +351,37 @@ mod tests {
 
     #[test]
     fn legacy_v1_loads_with_no_rng() {
-        // a v1 file is a v2 file minus the rng + sgd_lr trailer, with the
-        // old magic
+        // a v1 file is the payload minus the rng + sgd_lr trailer, under
+        // the old magic and with no checksum
         let d = std::env::temp_dir().join("igp_ckpt_v1");
+        std::fs::create_dir_all(&d).unwrap();
         let p = d.join("c.ckpt");
         let c = sample();
-        c.save(&p).unwrap();
-        let mut bytes = std::fs::read(&p).unwrap();
-        bytes[..8].copy_from_slice(b"IGPCKPT1");
-        // drop the trailer: rng flag + 4 words + spare flag + spare value,
-        // then sgd_lr flag + value (sample() has both Some)
+        let payload = c.payload();
+        // rng flag + 4 words + spare flag + spare value, then sgd_lr
+        // flag + value (sample() has both Some)
         let trailer = 8 * (1 + 4 + 1 + 1) + 8 * (1 + 1);
-        bytes.truncate(bytes.len() - trailer);
+        let mut bytes = MAGIC_V1.to_vec();
+        bytes.extend_from_slice(&payload[..payload.len() - trailer]);
         std::fs::write(&p, &bytes).unwrap();
         let l = Checkpoint::load(&p).unwrap();
         assert_eq!(l.rng, None);
         assert_eq!(l.sgd_lr, None);
         assert_eq!(l.v_store, c.v_store);
         assert_eq!(l.step, c.step);
+    }
+
+    #[test]
+    fn legacy_v2_loads_exactly() {
+        // a v2 file is the full payload under the v2 magic, no checksum
+        let d = std::env::temp_dir().join("igp_ckpt_v2");
+        std::fs::create_dir_all(&d).unwrap();
+        let p = d.join("c.ckpt");
+        let c = sample();
+        let mut bytes = MAGIC_V2.to_vec();
+        bytes.extend_from_slice(&c.payload());
+        std::fs::write(&p, &bytes).unwrap();
+        assert_eq!(Checkpoint::load(&p).unwrap(), c);
     }
 
     #[test]
@@ -267,12 +394,76 @@ mod tests {
     }
 
     #[test]
-    fn truncated_file_rejected() {
-        let d = std::env::temp_dir().join("igp_ckpt_trunc");
-        let p = d.join("t.ckpt");
-        sample().save(&p).unwrap();
-        let bytes = std::fs::read(&p).unwrap();
-        std::fs::write(&p, &bytes[..bytes.len() / 2]).unwrap();
-        assert!(Checkpoint::load(&p).is_err());
+    fn truncated_file_rejected_at_every_length() {
+        // satellite regression: EVERY prefix of a valid file must fail
+        // with a typed error, never panic or misparse
+        let full = sample().file_bytes();
+        for keep in 0..full.len() {
+            let e = Checkpoint::from_bytes(&full[..keep]);
+            assert!(e.is_err(), "prefix of {keep} bytes must be rejected");
+        }
+        assert!(Checkpoint::from_bytes(&full).is_ok());
+    }
+
+    #[test]
+    fn bit_flip_is_a_checksum_error() {
+        let mut bytes = sample().file_bytes();
+        // flip one payload bit (past the magic, before the checksum)
+        let mid = 8 + (bytes.len() - 16) / 2;
+        bytes[mid] ^= 0x10;
+        let e = Checkpoint::from_bytes(&bytes).unwrap_err();
+        assert!(e.to_string().contains("checksum mismatch"), "{e:#}");
+    }
+
+    #[test]
+    fn corrupt_length_prefix_is_typed_not_an_allocation() {
+        // v2 path (no checksum to save us): a corrupted nu length that
+        // claims far more data than the file holds must be a typed
+        // truncation error, not a giant allocation or zero-fill
+        let c = sample();
+        let mut bytes = MAGIC_V2.to_vec();
+        bytes.extend_from_slice(&c.payload());
+        let nu_len_off = 8 + 24; // magic + step/seed/adam_t
+        bytes[nu_len_off..nu_len_off + 8].copy_from_slice(&u64::MAX.to_le_bytes());
+        let e = Checkpoint::from_bytes(&bytes).unwrap_err();
+        let msg = format!("{e:#}");
+        assert!(
+            msg.contains("overflow") || msg.contains("truncated"),
+            "unexpected error: {msg}"
+        );
+        // a large-but-not-overflowing claim is a truncation naming the section
+        bytes[nu_len_off..nu_len_off + 8].copy_from_slice(&(1u64 << 30).to_le_bytes());
+        let e = Checkpoint::from_bytes(&bytes).unwrap_err();
+        assert!(format!("{e:#}").contains("'nu'"), "{e:#}");
+    }
+
+    #[test]
+    fn shape_mismatch_is_typed() {
+        // corrupt the v_store rows field so rows*cols != data.len()
+        let c = sample();
+        let mut bytes = MAGIC_V2.to_vec();
+        bytes.extend_from_slice(&c.payload());
+        // offset of rows: magic + 3 u64 + three vecs of 3 elements each
+        let off = 8 + 24 + 3 * (8 + 3 * 8);
+        bytes[off..off + 8].copy_from_slice(&5u64.to_le_bytes());
+        let e = Checkpoint::from_bytes(&bytes).unwrap_err();
+        assert!(format!("{e:#}").contains("shape mismatch"), "{e:#}");
+    }
+
+    #[test]
+    fn chaos_corruption_is_always_a_typed_error() {
+        // whatever corrupt_bytes does at any seed — truncation or a bit
+        // flip anywhere in the image — the load must fail typed, not panic
+        use crate::fault::FaultPlan;
+        let c = sample();
+        for seed in 0..32u64 {
+            let plan = FaultPlan::parse(&format!("seed={seed};checkpoint@0")).unwrap();
+            let mut bytes = c.file_bytes();
+            plan.corrupt_bytes(&mut bytes);
+            if bytes == c.file_bytes() {
+                continue; // a flip of a redundant bit pattern cannot occur; defensive
+            }
+            assert!(Checkpoint::from_bytes(&bytes).is_err(), "seed {seed}");
+        }
     }
 }

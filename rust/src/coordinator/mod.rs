@@ -24,6 +24,10 @@ use anyhow::Result;
 
 use crate::data::Dataset;
 use crate::estimator::{EstimatorKind, ProbeSet};
+use crate::fault::{
+    mat_finite, slice_finite, ChaosOpView, FaultError, FaultPlan, FaultSite, RecoveryStats,
+    Supervisor,
+};
 use crate::gp::{metrics, pathwise_variances, Metrics};
 use crate::linalg::Mat;
 use crate::operators::{KernelOperator, Precision};
@@ -134,6 +138,9 @@ pub struct TrainOutcome {
     /// Epochs across all solves this run (same coverage as `solver_secs`).
     pub total_epochs: f64,
     pub sgd_lr_used: f64,
+    /// Recovery events this run (all zero unless a fault plan is armed
+    /// and fired; `total_epochs` already includes the wasted epochs).
+    pub recovery: RecoveryStats,
 }
 
 pub struct Trainer {
@@ -179,6 +186,10 @@ pub struct Trainer {
     /// this cannot be an earlier state of *this* dataset (restore rejects
     /// it as a wrong-dataset mixup instead of silently zero-padding).
     base_n: usize,
+    /// Fault-injection plan + recovery accounting.  Unarmed (the default)
+    /// every hook below is a cold `is_none` check and the solve path is
+    /// byte-for-byte the historical one.
+    supervisor: Supervisor,
 }
 
 impl Trainer {
@@ -237,7 +248,20 @@ impl Trainer {
             step_count: 0,
             solve_count: 0,
             base_n,
+            supervisor: Supervisor::default(),
         }
+    }
+
+    /// Arm deterministic fault injection (the `--chaos` path).  Recovery
+    /// policies activate with the plan; unarmed trainers never touch them.
+    pub fn arm_faults(&mut self, plan: Arc<FaultPlan>) {
+        self.supervisor.arm(plan);
+    }
+
+    /// Lifetime recovery counters (all zero unless faults were armed and
+    /// fired).  `run` reports per-run deltas of the same counters.
+    pub fn recovery_stats(&self) -> RecoveryStats {
+        self.supervisor.stats
     }
 
     /// Initialise hyperparameters from values (e.g. the paper's
@@ -304,6 +328,136 @@ impl Trainer {
         report
     }
 
+    /// One supervised solve attempt: draw this attempt's fault sites from
+    /// the armed plan (each a fresh opportunity), then run the — possibly
+    /// corrupted — metered solve.  A solver-site hit synthesises a
+    /// stall/divergence: the attempt burns its full epoch budget and
+    /// reports non-finite residuals without touching `v`.
+    fn supervised_attempt(&mut self, b: &Mat, v: &mut Mat) -> SolveReport {
+        let stall = self.supervisor.fires(FaultSite::Solver);
+        let panel = self.supervisor.fires(FaultSite::Panel);
+        let shard = self.supervisor.fires(FaultSite::Shard);
+        let precond = self.supervisor.fires(FaultSite::Precond);
+        if stall {
+            let epochs = self.solve_opts.max_epochs;
+            self.spent_epochs += epochs;
+            return SolveReport {
+                iterations: 0,
+                epochs,
+                ry: f64::NAN,
+                rz: f64::NAN,
+                converged: false,
+                init_residual_sq: f64::NAN,
+            };
+        }
+        if panel || shard || precond {
+            if let Some(plan) = self.supervisor.plan().cloned() {
+                let t = Instant::now();
+                let view = ChaosOpView::new(self.op.as_ref(), &plan, panel, shard, precond);
+                let mut report = self.solver.solve(&view, b, v, &self.solve_opts);
+                if view.consumed() {
+                    // the corruption entered a product: reject the attempt
+                    // outright — a corrupted intermediate can steer a
+                    // solver to a finite-but-wrong answer that residual
+                    // finiteness alone would accept
+                    report.ry = f64::NAN;
+                    report.rz = f64::NAN;
+                    report.converged = false;
+                }
+                self.spent_solver_secs += t.elapsed().as_secs_f64();
+                self.spent_epochs += report.epochs;
+                self.solve_count += 1;
+                return report;
+            }
+        }
+        self.timed_solve(b, v)
+    }
+
+    /// The supervised solve path.  Unarmed it *is* [`Trainer::timed_solve`]
+    /// — no clone, no wrapper, no extra branch inside the solver — which is
+    /// what keeps the bitwise-parity suites byte-identical.  Armed, it
+    /// drives the recovery ladder: bounded retry (quarantining cached
+    /// factorisations and restoring the warm start between attempts), then
+    /// the cross-solver CG-f64 fallback, then a typed
+    /// [`FaultError::SolveFailed`] with the warm-start store left at its
+    /// pre-solve state.
+    fn supervised_solve(&mut self, b: &Mat, v: &mut Mat) -> Result<SolveReport> {
+        if !self.supervisor.armed() {
+            return Ok(self.timed_solve(b, v));
+        }
+        const RETRIES: u32 = 3;
+        let v0 = v.clone();
+        for _ in 0..RETRIES {
+            let report = self.supervised_attempt(b, v);
+            if solve_is_finite(&report) && mat_finite(v) {
+                return Ok(report);
+            }
+            // discard the attempt: meter the waste, quarantine every
+            // cached factorisation the corrupted products may have
+            // poisoned (the retry rebuilds them deterministically from
+            // the same (theta, n) key), restore the warm start
+            self.supervisor.stats.retries += 1;
+            self.supervisor.stats.wasted_epochs += report.epochs;
+            self.precond.invalidate_all();
+            self.supervisor.stats.cache_rebuilds += 1;
+            *v = v0.clone();
+        }
+        // cross-solver fallback: a fresh CG solver on the f64 reference
+        // path, swapped in so the attempt machinery — and the fault
+        // schedule — applies to it like any other attempt
+        let mut fb = make_solver(SolverKind::Cg);
+        fb.set_precond_cache(self.precond.clone());
+        let fb_opts = SolveOptions { precision: Precision::F64, ..self.solve_opts.clone() };
+        let saved_solver = std::mem::replace(&mut self.solver, fb);
+        let saved_opts = std::mem::replace(&mut self.solve_opts, fb_opts);
+        let report = self.supervised_attempt(b, v);
+        self.solver = saved_solver;
+        self.solve_opts = saved_opts;
+        if solve_is_finite(&report) && mat_finite(v) {
+            self.supervisor.stats.fallback_solves += 1;
+            return Ok(report);
+        }
+        self.supervisor.stats.wasted_epochs += report.epochs;
+        *v = v0.clone();
+        Err(FaultError::SolveFailed {
+            solver: self.opts.solver.name(),
+            step: self.step_count,
+            attempts: RETRIES + 1,
+        }
+        .into())
+    }
+
+    /// Pre-step optimiser snapshot for the rollback guard (armed only —
+    /// unarmed runs never pay the clones).
+    fn adam_snapshot(&self) -> Option<(Vec<f64>, Vec<f64>, Vec<f64>, u64)> {
+        if !self.supervisor.armed() {
+            return None;
+        }
+        let (m, v, t) = self.adam.state();
+        Some((self.params.nu.clone(), m.to_vec(), v.to_vec(), t))
+    }
+
+    /// Post-Adam guard: if the ascent produced a non-finite hyperparameter
+    /// state (a corrupt gradient slipped every earlier guard), restore the
+    /// snapshot — the last finite checkpointed state — and keep training.
+    /// Returns whether a rollback happened.
+    fn rollback_if_nonfinite(
+        &mut self,
+        snapshot: Option<(Vec<f64>, Vec<f64>, Vec<f64>, u64)>,
+    ) -> bool {
+        let (nu0, m0, v0, t0) = match snapshot {
+            Some(s) => s,
+            None => return false,
+        };
+        if slice_finite(&self.params.nu) {
+            return false;
+        }
+        self.params.nu = nu0;
+        self.adam.restore_state(m0, v0, t0);
+        self.supervisor.stats.rollbacks += 1;
+        true
+    }
+
     /// Metered solves over the trainer's lifetime (tests / diagnostics).
     pub fn solve_count(&self) -> u64 {
         self.solve_count
@@ -338,6 +492,26 @@ impl Trainer {
             rng: Some(self.rng.state()),
             sgd_lr: self.sgd_lr_resolved,
         }
+    }
+
+    /// Persist a checkpoint to `path` (v3 on-disk format, content
+    /// checksummed).  With an armed plan whose `checkpoint` site fires,
+    /// the written bytes are deterministically corrupted (truncation or a
+    /// bit-flip) to model a torn write — the v3 checksum turns the *next
+    /// load* into a typed error instead of a garbage resume, so callers
+    /// keeping their previous good file roll back durably.
+    pub fn save_checkpoint(&self, path: &std::path::Path) -> Result<()> {
+        let mut bytes = self.checkpoint().file_bytes();
+        if self.supervisor.armed() && self.supervisor.fires(FaultSite::Checkpoint) {
+            if let Some(plan) = self.supervisor.plan() {
+                plan.corrupt_bytes(&mut bytes);
+            }
+        }
+        if let Some(dir) = path.parent() {
+            std::fs::create_dir_all(dir)?;
+        }
+        std::fs::write(path, bytes)?;
+        Ok(())
     }
 
     /// Resume from a checkpoint: hyperparameters, Adam moments, the
@@ -485,9 +659,12 @@ impl Trainer {
         // autotune probes — is accounted
         let epochs0 = self.spent_epochs;
         let secs0 = self.spent_solver_secs;
+        let recovery0 = self.supervisor.stats;
 
         for step in 0..steps {
             let t_step = Instant::now();
+            // position the fault schedule at this outer step (no-op unarmed)
+            self.supervisor.set_step(self.step_count);
             let theta = self.params.theta();
             let hp = crate::kernels::Hyperparams::unpack(&theta, self.op.d());
             self.op.set_hp(&hp);
@@ -499,7 +676,27 @@ impl Trainer {
             if !self.opts.warm_start && self.step_count > 0 {
                 self.probes = ProbeSet::sample(self.opts.estimator, self.op.as_ref(), &mut self.rng);
             }
-            let b = self.probes.targets(self.op.as_ref(), &self.y_train);
+            let mut b = self.probes.targets(self.op.as_ref(), &self.y_train);
+            if self.supervisor.armed() {
+                if self.supervisor.fires(FaultSite::Probe) {
+                    if let Some(plan) = self.supervisor.plan() {
+                        let r = plan.target_row(b.rows);
+                        for x in b.row_mut(r) {
+                            *x = f64::NAN;
+                        }
+                    }
+                }
+                if !mat_finite(&b) {
+                    // probe targets are a pure function of the frozen
+                    // probe state — recompute from scratch, and only fail
+                    // typed if the corruption persists
+                    b = self.probes.targets(self.op.as_ref(), &self.y_train);
+                    if !mat_finite(&b) {
+                        return Err(FaultError::ProbeCorrupt { step: self.step_count }.into());
+                    }
+                    self.supervisor.stats.target_repairs += 1;
+                }
+            }
 
             // SGD learning-rate auto-tune on the first step (paper
             // protocol); the probe epochs are real solver work and are
@@ -532,7 +729,7 @@ impl Trainer {
                 Mat::zeros(self.op.n(), self.op.s() + 1)
             };
             let secs_before = self.spent_solver_secs;
-            let report = self.timed_solve(&b, &mut v);
+            let report = self.supervised_solve(&b, &mut v)?;
             let solve_elapsed = self.spent_solver_secs - secs_before;
             if self.opts.warm_start {
                 self.v_store = v.clone();
@@ -541,7 +738,9 @@ impl Trainer {
             // gradient estimate + Adam ascent
             let grad_theta = self.probes.grad(self.op.as_ref(), &v, &b);
             let grad_nu = self.params.chain_grad(&grad_theta);
+            let snapshot = self.adam_snapshot();
             self.adam.step(&mut self.params.nu, &grad_nu);
+            self.rollback_if_nonfinite(snapshot);
 
             let exact_mll = if self.opts.track_exact {
                 self.op.exact_mll(&self.y_train).map(|(l, _)| l)
@@ -600,6 +799,7 @@ impl Trainer {
             solver_secs: self.spent_solver_secs - secs0,
             total_epochs: self.spent_epochs - epochs0,
             sgd_lr_used: self.sgd_lr_resolved.unwrap_or(0.0),
+            recovery: self.supervisor.stats.delta_since(&recovery0),
         })
     }
 
@@ -614,7 +814,7 @@ impl Trainer {
         } else {
             Mat::zeros(self.op.n(), self.op.s() + 1)
         };
-        let _report = self.timed_solve(&b, &mut v);
+        let _report = self.supervised_solve(&b, &mut v)?;
         if self.opts.warm_start {
             self.v_store = v.clone();
         }
@@ -648,7 +848,10 @@ impl Trainer {
     fn build_artifact(&mut self, v: Option<&Mat>) -> Result<Arc<PosteriorArtifact>> {
         let (zhat, omega0, wts, vy) = match self.opts.estimator {
             EstimatorKind::Pathwise => {
-                let v = v.expect("pathwise evaluation needs the solved batch");
+                let v = match v {
+                    Some(v) => v,
+                    None => anyhow::bail!("pathwise evaluation needs the solved batch"),
+                };
                 (
                     self.probes.zhat(v),
                     self.probes.omega0.clone(),
@@ -672,7 +875,7 @@ impl Trainer {
                 let pw = ProbeSet::sample(EstimatorKind::Pathwise, self.op.as_ref(), &mut eval_rng);
                 let b = pw.targets(self.op.as_ref(), &self.y_train);
                 let mut vs = Mat::zeros(self.op.n(), self.op.s() + 1);
-                let _ = self.timed_solve(&b, &mut vs);
+                let _ = self.supervised_solve(&b, &mut vs)?;
                 (pw.zhat(&vs), pw.omega0.clone(), pw.wts.clone(), vs.col(0))
             }
         };
@@ -704,6 +907,19 @@ impl Trainer {
         let theta = self.params.theta();
         let hp = crate::kernels::Hyperparams::unpack(&theta, self.op.d());
         if let Some(art) = self.artifacts.get(self.tenant, &hp, self.op.n()) {
+            if self.supervisor.armed() && self.supervisor.fires(FaultSite::Cache) {
+                // cache-poisoning injection: replace the published entry
+                // with a non-finite clone and serve that — downstream
+                // validation (`PredictionService::fetch_artifact`) must
+                // quarantine the tenant's entries and rebuild
+                let mut bad = (*art).clone();
+                for x in &mut bad.vy {
+                    *x = f64::NAN;
+                }
+                let bad = Arc::new(bad);
+                self.artifacts.insert(self.tenant, &hp, self.op.n(), bad.clone());
+                return Ok(bad);
+            }
             return Ok(art);
         }
         self.op.set_hp(&hp);
@@ -715,6 +931,13 @@ impl Trainer {
             EstimatorKind::Standard => self.build_artifact(None),
         }
     }
+}
+
+/// A solve attempt is accepted when its residuals are finite (budget-capped
+/// non-converged reports pass — censoring is not a fault); the supervisor
+/// additionally requires the solution batch itself to scan finite.
+fn solve_is_finite(report: &SolveReport) -> bool {
+    report.ry.is_finite() && report.rz.is_finite()
 }
 
 fn preferred_block(op: &dyn KernelOperator) -> usize {
@@ -777,6 +1000,138 @@ mod tests {
             ..Default::default()
         };
         (Trainer::new(opts, Box::new(op), &ds), ds)
+    }
+
+    #[test]
+    fn rollback_restores_last_finite_state_and_is_counted() {
+        let (mut t, _ds) = trainer(SolverKind::Cg, EstimatorKind::Pathwise, true);
+        t.arm_faults(Arc::new(FaultPlan::parse("seed=3").unwrap()));
+        let snapshot = t.adam_snapshot();
+        let nu0 = t.params.nu.clone();
+        let (m0, v0, t0) = {
+            let (m, v, tt) = t.adam.state();
+            (m.to_vec(), v.to_vec(), tt)
+        };
+        // a poisoned ascent: non-finite hyperparameter state
+        t.params.nu[0] = f64::NAN;
+        assert!(t.rollback_if_nonfinite(snapshot));
+        assert_eq!(t.params.nu, nu0);
+        let (m1, v1, t1) = t.adam.state();
+        assert_eq!((m1, v1, t1), (&m0[..], &v0[..], t0));
+        assert_eq!(t.recovery_stats().rollbacks, 1);
+        // finite state: the guard is a no-op
+        let snapshot = t.adam_snapshot();
+        assert!(!t.rollback_if_nonfinite(snapshot));
+        assert_eq!(t.recovery_stats().rollbacks, 1);
+        // unarmed trainers never snapshot, so the guard never fires
+        let (t2, _ds) = trainer(SolverKind::Cg, EstimatorKind::Pathwise, true);
+        assert!(t2.adam_snapshot().is_none());
+    }
+
+    #[test]
+    fn armed_but_benign_plan_changes_nothing_and_reports_zero_recovery() {
+        let (mut plain, _ds) = trainer(SolverKind::Cg, EstimatorKind::Pathwise, true);
+        let (mut armed, _ds) = trainer(SolverKind::Cg, EstimatorKind::Pathwise, true);
+        armed.arm_faults(Arc::new(FaultPlan::parse("seed=11").unwrap()));
+        let a = plain.run(4).unwrap();
+        let b = armed.run(4).unwrap();
+        assert_eq!(a.theta, b.theta);
+        assert_eq!(b.recovery, RecoveryStats::default());
+        assert_eq!(a.total_epochs, b.total_epochs);
+    }
+
+    #[test]
+    fn scheduled_solver_stall_recovers_bitwise_with_metered_waste() {
+        let (mut plain, _ds) = trainer(SolverKind::Cg, EstimatorKind::Pathwise, true);
+        let (mut armed, _ds) = trainer(SolverKind::Cg, EstimatorKind::Pathwise, true);
+        armed.arm_faults(Arc::new(FaultPlan::parse("seed=5;solver@1").unwrap()));
+        let a = plain.run(4).unwrap();
+        let b = armed.run(4).unwrap();
+        assert_eq!(a.theta, b.theta, "recovered run must converge bitwise");
+        assert_eq!(b.recovery.retries, 1);
+        assert!(b.recovery.wasted_epochs > 0.0);
+        assert!(
+            b.total_epochs >= a.total_epochs + b.recovery.wasted_epochs,
+            "recovery epochs are charged on top: {} vs {} + {}",
+            b.total_epochs,
+            a.total_epochs,
+            b.recovery.wasted_epochs
+        );
+        for (ta, tb) in a.telemetry.iter().zip(&b.telemetry) {
+            assert_eq!(ta.theta, tb.theta);
+            assert_eq!(ta.grad, tb.grad);
+            assert_eq!(ta.ry.to_bits(), tb.ry.to_bits());
+            assert_eq!(ta.rz.to_bits(), tb.rz.to_bits());
+        }
+    }
+
+    #[test]
+    fn probe_corruption_is_repaired_by_recomputation() {
+        let (mut plain, _ds) = trainer(SolverKind::Cg, EstimatorKind::Pathwise, true);
+        let (mut armed, _ds) = trainer(SolverKind::Cg, EstimatorKind::Pathwise, true);
+        armed.arm_faults(Arc::new(FaultPlan::parse("seed=5;probe@0;probe@2").unwrap()));
+        let a = plain.run(4).unwrap();
+        let b = armed.run(4).unwrap();
+        assert_eq!(a.theta, b.theta);
+        assert_eq!(b.recovery.target_repairs, 2);
+        assert_eq!(b.recovery.retries, 0);
+    }
+
+    #[test]
+    fn persistent_fault_exhausts_fallback_into_a_typed_error() {
+        let (mut t, _ds) = trainer(SolverKind::Cg, EstimatorKind::Pathwise, true);
+        // the solver site stalls every attempt at step 1 — three retries
+        // and the CG-f64 fallback all burn out
+        t.arm_faults(Arc::new(FaultPlan::parse("seed=5;solver@1x99").unwrap()));
+        let err = t.run(4).unwrap_err().to_string();
+        assert!(err.contains("solve failed at outer step 1"), "{err}");
+        assert!(err.contains("cg-f64 fallback"), "{err}");
+        let stats = t.recovery_stats();
+        assert_eq!(stats.retries, 3);
+        assert_eq!(stats.fallback_solves, 0);
+        // the caches survive the failure: the trainer still answers a
+        // posterior-artifact request afterwards
+        let art = t.posterior_artifact();
+        assert!(art.is_err() || slice_finite(&art.unwrap().vy));
+    }
+
+    #[test]
+    fn save_checkpoint_corruption_yields_typed_load_error_and_durable_rollback() {
+        let dir = std::env::temp_dir().join(format!("igp-chaos-ckpt-{}", std::process::id()));
+        let good = dir.join("good.ckpt");
+        let bad = dir.join("bad.ckpt");
+        let (mut t, _ds) = trainer(SolverKind::Cg, EstimatorKind::Pathwise, true);
+        t.run(2).unwrap();
+        t.save_checkpoint(&good).unwrap();
+        // arm a plan whose checkpoint site fires on the very next save
+        t.arm_faults(Arc::new(FaultPlan::parse("seed=9;checkpoint@2").unwrap()));
+        t.supervisor.set_step(2);
+        t.save_checkpoint(&bad).unwrap();
+        assert!(checkpoint::Checkpoint::load(&bad).is_err(), "corrupted save must not load");
+        // durable rollback: the previous good file still restores
+        let ck = checkpoint::Checkpoint::load(&good).unwrap();
+        t.restore(&ck).unwrap();
+        assert_eq!(t.step_count, 2);
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn cache_poison_site_publishes_a_nonfinite_artifact() {
+        let (mut t, _ds) = trainer(SolverKind::Cg, EstimatorKind::Pathwise, true);
+        t.run(2).unwrap();
+        // warm the cache at the final theta (run's tail already did), then
+        // poison the next cache hit
+        let clean = t.posterior_artifact().unwrap();
+        assert!(slice_finite(&clean.vy));
+        t.arm_faults(Arc::new(FaultPlan::parse("seed=9;cache@2").unwrap()));
+        t.supervisor.set_step(2);
+        let poisoned = t.posterior_artifact().unwrap();
+        assert!(!slice_finite(&poisoned.vy), "cache site must poison the served artifact");
+        // quarantine-and-rebuild: invalidating the tenant heals it
+        t.artifact_cache().invalidate_tenant(t.tenant());
+        let healed = t.posterior_artifact().unwrap();
+        assert!(slice_finite(&healed.vy), "rebuild after quarantine must be clean");
+        assert_eq!(healed.theta, clean.theta);
     }
 
     #[test]

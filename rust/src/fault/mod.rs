@@ -1,0 +1,1012 @@
+//! Deterministic fault injection and supervised recovery.
+//!
+//! The paper's three techniques (pathwise estimation, warm starting, early
+//! stopping) all trade solver work for tolerable bias — a trade that only
+//! pays off in production if the system survives the failure modes it
+//! creates: divergent warm starts, drifted low-precision solves, poisoned
+//! preconditioners, stale artifacts (Maddox et al., *When are Iterative
+//! Gaussian Processes Reliably Accurate?*).  This module provides the one
+//! coherent, *testable* recovery layer the scattered per-site guards
+//! (SGD backoff, CG drift fallback, [`SolveReport::aborted`]) grew toward:
+//!
+//! * [`FaultPlan`] — a seeded, deterministic fault schedule parsed from the
+//!   `--chaos SPEC` / `chaos` config key.  Every fault is a pure function
+//!   of `(seed, site, step, draw index)`, so a chaos run is exactly
+//!   reproducible.  Unarmed (the default) the hooks are `Option::None`
+//!   checks on cold paths — provably zero-cost: the operator is never
+//!   wrapped and the supervised code path is never taken.
+//! * [`FaultSite`] — the named injection points spanning train, solve and
+//!   serve (see the README site table).
+//! * [`ChaosOpView`] — a borrowing [`KernelOperator`] wrapper that corrupts
+//!   the first kernel products of a solve attempt (NaN panel rows, Inf
+//!   shard partials, poisoned preconditioner columns) and then burns out,
+//!   so a retry against the same view is bitwise-transparent.
+//! * [`Supervisor`] — the recovery driver owned by `Trainer` and mirrored
+//!   by `PredictionService`: bounded retry with quarantine-and-rebuild,
+//!   cross-solver fallback (configured solver → CG-f64 reference),
+//!   outer-step rollback, and serve-side graceful degradation, all metered
+//!   into [`RecoveryStats`].
+//! * [`FaultError`] — the typed taxonomy every recovery failure surfaces
+//!   as (convertible into the vendored `anyhow` via `std::error::Error`).
+//! * [`fnv1a`] — the checkpoint-v3 content checksum.
+//!
+//! [`SolveReport::aborted`]: crate::solvers::SolveReport
+
+use std::collections::BTreeMap;
+use std::fmt;
+use std::sync::atomic::{AtomicBool, AtomicU8, Ordering};
+use std::sync::{Arc, Mutex, MutexGuard};
+
+use crate::kernels::{Hyperparams, KernelFamily};
+use crate::linalg::Mat;
+use crate::operators::{HvScratch, KernelOperator, Precision};
+
+// ---------------------------------------------------------------------------
+// Hashing primitives
+// ---------------------------------------------------------------------------
+
+/// FNV-1a 64-bit content hash (checkpoint v3 checksum).  Chosen for its
+/// trivial, dependency-free, endianness-independent definition; this is a
+/// corruption detector, not a cryptographic MAC.
+pub fn fnv1a(bytes: &[u8]) -> u64 {
+    let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+    for &b in bytes {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x0000_0100_0000_01b3);
+    }
+    h
+}
+
+/// SplitMix64 — the deterministic per-(seed, site, step, draw) stream
+/// behind probabilistic triggers and corruption offsets.
+fn splitmix64(x: u64) -> u64 {
+    let mut z = x.wrapping_add(0x9e37_79b9_7f4a_7c15);
+    z = (z ^ (z >> 30)).wrapping_mul(0xbf58_476d_1ce4_e5b9);
+    z = (z ^ (z >> 27)).wrapping_mul(0x94d0_49bb_1331_11eb);
+    z ^ (z >> 31)
+}
+
+// ---------------------------------------------------------------------------
+// Fault sites
+// ---------------------------------------------------------------------------
+
+/// Named injection points.  Step semantics differ by owner: train-side
+/// sites tick once per outer optimisation step; serve-side sites
+/// (`cache`, `refresh`) tick once per service operation (flush/drain).
+#[derive(Copy, Clone, Debug, PartialEq, Eq, PartialOrd, Ord)]
+pub enum FaultSite {
+    /// NaN row in a kernel panel product (`hv` / `k_rows` / `k_cols`).
+    Panel,
+    /// NaN row in the probe targets b (caught and repaired pre-solve).
+    Probe,
+    /// Inf row-range in an `hv` partial (a corrupted shard partial).
+    Shard,
+    /// Poisoned preconditioner build (NaN in the first `k_cols` panel).
+    Precond,
+    /// Solver stall: the attempt burns its epoch budget and diverges.
+    Solver,
+    /// Artifact-cache poisoning (NaN `vy` in a cached posterior).
+    Cache,
+    /// Checkpoint corruption on save (truncation or bit-flip).
+    Checkpoint,
+    /// Serve-side artifact refresh failure (`refresh_first` path).
+    Refresh,
+}
+
+impl FaultSite {
+    pub const ALL: [FaultSite; 8] = [
+        FaultSite::Panel,
+        FaultSite::Probe,
+        FaultSite::Shard,
+        FaultSite::Precond,
+        FaultSite::Solver,
+        FaultSite::Cache,
+        FaultSite::Checkpoint,
+        FaultSite::Refresh,
+    ];
+
+    pub fn parse(s: &str) -> anyhow::Result<Self> {
+        Ok(match s {
+            "panel" => FaultSite::Panel,
+            "probe" => FaultSite::Probe,
+            "shard" => FaultSite::Shard,
+            "precond" => FaultSite::Precond,
+            "solver" => FaultSite::Solver,
+            "cache" => FaultSite::Cache,
+            "checkpoint" => FaultSite::Checkpoint,
+            "refresh" => FaultSite::Refresh,
+            other => anyhow::bail!(
+                "unknown fault site '{other}' \
+                 (panel|probe|shard|precond|solver|cache|checkpoint|refresh)"
+            ),
+        })
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            FaultSite::Panel => "panel",
+            FaultSite::Probe => "probe",
+            FaultSite::Shard => "shard",
+            FaultSite::Precond => "precond",
+            FaultSite::Solver => "solver",
+            FaultSite::Cache => "cache",
+            FaultSite::Checkpoint => "checkpoint",
+            FaultSite::Refresh => "refresh",
+        }
+    }
+
+    /// Stable per-site stream key (independent of declaration order).
+    fn key(&self) -> u64 {
+        match self {
+            FaultSite::Panel => 0x01,
+            FaultSite::Probe => 0x02,
+            FaultSite::Shard => 0x03,
+            FaultSite::Precond => 0x04,
+            FaultSite::Solver => 0x05,
+            FaultSite::Cache => 0x06,
+            FaultSite::Checkpoint => 0x07,
+            FaultSite::Refresh => 0x08,
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Chaos spec grammar + FaultPlan
+// ---------------------------------------------------------------------------
+
+/// When an entry fires.
+#[derive(Copy, Clone, Debug, PartialEq)]
+enum Trigger {
+    /// Fire on the first `count` opportunities at exactly `step`.
+    At { step: u64, count: u32 },
+    /// Fire each opportunity independently with probability `p`, drawn
+    /// from the deterministic `(seed, site, step, draw)` stream.
+    Prob(f64),
+}
+
+#[derive(Copy, Clone, Debug, PartialEq)]
+struct FaultEntry {
+    site: FaultSite,
+    trigger: Trigger,
+}
+
+#[derive(Debug, Default)]
+struct FaultState {
+    /// Current step (outer optimisation step, or service-operation tick).
+    step: u64,
+    /// Opportunities consumed per scheduled entry (parallel to `entries`).
+    burned: Vec<u32>,
+    /// Draw counters per (site key, step) for probabilistic triggers.
+    draws: BTreeMap<(u64, u64), u64>,
+}
+
+/// A parsed, armed chaos schedule.
+///
+/// Spec grammar (entries separated by `;`, whitespace ignored):
+///
+/// ```text
+/// SPEC  := ENTRY (';' ENTRY)*
+/// ENTRY := 'seed=' N                      -- stream seed (default 0)
+///        | SITE '@' STEP ('x' COUNT)?     -- scheduled: COUNT consecutive
+///                                         --   failing opportunities at
+///                                         --   STEP (default COUNT = 1)
+///        | SITE '~' PROB                  -- probabilistic per opportunity
+/// SITE  := panel|probe|shard|precond|solver|cache|checkpoint|refresh
+/// ```
+///
+/// Example: `seed=7;panel@1;solver@2x3;refresh~0.25`.
+///
+/// An *opportunity* is one supervised action that consults the site: one
+/// solve attempt (panel/shard/precond/solver), one outer step (probe),
+/// one service operation (cache/refresh), one checkpoint save
+/// (checkpoint).  A spec with only `seed=` is valid and fires nothing —
+/// it arms the supervised path without injecting (the bench baseline for
+/// supervision overhead).
+#[derive(Debug)]
+pub struct FaultPlan {
+    seed: u64,
+    entries: Vec<FaultEntry>,
+    state: Mutex<FaultState>,
+}
+
+impl FaultPlan {
+    /// Parse a chaos spec (see the type-level grammar).  Single-source:
+    /// config validation, the CLI and tests all route through here.
+    pub fn parse(spec: &str) -> anyhow::Result<FaultPlan> {
+        let mut seed = 0u64;
+        let mut entries = Vec::new();
+        for raw in spec.split(';') {
+            let ent = raw.trim();
+            if ent.is_empty() {
+                continue;
+            }
+            if let Some(v) = ent.strip_prefix("seed=") {
+                seed = v
+                    .trim()
+                    .parse::<u64>()
+                    .map_err(|_| anyhow::anyhow!("chaos spec: bad seed '{v}'"))?;
+            } else if let Some((site, prob)) = ent.split_once('~') {
+                let site = FaultSite::parse(site.trim())?;
+                let p = prob
+                    .trim()
+                    .parse::<f64>()
+                    .map_err(|_| anyhow::anyhow!("chaos spec: bad probability '{prob}'"))?;
+                if !(0.0..=1.0).contains(&p) {
+                    anyhow::bail!("chaos spec: probability {p} outside [0, 1]");
+                }
+                entries.push(FaultEntry { site, trigger: Trigger::Prob(p) });
+            } else if let Some((site, at)) = ent.split_once('@') {
+                let site = FaultSite::parse(site.trim())?;
+                let (step, count) = match at.split_once('x') {
+                    Some((s, c)) => {
+                        let count = c
+                            .trim()
+                            .parse::<u32>()
+                            .map_err(|_| anyhow::anyhow!("chaos spec: bad count '{c}'"))?;
+                        if count == 0 {
+                            anyhow::bail!("chaos spec: count must be >= 1");
+                        }
+                        (s, count)
+                    }
+                    None => (at, 1),
+                };
+                let step = step
+                    .trim()
+                    .parse::<u64>()
+                    .map_err(|_| anyhow::anyhow!("chaos spec: bad step '{step}'"))?;
+                entries.push(FaultEntry { site, trigger: Trigger::At { step, count } });
+            } else {
+                anyhow::bail!(
+                    "chaos spec: cannot parse entry '{ent}' \
+                     (expected seed=N, site@STEP[xCOUNT] or site~PROB)"
+                );
+            }
+        }
+        let burned = vec![0u32; entries.len()];
+        Ok(FaultPlan {
+            seed,
+            entries,
+            state: Mutex::new(FaultState { step: 0, burned, draws: BTreeMap::new() }),
+        })
+    }
+
+    /// Seed of the deterministic fault stream (also used to derive
+    /// corruption rows/offsets, so distinct seeds hit distinct rows).
+    pub fn seed(&self) -> u64 {
+        self.seed
+    }
+
+    /// True when some entry can still fire at some step (a seed-only plan
+    /// is armed but benign).
+    pub fn has_entries(&self) -> bool {
+        !self.entries.is_empty()
+    }
+
+    /// Poison-recovering state access: a panicked holder cannot have left
+    /// the counters half-updated in a way recovery cares about, and the
+    /// fault layer must itself never panic.
+    fn state(&self) -> MutexGuard<'_, FaultState> {
+        match self.state.lock() {
+            Ok(g) => g,
+            Err(poisoned) => poisoned.into_inner(),
+        }
+    }
+
+    /// Position the schedule at an owner-defined step (outer optimisation
+    /// step for the trainer, service-operation tick for the serve layer).
+    pub fn set_step(&self, step: u64) {
+        self.state().step = step;
+    }
+
+    /// Consume one opportunity for `site` at the current step; true when
+    /// any entry fires.  Scheduled entries burn one of their COUNT
+    /// opportunities per call; probabilistic entries draw from the
+    /// deterministic stream, advancing the per-(site, step) draw counter.
+    pub fn fires(&self, site: FaultSite) -> bool {
+        let mut st = self.state();
+        let step = st.step;
+        let mut fired = false;
+        for (i, e) in self.entries.iter().enumerate() {
+            if e.site != site {
+                continue;
+            }
+            match e.trigger {
+                Trigger::At { step: s, count } => {
+                    if s == step && st.burned[i] < count {
+                        st.burned[i] += 1;
+                        fired = true;
+                    }
+                }
+                Trigger::Prob(p) => {
+                    let draw = st.draws.entry((site.key(), step)).or_insert(0);
+                    let h = splitmix64(
+                        self.seed
+                            ^ site.key().wrapping_mul(0x9e37_79b9_7f4a_7c15)
+                            ^ step.wrapping_mul(0xd1b5_4a32_d192_ed03)
+                            ^ *draw,
+                    );
+                    *draw += 1;
+                    let u = (h >> 11) as f64 * (1.0 / 9_007_199_254_740_992.0);
+                    if u < p {
+                        fired = true;
+                    }
+                }
+            }
+        }
+        fired
+    }
+
+    /// Seed-derived corruption target inside `n` rows.
+    pub fn target_row(&self, n: usize) -> usize {
+        if n == 0 {
+            return 0;
+        }
+        (splitmix64(self.seed ^ 0x726f_77) as usize) % n
+    }
+
+    /// Deterministically corrupt a serialized byte payload: even stream
+    /// parity truncates, odd parity flips one bit at a seed-derived
+    /// offset.  Models the checkpoint failure modes (torn write, media
+    /// corruption) the v3 checksum exists to catch.
+    pub fn corrupt_bytes(&self, bytes: &mut Vec<u8>) {
+        if bytes.is_empty() {
+            return;
+        }
+        let h = splitmix64(self.seed ^ 0x6368_6563_6b70_7431);
+        let off = ((h >> 1) as usize) % bytes.len();
+        if h & 1 == 0 {
+            bytes.truncate(off);
+        } else {
+            bytes[off] ^= 1 << ((h >> 33) & 7);
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// FaultError taxonomy
+// ---------------------------------------------------------------------------
+
+/// Typed failure taxonomy for supervised recovery.  Every unrecoverable
+/// fault surfaces as one of these (converting into the vendored `anyhow`
+/// through the `std::error::Error` blanket, like `ServeError`).
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum FaultError {
+    /// All retry attempts and the CG-f64 fallback failed.
+    SolveFailed { solver: &'static str, step: u64, attempts: u32 },
+    /// Probe targets were corrupt and recomputation did not heal them.
+    ProbeCorrupt { step: u64 },
+    /// A cached posterior artifact failed validation after rebuild.
+    ArtifactPoisoned { tenant: u64 },
+    /// A serve-side artifact refresh failed with no stale fallback.
+    RefreshFailed { detail: String },
+    /// A checkpoint section claims more bytes than the file holds.
+    CheckpointTruncated { section: &'static str, need: usize, have: usize },
+    /// Checkpoint v3 content checksum mismatch.
+    CheckpointChecksum { stored: u64, computed: u64 },
+    /// Structurally invalid checkpoint payload.
+    CheckpointMalformed { detail: String },
+}
+
+impl fmt::Display for FaultError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            FaultError::SolveFailed { solver, step, attempts } => write!(
+                f,
+                "solve failed at outer step {step}: {attempts} supervised attempt(s) with \
+                 the '{solver}' solver and the cg-f64 fallback all diverged"
+            ),
+            FaultError::ProbeCorrupt { step } => {
+                write!(f, "probe targets non-finite at outer step {step} after recomputation")
+            }
+            FaultError::ArtifactPoisoned { tenant } => write!(
+                f,
+                "posterior artifact for tenant {tenant} non-finite after quarantine and rebuild"
+            ),
+            FaultError::RefreshFailed { detail } => {
+                write!(f, "artifact refresh failed with no stale fallback: {detail}")
+            }
+            FaultError::CheckpointTruncated { section, need, have } => write!(
+                f,
+                "checkpoint truncated in section '{section}': needs {need} more byte(s), \
+                 file has {have}"
+            ),
+            FaultError::CheckpointChecksum { stored, computed } => write!(
+                f,
+                "checkpoint checksum mismatch: stored {stored:#018x}, computed {computed:#018x}"
+            ),
+            FaultError::CheckpointMalformed { detail } => {
+                write!(f, "checkpoint malformed: {detail}")
+            }
+        }
+    }
+}
+
+impl std::error::Error for FaultError {}
+
+// ---------------------------------------------------------------------------
+// Recovery accounting
+// ---------------------------------------------------------------------------
+
+/// Recovery-event counters metered by the [`Supervisor`].  All monotone;
+/// `TrainOutcome` carries the per-run delta next to its epoch totals.
+#[derive(Copy, Clone, Debug, Default, PartialEq)]
+pub struct RecoveryStats {
+    /// Failed solve attempts that were retried.
+    pub retries: u64,
+    /// Epochs spent on attempts whose results were discarded (charged to
+    /// the budget on top of the converged solve's own epochs).
+    pub wasted_epochs: f64,
+    /// Solves answered by the cross-solver CG-f64 fallback.
+    pub fallback_solves: u64,
+    /// Outer steps rolled back to the last finite hyperparameter state.
+    pub rollbacks: u64,
+    /// Probe-target batches repaired by recomputation.
+    pub target_repairs: u64,
+    /// Poisoned cache entries quarantined and rebuilt (preconditioner or
+    /// posterior-artifact).
+    pub cache_rebuilds: u64,
+}
+
+impl RecoveryStats {
+    /// Total discrete recovery events (ignores the epoch meter).
+    pub fn total_events(&self) -> u64 {
+        self.retries
+            + self.fallback_solves
+            + self.rollbacks
+            + self.target_repairs
+            + self.cache_rebuilds
+    }
+
+    /// Per-run delta: `self - base` (counters are monotone).
+    pub fn delta_since(&self, base: &RecoveryStats) -> RecoveryStats {
+        RecoveryStats {
+            retries: self.retries - base.retries,
+            wasted_epochs: self.wasted_epochs - base.wasted_epochs,
+            fallback_solves: self.fallback_solves - base.fallback_solves,
+            rollbacks: self.rollbacks - base.rollbacks,
+            target_repairs: self.target_repairs - base.target_repairs,
+            cache_rebuilds: self.cache_rebuilds - base.cache_rebuilds,
+        }
+    }
+
+    /// The CLI/telemetry one-liner (CI greps for this shape).
+    pub fn summary(&self) -> String {
+        format!(
+            "retries={} wasted_epochs={:.2} fallbacks={} rollbacks={} repairs={} \
+             cache_rebuilds={}",
+            self.retries,
+            self.wasted_epochs,
+            self.fallback_solves,
+            self.rollbacks,
+            self.target_repairs,
+            self.cache_rebuilds,
+        )
+    }
+}
+
+/// Recovery driver state shared by `Trainer` and `PredictionService`: the
+/// armed plan (None = unarmed = every hook is a cold `is_none` check) plus
+/// the monotone recovery counters.  The recovery *policies* live with
+/// their owners — the coordinator drives retry/fallback/rollback, the
+/// serve layer drives degradation — because they need the owners' state;
+/// this struct is the bookkeeping they share.
+#[derive(Debug, Default)]
+pub struct Supervisor {
+    plan: Option<Arc<FaultPlan>>,
+    pub stats: RecoveryStats,
+}
+
+impl Supervisor {
+    /// Arm with a parsed plan.  Re-arming replaces the schedule but keeps
+    /// the monotone counters.
+    pub fn arm(&mut self, plan: Arc<FaultPlan>) {
+        self.plan = Some(plan);
+    }
+
+    pub fn armed(&self) -> bool {
+        self.plan.is_some()
+    }
+
+    pub fn plan(&self) -> Option<&Arc<FaultPlan>> {
+        self.plan.as_ref()
+    }
+
+    /// Position the schedule (no-op unarmed).
+    pub fn set_step(&self, step: u64) {
+        if let Some(p) = &self.plan {
+            p.set_step(step);
+        }
+    }
+
+    /// Consume one opportunity for `site` (always false unarmed).
+    pub fn fires(&self, site: FaultSite) -> bool {
+        match &self.plan {
+            Some(p) => p.fires(site),
+            None => false,
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Finite-scan helpers
+// ---------------------------------------------------------------------------
+
+/// True when every entry is finite (no NaN/Inf).
+pub fn mat_finite(m: &Mat) -> bool {
+    m.data.iter().all(|x| x.is_finite())
+}
+
+/// True when every entry is finite (no NaN/Inf).
+pub fn slice_finite(v: &[f64]) -> bool {
+    v.iter().all(|x| x.is_finite())
+}
+
+// ---------------------------------------------------------------------------
+// ChaosOpView
+// ---------------------------------------------------------------------------
+
+/// A borrowing [`KernelOperator`] view that injects the pre-drawn faults
+/// of ONE solve attempt and then burns out.
+///
+/// The supervisor consults the plan once per attempt per site, builds a
+/// view with the fired sites armed, and hands it to the solver; each
+/// armed corruption applies to the *first* matching product (atomically
+/// swapped off), so the view is bitwise-transparent afterwards — and a
+/// fresh view with nothing armed is transparent from the start, which is
+/// what makes retry convergence bitwise-identical to the fault-free run.
+///
+/// The `&mut` trait methods (`set_hp`, `set_precision`, `extend`) are
+/// never reachable through the shared reference a solver holds; they are
+/// implemented as inert stubs to satisfy the trait.
+pub struct ChaosOpView<'a> {
+    inner: &'a dyn KernelOperator,
+    /// Seed-derived corruption row (reduced modulo each product's rows).
+    row: usize,
+    /// Whether any corruption was armed at construction (consumption
+    /// tracking baseline).
+    armed: bool,
+    /// 0 = off, 1 = NaN panel row, 2 = Inf shard row-range.
+    panel: AtomicU8,
+    /// Poison the next `k_cols` panel (the preconditioner build path).
+    precond: AtomicBool,
+}
+
+/// Rows corrupted by the shard-partial fault (a contiguous Inf range,
+/// modelling one shard's partial buffer going bad).
+const SHARD_FAULT_ROWS: usize = 8;
+
+impl<'a> ChaosOpView<'a> {
+    pub fn new(
+        inner: &'a dyn KernelOperator,
+        plan: &FaultPlan,
+        panel_nan: bool,
+        shard_inf: bool,
+        precond_nan: bool,
+    ) -> ChaosOpView<'a> {
+        let mode = if shard_inf {
+            2
+        } else if panel_nan {
+            1
+        } else {
+            0
+        };
+        ChaosOpView {
+            inner,
+            row: plan.target_row(inner.n()),
+            armed: mode != 0 || precond_nan,
+            panel: AtomicU8::new(mode),
+            precond: AtomicBool::new(precond_nan),
+        }
+    }
+
+    /// Whether an armed corruption was actually burnt into a product.
+    /// The supervisor rejects any attempt whose view consumed its
+    /// corruption — even if the solve came back finite — because a
+    /// corrupted intermediate can steer a solver (block selection, line
+    /// searches) to a finite-but-divergent answer that a residual check
+    /// alone would accept.
+    pub fn consumed(&self) -> bool {
+        self.armed
+            && self.panel.load(Ordering::Relaxed) == 0
+            && !self.precond.load(Ordering::Relaxed)
+    }
+
+    /// Apply (and burn) the panel/shard corruption to a product output.
+    fn corrupt_product(&self, out: &mut Mat) {
+        if out.rows == 0 {
+            return;
+        }
+        match self.panel.swap(0, Ordering::Relaxed) {
+            1 => {
+                let r = self.row % out.rows;
+                for v in out.row_mut(r) {
+                    *v = f64::NAN;
+                }
+            }
+            2 => {
+                let r0 = self.row % out.rows;
+                let r1 = (r0 + SHARD_FAULT_ROWS).min(out.rows);
+                for r in r0..r1 {
+                    for v in out.row_mut(r) {
+                        *v = f64::INFINITY;
+                    }
+                }
+            }
+            _ => {}
+        }
+    }
+
+    /// Apply (and burn) the preconditioner-column corruption, falling
+    /// through to the panel corruption (AP's update path is `k_cols`).
+    fn corrupt_cols(&self, out: &mut Mat) {
+        if out.rows == 0 {
+            return;
+        }
+        if self.precond.swap(false, Ordering::Relaxed) {
+            let r = self.row % out.rows;
+            for v in out.row_mut(r) {
+                *v = f64::NAN;
+            }
+        } else {
+            self.corrupt_product(out);
+        }
+    }
+}
+
+impl KernelOperator for ChaosOpView<'_> {
+    fn n(&self) -> usize {
+        self.inner.n()
+    }
+    fn d(&self) -> usize {
+        self.inner.d()
+    }
+    fn s(&self) -> usize {
+        self.inner.s()
+    }
+    fn m(&self) -> usize {
+        self.inner.m()
+    }
+    fn family(&self) -> KernelFamily {
+        self.inner.family()
+    }
+    fn x(&self) -> &Mat {
+        self.inner.x()
+    }
+    fn x_test(&self) -> &Mat {
+        self.inner.x_test()
+    }
+    fn hp(&self) -> &Hyperparams {
+        self.inner.hp()
+    }
+    fn set_hp(&mut self, _hp: &Hyperparams) {
+        // unreachable through the shared reference a solve holds
+    }
+    fn precision(&self) -> Precision {
+        self.inner.precision()
+    }
+    fn set_precision(&mut self, _prec: Precision) -> anyhow::Result<()> {
+        anyhow::bail!("chaos view: set_precision on the underlying operator instead")
+    }
+
+    fn hv(&self, v: &Mat) -> Mat {
+        let mut out = self.inner.hv(v);
+        self.corrupt_product(&mut out);
+        out
+    }
+
+    fn hv_into(&self, v: &Mat, out: &mut Mat, scratch: &HvScratch) {
+        self.inner.hv_into(v, out, scratch);
+        self.corrupt_product(out);
+    }
+
+    fn hv_into_prec(&self, v: &Mat, out: &mut Mat, scratch: &HvScratch, prec: Precision) {
+        self.inner.hv_into_prec(v, out, scratch, prec);
+        self.corrupt_product(out);
+    }
+
+    fn k_cols(&self, idx: &[usize], u: &Mat) -> Mat {
+        let mut out = self.inner.k_cols(idx, u);
+        self.corrupt_cols(&mut out);
+        out
+    }
+
+    fn k_cols_prec(&self, idx: &[usize], u: &Mat, prec: Precision) -> Mat {
+        let mut out = self.inner.k_cols_prec(idx, u, prec);
+        self.corrupt_cols(&mut out);
+        out
+    }
+
+    fn k_rows(&self, idx: &[usize], v: &Mat) -> Mat {
+        let mut out = self.inner.k_rows(idx, v);
+        self.corrupt_product(&mut out);
+        out
+    }
+
+    fn k_rows_prec(&self, idx: &[usize], v: &Mat, prec: Precision) -> Mat {
+        let mut out = self.inner.k_rows_prec(idx, v, prec);
+        self.corrupt_product(&mut out);
+        out
+    }
+
+    fn grad_quad(&self, a: &Mat, b: &Mat, w: &[f64]) -> Vec<f64> {
+        self.inner.grad_quad(a, b, w)
+    }
+
+    fn extend(&mut self, _x_new: &Mat) -> anyhow::Result<()> {
+        anyhow::bail!("chaos view: extend the underlying operator instead")
+    }
+
+    fn rff_eval(&self, omega0: &Mat, wts: &Mat, noise: &Mat) -> Mat {
+        self.inner.rff_eval(omega0, wts, noise)
+    }
+
+    fn predict_at(
+        &self,
+        x_query: &Mat,
+        vy: &[f64],
+        zhat: &Mat,
+        omega0: &Mat,
+        wts: &Mat,
+    ) -> anyhow::Result<(Vec<f64>, Mat)> {
+        self.inner.predict_at(x_query, vy, zhat, omega0, wts)
+    }
+
+    fn predict_at_prec(
+        &self,
+        x_query: &Mat,
+        vy: &[f64],
+        zhat: &Mat,
+        omega0: &Mat,
+        wts: &Mat,
+        prec: Precision,
+    ) -> anyhow::Result<(Vec<f64>, Mat)> {
+        self.inner.predict_at_prec(x_query, vy, zhat, omega0, wts, prec)
+    }
+
+    fn predict_batched(
+        &self,
+        x_query: &Mat,
+        batch: usize,
+        threads: usize,
+        vy: &[f64],
+        zhat: &Mat,
+        omega0: &Mat,
+        wts: &Mat,
+    ) -> anyhow::Result<(Vec<f64>, Mat, u64)> {
+        self.inner.predict_batched(x_query, batch, threads, vy, zhat, omega0, wts)
+    }
+
+    fn exact_mll(&self, y: &[f64]) -> Option<(f64, Vec<f64>)> {
+        self.inner.exact_mll(y)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data;
+    use crate::operators::{make_cpu_backend, BackendKind, TiledOptions};
+
+    #[test]
+    fn fnv1a_known_vectors() {
+        assert_eq!(fnv1a(b""), 0xcbf2_9ce4_8422_2325);
+        assert_eq!(fnv1a(b"a"), 0xaf63_dc4c_8601_ec8c);
+        // one flipped bit changes the hash
+        assert_ne!(fnv1a(&[0u8, 1, 2, 3]), fnv1a(&[0u8, 1, 2, 7]));
+    }
+
+    #[test]
+    fn spec_parses_scheduled_prob_and_seed() {
+        let p = FaultPlan::parse("seed=7; panel@1 ; solver@2x3; refresh~0.25").unwrap();
+        assert_eq!(p.seed(), 7);
+        assert!(p.has_entries());
+        assert_eq!(p.entries.len(), 3);
+        assert_eq!(
+            p.entries[0],
+            FaultEntry { site: FaultSite::Panel, trigger: Trigger::At { step: 1, count: 1 } }
+        );
+        assert_eq!(
+            p.entries[1],
+            FaultEntry { site: FaultSite::Solver, trigger: Trigger::At { step: 2, count: 3 } }
+        );
+        assert_eq!(
+            p.entries[2],
+            FaultEntry { site: FaultSite::Refresh, trigger: Trigger::Prob(0.25) }
+        );
+    }
+
+    #[test]
+    fn seed_only_spec_is_armed_but_benign() {
+        let p = FaultPlan::parse("seed=3").unwrap();
+        assert!(!p.has_entries());
+        for site in FaultSite::ALL {
+            assert!(!p.fires(site));
+        }
+    }
+
+    #[test]
+    fn bad_specs_are_typed_errors() {
+        for bad in [
+            "panel",             // no trigger
+            "panel@",            // missing step
+            "panel@one",         // non-numeric step
+            "panel@1x0",         // zero count
+            "warp@1",            // unknown site
+            "panel~1.5",         // probability out of range
+            "panel~NaN",         // non-finite probability
+            "seed=minus",        // bad seed
+        ] {
+            assert!(FaultPlan::parse(bad).is_err(), "spec '{bad}' should fail");
+        }
+    }
+
+    #[test]
+    fn scheduled_trigger_burns_count_opportunities_at_its_step() {
+        let p = FaultPlan::parse("solver@2x2").unwrap();
+        p.set_step(1);
+        assert!(!p.fires(FaultSite::Solver));
+        p.set_step(2);
+        assert!(p.fires(FaultSite::Solver));
+        assert!(p.fires(FaultSite::Solver));
+        assert!(!p.fires(FaultSite::Solver)); // count exhausted
+        p.set_step(3);
+        assert!(!p.fires(FaultSite::Solver));
+        // other sites never fire
+        p.set_step(2);
+        assert!(!p.fires(FaultSite::Panel));
+    }
+
+    #[test]
+    fn prob_trigger_is_deterministic_per_draw_index() {
+        let a = FaultPlan::parse("seed=11;panel~0.5").unwrap();
+        let b = FaultPlan::parse("seed=11;panel~0.5").unwrap();
+        let mut draws_a = Vec::new();
+        let mut draws_b = Vec::new();
+        for step in 0..4 {
+            a.set_step(step);
+            b.set_step(step);
+            for _ in 0..8 {
+                draws_a.push(a.fires(FaultSite::Panel));
+                draws_b.push(b.fires(FaultSite::Panel));
+            }
+        }
+        assert_eq!(draws_a, draws_b);
+        assert!(draws_a.iter().any(|&f| f), "p=0.5 over 32 draws should fire");
+        assert!(draws_a.iter().any(|&f| !f), "p=0.5 over 32 draws should also miss");
+        // p=0 never fires, p=1 always fires
+        let never = FaultPlan::parse("panel~0").unwrap();
+        let always = FaultPlan::parse("panel~1").unwrap();
+        for _ in 0..8 {
+            assert!(!never.fires(FaultSite::Panel));
+            assert!(always.fires(FaultSite::Panel));
+        }
+    }
+
+    #[test]
+    fn corrupt_bytes_is_deterministic_and_damaging() {
+        let p = FaultPlan::parse("seed=5;checkpoint@0").unwrap();
+        let orig: Vec<u8> = (0..64u8).collect();
+        let mut a = orig.clone();
+        let mut b = orig.clone();
+        p.corrupt_bytes(&mut a);
+        FaultPlan::parse("seed=5;checkpoint@0").unwrap().corrupt_bytes(&mut b);
+        assert_eq!(a, b, "corruption is a pure function of the seed");
+        assert_ne!(a, orig, "corruption must damage the payload");
+        let mut empty: Vec<u8> = Vec::new();
+        p.corrupt_bytes(&mut empty); // no panic on empty payloads
+        assert!(empty.is_empty());
+    }
+
+    #[test]
+    fn supervisor_unarmed_is_inert() {
+        let sup = Supervisor::default();
+        assert!(!sup.armed());
+        sup.set_step(3);
+        for site in FaultSite::ALL {
+            assert!(!sup.fires(site));
+        }
+        assert_eq!(sup.stats, RecoveryStats::default());
+    }
+
+    #[test]
+    fn recovery_stats_delta_and_summary() {
+        let base = RecoveryStats { retries: 1, wasted_epochs: 2.0, ..Default::default() };
+        let now = RecoveryStats {
+            retries: 3,
+            wasted_epochs: 5.5,
+            fallback_solves: 1,
+            rollbacks: 0,
+            target_repairs: 2,
+            cache_rebuilds: 4,
+        };
+        let d = now.delta_since(&base);
+        assert_eq!(d.retries, 2);
+        assert!((d.wasted_epochs - 3.5).abs() < 1e-12);
+        assert_eq!(d.total_events(), 2 + 1 + 0 + 2 + 4);
+        let s = d.summary();
+        assert!(s.contains("retries=2"), "{s}");
+        assert!(s.contains("cache_rebuilds=4"), "{s}");
+    }
+
+    fn tiny_op() -> Box<dyn KernelOperator> {
+        let ds = data::generate(&data::spec("test").unwrap());
+        make_cpu_backend(BackendKind::Dense, &ds, 4, 8, TiledOptions::default(), 1).unwrap()
+    }
+
+    #[test]
+    fn chaos_view_corrupts_first_product_then_turns_transparent() {
+        let op = tiny_op();
+        let plan = FaultPlan::parse("seed=9;panel@0").unwrap();
+        let v = Mat::from_fn(op.n(), op.k_width(), |i, j| ((i + 2 * j) % 5) as f64 - 2.0);
+        let clean = op.hv(&v);
+        let view = ChaosOpView::new(op.as_ref(), &plan, true, false, false);
+        let hit = view.hv(&v);
+        assert!(!mat_finite(&hit), "first product must carry the NaN row");
+        // exactly one row is poisoned, every other entry is bitwise clean
+        let r = plan.target_row(op.n());
+        for i in 0..clean.rows {
+            for j in 0..clean.cols {
+                if i == r {
+                    assert!(hit.row(i)[j].is_nan());
+                } else {
+                    assert_eq!(hit.row(i)[j].to_bits(), clean.row(i)[j].to_bits());
+                }
+            }
+        }
+        // burned out: the second product is bitwise clean
+        let again = view.hv(&v);
+        for (x, y) in again.data.iter().zip(&clean.data) {
+            assert_eq!(x.to_bits(), y.to_bits());
+        }
+    }
+
+    #[test]
+    fn chaos_view_shard_fault_is_an_inf_row_range() {
+        let op = tiny_op();
+        let plan = FaultPlan::parse("seed=4;shard@0").unwrap();
+        let v = Mat::from_fn(op.n(), op.k_width(), |i, j| ((i * 3 + j) % 7) as f64);
+        let view = ChaosOpView::new(op.as_ref(), &plan, false, true, false);
+        let mut out = Mat::zeros(op.n(), op.k_width());
+        view.hv_into(&v, &mut out, &HvScratch::default());
+        let r0 = plan.target_row(op.n()) % out.rows;
+        let r1 = (r0 + SHARD_FAULT_ROWS).min(out.rows);
+        for r in r0..r1 {
+            for v in out.row(r) {
+                assert!(v.is_infinite());
+            }
+        }
+    }
+
+    #[test]
+    fn chaos_view_precond_fault_targets_k_cols_only() {
+        let op = tiny_op();
+        let plan = FaultPlan::parse("seed=2;precond@0").unwrap();
+        let view = ChaosOpView::new(op.as_ref(), &plan, false, false, true);
+        let v = Mat::from_fn(op.n(), op.k_width(), |i, j| (i + j) as f64 * 0.25);
+        // hv is NOT corrupted by the precond fault
+        let hv = view.hv(&v);
+        assert!(mat_finite(&hv));
+        // the first k_cols panel is
+        let idx: Vec<usize> = (0..6).collect();
+        let u = Mat::from_fn(idx.len(), op.k_width(), |i, j| (i * j + 1) as f64 * 0.5);
+        let cols = view.k_cols(&idx, &u);
+        assert!(!mat_finite(&cols));
+        // and it burns out too
+        let cols2 = view.k_cols(&idx, &u);
+        assert!(mat_finite(&cols2));
+    }
+
+    #[test]
+    fn unarmed_view_is_bitwise_transparent() {
+        let op = tiny_op();
+        let plan = FaultPlan::parse("seed=1").unwrap();
+        let view = ChaosOpView::new(op.as_ref(), &plan, false, false, false);
+        let v = Mat::from_fn(op.n(), op.k_width(), |i, j| ((i ^ j) % 9) as f64 - 4.0);
+        let a = op.hv(&v);
+        let b = view.hv(&v);
+        assert_eq!(a.data.len(), b.data.len());
+        for (x, y) in a.data.iter().zip(&b.data) {
+            assert_eq!(x.to_bits(), y.to_bits());
+        }
+    }
+}

@@ -50,6 +50,7 @@ pub mod config;
 pub mod coordinator;
 pub mod data;
 pub mod estimator;
+pub mod fault;
 pub mod gp;
 pub mod kernels;
 pub mod linalg;
@@ -66,6 +67,7 @@ pub mod prelude {
     pub use crate::coordinator::{Trainer, TrainerOptions, TrainOutcome};
     pub use crate::data::Dataset;
     pub use crate::estimator::EstimatorKind;
+    pub use crate::fault::{FaultError, FaultPlan, FaultSite, RecoveryStats};
     pub use crate::kernels::{Hyperparams, KernelFamily};
     pub use crate::linalg::Mat;
     pub use crate::operators::{

@@ -3,9 +3,12 @@
 
 use anyhow::Result;
 
+use std::sync::Arc;
+
 use igp::config::RunConfig;
 use igp::coordinator::{Trainer, TrainerOptions};
 use igp::estimator::EstimatorKind;
+use igp::fault::FaultPlan;
 use igp::operators::{BackendKind, KernelOperator, Precision, TiledOptions, XlaOperator};
 use igp::serve::{ModelFleet, PredictionService, ServeOptions, StalenessPolicy};
 use igp::solvers::SolverKind;
@@ -60,7 +63,7 @@ USAGE:
               [--backend dense|tiled|xla] [--tile N] [--shards S] [--threads N]
               [--probes S] [--rff M] [--online K] [--precision f32|f64]
               [--steps N] [--lr F] [--max-epochs N] [--seed N]
-              [--artifacts DIR] [--out results.csv]
+              [--artifacts DIR] [--out results.csv] [--chaos SPEC]
     igp serve [train flags] [--batch N] [--score in.csv [out.csv]]
               [--policy refuse|serve_stale|refresh_first] [--queue-cap N]
               [--deadline T] [--tenants N]
@@ -98,6 +101,13 @@ PRECISION:
     outer loop, and every solver verifies its answer with an f64 residual
     recomputation, falling back to the reference f64 path on drift.
     --precision f64 (default) is the bitwise-parity reference.
+
+CHAOS (fault injection):
+    --chaos "seed=N;SITE@STEP[xCOUNT];SITE~PROB" arms deterministic fault
+    injection with supervised recovery (sites: panel probe shard precond
+    solver cache checkpoint refresh).  Recoverable faults converge bitwise
+    with the fault-free run, with the recovery cost metered in a trailing
+    `recovery:` line.  Unarmed runs pay nothing.  See rust/README.md.
 "#
     );
 }
@@ -159,6 +169,7 @@ fn cmd_train_online(rc: &RunConfig, out_path: Option<&str>) -> Result<()> {
     );
     let opts = trainer_options(rc, None)?;
     let mut trainer = Trainer::new(opts, op, &base);
+    let armed = arm_chaos(&mut trainer, rc)?;
 
     println!(
         "dataset={} solver={} estimator={} warm={} backend={} online_chunks={}",
@@ -196,6 +207,9 @@ fn cmd_train_online(rc: &RunConfig, out_path: Option<&str>) -> Result<()> {
         report(arrival, trainer.operator().n(), &out);
     }
     println!("total: {total_epochs:.1} epochs across {} arrivals", rc.online_chunks);
+    if armed {
+        println!("recovery: {}", trainer.recovery_stats().summary());
+    }
 
     if let Some(path) = out_path {
         let mut w = igp::util::csv::CsvWriter::create(
@@ -215,8 +229,22 @@ fn cmd_train_online(rc: &RunConfig, out_path: Option<&str>) -> Result<()> {
 const TRAIN_VALUE_KEYS: &[&str] = &[
     "config", "dataset", "solver", "estimator", "steps", "lr", "max-epochs",
     "seed", "artifacts", "out", "tolerance", "backend", "tile", "shards",
-    "threads", "probes", "rff", "online", "precision",
+    "threads", "probes", "rff", "online", "precision", "chaos",
 ];
+
+/// Arm a fault plan on the trainer when the run config carries a chaos
+/// spec.  Returns whether a plan was armed (gates the `recovery:` line —
+/// unarmed runs print nothing and pay nothing).
+fn arm_chaos(trainer: &mut Trainer, rc: &RunConfig) -> Result<bool> {
+    match &rc.chaos {
+        Some(spec) => {
+            trainer.arm_faults(Arc::new(FaultPlan::parse(spec)?));
+            igp::info!("chaos armed: {spec}");
+            Ok(true)
+        }
+        None => Ok(false),
+    }
+}
 
 /// Resolve a [`RunConfig`] from `--config` plus flag overrides — single
 /// source for the `train` and `serve` commands so their training setups
@@ -280,6 +308,9 @@ fn run_config_from_args(p: &cli::Parser) -> Result<RunConfig> {
     if let Some(v) = p.get("precision") {
         rc.precision = v.to_string();
     }
+    if let Some(v) = p.get("chaos") {
+        rc.chaos = Some(v.to_string());
+    }
     rc.validate()?;
     Ok(rc)
 }
@@ -315,6 +346,7 @@ fn cmd_train(args: &[String]) -> Result<()> {
     igp::info!("backend: {}", backend.name());
     let opts = trainer_options(&rc, block)?;
     let mut trainer = Trainer::new(opts, op, &ds);
+    let armed = arm_chaos(&mut trainer, &rc)?;
     let out = trainer.run(rc.outer_steps)?;
 
     println!(
@@ -329,6 +361,9 @@ fn cmd_train(args: &[String]) -> Result<()> {
         out.final_metrics.rmse,
         out.final_metrics.llh
     );
+    if armed {
+        println!("recovery: {}", out.recovery.summary());
+    }
 
     if let Some(path) = p.get("out") {
         let mut w = igp::util::csv::CsvWriter::create(
@@ -438,6 +473,7 @@ fn cmd_serve(args: &[String]) -> Result<()> {
         rc.serve_policy
     );
     let mut trainer = build_cpu_trainer(&rc, &ds, rc.seed)?;
+    let armed = arm_chaos(&mut trainer, &rc)?;
     let out = trainer.run(rc.outer_steps)?;
     diag(format!(
         "trained {} steps on {}: rmse={:.4} llh={:.4} ({:.1} epochs, {:.2}s solver)",
@@ -458,6 +494,11 @@ fn cmd_serve(args: &[String]) -> Result<()> {
             queue_cap: rc.serve_queue_cap,
         },
     );
+    // re-arm through the service so serve-side sites (refresh, cache) are
+    // supervised too; train-time recovery counters carry over
+    if let Some(spec) = &rc.chaos {
+        service.arm_faults(Arc::new(FaultPlan::parse(spec)?));
+    }
     // with --deadline the query goes through the request queue (admission
     // cap, EDF drain) instead of the direct path — bitwise-identical
     // answers, but the latency histogram measures enqueue→answer
@@ -539,6 +580,9 @@ fn cmd_serve(args: &[String]) -> Result<()> {
         st.p99_ns() as f64 * 1e-6,
         st.rows_per_sec()
     ));
+    if armed {
+        diag(format!("recovery: {}", service.recovery_stats().summary()));
+    }
     Ok(())
 }
 
@@ -566,6 +610,7 @@ fn cmd_serve_fleet(rc: &RunConfig, tenants: usize, batch: usize) -> Result<()> {
     for i in 0..tenants {
         let name = format!("tenant{i}");
         let mut trainer = build_cpu_trainer(rc, &ds, rc.seed + i as u64)?;
+        arm_chaos(&mut trainer, rc)?;
         let out = trainer.run(rc.outer_steps)?;
         println!(
             "{name}: trained {} steps (seed {}): rmse={:.4} llh={:.4}",

@@ -91,7 +91,7 @@ impl Default for ArtifactCache {
 
 impl std::fmt::Debug for ArtifactCache {
     fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
-        let inner = self.inner.lock().unwrap();
+        let inner = self.guard();
         f.debug_struct("ArtifactCache")
             .field("entries", &inner.entries.len())
             .field("builds", &inner.builds)
@@ -102,6 +102,18 @@ impl std::fmt::Debug for ArtifactCache {
 }
 
 impl ArtifactCache {
+    /// Lock the store, recovering from mutex poisoning: a panicking
+    /// holder can only have been mid-bookkeeping, every mutation leaves
+    /// the entry list structurally valid, and a fleet must keep serving
+    /// its healthy tenants after one tenant's thread dies — so the
+    /// supervisor-era policy is recover-and-continue, not propagate.
+    fn guard(&self) -> std::sync::MutexGuard<'_, ArtifactInner> {
+        match self.inner.lock() {
+            Ok(g) => g,
+            Err(poisoned) => poisoned.into_inner(),
+        }
+    }
+
     /// `cap` snapshots are retained (LRU eviction), across all tenants.
     pub fn with_capacity(cap: usize) -> Self {
         ArtifactCache { inner: Mutex::new(ArtifactInner::default()), cap: cap.max(1) }
@@ -121,7 +133,7 @@ impl ArtifactCache {
         n: usize,
     ) -> Option<Arc<PosteriorArtifact>> {
         let key = artifact_key(tenant, hp, n);
-        let mut inner = self.inner.lock().unwrap();
+        let mut inner = self.guard();
         let pos = inner.entries.iter().position(|(k, _)| *k == key)?;
         inner.hits += 1;
         inner.tenant(tenant).hits += 1;
@@ -142,7 +154,7 @@ impl ArtifactCache {
         art: Arc<PosteriorArtifact>,
     ) {
         let key = artifact_key(tenant, hp, n);
-        let mut inner = self.inner.lock().unwrap();
+        let mut inner = self.guard();
         if let Some(pos) = inner.entries.iter().position(|(k, _)| *k == key) {
             inner.entries.remove(pos);
         } else if inner.entries.len() >= self.cap {
@@ -158,12 +170,12 @@ impl ArtifactCache {
     /// already prevents wrong reuse; invalidation frees the memory), and
     /// the other tenants' snapshots must survive.  Counters are preserved.
     pub fn invalidate_tenant(&self, tenant: TenantId) {
-        self.inner.lock().unwrap().entries.retain(|(k, _)| k.0 != tenant);
+        self.guard().entries.retain(|(k, _)| k.0 != tenant);
     }
 
     /// Drop every snapshot, every tenant.  Counters are preserved.
     pub fn invalidate_all(&self) {
-        self.inner.lock().unwrap().entries.clear();
+        self.guard().entries.clear();
     }
 
     /// Adopt another cache's entries and counters under `tenant` — the
@@ -174,13 +186,13 @@ impl ArtifactCache {
     /// trainer's life" stays a lifetime number, and are *not* re-counted
     /// as fresh builds.
     pub fn absorb(&self, tenant: TenantId, other: &ArtifactCache) {
-        let mut src = other.inner.lock().unwrap();
+        let mut src = other.guard();
         let entries = std::mem::take(&mut src.entries);
         let (builds, hits) = (src.builds, src.hits);
         src.builds = 0;
         src.hits = 0;
         drop(src);
-        let mut inner = self.inner.lock().unwrap();
+        let mut inner = self.guard();
         inner.builds += builds;
         inner.hits += hits;
         let t = inner.tenant(tenant);
@@ -199,33 +211,27 @@ impl ArtifactCache {
 
     /// Snapshots built so far, all tenants (telemetry / regression tests).
     pub fn builds(&self) -> u64 {
-        self.inner.lock().unwrap().builds
+        self.guard().builds
     }
 
     /// Cache hits so far, all tenants.
     pub fn hits(&self) -> u64 {
-        self.inner.lock().unwrap().hits
+        self.guard().hits
     }
 
     /// LRU evictions so far, all tenants.
     pub fn evictions(&self) -> u64 {
-        self.inner.lock().unwrap().evictions
+        self.guard().evictions
     }
 
     /// One tenant's build / hit / eviction counters.
     pub fn tenant_stats(&self, tenant: TenantId) -> TenantCacheStats {
-        self.inner
-            .lock()
-            .unwrap()
-            .per_tenant
-            .get(&tenant)
-            .copied()
-            .unwrap_or_default()
+        self.guard().per_tenant.get(&tenant).copied().unwrap_or_default()
     }
 
     /// Live entries, all tenants.
     pub fn len(&self) -> usize {
-        self.inner.lock().unwrap().entries.len()
+        self.guard().entries.len()
     }
 
     pub fn is_empty(&self) -> bool {
@@ -234,13 +240,7 @@ impl ArtifactCache {
 
     /// Live entries belonging to `tenant`.
     pub fn len_for(&self, tenant: TenantId) -> usize {
-        self.inner
-            .lock()
-            .unwrap()
-            .entries
-            .iter()
-            .filter(|(k, _)| k.0 == tenant)
-            .count()
+        self.guard().entries.iter().filter(|(k, _)| k.0 == tenant).count()
     }
 
     /// The capacity bound (entries never exceed it).

@@ -49,6 +49,7 @@ use std::time::Instant;
 use anyhow::Result;
 
 use crate::coordinator::Trainer;
+use crate::fault::{mat_finite, slice_finite, FaultError, FaultPlan, FaultSite, RecoveryStats, Supervisor};
 use crate::gp::{metrics, pathwise_variances, Metrics};
 use crate::linalg::Mat;
 use crate::operators::KernelOperator;
@@ -111,6 +112,11 @@ pub struct RequestResult {
     /// Whether the answer came from a marked-stale snapshot
     /// (`serve_stale` policy inside a staleness window).
     pub stale: bool,
+    /// Whether the answer was *degraded*: a `refresh_first` refresh
+    /// failed and the service fell back to the retained stale snapshot
+    /// instead of erroring (graceful degradation under faults).  Implies
+    /// `stale`.
+    pub degraded: bool,
 }
 
 /// A query-answering engine over a trained [`Trainer`].
@@ -151,6 +157,14 @@ pub struct PredictionService {
     /// behave like `refresh_first` (the artifact key already forces the
     /// warm solve).
     data_stale: bool,
+    /// Rows answered degraded (failed refresh downgraded to stale).
+    degraded_rows_served: u64,
+    /// Serve-side fault schedule + recovery counters.  Armed together
+    /// with the owned trainer ([`PredictionService::arm_faults`]); the
+    /// service's operation tick positions the shared schedule.
+    supervisor: Supervisor,
+    /// Service operations performed (each is one schedule step).
+    chaos_tick: u64,
 }
 
 impl PredictionService {
@@ -172,6 +186,46 @@ impl PredictionService {
             stale_snapshot: None,
             stale_padded: None,
             data_stale: false,
+            degraded_rows_served: 0,
+            supervisor: Supervisor::default(),
+            chaos_tick: 0,
+        }
+    }
+
+    /// Arm deterministic fault injection on the service *and* its owned
+    /// trainer (one shared schedule: in serve mode the service's
+    /// operation tick positions it — each flush/drain/predict/refresh is
+    /// one step).  Unarmed services pay a single `is_none` check per
+    /// operation.
+    pub fn arm_faults(&mut self, plan: Arc<FaultPlan>) {
+        self.trainer.arm_faults(plan.clone());
+        self.supervisor.arm(plan);
+    }
+
+    /// Combined recovery counters: the trainer's (solve retries,
+    /// fallbacks, rollbacks, …) plus the serve layer's (artifact
+    /// quarantine rebuilds).  Degraded servings are counted in
+    /// [`ServeCounters::degraded_rows_served`] instead — a degradation
+    /// answers traffic, it does not repair anything.
+    pub fn recovery_stats(&self) -> RecoveryStats {
+        let t = self.trainer.recovery_stats();
+        let s = self.supervisor.stats;
+        RecoveryStats {
+            retries: t.retries + s.retries,
+            wasted_epochs: t.wasted_epochs + s.wasted_epochs,
+            fallback_solves: t.fallback_solves + s.fallback_solves,
+            rollbacks: t.rollbacks + s.rollbacks,
+            target_repairs: t.target_repairs + s.target_repairs,
+            cache_rebuilds: t.cache_rebuilds + s.cache_rebuilds,
+        }
+    }
+
+    /// Advance the fault schedule by one service operation (no-op
+    /// unarmed).
+    fn tick_chaos(&mut self) {
+        if self.supervisor.armed() {
+            self.supervisor.set_step(self.chaos_tick);
+            self.chaos_tick += 1;
         }
     }
 
@@ -250,9 +304,13 @@ impl PredictionService {
     /// concatenated across requests.  On error nothing is answered and
     /// **nothing is dropped** — the queue is restored exactly as it was.
     pub fn flush(&mut self) -> Result<(Vec<f64>, Vec<f64>)> {
+        self.tick_chaos();
         let items = self.queue.take_fifo();
         match self.serve_requests(&items) {
-            Ok((mean, var, _)) => Ok((mean, var)),
+            Ok((mean, var, _, _)) => {
+                self.queue.acknowledge(&items);
+                Ok((mean, var))
+            }
             Err(e) => {
                 self.queue.restore(items);
                 Err(e.into())
@@ -266,9 +324,11 @@ impl PredictionService {
     /// bitwise-identical to serving each request alone.  On error the
     /// queue is restored untouched.
     pub fn drain(&mut self) -> std::result::Result<Vec<RequestResult>, ServeError> {
+        self.tick_chaos();
         let items = self.queue.take_edf();
         match self.serve_requests(&items) {
-            Ok((mean, var, stale)) => {
+            Ok((mean, var, stale, degraded)) => {
+                self.queue.acknowledge(&items);
                 let mut out = Vec::with_capacity(items.len());
                 let mut r0 = 0;
                 for p in &items {
@@ -282,6 +342,7 @@ impl PredictionService {
                         var: var[r0..r1].to_vec(),
                         latency_ns,
                         stale,
+                        degraded,
                     });
                     r0 = r1;
                 }
@@ -298,8 +359,9 @@ impl PredictionService {
     /// observation noise) at each row of `x_query`.  Records one
     /// enqueue→answer latency sample (enqueue and answer coincide).
     pub fn predict(&mut self, x_query: &Mat) -> Result<(Vec<f64>, Vec<f64>)> {
+        self.tick_chaos();
         let t0 = Instant::now();
-        let (mean, var, _) = self.serve_rows(x_query)?;
+        let (mean, var, _, _) = self.serve_rows(x_query)?;
         if x_query.rows > 0 {
             self.latency.record(t0.elapsed().as_nanos() as u64);
         }
@@ -338,6 +400,7 @@ impl PredictionService {
     /// the serving hot path).  Clears the staleness window; cached
     /// snapshots make this free when nothing changed.
     pub fn refresh(&mut self) -> Result<Arc<PosteriorArtifact>> {
+        self.tick_chaos();
         let art = self.refresh_artifact().map_err(anyhow::Error::from)?;
         Ok(art)
     }
@@ -353,6 +416,7 @@ impl PredictionService {
                 artifact_evictions: tc.evictions,
                 stale_rows_served: self.stale_rows_served,
                 rejected: self.rejected,
+                degraded_rows_served: self.degraded_rows_served,
             },
             latency: self.latency.clone(),
             serve_ns: self.serve_ns,
@@ -365,7 +429,7 @@ impl PredictionService {
     fn serve_requests(
         &mut self,
         items: &[PendingRequest],
-    ) -> std::result::Result<(Vec<f64>, Vec<f64>, bool), ServeError> {
+    ) -> std::result::Result<(Vec<f64>, Vec<f64>, bool, bool), ServeError> {
         let d = self.trainer.operator().d();
         let mut x_all = Mat::zeros(0, d);
         for p in items {
@@ -379,15 +443,15 @@ impl PredictionService {
     fn serve_rows(
         &mut self,
         x_query: &Mat,
-    ) -> std::result::Result<(Vec<f64>, Vec<f64>, bool), ServeError> {
+    ) -> std::result::Result<(Vec<f64>, Vec<f64>, bool, bool), ServeError> {
         let d = self.trainer.operator().d();
         if x_query.cols != d {
             return Err(ServeError::DimensionMismatch { got: x_query.cols, want: d });
         }
         if x_query.rows == 0 {
-            return Ok((Vec::new(), Vec::new(), false));
+            return Ok((Vec::new(), Vec::new(), false, false));
         }
-        let (art, stale) = self.artifact_for_serve()?;
+        let (art, stale, degraded) = self.artifact_for_serve()?;
         let t0 = Instant::now();
         let (mean, samples, blocks) = self
             .trainer
@@ -409,19 +473,25 @@ impl PredictionService {
         if stale {
             self.stale_rows_served += x_query.rows as u64;
         }
-        Ok((mean, var, stale))
+        if degraded {
+            self.degraded_rows_served += x_query.rows as u64;
+        }
+        Ok((mean, var, stale, degraded))
     }
 
     /// Resolve the artifact to answer from.  Fresh path: the cache (hit,
     /// or one lazy build on hyperparameter drift).  Inside a staleness
-    /// window, the policy decides: refuse (typed error, counted),
-    /// serve the retained zero-padded snapshot, or pay the warm refresh.
+    /// window, the policy decides: refuse (typed error, counted), serve
+    /// the retained zero-padded snapshot, or pay the warm refresh — and a
+    /// *failed* `refresh_first` refresh degrades gracefully to the stale
+    /// snapshot (flagged `degraded`) instead of erroring, when one exists.
+    /// Returns (artifact, stale, degraded).
     fn artifact_for_serve(
         &mut self,
-    ) -> std::result::Result<(Arc<PosteriorArtifact>, bool), ServeError> {
+    ) -> std::result::Result<(Arc<PosteriorArtifact>, bool, bool), ServeError> {
         if !self.data_stale {
             let art = self.fetch_artifact()?;
-            return Ok((art, false));
+            return Ok((art, false, false));
         }
         match self.opts.policy {
             StalenessPolicy::Refuse => {
@@ -431,19 +501,48 @@ impl PredictionService {
                     data_n: self.trainer.operator().n(),
                 })
             }
-            StalenessPolicy::ServeStale => match self.stale_snapshot.clone() {
-                Some(snap) => {
-                    let n = self.trainer.operator().n();
-                    if self.stale_padded.as_ref().map(|p| p.vy.len()) != Some(n) {
-                        self.stale_padded = Some(Arc::new(snap.zero_padded(n)));
-                    }
-                    Ok((self.stale_padded.clone().unwrap(), true))
-                }
+            StalenessPolicy::ServeStale => match self.padded_stale() {
+                Some(p) => Ok((p, true, false)),
                 // nothing was ever served: there is no stale answer to
                 // give, so the first query pays the (warm) build
-                None => self.refresh_artifact().map(|a| (a, false)),
+                None => self.refresh_artifact().map(|a| (a, false, false)),
             },
-            StalenessPolicy::RefreshFirst => self.refresh_artifact().map(|a| (a, false)),
+            StalenessPolicy::RefreshFirst => {
+                let refreshed = if self.supervisor.fires(FaultSite::Refresh) {
+                    // injected refresh failure (chaos `refresh` site)
+                    Err(ServeError::Internal { message: "injected refresh failure".into() })
+                } else {
+                    self.refresh_artifact()
+                };
+                match refreshed {
+                    Ok(a) => Ok((a, false, false)),
+                    Err(e) => match self.padded_stale() {
+                        // graceful degradation: downgrade to serve_stale
+                        // rather than failing the queued traffic
+                        Some(p) => Ok((p, true, true)),
+                        None => Err(ServeError::Internal {
+                            message: FaultError::RefreshFailed { detail: e.to_string() }
+                                .to_string(),
+                        }),
+                    },
+                }
+            }
+        }
+    }
+
+    /// The retained pre-arrival snapshot, zero-padded to the current n
+    /// (rebuilt lazily when n grows again); `None` when nothing was ever
+    /// served before the arrival.
+    fn padded_stale(&mut self) -> Option<Arc<PosteriorArtifact>> {
+        let snap = self.stale_snapshot.clone()?;
+        let n = self.trainer.operator().n();
+        match self.stale_padded.clone() {
+            Some(p) if p.vy.len() == n => Some(p),
+            _ => {
+                let p = Arc::new(snap.zero_padded(n));
+                self.stale_padded = Some(p.clone());
+                Some(p)
+            }
         }
     }
 
@@ -457,11 +556,34 @@ impl PredictionService {
     }
 
     fn fetch_artifact(&mut self) -> std::result::Result<Arc<PosteriorArtifact>, ServeError> {
-        let art = self
+        let mut art = self
             .trainer
             .posterior_artifact()
             .map_err(|e| ServeError::Internal { message: format!("{e:#}") })?;
+        // artifact validation (armed only — the unarmed hot path never
+        // scans): a poisoned cache entry is quarantined tenant-wide and
+        // rebuilt once; persistent poison is a typed error
+        if self.supervisor.armed() && !artifact_finite(&art) {
+            let tenant = self.trainer.tenant();
+            self.trainer.artifact_cache().invalidate_tenant(tenant);
+            self.supervisor.stats.cache_rebuilds += 1;
+            art = self
+                .trainer
+                .posterior_artifact()
+                .map_err(|e| ServeError::Internal { message: format!("{e:#}") })?;
+            if !artifact_finite(&art) {
+                return Err(ServeError::Internal {
+                    message: FaultError::ArtifactPoisoned { tenant }.to_string(),
+                });
+            }
+        }
         self.last_served = Some(art.clone());
         Ok(art)
     }
+}
+
+/// Full finite scan of a posterior snapshot (chaos validation only — the
+/// unarmed serve path never calls this).
+fn artifact_finite(a: &PosteriorArtifact) -> bool {
+    slice_finite(&a.vy) && mat_finite(&a.zhat) && mat_finite(&a.wts) && a.noise_var.is_finite()
 }

@@ -32,10 +32,12 @@ pub struct PendingRequest {
 }
 
 impl PendingRequest {
-    /// The EDF sort key: deadline first (`None` last), arrival id breaks
-    /// ties deterministically.
-    fn edf_key(&self) -> (u64, RequestId) {
-        (self.deadline.unwrap_or(u64::MAX), self.id)
+    /// The EDF sort key: deadline first, *every* deadlined request before
+    /// every deadline-free one (an explicit `u64::MAX` deadline still
+    /// outranks `None` — the leading bool carries the distinction the
+    /// numeric value cannot), arrival id breaks ties deterministically.
+    fn edf_key(&self) -> (bool, u64, RequestId) {
+        (self.deadline.is_none(), self.deadline.unwrap_or(u64::MAX), self.id)
     }
 }
 
@@ -46,23 +48,32 @@ pub struct RequestQueue {
     cap_rows: usize,
     items: Vec<PendingRequest>,
     rows: usize,
+    /// Rows taken by an in-progress drain and not yet resolved (restored
+    /// on failure or [`RequestQueue::acknowledge`]d on success).
+    /// Admission counts them, so a failed drain can always restore its
+    /// items without blowing past the cap.
+    in_flight_rows: usize,
     next_id: RequestId,
 }
 
 impl RequestQueue {
     pub fn new(d: usize, cap_rows: usize) -> Self {
-        RequestQueue { d, cap_rows, items: Vec::new(), rows: 0, next_id: 0 }
+        RequestQueue { d, cap_rows, items: Vec::new(), rows: 0, in_flight_rows: 0, next_id: 0 }
     }
 
     /// Admit a request.  Rejections (wrong width, cap exceeded) leave the
     /// queue untouched; zero-row requests are admitted and answered empty.
+    /// The cap covers queued *and* in-flight rows: requests taken by a
+    /// drain still hold their reservation until the drain succeeds
+    /// ([`RequestQueue::acknowledge`]) or restores.
     pub fn push(&mut self, x: &Mat, deadline: Option<u64>) -> Result<RequestId, ServeError> {
         if x.cols != self.d {
             return Err(ServeError::DimensionMismatch { got: x.cols, want: self.d });
         }
-        if self.cap_rows > 0 && self.rows + x.rows > self.cap_rows {
+        let held = self.rows + self.in_flight_rows;
+        if self.cap_rows > 0 && held + x.rows > self.cap_rows {
             return Err(ServeError::QueueFull {
-                queued_rows: self.rows,
+                queued_rows: held,
                 incoming_rows: x.rows,
                 cap_rows: self.cap_rows,
             });
@@ -89,9 +100,10 @@ impl RequestQueue {
     }
 
     /// Take every queued request in arrival order (the `flush` contract:
-    /// answers concatenate in enqueue order).
+    /// answers concatenate in enqueue order).  The taken rows stay
+    /// reserved against the admission cap until the drain resolves.
     pub fn take_fifo(&mut self) -> Vec<PendingRequest> {
-        self.rows = 0;
+        self.in_flight_rows += std::mem::replace(&mut self.rows, 0);
         std::mem::take(&mut self.items)
     }
 
@@ -106,11 +118,22 @@ impl RequestQueue {
     /// Put requests back (the error path of a failed serve: nothing was
     /// answered, so nothing may be dropped).  Arrival order is restored
     /// from the ids, which also merges correctly with anything enqueued
-    /// since the take.
+    /// since the take; the restored rows move back from the in-flight
+    /// reservation to the queued count, so the cap stays exact.
     pub fn restore(&mut self, items: Vec<PendingRequest>) {
-        self.rows += items.iter().map(|p| p.x.rows).sum::<usize>();
+        let restored: usize = items.iter().map(|p| p.x.rows).sum();
+        self.in_flight_rows = self.in_flight_rows.saturating_sub(restored);
+        self.rows += restored;
         self.items.extend(items);
         self.items.sort_by_key(|p| p.id);
+    }
+
+    /// Release the admission reservation of successfully served requests
+    /// (the success path of a drain; the failure path is
+    /// [`RequestQueue::restore`]).
+    pub fn acknowledge(&mut self, items: &[PendingRequest]) {
+        let served: usize = items.iter().map(|p| p.x.rows).sum();
+        self.in_flight_rows = self.in_flight_rows.saturating_sub(served);
     }
 
     /// The earliest deadline among queued requests (`None` when the queue
@@ -173,6 +196,118 @@ mod tests {
             queue.push(&Mat::zeros(1, 2), None).unwrap_err(),
             ServeError::DimensionMismatch { got: 2, want: 3 }
         );
+    }
+
+    #[test]
+    fn explicit_max_deadline_outranks_deadline_free() {
+        let mut queue = RequestQueue::new(3, 0);
+        let free = queue.push(&q(1), None).unwrap();
+        let max = queue.push(&q(1), Some(u64::MAX)).unwrap();
+        let order: Vec<RequestId> = queue.take_edf().iter().map(|p| p.id).collect();
+        // a deadline — even the largest one — beats no deadline at all,
+        // regardless of arrival order
+        assert_eq!(order, vec![max, free]);
+    }
+
+    #[test]
+    fn failed_drain_holds_the_admission_reservation() {
+        let mut queue = RequestQueue::new(3, 4);
+        queue.push(&q(3), Some(1)).unwrap();
+        let taken = queue.take_edf();
+        // mid-drain the taken rows still hold their reservation: only one
+        // more row fits, so a restore can never blow past the cap
+        assert_eq!(
+            queue.push(&q(2), None).unwrap_err(),
+            ServeError::QueueFull { queued_rows: 3, incoming_rows: 2, cap_rows: 4 }
+        );
+        queue.push(&q(1), None).unwrap();
+        queue.restore(taken);
+        assert_eq!(queue.rows(), 4);
+        // a successful drain releases the reservation instead
+        let taken = queue.take_edf();
+        queue.acknowledge(&taken);
+        assert_eq!(queue.rows(), 0);
+        queue.push(&q(4), None).unwrap();
+        assert_eq!(queue.rows(), 4);
+    }
+
+    /// Satellite property test: random interleavings of pushes, failing
+    /// drains (take → restore) and succeeding drains (take → acknowledge)
+    /// against a reference model.  Invariants: arrival ids are exact and
+    /// strictly increasing, EDF drain order equals the model's total
+    /// order, restore preserves every request bit-for-bit, and queued +
+    /// in-flight rows never exceed the admission cap.
+    #[test]
+    fn property_interleaved_drains_preserve_edf_order_ids_and_cap() {
+        use crate::util::rng::Rng;
+        const CAP: usize = 12;
+        for seed in 0..32u64 {
+            let mut rng = Rng::new(0xED_F0 ^ seed);
+            let mut queue = RequestQueue::new(2, CAP);
+            // model: (id, rows, deadline) of every request believed queued
+            let mut model: Vec<(RequestId, usize, Option<u64>)> = Vec::new();
+            let mut expected_next_id: RequestId = 0;
+            for _ in 0..120 {
+                match rng.next_u64() % 10 {
+                    // push (weighted heaviest)
+                    0..=5 => {
+                        let rows = (rng.next_u64() % 4) as usize; // 0..=3 (0-row legal)
+                        let deadline = match rng.next_u64() % 4 {
+                            0 => None,
+                            1 => Some(u64::MAX), // the None-tie corner
+                            _ => Some(rng.next_u64() % 5),
+                        };
+                        let queued: usize = model.iter().map(|m| m.1).sum();
+                        let x = Mat::zeros(rows, 2);
+                        match queue.push(&x, deadline) {
+                            Ok(id) => {
+                                assert_eq!(id, expected_next_id, "ids are arrival-exact");
+                                assert!(queued + rows <= CAP, "over-admission");
+                                expected_next_id += 1;
+                                model.push((id, rows, deadline));
+                            }
+                            Err(ServeError::QueueFull { .. }) => {
+                                assert!(queued + rows > CAP, "under-admission");
+                            }
+                            Err(e) => panic!("unexpected rejection: {e}"),
+                        }
+                    }
+                    // failing drain: take EDF, verify order, restore
+                    6..=8 => {
+                        let taken = queue.take_edf();
+                        let mut expect = model.clone();
+                        expect.sort_by_key(|(id, _, dl)| {
+                            (dl.is_none(), dl.unwrap_or(u64::MAX), *id)
+                        });
+                        let got: Vec<(RequestId, usize, Option<u64>)> =
+                            taken.iter().map(|p| (p.id, p.x.rows, p.deadline)).collect();
+                        assert_eq!(got, expect, "EDF drain order drifted (seed {seed})");
+                        queue.restore(taken);
+                        assert_eq!(queue.len(), model.len(), "restore dropped a request");
+                        assert_eq!(
+                            queue.rows(),
+                            model.iter().map(|m| m.1).sum::<usize>(),
+                            "restore drifted the row account"
+                        );
+                    }
+                    // succeeding drain: take FIFO, verify arrival order,
+                    // acknowledge (requests leave the system)
+                    _ => {
+                        let taken = queue.take_fifo();
+                        let got: Vec<RequestId> = taken.iter().map(|p| p.id).collect();
+                        let expect: Vec<RequestId> = model.iter().map(|m| m.0).collect();
+                        assert_eq!(got, expect, "FIFO order drifted (seed {seed})");
+                        queue.acknowledge(&taken);
+                        model.clear();
+                        assert_eq!(queue.rows(), 0);
+                    }
+                }
+            }
+            // end state: a full drain returns exactly the model, in order
+            let got: Vec<RequestId> = queue.take_fifo().iter().map(|p| p.id).collect();
+            let expect: Vec<RequestId> = model.iter().map(|m| m.0).collect();
+            assert_eq!(got, expect);
+        }
     }
 
     #[test]

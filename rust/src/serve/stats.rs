@@ -129,6 +129,10 @@ pub struct ServeCounters {
     /// Requests rejected at admission (queue cap) or by the `refuse`
     /// staleness policy.
     pub rejected: u64,
+    /// Rows answered *degraded*: a `refresh_first` refresh failed and the
+    /// service downgraded to the retained stale snapshot instead of
+    /// erroring (always ≤ `stale_rows_served`).
+    pub degraded_rows_served: u64,
 }
 
 /// Full observability snapshot: the deterministic counters plus the

@@ -1,0 +1,191 @@
+//! Chaos isolation across a multi-tenant fleet: injected refresh
+//! failures on ONE tenant must not perturb the other tenants' answers
+//! (bitwise) or corrupt the shared artifact-cache counters.
+//!
+//! Two identical fleets run the same traffic; one arms a `refresh~1`
+//! fault plan on a single tenant (`beta`).  The faulted tenant degrades
+//! gracefully — its `refresh_first` policy downgrades to serving the
+//! retained stale snapshot, flagged `degraded` — while every other
+//! tenant's answers and per-tenant cache counters stay bit-identical to
+//! the fault-free fleet.  Re-arming a benign plan heals `beta`: its next
+//! drain pays the deferred refresh and converges bitwise with the
+//! fault-free tenant.
+
+use std::sync::Arc;
+
+use igp::coordinator::{Trainer, TrainerOptions};
+use igp::data::{Dataset, DatasetSpec};
+use igp::estimator::EstimatorKind;
+use igp::fault::FaultPlan;
+use igp::kernels::{Hyperparams, KernelFamily};
+use igp::linalg::Mat;
+use igp::operators::DenseOperator;
+use igp::serve::{ModelFleet, RequestResult, ServeOptions};
+use igp::solvers::SolverKind;
+use igp::util::rng::Rng;
+
+const NAMES: [&str; 3] = ["alpha", "beta", "gamma"];
+// generous capacity: no LRU churn, so per-tenant counters across the two
+// fleets must match *exactly* (an eviction-free baseline isolates the
+// fault's effect from LRU noise)
+const CACHE_CAP: usize = 6;
+
+fn toy_dataset(rng: &mut Rng, n: usize, n_test: usize, d: usize) -> Dataset {
+    let x_train = Mat::from_fn(n, d, |_, _| rng.gaussian());
+    let y_train = rng.gaussian_vec(n);
+    let x_test = Mat::from_fn(n_test, d, |_, _| rng.gaussian());
+    let y_test = rng.gaussian_vec(n_test);
+    let spec = DatasetSpec {
+        name: "toy",
+        paper_n: 0,
+        n,
+        n_test,
+        d,
+        true_sigma: 0.3,
+        ell_lo: 0.5,
+        ell_hi: 1.5,
+        cluster_frac: 0.0,
+        family: KernelFamily::Rbf,
+        seed: 0,
+    };
+    Dataset { spec, x_train, y_train, x_test, y_test, true_hp: Hyperparams::ones(d) }
+}
+
+fn make_trainer(ds: &Dataset, seed: u64) -> Trainer {
+    let op = Box::new(DenseOperator::new(ds, 4, 16));
+    let opts = TrainerOptions {
+        solver: SolverKind::Cg,
+        estimator: EstimatorKind::Standard,
+        warm_start: true,
+        lr: 0.05,
+        seed,
+        ..Default::default()
+    };
+    Trainer::new(opts, op, ds)
+}
+
+fn build_fleet(datasets: &[Dataset]) -> ModelFleet {
+    let mut fleet = ModelFleet::new(CACHE_CAP);
+    for (i, name) in NAMES.iter().enumerate() {
+        let so = ServeOptions { batch: 16, threads: 1, ..Default::default() };
+        fleet.add_tenant(name, make_trainer(&datasets[i], 100 + i as u64), so).unwrap();
+    }
+    fleet
+}
+
+fn bits_eq(a: &[f64], b: &[f64]) -> bool {
+    a.len() == b.len() && a.iter().zip(b).all(|(x, y)| x.to_bits() == y.to_bits())
+}
+
+/// Enqueue the same per-tenant queries on both fleets, drain both, and
+/// return the answers keyed `(tenant, RequestResult)` in drain order.
+fn round(
+    chaos: &mut ModelFleet,
+    clean: &mut ModelFleet,
+    queries: &[(usize, Mat)],
+) -> (Vec<(String, RequestResult)>, Vec<(String, RequestResult)>) {
+    for (t, x) in queries {
+        chaos.enqueue(NAMES[*t], x, None).unwrap();
+        clean.enqueue(NAMES[*t], x, None).unwrap();
+    }
+    let a = chaos.drain();
+    let b = clean.drain();
+    assert!(a.refused.is_empty(), "chaos fleet refused: {:?}", a.refused);
+    assert!(b.refused.is_empty(), "clean fleet refused: {:?}", b.refused);
+    (a.answered, b.answered)
+}
+
+#[test]
+fn refresh_faults_on_one_tenant_leave_the_rest_of_the_fleet_bitwise_intact() {
+    let mut data_rng = Rng::new(0xF1EE7);
+    let d = 3;
+    let datasets: Vec<Dataset> =
+        (0..NAMES.len()).map(|_| toy_dataset(&mut data_rng, 24, 4, d)).collect();
+    let mut chaos = build_fleet(&datasets);
+    let mut clean = build_fleet(&datasets);
+
+    let queries = |rng: &mut Rng| -> Vec<(usize, Mat)> {
+        (0..NAMES.len()).map(|t| (t, Mat::from_fn(5, d, |_, _| rng.gaussian()))).collect()
+    };
+
+    // round 1: fault-free warm-up, both fleets build every artifact
+    let mut qrng = Rng::new(0xC0FFEE);
+    let q1 = queries(&mut qrng);
+    let (got, want) = round(&mut chaos, &mut clean, &q1);
+    assert_eq!(got.len(), want.len());
+    for ((gn, g), (wn, w)) in got.iter().zip(&want) {
+        assert_eq!(gn, wn);
+        assert!(bits_eq(&g.mean, &w.mean) && bits_eq(&g.var, &w.var));
+        assert!(!g.stale && !g.degraded);
+    }
+
+    // arm refresh failures on beta only, then age beta's artifact with an
+    // online arrival (same new data in both fleets)
+    let beta = chaos.tenant_mut("beta").unwrap();
+    beta.arm_faults(Arc::new(FaultPlan::parse("seed=3;refresh~1").unwrap()));
+    let x_new = Mat::from_fn(8, d, |_, _| data_rng.gaussian());
+    let y_new = data_rng.gaussian_vec(8);
+    chaos.extend_data("beta", &x_new, &y_new).unwrap();
+    clean.extend_data("beta", &x_new, &y_new).unwrap();
+
+    // round 2: beta's refresh_first refresh fails in the chaos fleet and
+    // degrades to the retained stale snapshot; alpha and gamma must not
+    // notice
+    let q2 = queries(&mut qrng);
+    let (got, want) = round(&mut chaos, &mut clean, &q2);
+    let mut beta_rows = 0u64;
+    for ((gn, g), (wn, w)) in got.iter().zip(&want) {
+        assert_eq!(gn, wn, "drain order perturbed by the injected fault");
+        if gn == "beta" {
+            assert!(g.stale && g.degraded, "beta did not degrade: {g:?}");
+            assert!(!w.stale && !w.degraded, "fault leaked into the clean fleet");
+            assert!(g.mean.iter().all(|v| v.is_finite()), "degraded answer is poisoned");
+            beta_rows += g.mean.len() as u64;
+        } else {
+            assert!(
+                bits_eq(&g.mean, &w.mean) && bits_eq(&g.var, &w.var),
+                "tenant {gn} perturbed by beta's injected refresh failure"
+            );
+            assert!(!g.stale && !g.degraded);
+        }
+    }
+    assert!(beta_rows > 0, "beta served nothing in round 2");
+
+    // shared-cache counters: the unfaulted tenants' accounting is
+    // bit-identical across fleets, beta's failed refresh counted no
+    // phantom build, and the degradation is metered
+    for name in ["alpha", "gamma"] {
+        let g = chaos.stats(name).unwrap().counters;
+        let w = clean.stats(name).unwrap().counters;
+        assert_eq!(g, w, "tenant {name} counters corrupted by beta's fault");
+        assert_eq!(g.degraded_rows_served, 0);
+    }
+    let gb = chaos.stats("beta").unwrap().counters;
+    let wb = clean.stats("beta").unwrap().counters;
+    assert_eq!(gb.artifact_builds, 1, "failed refresh must not count a build");
+    assert_eq!(wb.artifact_builds, 2, "clean beta pays its refresh build");
+    assert_eq!(gb.degraded_rows_served, beta_rows);
+    assert_eq!(gb.stale_rows_served, beta_rows);
+    assert_eq!(wb.degraded_rows_served, 0);
+    assert!(chaos.cache().len() <= CACHE_CAP && clean.cache().len() <= CACHE_CAP);
+    let rec = chaos.tenant("beta").unwrap().recovery_stats();
+    assert_eq!(rec.retries, 0, "refresh degradation is not a solve retry: {rec:?}");
+    // heal beta: re-arm a benign plan; the next drain pays the deferred
+    // refresh and beta converges bitwise with the fault-free tenant
+    chaos
+        .tenant_mut("beta")
+        .unwrap()
+        .arm_faults(Arc::new(FaultPlan::parse("seed=3").unwrap()));
+    let q3 = queries(&mut qrng);
+    let (got, want) = round(&mut chaos, &mut clean, &q3);
+    for ((gn, g), (wn, w)) in got.iter().zip(&want) {
+        assert_eq!(gn, wn);
+        assert!(
+            bits_eq(&g.mean, &w.mean) && bits_eq(&g.var, &w.var),
+            "tenant {gn} did not heal bitwise after disarming"
+        );
+        assert!(!g.stale && !g.degraded, "tenant {gn} still degraded after healing");
+    }
+    let gb = chaos.stats("beta").unwrap().counters;
+    assert_eq!(gb.artifact_builds, 2, "healed beta pays exactly the deferred refresh");
+}

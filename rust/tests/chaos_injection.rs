@@ -1,0 +1,210 @@
+//! Chaos sweep: scheduled fault injection across seeds × sites × solvers
+//! × backends, driven entirely through the public `arm_faults` surface.
+//!
+//! The contract under test is the supervisor's recovery ladder:
+//!
+//! - **no panics** anywhere in the sweep — every injected fault is either
+//!   recovered or surfaced as a typed error;
+//! - **recoverable faults are bitwise-invisible**: the run converges to
+//!   telemetry (per-step theta/grad/residuals), final hyperparameters and
+//!   test metrics bit-identical to the fault-free run, with the recovery
+//!   cost metered *on top* in `total_epochs` and `TrainOutcome::recovery`;
+//! - **unrecoverable faults** (a schedule that outlasts bounded retry and
+//!   the cg-f64 fallback) surface a typed [`igp::fault::FaultError`] and
+//!   leave the trainer, its warm-start store and its caches usable.
+//!
+//! The sweep runs at `Precision::F64` — the bitwise reference path; the
+//! f32 pipeline's drift-guard fallback is itself a (deliberate, guarded)
+//! divergence source and has its own parity suite.
+
+use std::sync::Arc;
+
+use igp::coordinator::{TrainOutcome, Trainer, TrainerOptions};
+use igp::data::{self, Dataset};
+use igp::estimator::EstimatorKind;
+use igp::fault::FaultPlan;
+use igp::operators::{
+    DenseOperator, KernelOperator, ShardedOperator, TiledOperator, TiledOptions,
+};
+use igp::solvers::SolverKind;
+
+const BACKENDS: [&str; 3] = ["dense", "tiled", "sharded"];
+const SOLVERS: [SolverKind; 3] = [SolverKind::Cg, SolverKind::Ap, SolverKind::Sgd];
+
+fn make_op(backend: &str, ds: &Dataset) -> Box<dyn KernelOperator> {
+    let topts = TiledOptions { tile: 96, threads: 2 };
+    match backend {
+        "dense" => Box::new(DenseOperator::new(ds, 8, 32)),
+        "tiled" => Box::new(TiledOperator::with_options(ds, 8, 32, topts)),
+        _ => Box::new(ShardedOperator::with_options(ds, 8, 32, topts, 3)),
+    }
+}
+
+fn trainer(solver: SolverKind, backend: &str, ds: &Dataset) -> Trainer {
+    let opts = TrainerOptions {
+        solver,
+        estimator: EstimatorKind::Pathwise,
+        warm_start: true,
+        lr: 0.05,
+        epoch_cap: 200.0,
+        block_size: Some(64),
+        sgd_lr: Some(8.0),
+        seed: 13,
+        ..Default::default()
+    };
+    Trainer::new(opts, make_op(backend, ds), ds)
+}
+
+/// Everything that must be bit-identical between a fault-free run and a
+/// recovered run.  Wall-clock fields and `total_epochs` (which carries
+/// the metered recovery cost) are deliberately excluded.
+fn fingerprint(out: &TrainOutcome) -> Vec<u64> {
+    let mut fp = Vec::new();
+    for s in &out.telemetry {
+        fp.extend(s.theta.iter().map(|x| x.to_bits()));
+        fp.extend(s.grad.iter().map(|x| x.to_bits()));
+        fp.push(s.ry.to_bits());
+        fp.push(s.rz.to_bits());
+        fp.push(s.iterations as u64);
+        fp.push(s.epochs.to_bits());
+    }
+    fp.extend(out.theta.iter().map(|x| x.to_bits()));
+    fp.push(out.final_metrics.rmse.to_bits());
+    fp.push(out.final_metrics.llh.to_bits());
+    fp
+}
+
+#[test]
+fn chaos_sweep_recoverable_faults_are_bitwise_invisible() {
+    let ds = data::generate(&data::spec("test").unwrap());
+    for solver in SOLVERS {
+        for backend in BACKENDS {
+            let want = trainer(solver, backend, &ds).run(3).unwrap();
+            let want_fp = fingerprint(&want);
+            for site in ["panel", "probe", "shard", "precond", "solver"] {
+                for seed in [5u64, 11] {
+                    let tag = format!("{solver:?}/{backend}/{site}/seed={seed}");
+                    let spec = format!("seed={seed};{site}@1");
+                    let mut t = trainer(solver, backend, &ds);
+                    t.arm_faults(Arc::new(FaultPlan::parse(&spec).unwrap()));
+                    let out = t
+                        .run(3)
+                        .unwrap_or_else(|e| panic!("{tag}: recoverable fault errored: {e}"));
+                    assert_eq!(
+                        fingerprint(&out),
+                        want_fp,
+                        "{tag}: recovered run diverged from the fault-free run"
+                    );
+                    assert!(
+                        out.total_epochs >= want.total_epochs - 1e-9,
+                        "{tag}: recovery cost vanished ({} < {})",
+                        out.total_epochs,
+                        want.total_epochs
+                    );
+                    // sites every solver is guaranteed to consume
+                    match site {
+                        "solver" => {
+                            assert!(
+                                out.recovery.retries >= 1,
+                                "{tag}: stall did not meter a retry: {:?}",
+                                out.recovery
+                            );
+                            assert!(
+                                out.recovery.wasted_epochs > 0.0,
+                                "{tag}: stall wasted no epochs: {:?}",
+                                out.recovery
+                            );
+                            assert!(
+                                out.total_epochs > want.total_epochs,
+                                "{tag}: wasted epochs not charged on top"
+                            );
+                        }
+                        "probe" => {
+                            assert_eq!(
+                                out.recovery.target_repairs, 1,
+                                "{tag}: probe corruption not repaired: {:?}",
+                                out.recovery
+                            );
+                        }
+                        // panel/shard/precond corruption is consumed only
+                        // if the solver routes through the poisoned
+                        // product kind (e.g. SGD never builds a
+                        // preconditioner panel); when it is consumed the
+                        // retry must be metered
+                        _ => {
+                            if out.recovery.retries > 0 {
+                                assert!(
+                                    out.recovery.cache_rebuilds >= 1,
+                                    "{tag}: retry without quarantine: {:?}",
+                                    out.recovery
+                                );
+                            }
+                        }
+                    }
+                }
+            }
+            // CG consumes an injected panel corruption through its very
+            // first residual product — assert at least one sweep cell
+            // exercised the full product-corruption recovery path
+            if matches!(solver, SolverKind::Cg) {
+                let mut t = trainer(solver, backend, &ds);
+                t.arm_faults(Arc::new(FaultPlan::parse("seed=5;panel@1").unwrap()));
+                let out = t.run(3).unwrap();
+                assert_eq!(fingerprint(&out), want_fp);
+                assert!(
+                    out.recovery.retries >= 1,
+                    "CG/{backend}: panel corruption was never consumed: {:?}",
+                    out.recovery
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn chaos_unrecoverable_fault_is_typed_and_leaves_the_trainer_usable() {
+    let ds = data::generate(&data::spec("test").unwrap());
+    for solver in SOLVERS {
+        let mut t = trainer(solver, "tiled", &ds);
+        t.arm_faults(Arc::new(FaultPlan::parse("seed=5;solver@1x99").unwrap()));
+        let err = t.run(3).unwrap_err().to_string();
+        assert!(
+            err.contains("solve failed at outer step 1"),
+            "{solver:?}: untyped error: {err}"
+        );
+        assert!(
+            err.contains("cg-f64 fallback"),
+            "{solver:?}: error does not name the exhausted fallback: {err}"
+        );
+        let stats = t.recovery_stats();
+        assert_eq!(stats.retries, 3, "{solver:?}: bounded retry drifted: {stats:?}");
+        assert_eq!(stats.fallback_solves, 0, "{solver:?}: failed fallback was counted");
+        // the trainer survives: re-arm a benign plan and keep training —
+        // caches, warm-start store and optimiser state must all be intact
+        t.arm_faults(Arc::new(FaultPlan::parse("seed=1").unwrap()));
+        let out = t.run(2).unwrap_or_else(|e| panic!("{solver:?}: trainer died: {e}"));
+        assert!(
+            out.theta.iter().all(|x| x.is_finite()),
+            "{solver:?}: post-fault training went non-finite"
+        );
+        let art = t.posterior_artifact().unwrap();
+        assert!(
+            art.vy.iter().all(|v| v.is_finite()),
+            "{solver:?}: post-fault artifact is poisoned"
+        );
+    }
+}
+
+#[test]
+fn armed_but_benign_plan_is_a_bitwise_noop_on_every_backend() {
+    let ds = data::generate(&data::spec("test").unwrap());
+    for backend in BACKENDS {
+        let want = trainer(SolverKind::Cg, backend, &ds).run(2).unwrap();
+        let mut t = trainer(SolverKind::Cg, backend, &ds);
+        t.arm_faults(Arc::new(FaultPlan::parse("seed=42").unwrap()));
+        let out = t.run(2).unwrap();
+        assert_eq!(fingerprint(&out), fingerprint(&want), "{backend}: benign plan perturbed");
+        assert_eq!(out.total_epochs.to_bits(), want.total_epochs.to_bits());
+        assert_eq!(out.recovery.total_events(), 0, "{backend}: {:?}", out.recovery);
+    }
+}
